@@ -1,0 +1,93 @@
+//! ASIC design-space sweep: W x B x clock for both accelerator variants,
+//! with a Pareto front over (gates, power, latency) — the design guidance
+//! the paper's §5.1/§5.3 gives in prose ("PASM is beneficial for up to
+//! 8 weight bins at 1 GHz; target a lower clock for 16"), derived from the
+//! model.
+//!
+//! ```bash
+//! cargo run --release --example asic_sweep
+//! ```
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
+use pasm_accel::hw::Tech;
+
+#[derive(Clone, Debug)]
+struct Point {
+    label: String,
+    gates: f64,
+    power_w: f64,
+    cycles: u64,
+}
+
+fn dominated(a: &Point, b: &Point) -> bool {
+    // b dominates a
+    b.gates <= a.gates
+        && b.power_w <= a.power_w
+        && b.cycles <= a.cycles
+        && (b.gates < a.gates || b.power_w < a.power_w || b.cycles < a.cycles)
+}
+
+fn main() {
+    let techs = [
+        ("1GHz", Tech::asic_1ghz()),
+        ("800MHz", Tech::asic_800mhz()),
+        ("100MHz", Tech::asic_100mhz()),
+    ];
+    let mut points: Vec<Point> = Vec::new();
+
+    println!(
+        "{:<30} {:>12} {:>10} {:>8} {:>9}",
+        "config", "gates", "power", "cycles", "PASM vs WS"
+    );
+    for (tname, tech) in &techs {
+        for bins in [4usize, 8, 16] {
+            for ww in [8u32, 16, 32] {
+                let ws = ConvAccel::paper(ConvVariantKind::WeightShared, bins, ww);
+                let pasm = ConvAccel::paper(ConvVariantKind::Pasm, bins, ww);
+                let ws_g = ws.gates(tech).total();
+                let pasm_g = pasm.gates(tech).total();
+                for (vname, a, g) in
+                    [("WS", &ws, ws_g), ("PASM", &pasm, pasm_g)]
+                {
+                    let p = a.power(tech).total_w();
+                    let label = format!("{vname}/{ww}b/{bins}bin@{tname}");
+                    println!(
+                        "{label:<30} {g:>12.0} {:>8.2}mW {:>8} {:>9}",
+                        p * 1e3,
+                        a.latency_cycles(),
+                        if vname == "PASM" {
+                            format!("{:+.1}%", (pasm_g / ws_g - 1.0) * 100.0)
+                        } else {
+                            String::from("-")
+                        }
+                    );
+                    points.push(Point { label, gates: g, power_w: p, cycles: a.latency_cycles() });
+                }
+            }
+        }
+    }
+
+    // Pareto front over (gates, power, cycles)
+    let front: Vec<&Point> = points
+        .iter()
+        .filter(|a| !points.iter().any(|b| dominated(a, b)))
+        .collect();
+    println!("\nPareto-optimal configurations ({} of {}):", front.len(), points.len());
+    for p in &front {
+        println!(
+            "  {:<30} {:>12.0} gates {:>8.2} mW {:>6} cycles",
+            p.label,
+            p.gates,
+            p.power_w * 1e3,
+            p.cycles
+        );
+    }
+
+    // the paper's prose conclusions, checked
+    let t1g = Tech::asic_1ghz();
+    let win8 = ConvAccel::paper(ConvVariantKind::Pasm, 8, 32).gates(&t1g).total()
+        < ConvAccel::paper(ConvVariantKind::WeightShared, 8, 32).gates(&t1g).total();
+    let lose16 = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32).gates(&t1g).total()
+        > ConvAccel::paper(ConvVariantKind::WeightShared, 16, 32).gates(&t1g).total();
+    println!("\n1 GHz: PASM wins at 8 bins: {win8}; loses at 16 bins: {lose16} (paper §5.1)");
+}

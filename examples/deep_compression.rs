@@ -1,0 +1,127 @@
+//! The full deep-compression chain (Han et al., the paper's §2.1
+//! precondition) on the digits CNN: train → magnitude-prune (+ masked
+//! retraining) → K-means weight sharing → Huffman-code the index stream,
+//! reporting accuracy and compression factor at each stage, plus the
+//! weight-traffic energy (DRAM vs SRAM residence — the 640 pJ vs 5 pJ
+//! motivation the paper opens with).
+//!
+//! ```bash
+//! cargo run --release --example deep_compression
+//! ```
+
+use pasm_accel::cnn::data::{train_test, Rng};
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::cnn::train::{train, TrainConfig};
+use pasm_accel::hw::memenergy::{
+    fits_on_chip, weight_stream_energy, Residence, WeightFormat,
+};
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::quant::huffman;
+use pasm_accel::quant::prune::magnitude_prune;
+use pasm_accel::tensor::ConvShape;
+
+fn main() {
+    // ---- stage 0: train ----
+    let (train_set, test_set) = train_test(99, 600, 200, 0.05);
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(31);
+    let mut params = arch.init(&mut rng);
+    let cfg = TrainConfig { epochs: 25, lr: 0.05, momentum: 0.9, log_every: 0 };
+    train(&arch, &mut params, &train_set, &cfg);
+    let acc0 = arch.accuracy(&params, &test_set);
+    println!("stage 0  trained float:            accuracy {:.1}%", acc0 * 100.0);
+
+    // ---- stage 1: magnitude prune 50% of conv weights + masked retrain ----
+    let prune_frac = 0.5;
+    let m1 = magnitude_prune(&params.conv1_w, prune_frac);
+    let m2 = magnitude_prune(&params.conv2_w, prune_frac);
+    m1.apply(&mut params.conv1_w);
+    m2.apply(&mut params.conv2_w);
+    let acc_pruned_raw = arch.accuracy(&params, &test_set);
+    // brief retraining with the mask re-applied after each epoch
+    let retrain = TrainConfig { epochs: 6, lr: 0.02, momentum: 0.9, log_every: 0 };
+    for _ in 0..retrain.epochs {
+        let one = TrainConfig { epochs: 1, ..retrain };
+        train(&arch, &mut params, &train_set, &one);
+        m1.apply(&mut params.conv1_w);
+        m2.apply(&mut params.conv2_w);
+    }
+    let acc1 = arch.accuracy(&params, &test_set);
+    println!(
+        "stage 1  pruned {:.0}% (+retrain):   accuracy {:.1}% (raw after prune {:.1}%)",
+        prune_frac * 100.0,
+        acc1 * 100.0,
+        acc_pruned_raw * 100.0
+    );
+
+    // ---- stage 2: K-means weight sharing ----
+    let bins = 16;
+    let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
+    let acc2 = enc.accuracy(&test_set, ConvVariant::Pasm);
+    println!(
+        "stage 2  weight-shared B={bins}:      accuracy {:.1}% (PASM dataflow)",
+        acc2 * 100.0
+    );
+
+    // ---- stage 3: Huffman-code the conv2 index stream ----
+    let occupancy = enc.conv2.occupancy();
+    let code = huffman::build(&occupancy);
+    let mean_bits = code.mean_bits(&occupancy);
+    let entropy = huffman::entropy_bits(&occupancy);
+    // roundtrip sanity on the real stream
+    let stream: Vec<u16> = enc.conv2.bin_idx.data().to_vec();
+    let bits = code.encode(&stream);
+    assert_eq!(code.decode(&bits, stream.len()), stream);
+    println!(
+        "stage 3  huffman indices:          {:.2} bits/weight (entropy {:.2}, fixed {} bits)",
+        mean_bits,
+        entropy,
+        enc.conv2.codebook.index_bits()
+    );
+
+    // ---- compression + energy accounting (conv2 layer) ----
+    let shape = ConvShape::new(8, 5, 5, 3, 3, 16, 1); // conv2 of the digits CNN
+    let dense = WeightFormat::Dense { width_bits: 32 };
+    let indexed = WeightFormat::Indexed {
+        index_bits: enc.conv2.codebook.index_bits(),
+        bins,
+        width_bits: 32,
+    };
+    let huff = WeightFormat::HuffmanIndexed { mean_bits, bins, width_bits: 32 };
+    println!("\nconv2 weight storage ({} weights):", shape.kernels * shape.taps());
+    for (name, fmt) in [("dense", &dense), ("indexed", &indexed), ("huffman", &huff)] {
+        println!(
+            "  {name:<8} {:>8.0} bits  ({:>5.1}x vs dense)",
+            fmt.storage_bits(&shape),
+            fmt.compression_vs_dense(&shape)
+        );
+    }
+    let e_dram = weight_stream_energy(&shape, &dense, Residence::OffChipDram);
+    let e_sram = weight_stream_energy(&shape, &huff, Residence::OnChipSram);
+    println!(
+        "\nweight-traffic energy: dense-from-DRAM {:.1} nJ vs huffman-from-SRAM {:.2} nJ ({:.0}x)",
+        e_dram * 1e9,
+        e_sram * 1e9,
+        e_dram / e_sram
+    );
+    let budget = 8192.0 * 8.0; // an 8 KiB weight buffer
+    println!(
+        "8 KiB on-chip buffer: dense fits: {}, indexed fits: {}, huffman fits: {}",
+        fits_on_chip(&shape, &dense, budget),
+        fits_on_chip(&shape, &indexed, budget),
+        fits_on_chip(&shape, &huff, budget)
+    );
+
+    // chain summary
+    println!(
+        "\nDEEP-COMPRESSION-SUMMARY acc_float={:.3} acc_pruned={:.3} acc_shared={:.3} \
+         huffman_bits={:.2} compression={:.1}x",
+        acc0,
+        acc1,
+        acc2,
+        mean_bits,
+        huff.compression_vs_dense(&shape)
+    );
+    assert!(acc2 > acc0 - 0.05, "compression should not cost >5pp accuracy");
+    assert!(mean_bits <= enc.conv2.codebook.index_bits() as f64 + 1e-9);
+}

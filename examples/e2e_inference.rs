@@ -1,0 +1,138 @@
+//! End-to-end driver (DESIGN.md §6): the full three-layer stack on a real
+//! small workload.
+//!
+//! 1. Generate a synthetic 10-class digit dataset (train/test).
+//! 2. Train the float digits CNN in rust (SGD, hand-written backprop).
+//! 3. K-means-quantize both conv layers to B=16 shared weights
+//!    (deep-compression style — the paper's precondition).
+//! 4. Serve a batch of inference requests through the **coordinator**:
+//!    numerics on the PJRT-compiled PASM model (AOT-lowered JAX/Pallas),
+//!    hardware cost on the 45 nm PASM accelerator model.
+//! 5. Verify: PASM ≡ WS numerics (paper §5.3), quantized accuracy ≈ float
+//!    accuracy (Han et al.'s observation), and report latency/throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use pasm_accel::cnn::data::{train_test, Rng};
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::cnn::train::{train, TrainConfig};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::quant::fixed::QFormat;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1) data ----
+    let (train_set, test_set) = train_test(2024, 600, 200, 0.05);
+    println!("dataset: {} train / {} test synthetic digits", train_set.len(), test_set.len());
+
+    // ---- 2) train float ----
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(17);
+    let mut params = arch.init(&mut rng);
+    let cfg = TrainConfig { epochs: 25, lr: 0.05, momentum: 0.9, log_every: 5 };
+    let t0 = Instant::now();
+    let stats = train(&arch, &mut params, &train_set, &cfg);
+    let float_acc = arch.accuracy(&params, &test_set);
+    println!(
+        "trained {} epochs in {:?}: final loss {:.4}, float test accuracy {:.1}%",
+        stats.len(),
+        t0.elapsed(),
+        stats.last().unwrap().mean_loss,
+        float_acc * 100.0
+    );
+
+    // ---- 3) weight sharing ----
+    let bins = 16;
+    let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
+    println!(
+        "quantized to B={bins}: conv1 mse {:.2e}, conv2 mse {:.2e}, occupancy {:?}",
+        enc.conv1.mse,
+        enc.conv2.mse,
+        enc.conv1.occupancy()
+    );
+    let ws_acc = enc.accuracy(&test_set, ConvVariant::WeightShared);
+    let pasm_acc = enc.accuracy(&test_set, ConvVariant::Pasm);
+    println!(
+        "quantized accuracy: WS {:.1}%, PASM {:.1}% (float {:.1}%)",
+        ws_acc * 100.0,
+        pasm_acc * 100.0,
+        float_acc * 100.0
+    );
+    assert!(
+        (ws_acc - pasm_acc).abs() < 1e-9,
+        "paper §5.3: PASM must not change accuracy vs WS"
+    );
+
+    // ---- 4) serve through the coordinator (PJRT numerics) ----
+    let coord = Coordinator::start(
+        "artifacts",
+        enc.clone(),
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
+    )?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = test_set
+        .iter()
+        .map(|s| coord.submit(s.image.clone()).unwrap())
+        .collect();
+    let mut correct = 0usize;
+    let mut agree = 0usize;
+    for (s, rx) in test_set.iter().zip(rxs) {
+        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        if resp.predicted == s.label {
+            correct += 1;
+        }
+        // coordinator (PJRT/Pallas) vs in-process rust reference
+        let want = enc.forward(&s.image, ConvVariant::Pasm);
+        if resp.predicted == pasm_accel::cnn::layer::argmax(&want) {
+            agree += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let served_acc = correct as f64 / test_set.len() as f64;
+    println!(
+        "served {} requests in {:?} ({:.1} req/s): accuracy {:.1}%, PJRT/rust agreement {}/{}",
+        test_set.len(),
+        dt,
+        test_set.len() as f64 / dt.as_secs_f64(),
+        served_acc * 100.0,
+        agree,
+        test_set.len()
+    );
+    assert_eq!(agree, test_set.len(), "PJRT and rust forward must agree");
+
+    // ---- 5) metrics + hardware cost ----
+    let m = coord.metrics();
+    println!(
+        "batches: {} (mean occupancy {:.1}, padding {:.1}%)",
+        m.batches,
+        m.mean_occupancy(),
+        m.padding_fraction() * 100.0
+    );
+    for p in [50.0, 90.0, 99.0] {
+        println!("p{p:.0} latency: {} us", m.percentile_us(p).unwrap());
+    }
+    println!(
+        "simulated PASM accelerator: {} cycles total, {:.3} uJ ({:.2} nJ/request)",
+        m.sim_cycles,
+        m.sim_energy_j * 1e6,
+        m.sim_energy_j * 1e9 / test_set.len() as f64
+    );
+
+    // summary line for EXPERIMENTS.md
+    println!(
+        "\nE2E-SUMMARY float_acc={:.3} ws_acc={:.3} pasm_acc={:.3} served_acc={:.3} req_per_s={:.1} p50_us={} sim_cycles={} sim_uJ={:.3}",
+        float_acc,
+        ws_acc,
+        pasm_acc,
+        served_acc,
+        test_set.len() as f64 / dt.as_secs_f64(),
+        m.percentile_us(50.0).unwrap(),
+        m.sim_cycles,
+        m.sim_energy_j * 1e6
+    );
+    Ok(())
+}

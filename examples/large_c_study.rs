@@ -1,0 +1,91 @@
+//! Large-C what-if (paper footnote 1): with SRAM-backed caches, the image
+//! tile can grow far beyond the register-file-bound C=15, and the PASM
+//! post-pass amortizes over more accumulations.
+//!
+//! The natural micro-architecture at large C is the *streaming* one (the
+//! §5.3 banked form — you cannot unroll 4608 taps): one tap per cycle
+//! through a single datapath, `N = C·K·K` cycles per output plus `B`
+//! post-pass cycles.  Footnote 1's claim is an amortization claim, and it
+//! shows up in two curves:
+//!
+//!   * the PASM latency overhead `B / N` vanishes as C grows;
+//!   * the PASM energy advantage grows: the multiplier only fires for the
+//!     `B` post-pass cycles out of `N + B`, so its duty → 0.
+//!
+//! Plus the enabler: an SRAM macro of the cache's capacity costs a small
+//! fraction of the register file the paper was forced to use.
+//!
+//! ```bash
+//! cargo run --release --example large_c_study
+//! ```
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind, IMAGE_WIDTH};
+use pasm_accel::accel::hls::HlsConfig;
+use pasm_accel::hw::sram::{register_cost_nand2, SramMacro};
+use pasm_accel::hw::Tech;
+use pasm_accel::tensor::ConvShape;
+
+fn banked(variant: ConvVariantKind, shape: ConvShape, bins: usize) -> ConvAccel {
+    let mut a = ConvAccel::new(variant, shape, bins, 32);
+    a.hls = HlsConfig { unroll_taps: false, partition_bins: false, ..HlsConfig::default() };
+    a.sram_cache = true; // footnote 1: SRAM makes the large tile affordable
+    a
+}
+
+fn main() {
+    let tech = Tech::asic_1ghz();
+    let bins = 16usize;
+    println!("streaming (banked) accelerators, B={bins}, W=32, 3x3, M=2, 5x5 tile, 1 GHz\n");
+    println!(
+        "{:>5} {:>10} {:>12} {:>12} {:>10} {:>10} {:>9} {:>10}",
+        "C", "cache bits", "cache(regs)", "cache(SRAM)", "WS energy", "PASM energy", "saving", "lat ovhd"
+    );
+
+    let mut lat_overheads = Vec::new();
+    let mut energy_savings = Vec::new();
+    for c in [15usize, 32, 64, 128, 256, 512] {
+        let shape = ConvShape::new(c, 5, 5, 3, 3, 2, 1);
+        let cache_bits = (c * 5 * 5) as u64 * IMAGE_WIDTH as u64;
+        let sram = SramMacro::new(cache_bits, 2);
+        let ws = banked(ConvVariantKind::WeightShared, shape.clone(), bins);
+        let pasm = banked(ConvVariantKind::Pasm, shape, bins);
+        // energy per full layer: power x time
+        let e = |a: &ConvAccel| {
+            a.power(&tech).total_w() * a.latency_cycles_exact() * tech.period_s()
+        };
+        let (e_ws, e_pasm) = (e(&ws), e(&pasm));
+        let lat = pasm.latency_cycles_exact() / ws.latency_cycles_exact() - 1.0;
+        println!(
+            "{c:>5} {cache_bits:>10} {:>12.0} {:>12.0} {:>9.2}nJ {:>9.2}nJ {:>8.1}% {:>9.2}%",
+            register_cost_nand2(cache_bits),
+            sram.area_nand2(),
+            e_ws * 1e9,
+            e_pasm * 1e9,
+            (1.0 - e_pasm / e_ws) * 100.0,
+            lat * 100.0
+        );
+        lat_overheads.push(lat);
+        energy_savings.push(1.0 - e_pasm / e_ws);
+    }
+
+    // footnote-1 checks
+    assert!(
+        lat_overheads.windows(2).all(|w| w[1] < w[0]),
+        "latency overhead must shrink with C: {lat_overheads:?}"
+    );
+    assert!(
+        energy_savings.last().unwrap() > energy_savings.first().unwrap(),
+        "energy advantage must grow with C: {energy_savings:?}"
+    );
+    let big_bits = 512u64 * 25 * IMAGE_WIDTH as u64;
+    assert!(SramMacro::new(big_bits, 2).area_nand2() < register_cost_nand2(big_bits) / 5.0);
+    println!(
+        "\nfootnote-1 reproduced: latency overhead {:.2}% -> {:.2}% and energy\n\
+         saving {:.1}% -> {:.1}% as C goes 15 -> 512; SRAM keeps the cache >5x\n\
+         cheaper than registers.",
+        lat_overheads[0] * 100.0,
+        lat_overheads.last().unwrap() * 100.0,
+        energy_savings[0] * 100.0,
+        energy_savings.last().unwrap() * 100.0
+    );
+}

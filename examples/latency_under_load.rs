@@ -1,0 +1,71 @@
+//! Latency-under-load study: open-loop Poisson arrivals against the
+//! coordinator at increasing offered rates — the standard serving curve
+//! (latency stays flat until the knee, then queueing blows it up).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example latency_under_load
+//! ```
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::loadgen::run_open_loop;
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::quant::fixed::QFormat;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(61);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+    let coord = Coordinator::start(
+        "artifacts",
+        enc,
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
+    )?;
+
+    let pool: Vec<_> = (0..64).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect();
+
+    // capacity probe: blast a closed burst to find max throughput
+    let burst = 512;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| coord.submit(pool[i % pool.len()].clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let capacity = burst as f64 / t0.elapsed().as_secs_f64();
+    println!("capacity probe: ~{capacity:.0} req/s (burst, full batches)\n");
+
+    println!(
+        "{:>9} {:>10} {:>9} {:>9} {:>9} {:>9} {:>7}",
+        "offered", "achieved", "mean", "p50", "p90", "p99", "errors"
+    );
+    for frac in [0.1, 0.25, 0.5, 0.7, 0.85] {
+        let rate = capacity * frac;
+        let n = (rate * 2.0).max(64.0) as usize; // ~2 seconds of load
+        let r = run_open_loop(&coord, &pool, n, rate, &mut rng);
+        println!(
+            "{:>7.0}/s {:>8.0}/s {:>7.1}ms {:>7.1}ms {:>7.1}ms {:>7.1}ms {:>7}",
+            r.offered_hz,
+            r.achieved_hz,
+            r.mean_us() / 1e3,
+            r.percentile_us(50.0) as f64 / 1e3,
+            r.percentile_us(90.0) as f64 / 1e3,
+            r.percentile_us(99.0) as f64 / 1e3,
+            r.errors
+        );
+        assert_eq!(r.errors, 0, "no request may be lost");
+    }
+
+    let m = coord.metrics();
+    println!(
+        "\ntotals: {} requests, {} batches, mean occupancy {:.1}, padding {:.1}%",
+        m.requests,
+        m.batches,
+        m.mean_occupancy(),
+        m.padding_fraction() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: build a weight-shared-with-PASM convolution accelerator,
+//! run one tile through the cycle-accurate simulator, and price it on the
+//! 45 nm ASIC model — the paper's pipeline in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
+use pasm_accel::cnn::conv::FxConvInputs;
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::hw::Tech;
+use pasm_accel::quant::codebook::encode_weights;
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::sim::simulate_conv;
+use pasm_accel::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    // 1) a trained-looking conv layer (the paper tile: C=15, 5x5, 3x3, M=2)
+    let mut rng = Rng::new(7);
+    let image = Tensor::from_fn(&[15, 5, 5], |_| rng.signed() * 4.0);
+    let weights = Tensor::from_fn(&[2, 15, 3, 3], |_| rng.signed());
+
+    // 2) weight sharing: K-means the weights into B=16 dictionary bins
+    let encoded = encode_weights(&weights, 16, QFormat::W32);
+    println!(
+        "codebook: {} bins, {:.1}x index compression, kmeans mse {:.2e}",
+        encoded.codebook.bins(),
+        encoded.index_compression(),
+        encoded.mse
+    );
+
+    // 3) the PASM accelerator for that layer
+    let accel = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+    let baseline = ConvAccel::paper(ConvVariantKind::WeightShared, 16, 32);
+
+    // 4) run the tile through the cycle-accurate simulator (bit-exact
+    //    fixed-point dataflow, identical results to the WS baseline)
+    let inputs = FxConvInputs::encode(&image, &encoded, QFormat::IMAGE32, 1);
+    let sim = simulate_conv(&accel, &inputs);
+    let sim_ws = simulate_conv(&baseline, &inputs);
+    assert_eq!(sim.out.data(), sim_ws.out.data(), "paper §5.3: identical results");
+    println!(
+        "simulated: {} cycles (WS baseline {}), outputs bit-exact",
+        sim.cycles, sim_ws.cycles
+    );
+
+    // 5) price both on the 45 nm ASIC model at 1 GHz
+    let tech = Tech::asic_1ghz();
+    for (name, a) in [("weight-shared", &baseline), ("PASM", &accel)] {
+        let g = a.gates(&tech);
+        let p = a.power(&tech);
+        println!(
+            "{name:>14}: {:>9.0} NAND2 gates, {:>7.2} mW, {} cycles",
+            g.total(),
+            p.total_w() * 1e3,
+            a.latency_cycles()
+        );
+    }
+    let saving = 1.0
+        - accel.power(&tech).total_w() / baseline.power(&tech).total_w();
+    println!("PASM power saving: {:.1}%", saving * 100.0);
+    Ok(())
+}

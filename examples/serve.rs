@@ -1,0 +1,76 @@
+//! Serving demo: run the coordinator as a service and fire batched load
+//! from multiple client threads, reporting latency/throughput percentiles
+//! and the simulated PASM accelerator cost.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve -- 4 200
+//! #                                  client threads ----^   ^---- requests each
+//! ```
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::quant::fixed::QFormat;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let threads: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let per_thread: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100);
+
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(5);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+
+    let coord = Arc::new(Coordinator::start(
+        "artifacts",
+        enc,
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
+    )?);
+    println!("coordinator up; {threads} clients x {per_thread} requests");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t as u64);
+                let mut ok = 0usize;
+                for i in 0..per_thread {
+                    let img = render_digit(&mut rng, (t + i) % 10, 0.05);
+                    if coord.infer(img).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed();
+    let total = threads * per_thread;
+
+    println!(
+        "served {ok}/{total} in {dt:?} -> {:.1} req/s",
+        total as f64 / dt.as_secs_f64()
+    );
+    let m = coord.metrics();
+    println!(
+        "batches {} | mean occupancy {:.2} | padding {:.1}%",
+        m.batches,
+        m.mean_occupancy(),
+        m.padding_fraction() * 100.0
+    );
+    for p in [50.0, 90.0, 99.0] {
+        println!("p{p:.0} latency: {} us", m.percentile_us(p).unwrap());
+    }
+    println!(
+        "simulated accelerator: {} cycles, {:.3} uJ ({:.2} nJ/req)",
+        m.sim_cycles,
+        m.sim_energy_j * 1e6,
+        m.sim_energy_j * 1e9 / ok.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts for rust/PJRT.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids so text round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py.
+
+Artifacts (all shapes fixed at lower time; rust reads ``manifest.json``):
+
+    artifacts/pasm_tile.hlo.txt    PASM conv, paper tile  (image, bi, cb)
+    artifacts/ws_tile.hlo.txt      weight-shared MAC conv, same signature
+    artifacts/direct_tile.hlo.txt  dense conv             (image, weights)
+    artifacts/model_b{N}.hlo.txt   digits CNN forward, batch N in {1,8,16}
+    artifacts/manifest.json        shapes/dtypes/param order for rust
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import PAPER_TILE, E2E_MODEL, ConvTile
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tile_specs(tile: ConvTile):
+    f32, i32 = jnp.float32, jnp.int32
+    image = jax.ShapeDtypeStruct((tile.channels, tile.in_h, tile.in_w), f32)
+    bi = jax.ShapeDtypeStruct(
+        (tile.kernels, tile.channels, tile.kernel_h, tile.kernel_w), i32
+    )
+    cb = jax.ShapeDtypeStruct((tile.bins,), f32)
+    weights = jax.ShapeDtypeStruct(
+        (tile.kernels, tile.channels, tile.kernel_h, tile.kernel_w), f32
+    )
+    return image, bi, cb, weights
+
+
+def lower_tiles(tile: ConvTile):
+    """Lower the three accelerator-variant tile graphs."""
+    image, bi, cb, weights = _tile_specs(tile)
+    out = {}
+    out["pasm_tile"] = jax.jit(M.tile_forward_pasm).lower(image, bi, cb)
+    out["ws_tile"] = jax.jit(M.tile_forward_ws).lower(image, bi, cb)
+    out["direct_tile"] = jax.jit(M.tile_forward_direct).lower(image, weights)
+    return out
+
+
+def lower_models(cfg):
+    """Lower the e2e digits CNN at each batch-size bucket."""
+    specs = M.model_param_specs(cfg)
+    flat = [specs[k] for k in M.PARAM_ORDER]
+    out = {}
+    for n in cfg.batch_sizes:
+        images = jax.ShapeDtypeStruct((n, cfg.in_c, cfg.in_h, cfg.in_w), jnp.float32)
+        fn = M.model_forward_flat(cfg, variant="pasm")
+        out[f"model_b{n}"] = jax.jit(fn).lower(images, *flat)
+    return out
+
+
+def build_manifest(tile: ConvTile, cfg) -> dict:
+    specs = M.model_param_specs(cfg)
+    return {
+        "format": "hlo-text",
+        "tile": tile.to_dict(),
+        "model": cfg.to_dict(),
+        "model_param_order": M.PARAM_ORDER,
+        "model_params": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in specs.items()
+        },
+        "artifacts": {},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="also write the pasm_tile HLO to this exact path (Makefile stamp)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    tile, cfg = PAPER_TILE, E2E_MODEL
+    manifest = build_manifest(tile, cfg)
+
+    lowered = {}
+    lowered.update(lower_tiles(tile))
+    lowered.update(lower_models(cfg))
+
+    for name, low in lowered.items():
+        text = to_hlo_text(low)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = f"{name}.hlo.txt"
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+    if args.out:
+        # Makefile stamp target: alias of pasm_tile.
+        with open(args.out, "w") as f:
+            f.write(to_hlo_text(lowered["pasm_tile"]))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

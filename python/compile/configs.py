@@ -1,0 +1,134 @@
+"""Shared shape configurations for the PASM reproduction.
+
+These mirror the paper's experimental setups:
+
+* ``PAPER_TILE`` — the conv-layer tile used throughout §4/§5 of the paper
+  (IH = IW = 5, C = 15, KX = KY = 3, M = 2), sized so the image cache fits a
+  register file.  All ASIC/FPGA figures (15-22) use this tile.
+* ``E2E_MODEL`` — the tiny CNN used by the end-to-end inference example
+  (synthetic 12x12 digits, two PASM conv layers, a dense head).
+
+Both the python (L1/L2) and rust (L3) sides consume the artifact manifest
+emitted by ``aot.py``, which is generated from these dataclasses — the rust
+side never hard-codes shapes.
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ConvTile:
+    """A single weight-shared convolution tile (one grid position batch)."""
+
+    name: str
+    channels: int  # C
+    in_h: int  # IH
+    in_w: int  # IW
+    kernel_h: int  # KY
+    kernel_w: int  # KX
+    kernels: int  # M (output channels)
+    bins: int  # B (codebook entries)
+    stride: int = 1
+
+    @property
+    def out_h(self) -> int:
+        return (self.in_h - self.kernel_h) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.in_w - self.kernel_w) // self.stride + 1
+
+    @property
+    def taps(self) -> int:
+        """MAC operations per output element: N = C * KY * KX (paper §4)."""
+        return self.channels * self.kernel_h * self.kernel_w
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(out_h=self.out_h, out_w=self.out_w, taps=self.taps)
+        return d
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Tiny CNN for the end-to-end example: conv-relu-pool x2 + dense."""
+
+    name: str = "digits-cnn"
+    in_h: int = 12
+    in_w: int = 12
+    in_c: int = 1
+    conv1_m: int = 8
+    conv2_m: int = 16
+    kernel: int = 3
+    bins: int = 16
+    classes: int = 10
+    batch_sizes: tuple = (1, 8, 16)
+
+    @property
+    def conv1(self) -> ConvTile:
+        return ConvTile(
+            name="conv1",
+            channels=self.in_c,
+            in_h=self.in_h,
+            in_w=self.in_w,
+            kernel_h=self.kernel,
+            kernel_w=self.kernel,
+            kernels=self.conv1_m,
+            bins=self.bins,
+        )
+
+    @property
+    def pool1_hw(self) -> int:
+        return self.conv1.out_h // 2  # 2x2 maxpool, VALID
+
+    @property
+    def conv2(self) -> ConvTile:
+        return ConvTile(
+            name="conv2",
+            channels=self.conv1_m,
+            in_h=self.pool1_hw,
+            in_w=self.pool1_hw,
+            kernel_h=self.kernel,
+            kernel_w=self.kernel,
+            kernels=self.conv2_m,
+            bins=self.bins,
+        )
+
+    @property
+    def feature_dim(self) -> int:
+        return self.conv2_m * self.conv2.out_h * self.conv2.out_w
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "in_h": self.in_h,
+            "in_w": self.in_w,
+            "in_c": self.in_c,
+            "kernel": self.kernel,
+            "bins": self.bins,
+            "classes": self.classes,
+            "batch_sizes": list(self.batch_sizes),
+            "conv1": self.conv1.to_dict(),
+            "conv2": self.conv2.to_dict(),
+            "pool1_hw": self.pool1_hw,
+            "feature_dim": self.feature_dim,
+        }
+
+
+# The paper's conv-accelerator tile (§4: IH=5, IW=5, C=15, KY=KX=3, M=2).
+PAPER_TILE = ConvTile(
+    name="paper_tile",
+    channels=15,
+    in_h=5,
+    in_w=5,
+    kernel_h=3,
+    kernel_w=3,
+    kernels=2,
+    bins=16,
+)
+
+# Bin sweep used in figures 14-17 / 19-21.
+PAPER_TILE_BINS: List[int] = [4, 8, 16]
+
+E2E_MODEL = ModelConfig()

@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for the convolution variants.
+
+These are the CORE correctness signal for the Pallas kernels: every kernel in
+this package must ``allclose`` against its oracle here (pytest enforces it).
+
+The three variants mirror the paper:
+
+* :func:`direct_conv`      — Fig 1 pseudo-code, plain sum-of-products.
+* :func:`ws_conv`          — Fig 3/4, weight-shared MAC: decode the codebook
+                             through the bin index, then multiply-accumulate.
+* :func:`pasm_conv`        — Fig 5/6, PASM: phase 1 accumulates image values
+                             into B bins keyed by bin index (a weighted
+                             histogram of dictionary indices), phase 2
+                             multiplies each bin by its codebook weight.
+
+Over the reals the three are identical permutations of the same sum; in
+floating point they agree to ``allclose`` tolerance, and in the rust
+fixed-point simulator they are bit-exact (paper §5.3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def im2col(image: jax.Array, ky: int, kx: int, stride: int = 1) -> jax.Array:
+    """[C, IH, IW] -> patches [OH*OW, C*KY*KX] with (c, ky, kx) tap order.
+
+    The tap order matches the flattening of ``bin_idx[m, c, ky, kx]`` so that
+    patch column ``c*KY*KX + ky*KX + kx`` pairs with that tap's bin index.
+    Static python loops over the (small) kernel window unroll at trace time.
+    """
+    c, ih, iw = image.shape
+    oh = (ih - ky) // stride + 1
+    ow = (iw - kx) // stride + 1
+    cols = []
+    for y in range(ky):
+        for x in range(kx):
+            sl = jax.lax.slice(
+                image,
+                (0, y, x),
+                (c, y + (oh - 1) * stride + 1, x + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )  # [C, OH, OW]
+            cols.append(sl)
+    # [C, KY*KX, OH, OW] -> [C*KY*KX, OH*OW] -> [OH*OW, C*KY*KX]
+    p = jnp.stack(cols, axis=1)
+    return p.reshape(c * ky * kx, oh * ow).T
+
+
+def direct_conv(image: jax.Array, weights: jax.Array, stride: int = 1) -> jax.Array:
+    """Plain convolution. image [C,IH,IW], weights [M,C,KY,KX] -> [M,OH,OW]."""
+    m, c, ky, kx = weights.shape
+    patches = im2col(image, ky, kx, stride)  # [T, CKK]
+    w = weights.reshape(m, c * ky * kx)  # [M, CKK]
+    out = patches @ w.T  # [T, M]
+    oh = (image.shape[1] - ky) // stride + 1
+    ow = (image.shape[2] - kx) // stride + 1
+    return out.T.reshape(m, oh, ow)
+
+
+def decode_weights(bin_idx: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Dictionary-decode weight-shared indices: w[m,c,ky,kx] = codebook[bi]."""
+    return codebook[bin_idx]
+
+
+def ws_conv(
+    image: jax.Array, bin_idx: jax.Array, codebook: jax.Array, stride: int = 1
+) -> jax.Array:
+    """Weight-shared MAC convolution (decode-then-MAC, Fig 3/4)."""
+    return direct_conv(image, decode_weights(bin_idx, codebook), stride)
+
+
+def one_hot_taps(bin_idx: jax.Array, bins: int) -> jax.Array:
+    """[M,C,KY,KX] int32 -> one-hot [M, C*KY*KX, B] float32.
+
+    Row t of plane m selects the bin that tap t's image value accumulates
+    into — the dataflow of the PAS unit expressed as a dense selection
+    matrix (the TPU adaptation of the paper's counting/selection logic,
+    DESIGN.md §2).
+    """
+    m = bin_idx.shape[0]
+    flat = bin_idx.reshape(m, -1)
+    return jax.nn.one_hot(flat, bins, dtype=jnp.float32)
+
+
+def pasm_conv(
+    image: jax.Array, bin_idx: jax.Array, codebook: jax.Array, stride: int = 1
+) -> jax.Array:
+    """PASM convolution: bin-accumulate (PAS) then post-pass multiply.
+
+    Phase 1: bins[t_out, b] = sum over taps whose index == b of the image
+    value at that tap  (patches @ one_hot)  — the weighted histogram.
+    Phase 2: out = bins @ codebook — the shared post-pass MAC.
+    """
+    m, c, ky, kx = bin_idx.shape
+    bins = codebook.shape[0]
+    patches = im2col(image, ky, kx, stride)  # [T, CKK]
+    onehot = one_hot_taps(bin_idx, bins)  # [M, CKK, B]
+    # per-m: [T, CKK] @ [CKK, B] -> [T, B]; then [T, B] @ [B] -> [T]
+    acc = jnp.einsum("tk,mkb->mtb", patches, onehot)  # PAS phase
+    out = acc @ codebook  # post-pass MAC  [M, T]
+    oh = (image.shape[1] - ky) // stride + 1
+    ow = (image.shape[2] - kx) // stride + 1
+    return out.reshape(m, oh, ow)
+
+
+def pasm_histogram(
+    image: jax.Array, bin_idx_m: jax.Array, bins: int, stride: int = 1
+) -> jax.Array:
+    """Phase-1-only oracle via segment_sum (independent of the one-hot path).
+
+    Returns [OH*OW, B] accumulated image values for a single kernel plane
+    ``bin_idx_m`` [C,KY,KX].  Used by tests to cross-check the one-hot
+    formulation against a genuinely different implementation.
+    """
+    c, ky, kx = bin_idx_m.shape
+    patches = im2col(image, ky, kx, stride)  # [T, CKK]
+    flat = bin_idx_m.reshape(-1)  # [CKK]
+
+    def per_row(row):
+        return jax.ops.segment_sum(row, flat, num_segments=bins)
+
+    return jax.vmap(per_row)(patches)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 stride-2 VALID max-pool over [C,H,W]."""
+    c, h, w = x.shape
+    x = x[:, : h // 2 * 2, : w // 2 * 2]
+    x = x.reshape(c, h // 2, 2, w // 2, 2)
+    return x.max(axis=(2, 4))

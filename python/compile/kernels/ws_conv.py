@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernels for the two baseline accelerators.
+
+* :func:`ws_conv` — the weight-shared MAC baseline (paper Fig 3/4): decode
+  the codebook through the bin indices, then a plain sum-of-products.  The
+  decode is the ``onehot @ codebook`` contraction (the register-file read
+  through the index), the SOP is the big ``patches @ w`` matmul — exactly the
+  structure whose multiplier array PASM removes.
+* :func:`direct_conv` — the non-weight-shared baseline (paper Fig 1/2):
+  dense weights, plain sum-of-products.
+
+Both run under ``interpret=True`` (see pasm_conv.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .pasm_conv import DEFAULT_TILE_T, _pad_rows
+
+
+def _ws_kernel(patches_ref, onehot_ref, codebook_ref, out_ref):
+    """Weight-shared MAC: decode then multiply-accumulate.
+
+    The decode (`onehot @ codebook`) models the weight-register-file read of
+    Fig 3; the second matmul is the full W-bit multiplier array that the
+    paper's PASM replaces.
+    """
+    w = jnp.dot(
+        onehot_ref[0], codebook_ref[...], preferred_element_type=jnp.float32
+    )  # [CKK, 1] decoded weights for kernel m
+    out = jnp.dot(patches_ref[...], w, preferred_element_type=jnp.float32)
+    out_ref[...] = out.T
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "tile_t"))
+def ws_conv(
+    image: jax.Array,
+    bin_idx: jax.Array,
+    codebook: jax.Array,
+    stride: int = 1,
+    tile_t: int = DEFAULT_TILE_T,
+) -> jax.Array:
+    """Weight-shared MAC convolution via Pallas. Same signature as pasm_conv."""
+    m, c, ky, kx = bin_idx.shape
+    bins = codebook.shape[0]
+    oh = (image.shape[1] - ky) // stride + 1
+    ow = (image.shape[2] - kx) // stride + 1
+    t = oh * ow
+    ckk = c * ky * kx
+
+    patches = _pad_rows(ref.im2col(image, ky, kx, stride), tile_t)
+    tp = patches.shape[0]
+    onehot = ref.one_hot_taps(bin_idx, bins)
+    cb = codebook.reshape(bins, 1)
+
+    out = pl.pallas_call(
+        _ws_kernel,
+        grid=(m, tp // tile_t),
+        in_specs=[
+            pl.BlockSpec((tile_t, ckk), lambda mi, ti: (ti, 0)),
+            pl.BlockSpec((1, ckk, bins), lambda mi, ti: (mi, 0, 0)),
+            pl.BlockSpec((bins, 1), lambda mi, ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_t), lambda mi, ti: (mi, ti)),
+        out_shape=jax.ShapeDtypeStruct((m, tp), jnp.float32),
+        interpret=True,
+    )(patches, onehot, cb)
+    return out[:, :t].reshape(m, oh, ow)
+
+
+def _direct_kernel(patches_ref, weights_ref, out_ref):
+    w = weights_ref[...].reshape(-1, 1)  # [CKK, 1] weights for kernel m
+    out = jnp.dot(patches_ref[...], w, preferred_element_type=jnp.float32)
+    out_ref[...] = out.T  # [1, TILE_T]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "tile_t"))
+def direct_conv(
+    image: jax.Array,
+    weights: jax.Array,
+    stride: int = 1,
+    tile_t: int = DEFAULT_TILE_T,
+) -> jax.Array:
+    """Non-weight-shared convolution via Pallas. weights [M,C,KY,KX]."""
+    m, c, ky, kx = weights.shape
+    oh = (image.shape[1] - ky) // stride + 1
+    ow = (image.shape[2] - kx) // stride + 1
+    t = oh * ow
+    ckk = c * ky * kx
+
+    patches = _pad_rows(ref.im2col(image, ky, kx, stride), tile_t)
+    tp = patches.shape[0]
+    wflat = weights.reshape(m, ckk)
+
+    out = pl.pallas_call(
+        _direct_kernel,
+        grid=(m, tp // tile_t),
+        in_specs=[
+            pl.BlockSpec((tile_t, ckk), lambda mi, ti: (ti, 0)),
+            pl.BlockSpec((1, ckk), lambda mi, ti: (mi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_t), lambda mi, ti: (mi, ti)),
+        out_shape=jax.ShapeDtypeStruct((m, tp), jnp.float32),
+        interpret=True,
+    )(patches, wflat)
+    return out[:, :t].reshape(m, oh, ow)

@@ -1,0 +1,126 @@
+"""Layer-2 JAX model: weight-shared CNN forward pass calling the L1 kernels.
+
+Two graphs are exported by ``aot.py``:
+
+* ``pasm_tile`` / ``ws_tile`` / ``direct_tile`` — one convolution tile with
+  the paper's §4 shapes (C=15, 5x5 image, 3x3 kernel, M=2).  These are the
+  units the rust coordinator schedules, and the numerics cross-check for the
+  cycle-accurate simulator.
+* ``model_b{N}`` — the end-to-end digits CNN at fixed batch sizes
+  (conv1 -> bias -> relu -> maxpool -> conv2 -> bias -> relu -> dense),
+  with both conv layers dictionary-encoded and computed by the PASM kernel.
+
+All parameters (codebooks, bin indices, dense weights) are runtime inputs of
+the exported HLO, so the rust side can swap trained/quantized weights without
+re-tracing — python never runs on the request path.
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import pasm_conv as pk
+from .kernels import ws_conv as wk
+from .kernels import ref
+
+
+def tile_forward_pasm(image, bin_idx, codebook):
+    """Single PASM conv tile: the unit of work the coordinator dispatches."""
+    return pk.pasm_conv(image, bin_idx, codebook)
+
+
+def tile_forward_ws(image, bin_idx, codebook):
+    """Weight-shared MAC baseline tile (identical numerics modulo fp order)."""
+    return wk.ws_conv(image, bin_idx, codebook)
+
+
+def tile_forward_direct(image, weights):
+    """Non-weight-shared baseline tile."""
+    return wk.direct_conv(image, weights)
+
+
+def _sample_forward(cfg: ModelConfig, x, params: Dict[str, jax.Array], conv_fn):
+    """Forward one [C,H,W] sample through the digits CNN."""
+    h = conv_fn(x, params["bi1"], params["cb1"])  # [M1, 10, 10]
+    h = ref.relu(h + params["bias1"][:, None, None])
+    h = ref.maxpool2(h)  # [M1, 5, 5]
+    h = conv_fn(h, params["bi2"], params["cb2"])  # [M2, 3, 3]
+    h = ref.relu(h + params["bias2"][:, None, None])
+    feat = h.reshape(-1)  # [feature_dim]
+    return feat @ params["dense_w"] + params["dense_b"]  # [classes]
+
+
+def model_forward(cfg: ModelConfig, images, params: Dict[str, jax.Array], variant: str = "pasm"):
+    """Batched forward. images [N, C, H, W] -> logits [N, classes].
+
+    The batch loop is a static python unroll: N is fixed per exported
+    artifact (the coordinator buckets requests to the nearest batch size),
+    and each iteration is one pallas_call chain, so XLA sees N independent
+    subgraphs it can fuse and schedule freely.
+    """
+    conv_fn = {
+        "pasm": tile_forward_pasm,
+        "ws": tile_forward_ws,
+    }[variant]
+    logits = [
+        _sample_forward(cfg, images[i], params, conv_fn)
+        for i in range(images.shape[0])
+    ]
+    return jnp.stack(logits)
+
+
+def model_param_specs(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Shape/dtype signature of the exported model parameters (manifest)."""
+    c1, c2 = cfg.conv1, cfg.conv2
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "bi1": jax.ShapeDtypeStruct((c1.kernels, c1.channels, c1.kernel_h, c1.kernel_w), i32),
+        "cb1": jax.ShapeDtypeStruct((cfg.bins,), f32),
+        "bias1": jax.ShapeDtypeStruct((c1.kernels,), f32),
+        "bi2": jax.ShapeDtypeStruct((c2.kernels, c2.channels, c2.kernel_h, c2.kernel_w), i32),
+        "cb2": jax.ShapeDtypeStruct((cfg.bins,), f32),
+        "bias2": jax.ShapeDtypeStruct((c2.kernels,), f32),
+        "dense_w": jax.ShapeDtypeStruct((cfg.feature_dim, cfg.classes), f32),
+        "dense_b": jax.ShapeDtypeStruct((cfg.classes,), f32),
+    }
+
+
+# Canonical parameter order for the exported HLO (rust marshals in this order).
+PARAM_ORDER = ["bi1", "cb1", "bias1", "bi2", "cb2", "bias2", "dense_w", "dense_b"]
+
+
+def model_forward_flat(cfg: ModelConfig, variant: str = "pasm"):
+    """Return fn(images, *params_in_PARAM_ORDER) -> logits, for jit/lower."""
+
+    def fn(images, *flat_params):
+        params = dict(zip(PARAM_ORDER, flat_params))
+        return model_forward(cfg, images, params, variant)
+
+    return fn
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    """Random float init + K-means quantization — a stand-in parameter set
+    for shape tests and the artifact smoke path (the e2e example overwrites
+    these with rust-trained weights)."""
+    from . import quantize
+
+    c1, c2 = cfg.conv1, cfg.conv2
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jax.random.normal(k1, (c1.kernels, c1.channels, c1.kernel_h, c1.kernel_w)) * 0.3
+    w2 = jax.random.normal(k2, (c2.kernels, c2.channels, c2.kernel_h, c2.kernel_w)) * 0.2
+    cb1, bi1 = quantize.quantize_weights(w1, cfg.bins)
+    cb2, bi2 = quantize.quantize_weights(w2, cfg.bins)
+    dense_w = jax.random.normal(k3, (cfg.feature_dim, cfg.classes)) * 0.1
+    return {
+        "bi1": bi1.astype(jnp.int32),
+        "cb1": cb1,
+        "bias1": jnp.zeros((c1.kernels,)),
+        "bi2": bi2.astype(jnp.int32),
+        "cb2": cb2,
+        "bias2": jnp.zeros((c2.kernels,)),
+        "dense_w": dense_w,
+        "dense_b": jnp.zeros((cfg.classes,)),
+    }

@@ -1,0 +1,72 @@
+"""K-means scalar weight quantizer (deep-compression style, Han et al. 2015).
+
+The paper's weight sharing binning: cluster a trained layer's weights around
+B centroids (Lloyd's algorithm), replace each weight with the index of its
+nearest centroid, and keep the B centroid values as the layer codebook.
+
+This module is build-time only: it quantizes the example model's weights so
+``aot.py`` can bake codebook/bin-index example inputs into the pytest and the
+artifact manifest.  The rust side has its own independent implementation in
+``rust/src/quant/kmeans.rs`` (tested against the same invariants).
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantile_init(x: jax.Array, bins: int) -> jax.Array:
+    """Initialise centroids at evenly spaced quantiles (deterministic,
+    density-aware — matches how deep-compression seeds K-means)."""
+    qs = (jnp.arange(bins, dtype=jnp.float32) + 0.5) / bins
+    return jnp.quantile(x, qs)
+
+
+def kmeans_1d(
+    x: jax.Array, bins: int, iters: int = 30
+) -> Tuple[jax.Array, jax.Array]:
+    """Lloyd's K-means on a flat array.
+
+    Returns ``(codebook [bins], assignments [x.size] int32)``.  Empty
+    clusters keep their previous centroid (standard Lloyd's degenerate-case
+    handling), so the codebook always has exactly ``bins`` entries — the
+    hardware register file is a fixed size regardless of occupancy.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    centroids = _quantile_init(flat, bins)
+
+    def step(c, _):
+        d = jnp.abs(flat[:, None] - c[None, :])
+        assign = jnp.argmin(d, axis=1)
+        sums = jax.ops.segment_sum(flat, assign, num_segments=bins)
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(flat), assign, num_segments=bins
+        )
+        c_new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), c)
+        return c_new, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+    assign = jnp.argmin(
+        jnp.abs(flat[:, None] - centroids[None, :]), axis=1
+    ).astype(jnp.int32)
+    return centroids, assign
+
+
+def quantize_weights(
+    weights: jax.Array, bins: int, iters: int = 30
+) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a [M,C,KY,KX] weight tensor to (codebook [B], bin_idx).
+
+    ``codebook[bin_idx]`` is the dictionary-decoded approximation the
+    weight-shared accelerator actually computes with.
+    """
+    codebook, assign = kmeans_1d(weights, bins, iters)
+    return codebook, assign.reshape(weights.shape)
+
+
+def quantization_mse(weights: jax.Array, bins: int, iters: int = 30) -> jax.Array:
+    """Mean squared dictionary-encoding error — the metric deep compression
+    trades against compression ratio."""
+    codebook, bin_idx = quantize_weights(weights, bins, iters)
+    return jnp.mean((codebook[bin_idx] - weights) ** 2)

@@ -1,0 +1,80 @@
+"""AOT lowering sanity: HLO text well-formed, signatures match the manifest.
+
+These run the same lowering path as ``make artifacts`` but keep everything
+in-memory (no artifact writes), so pytest stays side-effect free.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model as M
+from compile.configs import PAPER_TILE, E2E_MODEL
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_tile_hlo_text_wellformed():
+    lowered = aot.lower_tiles(PAPER_TILE)
+    assert set(lowered) == {"pasm_tile", "ws_tile", "direct_tile"}
+    for name, low in lowered.items():
+        text = aot.to_hlo_text(low)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # 64-bit-id safety: the text parser reassigns ids, but the text we
+        # hand it must not carry any id annotations that overflow i32.
+        for tok in re.findall(r"id=(\d+)", text):
+            assert int(tok) <= 2**31 - 1
+
+
+def test_tile_signature():
+    """pasm_tile: (image f32[C,IH,IW], bi s32[M,C,KY,KX], cb f32[B]) -> f32[M,OH,OW]."""
+    t = PAPER_TILE
+    text = aot.to_hlo_text(aot.lower_tiles(t)["pasm_tile"])
+    # parameter/output declarations live in the ENTRY body, one per line
+    params = [l for l in text.splitlines() if "parameter(" in l]
+    assert any(f"f32[{t.channels},{t.in_h},{t.in_w}]" in l for l in params)
+    assert any(
+        f"s32[{t.kernels},{t.channels},{t.kernel_h},{t.kernel_w}]" in l for l in params
+    )
+    assert any(f"f32[{t.bins}]" in l for l in params)
+    assert f"f32[{t.kernels},{t.out_h},{t.out_w}]" in text  # output shape
+
+
+def test_model_lowering_batch_shapes():
+    cfg = E2E_MODEL
+    lowered = aot.lower_models(cfg)
+    assert set(lowered) == {f"model_b{n}" for n in cfg.batch_sizes}
+    for n in cfg.batch_sizes:
+        text = aot.to_hlo_text(lowered[f"model_b{n}"])
+        params = [l for l in text.splitlines() if "parameter(" in l]
+        assert any(f"f32[{n},{cfg.in_c},{cfg.in_h},{cfg.in_w}]" in l for l in params)
+        assert f"f32[{n},{cfg.classes}]" in text  # logits shape
+
+
+def test_manifest_consistent_with_specs():
+    manifest = aot.build_manifest(PAPER_TILE, E2E_MODEL)
+    specs = M.model_param_specs(E2E_MODEL)
+    assert manifest["model_param_order"] == M.PARAM_ORDER
+    for k, v in manifest["model_params"].items():
+        assert tuple(v["shape"]) == tuple(specs[k].shape)
+    assert manifest["tile"]["taps"] == PAPER_TILE.taps
+
+
+def test_lowered_tile_executes_like_kernel():
+    """Compile the lowered pasm_tile with jax and compare to direct call —
+    proves the AOT graph is the same computation rust will run."""
+    t = PAPER_TILE
+    rng = np.random.default_rng(0)
+    image = jnp.asarray(rng.standard_normal((t.channels, t.in_h, t.in_w)), jnp.float32)
+    bi = jnp.asarray(rng.integers(0, t.bins, (t.kernels, t.channels, t.kernel_h, t.kernel_w)), jnp.int32)
+    cb = jnp.asarray(rng.standard_normal(t.bins), jnp.float32)
+    compiled = jax.jit(M.tile_forward_pasm).lower(image, bi, cb).compile()
+    np.testing.assert_allclose(
+        np.asarray(compiled(image, bi, cb)),
+        np.asarray(M.tile_forward_pasm(image, bi, cb)),
+        rtol=1e-5,
+        atol=1e-5,
+    )

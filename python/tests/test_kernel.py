@@ -1,0 +1,207 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Covers the paper's §5.3 exactness claim at the float level:
+PASM conv == weight-shared conv == direct conv (decoded weights), plus the
+phase-1 (PAS) histogram in isolation against an independent segment_sum
+oracle.  Hypothesis sweeps shapes, strides, bins and value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import PAPER_TILE
+from compile.kernels import pasm_conv as pk
+from compile.kernels import ws_conv as wk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_case(rng, c, ih, iw, ky, kx, m, bins, scale=1.0):
+    image = jnp.asarray(rng.standard_normal((c, ih, iw)) * scale, jnp.float32)
+    bi = jnp.asarray(rng.integers(0, bins, (m, c, ky, kx)), jnp.int32)
+    cb = jnp.asarray(rng.standard_normal(bins), jnp.float32)
+    return image, bi, cb
+
+
+PAPER_CASE = (
+    PAPER_TILE.channels,
+    PAPER_TILE.in_h,
+    PAPER_TILE.in_w,
+    PAPER_TILE.kernel_h,
+    PAPER_TILE.kernel_w,
+    PAPER_TILE.kernels,
+    PAPER_TILE.bins,
+)
+
+
+class TestOracles:
+    """The oracles must agree among themselves before testing kernels."""
+
+    def test_ws_equals_direct_decoded(self):
+        rng = np.random.default_rng(0)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        w = ref.decode_weights(bi, cb)
+        np.testing.assert_allclose(
+            ref.ws_conv(image, bi, cb), ref.direct_conv(image, w), rtol=1e-5
+        )
+
+    def test_pasm_equals_ws(self):
+        rng = np.random.default_rng(1)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        np.testing.assert_allclose(
+            ref.pasm_conv(image, bi, cb),
+            ref.ws_conv(image, bi, cb),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_histogram_matches_onehot(self):
+        rng = np.random.default_rng(2)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        hist = ref.pasm_histogram(image, bi[0], PAPER_TILE.bins)
+        patches = ref.im2col(image, 3, 3)
+        onehot = ref.one_hot_taps(bi, PAPER_TILE.bins)[0]
+        np.testing.assert_allclose(hist, patches @ onehot, rtol=1e-5, atol=1e-5)
+
+    def test_im2col_tap_order(self):
+        """Column c*KY*KX + ky*KX + kx must hold image[c, y+ky, x+kx]."""
+        c, ih, iw, ky, kx = 2, 4, 4, 2, 2
+        image = jnp.arange(c * ih * iw, dtype=jnp.float32).reshape(c, ih, iw)
+        patches = ref.im2col(image, ky, kx)
+        oh = ow = 3
+        for t in range(oh * ow):
+            y0, x0 = divmod(t, ow)
+            for ci in range(c):
+                for yy in range(ky):
+                    for xx in range(kx):
+                        col = ci * ky * kx + yy * kx + xx
+                        assert patches[t, col] == image[ci, y0 + yy, x0 + xx]
+
+
+class TestPasmKernel:
+    def test_paper_tile(self):
+        rng = np.random.default_rng(3)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        got = pk.pasm_conv(image, bi, cb)
+        want = ref.pasm_conv(image, bi, cb)
+        assert got.shape == (PAPER_TILE.kernels, PAPER_TILE.out_h, PAPER_TILE.out_w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_against_direct(self):
+        rng = np.random.default_rng(4)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        got = pk.pasm_conv(image, bi, cb)
+        want = ref.direct_conv(image, ref.decode_weights(bi, cb))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("stride", [1, 2])
+    @pytest.mark.parametrize("bins", [4, 8, 16, 64])
+    def test_bins_and_stride(self, bins, stride):
+        rng = np.random.default_rng(bins * 10 + stride)
+        image, bi, cb = make_case(rng, 4, 9, 9, 3, 3, 3, bins)
+        got = pk.pasm_conv(image, bi, cb, stride=stride)
+        want = ref.pasm_conv(image, bi, cb, stride=stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_multi_tile_grid(self):
+        """T > TILE_T exercises >1 grid step along the pixel axis."""
+        rng = np.random.default_rng(7)
+        image, bi, cb = make_case(rng, 3, 20, 20, 3, 3, 2, 8)
+        got = pk.pasm_conv(image, bi, cb, tile_t=64)
+        want = ref.pasm_conv(image, bi, cb)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_pas_phase_only(self):
+        rng = np.random.default_rng(8)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        acc = pk.pas_accumulate(image, bi, PAPER_TILE.bins)
+        for m in range(PAPER_TILE.kernels):
+            want = ref.pasm_histogram(image, bi[m], PAPER_TILE.bins)
+            np.testing.assert_allclose(acc[m], want, rtol=1e-4, atol=1e-4)
+
+    def test_paper_fig6_example(self):
+        """The worked example of Fig 4/6: result must be 98.8."""
+        # 5 taps: image values and bin indices from the paper's figures.
+        image = jnp.array([26.7, 3.4, 4.8, 17.7, 6.1], jnp.float32).reshape(5, 1, 1)
+        bi = jnp.array([0, 1, 2, 3, 0], jnp.int32).reshape(1, 5, 1, 1)
+        cb = jnp.array([1.7, 0.4, 1.3, 2.0], jnp.float32)
+        got = pk.pasm_conv(image, bi, cb)
+        # exact sum is 98.76; the paper reports it rounded to 98.8
+        np.testing.assert_allclose(np.asarray(got).ravel(), [98.76], rtol=1e-5)
+        # phase 1 bins: bin0 = 26.7 + 6.1 = 32.8
+        acc = pk.pas_accumulate(image, bi, 4)
+        np.testing.assert_allclose(
+            np.asarray(acc).ravel(), [32.8, 3.4, 4.8, 17.7], rtol=1e-5
+        )
+
+
+class TestWsKernel:
+    def test_paper_tile(self):
+        rng = np.random.default_rng(5)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        got = wk.ws_conv(image, bi, cb)
+        want = ref.ws_conv(image, bi, cb)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_direct_kernel(self):
+        rng = np.random.default_rng(6)
+        image = jnp.asarray(rng.standard_normal((5, 7, 7)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((3, 5, 3, 3)), jnp.float32)
+        got = wk.direct_conv(image, w)
+        want = ref.direct_conv(image, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ws_equals_pasm_kernelized(self):
+        """Both Pallas variants must agree (paper §5.3, float tolerance)."""
+        rng = np.random.default_rng(9)
+        image, bi, cb = make_case(rng, *PAPER_CASE)
+        np.testing.assert_allclose(
+            wk.ws_conv(image, bi, cb),
+            pk.pasm_conv(image, bi, cb),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.integers(1, 6),
+    khw=st.integers(1, 3),
+    extra=st.integers(0, 5),
+    m=st.integers(1, 4),
+    bins_log2=st.integers(1, 6),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pasm_kernel_hypothesis(c, khw, extra, m, bins_log2, stride, seed):
+    """Property: Pallas PASM == oracle across random shape/bin/stride space."""
+    bins = 2**bins_log2
+    ih = iw = khw + extra + 1
+    rng = np.random.default_rng(seed)
+    image, bi, cb = make_case(rng, c, ih, iw, khw, khw, m, bins)
+    got = pk.pasm_conv(image, bi, cb, stride=stride, tile_t=32)
+    want = ref.pasm_conv(image, bi, cb, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    khw=st.integers(1, 3),
+    extra=st.integers(0, 4),
+    m=st.integers(1, 3),
+    bins_log2=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ws_kernel_hypothesis(c, khw, extra, m, bins_log2, seed):
+    bins = 2**bins_log2
+    ih = iw = khw + extra + 1
+    rng = np.random.default_rng(seed)
+    image, bi, cb = make_case(rng, c, ih, iw, khw, khw, m, bins)
+    got = wk.ws_conv(image, bi, cb, tile_t=32)
+    want = ref.ws_conv(image, bi, cb)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,75 @@
+"""L2 model forward: shapes, PASM-vs-WS variant agreement, param specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.configs import E2E_MODEL
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = E2E_MODEL
+
+
+def _params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_config_arithmetic():
+    assert CFG.conv1.out_h == 10
+    assert CFG.pool1_hw == 5
+    assert CFG.conv2.out_h == 3
+    assert CFG.feature_dim == CFG.conv2_m * 9
+
+
+def test_forward_shapes():
+    params = _params()
+    rng = np.random.default_rng(0)
+    images = jnp.asarray(rng.standard_normal((2, CFG.in_c, CFG.in_h, CFG.in_w)), jnp.float32)
+    logits = M.model_forward(CFG, images, params, variant="pasm")
+    assert logits.shape == (2, CFG.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_pasm_ws_variants_agree():
+    """The exported PASM model must match a WS-MAC model (paper §5.3)."""
+    params = _params()
+    rng = np.random.default_rng(1)
+    images = jnp.asarray(rng.standard_normal((2, CFG.in_c, CFG.in_h, CFG.in_w)), jnp.float32)
+    a = M.model_forward(CFG, images, params, variant="pasm")
+    b = M.model_forward(CFG, images, params, variant="ws")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def test_param_specs_match_init():
+    params = _params()
+    specs = M.model_param_specs(CFG)
+    assert set(specs) == set(params) == set(M.PARAM_ORDER)
+    for k, spec in specs.items():
+        assert tuple(params[k].shape) == tuple(spec.shape), k
+        assert params[k].dtype == spec.dtype, k
+
+
+def test_flat_forward_matches_dict():
+    params = _params()
+    rng = np.random.default_rng(2)
+    images = jnp.asarray(rng.standard_normal((1, CFG.in_c, CFG.in_h, CFG.in_w)), jnp.float32)
+    fn = M.model_forward_flat(CFG)
+    flat = [params[k] for k in M.PARAM_ORDER]
+    np.testing.assert_allclose(
+        np.asarray(fn(images, *flat)),
+        np.asarray(M.model_forward(CFG, images, params)),
+        rtol=1e-6,
+    )
+
+
+def test_batch_independence():
+    """Each batch row is computed independently (no cross-talk)."""
+    params = _params()
+    rng = np.random.default_rng(3)
+    images = jnp.asarray(rng.standard_normal((4, CFG.in_c, CFG.in_h, CFG.in_w)), jnp.float32)
+    full = M.model_forward(CFG, images, params)
+    for i in range(4):
+        one = M.model_forward(CFG, images[i : i + 1], params)
+        np.testing.assert_allclose(np.asarray(one[0]), np.asarray(full[i]), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,55 @@
+"""L1 performance-estimate sanity (DESIGN.md §8: real-TPU perf is estimated
+from VMEM footprint + MXU utilization, since interpret=True gives only
+CPU-numpy timings)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import PAPER_TILE
+from compile.kernels import pasm_conv as pk
+
+
+def test_paper_tile_fits_vmem():
+    """The paper tile's working set must fit comfortably in ~16 MiB VMEM."""
+    t = PAPER_TILE
+    ckk = t.channels * t.kernel_h * t.kernel_w
+    bytes_ = pk.vmem_footprint_bytes(ckk, t.bins)
+    assert bytes_ < 1 << 20, f"{bytes_} bytes"  # < 1 MiB
+
+
+def test_footprint_monotonic():
+    assert pk.vmem_footprint_bytes(128, 16) < pk.vmem_footprint_bytes(256, 16)
+    assert pk.vmem_footprint_bytes(128, 16) < pk.vmem_footprint_bytes(128, 64)
+    assert pk.vmem_footprint_bytes(128, 16, tile_t=64) < pk.vmem_footprint_bytes(
+        128, 16, tile_t=256
+    )
+
+
+def test_mxu_utilization_bounds_and_saturation():
+    # B < 128 under-fills the lane axis; B >= 128 saturates
+    u16 = pk.mxu_utilization_estimate(135, 16)
+    u128 = pk.mxu_utilization_estimate(135, 128)
+    u256 = pk.mxu_utilization_estimate(135, 256)
+    assert 0.0 < u16 < u128 <= 1.0
+    assert u128 == u256  # saturated at the 128-lane MXU edge
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ckk=st.integers(1, 4096),
+    bins=st.integers(1, 512),
+    tile_log2=st.integers(3, 9),
+)
+def test_estimates_always_valid(ckk, bins, tile_log2):
+    tile = 1 << tile_log2
+    bytes_ = pk.vmem_footprint_bytes(ckk, bins, tile_t=tile)
+    assert bytes_ > 0
+    u = pk.mxu_utilization_estimate(ckk, bins, tile_t=tile)
+    assert 0.0 < u <= 1.0
+
+
+def test_default_tile_is_mxu_aligned():
+    assert pk.DEFAULT_TILE_T % 8 == 0
+    assert pk.mxu_utilization_estimate(135, 16, tile_t=pk.DEFAULT_TILE_T) == pytest.approx(
+        (16 / 128) * 1.0
+    )

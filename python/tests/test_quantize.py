@@ -1,0 +1,69 @@
+"""K-means weight-sharing quantizer tests (python side)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_exact_clusters_recovered():
+    """B well-separated point masses -> centroids == the masses."""
+    rng = np.random.default_rng(0)
+    centers = np.array([-3.0, -1.0, 1.0, 3.0], np.float32)
+    x = np.repeat(centers, 50) + rng.normal(0, 1e-3, 200).astype(np.float32)
+    cb, assign = quantize.kmeans_1d(jnp.asarray(x), 4)
+    np.testing.assert_allclose(np.sort(np.asarray(cb)), centers, atol=1e-2)
+    # every point assigned to its nearest centroid
+    d = np.abs(x[:, None] - np.asarray(cb)[None, :])
+    np.testing.assert_array_equal(np.asarray(assign), d.argmin(1))
+
+
+def test_assignment_range_and_shape():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((4, 3, 3, 3)), jnp.float32)
+    cb, bi = quantize.quantize_weights(w, 16)
+    assert cb.shape == (16,)
+    assert bi.shape == w.shape
+    assert int(bi.min()) >= 0 and int(bi.max()) < 16
+
+
+def test_mse_decreases_with_bins():
+    """More bins -> no worse reconstruction (paper's B sweep rationale)."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((8, 4, 3, 3)), jnp.float32)
+    errs = [float(quantize.quantization_mse(w, b)) for b in (2, 4, 16, 64)]
+    for lo, hi in zip(errs[1:], errs[:-1]):
+        assert lo <= hi * 1.05  # tolerate tiny Lloyd's nonmonotonicity
+
+
+def test_single_bin_is_mean():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(100), jnp.float32)
+    cb, assign = quantize.kmeans_1d(x, 1)
+    np.testing.assert_allclose(float(cb[0]), float(x.mean()), rtol=1e-5)
+    assert int(assign.max()) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(8, 300),
+    bins_log2=st.integers(0, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_invariants(n, bins_log2, seed):
+    """Codebook finite, assignments in range, decode error <= data range."""
+    bins = 2**bins_log2
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * 2.0, jnp.float32)
+    cb, assign = quantize.kmeans_1d(x, bins)
+    assert cb.shape == (bins,)
+    assert np.isfinite(np.asarray(cb)).all()
+    a = np.asarray(assign)
+    assert a.min() >= 0 and a.max() < bins
+    err = np.abs(np.asarray(cb)[a] - np.asarray(x))
+    span = float(x.max() - x.min()) + 1e-6
+    assert err.max() <= span

@@ -1,0 +1,70 @@
+//! `cargo bench --bench ablation` — ablation of the design choices
+//! DESIGN.md calls out, on the paper tile:
+//!
+//! 1. HLS `ARRAY_PARTITION` of imageBin: partitioned gather trees vs the
+//!    §5.3 banked fallback (area/power vs latency).
+//! 2. `ALLOCATION` post-pass multiplier budget 1/2/4/8 (latency vs area).
+//! 3. Clock target 100 MHz / 800 MHz / 1 GHz (timing pressure on the
+//!    16-bin PASM — the Fig 17 mechanism isolated).
+//! 4. Weight width 8/16/32 at fixed B (the Fig 18 axis, denser).
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
+use pasm_accel::accel::hls::HlsConfig;
+use pasm_accel::hw::Tech;
+
+fn main() {
+    let t1g = Tech::asic_1ghz();
+
+    println!("--- ablation 1: ARRAY_PARTITION of imageBin (B=16, W=32, 1 GHz) ---");
+    for (name, partition) in [("partitioned (paper)", true), ("banked (§5.3 fallback)", false)] {
+        let mut a = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+        a.hls.partition_bins = partition;
+        println!(
+            "{name:<24} gates {:>10.0}  power {:>8.2} mW  latency {:>6} cycles",
+            a.gates(&t1g).total(),
+            a.power(&t1g).total_w() * 1e3,
+            a.latency_cycles()
+        );
+    }
+
+    println!("\n--- ablation 2: post-pass ALLOCATION limit (B=16, W=32) ---");
+    for muls in [1usize, 2, 4, 8] {
+        let mut a = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+        a.hls = HlsConfig::default().with_postpass_muls(muls);
+        println!(
+            "muls={muls}: gates {:>10.0}  power {:>8.2} mW  latency {:>6.1} cycles",
+            a.gates(&t1g).total(),
+            a.power(&t1g).total_w() * 1e3,
+            a.latency_cycles_exact()
+        );
+    }
+
+    println!("\n--- ablation 3: clock target (B=16, W=32, PASM vs WS) ---");
+    for (name, tech) in [
+        ("100MHz", Tech::asic_100mhz()),
+        ("800MHz", Tech::asic_800mhz()),
+        ("1GHz", Tech::asic_1ghz()),
+    ] {
+        let ws = ConvAccel::paper(ConvVariantKind::WeightShared, 16, 32);
+        let pasm = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+        let (gw, gp) = (ws.gates(&tech).total(), pasm.gates(&tech).total());
+        println!(
+            "{name:<8} WS {gw:>10.0}  PASM {gp:>10.0}  delta {:+6.1}%  (u_pasm {:.2})",
+            (gp / gw - 1.0) * 100.0,
+            pasm.path_utilization(&tech)
+        );
+    }
+
+    println!("\n--- ablation 4: weight width at B=4 ---");
+    for ww in [8u32, 16, 32] {
+        let ws = ConvAccel::paper(ConvVariantKind::WeightShared, 4, ww);
+        let pasm = ConvAccel::paper(ConvVariantKind::Pasm, 4, ww);
+        let (gw, gp) = (ws.gates(&t1g).total(), pasm.gates(&t1g).total());
+        let (pw, pp) = (ws.power(&t1g).total_w(), pasm.power(&t1g).total_w());
+        println!(
+            "W={ww:<3} gates {:+6.1}%  power {:+6.1}%",
+            (gp / gw - 1.0) * 100.0,
+            (pp / pw - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! `cargo bench --bench coordinator` — end-to-end serving benchmark: the
+//! paper's system serving batched inference through the PJRT-compiled PASM
+//! model.  Reports request throughput, latency percentiles, batch
+//! occupancy, and the simulated accelerator cost per request.
+//!
+//! Requires `make artifacts` (run via `make bench`).
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::quant::fixed::QFormat;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(3);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+
+    let coord = Coordinator::start(
+        "artifacts",
+        enc,
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
+    )
+    .expect("run `make artifacts` first");
+
+    // pre-render a request pool
+    let pool: Vec<_> = (0..256)
+        .map(|i| render_digit(&mut rng, i % 10, 0.05))
+        .collect();
+
+    for load in [64usize, 256, 1024] {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..load)
+            .map(|i| coord.submit(pool[i % pool.len()].clone()).unwrap())
+            .collect();
+        let mut ok = 0usize;
+        for rx in rxs {
+            if rx.recv().unwrap().is_ok() {
+                ok += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        assert_eq!(ok, load);
+        println!(
+            "bench coordinator/serve_{load}: {:?} total, {:.1} req/s",
+            dt,
+            load as f64 / dt.as_secs_f64()
+        );
+    }
+
+    let m = coord.metrics();
+    println!(
+        "batches {} | mean occupancy {:.2} | padding {:.1}%",
+        m.batches,
+        m.mean_occupancy(),
+        m.padding_fraction() * 100.0
+    );
+    for p in [50.0, 90.0, 99.0] {
+        println!("p{p:.0} latency: {} us", m.percentile_us(p).unwrap());
+    }
+    println!(
+        "simulated accelerator totals: {} cycles, {:.3} uJ",
+        m.sim_cycles,
+        m.sim_energy_j * 1e6
+    );
+}

@@ -1,0 +1,35 @@
+//! `cargo bench --bench figures` — regenerate every paper exhibit and time
+//! the regeneration (each iteration rebuilds the full model-driven report,
+//! proving the whole evaluation is reproducible in seconds, not tool-days).
+//!
+//! Output doubles as the paper-vs-measured record: the rendered reports are
+//! printed once, followed by the timings.
+
+use pasm_accel::report::bench::{bench, black_box};
+use pasm_accel::report::{all_report_ids, run_report};
+use std::time::Duration;
+
+fn main() {
+    // 1) print every exhibit once (this is the reproduction artifact)
+    for id in all_report_ids() {
+        let r = run_report(id).expect("report");
+        println!("{}", r.render());
+    }
+
+    // 2) time each regeneration
+    println!("--- regeneration timings ---");
+    for id in all_report_ids() {
+        let r = bench(&format!("report/{id}"), Duration::from_millis(200), 16, || {
+            black_box(run_report(id).unwrap());
+        });
+        r.print();
+    }
+
+    // 3) the full suite end-to-end
+    let r = bench("report/all", Duration::from_millis(500), 8, || {
+        for id in all_report_ids() {
+            black_box(run_report(id).unwrap());
+        }
+    });
+    r.print();
+}

@@ -1,0 +1,78 @@
+//! `cargo bench --bench sim_hotpath` — throughput of the cycle-accurate
+//! simulator's hot loops (the §Perf optimization target: DESIGN.md aims at
+//! >= 1e8 unit-cycles/s so full figure sweeps run in seconds).
+//!
+//! Benches:
+//! * standalone streaming: 16-MAC and 16-PAS-4-MAC over 4096-pair streams
+//!   (unit-cycles/s = lanes x pairs / wall time)
+//! * conv tile simulation: WS and PASM variants on the paper tile
+//! * functional fixed-point dataflows (the pure compute without the
+//!   simulator's probes) for comparison — the probe overhead is visible as
+//!   the gap between the two.
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
+use pasm_accel::accel::standalone::StandaloneUnit;
+use pasm_accel::cnn::conv::{pasm_conv_fx, ws_conv_fx, FxConvInputs};
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::quant::codebook::encode_weights;
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::report::bench::{bench, black_box};
+use pasm_accel::sim::conv::simulate_conv;
+use pasm_accel::sim::standalone::{random_streams, simulate_standalone};
+use pasm_accel::tensor::Tensor;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    const PAIRS: usize = 4096;
+    let streams = random_streams(&mut rng, 16, PAIRS, 16, 1 << 20);
+    let cb: Vec<i64> = (0..16).map(|_| (rng.signed() * 1e5) as i64).collect();
+
+    let mac16 = StandaloneUnit::mac16(32, 16);
+    let r = bench("sim/standalone_mac16_4096", Duration::from_secs(1), 16, || {
+        black_box(simulate_standalone(&mac16, &streams, &cb));
+    });
+    r.print();
+    println!(
+        "  => {:.2e} unit-cycles/s",
+        (16 * PAIRS) as f64 * r.per_second()
+    );
+
+    let pasm16 = StandaloneUnit::pas16mac4(32, 16);
+    let r = bench("sim/standalone_pasm_4096", Duration::from_secs(1), 16, || {
+        black_box(simulate_standalone(&pasm16, &streams, &cb));
+    });
+    r.print();
+    println!(
+        "  => {:.2e} unit-cycles/s",
+        (16 * PAIRS + 4 * 16) as f64 * r.per_second()
+    );
+
+    // conv tile inputs
+    let image = Tensor::from_fn(&[15, 5, 5], |_| rng.signed() * 4.0);
+    let w = Tensor::from_fn(&[2, 15, 3, 3], |_| rng.signed());
+    let enc = encode_weights(&w, 16, QFormat::W16);
+    let inputs = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1);
+
+    let ws_accel = ConvAccel::paper(ConvVariantKind::WeightShared, 16, 32);
+    let r = bench("sim/conv_ws_tile", Duration::from_secs(1), 32, || {
+        black_box(simulate_conv(&ws_accel, &inputs));
+    });
+    r.print();
+
+    let pasm_accel = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+    let r = bench("sim/conv_pasm_tile", Duration::from_secs(1), 32, || {
+        black_box(simulate_conv(&pasm_accel, &inputs));
+    });
+    r.print();
+
+    // functional dataflows (no probes) for overhead comparison
+    let r = bench("fx/ws_conv_tile", Duration::from_secs(1), 32, || {
+        black_box(ws_conv_fx(&inputs));
+    });
+    r.print();
+    let r = bench("fx/pasm_conv_tile", Duration::from_secs(1), 32, || {
+        black_box(pasm_conv_fx(&inputs));
+    });
+    r.print();
+}

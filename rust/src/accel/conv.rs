@@ -1,0 +1,524 @@
+//! §3-4 CNN convolution-layer accelerators (three variants).
+//!
+//! Structure follows the paper's HLS design (Fig 13): the tap loops
+//! (c, ky, kx) are fully unrolled inside an II=1 pipeline over
+//! `(pixel, m)` slots, `imageBin` is completely partitioned into
+//! registers, and the post-pass multiplier count is capped by ALLOCATION.
+//! The FPGA DSP counts confirm the unroll: 405 DSPs = 135 taps x 3 DSPs
+//! per 32-bit multiplier for the WS/non-WS variants, 3 DSPs = the single
+//! post-pass multiplier for PASM.
+//!
+//! * **Direct** (non-weight-shared): per tap a `32 x W` multiplier fed from
+//!   a dense weight cache, plus a taps-wide adder tree.
+//! * **WeightShared**: per tap a codebook read mux (`B:1 x W`) in front of
+//!   the same multiplier array.
+//! * **Pasm**: per (tap, bin) a comparator+mask, per bin a taps-wide
+//!   gather adder tree, and `postpass_muls` shared multipliers.  The
+//!   per-tap image broadcast to all `B` gather trees is the high-fanout
+//!   net that breaks down at 1 GHz for large B (paper Fig 17).
+//!
+//! ### Calibration
+//! Constants marked `CAL:` below are fitted once against the paper's §5.1
+//! ASIC series (4/8/16-bin, 32-bit: -47.8 % / -8.1 % / worse; Fig 14
+//! latency +8.5 %..+12.75 %) and then reused unchanged for the 8-bit
+//! series, the FPGA mapping, and every sweep.  See EXPERIMENTS.md for the
+//! paper-vs-model residuals.
+
+use crate::accel::hls::HlsConfig;
+use crate::accel::pipeline::pipeline;
+use crate::hw::gates::{
+    adder_tree, and_mask, comparator, fsm, multiplier, mux, regfile, register, register_en,
+    Component, GateBreakdown,
+};
+use crate::hw::power::{PowerBreakdown, PowerModel};
+use crate::hw::tech::Tech;
+use crate::hw::timing::{timing_area_factor, PathDelay};
+use crate::quant::fixed::ceil_log2;
+use crate::tensor::ConvShape;
+
+/// Image datapath width (the paper keeps images at 32-bit INT throughout).
+pub const IMAGE_WIDTH: u32 = 32;
+
+/// Which accelerator variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvVariantKind {
+    /// Non-weight-shared baseline (dense weights).
+    Direct,
+    /// Weight-shared MAC baseline (dictionary decode + MAC).
+    WeightShared,
+    /// Weight-shared with PASM (the paper's proposal).
+    Pasm,
+}
+
+/// A sized convolution-layer accelerator.
+#[derive(Clone, Debug)]
+pub struct ConvAccel {
+    pub variant: ConvVariantKind,
+    pub shape: ConvShape,
+    /// Weight bins B (ignored by `Direct`).
+    pub bins: usize,
+    /// Kernel (weight) bit width W: the paper sweeps 8 and 32.
+    pub weight_width: u32,
+    pub hls: HlsConfig,
+    /// Back the image cache with an SRAM macro instead of registers (the
+    /// paper's footnote-1 what-if; the FreePDK45 flow could not synthesize
+    /// SRAM, capping the tile at C=15).
+    pub sram_cache: bool,
+}
+
+// ---------------------------------------------------------------------------
+// CAL: calibration constants (single global fit, see module docs)
+// ---------------------------------------------------------------------------
+
+/// CAL: multiplier synthesis overhead vs the textbook array structure
+/// (Booth recoding + compressor wiring in the Genus report).
+const MUL_SYNTH_OVERHEAD: f64 = 1.7;
+
+/// CAL: wiring/placement overhead of the B-way gather trees (the paper's
+/// PASM netlists route every tap to every bin's tree; congestion dominates
+/// the placed area of the gather fabric).  ASIC-only: FPGA routing fabric
+/// is prefabricated, so `fpga::map` divides this back out of the trees.
+pub(crate) const TREE_WIRING_OVERHEAD: f64 = 3.3;
+
+/// CAL: fanout sinks per broadcast image bit into the gather trees
+/// (drives the timing-pressure utilization growth with B — tips the
+/// 16-bin/32-bit design past the 1 GHz period, Fig 17).
+const GATHER_FANOUT_PER_BIT: f64 = 0.05;
+
+/// CAL: Fig 14 latency fit — B-independent PASM pipeline overhead (cycles)
+/// and the post-pass overlap divisor (outputs*B/K extra cycles).
+const PASM_LATENCY_FIXED: f64 = 2.0;
+const PASM_POSTPASS_OVERLAP: f64 = 180.0;
+
+impl ConvAccel {
+    pub fn new(
+        variant: ConvVariantKind,
+        shape: ConvShape,
+        bins: usize,
+        weight_width: u32,
+    ) -> Self {
+        ConvAccel {
+            variant,
+            shape,
+            bins,
+            weight_width,
+            hls: HlsConfig::default(),
+            sram_cache: false,
+        }
+    }
+
+    /// The paper's §4 tile at a given variant/bins/width.
+    pub fn paper(variant: ConvVariantKind, bins: usize, weight_width: u32) -> Self {
+        Self::new(variant, ConvShape::paper_tile(), bins, weight_width)
+    }
+
+    fn idx_bits(&self) -> u32 {
+        ceil_log2(self.bins.max(2)).max(1)
+    }
+
+    fn taps(&self) -> usize {
+        self.shape.taps()
+    }
+
+    fn outputs(&self) -> usize {
+        self.shape.kernels * self.shape.out_pixels()
+    }
+
+    fn mul(&self, a: u32, b: u32) -> Component {
+        let mut m = multiplier(a, b);
+        m.gates = m.gates * MUL_SYNTH_OVERHEAD;
+        m
+    }
+
+    /// Buffers common to all three variants (image cache, output feature
+    /// registers, bias, control).
+    fn shared_components(&self) -> Vec<(Component, f64)> {
+        let s = &self.shape;
+        let image_bits = (s.channels * s.in_h * s.in_w) as u32;
+        let out_entries = s.kernels * s.out_pixels();
+        let image_cache = if self.sram_cache {
+            // footnote-1 what-if: SRAM macro, dual-port, ~1 access/cycle
+            crate::hw::sram::SramMacro::new((image_bits as u64) * IMAGE_WIDTH as u64, 2)
+                .component("image_cache_sram", 1.0)
+        } else {
+            // image cache in registers (§4: "kept to a small tile ... to
+            // allow its implementation in a register file")
+            register(image_bits * IMAGE_WIDTH)
+        };
+        vec![
+            (image_cache, 0.3),
+            // output feature map register file
+            (regfile(out_entries, IMAGE_WIDTH, 1, 1), 0.5),
+            // bias registers + bias adders (not shared, §4)
+            (register((s.kernels as u32) * self.weight_width), 0.2),
+            (crate::hw::gates::adder_cla(IMAGE_WIDTH), 0.5),
+            // ReLU (sign-select per output)
+            (and_mask(IMAGE_WIDTH), 0.5),
+            (fsm(12), 1.0),
+        ]
+    }
+
+    /// Per-variant datapath components with duty factors, plus the
+    /// dominant combinational path for timing pressure.
+    fn datapath(&self, tech: &Tech) -> (Vec<(Component, f64)>, PathDelay) {
+        let taps = self.taps() as f64;
+        let ww = self.weight_width;
+        let iw = IMAGE_WIDTH;
+        let m = self.shape.kernels;
+        let mut out: Vec<(Component, f64)> = Vec::new();
+
+        // How many taps execute concurrently (full unroll vs sequential).
+        let par = if self.hls.unroll_taps { self.taps() } else { 1 };
+
+        match self.variant {
+            ConvVariantKind::Direct => {
+                // dense weight cache: per tap an M-entry regfile (selects
+                // the kernel plane for the current pipeline slot)
+                let wregs = regfile(m, ww, 1, 1).gates * par as f64;
+                out.push((component_from(wregs, "weight_cache", 0.10, 0.0), 1.0));
+                for _ in 0..par {
+                    let p = pipeline(&self.mul(iw, ww), iw + ww, tech);
+                    out.push((component_from(p.gates, "mul_lane", 0.28, 0.0), 1.0));
+                }
+                let tree = pipeline(&adder_tree(par.max(2), iw), iw, tech);
+                out.push((component_from(tree.gates, "sum_tree", 0.20, 0.0), 1.0));
+                let staged = pipeline(&self.mul(iw, ww), iw + ww, tech);
+                return (out, staged.stage_path);
+            }
+            ConvVariantKind::WeightShared => {
+                for _ in 0..par {
+                    // codebook read mux (the Fig 3 indirection)
+                    out.push((mux(self.bins, ww), 1.0));
+                    // bin-index cache per tap (M entries)
+                    out.push((regfile(m, self.idx_bits(), 1, 1), 0.3));
+                    let p = pipeline(&self.mul(iw, ww), iw + ww, tech);
+                    out.push((component_from(p.gates, "mul_lane", 0.28, 0.0), 1.0));
+                }
+                // shared codebook registers (broadcast to all lanes)
+                out.push((register_en((self.bins as u32) * ww), 0.1));
+                let tree = pipeline(&adder_tree(par.max(2), iw), iw, tech);
+                out.push((component_from(tree.gates, "sum_tree", 0.20, 0.0), 1.0));
+                let staged = pipeline(&self.mul(iw, ww), iw + ww, tech);
+                let path = staged
+                    .stage_path
+                    .plus_levels(mux(self.bins, ww).depth_levels * 0.5);
+                return (out, path);
+            }
+            ConvVariantKind::Pasm => {
+                let b = self.bins;
+                // per (tap, bin): comparator + image mask
+                for _ in 0..par {
+                    out.push((regfile(m, self.idx_bits(), 1, 1), 0.3));
+                }
+                if self.hls.partition_bins {
+                    // ARRAY_PARTITION complete: B parallel gather trees
+                    let cmp_mask_logic =
+                        (comparator(self.idx_bits()).gates + and_mask(iw).gates)
+                            * (par as f64 * b as f64);
+                    out.push((
+                        component_from(cmp_mask_logic, "gather_select", 0.18, 0.0),
+                        1.0,
+                    ));
+                    // per bin: taps-wide gather tree (pipelined), with
+                    // wiring overhead — every image value routes to every
+                    // tree
+                    let mut tree_c = adder_tree(par.max(2), iw);
+                    tree_c.gates = tree_c.gates * TREE_WIRING_OVERHEAD;
+                    let tree = pipeline(&tree_c, iw, tech);
+                    for _ in 0..b {
+                        out.push((component_from(tree.gates, "gather_tree", 0.20, 0.0), 1.0));
+                    }
+                    // bin accumulator registers (partitioned)
+                    out.push((register_en((b as u32) * iw), 1.0));
+                } else {
+                    // §5.3 fallback: imageBin in a (BRAM-like) register
+                    // file with one RMW port — tiny area, serialized
+                    // accumulation (the latency model pays the II=B price)
+                    out.push((regfile(b, iw, 1, 1), 1.0));
+                    out.push((crate::hw::gates::adder_cla(iw), 1.0));
+                    out.push((crate::hw::gates::decoder(self.idx_bits()), 1.0));
+                }
+                // post-pass MACs + shared codebook
+                let drain_duty = (b as f64
+                    / (self.hls.postpass_muls as f64 * taps.max(1.0)))
+                .min(1.0);
+                for _ in 0..self.hls.postpass_muls {
+                    let p = pipeline(&self.mul(iw, ww), iw + ww, tech);
+                    out.push((component_from(p.gates, "postpass_mul", 0.28, 0.0), drain_duty));
+                    out.push((crate::hw::gates::adder_cla(iw), drain_duty));
+                    out.push((register(iw), 1.0));
+                }
+                out.push((register_en((b as u32) * ww), 0.1));
+                let path = if self.hls.partition_bins {
+                    // timing: first gather stage = comparator + mask + tree
+                    // head, with the per-bit broadcast into all B trees
+                    let mut tree_c = adder_tree(par.max(2), iw);
+                    tree_c.gates = tree_c.gates * TREE_WIRING_OVERHEAD;
+                    let tree = pipeline(&tree_c, iw, tech);
+                    PathDelay::new()
+                        .through(&comparator(self.idx_bits()))
+                        .through(&and_mask(iw))
+                        .plus_levels(tree.stage_path.levels)
+                        .broadcast(GATHER_FANOUT_PER_BIT * b as f64 * iw as f64)
+                } else {
+                    // streaming RMW recurrence: bin read mux -> adder ->
+                    // write-back (never near the period at these widths)
+                    PathDelay::new()
+                        .through(&mux(b, iw))
+                        .through(&crate::hw::gates::adder_cla(iw))
+                        .broadcast(b as f64)
+                };
+                return (out, path);
+            }
+        }
+    }
+
+    /// Full component list (datapath + shared buffers) with duty factors,
+    /// *without* timing-pressure scaling — the FPGA mapper consumes this
+    /// (multiplier lanes are identified by name and diverted to DSP48s).
+    pub fn component_list(&self, tech: &Tech) -> Vec<(Component, f64)> {
+        let (mut dp, _) = self.datapath(tech);
+        dp.extend(self.shared_components());
+        dp
+    }
+
+    /// Number of hardware multipliers in the design and their operand
+    /// widths (for DSP mapping): `(count, a_bits, b_bits)`.
+    pub fn multiplier_insts(&self) -> (usize, u32, u32) {
+        let par = if self.hls.unroll_taps { self.taps() } else { 1 };
+        match self.variant {
+            ConvVariantKind::Direct | ConvVariantKind::WeightShared => {
+                (par, IMAGE_WIDTH, self.weight_width)
+            }
+            ConvVariantKind::Pasm => (self.hls.postpass_muls, IMAGE_WIDTH, self.weight_width),
+        }
+    }
+
+    /// Total gate breakdown under `tech` (timing pressure applied to the
+    /// variant's dominant path).
+    pub fn gates(&self, tech: &Tech) -> GateBreakdown {
+        let (dp, path) = self.datapath(tech);
+        let factor = timing_area_factor(path.utilization(tech));
+        let mut total = GateBreakdown::default();
+        for (c, _) in &dp {
+            total += c.gates;
+        }
+        total = total.scale_combinational(factor);
+        for (c, _) in self.shared_components() {
+            total += c.gates;
+        }
+        total
+    }
+
+    /// Power under `tech` with default activities (override via
+    /// [`ConvAccel::power_with_activity`]).
+    pub fn power(&self, tech: &Tech) -> PowerBreakdown {
+        self.power_with_activity(tech, 1.0)
+    }
+
+    /// Power with a measured datapath activity scale from the simulator
+    /// (1.0 = the component defaults).
+    pub fn power_with_activity(&self, tech: &Tech, activity_scale: f64) -> PowerBreakdown {
+        let (dp, path) = self.datapath(tech);
+        let factor = timing_area_factor(path.utilization(tech));
+        let mut pm = PowerModel::new();
+        for (c, duty) in &dp {
+            pm.add_scaled(c, (c.activity * activity_scale).min(1.0), *duty, factor);
+        }
+        for (c, duty) in &self.shared_components() {
+            pm.add_scaled(c, (c.activity * activity_scale).min(1.0), *duty, 1.0);
+        }
+        pm.power(tech)
+    }
+
+    /// Path utilization (for reports / the 800 MHz what-if).
+    pub fn path_utilization(&self, tech: &Tech) -> f64 {
+        self.datapath(tech).1.utilization(tech)
+    }
+
+    /// Layer latency in cycles (validated against the cycle simulator).
+    ///
+    /// All variants pipeline one output per slot after the fill; PASM adds
+    /// the post-pass drain (Fig 14: +8.5 %..+12.75 % over WS), reduced by
+    /// extra post-pass multipliers (§5.1 ALLOCATION relaxation).
+    pub fn latency_cycles(&self) -> u64 {
+        self.latency_cycles_exact().ceil() as u64
+    }
+
+    /// Unrounded latency (cycles); use this for overhead ratios — the paper
+    /// tile has only 18 outputs, so integer rounding distorts percentages.
+    pub fn latency_cycles_exact(&self) -> f64 {
+        let outputs = self.outputs() as f64;
+        let depth = 10.0; // pipeline fill (mul stages + tree stages)
+        let base = if self.hls.unroll_taps {
+            outputs + depth
+        } else {
+            outputs * self.taps() as f64 + depth
+        };
+        match self.variant {
+            ConvVariantKind::Direct | ConvVariantKind::WeightShared => base,
+            ConvVariantKind::Pasm if !self.hls.partition_bins => {
+                // §5.3 fallback (imageBin unpartitioned): the PAS RMW
+                // serializes to one tap per cycle and the post-pass drains
+                // B bins per output — the paper's §4 streaming formula
+                // `N + B` per output.
+                outputs
+                    * (self.taps() as f64
+                        + self.bins as f64 / self.hls.postpass_muls as f64)
+                    + depth
+            }
+            ConvVariantKind::Pasm => {
+                let extra = PASM_LATENCY_FIXED
+                    + outputs * self.bins as f64
+                        / (PASM_POSTPASS_OVERLAP * self.hls.postpass_muls as f64);
+                base + extra
+            }
+        }
+    }
+
+    /// Latency in seconds at the tech clock.
+    pub fn latency_s(&self, tech: &Tech) -> f64 {
+        self.latency_cycles() as f64 * tech.period_s()
+    }
+}
+
+/// Wrap a raw gate breakdown back into a Component (for aggregation).
+fn component_from(gates: GateBreakdown, name: &str, activity: f64, depth: f64) -> Component {
+    Component { name: name.into(), gates, activity, depth_levels: depth, max_fanout: 1.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_pair(bins: usize, ww: u32) -> (ConvAccel, ConvAccel) {
+        (
+            ConvAccel::paper(ConvVariantKind::WeightShared, bins, ww),
+            ConvAccel::paper(ConvVariantKind::Pasm, bins, ww),
+        )
+    }
+
+    #[test]
+    fn pasm_wins_4bin_32bit_asic() {
+        // Fig 15: ~48% fewer gates, ~53% less power at 4-bin/32-bit, 1 GHz
+        let t = Tech::asic_1ghz();
+        let (ws, pasm) = paper_pair(4, 32);
+        let g = 1.0 - pasm.gates(&t).total() / ws.gates(&t).total();
+        let p = 1.0 - pasm.power(&t).total_w() / ws.power(&t).total_w();
+        assert!(g > 0.3, "gate saving {g}");
+        assert!(p > 0.3, "power saving {p}");
+    }
+
+    #[test]
+    fn pasm_loses_16bin_32bit_asic_1ghz() {
+        // Fig 17: at 16-bin/32-bit the 1 GHz ASIC flips against PASM
+        let t = Tech::asic_1ghz();
+        let (ws, pasm) = paper_pair(16, 32);
+        assert!(
+            pasm.gates(&t).total() > ws.gates(&t).total(),
+            "pasm {} vs ws {}",
+            pasm.gates(&t).total(),
+            ws.gates(&t).total()
+        );
+    }
+
+    #[test]
+    fn savings_shrink_with_bins() {
+        let t = Tech::asic_1ghz();
+        let saving = |b: usize| {
+            let (ws, pasm) = paper_pair(b, 32);
+            1.0 - pasm.gates(&t).total() / ws.gates(&t).total()
+        };
+        assert!(saving(4) > saving(8));
+        assert!(saving(8) > saving(16));
+    }
+
+    #[test]
+    fn relaxed_clock_rescues_16bin() {
+        // §5.1: "it might be better to target a lower clock frequency"
+        let relaxed = Tech::asic_800mhz();
+        let (ws, pasm) = paper_pair(16, 32);
+        let saving_800 = 1.0 - pasm.gates(&relaxed).total() / ws.gates(&relaxed).total();
+        let t1g = Tech::asic_1ghz();
+        let saving_1g = 1.0 - pasm.gates(&t1g).total() / ws.gates(&t1g).total();
+        assert!(saving_800 > saving_1g);
+    }
+
+    #[test]
+    fn latency_overhead_in_paper_band() {
+        // Fig 14: PASM latency +8.5% (4-bin) .. +12.75% (16-bin)
+        for (bins, lo, hi) in [(4usize, 0.06, 0.11), (8, 0.07, 0.12), (16, 0.10, 0.15)] {
+            let (ws, pasm) = paper_pair(bins, 32);
+            let overhead =
+                pasm.latency_cycles_exact() / ws.latency_cycles_exact() - 1.0;
+            assert!(
+                overhead > lo && overhead < hi,
+                "bins {bins}: overhead {overhead}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_postpass_muls_cut_latency() {
+        let mut pasm = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+        let l1 = pasm.latency_cycles();
+        pasm.hls = pasm.hls.with_postpass_muls(4);
+        let l4 = pasm.latency_cycles();
+        assert!(l4 < l1);
+    }
+
+    #[test]
+    fn direct_vs_ws_close() {
+        // weight sharing alone barely changes the MAC array (paper Fig 15:
+        // non-WS and WS are within a few percent of each other)
+        let t = Tech::asic_1ghz();
+        let d = ConvAccel::paper(ConvVariantKind::Direct, 4, 32).gates(&t).total();
+        let w = ConvAccel::paper(ConvVariantKind::WeightShared, 4, 32).gates(&t).total();
+        let ratio = d / w;
+        assert!(ratio > 0.8 && ratio < 1.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn eight_bit_kernels_still_win_at_4bin() {
+        // Fig 18: 8-bit kernels, 4 bins -> PASM still ahead
+        let t = Tech::asic_1ghz();
+        let (ws, pasm) = paper_pair(4, 8);
+        assert!(pasm.gates(&t).total() < ws.gates(&t).total());
+        assert!(pasm.power(&t).total_w() < ws.power(&t).total_w());
+    }
+
+    #[test]
+    fn unpartitioned_bins_tiny_but_slow() {
+        // §5.3: "implement the imageBin in dual port BRAM and incur a
+        // slight increase in latency" — at the paper tile the serialized
+        // PAS costs ~taps x more cycles but collapses the gather fabric
+        let t = Tech::asic_1ghz();
+        let partitioned = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+        let mut banked = partitioned.clone();
+        banked.hls.partition_bins = false;
+        assert!(banked.gates(&t).total() < partitioned.gates(&t).total() / 5.0);
+        assert!(banked.latency_cycles() > 10 * partitioned.latency_cycles());
+        // the unpartitioned design never hits timing pressure
+        assert!(banked.path_utilization(&t) < 1.0);
+    }
+
+    #[test]
+    fn unpartitioned_follows_paper_streaming_formula() {
+        // N + B per output (paper §4)
+        let mut a = ConvAccel::paper(ConvVariantKind::Pasm, 16, 32);
+        a.hls.partition_bins = false;
+        let outputs = 2.0 * 9.0;
+        let want = outputs * (135.0 + 16.0) + 10.0;
+        assert!((a.latency_cycles_exact() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sequential_hls_much_slower_but_smaller() {
+        let t = Tech::asic_1ghz();
+        let unrolled = ConvAccel::paper(ConvVariantKind::WeightShared, 4, 32);
+        let mut seq = unrolled.clone();
+        seq.hls = HlsConfig::sequential();
+        assert!(seq.latency_cycles() > 10 * unrolled.latency_cycles());
+        assert!(seq.gates(&t).total() < unrolled.gates(&t).total() / 4.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! HLS directive configuration (the `#pragma HLS` knobs of Fig 13).
+
+/// The synthesis-directive configuration the paper explores (§4, §5.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HlsConfig {
+    /// `PIPELINE II=1 rewind` on the output loop (one output per slot).
+    pub pipeline_ii1: bool,
+    /// Fully unroll the tap loops (c, ky, kx) inside the pipelined region.
+    pub unroll_taps: bool,
+    /// `ARRAY_PARTITION variable=imageBin complete` — bins in registers,
+    /// not BRAM (enables parallel PAS accumulation).
+    pub partition_bins: bool,
+    /// `ALLOCATION instances=mul limit=N` — post-pass multiplier budget.
+    pub postpass_muls: usize,
+}
+
+impl Default for HlsConfig {
+    /// The paper's configuration: II=1, full unroll, full partition, one
+    /// post-pass multiplier (Fig 13 lines 2-3, 7, 10).
+    fn default() -> Self {
+        HlsConfig {
+            pipeline_ii1: true,
+            unroll_taps: true,
+            partition_bins: true,
+            postpass_muls: 1,
+        }
+    }
+}
+
+impl HlsConfig {
+    /// A latency-relaxed variant (§5.1: "Latency can be further reduced by
+    /// relaxing the ALLOCATION directive" — more multipliers, more area).
+    pub fn with_postpass_muls(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.postpass_muls = n;
+        self
+    }
+
+    /// The no-unroll fallback the paper suggests for large B (§5.1/§5.2:
+    /// "reduce pipelining and unrolling of the levels of the inner four of
+    /// the for loops").
+    pub fn sequential() -> Self {
+        HlsConfig {
+            pipeline_ii1: true,
+            unroll_taps: false,
+            partition_bins: true,
+            postpass_muls: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_fig13() {
+        let h = HlsConfig::default();
+        assert!(h.pipeline_ii1 && h.unroll_taps && h.partition_bins);
+        assert_eq!(h.postpass_muls, 1);
+    }
+
+    #[test]
+    fn relaxed_allocation() {
+        let h = HlsConfig::default().with_postpass_muls(4);
+        assert_eq!(h.postpass_muls, 4);
+    }
+}

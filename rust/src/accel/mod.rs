@@ -1,0 +1,25 @@
+//! Accelerator structural models: the designs the paper synthesizes.
+//!
+//! * [`standalone`] — §2.4's unit-level experiment: a weight-shared
+//!   **16-MAC** vs the proposed **16-PAS-4-MAC**, streaming one input pair
+//!   per unit per cycle (Verilog, 100 MHz).  Reproduces Figs 7-10.
+//! * [`conv`] — §3-4's CNN convolution-layer accelerators: non-weight-
+//!   shared, weight-shared, and weight-shared-with-PASM variants of the
+//!   AlexNet tile (C=15, 5x5 image, 3x3 kernels, M=2), HLS-style fully
+//!   unrolled across taps with II=1 pipelining (Vivado_HLS → Genus, 1 GHz).
+//!   Reproduces Figs 14-18 (and, via [`crate::fpga`], Figs 19-22).
+//! * [`hls`] — the directive knobs of Fig 13 (UNROLL / PIPELINE /
+//!   ARRAY_PARTITION / ALLOCATION) as configuration.
+//! * [`pipeline`] — retiming helper: cuts a combinational component into
+//!   enough stages to meet the clock, paying pipeline registers, exactly
+//!   the trade the paper describes (§4: latency cut 92 % for 97 % more
+//!   flip-flops).
+
+pub mod conv;
+pub mod hls;
+pub mod pipeline;
+pub mod standalone;
+
+pub use conv::{ConvAccel, ConvVariantKind};
+pub use hls::HlsConfig;
+pub use standalone::{StandaloneReport, StandaloneUnit, UnitKind};

@@ -1,0 +1,77 @@
+//! Retiming helper: pipeline a combinational component to meet the clock.
+//!
+//! If a component's natural depth does not fit the period, synthesis (or
+//! HLS scheduling) cuts it into stages separated by pipeline registers.
+//! Area cost: `(stages - 1)` registers of the datapath width; benefit: the
+//! per-stage path utilization drops by ~`stages`.  This is the trade the
+//! paper quantifies in §4 ("reduces the latency cycles ... by 92% at the
+//! expense of increasing the flip flop count by 97%").
+
+use crate::hw::gates::{register, Component, GateBreakdown};
+use crate::hw::tech::Tech;
+use crate::hw::timing::PathDelay;
+
+/// A component after retiming: original gates + pipeline registers, the
+/// resulting per-stage path, and the stage count (= added latency cycles).
+#[derive(Clone, Debug)]
+pub struct Pipelined {
+    pub gates: GateBreakdown,
+    pub stage_path: PathDelay,
+    pub stages: u32,
+}
+
+/// Fraction of the period available to logic (margin for clock skew,
+/// uncertainty — the paper constrains a 0.01 ns transition at 1 GHz).
+const PERIOD_MARGIN: f64 = 0.92;
+
+/// Retime `c` (datapath `width_bits` wide) for `tech`'s clock.
+pub fn pipeline(c: &Component, width_bits: u32, tech: &Tech) -> Pipelined {
+    let budget_s = tech.period_s() * PERIOD_MARGIN - tech.ff_overhead_s;
+    let natural_s = c.depth_levels * tech.gate_delay_s
+        + c.max_fanout * tech.fanout_delay_per_sink_s;
+    let stages = (natural_s / budget_s).ceil().max(1.0) as u32;
+
+    let mut gates = c.gates;
+    if stages > 1 {
+        gates += register(width_bits).gates * (stages - 1) as f64;
+    }
+    let stage_path = PathDelay {
+        levels: c.depth_levels / stages as f64,
+        fanout_sinks: c.max_fanout / stages as f64,
+        ff_stages: 1.0,
+    };
+    Pipelined { gates, stage_path, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gates::multiplier;
+
+    #[test]
+    fn no_stages_at_relaxed_clock() {
+        let t = Tech::asic_100mhz();
+        let p = pipeline(&multiplier(32, 32), 64, &t);
+        assert_eq!(p.stages, 1);
+        assert_eq!(p.gates.sequential, 0.0);
+    }
+
+    #[test]
+    fn multiplier_needs_stages_at_1ghz() {
+        let t = Tech::asic_1ghz();
+        let p = pipeline(&multiplier(32, 32), 64, &t);
+        assert!(p.stages >= 2, "stages {}", p.stages);
+        assert!(p.gates.sequential > 0.0); // pipeline registers appeared
+        assert!(p.stage_path.utilization(&t) <= 1.05);
+    }
+
+    #[test]
+    fn latency_area_tradeoff() {
+        // deeper pipeline -> more sequential gates, shorter stage path
+        let t = Tech::asic_1ghz();
+        let p8 = pipeline(&multiplier(8, 8), 16, &t);
+        let p32 = pipeline(&multiplier(32, 32), 64, &t);
+        assert!(p32.stages > p8.stages);
+        assert!(p32.gates.sequential > p8.gates.sequential);
+    }
+}

@@ -1,0 +1,273 @@
+//! §2.4 standalone units: weight-shared **16-MAC** vs **16-PAS-4-MAC**.
+//!
+//! Streaming micro-architecture (the paper's Verilog designs, synthesized
+//! at 100 MHz): each of the 16 lanes consumes one `(image, weight-index)`
+//! pair per cycle.
+//!
+//! * **16-MAC lane**: weight register file (`B x W`, one read port indexed
+//!   by the dictionary index — Fig 3), `W x W` multiplier, accumulator
+//!   adder + register.
+//! * **16-PAS lane**: `B x W` accumulator register file (write port for the
+//!   read-modify-write, read port for the post-pass drain — Table 1's two
+//!   file ports), bin-select decode, one `W`-bit adder.
+//! * **shared post-pass**: `postpass` MAC units (4 in the paper), each a
+//!   `W x W` multiplier + accumulator, fed from the PAS lanes through
+//!   4:1 muxes, reading a single shared codebook register file.
+//!
+//! Reproduces Figs 7-10 (gate-count and power sweeps over W and B).
+
+use crate::hw::gates::{
+    adder_for_budget, decoder, mux, multiplier, regfile, register, Component,
+    GateBreakdown,
+};
+use crate::hw::power::{PowerBreakdown, PowerModel};
+use crate::hw::tech::Tech;
+use crate::hw::timing::{timing_area_factor, PathDelay};
+use crate::quant::fixed::ceil_log2;
+
+/// Which §2.4 unit to model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitKind {
+    /// 16 weight-shared MAC units (the baseline).
+    Mac16,
+    /// 16 PAS units + 4 shared post-pass MACs (the proposal).
+    Pas16Mac4,
+}
+
+/// A sized standalone unit.
+#[derive(Clone, Copy, Debug)]
+pub struct StandaloneUnit {
+    pub kind: UnitKind,
+    /// Data bit width W (paper sweeps 4, 8, 16, 32).
+    pub width: u32,
+    /// Weight bins B (paper sweeps 4, 16, 64, 256).
+    pub bins: usize,
+    /// Parallel lanes (16 in the paper).
+    pub lanes: usize,
+    /// Shared post-pass MACs (4 in the paper; Mac16 ignores this).
+    pub postpass: usize,
+}
+
+impl StandaloneUnit {
+    pub fn mac16(width: u32, bins: usize) -> Self {
+        StandaloneUnit { kind: UnitKind::Mac16, width, bins, lanes: 16, postpass: 0 }
+    }
+
+    pub fn pas16mac4(width: u32, bins: usize) -> Self {
+        StandaloneUnit { kind: UnitKind::Pas16Mac4, width, bins, lanes: 16, postpass: 4 }
+    }
+
+    /// Multiplier synthesis overhead vs the idealized array structure:
+    /// Genus maps multipliers through Booth recoding / compressor trees
+    /// whose NAND2-normalized report runs ~2x the textbook array count
+    /// (single calibration constant, fixed across all experiments;
+    /// fitted against the paper's Fig 7 W=32/B=16 headline).
+    const MUL_SYNTH_OVERHEAD: f64 = 2.2;
+
+    fn mul(&self) -> Component {
+        let mut m = multiplier(self.width, self.width);
+        m.gates = m.gates * Self::MUL_SYNTH_OVERHEAD;
+        m
+    }
+
+    /// Components of the design with duty factors (fraction of cycles
+    /// active during streaming).
+    fn components(&self, tech: &Tech) -> Vec<(Component, f64)> {
+        let w = self.width;
+        let b = self.bins;
+        let levels_budget =
+            (tech.period_s() * 0.92 - tech.ff_overhead_s) / tech.gate_delay_s;
+        let mut out: Vec<(Component, f64)> = Vec::new();
+
+        match self.kind {
+            UnitKind::Mac16 => {
+                for _ in 0..self.lanes {
+                    // weight dictionary: B x W, read through the bin index
+                    out.push((regfile(b, w, 1, 1), 1.0));
+                    // W x W multiplier (the unit PASM removes)
+                    out.push((self.mul(), 1.0));
+                    // accumulator adder + register (Table 1 sizes at W)
+                    out.push((adder_for_budget(w, levels_budget), 1.0));
+                    out.push((register(w), 1.0));
+                    // input operand registers
+                    out.push((register(w), 1.0)); // image in
+                    out.push((register(ceil_log2(b.max(2)).max(1)), 1.0)); // index in
+                }
+            }
+            UnitKind::Pas16Mac4 => {
+                let idx_bits = ceil_log2(b.max(2)).max(1);
+                for _ in 0..self.lanes {
+                    // B accumulator bins: storage + write decode (RMW port)
+                    // + read port for the post-pass drain (2 ports, Table 1)
+                    out.push((regfile(b, w, 1, 1), 1.0));
+                    out.push((decoder(idx_bits), 1.0));
+                    // the single accumulate adder per PAS
+                    out.push((adder_for_budget(w, levels_budget), 1.0));
+                    // input operand registers
+                    out.push((register(w), 1.0));
+                    out.push((register(idx_bits), 1.0));
+                }
+                // shared post-pass: codebook regfile + `postpass` MACs
+                out.push((regfile(b, w, self.postpass.max(1), 1), 1.0));
+                let drain_duty =
+                    (self.lanes as f64 * b as f64) / self.stream_cycles(1024) as f64;
+                for _ in 0..self.postpass {
+                    out.push((self.mul(), drain_duty.min(1.0)));
+                    out.push((adder_for_budget(w, levels_budget), drain_duty.min(1.0)));
+                    out.push((register(w), 1.0));
+                    // 4:1 mux from the PAS lanes it serves
+                    out.push((
+                        mux(self.lanes / self.postpass.max(1), w),
+                        drain_duty.min(1.0),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Critical path of the design (the loop-carried accumulate recurrence).
+    pub fn critical_path(&self, tech: &Tech) -> PathDelay {
+        let levels_budget =
+            (tech.period_s() * 0.92 - tech.ff_overhead_s) / tech.gate_delay_s;
+        let adder = adder_for_budget(self.width, levels_budget);
+        match self.kind {
+            UnitKind::Mac16 => {
+                // regfile read mux -> (pipelined) multiplier last stage ->
+                // accumulator adder -> register
+                PathDelay::new()
+                    .through(&mux(self.bins, self.width))
+                    .plus_levels(levels_budget.min(self.mul().depth_levels / 2.0))
+                    .through(&adder)
+            }
+            UnitKind::Pas16Mac4 => {
+                // bin read mux -> adder -> write-back broadcast to B bins
+                PathDelay::new()
+                    .through(&mux(self.bins, self.width))
+                    .through(&adder)
+                    .broadcast(self.bins as f64)
+            }
+        }
+    }
+
+    /// Gate breakdown after timing-pressure scaling.
+    pub fn gates(&self, tech: &Tech) -> GateBreakdown {
+        let factor = timing_area_factor(self.critical_path(tech).utilization(tech));
+        self.components(tech)
+            .iter()
+            .fold(GateBreakdown::default(), |acc, (c, _)| acc + c.gates)
+            .scale_combinational(factor)
+    }
+
+    /// Power under `tech`, with default activities and duty cycles.
+    pub fn power(&self, tech: &Tech) -> PowerBreakdown {
+        let factor = timing_area_factor(self.critical_path(tech).utilization(tech));
+        let mut pm = PowerModel::new();
+        for (c, duty) in self.components(tech) {
+            pm.add_scaled(&c, c.activity, duty, factor);
+        }
+        pm.power(tech)
+    }
+
+    /// Cycles to process `n_pairs` input pairs per lane (§2.2's example:
+    /// 1024 pairs -> 1024 for 16-MAC, 1024 + 4*16 = 1088 for 16-PAS-4-MAC).
+    pub fn stream_cycles(&self, n_pairs: u64) -> u64 {
+        match self.kind {
+            UnitKind::Mac16 => n_pairs,
+            UnitKind::Pas16Mac4 => {
+                let groups = (self.lanes / self.postpass.max(1)) as u64;
+                n_pairs + groups * self.bins as u64
+            }
+        }
+    }
+
+    /// Full report at a tech point.
+    pub fn report(&self, tech: &Tech) -> StandaloneReport {
+        StandaloneReport {
+            unit: *self,
+            gates: self.gates(tech),
+            power: self.power(tech),
+            cycles_1024: self.stream_cycles(1024),
+        }
+    }
+}
+
+/// Evaluation record for one standalone configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StandaloneReport {
+    pub unit: StandaloneUnit,
+    pub gates: GateBreakdown,
+    pub power: PowerBreakdown,
+    pub cycles_1024: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cycle_example() {
+        // §2.2: 1024 pairs, B=16: MAC 1024 cycles, PASM 1024 + 4*16 = 1088
+        assert_eq!(StandaloneUnit::mac16(32, 16).stream_cycles(1024), 1024);
+        assert_eq!(StandaloneUnit::pas16mac4(32, 16).stream_cycles(1024), 1088);
+    }
+
+    #[test]
+    fn pasm_wins_at_w32_b16() {
+        // Fig 7/8 headline: W=32, B=16 -> PASM saves a large fraction of
+        // gates and power (paper: 66% gates, 70% power)
+        let t = Tech::asic_100mhz();
+        let mac = StandaloneUnit::mac16(32, 16).report(&t);
+        let pasm = StandaloneUnit::pas16mac4(32, 16).report(&t);
+        let gate_saving = 1.0 - pasm.gates.total() / mac.gates.total();
+        let power_saving = 1.0 - pasm.power.total_w() / mac.power.total_w();
+        assert!(
+            gate_saving > 0.5 && gate_saving < 0.8,
+            "gate saving {gate_saving}"
+        );
+        assert!(
+            power_saving > 0.5 && power_saving < 0.85,
+            "power saving {power_saving}"
+        );
+    }
+
+    #[test]
+    fn savings_grow_with_width() {
+        // Fig 7/8: the PASM advantage grows with W (multiplier is O(W^2))
+        let t = Tech::asic_100mhz();
+        let saving = |w: u32| {
+            let mac = StandaloneUnit::mac16(w, 16).report(&t);
+            let pasm = StandaloneUnit::pas16mac4(w, 16).report(&t);
+            1.0 - pasm.gates.total() / mac.gates.total()
+        };
+        assert!(saving(8) < saving(16));
+        assert!(saving(16) < saving(32));
+    }
+
+    #[test]
+    fn pasm_loses_at_b256() {
+        // Fig 9: "at B=256, PASM registers and buffers are less efficient
+        // than the MAC" — sequential gates flip in favour of the MAC
+        let t = Tech::asic_100mhz();
+        let mac = StandaloneUnit::mac16(32, 256).report(&t);
+        let pasm = StandaloneUnit::pas16mac4(32, 256).report(&t);
+        assert!(
+            pasm.gates.sequential > mac.gates.sequential,
+            "pasm seq {} vs mac seq {}",
+            pasm.gates.sequential,
+            mac.gates.sequential
+        );
+    }
+
+    #[test]
+    fn savings_shrink_with_bins() {
+        let t = Tech::asic_100mhz();
+        let saving = |b: usize| {
+            let mac = StandaloneUnit::mac16(32, b).report(&t);
+            let pasm = StandaloneUnit::pas16mac4(32, b).report(&t);
+            1.0 - pasm.gates.total() / mac.gates.total()
+        };
+        assert!(saving(4) > saving(64));
+        assert!(saving(64) > saving(256));
+    }
+}

@@ -1,0 +1,400 @@
+//! The three convolution dataflows, functionally (no timing).
+//!
+//! These are the golden reference for both the Pallas kernels (via the PJRT
+//! cross-check integration test) and the cycle-accurate simulator (which
+//! must produce the same fixed-point outputs cycle by cycle).
+//!
+//! Float versions mirror `python/compile/kernels/ref.py`; fixed-point
+//! versions compute in raw integer space where PASM ≡ WS-MAC holds
+//! **bit-exactly** (integer addition is associative/commutative — the
+//! paper's §5.3 claim).
+
+use crate::quant::codebook::EncodedWeights;
+use crate::quant::fixed::{fx_mul, QFormat};
+use crate::tensor::{ConvShape, Tensor};
+
+// ---------------------------------------------------------------------------
+// f32 reference dataflows
+// ---------------------------------------------------------------------------
+
+/// Direct convolution (paper Fig 1 pseudo-code). `image [C,IH,IW]`,
+/// `weights [M,C,KY,KX]` -> `[M,OH,OW]`.
+pub fn direct_conv_f32(image: &Tensor<f32>, weights: &Tensor<f32>, stride: usize) -> Tensor<f32> {
+    let (shape, _) = conv_shapes(image.dims(), weights.dims(), stride);
+    let mut out = Tensor::zeros(shape.out_shape().dims());
+    for m in 0..shape.kernels {
+        for oy in 0..shape.out_h() {
+            for ox in 0..shape.out_w() {
+                let mut acc = 0f32;
+                for c in 0..shape.channels {
+                    for ky in 0..shape.kernel_h {
+                        for kx in 0..shape.kernel_w {
+                            let iv = image.at(&[c, oy * shape.stride + ky, ox * shape.stride + kx]);
+                            let wv = weights.at(&[m, c, ky, kx]);
+                            acc += iv * wv;
+                        }
+                    }
+                }
+                *out.at_mut(&[m, oy, ox]) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Weight-shared MAC convolution (Fig 3/4): decode `codebook[bin_idx]` per
+/// tap, multiply-accumulate — the indirection of the weights register file.
+pub fn ws_conv_f32(
+    image: &Tensor<f32>,
+    bin_idx: &Tensor<u16>,
+    codebook: &[f32],
+    stride: usize,
+) -> Tensor<f32> {
+    let (shape, bins) = conv_shapes(image.dims(), bin_idx.dims(), stride);
+    assert!(codebook.len() >= bins, "codebook smaller than max bin index");
+    let mut out = Tensor::zeros(shape.out_shape().dims());
+    for m in 0..shape.kernels {
+        for oy in 0..shape.out_h() {
+            for ox in 0..shape.out_w() {
+                let mut acc = 0f32;
+                for c in 0..shape.channels {
+                    for ky in 0..shape.kernel_h {
+                        for kx in 0..shape.kernel_w {
+                            let iv = image.at(&[c, oy * shape.stride + ky, ox * shape.stride + kx]);
+                            let b = bin_idx.at(&[m, c, ky, kx]) as usize;
+                            acc += iv * codebook[b];
+                        }
+                    }
+                }
+                *out.at_mut(&[m, oy, ox]) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// PASM convolution (Fig 5/6, SystemC of Fig 13): phase 1 accumulates image
+/// values into `B` bins keyed by the tap's dictionary index (the PAS), phase
+/// 2 multiplies each bin once with its codebook weight (shared post-pass
+/// MAC).
+pub fn pasm_conv_f32(
+    image: &Tensor<f32>,
+    bin_idx: &Tensor<u16>,
+    codebook: &[f32],
+    stride: usize,
+) -> Tensor<f32> {
+    let (shape, bins) = conv_shapes(image.dims(), bin_idx.dims(), stride);
+    assert!(codebook.len() >= bins);
+    let b_total = codebook.len();
+    let mut out = Tensor::zeros(shape.out_shape().dims());
+    let mut image_bin = vec![0f32; b_total];
+    for m in 0..shape.kernels {
+        for oy in 0..shape.out_h() {
+            for ox in 0..shape.out_w() {
+                image_bin.iter_mut().for_each(|b| *b = 0.0); // reset bins
+                // PAS phase: weighted histogram of dictionary indices.
+                for c in 0..shape.channels {
+                    for ky in 0..shape.kernel_h {
+                        for kx in 0..shape.kernel_w {
+                            let iv = image.at(&[c, oy * shape.stride + ky, ox * shape.stride + kx]);
+                            let b = bin_idx.at(&[m, c, ky, kx]) as usize;
+                            image_bin[b] += iv;
+                        }
+                    }
+                }
+                // Post-pass MAC: B multiplies, shared unit.
+                let mut acc = 0f32;
+                for b in 0..b_total {
+                    acc += image_bin[b] * codebook[b];
+                }
+                *out.at_mut(&[m, oy, ox]) = acc;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-point (bit-exact) dataflows
+// ---------------------------------------------------------------------------
+
+/// Inputs to the fixed-point dataflows, pre-encoded to raw integers.
+///
+/// `image_raw` is in the image format `iq`; `codebook_raw` in the weight
+/// format `wq`.  Outputs carry `iq.frac + wq.frac` fractional bits (wide
+/// accumulator — the narrowing back to an output format is a separate,
+/// explicitly-audited step, as in the RTL).
+#[derive(Clone, Debug)]
+pub struct FxConvInputs {
+    pub image_raw: Tensor<i64>,
+    pub bin_idx: Tensor<u16>,
+    pub codebook_raw: Vec<i64>,
+    pub iq: QFormat,
+    pub wq: QFormat,
+    pub stride: usize,
+}
+
+impl FxConvInputs {
+    /// Encode float inputs into the given fixed-point formats.
+    pub fn encode(
+        image: &Tensor<f32>,
+        enc: &EncodedWeights,
+        iq: QFormat,
+        stride: usize,
+    ) -> Self {
+        FxConvInputs {
+            image_raw: image.map(|x| iq.encode(x as f64)),
+            bin_idx: enc.bin_idx.clone(),
+            codebook_raw: enc.codebook.raw(),
+            iq,
+            wq: enc.codebook.wq,
+            stride,
+        }
+    }
+
+    pub fn shape(&self) -> ConvShape {
+        conv_shapes(self.image_raw.dims(), self.bin_idx.dims(), self.stride).0
+    }
+
+    /// Fractional bits of the raw output values.
+    pub fn out_frac(&self) -> u32 {
+        self.iq.frac + self.wq.frac
+    }
+}
+
+/// Fixed-point weight-shared MAC convolution: per tap
+/// `acc += image_raw * codebook_raw[bin]` in exact integer arithmetic.
+///
+/// Hot path (§Perf): indices are flattened by hand — the generic
+/// `Tensor::at` costs three multiplies per tap, which dominates the loop.
+pub fn ws_conv_fx(inp: &FxConvInputs) -> Tensor<i64> {
+    let shape = inp.shape();
+    let (ih_w, k_w) = (shape.in_w, shape.kernel_w);
+    let plane = shape.in_h * ih_w;
+    let taps = shape.taps();
+    let img = inp.image_raw.data();
+    let bi = inp.bin_idx.data();
+    let cb = &inp.codebook_raw;
+    let mut out = Tensor::zeros(shape.out_shape().dims());
+    let out_data = out.data_mut();
+    let (oh, ow) = (shape.out_h(), shape.out_w());
+    for m in 0..shape.kernels {
+        let bi_m = &bi[m * taps..(m + 1) * taps];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                let mut t = 0usize;
+                let base = oy * shape.stride * ih_w + ox * shape.stride;
+                for c in 0..shape.channels {
+                    let cplane = &img[c * plane..(c + 1) * plane];
+                    for ky in 0..shape.kernel_h {
+                        let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                        for &iv in row {
+                            let b = bi_m[t] as usize;
+                            acc = acc
+                                .checked_add(fx_mul(iv, cb[b]))
+                                .expect("WS accumulator overflow");
+                            t += 1;
+                        }
+                    }
+                }
+                out_data[m * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Fixed-point PASM convolution. Bit-identical to [`ws_conv_fx`] because
+/// integer addition commutes — this is the paper's §5.3 exactness claim and
+/// is enforced by property tests.
+pub fn pasm_conv_fx(inp: &FxConvInputs) -> Tensor<i64> {
+    let shape = inp.shape();
+    let b_total = inp.codebook_raw.len();
+    let (ih_w, k_w) = (shape.in_w, shape.kernel_w);
+    let plane = shape.in_h * ih_w;
+    let taps = shape.taps();
+    let img = inp.image_raw.data();
+    let bi = inp.bin_idx.data();
+    let cb = &inp.codebook_raw;
+    let mut out = Tensor::zeros(shape.out_shape().dims());
+    let out_data = out.data_mut();
+    let (oh, ow) = (shape.out_h(), shape.out_w());
+    let mut image_bin = vec![0i64; b_total];
+    for m in 0..shape.kernels {
+        let bi_m = &bi[m * taps..(m + 1) * taps];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                image_bin.iter_mut().for_each(|b| *b = 0);
+                let mut t = 0usize;
+                let base = oy * shape.stride * ih_w + ox * shape.stride;
+                // PAS phase (flattened hot loop, see ws_conv_fx)
+                for c in 0..shape.channels {
+                    let cplane = &img[c * plane..(c + 1) * plane];
+                    for ky in 0..shape.kernel_h {
+                        let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                        for &iv in row {
+                            let b = bi_m[t] as usize;
+                            image_bin[b] =
+                                image_bin[b].checked_add(iv).expect("PAS bin overflow");
+                            t += 1;
+                        }
+                    }
+                }
+                // post-pass MAC
+                let mut acc = 0i64;
+                for (b, &v) in image_bin.iter().enumerate() {
+                    acc = acc
+                        .checked_add(fx_mul(v, cb[b]))
+                        .expect("post-pass accumulator overflow");
+                }
+                out_data[m * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+
+/// Validate and derive the conv shape from image dims `[C,IH,IW]` and kernel
+/// dims `[M,C,KY,KX]`; returns `(shape, max_bins_referenced)` where bins is
+/// only meaningful for index tensors.
+fn conv_shapes(image_dims: &[usize], kernel_dims: &[usize], stride: usize) -> (ConvShape, usize) {
+    assert_eq!(image_dims.len(), 3, "image must be [C,IH,IW]");
+    assert_eq!(kernel_dims.len(), 4, "kernel must be [M,C,KY,KX]");
+    assert_eq!(image_dims[0], kernel_dims[1], "channel mismatch");
+    let shape = ConvShape::new(
+        image_dims[0],
+        image_dims[1],
+        image_dims[2],
+        kernel_dims[2],
+        kernel_dims[3],
+        kernel_dims[0],
+        stride,
+    );
+    (shape, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::encode_weights;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (((*seed >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
+    }
+
+    fn random_case(
+        seed: u64,
+        c: usize,
+        ih: usize,
+        iw: usize,
+        ky: usize,
+        kx: usize,
+        m: usize,
+        bins: usize,
+    ) -> (Tensor<f32>, Tensor<u16>, Vec<f32>) {
+        let mut s = seed;
+        let image = Tensor::from_fn(&[c, ih, iw], |_| lcg(&mut s) * 4.0);
+        let bin_idx = Tensor::from_fn(&[m, c, ky, kx], |_| {
+            (lcg(&mut s).abs() * bins as f32) as u16 % bins as u16
+        });
+        let codebook: Vec<f32> = (0..bins).map(|_| lcg(&mut s)).collect();
+        (image, bin_idx, codebook)
+    }
+
+    #[test]
+    fn paper_fig4_fig6_worked_example() {
+        // 5 taps: (26.7,b0) (3.4,b1) (4.8,b2) (17.7,b3) (6.1,b0); cb [1.7,0.4,1.3,2.0]
+        let image = Tensor::from_vec(&[5, 1, 1], vec![26.7, 3.4, 4.8, 17.7, 6.1]);
+        let bin_idx = Tensor::from_vec(&[1, 5, 1, 1], vec![0u16, 1, 2, 3, 0]);
+        let cb = vec![1.7f32, 0.4, 1.3, 2.0];
+        let ws = ws_conv_f32(&image, &bin_idx, &cb, 1);
+        let pasm = pasm_conv_f32(&image, &bin_idx, &cb, 1);
+        // exact sum is 98.76 (paper rounds to 98.8)
+        assert!((ws.data()[0] - 98.76).abs() < 1e-4, "{}", ws.data()[0]);
+        assert!((pasm.data()[0] - 98.76).abs() < 1e-4);
+    }
+
+    #[test]
+    fn ws_equals_direct_on_decoded_weights() {
+        let (image, bin_idx, cb) = random_case(1, 4, 6, 6, 3, 3, 3, 8);
+        let weights = bin_idx.map(|b| cb[b as usize]);
+        let a = ws_conv_f32(&image, &bin_idx, &cb, 1);
+        let b = direct_conv_f32(&image, &weights, 1);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn pasm_close_to_ws_f32() {
+        let (image, bin_idx, cb) = random_case(2, 15, 5, 5, 3, 3, 2, 16);
+        let a = pasm_conv_f32(&image, &bin_idx, &cb, 1);
+        let b = ws_conv_f32(&image, &bin_idx, &cb, 1);
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn pasm_bitexact_ws_fixed_point() {
+        // the §5.3 exactness claim, in integer arithmetic
+        for seed in 0..5u64 {
+            let mut s = seed + 100;
+            let image = Tensor::from_fn(&[15, 5, 5], |_| lcg(&mut s) * 8.0);
+            let w = Tensor::from_fn(&[2, 15, 3, 3], |_| lcg(&mut s));
+            let enc = encode_weights(&w, 16, QFormat::W16);
+            let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1);
+            let a = ws_conv_fx(&inp);
+            let b = pasm_conv_fx(&inp);
+            assert_eq!(a.data(), b.data(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn fx_matches_f32_within_quantization() {
+        let (image, _, _) = random_case(3, 3, 6, 6, 3, 3, 2, 8);
+        let w = Tensor::from_fn(&[2, 3, 3, 3], |i| ((i % 5) as f32 - 2.0) * 0.25);
+        let enc = encode_weights(&w, 8, QFormat::W16);
+        let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1);
+        let fx = ws_conv_fx(&inp);
+        let scale = (1u64 << inp.out_frac()) as f32;
+        let fxf = fx.map(|r| r as f32 / scale);
+        // compare against f32 conv over the fx-rounded codebook
+        let cb_fx: Vec<f32> = enc
+            .codebook
+            .raw()
+            .iter()
+            .map(|&r| enc.codebook.wq.decode(r) as f32)
+            .collect();
+        let f2 = ws_conv_f32(&image, &enc.bin_idx, &cb_fx, 1);
+        // error bounded by image quantization ulp * taps * max|w|
+        let tol = QFormat::IMAGE32.ulp() as f32 * 27.0 * 2.0 + 1e-3;
+        assert!(fxf.max_abs_diff(&f2) < tol, "{}", fxf.max_abs_diff(&f2));
+    }
+
+    #[test]
+    fn stride_2() {
+        let (image, bin_idx, cb) = random_case(4, 3, 9, 9, 3, 3, 2, 4);
+        let a = pasm_conv_f32(&image, &bin_idx, &cb, 2);
+        let b = ws_conv_f32(&image, &bin_idx, &cb, 2);
+        assert_eq!(a.dims(), &[2, 4, 4]);
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn k1_conv() {
+        let (image, bin_idx, cb) = random_case(5, 8, 4, 4, 1, 1, 3, 4);
+        let a = pasm_conv_f32(&image, &bin_idx, &cb, 1);
+        let b = ws_conv_f32(&image, &bin_idx, &cb, 1);
+        assert_eq!(a.dims(), &[3, 4, 4]);
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn channel_mismatch_panics() {
+        let image = Tensor::<f32>::zeros(&[3, 5, 5]);
+        let weights = Tensor::<f32>::zeros(&[2, 4, 3, 3]);
+        direct_conv_f32(&image, &weights, 1);
+    }
+}

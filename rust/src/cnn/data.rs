@@ -1,0 +1,172 @@
+//! Synthetic 10-class digit dataset.
+//!
+//! The paper's accelerator is evaluated on AlexNet-style workloads we cannot
+//! ship; the e2e example instead trains on procedurally generated 12x12
+//! digit glyphs (template bitmaps + per-sample jitter + noise).  This
+//! exercises the identical code path — trained weights -> K-means codebook
+//! -> dictionary-encoded inference — with a learnable, reproducible task
+//! (DESIGN.md §1 substitution map).
+
+use crate::tensor::Tensor;
+
+/// Deterministic PRNG (xorshift*) so datasets are reproducible across runs.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [-1, 1).
+    pub fn signed(&mut self) -> f32 {
+        self.uniform() * 2.0 - 1.0
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// 8x8 glyph templates for digits 0-9 (1 = ink).
+const GLYPHS: [[u8; 8]; 10] = [
+    // each byte is a row bitmask, MSB = leftmost pixel
+    [0x3C, 0x42, 0x46, 0x4A, 0x52, 0x62, 0x42, 0x3C], // 0
+    [0x08, 0x18, 0x28, 0x08, 0x08, 0x08, 0x08, 0x3E], // 1
+    [0x3C, 0x42, 0x02, 0x0C, 0x30, 0x40, 0x40, 0x7E], // 2
+    [0x3C, 0x42, 0x02, 0x1C, 0x02, 0x02, 0x42, 0x3C], // 3
+    [0x04, 0x0C, 0x14, 0x24, 0x44, 0x7E, 0x04, 0x04], // 4
+    [0x7E, 0x40, 0x40, 0x7C, 0x02, 0x02, 0x42, 0x3C], // 5
+    [0x1C, 0x20, 0x40, 0x7C, 0x42, 0x42, 0x42, 0x3C], // 6
+    [0x7E, 0x02, 0x04, 0x08, 0x10, 0x10, 0x10, 0x10], // 7
+    [0x3C, 0x42, 0x42, 0x3C, 0x42, 0x42, 0x42, 0x3C], // 8
+    [0x3C, 0x42, 0x42, 0x3E, 0x02, 0x04, 0x08, 0x30], // 9
+];
+
+/// Image side length produced by the generator (matches ModelConfig.in_h).
+pub const IMAGE_SIDE: usize = 12;
+
+/// One labelled sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// `[1, 12, 12]` image, ink ~1.0 on ~0.0 background plus noise.
+    pub image: Tensor<f32>,
+    pub label: usize,
+}
+
+/// Render one digit with sub-cell jitter and additive noise.
+pub fn render_digit(rng: &mut Rng, digit: usize, noise: f32) -> Tensor<f32> {
+    assert!(digit < 10);
+    let mut img = Tensor::zeros(&[1, IMAGE_SIDE, IMAGE_SIDE]);
+    // random placement of the 8x8 glyph within the 12x12 frame
+    let oy = rng.below(IMAGE_SIDE - 8 + 1);
+    let ox = rng.below(IMAGE_SIDE - 8 + 1);
+    for (r, rowmask) in GLYPHS[digit].iter().enumerate() {
+        for c in 0..8 {
+            if rowmask & (0x80 >> c) != 0 {
+                let ink = 0.8 + 0.2 * rng.uniform();
+                *img.at_mut(&[0, oy + r, ox + c]) = ink;
+            }
+        }
+    }
+    if noise > 0.0 {
+        for v in img.data_mut() {
+            *v += rng.signed() * noise;
+        }
+    }
+    img
+}
+
+/// Generate a balanced dataset of `n` samples.
+pub fn generate(rng: &mut Rng, n: usize, noise: f32) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let label = i % 10;
+            Sample { image: render_digit(rng, label, noise), label }
+        })
+        .collect()
+}
+
+/// Deterministic train/test split sizes used by the e2e example.
+pub fn train_test(seed: u64, n_train: usize, n_test: usize, noise: f32) -> (Vec<Sample>, Vec<Sample>) {
+    let mut rng = Rng::new(seed);
+    let train = generate(&mut rng, n_train, noise);
+    let test = generate(&mut rng, n_test, noise);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = render_digit(&mut Rng::new(42), 3, 0.05);
+        let b = render_digit(&mut Rng::new(42), 3, 0.05);
+        assert!(a.max_abs_diff(&b) == 0.0);
+    }
+
+    #[test]
+    fn shapes_and_range() {
+        let mut rng = Rng::new(1);
+        for d in 0..10 {
+            let img = render_digit(&mut rng, d, 0.1);
+            assert_eq!(img.dims(), &[1, IMAGE_SIDE, IMAGE_SIDE]);
+            assert!(img.all_finite());
+        }
+    }
+
+    #[test]
+    fn glyphs_are_distinct() {
+        // no two noiseless digit renders at the same position are identical
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                assert_ne!(GLYPHS[a], GLYPHS[b], "glyphs {a} and {b} identical");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let mut rng = Rng::new(7);
+        let ds = generate(&mut rng, 100, 0.0);
+        let mut counts = [0usize; 10];
+        for s in &ds {
+            counts[s.label] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn noise_changes_pixels() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let clean = render_digit(&mut r1, 0, 0.0);
+        let noisy = render_digit(&mut r2, 0, 0.2);
+        assert!(clean.max_abs_diff(&noisy) > 0.0);
+    }
+
+    #[test]
+    fn rng_uniform_bounds() {
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+}

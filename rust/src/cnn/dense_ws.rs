@@ -1,0 +1,183 @@
+//! Weight-shared dense (GEMV) layers with PASM — the paper's conclusion
+//! hook made concrete.
+//!
+//! §7: "Weight sharing is used in other types of networks such as
+//! regional-CNNs, RNNs and LSTMs so PASM may be a good fit there too."
+//! Fully-connected / recurrent layers are matrix-vector products — the
+//! workload EIE (Han et al. 2016) accelerates.  The PASM permutation
+//! applies verbatim: per output neuron, scatter the input activations
+//! into `B` bins by the weight's dictionary index, then one `B`-length
+//! post-pass.  Amortization is `K / B` where `K` is the input dimension —
+//! usually *better* than convolutions (K is thousands in LSTM gates).
+
+use crate::quant::codebook::EncodedWeights;
+use crate::quant::fixed::fx_mul;
+use crate::tensor::Tensor;
+
+/// Weight-shared dense forward: `y[j] = Σ_i x[i] * cb[bi[j,i]]`.
+/// `bin_idx` is `[N, K]` (N output neurons, K inputs).
+pub fn ws_dense_f32(x: &[f32], bin_idx: &Tensor<u16>, codebook: &[f32]) -> Vec<f32> {
+    let (n, k) = dense_dims(bin_idx, x.len());
+    let bi = bin_idx.data();
+    (0..n)
+        .map(|j| {
+            let row = &bi[j * k..(j + 1) * k];
+            row.iter()
+                .zip(x)
+                .map(|(&b, &xv)| xv * codebook[b as usize])
+                .sum()
+        })
+        .collect()
+}
+
+/// PASM dense forward: bin-accumulate then post-pass multiply.
+pub fn pasm_dense_f32(x: &[f32], bin_idx: &Tensor<u16>, codebook: &[f32]) -> Vec<f32> {
+    let (n, k) = dense_dims(bin_idx, x.len());
+    let bi = bin_idx.data();
+    let bins = codebook.len();
+    let mut out = Vec::with_capacity(n);
+    let mut acc = vec![0f32; bins];
+    for j in 0..n {
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        let row = &bi[j * k..(j + 1) * k];
+        for (&b, &xv) in row.iter().zip(x) {
+            acc[b as usize] += xv; // PAS phase
+        }
+        out.push(acc.iter().zip(codebook).map(|(&a, &w)| a * w).sum());
+    }
+    out
+}
+
+/// Fixed-point PASM dense — bit-exact against the WS form (§5.3 extended
+/// to GEMV; enforced by tests).
+pub fn pasm_dense_fx(x_raw: &[i64], enc: &EncodedWeights) -> Vec<i64> {
+    let (n, k) = dense_dims(&enc.bin_idx, x_raw.len());
+    let bi = enc.bin_idx.data();
+    let cb = enc.codebook.raw();
+    let mut out = Vec::with_capacity(n);
+    let mut acc = vec![0i64; cb.len()];
+    for j in 0..n {
+        acc.iter_mut().for_each(|a| *a = 0);
+        let row = &bi[j * k..(j + 1) * k];
+        for (&b, &xv) in row.iter().zip(x_raw) {
+            acc[b as usize] = acc[b as usize].checked_add(xv).expect("PAS bin overflow");
+        }
+        let mut y = 0i64;
+        for (&a, &w) in acc.iter().zip(&cb) {
+            y = y.checked_add(fx_mul(a, w)).expect("post-pass overflow");
+        }
+        out.push(y);
+    }
+    out
+}
+
+/// Fixed-point WS dense.
+pub fn ws_dense_fx(x_raw: &[i64], enc: &EncodedWeights) -> Vec<i64> {
+    let (n, k) = dense_dims(&enc.bin_idx, x_raw.len());
+    let bi = enc.bin_idx.data();
+    let cb = enc.codebook.raw();
+    (0..n)
+        .map(|j| {
+            let row = &bi[j * k..(j + 1) * k];
+            let mut y = 0i64;
+            for (&b, &xv) in row.iter().zip(x_raw) {
+                y = y
+                    .checked_add(fx_mul(xv, cb[b as usize]))
+                    .expect("WS dense overflow");
+            }
+            y
+        })
+        .collect()
+}
+
+/// Cycles for one GEMV on streaming hardware: WS = N·K; PASM = N·(K + B)
+/// (the paper's §4 formula applied to dense layers).
+pub fn dense_cycles(n: usize, k: usize, bins: usize, pasm: bool) -> u64 {
+    if pasm {
+        (n * (k + bins)) as u64
+    } else {
+        (n * k) as u64
+    }
+}
+
+fn dense_dims(bin_idx: &Tensor<u16>, x_len: usize) -> (usize, usize) {
+    assert_eq!(bin_idx.dims().len(), 2, "bin_idx must be [N, K]");
+    let (n, k) = (bin_idx.dims()[0], bin_idx.dims()[1]);
+    assert_eq!(k, x_len, "input length mismatch");
+    (n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::Rng;
+    use crate::quant::codebook::encode_weights;
+    use crate::quant::fixed::QFormat;
+
+    fn case(seed: u64, n: usize, k: usize, bins: usize) -> (Vec<f32>, Tensor<u16>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..k).map(|_| rng.signed() * 2.0).collect();
+        let bi = Tensor::from_fn(&[n, k], |_| rng.below(bins) as u16);
+        let cb: Vec<f32> = (0..bins).map(|_| rng.signed()).collect();
+        (x, bi, cb)
+    }
+
+    #[test]
+    fn pasm_matches_ws_f32() {
+        let (x, bi, cb) = case(1, 32, 256, 16);
+        let a = ws_dense_f32(&x, &bi, &cb);
+        let b = pasm_dense_f32(&x, &bi, &cb);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn fx_bitexact_random_sweep() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let n = 1 + rng.below(16);
+            let k = 8 + rng.below(256);
+            let bins = 1usize << (1 + rng.below(6));
+            let w = Tensor::from_fn(&[n, k], |_| rng.signed());
+            let enc = encode_weights(&w, bins, QFormat::W16);
+            let x_raw: Vec<i64> = (0..k)
+                .map(|_| QFormat::IMAGE32.encode((rng.signed() * 3.0) as f64))
+                .collect();
+            assert_eq!(pasm_dense_fx(&x_raw, &enc), ws_dense_fx(&x_raw, &enc));
+        }
+    }
+
+    #[test]
+    fn lstm_scale_amortization() {
+        // an LSTM gate GEMV: K = 1024 inputs, B = 16 bins -> 64x
+        // amortization; latency overhead B/K = 1.6% (vs ~12% for the
+        // paper's C=15 conv tile) — dense layers suit PASM *better*
+        let (n, k, bins) = (256usize, 1024usize, 16usize);
+        let ws = dense_cycles(n, k, bins, false);
+        let pasm = dense_cycles(n, k, bins, true);
+        let overhead = pasm as f64 / ws as f64 - 1.0;
+        assert!((overhead - bins as f64 / k as f64).abs() < 1e-12);
+        assert!(overhead < 0.02, "overhead {overhead}");
+    }
+
+    #[test]
+    fn degenerate_single_output() {
+        let (x, bi, cb) = case(3, 1, 8, 4);
+        let y = pasm_dense_f32(&x, &bi, &cb);
+        assert_eq!(y.len(), 1);
+        let manual: f32 = x
+            .iter()
+            .zip(bi.data())
+            .map(|(&xv, &b)| xv * cb[b as usize])
+            .sum();
+        assert!((y[0] - manual).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn input_length_checked() {
+        let (_, bi, cb) = case(4, 2, 8, 4);
+        pasm_dense_f32(&[1.0; 5], &bi, &cb);
+    }
+}

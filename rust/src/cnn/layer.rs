@@ -1,0 +1,192 @@
+//! Non-convolution layer building blocks: bias, ReLU, max-pool, dense.
+//!
+//! The paper's accelerator includes stride, bias and ReLU in the datapath
+//! (§4: "the activation function and bias parameters are not shared"); the
+//! pool/dense layers complete the digits CNN used by the e2e example.
+
+use crate::tensor::Tensor;
+
+/// Add a per-output-channel bias in place: `x[m,·,·] += bias[m]`.
+pub fn add_bias(x: &mut Tensor<f32>, bias: &[f32]) {
+    let dims = x.dims().to_vec();
+    assert_eq!(dims.len(), 3, "bias expects [M,H,W]");
+    assert_eq!(dims[0], bias.len(), "bias length mismatch");
+    let plane = dims[1] * dims[2];
+    for (m, &b) in bias.iter().enumerate() {
+        for v in &mut x.data_mut()[m * plane..(m + 1) * plane] {
+            *v += b;
+        }
+    }
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut Tensor<f32>) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// 2x2 stride-2 VALID max-pool over `[C,H,W]` (odd trailing row/col dropped,
+/// matching `ref.maxpool2` on the python side).
+pub fn maxpool2(x: &Tensor<f32>) -> Tensor<f32> {
+    let dims = x.dims();
+    assert_eq!(dims.len(), 3);
+    let (c, h, w) = (dims[0], dims[1], dims[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(x.at(&[ci, oy * 2 + dy, ox * 2 + dx]));
+                    }
+                }
+                *out.at_mut(&[ci, oy, ox]) = m;
+            }
+        }
+    }
+    out
+}
+
+/// Max-pool backward helper: argmax mask positions (training path).
+pub fn maxpool2_with_argmax(x: &Tensor<f32>) -> (Tensor<f32>, Vec<usize>) {
+    let dims = x.dims();
+    let (c, h, w) = (dims[0], dims[1], dims[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    let mut arg = vec![0usize; c * oh * ow];
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = f32::NEG_INFINITY;
+                let mut mi = 0usize;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let iy = oy * 2 + dy;
+                        let ix = ox * 2 + dx;
+                        let v = x.at(&[ci, iy, ix]);
+                        if v > m {
+                            m = v;
+                            mi = ci * h * w + iy * w + ix;
+                        }
+                    }
+                }
+                *out.at_mut(&[ci, oy, ox]) = m;
+                arg[ci * oh * ow + oy * ow + ox] = mi;
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Dense layer: `feat [K] @ w [K,N] + b [N]`.
+pub fn dense(feat: &[f32], w: &Tensor<f32>, b: &[f32]) -> Vec<f32> {
+    let dims = w.dims();
+    assert_eq!(dims.len(), 2);
+    let (k, n) = (dims[0], dims[1]);
+    assert_eq!(feat.len(), k, "feature dim mismatch");
+    assert_eq!(b.len(), n);
+    let mut out = b.to_vec();
+    for (i, &f) in feat.iter().enumerate() {
+        let row = &w.data()[i * n..(i + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += f * wv;
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// Cross-entropy loss of softmax(logits) against a class label.
+pub fn cross_entropy(logits: &[f32], label: usize) -> f32 {
+    let p = softmax(logits);
+    -(p[label].max(1e-12)).ln()
+}
+
+/// argmax index.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_per_channel() {
+        let mut x = Tensor::zeros(&[2, 2, 2]);
+        add_bias(&mut x, &[1.0, -2.0]);
+        assert_eq!(x.at(&[0, 1, 1]), 1.0);
+        assert_eq!(x.at(&[1, 0, 0]), -2.0);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = Tensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu(&mut x);
+        assert_eq!(x.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = Tensor::from_vec(&[1, 2, 4], vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0, 7.0, 8.0]);
+        let p = maxpool2(&x);
+        assert_eq!(p.dims(), &[1, 1, 2]);
+        assert_eq!(p.data(), &[4.0, 8.0]);
+    }
+
+    #[test]
+    fn maxpool_odd_dims_dropped() {
+        let x = Tensor::from_fn(&[1, 5, 5], |i| i as f32);
+        let p = maxpool2(&x);
+        assert_eq!(p.dims(), &[1, 2, 2]);
+    }
+
+    #[test]
+    fn argmax_mask_positions() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 9.0, 3.0, 4.0]);
+        let (p, arg) = maxpool2_with_argmax(&x);
+        assert_eq!(p.data(), &[9.0]);
+        assert_eq!(arg, vec![1]);
+    }
+
+    #[test]
+    fn dense_matvec() {
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        let out = dense(&[2.0, 3.0], &w, &[0.1, 0.2, 0.3]);
+        assert_eq!(out, vec![2.1, 3.2, 0.3]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn cross_entropy_prefers_correct() {
+        assert!(cross_entropy(&[5.0, 0.0], 0) < cross_entropy(&[5.0, 0.0], 1));
+    }
+
+    #[test]
+    fn softmax_large_values_stable() {
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+    }
+}

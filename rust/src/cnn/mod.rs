@@ -1,0 +1,26 @@
+//! CNN functional substrate: the three accelerator dataflows plus the tiny
+//! trainable network the end-to-end example serves.
+//!
+//! * [`conv`] — bit-exact reference implementations of the paper's three
+//!   accelerators: direct (Fig 1), weight-shared MAC (Fig 3/4) and PASM
+//!   (Fig 5/6/13), in both f32 and fixed-point (`i64`) arithmetic.  The
+//!   fixed-point PASM and WS paths are *bit-identical* (paper §5.3) — the
+//!   property tests enforce it.
+//! * [`layer`] — bias / ReLU / max-pool / dense building blocks.
+//! * [`network`] — the digits CNN (conv-relu-pool ×2 + dense) mirroring
+//!   `python/compile/model.py`, with float and dictionary-encoded forms.
+//! * [`train`] — a small SGD trainer (backprop written out by hand) used by
+//!   the e2e example to get real trained weights to quantize.
+//! * [`data`] — synthetic 10-class digit dataset generator.
+//! * [`shapes`] — layer-shape tables (paper Table 2, AlexNet-like configs).
+
+pub mod conv;
+pub mod data;
+pub mod dense_ws;
+pub mod layer;
+pub mod network;
+pub mod shapes;
+pub mod train;
+
+pub use conv::{direct_conv_f32, pasm_conv_fx, pasm_conv_f32, ws_conv_f32, ws_conv_fx, FxConvInputs};
+pub use network::{DigitsCnn, EncodedCnn, NetworkParams};

@@ -1,0 +1,219 @@
+//! The digits CNN: float form (trainable) and dictionary-encoded form
+//! (what the accelerator serves).
+//!
+//! Architecture (mirrors `python/compile/model.py` exactly — same layer
+//! order, same flatten order — so the PJRT artifact and this code accept the
+//! same parameter tensors):
+//!
+//! ```text
+//! [1,12,12] -conv1(8,3x3)-> [8,10,10] -+bias,relu-> -pool2-> [8,5,5]
+//!          -conv2(16,3x3)-> [16,3,3] -+bias,relu-> flatten(144) -dense-> 10
+//! ```
+
+use crate::cnn::conv::{direct_conv_f32, pasm_conv_f32, ws_conv_f32};
+use crate::cnn::layer::{add_bias, argmax, dense, maxpool2, relu};
+use crate::quant::codebook::{encode_weights, EncodedWeights};
+use crate::quant::fixed::QFormat;
+use crate::tensor::{ConvShape, Tensor};
+
+/// Float parameters of the digits CNN.
+#[derive(Clone, Debug)]
+pub struct NetworkParams {
+    pub conv1_w: Tensor<f32>, // [8, 1, 3, 3]
+    pub conv1_b: Vec<f32>,    // [8]
+    pub conv2_w: Tensor<f32>, // [16, 8, 3, 3]
+    pub conv2_b: Vec<f32>,    // [16]
+    pub dense_w: Tensor<f32>, // [144, 10]
+    pub dense_b: Vec<f32>,    // [10]
+}
+
+/// Static architecture description (must match `configs.E2E_MODEL`).
+#[derive(Clone, Copy, Debug)]
+pub struct DigitsCnn {
+    pub in_side: usize,
+    pub conv1_m: usize,
+    pub conv2_m: usize,
+    pub kernel: usize,
+    pub classes: usize,
+}
+
+impl Default for DigitsCnn {
+    fn default() -> Self {
+        DigitsCnn { in_side: 12, conv1_m: 8, conv2_m: 16, kernel: 3, classes: 10 }
+    }
+}
+
+impl DigitsCnn {
+    pub fn conv1_shape(&self) -> ConvShape {
+        ConvShape::new(1, self.in_side, self.in_side, self.kernel, self.kernel, self.conv1_m, 1)
+    }
+
+    pub fn conv2_shape(&self) -> ConvShape {
+        let side = self.conv1_shape().out_h() / 2; // after 2x2 pool
+        ConvShape::new(self.conv1_m, side, side, self.kernel, self.kernel, self.conv2_m, 1)
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        let s2 = self.conv2_shape();
+        self.conv2_m * s2.out_pixels()
+    }
+
+    /// Random (Xavier-ish) initial parameters.
+    pub fn init(&self, rng: &mut crate::cnn::data::Rng) -> NetworkParams {
+        let s1 = self.conv1_shape();
+        let s2 = self.conv2_shape();
+        let fan1 = (s1.taps() as f32).sqrt();
+        let fan2 = (s2.taps() as f32).sqrt();
+        let fan3 = (self.feature_dim() as f32).sqrt();
+        NetworkParams {
+            conv1_w: Tensor::from_fn(s1.weight_shape().dims(), |_| rng.signed() / fan1),
+            conv1_b: vec![0.0; self.conv1_m],
+            conv2_w: Tensor::from_fn(s2.weight_shape().dims(), |_| rng.signed() / fan2),
+            conv2_b: vec![0.0; self.conv2_m],
+            dense_w: Tensor::from_fn(&[self.feature_dim(), self.classes], |_| rng.signed() / fan3),
+            dense_b: vec![0.0; self.classes],
+        }
+    }
+
+    /// Float forward pass -> logits.
+    pub fn forward(&self, params: &NetworkParams, image: &Tensor<f32>) -> Vec<f32> {
+        let mut h = direct_conv_f32(image, &params.conv1_w, 1);
+        add_bias(&mut h, &params.conv1_b);
+        relu(&mut h);
+        let h = maxpool2(&h);
+        let mut h = direct_conv_f32(&h, &params.conv2_w, 1);
+        add_bias(&mut h, &params.conv2_b);
+        relu(&mut h);
+        let feat = h.into_vec();
+        dense(&feat, &params.dense_w, &params.dense_b)
+    }
+
+    /// Classification accuracy over a dataset.
+    pub fn accuracy(&self, params: &NetworkParams, data: &[crate::cnn::data::Sample]) -> f64 {
+        let correct = data
+            .iter()
+            .filter(|s| argmax(&self.forward(params, &s.image)) == s.label)
+            .count();
+        correct as f64 / data.len().max(1) as f64
+    }
+}
+
+/// Which conv dataflow the encoded network uses for inference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvVariant {
+    /// Weight-shared MAC (paper Fig 3/4).
+    WeightShared,
+    /// Weight-shared with PASM (paper Fig 5/6).
+    Pasm,
+}
+
+/// Dictionary-encoded form of the network (both conv layers weight-shared).
+#[derive(Clone, Debug)]
+pub struct EncodedCnn {
+    pub arch: DigitsCnn,
+    pub conv1: EncodedWeights,
+    pub conv1_b: Vec<f32>,
+    pub conv2: EncodedWeights,
+    pub conv2_b: Vec<f32>,
+    pub dense_w: Tensor<f32>,
+    pub dense_b: Vec<f32>,
+}
+
+impl EncodedCnn {
+    /// K-means-encode trained float parameters to `bins` shared weights per
+    /// conv layer (the dense head stays dense, as in the paper — PASM
+    /// targets the convolution layers that dominate compute).
+    pub fn encode(arch: DigitsCnn, params: &NetworkParams, bins: usize, wq: QFormat) -> Self {
+        EncodedCnn {
+            arch,
+            conv1: encode_weights(&params.conv1_w, bins, wq),
+            conv1_b: params.conv1_b.clone(),
+            conv2: encode_weights(&params.conv2_w, bins, wq),
+            conv2_b: params.conv2_b.clone(),
+            dense_w: params.dense_w.clone(),
+            dense_b: params.dense_b.clone(),
+        }
+    }
+
+    /// Forward with the selected dataflow -> logits.
+    pub fn forward(&self, image: &Tensor<f32>, variant: ConvVariant) -> Vec<f32> {
+        let conv = |img: &Tensor<f32>, enc: &EncodedWeights| match variant {
+            ConvVariant::WeightShared => {
+                ws_conv_f32(img, &enc.bin_idx, &enc.codebook.values, 1)
+            }
+            ConvVariant::Pasm => pasm_conv_f32(img, &enc.bin_idx, &enc.codebook.values, 1),
+        };
+        let mut h = conv(image, &self.conv1);
+        add_bias(&mut h, &self.conv1_b);
+        relu(&mut h);
+        let h = maxpool2(&h);
+        let mut h = conv(&h, &self.conv2);
+        add_bias(&mut h, &self.conv2_b);
+        relu(&mut h);
+        let feat = h.into_vec();
+        dense(&feat, &self.dense_w, &self.dense_b)
+    }
+
+    pub fn accuracy(&self, data: &[crate::cnn::data::Sample], variant: ConvVariant) -> f64 {
+        let correct = data
+            .iter()
+            .filter(|s| argmax(&self.forward(&s.image, variant)) == s.label)
+            .count();
+        correct as f64 / data.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::{render_digit, Rng};
+
+    #[test]
+    fn architecture_dims() {
+        let arch = DigitsCnn::default();
+        assert_eq!(arch.conv1_shape().out_h(), 10);
+        assert_eq!(arch.conv2_shape().in_h, 5);
+        assert_eq!(arch.conv2_shape().out_h(), 3);
+        assert_eq!(arch.feature_dim(), 144);
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(1);
+        let params = arch.init(&mut rng);
+        let img = render_digit(&mut rng, 5, 0.1);
+        let logits = arch.forward(&params, &img);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn encoded_variants_agree() {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(2);
+        let params = arch.init(&mut rng);
+        let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W16);
+        let img = render_digit(&mut rng, 3, 0.1);
+        let a = enc.forward(&img, ConvVariant::WeightShared);
+        let b = enc.forward(&img, ConvVariant::Pasm);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn encoding_preserves_logits_approximately() {
+        // with B=64 bins over ~200 weights, quantization error is small
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(3);
+        let params = arch.init(&mut rng);
+        let enc = EncodedCnn::encode(arch, &params, 64, QFormat::W32);
+        let img = render_digit(&mut rng, 7, 0.05);
+        let dense_logits = arch.forward(&params, &img);
+        let enc_logits = enc.forward(&img, ConvVariant::Pasm);
+        for (x, y) in dense_logits.iter().zip(&enc_logits) {
+            assert!((x - y).abs() < 0.35, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Layer-shape tables: paper Table 2 and representative network configs.
+//!
+//! Table 2 tabulates the MAC operations per output element (`C·KX·KY`) for
+//! typical channel counts and kernel sizes — the quantity that must dominate
+//! the bin count `B` for PASM to win.  The AlexNet-like table drives the
+//! design-space sweep example.
+
+use crate::tensor::ConvShape;
+
+/// Paper Table 2 grid: channels x kernel sizes.
+pub const TABLE2_CHANNELS: [usize; 3] = [32, 128, 512];
+pub const TABLE2_KERNELS: [usize; 4] = [1, 3, 5, 7];
+
+/// One Table 2 cell: MAC ops per output element.
+pub fn table2_macs(channels: usize, kernel: usize) -> usize {
+    channels * kernel * kernel
+}
+
+/// The full Table 2 as (channels, kernel, macs) rows, row-major like the
+/// paper (kernel rows, channel columns).
+pub fn table2() -> Vec<(usize, usize, usize)> {
+    let mut rows = Vec::new();
+    for &k in &TABLE2_KERNELS {
+        for &c in &TABLE2_CHANNELS {
+            rows.push((c, k, table2_macs(c, k)));
+        }
+    }
+    rows
+}
+
+/// PASM efficiency precondition (paper §3/§4): the number of accumulations
+/// per output must be much larger than the bin count. We expose the ratio;
+/// callers decide the threshold (the paper's examples use >= a few x).
+pub fn pasm_amortization(shape: &ConvShape, bins: usize) -> f64 {
+    shape.taps() as f64 / bins as f64
+}
+
+/// A named convolution layer in a network table.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: &'static str,
+    pub shape: ConvShape,
+}
+
+/// AlexNet-like convolution stack (channel/kernel progression of
+/// Krizhevsky et al. 2012, spatial dims scaled to keep the sweep fast; the
+/// gate/power model depends only on C, K, M, B, W — not on the spatial
+/// extent — and the latency model scales linearly with output pixels).
+pub fn alexnet_like() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec { name: "conv1", shape: ConvShape::new(3, 31, 31, 11, 11, 96, 4) },
+        LayerSpec { name: "conv2", shape: ConvShape::new(96, 15, 15, 5, 5, 256, 1) },
+        LayerSpec { name: "conv3", shape: ConvShape::new(256, 8, 8, 3, 3, 384, 1) },
+        LayerSpec { name: "conv4", shape: ConvShape::new(384, 8, 8, 3, 3, 384, 1) },
+        LayerSpec { name: "conv5", shape: ConvShape::new(384, 8, 8, 3, 3, 256, 1) },
+    ]
+}
+
+/// VGG-16-like stack (3x3 kernels throughout).
+pub fn vgg_like() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec { name: "conv1_1", shape: ConvShape::new(3, 16, 16, 3, 3, 64, 1) },
+        LayerSpec { name: "conv2_1", shape: ConvShape::new(64, 12, 12, 3, 3, 128, 1) },
+        LayerSpec { name: "conv3_1", shape: ConvShape::new(128, 10, 10, 3, 3, 256, 1) },
+        LayerSpec { name: "conv4_1", shape: ConvShape::new(256, 8, 8, 3, 3, 512, 1) },
+        LayerSpec { name: "conv5_1", shape: ConvShape::new(512, 6, 6, 3, 3, 512, 1) },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        // spot-check the paper's printed values
+        assert_eq!(table2_macs(32, 5), 800);
+        assert_eq!(table2_macs(512, 7), 25088);
+        assert_eq!(table2_macs(128, 3), 1152);
+        let t = table2();
+        assert_eq!(t.len(), 12);
+        assert!(t.contains(&(32, 1, 32)));
+        assert!(t.contains(&(512, 5, 12800)));
+    }
+
+    #[test]
+    fn amortization_regimes() {
+        // paper tile: 135 taps vs 16 bins -> ~8.4x amortization
+        let tile = ConvShape::paper_tile();
+        let r = pasm_amortization(&tile, 16);
+        assert!(r > 8.0 && r < 9.0, "{r}");
+        // 1x1 conv with 32 channels vs 256 bins -> PASM not viable
+        let bad = ConvShape::new(32, 4, 4, 1, 1, 1, 1);
+        assert!(pasm_amortization(&bad, 256) < 1.0);
+    }
+
+    #[test]
+    fn network_tables_valid() {
+        for spec in alexnet_like().iter().chain(vgg_like().iter()) {
+            spec.shape.validate();
+            assert!(spec.shape.taps() > 0);
+        }
+    }
+
+    #[test]
+    fn alexnet_taps_progression() {
+        let net = alexnet_like();
+        // conv2 of AlexNet: 96 channels, 5x5 -> 2400 taps
+        assert_eq!(net[1].shape.taps(), 2400);
+        // conv3: 256 channels, 3x3 -> 2304
+        assert_eq!(net[2].shape.taps(), 2304);
+    }
+}

@@ -1,0 +1,323 @@
+//! Hand-written SGD trainer for the digits CNN.
+//!
+//! The e2e example needs *real trained weights* to quantize (the weight
+//! distribution is what K-means clusters), so we train the float network
+//! here — forward and backward written out explicitly for the fixed
+//! architecture.  This is the "training" the paper assumes has already
+//! happened before weight sharing is applied.
+
+use crate::cnn::conv::direct_conv_f32;
+use crate::cnn::data::Sample;
+use crate::cnn::layer::{add_bias, dense, maxpool2_with_argmax, softmax};
+use crate::cnn::network::{DigitsCnn, NetworkParams};
+use crate::tensor::Tensor;
+
+/// Training hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 8, lr: 0.05, momentum: 0.9, log_every: 0 }
+    }
+}
+
+/// Gradient buffers (same shapes as the parameters).
+struct Grads {
+    conv1_w: Tensor<f32>,
+    conv1_b: Vec<f32>,
+    conv2_w: Tensor<f32>,
+    conv2_b: Vec<f32>,
+    dense_w: Tensor<f32>,
+    dense_b: Vec<f32>,
+}
+
+impl Grads {
+    fn zeros_like(p: &NetworkParams) -> Self {
+        Grads {
+            conv1_w: Tensor::zeros(p.conv1_w.dims()),
+            conv1_b: vec![0.0; p.conv1_b.len()],
+            conv2_w: Tensor::zeros(p.conv2_w.dims()),
+            conv2_b: vec![0.0; p.conv2_b.len()],
+            dense_w: Tensor::zeros(p.dense_w.dims()),
+            dense_b: vec![0.0; p.dense_b.len()],
+        }
+    }
+}
+
+/// One training epoch log entry.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub train_accuracy: f64,
+}
+
+/// Convolution gradient wrt weights: `gw[m,c,ky,kx] += Σ x[c,oy+ky,ox+kx] * go[m,oy,ox]`.
+fn conv_grad_w(x: &Tensor<f32>, go: &Tensor<f32>, gw: &mut Tensor<f32>) {
+    let (m_n, c_n) = (gw.dims()[0], gw.dims()[1]);
+    let (ky_n, kx_n) = (gw.dims()[2], gw.dims()[3]);
+    let (oh, ow) = (go.dims()[1], go.dims()[2]);
+    for m in 0..m_n {
+        for c in 0..c_n {
+            for ky in 0..ky_n {
+                for kx in 0..kx_n {
+                    let mut g = 0f32;
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            g += x.at(&[c, oy + ky, ox + kx]) * go.at(&[m, oy, ox]);
+                        }
+                    }
+                    *gw.at_mut(&[m, c, ky, kx]) += g;
+                }
+            }
+        }
+    }
+}
+
+/// Convolution gradient wrt input: full correlation with flipped kernel.
+fn conv_grad_x(w: &Tensor<f32>, go: &Tensor<f32>, x_dims: &[usize]) -> Tensor<f32> {
+    let (m_n, c_n) = (w.dims()[0], w.dims()[1]);
+    let (ky_n, kx_n) = (w.dims()[2], w.dims()[3]);
+    let (oh, ow) = (go.dims()[1], go.dims()[2]);
+    let mut gx = Tensor::zeros(x_dims);
+    for m in 0..m_n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let g = go.at(&[m, oy, ox]);
+                if g == 0.0 {
+                    continue;
+                }
+                for c in 0..c_n {
+                    for ky in 0..ky_n {
+                        for kx in 0..kx_n {
+                            *gx.at_mut(&[c, oy + ky, ox + kx]) += w.at(&[m, c, ky, kx]) * g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    gx
+}
+
+/// Forward + backward for one sample; accumulates into `grads`, returns loss.
+fn backprop(
+    arch: &DigitsCnn,
+    params: &NetworkParams,
+    grads: &mut Grads,
+    sample: &Sample,
+) -> f32 {
+    // ---- forward, keeping intermediates ----
+    let mut a1 = direct_conv_f32(&sample.image, &params.conv1_w, 1); // [8,10,10]
+    add_bias(&mut a1, &params.conv1_b);
+    let relu1_mask: Vec<bool> = a1.data().iter().map(|&v| v > 0.0).collect();
+    for v in a1.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let (p1, argmax1) = maxpool2_with_argmax(&a1); // [8,5,5]
+    let mut a2 = direct_conv_f32(&p1, &params.conv2_w, 1); // [16,3,3]
+    add_bias(&mut a2, &params.conv2_b);
+    let relu2_mask: Vec<bool> = a2.data().iter().map(|&v| v > 0.0).collect();
+    for v in a2.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let feat = a2.clone().into_vec(); // [144]
+    let logits = dense(&feat, &params.dense_w, &params.dense_b);
+    let probs = softmax(&logits);
+    let loss = -(probs[sample.label].max(1e-12)).ln();
+
+    // ---- backward ----
+    // d logits
+    let mut dl = probs;
+    dl[sample.label] -= 1.0;
+    // dense grads
+    let n = arch.classes;
+    for (i, &f) in feat.iter().enumerate() {
+        for (j, &d) in dl.iter().enumerate() {
+            grads.dense_w.data_mut()[i * n + j] += f * d;
+        }
+    }
+    for (gb, &d) in grads.dense_b.iter_mut().zip(&dl) {
+        *gb += d;
+    }
+    // d feat
+    let mut dfeat = vec![0f32; feat.len()];
+    for (i, df) in dfeat.iter_mut().enumerate() {
+        let row = &params.dense_w.data()[i * n..(i + 1) * n];
+        *df = row.iter().zip(&dl).map(|(&w, &d)| w * d).sum();
+    }
+    // through relu2
+    let mut da2 = Tensor::from_vec(a2.dims(), dfeat);
+    for (v, &m) in da2.data_mut().iter_mut().zip(&relu2_mask) {
+        if !m {
+            *v = 0.0;
+        }
+    }
+    // conv2 grads
+    conv_grad_w(&p1, &da2, &mut grads.conv2_w);
+    let plane2 = da2.dims()[1] * da2.dims()[2];
+    for m in 0..arch.conv2_m {
+        grads.conv2_b[m] += da2.data()[m * plane2..(m + 1) * plane2].iter().sum::<f32>();
+    }
+    // d p1
+    let dp1 = conv_grad_x(&params.conv2_w, &da2, p1.dims());
+    // through maxpool (route to argmax positions)
+    let mut da1 = Tensor::zeros(a1.dims());
+    for (i, &src) in argmax1.iter().enumerate() {
+        da1.data_mut()[src] += dp1.data()[i];
+    }
+    // through relu1
+    for (v, &m) in da1.data_mut().iter_mut().zip(&relu1_mask) {
+        if !m {
+            *v = 0.0;
+        }
+    }
+    // conv1 grads
+    conv_grad_w(&sample.image, &da1, &mut grads.conv1_w);
+    let plane1 = da1.dims()[1] * da1.dims()[2];
+    for m in 0..arch.conv1_m {
+        grads.conv1_b[m] += da1.data()[m * plane1..(m + 1) * plane1].iter().sum::<f32>();
+    }
+    loss
+}
+
+/// SGD with momentum over the dataset. Returns per-epoch stats.
+pub fn train(
+    arch: &DigitsCnn,
+    params: &mut NetworkParams,
+    data: &[Sample],
+    cfg: &TrainConfig,
+) -> Vec<EpochStats> {
+    assert!(!data.is_empty());
+    let mut vel = Grads::zeros_like(params);
+    let mut stats = Vec::new();
+    let batch = 16usize;
+
+    for epoch in 0..cfg.epochs {
+        let mut total_loss = 0f64;
+        let mut correct = 0usize;
+        for chunk in data.chunks(batch) {
+            let mut grads = Grads::zeros_like(params);
+            for s in chunk {
+                let loss = backprop(arch, params, &mut grads, s);
+                total_loss += loss as f64;
+                let logits = arch.forward(params, &s.image);
+                if crate::cnn::layer::argmax(&logits) == s.label {
+                    correct += 1;
+                }
+            }
+            let scale = cfg.lr / chunk.len() as f32;
+            let mu = cfg.momentum;
+            // momentum update, one tensor at a time
+            macro_rules! upd {
+                ($vp:expr, $gp:expr, $pp:expr) => {
+                    for ((v, g), p) in $vp.iter_mut().zip($gp.iter()).zip($pp.iter_mut()) {
+                        *v = mu * *v - scale * *g;
+                        *p += *v;
+                    }
+                };
+            }
+            upd!(vel.conv1_w.data_mut(), grads.conv1_w.data(), params.conv1_w.data_mut());
+            upd!(vel.conv1_b, grads.conv1_b, params.conv1_b);
+            upd!(vel.conv2_w.data_mut(), grads.conv2_w.data(), params.conv2_w.data_mut());
+            upd!(vel.conv2_b, grads.conv2_b, params.conv2_b);
+            upd!(vel.dense_w.data_mut(), grads.dense_w.data(), params.dense_w.data_mut());
+            upd!(vel.dense_b, grads.dense_b, params.dense_b);
+        }
+        let st = EpochStats {
+            epoch,
+            mean_loss: total_loss / data.len() as f64,
+            train_accuracy: correct as f64 / data.len() as f64,
+        };
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            eprintln!(
+                "epoch {:>3}  loss {:.4}  acc {:.1}%",
+                st.epoch,
+                st.mean_loss,
+                st.train_accuracy * 100.0
+            );
+        }
+        stats.push(st);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::{train_test, Rng};
+
+    #[test]
+    fn loss_decreases_on_tiny_set() {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(11);
+        let mut params = arch.init(&mut rng);
+        let (train_set, _) = train_test(3, 40, 1, 0.02);
+        let cfg = TrainConfig { epochs: 15, lr: 0.05, momentum: 0.9, log_every: 0 };
+        let stats = train(&arch, &mut params, &train_set, &cfg);
+        assert!(
+            stats.last().unwrap().mean_loss < stats[0].mean_loss * 0.8,
+            "loss did not decrease: {:?} -> {:?}",
+            stats[0].mean_loss,
+            stats.last().unwrap().mean_loss
+        );
+    }
+
+    #[test]
+    fn gradients_numerically_correct() {
+        // finite-difference check on a few conv1 weights
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(13);
+        let params = arch.init(&mut rng);
+        let (ds, _) = train_test(5, 1, 1, 0.05);
+        let s = &ds[0];
+
+        let mut grads = Grads::zeros_like(&params);
+        backprop(&arch, &params, &mut grads, s);
+
+        let eps = 1e-3f32;
+        for &probe in &[0usize, 7, 33, 70] {
+            let mut p_plus = params.clone();
+            p_plus.conv1_w.data_mut()[probe] += eps;
+            let mut p_minus = params.clone();
+            p_minus.conv1_w.data_mut()[probe] -= eps;
+            let l_plus = {
+                let logits = arch.forward(&p_plus, &s.image);
+                crate::cnn::layer::cross_entropy(&logits, s.label)
+            };
+            let l_minus = {
+                let logits = arch.forward(&p_minus, &s.image);
+                crate::cnn::layer::cross_entropy(&logits, s.label)
+            };
+            let numeric = (l_plus - l_minus) / (2.0 * eps);
+            let analytic = grads.conv1_w.data()[probe];
+            assert!(
+                (numeric - analytic).abs() < 2e-2_f32.max(0.2 * numeric.abs()),
+                "probe {probe}: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reaches_high_accuracy() {
+        // small but real: 300 samples, 20 epochs -> should fit well
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(17);
+        let mut params = arch.init(&mut rng);
+        let (train_set, test_set) = train_test(7, 300, 60, 0.05);
+        let cfg = TrainConfig { epochs: 20, lr: 0.05, momentum: 0.9, log_every: 0 };
+        train(&arch, &mut params, &train_set, &cfg);
+        let acc = arch.accuracy(&params, &test_set);
+        assert!(acc > 0.8, "test accuracy too low: {acc}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Bucketed dynamic batching policy.
+//!
+//! The AOT flow exports the model at fixed batch sizes (1, 8, 16 by
+//! default); the batcher picks, for the current queue depth, the largest
+//! bucket it can fill — or, if the oldest request has waited past the
+//! budget, the largest bucket not exceeding the queue (padding the rest).
+//! Pure decision logic, exhaustively unit-tested; the server thread applies
+//! it.
+
+use std::time::Duration;
+
+/// Batching configuration.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Exported batch sizes, ascending (from the artifact manifest).
+    pub buckets: Vec<usize>,
+    /// Max time the oldest request may wait before we launch underfull.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> Self {
+        assert!(!buckets.is_empty(), "need at least one batch bucket");
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(buckets[0] >= 1);
+        BatchPolicy { buckets, max_wait }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Decide what to launch given `queued` requests and whether the wait
+    /// budget of the oldest request has expired.
+    ///
+    /// Returns `Some(bucket)` to launch a batch of that exported size
+    /// (taking `min(queued, bucket)` live requests, padding the rest), or
+    /// `None` to keep waiting.
+    pub fn decide(&self, queued: usize, oldest_expired: bool) -> Option<usize> {
+        if queued == 0 {
+            return None;
+        }
+        // a full max bucket always launches immediately
+        if queued >= self.max_bucket() {
+            return Some(self.max_bucket());
+        }
+        if !oldest_expired {
+            // can we exactly fill some bucket? launch it; otherwise wait
+            // for either more requests or the timeout
+            return self.buckets.iter().copied().find(|&b| b == queued);
+        }
+        // timeout: smallest bucket that fits everything queued, else max
+        Some(
+            self.buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= queued)
+                .unwrap_or_else(|| self.max_bucket()),
+        )
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn empty_queue_waits() {
+        assert_eq!(policy().decide(0, true), None);
+        assert_eq!(policy().decide(0, false), None);
+    }
+
+    #[test]
+    fn full_bucket_launches_immediately() {
+        assert_eq!(policy().decide(16, false), Some(16));
+        assert_eq!(policy().decide(40, false), Some(16));
+        assert_eq!(policy().decide(8, false), Some(8));
+        assert_eq!(policy().decide(1, false), Some(1));
+    }
+
+    #[test]
+    fn partial_bucket_waits_until_timeout() {
+        assert_eq!(policy().decide(5, false), None);
+        assert_eq!(policy().decide(5, true), Some(8)); // pad 5 -> 8
+        assert_eq!(policy().decide(9, false), None);
+        assert_eq!(policy().decide(9, true), Some(16)); // pad 9 -> 16
+    }
+
+    #[test]
+    fn buckets_sorted_and_deduped() {
+        let p = BatchPolicy::new(vec![16, 1, 8, 8], Duration::ZERO);
+        assert_eq!(p.buckets, vec![1, 8, 16]);
+        assert_eq!(p.max_bucket(), 16);
+    }
+
+    #[test]
+    fn single_bucket_policy() {
+        let p = BatchPolicy::new(vec![4], Duration::ZERO);
+        assert_eq!(p.decide(2, false), None);
+        assert_eq!(p.decide(2, true), Some(4));
+        assert_eq!(p.decide(4, false), Some(4));
+        assert_eq!(p.decide(9, false), Some(4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_buckets_rejected() {
+        BatchPolicy::new(vec![], Duration::ZERO);
+    }
+}

@@ -1,0 +1,159 @@
+//! Batch execution engine: PJRT numerics + simulated hardware cost.
+//!
+//! Owns one compiled [`ModelExecutable`] per exported batch bucket and the
+//! dictionary-encoded model parameters.  `run_batch` pads the live
+//! requests to the chosen bucket, executes once, splits the logits, and
+//! prices the batch on the modeled PASM accelerator: cycles from the
+//! latency model of each conv layer, energy from the 45 nm power model —
+//! the figures a deployment would actually trade off (the paper's thesis:
+//! same numerics, less silicon and power, slightly more cycles).
+
+use crate::accel::conv::{ConvAccel, ConvVariantKind};
+use crate::cnn::network::EncodedCnn;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::hw::Tech;
+use crate::runtime::client::{ModelExecutable, ModelParams};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simulated hardware cost of serving one batch on the PASM accelerator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwCost {
+    /// Accelerator cycles for the batch (both conv layers, all images).
+    pub cycles: u64,
+    /// Energy at the modeled tech point (J).
+    pub energy_j: f64,
+    /// Wall time on the modeled accelerator (s).
+    pub accel_time_s: f64,
+}
+
+/// The batch execution engine.
+pub struct Engine {
+    exes: BTreeMap<usize, ModelExecutable>,
+    params: ModelParams,
+    enc: EncodedCnn,
+    classes: usize,
+    in_dims: [usize; 3],
+    /// Per-image accelerator cost (cycles / energy), precomputed from the
+    /// hw model at construction.
+    per_image_cycles: u64,
+    per_image_energy_j: f64,
+    tech: Tech,
+}
+
+impl Engine {
+    /// Compile every exported batch bucket and price the encoded model's
+    /// conv layers on the PASM accelerator model.
+    pub fn new(runtime: &Runtime, enc: EncodedCnn) -> Result<Self> {
+        let m = &runtime.manifest.model;
+        let mut exes = BTreeMap::new();
+        for &b in &m.batch_sizes {
+            exes.insert(b, runtime.load_model(b).context("compile batch bucket")?);
+        }
+        anyhow::ensure!(!exes.is_empty(), "no batch buckets exported");
+
+        // hardware pricing: both conv layers as PASM accelerators
+        let tech = Tech::asic_1ghz();
+        let bins = enc.conv1.codebook.bins();
+        let ww = enc.conv1.codebook.wq.width;
+        let accel1 = ConvAccel::new(ConvVariantKind::Pasm, enc.arch.conv1_shape(), bins, ww);
+        let accel2 = ConvAccel::new(ConvVariantKind::Pasm, enc.arch.conv2_shape(), bins, ww);
+        let cycles = accel1.latency_cycles() + accel2.latency_cycles();
+        let time_s = cycles as f64 * tech.period_s();
+        let power_w = accel1.power(&tech).total_w() + accel2.power(&tech).total_w();
+        let energy = power_w * time_s;
+
+        Ok(Engine {
+            params: ModelParams::from_encoded(&enc),
+            enc,
+            classes: m.classes,
+            in_dims: [m.in_c, m.in_h, m.in_w],
+            exes,
+            per_image_cycles: cycles,
+            per_image_energy_j: energy,
+            tech,
+        })
+    }
+
+    /// Exported bucket sizes, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// The encoded model this engine serves.
+    pub fn encoded(&self) -> &EncodedCnn {
+        &self.enc
+    }
+
+    /// Execute up to `bucket` live requests as one padded batch.
+    pub fn run_batch(
+        &self,
+        requests: &[InferenceRequest],
+        bucket: usize,
+    ) -> Result<Vec<InferenceResponse>> {
+        let exe = self
+            .exes
+            .get(&bucket)
+            .with_context(|| format!("bucket {bucket} not compiled"))?;
+        anyhow::ensure!(
+            requests.len() <= bucket,
+            "batch of {} exceeds bucket {bucket}",
+            requests.len()
+        );
+
+        // pad with zeros up to the bucket
+        let img_len: usize = self.in_dims.iter().product();
+        let mut data = vec![0f32; bucket * img_len];
+        for (i, r) in requests.iter().enumerate() {
+            anyhow::ensure!(
+                r.image.dims() == self.in_dims,
+                "request {} image dims {:?} != model {:?}",
+                r.id,
+                r.image.dims(),
+                self.in_dims
+            );
+            data[i * img_len..(i + 1) * img_len].copy_from_slice(r.image.data());
+        }
+        let batch = Tensor::from_vec(
+            &[bucket, self.in_dims[0], self.in_dims[1], self.in_dims[2]],
+            data,
+        );
+
+        let t0 = Instant::now();
+        let logits = exe.run(&batch, &self.params)?;
+        let compute_us = t0.elapsed().as_micros() as u64;
+        let done = Instant::now();
+
+        let hw = HwCost {
+            cycles: self.per_image_cycles * requests.len() as u64,
+            energy_j: self.per_image_energy_j * requests.len() as f64,
+            accel_time_s: self.per_image_cycles as f64
+                * requests.len() as f64
+                * self.tech.period_s(),
+        };
+
+        Ok(requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let row = &logits.data()[i * self.classes..(i + 1) * self.classes];
+                InferenceResponse {
+                    id: r.id,
+                    logits: row.to_vec(),
+                    predicted: crate::cnn::layer::argmax(row),
+                    queue_us: done
+                        .duration_since(r.enqueued_at)
+                        .as_micros()
+                        .saturating_sub(compute_us as u128) as u64,
+                    compute_us,
+                    batch_size: bucket,
+                    batch_occupancy: requests.len(),
+                    hw,
+                }
+            })
+            .collect())
+    }
+}

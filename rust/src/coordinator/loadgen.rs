@@ -1,0 +1,148 @@
+//! Open-loop Poisson load generation for serving experiments.
+//!
+//! Closed-loop clients (fire, wait, fire) hide queueing pathologies; the
+//! standard serving methodology is an *open-loop* arrival process at a
+//! fixed offered rate.  [`poisson_schedule`] draws exponential
+//! inter-arrival gaps from the deterministic [`Rng`], and
+//! [`run_open_loop`] replays them against a coordinator, returning
+//! per-request end-to-end latencies (`examples/latency_under_load.rs`
+//! sweeps the offered rate against capacity).
+
+use crate::cnn::data::Rng;
+use crate::coordinator::server::Coordinator;
+use crate::tensor::Tensor;
+use std::time::{Duration, Instant};
+
+/// Exponential inter-arrival times for `n` requests at `rate_hz`.
+pub fn poisson_schedule(rng: &mut Rng, n: usize, rate_hz: f64) -> Vec<Duration> {
+    assert!(rate_hz > 0.0);
+    (0..n)
+        .map(|_| {
+            // inverse-CDF sampling; clamp u away from 0 to bound the tail
+            let u = rng.uniform().max(1e-7) as f64;
+            Duration::from_secs_f64(-u.ln() / rate_hz)
+        })
+        .collect()
+}
+
+/// Result of one open-loop run.
+#[derive(Clone, Debug)]
+pub struct LoadResult {
+    pub offered_hz: f64,
+    pub achieved_hz: f64,
+    /// Per-request end-to-end latencies (µs), submission to response.
+    pub latencies_us: Vec<u64>,
+    pub errors: usize,
+}
+
+impl LoadResult {
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+    }
+}
+
+/// Replay a Poisson arrival process of `n` requests at `rate_hz` against
+/// the coordinator (images cycled from `pool`).  Submissions happen on
+/// schedule regardless of completions (open loop); latencies are measured
+/// per request on a collector thread.
+pub fn run_open_loop(
+    coord: &Coordinator,
+    pool: &[Tensor<f32>],
+    n: usize,
+    rate_hz: f64,
+    rng: &mut Rng,
+) -> LoadResult {
+    assert!(!pool.is_empty());
+    let gaps = poisson_schedule(rng, n, rate_hz);
+    let started = Instant::now();
+
+    // submit on schedule, keep receivers; per-request latency comes from
+    // the coordinator's own timestamps (queue + compute) so that draining
+    // the receivers after the run does not inflate the numbers
+    let mut inflight = Vec::with_capacity(n);
+    let mut next = Instant::now();
+    for (i, gap) in gaps.iter().enumerate() {
+        next += *gap;
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        match coord.submit(pool[i % pool.len()].clone()) {
+            Ok(rx) => inflight.push(rx),
+            Err(_) => {} // coordinator gone; counted as errors below
+        }
+    }
+
+    let mut latencies = Vec::with_capacity(inflight.len());
+    let mut errors = n - inflight.len();
+    for rx in inflight {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(Ok(resp)) => latencies.push(resp.queue_us + resp.compute_us),
+            _ => errors += 1,
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+    LoadResult {
+        offered_hz: rate_hz,
+        achieved_hz: latencies.len() as f64 / wall,
+        latencies_us: latencies,
+        errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_mean_matches_rate() {
+        let mut rng = Rng::new(42);
+        let rate = 1000.0;
+        let gaps = poisson_schedule(&mut rng, 20_000, rate);
+        let mean_s: f64 =
+            gaps.iter().map(Duration::as_secs_f64).sum::<f64>() / gaps.len() as f64;
+        let expected = 1.0 / rate;
+        assert!(
+            (mean_s - expected).abs() < expected * 0.05,
+            "mean gap {mean_s} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn schedule_is_memoryless_ish() {
+        // coefficient of variation of an exponential is 1
+        let mut rng = Rng::new(7);
+        let gaps = poisson_schedule(&mut rng, 20_000, 500.0);
+        let xs: Vec<f64> = gaps.iter().map(Duration::as_secs_f64).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.1, "cv {cv}");
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = LoadResult {
+            offered_hz: 1.0,
+            achieved_hz: 1.0,
+            latencies_us: (1..=100).collect(),
+            errors: 0,
+        };
+        assert!(r.percentile_us(50.0) <= r.percentile_us(99.0));
+        assert_eq!(r.percentile_us(100.0), 100);
+        assert!((r.mean_us() - 50.5).abs() < 1e-9);
+    }
+}

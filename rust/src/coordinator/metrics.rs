@@ -1,0 +1,111 @@
+//! Serving metrics: counters and latency percentiles.
+
+use std::time::Duration;
+
+/// Rolling metrics for the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    /// End-to-end latencies (µs), one per completed request.
+    latencies_us: Vec<u64>,
+    /// Total simulated accelerator energy (J).
+    pub sim_energy_j: f64,
+    /// Total simulated accelerator cycles.
+    pub sim_cycles: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&mut self, occupancy: usize, bucket: usize) {
+        self.batches += 1;
+        self.requests += occupancy as u64;
+        self.padded_slots += (bucket - occupancy) as u64;
+    }
+
+    pub fn record_latency(&mut self, lat: Duration) {
+        self.latencies_us.push(lat.as_micros() as u64);
+    }
+
+    pub fn record_hw(&mut self, cycles: u64, energy_j: f64) {
+        self.sim_cycles += cycles;
+        self.sim_energy_j += energy_j;
+    }
+
+    /// Latency percentile (p in [0, 100]); None until data arrives.
+    pub fn percentile_us(&self, p: f64) -> Option<u64> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        Some(v[rank.min(v.len() - 1)])
+    }
+
+    /// Mean batch occupancy (live requests per launched batch).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of executed slots that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.requests + self.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(5, 8);
+        m.record_batch(16, 16);
+        assert_eq!(m.requests, 21);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.padded_slots, 3);
+        assert!((m.mean_occupancy() - 10.5).abs() < 1e-9);
+        assert!((m.padding_fraction() - 3.0 / 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.percentile_us(0.0), Some(100));
+        assert_eq!(m.percentile_us(100.0), Some(1000));
+        let p50 = m.percentile_us(50.0).unwrap();
+        assert!((500..=600).contains(&p50));
+    }
+
+    #[test]
+    fn empty_percentile_none() {
+        assert_eq!(Metrics::new().percentile_us(50.0), None);
+    }
+
+    #[test]
+    fn hw_totals() {
+        let mut m = Metrics::new();
+        m.record_hw(1000, 1e-6);
+        m.record_hw(500, 5e-7);
+        assert_eq!(m.sim_cycles, 1500);
+        assert!((m.sim_energy_j - 1.5e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,28 @@
+//! Layer-3 inference coordinator.
+//!
+//! The request-path owner: a worker thread holds the PJRT executables (one
+//! per exported batch size) and the dictionary-encoded model; clients
+//! submit single-image requests; the [`batcher`] groups them into the
+//! largest exported batch bucket that the queue can fill without exceeding
+//! the wait budget (vLLM-style bucketed dynamic batching, scaled to this
+//! model's sizes); the [`engine`] pads, executes, splits, and attaches the
+//! *simulated hardware cost* of serving that batch on the PASM accelerator
+//! (cycles from the latency model, energy from the power model) — the
+//! paper's metrics, reported per request.
+//!
+//! No async runtime is available in this offline build; the coordinator
+//! uses std threads + channels (one worker, many producers), which for a
+//! single-device CPU backend is also the contention-minimal design.
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::BatchPolicy;
+pub use engine::{Engine, HwCost};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use server::Coordinator;

@@ -1,0 +1,51 @@
+//! Request/response types of the inference coordinator.
+
+use crate::coordinator::engine::HwCost;
+use crate::tensor::Tensor;
+use std::time::Instant;
+
+/// A single-image inference request.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// `[C, H, W]` input image (the digits model uses `[1, 12, 12]`).
+    pub image: Tensor<f32>,
+    pub enqueued_at: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: u64, image: Tensor<f32>) -> Self {
+        InferenceRequest { id, image, enqueued_at: Instant::now() }
+    }
+}
+
+/// The coordinator's answer for one request.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Time spent queued before the batch launched.
+    pub queue_us: u64,
+    /// PJRT execute wall time for the whole batch.
+    pub compute_us: u64,
+    /// Batch this request rode in (bucket size, incl. padding).
+    pub batch_size: usize,
+    /// Live requests in the batch (excl. padding).
+    pub batch_occupancy: usize,
+    /// Simulated hardware cost of this batch on the PASM accelerator.
+    pub hw: HwCost,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_carries_image() {
+        let img = Tensor::<f32>::zeros(&[1, 12, 12]);
+        let r = InferenceRequest::new(7, img);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.image.dims(), &[1, 12, 12]);
+    }
+}

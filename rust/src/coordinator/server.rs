@@ -1,0 +1,204 @@
+//! The coordinator server: worker thread + submission handle.
+//!
+//! One worker thread owns the [`Engine`] (PJRT executables are not Sync)
+//! and drains a request channel, applying the [`BatchPolicy`]: wait for a
+//! fillable bucket or the oldest request's deadline, then launch.  Clients
+//! get a per-request response channel.  Drop the [`Coordinator`] to shut
+//! down cleanly (pending requests are flushed first).
+
+use crate::cnn::network::EncodedCnn;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+enum Msg {
+    Request(InferenceRequest, mpsc::Sender<Result<InferenceResponse, String>>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    /// Start the worker: compiles all batch buckets, then serves until
+    /// dropped.  `artifacts_dir` must contain `manifest.json` (run
+    /// `make artifacts`).
+    pub fn start(
+        artifacts_dir: &str,
+        enc: EncodedCnn,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics_worker = Arc::clone(&metrics);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let dir = artifacts_dir.to_string();
+
+        // Compile on the worker thread (PJRT handles are not Send-safe to
+        // move across after use); report startup errors through a channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("pasm-coordinator".into())
+            .spawn(move || {
+                let engine = match Runtime::new(&dir)
+                    .and_then(|rt| Engine::new(&rt, enc))
+                {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                worker_loop(engine, policy, rx, metrics_worker);
+            })
+            .context("spawn coordinator worker")?;
+
+        ready_rx
+            .recv()
+            .context("coordinator worker died during startup")?
+            .map_err(|e| anyhow::anyhow!(e))?;
+
+        Ok(Coordinator { tx, worker: Some(worker), next_id: AtomicU64::new(1), metrics })
+    }
+
+    /// Submit one image; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        image: Tensor<f32>,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(InferenceRequest::new(id, image), rtx))
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and block for the answer (convenience).
+    pub fn infer(&self, image: Tensor<f32>) -> Result<InferenceResponse> {
+        let rx = self.submit(image)?;
+        rx.recv()
+            .context("coordinator dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Snapshot of the serving metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: Engine,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    type Pending = (InferenceRequest, mpsc::Sender<Result<InferenceResponse, String>>);
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut shutting_down = false;
+
+    loop {
+        // 1) drain the channel (non-blocking if we already hold requests,
+        //    blocking with deadline otherwise)
+        if queue.is_empty() && !shutting_down {
+            match rx.recv() {
+                Ok(Msg::Request(r, tx)) => queue.push_back((r, tx)),
+                Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Request(r, tx)) => queue.push_back((r, tx)),
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+
+        if queue.is_empty() {
+            if shutting_down {
+                return;
+            }
+            continue;
+        }
+
+        // 2) batching decision
+        let oldest_expired = shutting_down
+            || queue
+                .front()
+                .map(|(r, _)| r.enqueued_at.elapsed() >= policy.max_wait)
+                .unwrap_or(false);
+        let Some(bucket) = policy.decide(queue.len(), oldest_expired) else {
+            // wait a beat for more requests (bounded by the wait budget)
+            if let Ok(msg) = rx.recv_timeout(policy.max_wait) {
+                match msg {
+                    Msg::Request(r, tx) => queue.push_back((r, tx)),
+                    Msg::Shutdown => shutting_down = true,
+                }
+            }
+            continue;
+        };
+
+        // 3) launch
+        let take = bucket.min(queue.len());
+        let batch: Vec<Pending> = queue.drain(..take).collect();
+        let requests: Vec<InferenceRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
+        let started = Instant::now();
+        match engine.run_batch(&requests, bucket) {
+            Ok(responses) => {
+                // one lock per batch, not per request (§Perf)
+                let mut m = metrics.lock().unwrap();
+                m.record_batch(requests.len(), bucket);
+                if let Some(first) = responses.first() {
+                    m.record_hw(first.hw.cycles, first.hw.energy_j);
+                }
+                for (req, _) in &batch {
+                    m.record_latency(req.enqueued_at.elapsed());
+                }
+                drop(m);
+                for ((_, tx), resp) in batch.into_iter().zip(responses) {
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch failed after {:?}: {e:#}", started.elapsed());
+                for (_, tx) in batch {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}

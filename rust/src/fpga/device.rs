@@ -1,0 +1,108 @@
+//! Zynq-7000 device capacity tables and utilization checking.
+
+/// FPGA resource vector (the columns of Vivado "report_utilization").
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Utilization {
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram18: u64,
+    pub dsp: u64,
+}
+
+impl Utilization {
+    pub fn fits(&self, device: &Device) -> bool {
+        self.luts <= device.luts
+            && self.ffs <= device.ffs
+            && self.bram18 <= device.bram18
+            && self.dsp <= device.dsp
+    }
+
+    /// Per-resource utilization fractions against a device.
+    pub fn fractions(&self, device: &Device) -> [(&'static str, f64); 4] {
+        [
+            ("LUT", self.luts as f64 / device.luts as f64),
+            ("FF", self.ffs as f64 / device.ffs as f64),
+            ("BRAM18", self.bram18 as f64 / device.bram18 as f64),
+            ("DSP", self.dsp as f64 / device.dsp as f64),
+        ]
+    }
+}
+
+impl std::ops::Add for Utilization {
+    type Output = Utilization;
+    fn add(self, o: Utilization) -> Utilization {
+        Utilization {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            bram18: self.bram18 + o.bram18,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+/// A Xilinx 7-series part.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    /// 18 Kb BRAM blocks (a RAMB36 counts as two).
+    pub bram18: u64,
+    pub dsp: u64,
+    /// Static power of the part at typical conditions (W).
+    pub static_power_w: f64,
+}
+
+impl Device {
+    /// Zynq XC7Z045 (ZC706 board) — the paper's main FPGA target.
+    pub fn xc7z045() -> Device {
+        Device {
+            name: "XC7Z045",
+            luts: 218_600,
+            ffs: 437_200,
+            bram18: 1090,
+            dsp: 900,
+            static_power_w: 0.25,
+        }
+    }
+
+    /// Zynq XC7Z020 (PYNQ-Z1 board) — the resource-constrained part of
+    /// §5.2: 220 DSPs, which the 405-DSP WS design over-utilizes.
+    pub fn xc7z020() -> Device {
+        Device {
+            name: "XC7Z020",
+            luts: 53_200,
+            ffs: 106_400,
+            bram18: 280,
+            dsp: 220,
+            static_power_w: 0.12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dsp_capacities() {
+        // §5.2: the XC7Z020 has 220 DSPs; 405 > 220 (WS doesn't fit),
+        // 3 <= 220 (PASM fits)
+        let z20 = Device::xc7z020();
+        assert_eq!(z20.dsp, 220);
+        assert!(Utilization { dsp: 405, ..Default::default() }.fits(&z20) == false);
+        assert!(Utilization { dsp: 3, ..Default::default() }.fits(&z20));
+        assert!(Utilization { dsp: 405, ..Default::default() }.fits(&Device::xc7z045()));
+    }
+
+    #[test]
+    fn add_and_fractions() {
+        let a = Utilization { luts: 100, ffs: 200, bram18: 2, dsp: 3 };
+        let b = Utilization { luts: 50, ffs: 100, bram18: 1, dsp: 0 };
+        let s = a + b;
+        assert_eq!(s.luts, 150);
+        assert_eq!(s.dsp, 3);
+        let f = s.fractions(&Device::xc7z020());
+        assert!(f[3].1 > 0.0 && f[3].1 < 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Map a [`ConvAccel`] onto Zynq FPGA resources.
+//!
+//! Multiplier lanes go to DSP48E1 tiles; everything else (gather trees,
+//! comparators, muxes, control) maps to LUT/FF fabric; buffers map to
+//! BRAM18K by partition and capacity.  No ASIC timing-pressure factor is
+//! applied — at 200 MHz the paper's designs close timing comfortably,
+//! which is exactly why PASM keeps winning on the FPGA at 16 bins while
+//! losing in the 1 GHz ASIC (compare Figs 17 and 21).
+
+use crate::accel::conv::{ConvAccel, ConvVariantKind, IMAGE_WIDTH};
+use crate::fpga::device::Utilization;
+use crate::hw::tech::Tech;
+use crate::quant::fixed::ceil_log2;
+
+/// NAND2-equivalents absorbed per LUT6 (empirical Vivado mapping density).
+const GATES_PER_LUT: f64 = 6.0;
+/// NAND2-equivalents per flip-flop (matches the gate model's DFF cost).
+const GATES_PER_FF: f64 = 6.0;
+/// BRAM18K capacity in bits.
+const BRAM18_BITS: u64 = 18 * 1024;
+/// Max read width of one BRAM18 port.
+const BRAM18_PORT_BITS: u64 = 36;
+
+/// DSP48E1 tiles needed for an `a x b` multiplier.
+///
+/// A DSP48E1 multiplies 25 x 18; wider products tile.  32 x 32 maps to
+/// 3 DSPs (Vivado composes the fourth partial product in fabric), which is
+/// what makes the paper's numbers exact: 135 taps x 3 = 405 DSPs for the
+/// WS design, 1 multiplier x 3 = 3 DSPs for PASM.
+pub fn dsp_tiles(a: u32, b: u32) -> u64 {
+    let tiles = |x: u32, y: u32| ((x as u64).div_ceil(25)) * ((y as u64).div_ceil(18));
+    let t = tiles(a, b).min(tiles(b, a));
+    if a == 32 && b == 32 {
+        3 // fabric-assisted decomposition
+    } else {
+        t
+    }
+}
+
+/// BRAM blocks for a buffer of `entries x width` bits split into
+/// `partitions` independently addressed banks.
+pub fn bram_blocks(entries: u64, width: u64, partitions: u64) -> u64 {
+    assert!(partitions >= 1);
+    let per_part_entries = entries.div_ceil(partitions);
+    let per_part_bits = per_part_entries * width;
+    let by_capacity = per_part_bits.div_ceil(BRAM18_BITS);
+    let by_port = width.div_ceil(BRAM18_PORT_BITS);
+    partitions * by_capacity.max(by_port).max(1)
+}
+
+/// A mapped FPGA design.
+#[derive(Clone, Debug)]
+pub struct FpgaDesign {
+    pub name: String,
+    pub util: Utilization,
+    /// Fabric activity estimate (weighted mean of component activities),
+    /// feeds the power model.
+    pub fabric_activity: f64,
+}
+
+/// Map a convolution accelerator onto FPGA resources.
+pub fn map_conv_accel(accel: &ConvAccel) -> FpgaDesign {
+    let tech = Tech::fpga_200mhz();
+    let s = &accel.shape;
+    let taps = s.taps() as u64;
+
+    // ---- DSPs: the multiplier instances ----
+    let (n_mul, a, b) = accel.multiplier_insts();
+    let dsp = n_mul as u64 * dsp_tiles(a, b);
+
+    // ---- BRAM: buffers ----
+    // image cache: partitioned by channel for parallel tap access
+    let image = bram_blocks((s.in_h * s.in_w) as u64, IMAGE_WIDTH as u64, s.channels as u64);
+    // per-variant kernel-side cache, partitioned by kernel position (KY*KX)
+    let kparts = (s.kernel_h * s.kernel_w) as u64;
+    let kernel_entries = (s.kernels as u64) * taps / kparts;
+    // Narrow kernel-side words pack into shared partitions (HLS packs
+    // several per BRAM word when width*kparts fits the port budget).
+    let packed_parts = |width: u64| kparts.min((kparts * width).div_ceil(32)).max(1);
+    let kernel = match accel.variant {
+        // dense / decoded weight cache at full W
+        ConvVariantKind::Direct | ConvVariantKind::WeightShared => {
+            let w = accel.weight_width as u64;
+            bram_blocks(kernel_entries, w, packed_parts(w))
+        }
+        // PASM caches WCI-bit indices instead (packed — the BRAM saving)
+        ConvVariantKind::Pasm => {
+            let wci = ceil_log2(accel.bins.max(2)).max(1) as u64;
+            bram_blocks(kernel_entries, wci, packed_parts(wci))
+        }
+    };
+    // output feature map
+    let outfeat = bram_blocks(
+        (s.kernels * s.out_pixels()) as u64,
+        IMAGE_WIDTH as u64,
+        1,
+    );
+    let bram18 = image + kernel + outfeat;
+
+    // ---- LUT / FF: everything that is not a DSP or BRAM ----
+    let mut logicish = 0.0;
+    let mut seq = 0.0;
+    let mut act_weighted = 0.0;
+    for (c, duty) in accel.component_list(&tech) {
+        if c.name.contains("mul") {
+            continue; // multiplier lanes live in DSPs
+        }
+        let mut comb = c.gates.logic + c.gates.inverter + c.gates.buffer;
+        if c.name.contains("gather_tree") {
+            // the ASIC wiring-congestion overhead does not cost LUTs:
+            // FPGA routing is prefabricated
+            comb /= crate::accel::conv::TREE_WIRING_OVERHEAD;
+        }
+        logicish += comb;
+        seq += c.gates.sequential;
+        act_weighted += comb * c.activity * duty;
+    }
+    let luts = (logicish / GATES_PER_LUT).ceil() as u64;
+    let ffs = (seq / GATES_PER_FF).ceil() as u64;
+    let fabric_activity = if logicish > 0.0 { act_weighted / logicish } else { 0.0 };
+
+    FpgaDesign {
+        name: format!("{:?}-{}b-{}bins", accel.variant, accel.weight_width, accel.bins),
+        util: Utilization { luts, ffs, bram18, dsp },
+        fabric_activity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::conv::{ConvAccel, ConvVariantKind};
+
+    #[test]
+    fn dsp_tile_table() {
+        assert_eq!(dsp_tiles(18, 18), 1);
+        assert_eq!(dsp_tiles(25, 18), 1);
+        assert_eq!(dsp_tiles(32, 32), 3); // paper: 3 DSPs per 32-bit mul
+        assert_eq!(dsp_tiles(32, 8), 2);
+        assert_eq!(dsp_tiles(8, 8), 1);
+    }
+
+    #[test]
+    fn paper_405_vs_3_dsps() {
+        // §5.2: WS/non-WS use 405 DSPs; PASM uses 3 — "99% fewer DSPs"
+        let ws = map_conv_accel(&ConvAccel::paper(ConvVariantKind::WeightShared, 16, 32));
+        let direct = map_conv_accel(&ConvAccel::paper(ConvVariantKind::Direct, 16, 32));
+        let pasm = map_conv_accel(&ConvAccel::paper(ConvVariantKind::Pasm, 16, 32));
+        assert_eq!(ws.util.dsp, 405);
+        assert_eq!(direct.util.dsp, 405);
+        assert_eq!(pasm.util.dsp, 3);
+        let saving = 1.0 - pasm.util.dsp as f64 / ws.util.dsp as f64;
+        assert!(saving > 0.99);
+    }
+
+    #[test]
+    fn pasm_fewer_brams_at_32bit() {
+        // §5.2: PASM uses ~28% fewer BRAMs at 32-bit kernels
+        for bins in [4usize, 8, 16] {
+            let ws = map_conv_accel(&ConvAccel::paper(ConvVariantKind::WeightShared, bins, 32));
+            let pasm = map_conv_accel(&ConvAccel::paper(ConvVariantKind::Pasm, bins, 32));
+            let saving = 1.0 - pasm.util.bram18 as f64 / ws.util.bram18 as f64;
+            assert!(
+                saving > 0.15 && saving < 0.45,
+                "bins {bins}: bram saving {saving} ({} vs {})",
+                pasm.util.bram18,
+                ws.util.bram18
+            );
+        }
+    }
+
+    #[test]
+    fn eight_bit_brams_similar() {
+        // §5.2: at 8-bit kernels PASM uses about the same number of BRAMs
+        let ws = map_conv_accel(&ConvAccel::paper(ConvVariantKind::WeightShared, 8, 8));
+        let pasm = map_conv_accel(&ConvAccel::paper(ConvVariantKind::Pasm, 8, 8));
+        let diff = (ws.util.bram18 as i64 - pasm.util.bram18 as i64).abs();
+        assert!(diff <= 3, "{} vs {}", ws.util.bram18, pasm.util.bram18);
+    }
+
+    #[test]
+    fn ws_overflows_pynq_pasm_fits() {
+        // §5.2: the XC7Z020 (220 DSPs) cannot host the WS design (405
+        // DSPs); the 4-bin PASM fits the whole part
+        let z20 = crate::fpga::Device::xc7z020();
+        let ws = map_conv_accel(&ConvAccel::paper(ConvVariantKind::WeightShared, 4, 32));
+        let pasm = map_conv_accel(&ConvAccel::paper(ConvVariantKind::Pasm, 4, 32));
+        assert!(!ws.util.fits(&z20));
+        assert!(pasm.util.fits(&z20), "pasm util {:?}", pasm.util);
+    }
+
+    #[test]
+    fn pasm_luts_grow_with_bins() {
+        let l = |bins| {
+            map_conv_accel(&ConvAccel::paper(ConvVariantKind::Pasm, bins, 32)).util.luts
+        };
+        assert!(l(4) < l(8) && l(8) < l(16));
+    }
+
+    #[test]
+    fn bram_block_arithmetic() {
+        assert_eq!(bram_blocks(512, 32, 1), 1);
+        assert_eq!(bram_blocks(1024, 36, 1), 2);
+        assert_eq!(bram_blocks(100, 8, 4), 4); // partition-bound
+        assert_eq!(bram_blocks(10, 72, 1), 2); // port-width-bound
+    }
+}

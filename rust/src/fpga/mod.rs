@@ -1,0 +1,26 @@
+//! FPGA resource and power model (Xilinx Zynq-7000, Figs 19-22).
+//!
+//! The paper implements the same three conv accelerators on a Zynq XC7Z045
+//! (ZC706 board) at 200 MHz and reports Vivado "report_utilization" /
+//! "report_power" numbers.  Resource mapping is far more deterministic than
+//! ASIC synthesis:
+//!
+//! * every `32 x W` multiply maps to DSP48E1 tiles (a 32-bit multiplier
+//!   maps to 3 DSPs — 405 DSPs = 135 taps x 3 for the WS/non-WS designs,
+//!   3 DSPs = the single post-pass multiplier for PASM: the paper's
+//!   "99 % fewer DSPs");
+//! * buffers map to BRAM18K blocks by capacity and partition count (PASM
+//!   stores WCI-bit indices instead of W-bit weights: "28 % fewer BRAMs");
+//! * the PAS gather fabric maps to LUT/CARRY4 + FF.
+//!
+//! See [`device`] for part capacity tables (XC7Z045 and the
+//! resource-constrained XC7Z020 of the PYNQ-Z1, §5.2) and [`power`] for
+//! the per-resource power model at 200 MHz.
+
+pub mod device;
+pub mod map;
+pub mod power;
+
+pub use device::{Device, Utilization};
+pub use map::{map_conv_accel, FpgaDesign};
+pub use power::fpga_power;

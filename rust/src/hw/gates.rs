@@ -1,0 +1,359 @@
+//! NAND2-normalized gate model of the datapath component library.
+//!
+//! Counts are split into the same four categories the paper's Genus
+//! "report gates" figures plot: **sequential** (flip-flops), **inverter**,
+//! **buffer**, and **logic** (everything combinational that is not an
+//! inverter/buffer).  Each component also carries a default switching
+//! activity (fraction of its gates that toggle in an active cycle) used by
+//! the power model when no simulator-measured activity is available, and a
+//! combinational depth estimate consumed by the timing model.
+
+use std::ops::{Add, AddAssign, Mul};
+
+/// NAND2-equivalent gate counts by category (fractional counts are fine —
+/// they model average cell sizes).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GateBreakdown {
+    pub sequential: f64,
+    pub inverter: f64,
+    pub buffer: f64,
+    pub logic: f64,
+}
+
+impl GateBreakdown {
+    pub fn total(&self) -> f64 {
+        self.sequential + self.inverter + self.buffer + self.logic
+    }
+
+    /// Scale only the combinational part (timing-pressure upsizing leaves
+    /// the FF count unchanged but upsizes/buffers the logic cones).
+    pub fn scale_combinational(&self, k: f64) -> GateBreakdown {
+        GateBreakdown {
+            sequential: self.sequential,
+            inverter: self.inverter * k,
+            buffer: self.buffer * k,
+            logic: self.logic * k,
+        }
+    }
+}
+
+impl Add for GateBreakdown {
+    type Output = GateBreakdown;
+    fn add(self, o: GateBreakdown) -> GateBreakdown {
+        GateBreakdown {
+            sequential: self.sequential + o.sequential,
+            inverter: self.inverter + o.inverter,
+            buffer: self.buffer + o.buffer,
+            logic: self.logic + o.logic,
+        }
+    }
+}
+
+impl AddAssign for GateBreakdown {
+    fn add_assign(&mut self, o: GateBreakdown) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<f64> for GateBreakdown {
+    type Output = GateBreakdown;
+    fn mul(self, k: f64) -> GateBreakdown {
+        GateBreakdown {
+            sequential: self.sequential * k,
+            inverter: self.inverter * k,
+            buffer: self.buffer * k,
+            logic: self.logic * k,
+        }
+    }
+}
+
+/// A sized instance of a library component.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: String,
+    pub gates: GateBreakdown,
+    /// Default fraction of gates toggling in an active cycle.
+    pub activity: f64,
+    /// Combinational depth in NAND2 levels (0 for pure storage).
+    pub depth_levels: f64,
+    /// Fanout sinks on the widest internal net (drives wire-delay estimates).
+    pub max_fanout: f64,
+}
+
+impl Component {
+    fn new(name: impl Into<String>, gates: GateBreakdown, activity: f64, depth: f64, fanout: f64) -> Self {
+        Component { name: name.into(), gates, activity, depth_levels: depth, max_fanout: fanout }
+    }
+}
+
+// Per-bit cost constants (NAND2 equivalents), representative of standard
+// cell mappings:  DFF ≈ 6 gates; full adder ≈ 5 gates; 2:1 mux ≈ 3 gates;
+// AND2 ≈ 1.5 gates; XOR2 ≈ 3 gates.
+const DFF: f64 = 6.0;
+const FA: f64 = 5.0;
+const MUX2: f64 = 3.0;
+const AND2: f64 = 1.5;
+
+/// Fraction of combinational logic that synthesis maps to inverters/buffers
+/// (drive shaping).  Multiplier cones are buffer-heavier than small adders.
+const INV_FRAC: f64 = 0.14;
+const BUF_FRAC: f64 = 0.10;
+
+fn comb(name: &str, logic: f64, activity: f64, depth: f64, fanout: f64) -> Component {
+    Component::new(
+        name,
+        GateBreakdown {
+            sequential: 0.0,
+            inverter: logic * INV_FRAC,
+            buffer: logic * BUF_FRAC,
+            logic,
+        },
+        activity,
+        depth,
+        fanout,
+    )
+}
+
+/// A `width`-bit D flip-flop register (with clock buffering).
+pub fn register(width: u32) -> Component {
+    let w = width as f64;
+    Component::new(
+        format!("reg{width}"),
+        GateBreakdown {
+            sequential: DFF * w,
+            inverter: 0.4 * w, // local clock inverters
+            buffer: 0.25 * w,  // clock buffers
+            logic: 0.0,
+        },
+        0.15, // data toggle default; clock power handled separately
+        0.0,
+        2.0,
+    )
+}
+
+/// A register with a write-enable gate per bit.
+pub fn register_en(width: u32) -> Component {
+    let mut c = register(width);
+    c.name = format!("reg_en{width}");
+    c.gates.logic += MUX2 * width as f64; // enable recirculation mux
+    c
+}
+
+/// Ripple-carry adder (area-efficient; used at relaxed clocks).
+pub fn adder_rca(width: u32) -> Component {
+    let w = width as f64;
+    comb(&format!("rca{width}"), FA * w, 0.20, 2.0 * w, 3.0)
+}
+
+/// Carry-lookahead/parallel-prefix adder (speed; ~40% more area, log depth).
+pub fn adder_cla(width: u32) -> Component {
+    let w = width as f64;
+    comb(
+        &format!("cla{width}"),
+        FA * w * 1.4,
+        0.22,
+        4.0 + 2.0 * (w.max(2.0)).log2(),
+        4.0,
+    )
+}
+
+/// Pick the adder style that meets `levels_budget` NAND2 levels.
+pub fn adder_for_budget(width: u32, levels_budget: f64) -> Component {
+    let rca = adder_rca(width);
+    if rca.depth_levels <= levels_budget {
+        rca
+    } else {
+        adder_cla(width)
+    }
+}
+
+/// Array multiplier `a x b` bits: a*b partial-product AND gates plus (a-1)
+/// b-bit carry-save rows and a final CLA — the O(W^2) structure of the
+/// paper's Table 1.
+pub fn multiplier(a: u32, b: u32) -> Component {
+    let (af, bf) = (a as f64, b as f64);
+    let partial = AND2 * af * bf;
+    let rows = FA * bf * (af - 1.0).max(0.0);
+    let final_add = FA * (af + bf) * 1.4;
+    let logic = partial + rows + final_add;
+    // multiplier cones are deep and buffer-heavy
+    let mut c = comb(
+        &format!("mul{a}x{b}"),
+        logic,
+        0.28,
+        2.0 * bf + 4.0 + 2.0 * (af + bf).log2(),
+        6.0,
+    );
+    c.gates.buffer = logic * (BUF_FRAC + 0.06);
+    c.gates.inverter = logic * (INV_FRAC + 0.04);
+    c
+}
+
+/// `n`:1 mux, `width` bits wide (tree of 2:1 muxes).
+pub fn mux(n: usize, width: u32) -> Component {
+    assert!(n >= 1);
+    let w = width as f64;
+    let two_to_one = (n.saturating_sub(1)) as f64;
+    comb(
+        &format!("mux{n}x{width}"),
+        MUX2 * w * two_to_one,
+        0.15,
+        2.0 * (n.max(2) as f64).log2(),
+        2.0,
+    )
+}
+
+/// Binary decoder `bits -> 2^bits` one-hot lines.
+pub fn decoder(bits: u32) -> Component {
+    let outputs = (1usize << bits) as f64;
+    comb(
+        &format!("dec{bits}"),
+        outputs * 1.2 + bits as f64,
+        0.10,
+        2.0 + bits as f64 * 0.5,
+        outputs,
+    )
+}
+
+/// Equality comparator over `bits` (tap index == bin index).
+pub fn comparator(bits: u32) -> Component {
+    let b = bits as f64;
+    comb(&format!("cmp{bits}"), 3.0 * b + 2.0, 0.18, 3.0 + (b.max(2.0)).log2(), 2.0)
+}
+
+/// AND-mask of a `width`-bit value by one select line.
+pub fn and_mask(width: u32) -> Component {
+    comb(&format!("mask{width}"), AND2 * width as f64, 0.18, 1.0, 2.0)
+}
+
+/// Balanced adder tree over `n` inputs of `width` bits (carry-save style:
+/// n-1 adders, widths growing toward the root — approximated at the mean
+/// width `width + log2(n)/2`).
+pub fn adder_tree(n: usize, width: u32) -> Component {
+    if n <= 1 {
+        return comb(&format!("addtree{n}x{width}"), 0.0, 0.0, 0.0, 1.0);
+    }
+    let mean_w = width as f64 + (n as f64).log2() / 2.0;
+    let logic = FA * mean_w * (n as f64 - 1.0) * 1.15; // 1.15: CSA wiring overhead
+    comb(
+        &format!("addtree{n}x{width}"),
+        logic,
+        0.20,
+        (2.0 * (n as f64).log2()) + 4.0 + 2.0 * mean_w.log2(),
+        3.0,
+    )
+}
+
+/// Register file: `entries x width` bits with `read_ports` and
+/// `write_ports`.  Port costs are O(W·B), matching the paper's Table 1
+/// "File Port" row.
+pub fn regfile(entries: usize, width: u32, read_ports: usize, write_ports: usize) -> Component {
+    let storage = register(width).gates * entries as f64;
+    let mut total = storage;
+    for _ in 0..read_ports {
+        total += mux(entries, width).gates;
+    }
+    let wbits = crate::quant::fixed::ceil_log2(entries.max(2));
+    for _ in 0..write_ports {
+        total += decoder(wbits).gates;
+        total += and_mask(width).gates * entries as f64 * 0.5; // per-entry en
+    }
+    Component::new(
+        format!("rf{entries}x{width}r{read_ports}w{write_ports}"),
+        total,
+        0.12,
+        2.0 * (entries.max(2) as f64).log2() + 2.0,
+        entries as f64,
+    )
+}
+
+/// Small control FSM (gray-encoded, as in the paper §4).
+pub fn fsm(states: usize) -> Component {
+    let bits = crate::quant::fixed::ceil_log2(states.max(2)) as f64;
+    let mut c = comb("fsm", 12.0 * bits, 0.20, 6.0, 3.0);
+    c.gates.sequential = DFF * bits;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplier_is_quadratic() {
+        // Table 1: multiplier O(W^2) — quadrupling W should ~16x the gates
+        let m8 = multiplier(8, 8).gates.total();
+        let m32 = multiplier(32, 32).gates.total();
+        let ratio = m32 / m8;
+        assert!(ratio > 10.0 && ratio < 22.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn adder_is_linear() {
+        let a8 = adder_rca(8).gates.total();
+        let a32 = adder_rca(32).gates.total();
+        let ratio = a32 / a8;
+        assert!(ratio > 3.5 && ratio < 4.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn multiplier_dominates_adder() {
+        // the premise of the whole paper
+        for w in [8u32, 16, 32] {
+            assert!(multiplier(w, w).gates.total() > 5.0 * adder_rca(w).gates.total());
+        }
+    }
+
+    #[test]
+    fn regfile_port_cost_scales_with_entries_and_width() {
+        // Table 1: file port O(W·B)
+        let base = regfile(4, 8, 1, 1).gates.total();
+        let more_entries = regfile(16, 8, 1, 1).gates.total();
+        let wider = regfile(4, 32, 1, 1).gates.total();
+        assert!(more_entries > 2.0 * base);
+        assert!(wider > 2.0 * base);
+    }
+
+    #[test]
+    fn cla_faster_but_bigger() {
+        let rca = adder_rca(32);
+        let cla = adder_cla(32);
+        assert!(cla.depth_levels < rca.depth_levels / 3.0);
+        assert!(cla.gates.total() > rca.gates.total());
+    }
+
+    #[test]
+    fn adder_for_budget_picks_style() {
+        // tight budget -> CLA, loose -> RCA
+        assert!(adder_for_budget(32, 20.0).name.starts_with("cla"));
+        assert!(adder_for_budget(32, 100.0).name.starts_with("rca"));
+    }
+
+    #[test]
+    fn breakdown_total_sums() {
+        let c = multiplier(16, 16);
+        let g = c.gates;
+        assert!((g.total() - (g.sequential + g.inverter + g.buffer + g.logic)).abs() < 1e-9);
+        assert_eq!(g.sequential, 0.0);
+    }
+
+    #[test]
+    fn scale_combinational_keeps_ffs() {
+        let c = register_en(8);
+        let scaled = c.gates.scale_combinational(2.0);
+        assert_eq!(scaled.sequential, c.gates.sequential);
+        assert!(scaled.logic > c.gates.logic);
+    }
+
+    #[test]
+    fn adder_tree_linear_in_inputs() {
+        let t16 = adder_tree(16, 32).gates.total();
+        let t64 = adder_tree(64, 32).gates.total();
+        assert!(t64 / t16 > 3.5 && t64 / t16 < 4.6);
+    }
+
+    #[test]
+    fn mux_grows_with_inputs() {
+        assert!(mux(16, 32).gates.total() > 3.0 * mux(4, 32).gates.total());
+    }
+}

@@ -1,0 +1,30 @@
+//! ASIC hardware cost models: gates, area, timing, power.
+//!
+//! The paper evaluates synthesized netlists (Cadence Genus, OSU FreePDK45)
+//! and reports NAND2-normalized gate counts split into *sequential /
+//! inverter / buffer / logic* categories, plus leakage/dynamic power.  We
+//! reproduce those reports with a **structural model** (DESIGN.md §1):
+//!
+//! * [`gates`] — a component library (adders, array multipliers, registers,
+//!   register files, muxes, comparators, adder trees) in NAND2X1
+//!   equivalents with the same category breakdown the paper plots.
+//! * [`tech`] — FreePDK45-class constants: gate energy, leakage, delays.
+//! * [`timing`] — critical-path estimates and the *timing-pressure area
+//!   elasticity* that models synthesis upsizing logic to meet an aggressive
+//!   clock (the mechanism behind the paper's Fig 17: at 1 GHz / 16 bins the
+//!   PAS read-modify-write recurrence no longer fits the period cheaply).
+//! * [`power`] — leakage + activity-based dynamic power; activity factors
+//!   come from the cycle-accurate simulator's toggle counters when
+//!   available, falling back to per-component defaults.
+
+pub mod gates;
+pub mod memenergy;
+pub mod power;
+pub mod sram;
+pub mod tech;
+pub mod timing;
+
+pub use gates::{Component, GateBreakdown};
+pub use power::{PowerBreakdown, PowerModel};
+pub use tech::Tech;
+pub use timing::{timing_area_factor, PathDelay};

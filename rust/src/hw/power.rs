@@ -1,0 +1,167 @@
+//! Power model: leakage + activity-weighted dynamic power.
+//!
+//! Mirrors the quantities the paper reports from Genus "report power":
+//! **leakage**, **dynamic** and **total**, per design.  Dynamic power is
+//! `Σ_component gates · α · E_toggle · f` plus the clock tree
+//! (`sequential_bits · E_clk · f`); activity factors `α` default to the
+//! component library's estimates and can be overridden with measured toggle
+//! rates from the cycle-accurate simulator (`sim::activity`).
+
+use crate::hw::gates::{Component, GateBreakdown};
+use crate::hw::tech::Tech;
+
+/// Power report for one design (Watts).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PowerBreakdown {
+    pub leakage_w: f64,
+    pub dynamic_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.leakage_w + self.dynamic_w
+    }
+}
+
+/// A design is a bag of components, each possibly carrying a measured
+/// activity override and a timing-derived area factor.
+#[derive(Clone, Debug, Default)]
+pub struct PowerModel {
+    entries: Vec<Entry>,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    gates: GateBreakdown,
+    activity: f64,
+    /// Duty cycle: fraction of cycles this component is active at all.
+    duty: f64,
+}
+
+impl PowerModel {
+    pub fn new() -> Self {
+        PowerModel { entries: Vec::new() }
+    }
+
+    /// Add a component with its default activity, full duty.
+    pub fn add(&mut self, c: &Component) -> &mut Self {
+        self.add_scaled(c, c.activity, 1.0, 1.0)
+    }
+
+    /// Add a component with overrides: measured `activity`, `duty` cycle
+    /// fraction, and timing `area_factor` on its combinational gates.
+    pub fn add_scaled(
+        &mut self,
+        c: &Component,
+        activity: f64,
+        duty: f64,
+        area_factor: f64,
+    ) -> &mut Self {
+        assert!((0.0..=1.0).contains(&activity), "activity out of range");
+        assert!((0.0..=1.0).contains(&duty), "duty out of range");
+        assert!(area_factor >= 1.0);
+        self.entries.push(Entry {
+            gates: c.gates.scale_combinational(area_factor),
+            activity,
+            duty,
+        });
+        self
+    }
+
+    /// Total gate breakdown of the design.
+    pub fn gates(&self) -> GateBreakdown {
+        self.entries
+            .iter()
+            .fold(GateBreakdown::default(), |acc, e| acc + e.gates)
+    }
+
+    /// Evaluate power under a technology target.
+    pub fn power(&self, tech: &Tech) -> PowerBreakdown {
+        let mut leakage = 0.0;
+        let mut dynamic = 0.0;
+        for e in &self.entries {
+            let total_gates = e.gates.total();
+            leakage += total_gates * tech.leakage_per_gate_w;
+            // combinational + data toggling
+            dynamic +=
+                total_gates * e.activity * e.duty * tech.toggle_energy_j * tech.clock_hz;
+            // clock tree burns every cycle regardless of data activity
+            let ff_bits = e.gates.sequential / 6.0; // DFF ≈ 6 NAND2-eq
+            dynamic += ff_bits * tech.clock_energy_per_bit_j * tech.clock_hz;
+        }
+        PowerBreakdown { leakage_w: leakage, dynamic_w: dynamic }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gates::{multiplier, register};
+
+    #[test]
+    fn leakage_scales_with_gates() {
+        let t = Tech::asic_100mhz();
+        let mut small = PowerModel::new();
+        small.add(&multiplier(8, 8));
+        let mut big = PowerModel::new();
+        big.add(&multiplier(32, 32));
+        let ratio = big.power(&t).leakage_w / small.power(&t).leakage_w;
+        assert!(ratio > 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn dynamic_scales_with_frequency() {
+        let mut m = PowerModel::new();
+        m.add(&multiplier(16, 16));
+        let p100 = m.power(&Tech::asic_100mhz());
+        let p1g = m.power(&Tech::asic_1ghz());
+        assert!((p1g.dynamic_w / p100.dynamic_w - 10.0).abs() < 1e-6);
+        assert!((p1g.leakage_w - p100.leakage_w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_duty_cuts_dynamic_not_leakage() {
+        let c = multiplier(16, 16);
+        let mut busy = PowerModel::new();
+        busy.add_scaled(&c, c.activity, 1.0, 1.0);
+        let mut idle = PowerModel::new();
+        idle.add_scaled(&c, c.activity, 0.1, 1.0);
+        let t = Tech::asic_1ghz();
+        assert!(idle.power(&t).dynamic_w < 0.2 * busy.power(&t).dynamic_w);
+        assert_eq!(idle.power(&t).leakage_w, busy.power(&t).leakage_w);
+    }
+
+    #[test]
+    fn clock_tree_burns_on_registers() {
+        let mut m = PowerModel::new();
+        // zero data activity: only the clock tree should show up
+        m.add_scaled(&register(64), 0.0, 1.0, 1.0);
+        let p = m.power(&Tech::asic_1ghz());
+        assert!(p.dynamic_w > 0.0);
+    }
+
+    #[test]
+    fn area_factor_raises_both() {
+        let c = multiplier(16, 16);
+        let mut plain = PowerModel::new();
+        plain.add(&c);
+        let mut pressured = PowerModel::new();
+        pressured.add_scaled(&c, c.activity, 1.0, 2.0);
+        let t = Tech::asic_1ghz();
+        assert!(pressured.power(&t).leakage_w > 1.8 * plain.power(&t).leakage_w);
+        assert!(pressured.power(&t).dynamic_w > 1.8 * plain.power(&t).dynamic_w);
+        assert!(pressured.gates().total() > 1.8 * plain.gates().total());
+    }
+
+    #[test]
+    fn magnitudes_sane() {
+        // 16 parallel 32-bit MACs at 100 MHz should land in the mW range
+        let mut m = PowerModel::new();
+        for _ in 0..16 {
+            m.add(&multiplier(32, 32));
+            m.add(&register(74));
+        }
+        let p = m.power(&Tech::asic_100mhz());
+        assert!(p.total_w() > 1e-4 && p.total_w() < 1.0, "total {}", p.total_w());
+    }
+}

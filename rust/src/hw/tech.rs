@@ -1,0 +1,96 @@
+//! Technology constants: FreePDK45-class 45 nm standard cells.
+//!
+//! Values are representative of published FreePDK45 characterizations
+//! (NAND2X1 at VDD = 1.1 V, typical corner).  The paper's claims are all
+//! *relative* (PASM vs MAC ratios), which a consistent constant set
+//! preserves; absolute magnitudes land in the right order (mW at 100 MHz-
+//! 1 GHz for 10^4-10^6 gate designs).
+
+/// A synthesis target: process constants + clock.
+#[derive(Clone, Copy, Debug)]
+pub struct Tech {
+    /// Clock frequency in Hz.
+    pub clock_hz: f64,
+    /// Energy per NAND2-equivalent gate output toggle (J).
+    pub toggle_energy_j: f64,
+    /// Clock-tree + internal clocking energy per sequential bit per cycle (J).
+    pub clock_energy_per_bit_j: f64,
+    /// Leakage power per NAND2-equivalent gate (W).
+    pub leakage_per_gate_w: f64,
+    /// Propagation delay of one NAND2X1 (s) under typical load.
+    pub gate_delay_s: f64,
+    /// Flip-flop clk->Q plus setup overhead (s).
+    pub ff_overhead_s: f64,
+    /// Extra wire/fanout delay per driven sink on a high-fanout net (s).
+    pub fanout_delay_per_sink_s: f64,
+}
+
+impl Tech {
+    /// The paper's standalone-unit experiments: 45 nm ASIC at 100 MHz (§2.4).
+    pub fn asic_100mhz() -> Tech {
+        Tech { clock_hz: 100e6, ..Tech::base45() }
+    }
+
+    /// The paper's CNN-accelerator experiments: 45 nm ASIC at 1 GHz (§4).
+    pub fn asic_1ghz() -> Tech {
+        Tech { clock_hz: 1e9, ..Tech::base45() }
+    }
+
+    /// A relaxed target the paper suggests for 16-bin PASM ("it might be
+    /// better to target a lower clock frequency, for example 800MHz").
+    pub fn asic_800mhz() -> Tech {
+        Tech { clock_hz: 800e6, ..Tech::base45() }
+    }
+
+    /// The paper's FPGA clock (§5.2: Zynq at 200 MHz).  Only the clock
+    /// matters on this path — the FPGA resource/power model has its own
+    /// per-resource constants (`crate::fpga`); the 45 nm delay constants
+    /// are used solely for pipeline-stage decisions, which are relaxed at
+    /// 5 ns anyway.
+    pub fn fpga_200mhz() -> Tech {
+        Tech { clock_hz: 200e6, ..Tech::base45() }
+    }
+
+    fn base45() -> Tech {
+        Tech {
+            clock_hz: 1e9,
+            toggle_energy_j: 1.2e-15,          // ~1.2 fJ per gate toggle
+            clock_energy_per_bit_j: 2.0e-15,   // clock tree + FF internal
+            leakage_per_gate_w: 2.5e-8,        // ~25 nW per NAND2-eq
+            gate_delay_s: 2.2e-11,             // ~22 ps NAND2X1
+            ff_overhead_s: 1.5e-10,            // ~150 ps clk->Q + setup
+            fanout_delay_per_sink_s: 6.0e-12,  // ~6 ps per extra sink
+        }
+    }
+
+    /// Clock period in seconds.
+    pub fn period_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// Clock period in nanoseconds.
+    pub fn period_ns(&self) -> f64 {
+        self.period_s() * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periods() {
+        assert!((Tech::asic_1ghz().period_ns() - 1.0).abs() < 1e-12);
+        assert!((Tech::asic_100mhz().period_ns() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constants_ordered_sanely() {
+        let t = Tech::asic_1ghz();
+        // a 32-gate chain of NAND2 should not fit in a 1 GHz cycle together
+        // with FF overhead + margin (forces CLA adders at 1 GHz)
+        assert!(32.0 * t.gate_delay_s + t.ff_overhead_s > 0.8 * t.period_s());
+        // but easily fits at 100 MHz
+        assert!(32.0 * t.gate_delay_s + t.ff_overhead_s < 0.2 * Tech::asic_100mhz().period_s());
+    }
+}

@@ -1,0 +1,145 @@
+//! Critical-path delay estimation and timing-pressure area elasticity.
+//!
+//! Synthesis at an aggressive clock (the paper's 1 GHz) upsizes cells,
+//! inserts buffers and duplicates logic to close timing — area and power
+//! grow super-linearly as the natural path delay approaches the period.
+//! This is the mechanism behind the paper's Fig 17 result (16-bin, 32-bit
+//! PASM loses at 1 GHz): the PAS read-modify-write recurrence
+//! (bin-select mux → accumulator add → write-back across B sinks) is a
+//! loop-carried dependency that cannot be pipelined, so its delay must fit
+//! one period, and its fanout grows with B.
+//!
+//! The elasticity curve is calibrated once against the paper's conv-accel
+//! series (4/8/16-bin, §5.1) and then reused unchanged for every other
+//! experiment.
+
+use crate::hw::gates::Component;
+use crate::hw::tech::Tech;
+
+/// A combinational path: accumulated levels + fanout sinks + FF endpoints.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PathDelay {
+    pub levels: f64,
+    pub fanout_sinks: f64,
+    /// Number of register boundaries crossed (usually 1: reg -> logic -> reg).
+    pub ff_stages: f64,
+}
+
+impl PathDelay {
+    pub fn new() -> Self {
+        PathDelay { levels: 0.0, fanout_sinks: 0.0, ff_stages: 1.0 }
+    }
+
+    /// Chain a component onto the path.
+    pub fn through(mut self, c: &Component) -> Self {
+        self.levels += c.depth_levels;
+        self.fanout_sinks += c.max_fanout;
+        self
+    }
+
+    /// Add raw levels (wire stubs, control gating).
+    pub fn plus_levels(mut self, levels: f64) -> Self {
+        self.levels += levels;
+        self
+    }
+
+    /// Add a high-fanout broadcast to `sinks` loads.
+    pub fn broadcast(mut self, sinks: f64) -> Self {
+        self.fanout_sinks += sinks;
+        self
+    }
+
+    /// Path delay in seconds under `tech`.
+    pub fn delay_s(&self, tech: &Tech) -> f64 {
+        self.levels * tech.gate_delay_s
+            + self.fanout_sinks * tech.fanout_delay_per_sink_s
+            + self.ff_stages * tech.ff_overhead_s
+    }
+
+    /// Delay as a fraction of the clock period (>1 = timing violation
+    /// before upsizing).
+    pub fn utilization(&self, tech: &Tech) -> f64 {
+        self.delay_s(tech) / tech.period_s()
+    }
+}
+
+/// Area multiplier applied to the combinational gates on a path to model
+/// synthesis closing timing.
+///
+/// * `u <= 0.6` — relaxed: tools *downsize* slightly (min-area recovery);
+///   we keep the factor at 1.0 to stay conservative.
+/// * `0.6 < u <= 1.0` — quadratic upsizing as slack evaporates.
+/// * `u > 1.0` — the natural netlist violates timing; logic duplication,
+///   speculative/carry-select structures and buffer trees grow area
+///   steeply (and the tool may still fail — we model the cost, as Genus
+///   does when it "increases the area ... to meet timing", §5.1).
+pub fn timing_area_factor(utilization: f64) -> f64 {
+    const KNEE: f64 = 0.6;
+    const QUAD: f64 = 1.8; // growth inside the period
+    const OVER: f64 = 3.5; // growth past the period
+    if utilization <= KNEE {
+        1.0
+    } else if utilization <= 1.0 {
+        let x = (utilization - KNEE) / (1.0 - KNEE);
+        1.0 + QUAD * x * x
+    } else {
+        1.0 + QUAD + OVER * (utilization - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::gates::{adder_cla, adder_rca, multiplier, mux};
+
+    #[test]
+    fn factor_monotone_and_continuous() {
+        let mut prev = 0.0;
+        for i in 0..200 {
+            let u = i as f64 * 0.01;
+            let f = timing_area_factor(u);
+            assert!(f >= prev, "not monotone at u={u}");
+            prev = f;
+        }
+        // continuity at the knees
+        assert!((timing_area_factor(0.6) - 1.0).abs() < 1e-9);
+        let below = timing_area_factor(0.9999);
+        let above = timing_area_factor(1.0001);
+        assert!((above - below).abs() < 0.01);
+    }
+
+    #[test]
+    fn relaxed_clock_no_penalty() {
+        let t = Tech::asic_100mhz();
+        // a full 32x32 multiply path fits easily in 10 ns
+        let p = PathDelay::new().through(&multiplier(32, 32));
+        assert!(p.utilization(&t) < 0.6, "u = {}", p.utilization(&t));
+        assert_eq!(timing_area_factor(p.utilization(&t)), 1.0);
+    }
+
+    #[test]
+    fn rca32_violates_1ghz() {
+        let t = Tech::asic_1ghz();
+        let p = PathDelay::new().through(&adder_rca(32));
+        assert!(p.utilization(&t) > 1.0, "u = {}", p.utilization(&t));
+        // ...but a CLA fits
+        let p2 = PathDelay::new().through(&adder_cla(32));
+        assert!(p2.utilization(&t) < 1.0, "u = {}", p2.utilization(&t));
+    }
+
+    #[test]
+    fn fanout_pressure_grows_with_bins() {
+        let t = Tech::asic_1ghz();
+        let path_b = |bins: usize| {
+            PathDelay::new()
+                .through(&mux(bins, 42))
+                .through(&adder_cla(42))
+                .broadcast(bins as f64 * 42.0 * 0.25)
+        };
+        let u4 = path_b(4).utilization(&t);
+        let u16 = path_b(16).utilization(&t);
+        let u64 = path_b(64).utilization(&t);
+        assert!(u4 < u16 && u16 < u64);
+        assert!(timing_area_factor(u64) > timing_area_factor(u4));
+    }
+}

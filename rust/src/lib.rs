@@ -1,0 +1,52 @@
+//! # pasm-accel
+//!
+//! Production-quality reproduction of *"Low Complexity Multiply-Accumulate
+//! Units for Convolutional Neural Networks with Weight-Sharing"*
+//! (James Garland & David Gregg, 2018).
+//!
+//! The paper re-architects the multiply-accumulate (MAC) unit of a
+//! weight-shared CNN accelerator into **PASM**: a bank of *parallel
+//! accumulate-and-store* (PAS) units that scatter image values into `B`
+//! dictionary-index bins, followed by a shared post-pass MAC that contracts
+//! the bins with the codebook.  For `B ≪ C·KX·KY` this removes the per-tap
+//! multiplier — the dominant area/power cost — at a small latency cost.
+//!
+//! This crate provides the full system around that idea:
+//!
+//! * [`tensor`] — minimal row-major NdArray substrate (no external deps).
+//! * [`quant`] — fixed-point arithmetic and K-means weight sharing
+//!   (deep-compression style codebooks).
+//! * [`cnn`] — bit-exact functional implementations of the three
+//!   accelerator dataflows (direct / weight-shared / PASM) plus a tiny
+//!   trainable CNN used by the end-to-end example.
+//! * [`hw`] — structural gate, area and power models for a 45 nm ASIC
+//!   (NAND2-normalized, FreePDK45-class constants).
+//! * [`fpga`] — DSP/BRAM/LUT/FF resource mapping for Zynq-7000 parts.
+//! * [`sim`] — cycle-accurate simulator of the MAC / WS-MAC / PAS units and
+//!   of whole accelerators, with toggle counting that feeds the power model.
+//! * [`accel`] — accelerator variant builder (standalone 16-MAC vs
+//!   16-PAS-4-MAC units, full conv-layer accelerators, HLS directive knobs).
+//! * [`runtime`] — PJRT CPU client that loads the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them on the request
+//!   path (python never runs at inference time).
+//! * [`coordinator`] — tokio-based inference coordinator: request queue,
+//!   dynamic batcher, per-layer scheduler, metrics.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+//!
+//! See `DESIGN.md` for the experiment index and substitution map, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod accel;
+pub mod cnn;
+pub mod coordinator;
+pub mod fpga;
+pub mod hw;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

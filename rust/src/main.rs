@@ -1,0 +1,259 @@
+//! `repro` — CLI for the pasm-accel reproduction.
+//!
+//! ```text
+//! repro report <id>|all          regenerate paper tables/figures
+//! repro simulate [--bins B] [--width W] [--variant ws|pasm] [--seed N]
+//! repro serve [--requests N] [--artifacts DIR]
+//! repro sweep [--target asic|fpga]
+//! repro list                     list report ids
+//! ```
+//!
+//! (clap is unavailable in the offline build; arguments are parsed by
+//! hand — flags are `--key value` pairs.)
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
+use pasm_accel::cnn::conv::FxConvInputs;
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::hw::Tech;
+use pasm_accel::quant::codebook::encode_weights;
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::report::{all_report_ids, run_report};
+use pasm_accel::sim::simulate_conv;
+use pasm_accel::tensor::Tensor;
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{}", USAGE);
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "report" => cmd_report(&args),
+        "simulate" => cmd_simulate(&flags),
+        "serve" => cmd_serve(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "list" => {
+            for id in all_report_ids() {
+                println!("{id}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "usage: repro <report <id>|all> | simulate | serve | sweep | list
+  report all | report fig15      regenerate paper exhibits
+  simulate --variant pasm --bins 16 --width 32 --seed 1
+  serve --requests 64 --artifacts artifacts
+  sweep --target asic|fpga";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), String::from("true"));
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_report(args: &[String]) -> anyhow::Result<()> {
+    let csv = args.iter().any(|a| a == "--csv");
+    let id = args.get(1).map(String::as_str).unwrap_or("all");
+    let emit = |r: &pasm_accel::report::Report| {
+        if csv {
+            print!("{}", pasm_accel::report::csv::to_csv(r));
+        } else {
+            println!("{}", r.render());
+        }
+    };
+    if id == "all" {
+        for rid in all_report_ids() {
+            emit(&run_report(rid).unwrap());
+        }
+        return Ok(());
+    }
+    match run_report(id) {
+        Some(r) => {
+            emit(&r);
+            Ok(())
+        }
+        None => Err(anyhow::anyhow!(
+            "unknown report '{id}' (try: {})",
+            all_report_ids().join(", ")
+        )),
+    }
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let bins: usize = flag(flags, "bins", 16);
+    let width: u32 = flag(flags, "width", 32);
+    let seed: u64 = flag(flags, "seed", 1);
+    let variant = match flags.get("variant").map(String::as_str).unwrap_or("pasm") {
+        "ws" => ConvVariantKind::WeightShared,
+        "direct" => ConvVariantKind::Direct,
+        _ => ConvVariantKind::Pasm,
+    };
+
+    let mut rng = Rng::new(seed);
+    let image = Tensor::from_fn(&[15, 5, 5], |_| rng.signed() * 4.0);
+    let w = Tensor::from_fn(&[2, 15, 3, 3], |_| rng.signed());
+    let wq = match width {
+        8 => QFormat::W8,
+        16 => QFormat::W16,
+        _ => QFormat::W32,
+    };
+    let enc = encode_weights(&w, bins, wq);
+    let inputs = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1);
+    let accel = ConvAccel::paper(variant, bins, width);
+    let sim = simulate_conv(&accel, &inputs);
+    let tech = Tech::asic_1ghz();
+
+    println!("variant: {variant:?}  bins: {bins}  weight width: {width}");
+    println!("cycles: {} (analytical {})", sim.cycles, accel.latency_cycles());
+    println!("gates:  {:.0} NAND2", accel.gates(&tech).total());
+    let p = accel.power(&tech);
+    println!(
+        "power:  {:.2} mW total ({:.2} leak + {:.2} dyn) @1GHz",
+        p.total_w() * 1e3,
+        p.leakage_w * 1e3,
+        p.dynamic_w * 1e3
+    );
+    for (name, act) in &sim.activity.probes {
+        println!("activity {name}: {act:.4}");
+    }
+    println!("out[0..4]: {:?}", &sim.out.data()[..4.min(sim.out.len())]);
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let n: usize = flag(flags, "requests", 64);
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let bins: usize = flag(flags, "bins", 16);
+
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(7);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
+    let coord = Coordinator::start(&dir, enc, BatchPolicy::default())?;
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = pasm_accel::cnn::data::render_digit(&mut rng, i % 10, 0.05);
+        rxs.push(coord.submit(img)?);
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "served {ok}/{n} requests in {dt:?} ({:.1} req/s)",
+        n as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "batches: {} (mean occupancy {:.1}, padding {:.1}%)",
+        m.batches,
+        m.mean_occupancy(),
+        m.padding_fraction() * 100.0
+    );
+    for p in [50.0, 90.0, 99.0] {
+        if let Some(us) = m.percentile_us(p) {
+            println!("p{p:.0} latency: {us} us");
+        }
+    }
+    println!(
+        "simulated accelerator: {} cycles, {:.3} uJ total",
+        m.sim_cycles,
+        m.sim_energy_j * 1e6
+    );
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let target = flags.get("target").map(String::as_str).unwrap_or("asic");
+    match target {
+        "fpga" => {
+            let dev = pasm_accel::fpga::Device::xc7z045();
+            println!("FPGA sweep on {} @200MHz", dev.name);
+            println!("{:<24} {:>6} {:>8} {:>10} {:>12}", "config", "DSP", "BRAM", "LUT", "power");
+            for bins in [4usize, 8, 16] {
+                for ww in [8u32, 32] {
+                    for variant in [ConvVariantKind::WeightShared, ConvVariantKind::Pasm] {
+                        let d =
+                            pasm_accel::fpga::map_conv_accel(&ConvAccel::paper(variant, bins, ww));
+                        let p = pasm_accel::fpga::fpga_power(&d, &dev);
+                        println!(
+                            "{:<24} {:>6} {:>8} {:>10} {:>11.0}mW",
+                            format!("{variant:?}/{ww}b/{bins}bin"),
+                            d.util.dsp,
+                            d.util.bram18,
+                            d.util.luts,
+                            p.total_w() * 1e3
+                        );
+                    }
+                }
+            }
+        }
+        _ => {
+            let tech = Tech::asic_1ghz();
+            println!("ASIC sweep @1GHz (paper tile)");
+            println!("{:<24} {:>12} {:>12} {:>10}", "config", "gates", "power", "latency");
+            for bins in [4usize, 8, 16] {
+                for ww in [8u32, 32] {
+                    for variant in [ConvVariantKind::WeightShared, ConvVariantKind::Pasm] {
+                        let a = ConvAccel::paper(variant, bins, ww);
+                        println!(
+                            "{:<24} {:>12.0} {:>10.2}mW {:>10}",
+                            format!("{variant:?}/{ww}b/{bins}bin"),
+                            a.gates(&tech).total(),
+                            a.power(&tech).total_w() * 1e3,
+                            a.latency_cycles()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Dictionary encoding of weight tensors (the paper's "weight sharing").
+//!
+//! A trained `[M, C, KY, KX]` weight tensor becomes a `B`-entry [`Codebook`]
+//! plus a same-shaped tensor of bin indices.  The fixed-point view
+//! (`raw_codebook`) is what the hardware register file holds and what the
+//! cycle-accurate simulator multiplies with.
+
+use crate::quant::fixed::QFormat;
+use crate::quant::kmeans::kmeans_1d;
+use crate::tensor::Tensor;
+
+/// A shared-weight dictionary: `B` float centroids and their fixed-point
+/// encoding in the weight format `wq`.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    /// Centroid values (positional identity — index b is "bin b").
+    pub values: Vec<f32>,
+    /// Weight fixed-point format (the paper sweeps W = 8/16/32).
+    pub wq: QFormat,
+}
+
+impl Codebook {
+    pub fn new(values: Vec<f32>, wq: QFormat) -> Self {
+        assert!(!values.is_empty());
+        Codebook { values, wq }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Bits needed for a bin index: `WCI = ceil(log2(B))` (paper §2.4).
+    pub fn index_bits(&self) -> u32 {
+        crate::quant::fixed::ceil_log2(self.bins()).max(1)
+    }
+
+    /// Fixed-point raw codebook entries (what the register file stores).
+    pub fn raw(&self) -> Vec<i64> {
+        self.values.iter().map(|&v| self.wq.encode(v as f64)).collect()
+    }
+
+    /// Dictionary-decoded float value of bin `b` *after* fixed-point
+    /// rounding — the value the hardware actually multiplies with.
+    pub fn decoded(&self, b: usize) -> f64 {
+        self.wq.decode(self.raw()[b])
+    }
+}
+
+/// A weight tensor in dictionary-encoded form.
+#[derive(Clone, Debug)]
+pub struct EncodedWeights {
+    pub codebook: Codebook,
+    /// Bin index per weight, same shape as the original tensor.
+    pub bin_idx: Tensor<u16>,
+    /// K-means reconstruction MSE (before fixed-point rounding).
+    pub mse: f64,
+}
+
+impl EncodedWeights {
+    /// Decode back to a float tensor (`codebook[bin_idx]`) — the weights the
+    /// weight-shared accelerator effectively computes with.
+    pub fn decode(&self) -> Tensor<f32> {
+        let cb = &self.codebook.values;
+        self.bin_idx.map(|b| cb[b as usize])
+    }
+
+    /// Decode to the fixed-point-rounded float weights (hardware numerics).
+    pub fn decode_fx(&self) -> Tensor<f32> {
+        let raw = self.codebook.raw();
+        let wq = self.codebook.wq;
+        self.bin_idx.map(|b| wq.decode(raw[b as usize]) as f32)
+    }
+
+    /// Bin occupancy histogram — feeds the activity model (bins that never
+    /// occur contribute no PAS accumulator toggling).
+    pub fn occupancy(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.codebook.bins()];
+        for &b in self.bin_idx.data() {
+            h[b as usize] += 1;
+        }
+        h
+    }
+
+    /// Compression ratio of the index stream vs dense W-bit weights
+    /// (ignoring the B-entry codebook itself, as the paper does for large
+    /// layers): `W / WCI`.
+    pub fn index_compression(&self) -> f64 {
+        self.codebook.wq.width as f64 / self.codebook.index_bits() as f64
+    }
+}
+
+/// K-means-encode a weight tensor into `bins` shared values.
+pub fn encode_weights(weights: &Tensor<f32>, bins: usize, wq: QFormat) -> EncodedWeights {
+    let r = kmeans_1d(weights.data(), bins, 50);
+    let bin_idx = Tensor::from_vec(
+        weights.dims(),
+        r.assignments.clone(),
+    );
+    EncodedWeights {
+        codebook: Codebook::new(r.codebook, wq),
+        bin_idx,
+        mse: r.mse,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_weights() -> Tensor<f32> {
+        // 2x2x2x2 tensor with 4 distinct values -> exactly recoverable at B=4
+        let vals = [0.5f32, -0.5, 1.5, -1.5];
+        Tensor::from_fn(&[2, 2, 2, 2], |i| vals[i % 4])
+    }
+
+    #[test]
+    fn exact_recovery_at_b4() {
+        let w = toy_weights();
+        let enc = encode_weights(&w, 4, QFormat::W32);
+        let dec = enc.decode();
+        assert!(w.max_abs_diff(&dec) < 1e-6);
+        assert!(enc.mse < 1e-12);
+    }
+
+    #[test]
+    fn index_bits_matches_paper() {
+        // paper §2.4: 2^2 bits for 4 weights up to 2^4 bits for 16 weights
+        for (bins, want) in [(4usize, 2u32), (8, 3), (16, 4), (256, 8)] {
+            let cb = Codebook::new(vec![0.0; bins], QFormat::W32);
+            assert_eq!(cb.index_bits(), want);
+        }
+    }
+
+    #[test]
+    fn occupancy_sums_to_len() {
+        let w = toy_weights();
+        let enc = encode_weights(&w, 4, QFormat::W32);
+        assert_eq!(enc.occupancy().iter().sum::<usize>(), w.len());
+    }
+
+    #[test]
+    fn fx_decode_rounds_to_format() {
+        let w = Tensor::from_vec(&[2], vec![0.3f32, -0.7]);
+        let enc = encode_weights(&w, 2, QFormat::W8);
+        let dec = enc.decode_fx();
+        for &v in dec.data() {
+            // every decoded value is a multiple of the ulp
+            let ulp = QFormat::W8.ulp() as f32;
+            assert!((v / ulp - (v / ulp).round()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let w = toy_weights();
+        let enc = encode_weights(&w, 16, QFormat::W32);
+        assert!((enc.index_compression() - 8.0).abs() < 1e-9); // 32 / 4
+    }
+}

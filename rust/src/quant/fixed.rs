@@ -1,0 +1,181 @@
+//! Signed fixed-point formats with explicit bit widths.
+//!
+//! The gate/power models cost a datapath by its width `W`; this module is
+//! the *numerics* of that same datapath: values are stored as `i64` holding
+//! a W-bit two's-complement integer scaled by `2^-frac`.  A `W x W` multiply
+//! produces `2W` bits and the accumulators are sized
+//! `2W + ceil(log2(taps))` — the simulator asserts no silent overflow, the
+//! same discipline an RTL designer applies when sizing the PAS bins.
+
+/// A signed fixed-point format: `width` total bits (incl. sign), `frac`
+/// fractional bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    pub width: u32,
+    pub frac: u32,
+}
+
+impl QFormat {
+    pub const fn new(width: u32, frac: u32) -> Self {
+        assert!(width >= 2 && width <= 32, "supported widths: 2..=32");
+        assert!(frac < width);
+        QFormat { width, frac }
+    }
+
+    /// The paper's image format: 32-bit int, 16 fractional bits.
+    pub const IMAGE32: QFormat = QFormat::new(32, 16);
+    /// Weight formats swept in the paper (8/16/32-bit kernels).
+    pub const W8: QFormat = QFormat::new(8, 4);
+    pub const W16: QFormat = QFormat::new(16, 8);
+    pub const W32: QFormat = QFormat::new(32, 16);
+
+    /// Scale factor `2^frac`.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac) as f64
+    }
+
+    /// Largest representable raw value.
+    #[inline]
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.width - 1)) - 1
+    }
+
+    /// Smallest representable raw value.
+    #[inline]
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.width - 1))
+    }
+
+    /// Encode an f64 to the nearest representable raw value (saturating).
+    pub fn encode(&self, x: f64) -> i64 {
+        let raw = (x * self.scale()).round() as i64;
+        raw.clamp(self.min_raw(), self.max_raw())
+    }
+
+    /// Decode a raw value back to f64.
+    pub fn decode(&self, raw: i64) -> f64 {
+        raw as f64 / self.scale()
+    }
+
+    /// Quantization step size (1 ulp).
+    pub fn ulp(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Does `raw` fit this format without saturation?
+    pub fn fits(&self, raw: i64) -> bool {
+        raw >= self.min_raw() && raw <= self.max_raw()
+    }
+
+    /// Accumulator width needed for `taps` summands of a `self x other`
+    /// product: `W_a + W_b + ceil(log2(taps))` bits (RTL sizing rule; the
+    /// paper's PAS bins accumulate bare image values so pass
+    /// `other.width = 0` via [`QFormat::acc_width_accumulate_only`]).
+    pub fn acc_width_product(&self, other: &QFormat, taps: usize) -> u32 {
+        self.width + other.width + ceil_log2(taps.max(1))
+    }
+
+    /// Accumulator width for summing `taps` bare values of this format
+    /// (the PAS bin registers: image values only, no product growth).
+    pub fn acc_width_accumulate_only(&self, taps: usize) -> u32 {
+        self.width + ceil_log2(taps.max(1))
+    }
+}
+
+/// ceil(log2(n)) for n >= 1.
+pub fn ceil_log2(n: usize) -> u32 {
+    assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()).min(63)
+}
+
+/// Fixed-point multiply: raw product has `a.frac + b.frac` fractional bits.
+/// Returns the wide (un-narrowed) product — narrowing policy is the
+/// caller's (the simulator keeps products wide through accumulation, as the
+/// paper's accumulator registers do).
+#[inline]
+pub fn fx_mul(a_raw: i64, b_raw: i64) -> i64 {
+    a_raw
+        .checked_mul(b_raw)
+        .expect("fixed-point product overflowed i64 (widths must be <= 32)")
+}
+
+/// Rescale a raw value with `from_frac` fractional bits to `to_frac`
+/// (arithmetic shift, round-to-negative-infinity on narrowing — the
+/// behaviour of a hardware right-shift).
+#[inline]
+pub fn fx_rescale(raw: i64, from_frac: u32, to_frac: u32) -> i64 {
+    if from_frac >= to_frac {
+        raw >> (from_frac - to_frac)
+    } else {
+        raw << (to_frac - from_frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let q = QFormat::new(16, 8);
+        for x in [-1.5, 0.0, 0.25, 3.75, -100.0] {
+            let raw = q.encode(x);
+            assert!((q.decode(raw) - x).abs() <= q.ulp() / 2.0 + 1e-12, "{x}");
+        }
+    }
+
+    #[test]
+    fn encode_saturates() {
+        let q = QFormat::new(8, 4);
+        assert_eq!(q.encode(1e9), q.max_raw());
+        assert_eq!(q.encode(-1e9), q.min_raw());
+        assert_eq!(q.max_raw(), 127);
+        assert_eq!(q.min_raw(), -128);
+    }
+
+    #[test]
+    fn mul_fracs_add() {
+        let a = QFormat::new(16, 8);
+        let b = QFormat::new(16, 8);
+        // 1.5 * 2.5 = 3.75
+        let p = fx_mul(a.encode(1.5), b.encode(2.5));
+        let dec = p as f64 / ((1u64 << (a.frac + b.frac)) as f64);
+        assert!((dec - 3.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescale_shifts() {
+        assert_eq!(fx_rescale(256, 8, 4), 16);
+        assert_eq!(fx_rescale(16, 4, 8), 256);
+        assert_eq!(fx_rescale(-1, 4, 4), -1);
+        // arithmetic shift: round toward -inf
+        assert_eq!(fx_rescale(-3, 1, 0), -2);
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(800), 10);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn acc_widths() {
+        let img = QFormat::IMAGE32;
+        let w = QFormat::W32;
+        // paper's C=32, 5x5 => 800 taps: 32+32+10 = 74 bits of product acc
+        assert_eq!(img.acc_width_product(&w, 800), 74);
+        // PAS bins accumulate bare 32-bit image values: 32+10 = 42 bits
+        assert_eq!(img.acc_width_accumulate_only(800), 42);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mul_overflow_guard() {
+        fx_mul(i64::MAX / 2, 4);
+    }
+}

@@ -1,0 +1,294 @@
+//! Canonical Huffman coding of the dictionary-index stream.
+//!
+//! The paper's §2.1 compression chain (Han et al.'s deep compression) is
+//! pruning → K-means weight sharing → **Huffman coding** of the bin
+//! indices; the combination reaches 35× (AlexNet) / 49× (VGG-16).  Weight
+//! sharing alone gives `W / WCI`; Huffman exploits the skew of the bin
+//! histogram (K-means on a bell-shaped weight distribution leaves the
+//! central bins far more populated).
+//!
+//! Canonical codes: only the code lengths are stored (B entries), the
+//! codebook is reconstructed deterministically — the form a hardware
+//! decoder table would use.
+
+/// A canonical Huffman code over `B` symbols.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// Code length in bits per symbol (0 = symbol never occurs).
+    pub lengths: Vec<u8>,
+    /// Canonical codewords (valid where `lengths > 0`).
+    codes: Vec<u32>,
+}
+
+/// Build a Huffman code from symbol frequencies (length-limited to 32).
+pub fn build(freqs: &[usize]) -> HuffmanCode {
+    let n = freqs.len();
+    assert!(n >= 1, "empty alphabet");
+    let alive: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    let mut lengths = vec![0u8; n];
+
+    match alive.len() {
+        0 => {}
+        1 => lengths[alive[0]] = 1, // degenerate: one symbol still needs a bit
+        _ => {
+            // package-merge-free simple heap Huffman (depths stay << 32 for
+            // realistic bin histograms)
+            #[derive(PartialEq, Eq)]
+            struct Node {
+                weight: usize,
+                id: usize,
+            }
+            impl Ord for Node {
+                fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                    // min-heap via reverse; tie-break on id for determinism
+                    o.weight.cmp(&self.weight).then(o.id.cmp(&self.id))
+                }
+            }
+            impl PartialOrd for Node {
+                fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                    Some(self.cmp(o))
+                }
+            }
+            let mut heap = std::collections::BinaryHeap::new();
+            // tree arena: leaves 0..n, internal nodes appended
+            let mut parent: Vec<usize> = vec![usize::MAX; n];
+            for &i in &alive {
+                heap.push(Node { weight: freqs[i], id: i });
+            }
+            let mut next_id = n;
+            while heap.len() > 1 {
+                let a = heap.pop().unwrap();
+                let b = heap.pop().unwrap();
+                parent.push(usize::MAX);
+                let p = next_id;
+                next_id += 1;
+                if a.id < parent.len() {
+                    parent[a.id] = p;
+                }
+                if b.id < parent.len() {
+                    parent[b.id] = p;
+                }
+                // ensure capacity for ids beyond current len
+                while parent.len() <= a.id.max(b.id) {
+                    parent.push(usize::MAX);
+                }
+                parent[a.id] = p;
+                parent[b.id] = p;
+                heap.push(Node { weight: a.weight + b.weight, id: p });
+            }
+            let root = heap.pop().unwrap().id;
+            for &i in &alive {
+                let mut d = 0u8;
+                let mut cur = i;
+                while cur != root {
+                    cur = parent[cur];
+                    d += 1;
+                }
+                lengths[i] = d.max(1);
+            }
+        }
+    }
+
+    HuffmanCode { codes: canonical_codes(&lengths), lengths }
+}
+
+/// Assign canonical codewords from lengths (shorter codes first, then
+/// symbol order).
+fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
+    let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+    order.sort_by_key(|&i| (lengths[i], i));
+    let mut codes = vec![0u32; lengths.len()];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &i in &order {
+        code <<= lengths[i] - prev_len;
+        codes[i] = code;
+        code += 1;
+        prev_len = lengths[i];
+    }
+    codes
+}
+
+/// A packed bitstream.
+#[derive(Clone, Debug, Default)]
+pub struct BitStream {
+    bytes: Vec<u8>,
+    bits: usize,
+}
+
+impl BitStream {
+    pub fn len_bits(&self) -> usize {
+        self.bits
+    }
+
+    fn push(&mut self, code: u32, len: u8) {
+        for i in (0..len).rev() {
+            let bit = (code >> i) & 1;
+            if self.bits % 8 == 0 {
+                self.bytes.push(0);
+            }
+            if bit == 1 {
+                *self.bytes.last_mut().unwrap() |= 1 << (7 - self.bits % 8);
+            }
+            self.bits += 1;
+        }
+    }
+
+    fn get(&self, pos: usize) -> u32 {
+        ((self.bytes[pos / 8] >> (7 - pos % 8)) & 1) as u32
+    }
+}
+
+impl HuffmanCode {
+    /// Mean code length under the given frequency distribution (bits).
+    pub fn mean_bits(&self, freqs: &[usize]) -> f64 {
+        let total: usize = freqs.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        freqs
+            .iter()
+            .zip(&self.lengths)
+            .map(|(&f, &l)| f as f64 * l as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Encode a symbol stream.
+    pub fn encode(&self, symbols: &[u16]) -> BitStream {
+        let mut bs = BitStream::default();
+        for &s in symbols {
+            let s = s as usize;
+            assert!(self.lengths[s] > 0, "symbol {s} has no code (freq 0)");
+            bs.push(self.codes[s], self.lengths[s]);
+        }
+        bs
+    }
+
+    /// Decode `count` symbols from a bitstream.
+    pub fn decode(&self, bs: &BitStream, count: usize) -> Vec<u16> {
+        // build (length, code) -> symbol lookup
+        let mut table: std::collections::HashMap<(u8, u32), u16> = Default::default();
+        for (i, (&l, &c)) in self.lengths.iter().zip(&self.codes).enumerate() {
+            if l > 0 {
+                table.insert((l, c), i as u16);
+            }
+        }
+        let mut out = Vec::with_capacity(count);
+        let mut pos = 0usize;
+        for _ in 0..count {
+            let mut code = 0u32;
+            let mut len = 0u8;
+            loop {
+                assert!(pos < bs.len_bits(), "bitstream exhausted");
+                code = (code << 1) | bs.get(pos);
+                pos += 1;
+                len += 1;
+                if let Some(&sym) = table.get(&(len, code)) {
+                    out.push(sym);
+                    break;
+                }
+                assert!(len < 33, "code too long / corrupt stream");
+            }
+        }
+        out
+    }
+}
+
+/// Shannon entropy of a frequency histogram (bits/symbol) — the lower
+/// bound Huffman approaches within 1 bit.
+pub fn entropy_bits(freqs: &[usize]) -> f64 {
+    let total: usize = freqs.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    freqs
+        .iter()
+        .filter(|&&f| f > 0)
+        .map(|&f| {
+            let p = f as f64 / total as f64;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_uniform() {
+        let freqs = vec![10usize; 16];
+        let code = build(&freqs);
+        let symbols: Vec<u16> = (0..160).map(|i| (i % 16) as u16).collect();
+        let bs = code.encode(&symbols);
+        assert_eq!(code.decode(&bs, symbols.len()), symbols);
+        // uniform over 16 symbols -> exactly 4 bits each
+        assert!((code.mean_bits(&freqs) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skewed_beats_fixed_width() {
+        // heavily skewed histogram (like K-means bins over gaussian weights)
+        let freqs = vec![1000usize, 500, 250, 120, 60, 30, 20, 10, 4, 2, 1, 1, 1, 1, 1, 1];
+        let code = build(&freqs);
+        let mean = code.mean_bits(&freqs);
+        assert!(mean < 4.0, "mean {mean} should beat the 4-bit fixed code");
+        // and within 1 bit of entropy
+        let h = entropy_bits(&freqs);
+        assert!(mean < h + 1.0, "mean {mean} vs entropy {h}");
+        assert!(mean >= h - 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_skewed_stream() {
+        let freqs = vec![100usize, 50, 10, 5, 2, 1, 1, 1];
+        let code = build(&freqs);
+        let mut symbols = Vec::new();
+        for (s, &f) in freqs.iter().enumerate() {
+            symbols.extend(std::iter::repeat(s as u16).take(f));
+        }
+        let bs = code.encode(&symbols);
+        assert_eq!(code.decode(&bs, symbols.len()), symbols);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let freqs = vec![0usize, 42, 0, 0];
+        let code = build(&freqs);
+        let symbols = vec![1u16; 42];
+        let bs = code.encode(&symbols);
+        assert_eq!(bs.len_bits(), 42); // 1 bit each
+        assert_eq!(code.decode(&bs, 42), symbols);
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let freqs = vec![7usize, 3, 3, 2, 1, 1, 0, 5];
+        let code = build(&freqs);
+        let kraft: f64 = code
+            .lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-12, "kraft {kraft}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn encoding_unseen_symbol_panics() {
+        let freqs = vec![5usize, 0];
+        let code = build(&freqs);
+        code.encode(&[1u16]);
+    }
+
+    #[test]
+    fn deterministic_codes() {
+        let freqs = vec![3usize, 3, 2, 2];
+        let a = build(&freqs);
+        let b = build(&freqs);
+        assert_eq!(a.lengths, b.lengths);
+        assert_eq!(a.codes, b.codes);
+    }
+}

@@ -1,0 +1,180 @@
+//! Lloyd's 1-D K-means — the weight-sharing codebook construction.
+//!
+//! Matches the deep-compression recipe (Han et al. 2015) used by the paper:
+//! cluster the layer's trained weights around `B` centroids, deterministic
+//! quantile initialisation, empty clusters keep their previous centroid so
+//! the codebook always has exactly `B` entries (the hardware register file
+//! is fixed-size regardless of occupancy).
+//!
+//! Independent of (and tested against the same invariants as) the python
+//! implementation in `python/compile/quantize.py`.
+
+/// Result of a K-means run over a flat weight slice.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    /// Centroid values, exactly `bins` entries (unsorted — bin identity is
+    /// positional, as in the hardware dictionary).
+    pub codebook: Vec<f32>,
+    /// Per-input nearest-centroid index, each `< bins`.
+    pub assignments: Vec<u16>,
+    /// Mean squared reconstruction error.
+    pub mse: f64,
+    /// Lloyd iterations actually executed.
+    pub iterations: usize,
+}
+
+/// Deterministic quantile initialisation (density-aware seeding).
+fn quantile_init(sorted: &[f32], bins: usize) -> Vec<f32> {
+    let n = sorted.len();
+    (0..bins)
+        .map(|b| {
+            let q = (b as f64 + 0.5) / bins as f64;
+            let pos = q * (n - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let t = pos - lo as f64;
+            (sorted[lo] as f64 * (1.0 - t) + sorted[hi] as f64 * t) as f32
+        })
+        .collect()
+}
+
+/// Lloyd's K-means on a flat slice. `iters` is an upper bound; the loop
+/// exits early on convergence (no assignment changes).
+pub fn kmeans_1d(data: &[f32], bins: usize, iters: usize) -> KmeansResult {
+    assert!(bins >= 1, "bins must be >= 1");
+    assert!(!data.is_empty(), "kmeans over empty data");
+    assert!(bins <= u16::MAX as usize + 1, "bins must fit u16 indices");
+    assert!(data.iter().all(|x| x.is_finite()), "non-finite weight");
+
+    let mut sorted: Vec<f32> = data.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centroids = quantile_init(&sorted, bins);
+
+    let mut assign = vec![0u16; data.len()];
+    let mut sums = vec![0f64; bins];
+    let mut counts = vec![0usize; bins];
+    let mut executed = 0;
+
+    for _ in 0..iters.max(1) {
+        executed += 1;
+        let mut changed = false;
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        counts.iter_mut().for_each(|c| *c = 0);
+
+        for (i, &x) in data.iter().enumerate() {
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for (b, &c) in centroids.iter().enumerate() {
+                let d = (x - c).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = b;
+                }
+            }
+            if assign[i] != best as u16 {
+                assign[i] = best as u16;
+                changed = true;
+            }
+            sums[best] += x as f64;
+            counts[best] += 1;
+        }
+
+        for b in 0..bins {
+            if counts[b] > 0 {
+                centroids[b] = (sums[b] / counts[b] as f64) as f32;
+            } // empty cluster keeps previous centroid
+        }
+
+        if !changed && executed > 1 {
+            break;
+        }
+    }
+
+    let mse = data
+        .iter()
+        .zip(&assign)
+        .map(|(&x, &a)| {
+            let e = (x - centroids[a as usize]) as f64;
+            e * e
+        })
+        .sum::<f64>()
+        / data.len() as f64;
+
+    KmeansResult { codebook: centroids, assignments: assign, mse, iterations: executed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg(seed: &mut u64) -> f32 {
+        // deterministic pseudo-random in [-1, 1)
+        *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (((*seed >> 33) as f64 / (1u64 << 31) as f64) - 1.0) as f32
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let centers = [-3.0f32, -1.0, 1.0, 3.0];
+        let mut seed = 7u64;
+        let data: Vec<f32> = (0..400)
+            .map(|i| centers[i % 4] + lcg(&mut seed) * 1e-3)
+            .collect();
+        let r = kmeans_1d(&data, 4, 50);
+        let mut cb = r.codebook.clone();
+        cb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (got, want) in cb.iter().zip(centers.iter()) {
+            assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+        }
+        assert!(r.mse < 1e-5);
+    }
+
+    #[test]
+    fn single_bin_is_mean() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let r = kmeans_1d(&data, 1, 10);
+        assert!((r.codebook[0] - 2.5).abs() < 1e-6);
+        assert!(r.assignments.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn assignments_are_nearest() {
+        let mut seed = 3u64;
+        let data: Vec<f32> = (0..200).map(|_| lcg(&mut seed) * 2.0).collect();
+        let r = kmeans_1d(&data, 8, 30);
+        for (&x, &a) in data.iter().zip(&r.assignments) {
+            let d_assigned = (x - r.codebook[a as usize]).abs();
+            for &c in &r.codebook {
+                assert!(d_assigned <= (x - c).abs() + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn mse_nonincreasing_in_bins() {
+        let mut seed = 11u64;
+        let data: Vec<f32> = (0..300).map(|_| lcg(&mut seed)).collect();
+        let mut prev = f64::INFINITY;
+        for bins in [2usize, 4, 8, 16, 32] {
+            let r = kmeans_1d(&data, bins, 40);
+            assert!(r.mse <= prev * 1.05, "bins={bins}: {} > {prev}", r.mse);
+            prev = r.mse;
+        }
+    }
+
+    #[test]
+    fn more_bins_than_points() {
+        let data = [1.0f32, 2.0];
+        let r = kmeans_1d(&data, 8, 10);
+        assert_eq!(r.codebook.len(), 8);
+        assert!(r.assignments.iter().all(|&a| (a as usize) < 8));
+        // every point reconstructs exactly
+        assert!(r.mse < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_data_panics() {
+        kmeans_1d(&[], 4, 10);
+    }
+}

@@ -1,0 +1,24 @@
+//! Fixed-point arithmetic and weight sharing (dictionary encoding).
+//!
+//! The paper's accelerators compute in integer/fixed point (§4: 32-bit
+//! images, 8/16/32-bit weights), with weights K-means-clustered into
+//! `B ∈ [4, 256]` bins (Han et al.'s deep compression).  This module
+//! provides:
+//!
+//! * [`QFormat`] / [`fixed`] — signed fixed-point encode/decode/multiply
+//!   with explicit bit widths, matching the datapath widths the gate model
+//!   costs out.
+//! * [`kmeans`] — Lloyd's scalar K-means, the codebook construction.
+//! * [`codebook`] — dictionary encoding of a weight tensor into
+//!   `(codebook[B], bin_idx)` and its fixed-point form used by the
+//!   simulator.
+
+pub mod codebook;
+pub mod fixed;
+pub mod huffman;
+pub mod kmeans;
+pub mod prune;
+
+pub use codebook::{encode_weights, Codebook, EncodedWeights};
+pub use fixed::QFormat;
+pub use kmeans::{kmeans_1d, KmeansResult};

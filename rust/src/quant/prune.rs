@@ -1,0 +1,119 @@
+//! Magnitude pruning (step 1 of Han et al.'s deep compression).
+//!
+//! The paper's weight-sharing assumes the deep-compression pipeline:
+//! prune small weights, retrain, *then* cluster the survivors.  Pruning
+//! also skews the bin histogram (a dedicated zero bin dominates), which is
+//! what makes the Huffman stage effective.  `examples/deep_compression.rs`
+//! runs the whole chain on the digits CNN.
+
+use crate::tensor::Tensor;
+
+/// A pruning mask: `true` = weight survives.
+#[derive(Clone, Debug)]
+pub struct PruneMask {
+    pub mask: Tensor<bool>,
+    pub kept: usize,
+}
+
+impl PruneMask {
+    /// Fraction of weights kept.
+    pub fn density(&self) -> f64 {
+        self.kept as f64 / self.mask.len() as f64
+    }
+
+    /// Apply in place: zero out pruned weights.
+    pub fn apply(&self, weights: &mut Tensor<f32>) {
+        assert_eq!(weights.dims(), self.mask.dims());
+        for (w, &keep) in weights.data_mut().iter_mut().zip(self.mask.data()) {
+            if !keep {
+                *w = 0.0;
+            }
+        }
+    }
+}
+
+/// Prune the smallest-magnitude `fraction` of weights.
+pub fn magnitude_prune(weights: &Tensor<f32>, fraction: f64) -> PruneMask {
+    assert!((0.0..1.0).contains(&fraction), "fraction in [0,1)");
+    let n = weights.len();
+    let drop = (n as f64 * fraction).floor() as usize;
+    let mut mags: Vec<(f32, usize)> = weights
+        .data()
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| (w.abs(), i))
+        .collect();
+    mags.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut keep = vec![true; n];
+    for &(_, i) in mags.iter().take(drop) {
+        keep[i] = false;
+    }
+    PruneMask { mask: Tensor::from_vec(weights.dims(), keep), kept: n - drop }
+}
+
+/// Index-stream statistics after pruning + weight sharing: pruned weights
+/// all land in the zero bin, skewing the histogram (better Huffman codes)
+/// and silencing their PAS accumulations (activity drops).
+pub fn pruned_bin_histogram(bin_idx: &[u16], mask: &[bool], bins: usize, zero_bin: u16) -> Vec<usize> {
+    assert_eq!(bin_idx.len(), mask.len());
+    let mut h = vec![0usize; bins];
+    for (&b, &keep) in bin_idx.iter().zip(mask) {
+        let eff = if keep { b } else { zero_bin };
+        h[eff as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tensor<f32> {
+        Tensor::from_vec(&[2, 4], vec![0.1, -2.0, 0.05, 1.5, -0.2, 0.01, 3.0, -0.5])
+    }
+
+    #[test]
+    fn prunes_smallest_magnitudes() {
+        let w = toy();
+        let m = magnitude_prune(&w, 0.5);
+        assert_eq!(m.kept, 4);
+        // survivors are the 4 largest magnitudes: -2.0, 1.5, 3.0, -0.5
+        let mut pruned = w.clone();
+        m.apply(&mut pruned);
+        let alive: Vec<f32> = pruned.data().iter().copied().filter(|&x| x != 0.0).collect();
+        assert_eq!(alive.len(), 4);
+        for v in [-2.0f32, 1.5, 3.0, -0.5] {
+            assert!(alive.contains(&v), "{v} should survive");
+        }
+    }
+
+    #[test]
+    fn zero_fraction_keeps_all() {
+        let w = toy();
+        let m = magnitude_prune(&w, 0.0);
+        assert_eq!(m.kept, 8);
+        assert!((m.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_matches_fraction() {
+        let w = Tensor::from_fn(&[100], |i| (i as f32 - 50.0) / 10.0);
+        let m = magnitude_prune(&w, 0.9);
+        assert!((m.density() - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn histogram_routes_pruned_to_zero_bin() {
+        let bin_idx = vec![0u16, 1, 2, 3];
+        let mask = vec![true, false, true, false];
+        let h = pruned_bin_histogram(&bin_idx, &mask, 4, 2);
+        assert_eq!(h, vec![1, 0, 3, 0]); // bins 1 and 3 rerouted to 2
+        assert_eq!(h.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_prune_rejected() {
+        magnitude_prune(&toy(), 1.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal wall-clock micro-bench harness (criterion is unavailable in the
+//! offline build).  Used by the `cargo bench` targets under `rust/benches/`.
+//!
+//! Methodology: warm up, then run timed batches until both a minimum
+//! duration and a minimum iteration count are reached; report mean,
+//! best-batch mean, and throughput.  Results print in a stable
+//! grep-friendly format: `bench <name>: <mean> per iter (<iters> iters)`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub total: Duration,
+    pub best_batch_per_iter: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos((self.total.as_nanos() / self.iters.max(1) as u128) as u64)
+    }
+
+    pub fn per_second(&self) -> f64 {
+        self.iters as f64 / self.total.as_secs_f64()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench {}: {:?} per iter, best {:?} ({} iters, {:.1}/s)",
+            self.name,
+            self.per_iter(),
+            self.best_batch_per_iter,
+            self.iters,
+            self.per_second()
+        );
+    }
+}
+
+/// Run `f` repeatedly for at least `min_time` and `min_iters`.
+pub fn bench<F: FnMut()>(name: &str, min_time: Duration, min_iters: u64, mut f: F) -> BenchResult {
+    // warm-up
+    for _ in 0..3 {
+        f();
+    }
+    let mut iters = 0u64;
+    let mut total = Duration::ZERO;
+    let mut best = Duration::MAX;
+    let batch = 8u64;
+    while total < min_time || iters < min_iters {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        iters += batch;
+        total += dt;
+        best = best.min(dt / batch as u32);
+    }
+    BenchResult { name: name.to_string(), iters, total, best_batch_per_iter: best }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_enough_iterations() {
+        let mut n = 0u64;
+        let r = bench("noop", Duration::from_millis(5), 100, || n += 1);
+        assert!(r.iters >= 100);
+        assert!(n >= r.iters); // warmup + timed
+        assert!(r.per_second() > 0.0);
+    }
+
+    #[test]
+    fn per_iter_consistent() {
+        let r = bench("sleepless", Duration::from_millis(1), 16, || {
+            black_box(1 + 1);
+        });
+        assert!(r.per_iter() <= r.total);
+        assert!(r.best_batch_per_iter <= r.per_iter().max(Duration::from_nanos(1)) * 4);
+    }
+}

@@ -1,0 +1,47 @@
+//! ASCII horizontal bar charts (the paper's bar figures, in a terminal).
+
+/// Render labelled values as horizontal bars scaled to `width` chars.
+pub fn bars(items: &[(String, f64)], width: usize) -> String {
+    if items.is_empty() {
+        return String::new();
+    }
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-30);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} | {} {v:.3e}\n",
+            "#".repeat(n.min(width))
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_to_max() {
+        let out = bars(
+            &[("a".to_string(), 10.0), ("b".to_string(), 5.0)],
+            20,
+        );
+        let lines: Vec<&str> = out.lines().collect();
+        let count = |l: &str| l.matches('#').count();
+        assert_eq!(count(lines[0]), 20);
+        assert_eq!(count(lines[1]), 10);
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert_eq!(bars(&[], 10), "");
+    }
+
+    #[test]
+    fn zero_values_no_bar() {
+        let out = bars(&[("z".to_string(), 0.0), ("x".to_string(), 1.0)], 10);
+        assert!(out.lines().next().unwrap().matches('#').count() == 0);
+    }
+}

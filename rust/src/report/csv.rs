@@ -1,0 +1,59 @@
+//! CSV rendering of reports (for external plotting).
+
+use crate::report::figures::Report;
+
+/// Escape one CSV cell (RFC 4180).
+fn escape(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Render a report as CSV (header row + data rows).
+pub fn to_csv(report: &Report) -> String {
+    let mut out = String::new();
+    out.push_str(
+        &report
+            .headers
+            .iter()
+            .map(|h| escape(h))
+            .collect::<Vec<_>>()
+            .join(","),
+    );
+    out.push('\n');
+    for row in &report.rows {
+        out.push_str(&row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::run_report;
+
+    #[test]
+    fn csv_wellformed_for_every_report() {
+        for id in crate::report::all_report_ids() {
+            let r = run_report(id).unwrap();
+            let csv = to_csv(&r);
+            let lines: Vec<&str> = csv.lines().collect();
+            assert_eq!(lines.len(), r.rows.len() + 1, "{id}");
+            let ncols = lines[0].split(',').count();
+            // (cells containing commas are quoted; our reports don't use them)
+            for l in &lines {
+                assert_eq!(l.split(',').count(), ncols, "{id}: ragged row {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a,b"), "\"a,b\"");
+        assert_eq!(escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+}

@@ -1,0 +1,21 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! Each `fig*`/`table*` function in [`figures`] rebuilds one exhibit from
+//! the models and the simulator and returns a [`Report`]: headers, rows,
+//! and a paper-vs-measured note.  `repro report <id>` prints them; the
+//! `figures` bench regenerates all of them; EXPERIMENTS.md records the
+//! residuals.
+//!
+//! * [`table`] — plain-text table rendering.
+//! * [`chart`] — ASCII horizontal bar charts (the paper's bar figures).
+//! * [`figures`] — the exhibits themselves.
+//! * [`bench`] — a minimal wall-clock micro-bench harness (criterion is
+//!   unavailable offline); used by the `cargo bench` targets.
+
+pub mod bench;
+pub mod chart;
+pub mod csv;
+pub mod figures;
+pub mod table;
+
+pub use figures::{all_report_ids, run_report, Report};

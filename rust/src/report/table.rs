@@ -1,0 +1,99 @@
+//! Plain-text table rendering for reports.
+
+/// Render `headers` + `rows` as an aligned text table.
+pub fn render(headers: &[String], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "row arity mismatch");
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!(" {c:<w$} "))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(headers));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format helpers for report cells.
+pub fn fmt_gates(g: f64) -> String {
+    if g >= 1e6 {
+        format!("{:.2}M", g / 1e6)
+    } else if g >= 1e3 {
+        format!("{:.1}k", g / 1e3)
+    } else {
+        format!("{g:.0}")
+    }
+}
+
+pub fn fmt_power(w: f64) -> String {
+    if w >= 1.0 {
+        format!("{w:.2}W")
+    } else if w >= 1e-3 {
+        format!("{:.2}mW", w * 1e3)
+    } else {
+        format!("{:.1}uW", w * 1e6)
+    }
+}
+
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:+.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let h = vec!["name".to_string(), "value".to_string()];
+        let rows = vec![
+            vec!["a".to_string(), "1".to_string()],
+            vec!["longer".to_string(), "22".to_string()],
+        ];
+        let out = render(&h, &rows);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines equal width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(out.contains("longer"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        render(&["a".to_string()], &[vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_gates(1234.0), "1.2k");
+        assert_eq!(fmt_gates(2_500_000.0), "2.50M");
+        assert_eq!(fmt_gates(42.0), "42");
+        assert_eq!(fmt_power(0.0215), "21.50mW");
+        assert_eq!(fmt_power(1.5), "1.50W");
+        assert_eq!(fmt_power(42e-6), "42.0uW");
+        assert_eq!(fmt_pct(-0.478), "-47.8%");
+        assert_eq!(fmt_pct(0.1275), "+12.8%");
+    }
+}

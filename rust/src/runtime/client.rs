@@ -1,0 +1,189 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Lowering used `return_tuple=True`, so
+//! every output is a 1-tuple unwrapped with `to_tuple1`.
+
+use crate::runtime::manifest::ArtifactManifest;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The PJRT runtime: one CPU client plus the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+}
+
+/// A compiled conv-tile executable (pasm_tile / ws_tile).
+pub struct TileExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    /// (C, IH, IW), (M, C, KY, KX), B, (M, OH, OW)
+    pub image_dims: [usize; 3],
+    pub idx_dims: [usize; 4],
+    pub bins: usize,
+    pub out_dims: [usize; 3],
+}
+
+/// A compiled e2e model executable at a fixed batch size.
+pub struct ModelExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub in_dims: [usize; 3], // (C, H, W)
+    pub classes: usize,
+}
+
+/// Flat model parameters in manifest order, pre-marshalled.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    /// (name, f32 data or i32 data, shape) in `model_param_order`.
+    pub entries: Vec<ParamValue>,
+}
+
+/// One marshalled parameter.
+#[derive(Clone, Debug)]
+pub enum ParamValue {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Runtime {
+    /// Create the CPU client and load the manifest from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, manifest })
+    }
+
+    fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.path_of(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact '{name}'"))
+    }
+
+    /// Compile a conv-tile artifact (`pasm_tile`, `ws_tile`).
+    pub fn load_tile(&self, name: &str) -> Result<TileExecutable> {
+        let t = &self.manifest.tile;
+        Ok(TileExecutable {
+            exe: self.compile(name)?,
+            name: name.to_string(),
+            image_dims: [t.channels, t.in_h, t.in_w],
+            idx_dims: [t.kernels, t.channels, t.kernel_h, t.kernel_w],
+            bins: t.bins,
+            out_dims: [t.kernels, t.out_h, t.out_w],
+        })
+    }
+
+    /// Compile the e2e model at one of the exported batch sizes.
+    pub fn load_model(&self, batch: usize) -> Result<ModelExecutable> {
+        let m = &self.manifest.model;
+        if !m.batch_sizes.contains(&batch) {
+            bail!("batch {batch} not exported (available: {:?})", m.batch_sizes);
+        }
+        Ok(ModelExecutable {
+            exe: self.compile(&format!("model_b{batch}"))?,
+            batch,
+            in_dims: [m.in_c, m.in_h, m.in_w],
+            classes: m.classes,
+        })
+    }
+}
+
+fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == n, "literal data/shape mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == n, "literal data/shape mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+impl TileExecutable {
+    /// Execute the tile: `image [C,IH,IW] f32`, `bin_idx [M,C,KY,KX]`,
+    /// `codebook [B] f32` -> `[M,OH,OW] f32`.
+    pub fn run(
+        &self,
+        image: &Tensor<f32>,
+        bin_idx: &Tensor<u16>,
+        codebook: &[f32],
+    ) -> Result<Tensor<f32>> {
+        anyhow::ensure!(image.dims() == self.image_dims, "image dims mismatch");
+        anyhow::ensure!(bin_idx.dims() == self.idx_dims, "bin_idx dims mismatch");
+        anyhow::ensure!(codebook.len() == self.bins, "codebook length mismatch");
+
+        let img_lit = f32_literal(image.data(), image.dims())?;
+        let idx_i32: Vec<i32> = bin_idx.data().iter().map(|&b| b as i32).collect();
+        let idx_lit = i32_literal(&idx_i32, bin_idx.dims())?;
+        let cb_lit = f32_literal(codebook, &[self.bins])?;
+
+        let result = self.exe.execute::<xla::Literal>(&[img_lit, idx_lit, cb_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Tensor::from_vec(&self.out_dims, values))
+    }
+}
+
+impl ModelExecutable {
+    /// Execute a batch: `images [N,C,H,W]` + params -> logits `[N,classes]`.
+    pub fn run(&self, images: &Tensor<f32>, params: &ModelParams) -> Result<Tensor<f32>> {
+        let want = [self.batch, self.in_dims[0], self.in_dims[1], self.in_dims[2]];
+        anyhow::ensure!(images.dims() == want, "batch images dims mismatch");
+
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(1 + params.entries.len());
+        lits.push(f32_literal(images.data(), images.dims())?);
+        for p in &params.entries {
+            lits.push(match p {
+                ParamValue::F32(data, dims) => f32_literal(data, dims)?,
+                ParamValue::I32(data, dims) => i32_literal(data, dims)?,
+            });
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Tensor::from_vec(&[self.batch, self.classes], values))
+    }
+}
+
+impl ModelParams {
+    /// Marshal an [`crate::cnn::network::EncodedCnn`] into the artifact's
+    /// parameter order (bi1, cb1, bias1, bi2, cb2, bias2, dense_w, dense_b).
+    pub fn from_encoded(enc: &crate::cnn::network::EncodedCnn) -> Self {
+        let idx_i32 = |t: &Tensor<u16>| -> (Vec<i32>, Vec<usize>) {
+            (t.data().iter().map(|&b| b as i32).collect(), t.dims().to_vec())
+        };
+        let (bi1, bi1d) = idx_i32(&enc.conv1.bin_idx);
+        let (bi2, bi2d) = idx_i32(&enc.conv2.bin_idx);
+        ModelParams {
+            entries: vec![
+                ParamValue::I32(bi1, bi1d),
+                ParamValue::F32(
+                    enc.conv1.codebook.values.clone(),
+                    vec![enc.conv1.codebook.bins()],
+                ),
+                ParamValue::F32(enc.conv1_b.clone(), vec![enc.conv1_b.len()]),
+                ParamValue::I32(bi2, bi2d),
+                ParamValue::F32(
+                    enc.conv2.codebook.values.clone(),
+                    vec![enc.conv2.codebook.bins()],
+                ),
+                ParamValue::F32(enc.conv2_b.clone(), vec![enc.conv2_b.len()]),
+                ParamValue::F32(enc.dense_w.data().to_vec(), enc.dense_w.dims().to_vec()),
+                ParamValue::F32(enc.dense_b.clone(), vec![enc.dense_b.len()]),
+            ],
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Typed view of `artifacts/manifest.json` (written by `aot.py`).
+//!
+//! The manifest is the single source of truth for artifact shapes: the
+//! rust side never hard-codes model dimensions — it marshals inputs from
+//! these specs, so a re-lowered python model propagates automatically.
+
+use crate::runtime::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/dtype of one model parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// The paper-tile artifact description.
+#[derive(Clone, Debug)]
+pub struct TileSpec {
+    pub channels: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    pub kernels: usize,
+    pub bins: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+/// The e2e model artifact description.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub classes: usize,
+    pub bins: usize,
+    pub batch_sizes: Vec<usize>,
+    pub param_order: Vec<String>,
+    pub params: BTreeMap<String, ParamSpec>,
+}
+
+/// Parsed manifest plus artifact file paths.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub tile: TileSpec,
+    pub model: ModelSpec,
+    /// artifact name -> file name
+    pub artifacts: BTreeMap<String, String>,
+}
+
+fn usize_field(obj: &Json, key: &str) -> Result<usize> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("manifest missing numeric field '{key}'"))
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let tile_j = root.get("tile").context("manifest missing 'tile'")?;
+        let tile = TileSpec {
+            channels: usize_field(tile_j, "channels")?,
+            in_h: usize_field(tile_j, "in_h")?,
+            in_w: usize_field(tile_j, "in_w")?,
+            kernel_h: usize_field(tile_j, "kernel_h")?,
+            kernel_w: usize_field(tile_j, "kernel_w")?,
+            kernels: usize_field(tile_j, "kernels")?,
+            bins: usize_field(tile_j, "bins")?,
+            out_h: usize_field(tile_j, "out_h")?,
+            out_w: usize_field(tile_j, "out_w")?,
+        };
+
+        let model_j = root.get("model").context("manifest missing 'model'")?;
+        let param_order: Vec<String> = root
+            .get("model_param_order")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'model_param_order'")?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let mut params = BTreeMap::new();
+        for (k, v) in root
+            .get("model_params")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'model_params'")?
+        {
+            let shape = v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("param missing shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let dtype = v
+                .get("dtype")
+                .and_then(Json::as_str)
+                .context("param missing dtype")?
+                .to_string();
+            params.insert(k.clone(), ParamSpec { shape, dtype });
+        }
+        let model = ModelSpec {
+            in_c: usize_field(model_j, "in_c")?,
+            in_h: usize_field(model_j, "in_h")?,
+            in_w: usize_field(model_j, "in_w")?,
+            classes: usize_field(model_j, "classes")?,
+            bins: usize_field(model_j, "bins")?,
+            batch_sizes: model_j
+                .get("batch_sizes")
+                .and_then(Json::as_arr)
+                .context("model missing batch_sizes")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            param_order,
+            params,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest missing 'artifacts'")?
+        {
+            if let Some(f) = v.as_str() {
+                artifacts.insert(k.clone(), f.to_string());
+            }
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+
+        Ok(ArtifactManifest { dir, tile, model, artifacts })
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration with the real artifacts directory (requires
+    /// `make artifacts` — part of the prescribed test flow).
+    #[test]
+    fn loads_real_manifest() {
+        let m = ArtifactManifest::load("artifacts").expect("run `make artifacts` first");
+        assert_eq!(m.tile.channels, 15);
+        assert_eq!(m.tile.bins, 16);
+        assert_eq!(m.tile.out_h, 3);
+        assert_eq!(m.model.classes, 10);
+        assert_eq!(m.model.param_order.len(), 8);
+        assert!(m.model.params.contains_key("dense_w"));
+        assert!(m.path_of("pasm_tile").unwrap().exists());
+        assert!(m.path_of("model_b8").unwrap().exists());
+        assert!(m.path_of("nonexistent").is_err());
+    }
+
+    #[test]
+    fn param_specs_consistent() {
+        let m = ArtifactManifest::load("artifacts").expect("run `make artifacts` first");
+        let dw = &m.model.params["dense_w"];
+        assert_eq!(dw.shape, vec![144, 10]);
+        assert_eq!(dw.dtype, "float32");
+        let bi1 = &m.model.params["bi1"];
+        assert_eq!(bi1.dtype, "int32");
+        assert_eq!(bi1.shape.len(), 4);
+    }
+}

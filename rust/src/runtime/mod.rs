@@ -1,0 +1,20 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build-time python side (`python/compile/aot.py`) lowers the L2
+//! graphs to **HLO text** under `artifacts/` (text, not serialized proto —
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids).  This module is the request-
+//! path half: it parses `artifacts/manifest.json`, compiles each HLO
+//! module on the PJRT CPU client once at startup, and exposes typed
+//! execute calls.  Python never runs at inference time.
+//!
+//! * [`json`] — minimal JSON parser (the offline build has no serde_json).
+//! * [`manifest`] — typed view of `artifacts/manifest.json`.
+//! * [`client`] — PJRT client wrapper + literal marshalling.
+
+pub mod client;
+pub mod json;
+pub mod manifest;
+
+pub use client::{ModelExecutable, Runtime, TileExecutable};
+pub use manifest::{ArtifactManifest, ModelSpec, TileSpec};

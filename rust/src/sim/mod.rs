@@ -1,0 +1,26 @@
+//! Cycle-accurate simulation of the paper's units and accelerators.
+//!
+//! The simulator serves three purposes:
+//!
+//! 1. **Functional truth** — its fixed-point outputs must be bit-exact
+//!    against the functional dataflows in [`crate::cnn::conv`] (and hence
+//!    against the PJRT-executed Pallas kernels up to float rounding).
+//! 2. **Latency truth** — cycle counts validate the analytical latency
+//!    formulas (`stream_cycles`, `latency_cycles`), including the paper's
+//!    §2.2 worked example (1024 vs 1088 cycles).
+//! 3. **Activity truth** — Hamming-distance toggle counters on the
+//!    architectural registers produce measured switching activities that
+//!    feed the power model (replacing the component-library defaults).
+//!
+//! Modules: [`activity`] (toggle probes), [`units`] (clocked MAC / PAS /
+//! post-pass units), [`standalone`] (the §2.4 16-MAC vs 16-PAS-4-MAC
+//! streaming experiment), [`conv`] (the §3-4 conv-layer accelerator).
+
+pub mod activity;
+pub mod conv;
+pub mod standalone;
+pub mod units;
+
+pub use activity::{ActivityReport, ToggleProbe};
+pub use conv::{simulate_conv, ConvSimResult};
+pub use standalone::{simulate_standalone, StandaloneSimResult};

@@ -1,0 +1,229 @@
+//! Cycle simulation of the §2.4 standalone experiment.
+//!
+//! Streams `n_pairs` (image, bin-index) pairs through each of the 16 lanes
+//! of a 16-MAC or a 16-PAS-4-MAC and counts exact cycles:
+//!
+//! * 16-MAC: one pair per lane per cycle -> `n_pairs` cycles, results in
+//!   the lane accumulators.
+//! * 16-PAS-4-MAC: `n_pairs` accumulate cycles, then each shared MAC
+//!   drains its `lanes/postpass` PAS units sequentially, `B` bins each ->
+//!   `n_pairs + (lanes/postpass) * B` cycles (§2.2: 1024 + 4*16 = 1088).
+//!
+//! Results are checked bit-exact between the two (paper §5.3) and the
+//! toggle probes provide measured activities for Figs 8/10.
+
+use crate::accel::standalone::{StandaloneUnit, UnitKind};
+use crate::sim::activity::ActivityReport;
+use crate::sim::units::{PasUnit, PostPassMac, WsMacUnit};
+
+/// One lane's input stream.
+#[derive(Clone, Debug)]
+pub struct LaneStream {
+    pub images: Vec<i64>,
+    pub bin_idx: Vec<u16>,
+}
+
+impl LaneStream {
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.images.len(), self.bin_idx.len());
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct StandaloneSimResult {
+    /// Final accumulator per lane (raw fixed point).
+    pub results: Vec<i64>,
+    /// Exact simulated cycles.
+    pub cycles: u64,
+    /// Measured register activities.
+    pub activity: ActivityReport,
+}
+
+/// Simulate a standalone unit over per-lane streams with a shared codebook.
+///
+/// `codebook` holds the raw dictionary weights (length >= B); every lane
+/// uses the same dictionary, as in the paper's shared-weight design.
+pub fn simulate_standalone(
+    unit: &StandaloneUnit,
+    streams: &[LaneStream],
+    codebook: &[i64],
+) -> StandaloneSimResult {
+    assert_eq!(streams.len(), unit.lanes, "one stream per lane");
+    assert!(codebook.len() >= unit.bins, "codebook smaller than bins");
+    let n_pairs = streams[0].len();
+    assert!(
+        streams.iter().all(|s| s.len() == n_pairs),
+        "lanes must stream equal lengths"
+    );
+    for s in streams {
+        assert!(
+            s.bin_idx.iter().all(|&b| (b as usize) < unit.bins),
+            "bin index out of range"
+        );
+    }
+
+    match unit.kind {
+        UnitKind::Mac16 => {
+            let mut lanes: Vec<WsMacUnit> = (0..unit.lanes)
+                .map(|_| WsMacUnit::new(codebook[..unit.bins].to_vec(), 64))
+                .collect();
+            // lane-major: each lane streams its pairs contiguously (the
+            // hardware is parallel; simulated cycle count is unaffected,
+            // and the unit state stays register-resident — §Perf)
+            for (lane, s) in lanes.iter_mut().zip(streams) {
+                for (&im, &ix) in s.images.iter().zip(&s.bin_idx) {
+                    lane.step(im, ix);
+                }
+            }
+            let cycles = n_pairs as u64;
+            let probes: Vec<_> = lanes.iter().map(|l| &l.acc_probe).collect();
+            StandaloneSimResult {
+                results: lanes.iter().map(|l| l.acc).collect(),
+                cycles,
+                activity: ActivityReport::from_probes(probes),
+            }
+        }
+        UnitKind::Pas16Mac4 => {
+            let mut pas: Vec<PasUnit> =
+                (0..unit.lanes).map(|_| PasUnit::new(unit.bins, 64)).collect();
+            // phase 1: parallel accumulate (lane-major, see Mac16 note)
+            for (p, s) in pas.iter_mut().zip(streams) {
+                for (&im, &ix) in s.images.iter().zip(&s.bin_idx) {
+                    p.step(im, ix);
+                }
+            }
+            let mut cycles = n_pairs as u64;
+            // phase 2: each shared MAC drains its group sequentially
+            let groups = unit.lanes / unit.postpass.max(1);
+            let mut macs: Vec<PostPassMac> = (0..unit.postpass)
+                .map(|_| PostPassMac::new(codebook[..unit.bins].to_vec(), 64))
+                .collect();
+            let mut results = vec![0i64; unit.lanes];
+            for g in 0..groups {
+                for b in 0..unit.bins {
+                    for (mi, mac) in macs.iter_mut().enumerate() {
+                        let lane = mi * groups + g;
+                        mac.step(pas[lane].bins[b], b);
+                    }
+                    cycles += 1;
+                }
+                for (mi, mac) in macs.iter_mut().enumerate() {
+                    let lane = mi * groups + g;
+                    results[lane] = mac.acc;
+                    mac.reset();
+                }
+            }
+            let probes: Vec<_> = pas
+                .iter()
+                .map(|p| &p.bin_probe)
+                .chain(macs.iter().map(|m| &m.acc_probe))
+                .collect();
+            StandaloneSimResult {
+                results,
+                cycles,
+                activity: ActivityReport::from_probes(probes),
+            }
+        }
+    }
+}
+
+/// Generate deterministic random streams (test/bench workload).
+pub fn random_streams(
+    rng: &mut crate::cnn::data::Rng,
+    lanes: usize,
+    n_pairs: usize,
+    bins: usize,
+    magnitude: i64,
+) -> Vec<LaneStream> {
+    (0..lanes)
+        .map(|_| LaneStream {
+            images: (0..n_pairs)
+                .map(|_| (rng.signed() * magnitude as f32) as i64)
+                .collect(),
+            bin_idx: (0..n_pairs).map(|_| rng.below(bins) as u16).collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::Rng;
+
+    fn setup(n_pairs: usize, bins: usize) -> (Vec<LaneStream>, Vec<i64>) {
+        let mut rng = Rng::new(42);
+        let streams = random_streams(&mut rng, 16, n_pairs, bins, 1000);
+        let codebook: Vec<i64> = (0..bins).map(|_| (rng.signed() * 500.0) as i64).collect();
+        (streams, codebook)
+    }
+
+    #[test]
+    fn paper_1024_1088_cycles() {
+        let (streams, cb) = setup(1024, 16);
+        let mac = simulate_standalone(&StandaloneUnit::mac16(32, 16), &streams, &cb);
+        let pasm = simulate_standalone(&StandaloneUnit::pas16mac4(32, 16), &streams, &cb);
+        assert_eq!(mac.cycles, 1024);
+        assert_eq!(pasm.cycles, 1088); // 1024 + 4 * 16
+    }
+
+    #[test]
+    fn results_bitexact_between_designs() {
+        for bins in [4usize, 16, 64] {
+            let (streams, cb) = setup(257, bins);
+            let mac = simulate_standalone(&StandaloneUnit::mac16(32, bins), &streams, &cb);
+            let pasm =
+                simulate_standalone(&StandaloneUnit::pas16mac4(32, bins), &streams, &cb);
+            assert_eq!(mac.results, pasm.results, "bins {bins}");
+        }
+    }
+
+    #[test]
+    fn cycles_match_analytical_model() {
+        for (n, bins) in [(100usize, 4usize), (1000, 16), (333, 64)] {
+            let (streams, cb) = setup(n, bins);
+            let unit = StandaloneUnit::pas16mac4(32, bins);
+            let sim = simulate_standalone(&unit, &streams, &cb);
+            assert_eq!(sim.cycles, unit.stream_cycles(n as u64), "n={n} bins={bins}");
+        }
+    }
+
+    #[test]
+    fn results_match_direct_computation() {
+        let (streams, cb) = setup(50, 8);
+        let mac = simulate_standalone(&StandaloneUnit::mac16(32, 8), &streams, &cb);
+        for (lane, s) in streams.iter().enumerate() {
+            let want: i64 = s
+                .images
+                .iter()
+                .zip(&s.bin_idx)
+                .map(|(&im, &b)| im * cb[b as usize])
+                .sum();
+            assert_eq!(mac.results[lane], want, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn activity_measured_nonzero() {
+        let (streams, cb) = setup(64, 16);
+        let sim = simulate_standalone(&StandaloneUnit::pas16mac4(32, 16), &streams, &cb);
+        let mean = sim.activity.mean();
+        assert!(mean > 0.0 && mean < 1.0, "activity {mean}");
+    }
+
+    #[test]
+    fn zero_stream_zero_activity() {
+        let streams: Vec<LaneStream> = (0..16)
+            .map(|_| LaneStream { images: vec![0; 32], bin_idx: vec![0; 32] })
+            .collect();
+        let cb = vec![0i64; 16];
+        let sim = simulate_standalone(&StandaloneUnit::mac16(32, 16), &streams, &cb);
+        assert_eq!(sim.activity.mean(), 0.0);
+        assert!(sim.results.iter().all(|&r| r == 0));
+    }
+}

@@ -1,0 +1,184 @@
+//! Clocked datapath units: weight-shared MAC, PAS, post-pass MAC.
+//!
+//! Each unit exposes a `step(...)` that models one clock edge: consume at
+//! most one input, update architectural state, clock the toggle probes.
+//! The paper's Figures 2-6 describe exactly these three state machines.
+
+use crate::sim::activity::ToggleProbe;
+
+/// Weight-shared MAC (Fig 3/4): `acc += image * weights[bin_idx]`.
+#[derive(Clone, Debug)]
+pub struct WsMacUnit {
+    /// Dictionary register file (B entries, raw fixed-point).
+    pub weights: Vec<i64>,
+    pub acc: i64,
+    pub acc_probe: ToggleProbe,
+    pub mul_probe: ToggleProbe,
+}
+
+impl WsMacUnit {
+    pub fn new(weights: Vec<i64>, acc_width: u32) -> Self {
+        assert!(!weights.is_empty());
+        WsMacUnit {
+            weights,
+            acc: 0,
+            acc_probe: ToggleProbe::new("ws_acc", acc_width.min(64)),
+            mul_probe: ToggleProbe::new("ws_mul_out", acc_width.min(64)),
+        }
+    }
+
+    /// One clock: multiply-accumulate one (image, bin index) pair.
+    #[inline]
+    pub fn step(&mut self, image: i64, bin_idx: u16) {
+        let w = self.weights[bin_idx as usize];
+        let product = image.checked_mul(w).expect("WS-MAC product overflow");
+        self.acc = self.acc.checked_add(product).expect("WS-MAC acc overflow");
+        self.mul_probe.clock(product);
+        self.acc_probe.clock(self.acc);
+    }
+
+    /// Idle clock (no input this cycle).
+    #[inline]
+    pub fn step_idle(&mut self) {
+        self.mul_probe.idle();
+        self.acc_probe.idle();
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+}
+
+/// PAS unit (Fig 5/6a): `bins[bin_idx] += image` — the weighted histogram.
+#[derive(Clone, Debug)]
+pub struct PasUnit {
+    pub bins: Vec<i64>,
+    pub bin_probe: ToggleProbe,
+}
+
+impl PasUnit {
+    pub fn new(n_bins: usize, acc_width: u32) -> Self {
+        assert!(n_bins >= 1);
+        PasUnit {
+            bins: vec![0; n_bins],
+            bin_probe: ToggleProbe::new("pas_bin", acc_width.min(64)),
+        }
+    }
+
+    /// One clock: accumulate one (image, bin index) pair.
+    #[inline]
+    pub fn step(&mut self, image: i64, bin_idx: u16) {
+        let b = bin_idx as usize;
+        self.bins[b] = self.bins[b].checked_add(image).expect("PAS bin overflow");
+        self.bin_probe.clock(self.bins[b]);
+    }
+
+    #[inline]
+    pub fn step_idle(&mut self) {
+        self.bin_probe.idle();
+    }
+
+    pub fn reset(&mut self) {
+        self.bins.iter_mut().for_each(|b| *b = 0);
+    }
+}
+
+/// Post-pass MAC (Fig 5/6b): drains PAS bins against the codebook, one bin
+/// per cycle.
+#[derive(Clone, Debug)]
+pub struct PostPassMac {
+    pub codebook: Vec<i64>,
+    pub acc: i64,
+    pub acc_probe: ToggleProbe,
+}
+
+impl PostPassMac {
+    pub fn new(codebook: Vec<i64>, acc_width: u32) -> Self {
+        PostPassMac {
+            codebook,
+            acc: 0,
+            acc_probe: ToggleProbe::new("postpass_acc", acc_width.min(64)),
+        }
+    }
+
+    /// One clock: multiply-accumulate one drained bin.
+    #[inline]
+    pub fn step(&mut self, bin_value: i64, bin_idx: usize) {
+        let product = bin_value
+            .checked_mul(self.codebook[bin_idx])
+            .expect("post-pass product overflow");
+        self.acc = self.acc.checked_add(product).expect("post-pass acc overflow");
+        self.acc_probe.clock(self.acc);
+    }
+
+    #[inline]
+    pub fn step_idle(&mut self) {
+        self.acc_probe.idle();
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Fig 4 / Fig 6 worked example in fixed point (scale 10 to make
+    /// the decimal values exact integers).
+    #[test]
+    fn fig4_fig6_worked_example() {
+        // values x10: image [267, 34, 48, 177, 61], cb x10: [17, 4, 13, 20]
+        let images = [267i64, 34, 48, 177, 61];
+        let idxs = [0u16, 1, 2, 3, 0];
+        let cb = vec![17i64, 4, 13, 20];
+
+        // WS-MAC path
+        let mut mac = WsMacUnit::new(cb.clone(), 64);
+        for (&im, &ix) in images.iter().zip(&idxs) {
+            mac.step(im, ix);
+        }
+        assert_eq!(mac.acc, 9876); // 98.76 * 100
+
+        // PASM path: PAS then post-pass
+        let mut pas = PasUnit::new(4, 64);
+        for (&im, &ix) in images.iter().zip(&idxs) {
+            pas.step(im, ix);
+        }
+        assert_eq!(pas.bins, vec![328, 34, 48, 177]); // bin0 = 26.7+6.1
+        let mut pp = PostPassMac::new(cb, 64);
+        for (b, &v) in pas.bins.clone().iter().enumerate() {
+            pp.step(v, b);
+        }
+        assert_eq!(pp.acc, 9876); // identical result (paper §5.3)
+    }
+
+    #[test]
+    fn toggle_probes_accumulate() {
+        let mut pas = PasUnit::new(4, 32);
+        pas.step(0xFF, 0);
+        assert!(pas.bin_probe.toggles() >= 8);
+        pas.step_idle();
+        assert_eq!(pas.bin_probe.cycles(), 2);
+    }
+
+    #[test]
+    fn reset_clears_state_not_probes() {
+        let mut mac = WsMacUnit::new(vec![2, 3], 32);
+        mac.step(5, 1);
+        assert_eq!(mac.acc, 15);
+        let toggles = mac.acc_probe.toggles();
+        mac.reset();
+        assert_eq!(mac.acc, 0);
+        assert_eq!(mac.acc_probe.toggles(), toggles);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pas_overflow_guard() {
+        let mut pas = PasUnit::new(1, 64);
+        pas.step(i64::MAX, 0);
+        pas.step(1, 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Minimal row-major tensor substrate.
+//!
+//! The paper's dataflows operate on small dense tensors (`image[C][IH][IW]`,
+//! `weight[M][C][KY][KX]`, `outFeat[M][OH][OW]` — Fig 1).  This module
+//! provides exactly the NdArray machinery those loops need — shapes,
+//! strides, windowed views, im2col — with no external dependencies, for any
+//! element type (f32 for training, `i64` for the bit-exact fixed-point
+//! dataflow the hardware simulator checks against).
+
+mod ndarray;
+mod shape;
+
+pub use ndarray::Tensor;
+pub use shape::{conv_out_dim, ConvShape, Shape};

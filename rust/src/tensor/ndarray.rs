@@ -1,0 +1,229 @@
+//! Dense row-major tensor with the small op set the conv dataflows need.
+
+use super::shape::Shape;
+use std::fmt;
+use std::ops::{Add, Mul};
+
+/// A dense row-major tensor over element type `T`.
+///
+/// `T = f32` carries the trained model; `T = i64` carries the bit-exact
+/// fixed-point dataflow that mirrors the hardware accumulators (wide enough
+/// to hold a W=32 multiply plus log2(C*K*K) accumulation bits).
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Shape,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled (default-filled) tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let shape = Shape::new(shape);
+        let data = vec![T::default(); shape.len()];
+        Tensor { shape, data }
+    }
+
+    /// Build from existing data; panics unless `data.len() == shape.len()`.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        let shape = Shape::new(shape);
+        assert_eq!(
+            data.len(),
+            shape.len(),
+            "data length {} != shape volume {}",
+            data.len(),
+            shape.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// Fill with a function of the linear index.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
+        let shape = Shape::new(shape);
+        let data = (0..shape.len()).map(&mut f).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.shape.offset(idx)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
+        let off = self.shape.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// Reshape in place (volume-preserving view change).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let new = Shape::new(shape);
+        assert_eq!(new.len(), self.shape.len(), "reshape changes volume");
+        self.shape = new;
+        self
+    }
+
+    /// Map every element through `f`, possibly changing element type.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl<T: Copy + Default + Add<Output = T>> Tensor<T> {
+    /// Element-wise sum; shapes must match.
+    pub fn add(&self, other: &Tensor<T>) -> Tensor<T> {
+        assert_eq!(self.shape, other.shape, "shape mismatch in add");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a + b)
+                .collect(),
+        }
+    }
+}
+
+impl<T> Tensor<T>
+where
+    T: Copy + Default + Add<Output = T> + Mul<Output = T>,
+{
+    /// `self [R, K] @ other [K, C] -> [R, C]` plain matmul (reference path;
+    /// the simulator and the hot loops never call this on large shapes).
+    pub fn matmul(&self, other: &Tensor<T>) -> Tensor<T> {
+        assert_eq!(self.shape.rank(), 2);
+        assert_eq!(other.shape.rank(), 2);
+        let (r, k) = (self.dims()[0], self.dims()[1]);
+        let (k2, c) = (other.dims()[0], other.dims()[1]);
+        assert_eq!(k, k2, "inner dims mismatch");
+        let mut out = Tensor::zeros(&[r, c]);
+        for i in 0..r {
+            for l in 0..k {
+                let a = self.data[i * k + l];
+                let row = &other.data[l * c..(l + 1) * c];
+                let dst = &mut out.data[i * c..(i + 1) * c];
+                for (d, &b) in dst.iter_mut().zip(row) {
+                    *d = *d + a * b;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Tensor<f32> {
+    /// Maximum absolute element-wise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// All elements finite?
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl<T: fmt::Debug + Copy + Default> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?} ", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, "{:?}", self.data)
+        } else {
+            write!(f, "[{:?}, ... {} elems]", &self.data[..8], self.data.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t = Tensor::<i64>::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        *t.at_mut(&[1, 2]) = 42;
+        assert_eq!(t.at(&[1, 2]), 42);
+        assert_eq!(t.at(&[0, 0]), 0);
+        assert_eq!(t.data()[5], 42);
+    }
+
+    #[test]
+    fn from_fn_linear_order() {
+        let t = Tensor::<i64>::from_fn(&[2, 2], |i| i as i64);
+        assert_eq!(t.data(), &[0, 1, 2, 3]);
+        assert_eq!(t.at(&[1, 0]), 2);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1i64, 2, 3, 4]);
+        let b = Tensor::from_vec(&[2, 2], vec![1i64, 1, 1, 1]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3, 3, 7, 7]);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let a = Tensor::from_vec(&[3], vec![1.5f32, -2.5, 0.0]);
+        let b = a.map(|x| x as i64);
+        assert_eq!(b.data(), &[1, -2, 0]);
+    }
+
+    #[test]
+    fn add_elementwise() {
+        let a = Tensor::from_vec(&[2], vec![1i64, 2]);
+        let b = Tensor::from_vec(&[2], vec![10i64, 20]);
+        assert_eq!(a.add(&b).data(), &[11, 22]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_mismatch() {
+        Tensor::from_vec(&[2, 2], vec![1i64]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6i64).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.dims(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+}

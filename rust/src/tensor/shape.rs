@@ -1,0 +1,243 @@
+//! Shape algebra for dense tensors and convolution windows.
+
+use std::fmt;
+
+/// A dense row-major shape (up to arbitrary rank; conv code uses rank 3/4).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Total element count (product of dims; empty shape is a scalar = 1).
+    pub fn len(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row-major strides (innermost dim has stride 1).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.0.len()];
+        for i in (0..self.0.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Flatten a multi-index to a linear offset. Panics on rank mismatch or
+    /// out-of-bounds in debug builds.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.0.len(), "index rank mismatch");
+        let mut off = 0usize;
+        let mut stride = 1usize;
+        for d in (0..self.0.len()).rev() {
+            debug_assert!(idx[d] < self.0[d], "index out of bounds");
+            off += idx[d] * stride;
+            stride *= self.0[d];
+        }
+        off
+    }
+}
+
+impl fmt::Debug for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0)
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let inner: Vec<String> = self.0.iter().map(|d| d.to_string()).collect();
+        write!(f, "[{}]", inner.join(","))
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(d: &[usize]) -> Self {
+        Shape(d.to_vec())
+    }
+}
+
+/// Output spatial dim of a VALID convolution: `(in - k) / stride + 1`.
+///
+/// Matches the paper's Fig 1 loop bounds (the kernel center sweeps
+/// `[K/2, IH - K/2)` at the given stride, which visits exactly this many
+/// positions for odd K; we use the standard VALID form for all K).
+pub fn conv_out_dim(input: usize, kernel: usize, stride: usize) -> usize {
+    assert!(kernel >= 1 && stride >= 1, "kernel/stride must be >= 1");
+    assert!(input >= kernel, "input {input} smaller than kernel {kernel}");
+    (input - kernel) / stride + 1
+}
+
+/// Full shape description of one convolution layer (paper Fig 1 names).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input channels `C`.
+    pub channels: usize,
+    /// Input spatial dims `IH x IW`.
+    pub in_h: usize,
+    pub in_w: usize,
+    /// Kernel spatial dims `KY x KX`.
+    pub kernel_h: usize,
+    pub kernel_w: usize,
+    /// Output channels (number of kernels) `M`.
+    pub kernels: usize,
+    /// Stride `S`.
+    pub stride: usize,
+}
+
+impl ConvShape {
+    pub fn new(
+        channels: usize,
+        in_h: usize,
+        in_w: usize,
+        kernel_h: usize,
+        kernel_w: usize,
+        kernels: usize,
+        stride: usize,
+    ) -> Self {
+        let s = ConvShape { channels, in_h, in_w, kernel_h, kernel_w, kernels, stride };
+        s.validate();
+        s
+    }
+
+    /// The paper's §4 accelerator tile: IH=IW=5, C=15, KY=KX=3, M=2, S=1.
+    pub fn paper_tile() -> Self {
+        Self::new(15, 5, 5, 3, 3, 2, 1)
+    }
+
+    pub fn validate(&self) {
+        assert!(self.channels >= 1 && self.kernels >= 1);
+        assert!(self.in_h >= self.kernel_h && self.in_w >= self.kernel_w);
+        assert!(self.stride >= 1);
+    }
+
+    pub fn out_h(&self) -> usize {
+        conv_out_dim(self.in_h, self.kernel_h, self.stride)
+    }
+
+    pub fn out_w(&self) -> usize {
+        conv_out_dim(self.in_w, self.kernel_w, self.stride)
+    }
+
+    /// Output pixels per kernel plane: `OH * OW`.
+    pub fn out_pixels(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// MAC operations per output element: `N = C * KY * KX` (paper §4,
+    /// Table 2 — the quantity that must dominate `B` for PASM to win).
+    pub fn taps(&self) -> usize {
+        self.channels * self.kernel_h * self.kernel_w
+    }
+
+    /// Total MAC operations in the layer: `M * OH * OW * taps`.
+    pub fn total_macs(&self) -> usize {
+        self.kernels * self.out_pixels() * self.taps()
+    }
+
+    pub fn image_shape(&self) -> Shape {
+        Shape::new(&[self.channels, self.in_h, self.in_w])
+    }
+
+    pub fn weight_shape(&self) -> Shape {
+        Shape::new(&[self.kernels, self.channels, self.kernel_h, self.kernel_w])
+    }
+
+    pub fn out_shape(&self) -> Shape {
+        Shape::new(&[self.kernels, self.out_h(), self.out_w()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(s.len(), 24);
+    }
+
+    #[test]
+    fn offset_roundtrip() {
+        let s = Shape::new(&[3, 5, 7]);
+        let mut seen = vec![false; s.len()];
+        for i in 0..3 {
+            for j in 0..5 {
+                for k in 0..7 {
+                    let off = s.offset(&[i, j, k]);
+                    assert!(!seen[off]);
+                    seen[off] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn conv_out_dims() {
+        assert_eq!(conv_out_dim(5, 3, 1), 3);
+        assert_eq!(conv_out_dim(12, 3, 1), 10);
+        assert_eq!(conv_out_dim(9, 3, 2), 4);
+        assert_eq!(conv_out_dim(3, 3, 1), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn conv_out_dim_too_small() {
+        conv_out_dim(2, 3, 1);
+    }
+
+    #[test]
+    fn paper_tile_counts() {
+        let t = ConvShape::paper_tile();
+        assert_eq!(t.out_h(), 3);
+        assert_eq!(t.out_w(), 3);
+        assert_eq!(t.taps(), 135); // 15 * 3 * 3
+        assert_eq!(t.total_macs(), 2 * 9 * 135);
+    }
+
+    /// Table 2 of the paper: MAC ops per output for C x KxK.
+    #[test]
+    fn table2_values() {
+        let cases = [
+            (32, 1, 32),
+            (128, 1, 128),
+            (512, 1, 512),
+            (32, 3, 288),
+            (128, 3, 1152),
+            (512, 3, 4608),
+            (32, 5, 800),
+            (128, 5, 3200),
+            (512, 5, 12800),
+            (32, 7, 1568),
+            (128, 7, 6272),
+            (512, 7, 25088),
+        ];
+        for (c, k, want) in cases {
+            let shape = ConvShape::new(c, k, k, k, k, 1, 1);
+            assert_eq!(shape.taps(), want, "C={c} K={k}");
+        }
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(&[2, 3]).to_string(), "[2,3]");
+    }
+}

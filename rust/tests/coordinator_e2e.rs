@@ -1,0 +1,114 @@
+//! Integration: the full coordinator path — submit concurrent requests,
+//! verify batching, numerics (vs the rust reference forward), metrics, and
+//! clean shutdown.  Requires `make artifacts`.
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::quant::fixed::QFormat;
+use std::time::Duration;
+
+fn encoded_net(seed: u64) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, 16, QFormat::W32)
+}
+
+#[test]
+fn serves_concurrent_requests_correctly() {
+    let enc = encoded_net(1);
+    let reference = enc.clone();
+    let coord = Coordinator::start(
+        "artifacts",
+        enc,
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(5)),
+    )
+    .expect("run `make artifacts` first");
+
+    // fire 30 requests and hold the receivers
+    let mut rng = Rng::new(42);
+    let mut cases = Vec::new();
+    for i in 0..30usize {
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit(img.clone()).unwrap();
+        cases.push((img, rx));
+    }
+
+    for (i, (img, rx)) in cases.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("no response")
+            .expect("inference failed");
+        let want = reference.forward(&img, ConvVariant::Pasm);
+        for (j, (&got, &w)) in resp.logits.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (got - w).abs() < 1e-2,
+                "request {i} logit {j}: {got} vs {w}"
+            );
+        }
+        assert!(resp.batch_size >= resp.batch_occupancy);
+        assert!(resp.hw.cycles > 0);
+        assert!(resp.hw.energy_j > 0.0);
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.requests, 30);
+    assert!(m.batches >= 2, "expected batching, got {} batches", m.batches);
+    assert!(m.mean_occupancy() > 1.0);
+    assert!(m.percentile_us(50.0).is_some());
+}
+
+#[test]
+fn single_blocking_infer() {
+    let enc = encoded_net(2);
+    let reference = enc.clone();
+    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default())
+        .expect("run `make artifacts` first");
+    let mut rng = Rng::new(7);
+    let img = render_digit(&mut rng, 3, 0.05);
+    let resp = coord.infer(img.clone()).unwrap();
+    let want = reference.forward(&img, ConvVariant::Pasm);
+    let want_pred = pasm_accel::cnn::layer::argmax(&want);
+    assert_eq!(resp.predicted, want_pred);
+}
+
+#[test]
+fn shutdown_flushes_pending() {
+    let enc = encoded_net(3);
+    let coord = Coordinator::start(
+        "artifacts",
+        enc,
+        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(50)),
+    )
+    .expect("run `make artifacts` first");
+    let mut rng = Rng::new(9);
+    let mut rxs = Vec::new();
+    for i in 0..5usize {
+        let img = render_digit(&mut rng, i, 0.05);
+        rxs.push(coord.submit(img).unwrap());
+    }
+    drop(coord); // shutdown must flush, not drop, the 5 pending requests
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(30));
+        assert!(resp.is_ok(), "request {i} was dropped at shutdown");
+        assert!(resp.unwrap().is_ok());
+    }
+}
+
+#[test]
+fn mixed_digit_accuracy_via_coordinator() {
+    // random-init net won't classify well, but the coordinator's output
+    // must equal the reference forward's argmax for every image
+    let enc = encoded_net(4);
+    let reference = enc.clone();
+    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default())
+        .expect("run `make artifacts` first");
+    let mut rng = Rng::new(5);
+    for d in 0..10usize {
+        let img = render_digit(&mut rng, d, 0.1);
+        let resp = coord.infer(img.clone()).unwrap();
+        let want = reference.forward(&img, ConvVariant::Pasm);
+        assert_eq!(resp.predicted, pasm_accel::cnn::layer::argmax(&want), "digit {d}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! precisely on bad inputs — and keep serving after a rejected request.
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::runtime::{ArtifactManifest, Runtime};
+use pasm_accel::tensor::Tensor;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasm_fail_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_mentions_make_artifacts() {
+    let dir = tmpdir("missing");
+    let err = ArtifactManifest::load(&dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(ArtifactManifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    let dir = tmpdir("fields");
+    std::fs::write(dir.join("manifest.json"), r#"{"format": "hlo-text"}"#).unwrap();
+    let err = ArtifactManifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("tile"));
+}
+
+#[test]
+fn dangling_artifact_path_fails_at_load() {
+    // valid manifest structure, but the HLO file it names does not exist
+    let real = ArtifactManifest::load("artifacts").expect("run `make artifacts` first");
+    let dir = tmpdir("dangling");
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
+    // no hlo files copied
+    let rt = Runtime::new(&dir).expect("manifest parse should succeed");
+    let err = match rt.load_tile("pasm_tile") {
+        Ok(_) => panic!("load of dangling artifact should fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("pasm_tile") || msg.contains("hlo"),
+        "error should name the artifact: {msg}"
+    );
+    drop(real);
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile() {
+    let dir = tmpdir("badhlo");
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
+    std::fs::write(dir.join("pasm_tile.hlo.txt"), "HloModule garbage\nnot hlo").unwrap();
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.load_tile("pasm_tile").is_err());
+}
+
+#[test]
+fn tile_run_validates_shapes() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let tile = rt.load_tile("pasm_tile").unwrap();
+    let good_image = Tensor::<f32>::zeros(&[15, 5, 5]);
+    let good_idx = Tensor::<u16>::zeros(&[2, 15, 3, 3]);
+    let good_cb = vec![0f32; tile.bins];
+    // wrong image shape
+    assert!(tile
+        .run(&Tensor::<f32>::zeros(&[3, 5, 5]), &good_idx, &good_cb)
+        .is_err());
+    // wrong codebook length
+    assert!(tile.run(&good_image, &good_idx, &vec![0f32; 3]).is_err());
+    // good shapes pass
+    assert!(tile.run(&good_image, &good_idx, &good_cb).is_ok());
+}
+
+#[test]
+fn model_rejects_unexported_batch() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let err = match rt.load_model(7) {
+        Ok(_) => panic!("unexported batch size should fail"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("7"));
+}
+
+#[test]
+fn coordinator_survives_bad_request() {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(21);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default())
+        .expect("run `make artifacts` first");
+
+    // wrong-shaped image: the whole batch it rides in fails, but the
+    // coordinator must answer (with an error) and keep serving
+    let bad = Tensor::<f32>::zeros(&[3, 3, 3]);
+    let rx = coord.submit(bad).unwrap();
+    let resp = rx.recv().expect("coordinator dropped the bad request");
+    assert!(resp.is_err(), "bad shape must be rejected");
+
+    // and a good request afterwards still works
+    let good = render_digit(&mut rng, 4, 0.05);
+    let resp = coord.infer(good).expect("coordinator died after bad request");
+    assert_eq!(resp.logits.len(), 10);
+}
+
+#[test]
+fn coordinator_bad_artifacts_dir_fails_at_startup() {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(22);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+    let err = Coordinator::start("/nonexistent_dir", enc, BatchPolicy::default());
+    assert!(err.is_err());
+}

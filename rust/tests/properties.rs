@@ -1,0 +1,261 @@
+//! Property-based tests (hand-rolled generator loop — proptest is not
+//! available in the offline build; seeds are deterministic so failures
+//! reproduce).
+//!
+//! The central invariant is the paper's §5.3 claim: over the integers,
+//! PASM, the weight-shared MAC and the decoded direct convolution are the
+//! *same function*.  Plus: simulator ≡ functional dataflow, latency
+//! formulas, model monotonicity, quantizer and batcher invariants, and
+//! fuzzing the JSON parser.
+
+use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
+use pasm_accel::accel::standalone::StandaloneUnit;
+use pasm_accel::cnn::conv::{
+    direct_conv_f32, pasm_conv_f32, pasm_conv_fx, ws_conv_f32, ws_conv_fx, FxConvInputs,
+};
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::coordinator::BatchPolicy;
+use pasm_accel::hw::Tech;
+use pasm_accel::quant::codebook::encode_weights;
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::quant::kmeans::kmeans_1d;
+use pasm_accel::sim::conv::simulate_conv;
+use pasm_accel::sim::standalone::{random_streams, simulate_standalone};
+use pasm_accel::tensor::{ConvShape, Tensor};
+use std::time::Duration;
+
+/// Random conv case: shapes small enough for exhaustive loops but covering
+/// stride, 1x1 kernels, many channels, bin counts 2..64.
+struct Case {
+    image: Tensor<f32>,
+    weights: Tensor<f32>,
+    bins: usize,
+    stride: usize,
+    shape: ConvShape,
+}
+
+fn random_case(rng: &mut Rng) -> Case {
+    let c = 1 + rng.below(6);
+    let k = 1 + rng.below(3);
+    let extra = rng.below(5);
+    let stride = 1 + rng.below(2);
+    let side = k + extra + 1;
+    let m = 1 + rng.below(4);
+    let bins = 1usize << (1 + rng.below(6));
+    let image = Tensor::from_fn(&[c, side, side], |_| rng.signed() * 4.0);
+    let weights = Tensor::from_fn(&[m, c, k, k], |_| rng.signed());
+    let shape = ConvShape::new(c, side, side, k, k, m, stride);
+    Case { image, weights, bins, stride, shape }
+}
+
+#[test]
+fn prop_pasm_ws_direct_equivalent_f32() {
+    let mut rng = Rng::new(1001);
+    for case_i in 0..60 {
+        let case = random_case(&mut rng);
+        let enc = encode_weights(&case.weights, case.bins, QFormat::W32);
+        let cb = &enc.codebook.values;
+        let pasm = pasm_conv_f32(&case.image, &enc.bin_idx, cb, case.stride);
+        let ws = ws_conv_f32(&case.image, &enc.bin_idx, cb, case.stride);
+        let direct = direct_conv_f32(&case.image, &enc.decode(), case.stride);
+        assert!(pasm.max_abs_diff(&ws) < 1e-3, "case {case_i}: pasm vs ws");
+        assert!(ws.max_abs_diff(&direct) < 1e-3, "case {case_i}: ws vs direct");
+        assert_eq!(pasm.dims(), case.shape.out_shape().dims());
+    }
+}
+
+#[test]
+fn prop_pasm_ws_bitexact_fixed_point() {
+    // §5.3 exactness, in integers, across the whole shape space
+    let mut rng = Rng::new(2002);
+    for case_i in 0..60 {
+        let case = random_case(&mut rng);
+        let enc = encode_weights(&case.weights, case.bins, QFormat::W16);
+        let inp = FxConvInputs::encode(&case.image, &enc, QFormat::IMAGE32, case.stride);
+        assert_eq!(
+            ws_conv_fx(&inp).data(),
+            pasm_conv_fx(&inp).data(),
+            "case {case_i}"
+        );
+    }
+}
+
+#[test]
+fn prop_simulator_matches_functional() {
+    let mut rng = Rng::new(3003);
+    for case_i in 0..25 {
+        let case = random_case(&mut rng);
+        let enc = encode_weights(&case.weights, case.bins, QFormat::W16);
+        let inp = FxConvInputs::encode(&case.image, &enc, QFormat::IMAGE32, case.stride);
+        for variant in [ConvVariantKind::WeightShared, ConvVariantKind::Pasm] {
+            let accel = ConvAccel::new(variant, case.shape.clone(), case.bins, 16);
+            let sim = simulate_conv(&accel, &inp);
+            let want = match variant {
+                ConvVariantKind::Pasm => pasm_conv_fx(&inp),
+                _ => ws_conv_fx(&inp),
+            };
+            assert_eq!(sim.out.data(), want.data(), "case {case_i} {variant:?}");
+            assert!(sim.cycles > 0);
+        }
+    }
+}
+
+#[test]
+fn prop_standalone_sim_invariants() {
+    let mut rng = Rng::new(4004);
+    for case_i in 0..20 {
+        let bins = 1usize << (1 + rng.below(6));
+        let n = 16 + rng.below(200);
+        let streams = random_streams(&mut rng, 16, n, bins, 1 << 16);
+        let cb: Vec<i64> = (0..bins).map(|_| (rng.signed() * 1e4) as i64).collect();
+        let mac = StandaloneUnit::mac16(32, bins);
+        let pasm = StandaloneUnit::pas16mac4(32, bins);
+        let rm = simulate_standalone(&mac, &streams, &cb);
+        let rp = simulate_standalone(&pasm, &streams, &cb);
+        // identical results (§5.3), exact cycle formulas (§2.2)
+        assert_eq!(rm.results, rp.results, "case {case_i}");
+        assert_eq!(rm.cycles, mac.stream_cycles(n as u64));
+        assert_eq!(rp.cycles, pasm.stream_cycles(n as u64));
+        // activities are probabilities
+        assert!(rp.activity.mean() >= 0.0 && rp.activity.mean() <= 1.0);
+    }
+}
+
+#[test]
+fn prop_latency_model_invariants() {
+    for bins in [2usize, 4, 8, 16, 32, 64] {
+        let ws = ConvAccel::paper(ConvVariantKind::WeightShared, bins, 32);
+        let pasm = ConvAccel::paper(ConvVariantKind::Pasm, bins, 32);
+        // PASM always costs extra cycles, and the overhead grows with B
+        assert!(pasm.latency_cycles_exact() > ws.latency_cycles_exact());
+        let mut more_muls = pasm.clone();
+        more_muls.hls = more_muls.hls.with_postpass_muls(4);
+        assert!(more_muls.latency_cycles_exact() <= pasm.latency_cycles_exact());
+    }
+    let overhead = |b: usize| {
+        let ws = ConvAccel::paper(ConvVariantKind::WeightShared, b, 32);
+        let pasm = ConvAccel::paper(ConvVariantKind::Pasm, b, 32);
+        pasm.latency_cycles_exact() / ws.latency_cycles_exact()
+    };
+    assert!(overhead(4) < overhead(8) && overhead(8) < overhead(16));
+}
+
+#[test]
+fn prop_gate_model_monotonicity() {
+    let t = Tech::asic_100mhz();
+    // standalone units grow with W and with B
+    let mut prev = 0.0;
+    for w in [4u32, 8, 16, 32] {
+        let g = StandaloneUnit::mac16(w, 16).gates(&t).total();
+        assert!(g > prev, "W={w}");
+        prev = g;
+    }
+    let mut prev = 0.0;
+    for b in [4usize, 16, 64, 256] {
+        let g = StandaloneUnit::pas16mac4(32, b).gates(&t).total();
+        assert!(g > prev, "B={b}");
+        prev = g;
+    }
+    // power is positive and leakage scales with gates
+    for b in [4usize, 64] {
+        let u = StandaloneUnit::pas16mac4(32, b);
+        let p = u.power(&t);
+        assert!(p.leakage_w > 0.0 && p.dynamic_w > 0.0);
+    }
+}
+
+#[test]
+fn prop_quantizer_invariants() {
+    let mut rng = Rng::new(5005);
+    for case_i in 0..40 {
+        let n = 4 + rng.below(400);
+        let bins = 1 + rng.below(32);
+        let data: Vec<f32> = (0..n).map(|_| rng.signed() * 3.0).collect();
+        let r = kmeans_1d(&data, bins, 40);
+        assert_eq!(r.codebook.len(), bins, "case {case_i}");
+        assert!(r.codebook.iter().all(|c| c.is_finite()));
+        assert!(r.assignments.iter().all(|&a| (a as usize) < bins));
+        // nearest-centroid property
+        for (&x, &a) in data.iter().zip(&r.assignments) {
+            let d = (x - r.codebook[a as usize]).abs();
+            for &c in &r.codebook {
+                assert!(d <= (x - c).abs() + 1e-5, "case {case_i}");
+            }
+        }
+        // reconstruction error bounded by data span
+        let span = data.iter().cloned().fold(f32::MIN, f32::max)
+            - data.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(r.mse.sqrt() <= span as f64 + 1e-6);
+    }
+}
+
+#[test]
+fn prop_batch_policy_invariants() {
+    let mut rng = Rng::new(6006);
+    for _ in 0..200 {
+        let mut buckets: Vec<usize> = (0..1 + rng.below(4))
+            .map(|_| 1 + rng.below(32))
+            .collect();
+        buckets.push(1 + rng.below(32));
+        let policy = BatchPolicy::new(buckets.clone(), Duration::from_millis(1));
+        let queued = rng.below(64);
+        let expired = rng.below(2) == 0;
+        match policy.decide(queued, expired) {
+            Some(bucket) => {
+                assert!(policy.buckets.contains(&bucket), "bucket must be exported");
+                assert!(queued > 0);
+                // never launch a padded batch unless forced
+                if !expired && queued < policy.max_bucket() {
+                    assert_eq!(bucket, queued, "non-expired partial launch must fill exactly");
+                }
+            }
+            None => {
+                // waiting is only allowed if nothing launchable
+                assert!(
+                    queued == 0 || (!expired && queued < policy.max_bucket()),
+                    "queued={queued} expired={expired} buckets={:?}",
+                    policy.buckets
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics() {
+    use pasm_accel::runtime::json::parse;
+    let mut rng = Rng::new(7007);
+    let alphabet: Vec<char> = r#"{}[]",:0123456789.eE+-truefalsn \u"#.chars().collect();
+    for _ in 0..500 {
+        let len = rng.below(64);
+        let doc: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        let _ = parse(&doc); // must not panic, Ok or Err both fine
+    }
+    // and valid docs parse
+    assert!(parse(r#"{"a":[1,2,3],"b":{"c":null}}"#).is_ok());
+}
+
+#[test]
+fn prop_fx_encode_bounded_error() {
+    // fixed-point conv vs f32 conv over the fx-rounded codebook: error
+    // bounded by image quantization ulp x taps x max|w|
+    let mut rng = Rng::new(8008);
+    for case_i in 0..20 {
+        let case = random_case(&mut rng);
+        let enc = encode_weights(&case.weights, case.bins, QFormat::W16);
+        let inp = FxConvInputs::encode(&case.image, &enc, QFormat::IMAGE32, case.stride);
+        let fx = ws_conv_fx(&inp);
+        let scale = (1u64 << inp.out_frac()) as f32;
+        let fxf = fx.map(|r| r as f32 / scale);
+        let cb_fx: Vec<f32> = enc
+            .codebook
+            .raw()
+            .iter()
+            .map(|&r| enc.codebook.wq.decode(r) as f32)
+            .collect();
+        let f = ws_conv_f32(&case.image, &enc.bin_idx, &cb_fx, case.stride);
+        let taps = case.shape.taps() as f32;
+        let tol = QFormat::IMAGE32.ulp() as f32 * taps * 1.5 + 1e-3;
+        assert!(fxf.max_abs_diff(&f) < tol, "case {case_i}: {}", fxf.max_abs_diff(&f));
+    }
+}

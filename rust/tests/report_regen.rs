@@ -1,0 +1,126 @@
+//! Integration: the report generator reproduces every qualitative claim of
+//! the paper's evaluation (the quantitative residuals live in
+//! EXPERIMENTS.md).  This is the regression net for the calibrated models:
+//! if someone retunes a constant and flips a conclusion, these fail.
+
+use pasm_accel::report::{all_report_ids, run_report};
+
+fn note(id: &str) -> String {
+    run_report(id).unwrap().notes.join(" ")
+}
+
+fn pct_in_note(id: &str) -> f64 {
+    // first signed percentage in the notes, as a fraction
+    let n = note(id);
+    let idx = n.find(['+', '-']).unwrap_or_else(|| panic!("{id}: no pct in '{n}'"));
+    let tail = &n[idx..];
+    let end = tail.find('%').unwrap();
+    tail[..end].parse::<f64>().unwrap() / 100.0
+}
+
+#[test]
+fn all_fifteen_exhibits_regenerate() {
+    let ids = all_report_ids();
+    assert_eq!(ids.len(), 15, "2 tables + 13 figures");
+    for id in ids {
+        let r = run_report(id).unwrap();
+        assert!(!r.rows.is_empty());
+        assert!(!r.render().is_empty());
+    }
+}
+
+#[test]
+fn fig7_pasm_large_gate_saving_at_w32() {
+    // paper: -66%; model should be a large negative saving
+    let v = pct_in_note("fig7");
+    assert!(v < -0.40, "fig7 W=32 saving {v}");
+}
+
+#[test]
+fn fig8_pasm_large_power_saving_at_w32() {
+    // paper: -70%
+    let v = pct_in_note("fig8");
+    assert!(v < -0.50, "fig8 W=32 power saving {v}");
+}
+
+#[test]
+fn fig15_pasm_wins_4bin() {
+    // paper: -47.8% gates, -53.2% power
+    let v = pct_in_note("fig15");
+    assert!(v < -0.35, "fig15 saving {v}");
+}
+
+#[test]
+fn fig16_pasm_wins_8bin_smaller() {
+    // paper: -8.1% gates
+    let v15 = pct_in_note("fig15");
+    let v16 = pct_in_note("fig16");
+    assert!(v16 < 0.0, "fig16 should still save: {v16}");
+    assert!(v16 > v15, "8-bin saving must be smaller than 4-bin");
+}
+
+#[test]
+fn fig17_pasm_loses_16bin() {
+    // paper: PASM worse at 16-bin/32-bit, 1 GHz
+    let v = pct_in_note("fig17");
+    assert!(v > 0.0, "fig17 should show PASM worse: {v}");
+}
+
+#[test]
+fn fig18_8bit_kernels_still_win() {
+    // paper: -19.8% gates, -31.3% power at 8-bit/4-bin
+    let v = pct_in_note("fig18");
+    assert!(v < 0.0, "fig18 saving {v}");
+}
+
+#[test]
+fn fpga_figs_dsp_and_power() {
+    // paper: 99% fewer DSPs in every FPGA config; power saving shrinks
+    // with bins but never flips at 200 MHz
+    for id in ["fig19", "fig20", "fig21", "fig22"] {
+        let n = note(id);
+        assert!(n.contains("-99"), "{id}: DSP saving missing in '{n}'");
+    }
+    // last percentage in the note is the power saving
+    let power_pct = |id: &str| {
+        let n = note(id);
+        let parts: Vec<f64> = n
+            .split('%')
+            .filter_map(|chunk| {
+                let idx = chunk.rfind(['+', '-'])?;
+                chunk[idx..].parse::<f64>().ok()
+            })
+            .collect();
+        *parts.last().unwrap()
+    };
+    let p19 = power_pct("fig19");
+    let p20 = power_pct("fig20");
+    let p21 = power_pct("fig21");
+    assert!(p19 < p20 && p20 < p21, "power savings shrink: {p19} {p20} {p21}");
+    assert!(p21 < 0.0, "16-bin FPGA power saving must stay positive: {p21}");
+}
+
+#[test]
+fn fig14_latency_band() {
+    // paper: +8.5% (4-bin) .. +12.75% (16-bin)
+    let r = run_report("fig14").unwrap();
+    // column 3 is the overhead
+    let overhead: Vec<f64> = r
+        .rows
+        .iter()
+        .map(|row| row[3].trim_end_matches('%').parse::<f64>().unwrap() / 100.0)
+        .collect();
+    assert!(overhead[0] > 0.05 && overhead[0] < 0.12, "4-bin {}", overhead[0]);
+    assert!(overhead[2] > 0.10 && overhead[2] < 0.16, "16-bin {}", overhead[2]);
+    assert!(overhead.windows(2).all(|w| w[0] <= w[1]), "monotone in B");
+}
+
+#[test]
+fn table2_exact() {
+    let r = run_report("table2").unwrap();
+    // row "5x5", column C=32 -> 800
+    let row = r.rows.iter().find(|row| row[0] == "5x5").unwrap();
+    assert_eq!(row[1], "800");
+    let row7 = r.rows.iter().find(|row| row[0] == "7x7").unwrap();
+    assert_eq!(row7[3], "25088");
+}

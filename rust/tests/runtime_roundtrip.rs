@@ -1,0 +1,112 @@
+//! Integration: AOT artifacts (JAX/Pallas -> HLO text) executed via PJRT
+//! must match the rust functional dataflows — the cross-layer correctness
+//! proof that L1/L2 and L3 compute the same convolution.
+//!
+//! Requires `make artifacts` (part of the prescribed `make test` flow).
+
+use pasm_accel::cnn::conv::{pasm_conv_f32, ws_conv_f32};
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::runtime::client::ModelParams;
+use pasm_accel::runtime::Runtime;
+use pasm_accel::tensor::Tensor;
+
+fn tile_case(seed: u64, bins: usize) -> (Tensor<f32>, Tensor<u16>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let image = Tensor::from_fn(&[15, 5, 5], |_| rng.signed() * 2.0);
+    let bin_idx = Tensor::from_fn(&[2, 15, 3, 3], |_| rng.below(bins) as u16);
+    let codebook: Vec<f32> = (0..bins).map(|_| rng.signed()).collect();
+    (image, bin_idx, codebook)
+}
+
+fn max_abs_diff(a: &Tensor<f32>, b: &Tensor<f32>) -> f32 {
+    a.max_abs_diff(b)
+}
+
+#[test]
+fn pasm_tile_matches_rust_reference() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let tile = rt.load_tile("pasm_tile").unwrap();
+    for seed in [1u64, 2, 3] {
+        let (image, bin_idx, cb) = tile_case(seed, tile.bins);
+        let got = tile.run(&image, &bin_idx, &cb).unwrap();
+        let want = pasm_conv_f32(&image, &bin_idx, &cb, 1);
+        assert!(
+            max_abs_diff(&got, &want) < 1e-3,
+            "seed {seed}: diff {}",
+            max_abs_diff(&got, &want)
+        );
+    }
+}
+
+#[test]
+fn ws_tile_matches_rust_reference_and_pasm_tile() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let ws = rt.load_tile("ws_tile").unwrap();
+    let pasm = rt.load_tile("pasm_tile").unwrap();
+    let (image, bin_idx, cb) = tile_case(7, ws.bins);
+    let got_ws = ws.run(&image, &bin_idx, &cb).unwrap();
+    let got_pasm = pasm.run(&image, &bin_idx, &cb).unwrap();
+    let want = ws_conv_f32(&image, &bin_idx, &cb, 1);
+    assert!(max_abs_diff(&got_ws, &want) < 1e-3);
+    // paper §5.3: identical results between the two accelerators
+    assert!(max_abs_diff(&got_ws, &got_pasm) < 1e-3);
+}
+
+#[test]
+fn model_artifact_matches_rust_forward() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let exe = rt.load_model(1).unwrap();
+
+    // random encoded network + one digit image
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(11);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+    let img = pasm_accel::cnn::data::render_digit(&mut rng, 4, 0.05);
+
+    let batch = Tensor::from_vec(
+        &[1, 1, 12, 12],
+        img.data().to_vec(),
+    );
+    let logits = exe.run(&batch, &ModelParams::from_encoded(&enc)).unwrap();
+    let want = enc.forward(&img, ConvVariant::Pasm);
+
+    for (i, (&got, &w)) in logits.data().iter().zip(want.iter()).enumerate() {
+        assert!(
+            (got - w).abs() < 1e-2,
+            "logit {i}: pjrt {got} vs rust {w}"
+        );
+    }
+}
+
+#[test]
+fn model_batch8_rows_independent() {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+    let exe = rt.load_model(8).unwrap();
+
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(13);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
+    let mp = ModelParams::from_encoded(&enc);
+
+    let mut data = Vec::new();
+    let mut imgs = Vec::new();
+    for d in 0..8usize {
+        let img = pasm_accel::cnn::data::render_digit(&mut rng, d % 10, 0.05);
+        data.extend_from_slice(img.data());
+        imgs.push(img);
+    }
+    let batch = Tensor::from_vec(&[8, 1, 12, 12], data);
+    let logits = exe.run(&batch, &mp).unwrap();
+
+    for (i, img) in imgs.iter().enumerate() {
+        let want = enc.forward(img, ConvVariant::Pasm);
+        for (j, &w) in want.iter().enumerate() {
+            let got = logits.data()[i * 10 + j];
+            assert!((got - w).abs() < 1e-2, "row {i} logit {j}: {got} vs {w}");
+        }
+    }
+}
