@@ -1,26 +1,25 @@
-//! End-to-end driver (DESIGN.md §6): the full three-layer stack on a real
-//! small workload.
+//! End-to-end driver: the full three-layer stack on a real small workload.
 //!
 //! 1. Generate a synthetic 10-class digit dataset (train/test).
 //! 2. Train the float digits CNN in rust (SGD, hand-written backprop).
 //! 3. K-means-quantize both conv layers to B=16 shared weights
 //!    (deep-compression style — the paper's precondition).
 //! 4. Serve a batch of inference requests through the **coordinator**:
-//!    numerics on the PJRT-compiled PASM model (AOT-lowered JAX/Pallas),
-//!    hardware cost on the 45 nm PASM accelerator model.
+//!    numerics on the configured execution backend (the in-process
+//!    `NativeBackend` by default; the AOT-lowered PJRT/Pallas model with
+//!    `--features pjrt` after `make artifacts`), hardware cost on the
+//!    45 nm PASM accelerator model.
 //! 5. Verify: PASM ≡ WS numerics (paper §5.3), quantized accuracy ≈ float
 //!    accuracy (Han et al.'s observation), and report latency/throughput.
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
-//!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_inference
+//! cargo run --release --example e2e_inference
 //! ```
 
 use pasm_accel::cnn::data::{train_test, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
 use pasm_accel::cnn::train::{train, TrainConfig};
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{default_backend, BatchPolicy, CoordinatorBuilder};
 use pasm_accel::quant::fixed::QFormat;
 use std::time::{Duration, Instant};
 
@@ -67,12 +66,12 @@ fn main() -> anyhow::Result<()> {
         "paper §5.3: PASM must not change accuracy vs WS"
     );
 
-    // ---- 4) serve through the coordinator (PJRT numerics) ----
-    let coord = Coordinator::start(
-        "artifacts",
-        enc.clone(),
-        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
-    )?;
+    // ---- 4) serve through the coordinator ----
+    let coord = CoordinatorBuilder::new()
+        .boxed_backend(default_backend("artifacts", enc.clone()))
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+        .build()?;
+    let backend_name = coord.metrics().backend;
     let t0 = Instant::now();
     let rxs: Vec<_> = test_set
         .iter()
@@ -85,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         if resp.predicted == s.label {
             correct += 1;
         }
-        // coordinator (PJRT/Pallas) vs in-process rust reference
+        // serving backend vs in-process rust reference
         let want = enc.forward(&s.image, ConvVariant::Pasm);
         if resp.predicted == pasm_accel::cnn::layer::argmax(&want) {
             agree += 1;
@@ -94,15 +93,16 @@ fn main() -> anyhow::Result<()> {
     let dt = t0.elapsed();
     let served_acc = correct as f64 / test_set.len() as f64;
     println!(
-        "served {} requests in {:?} ({:.1} req/s): accuracy {:.1}%, PJRT/rust agreement {}/{}",
+        "served {} requests in {:?} ({:.1} req/s) on '{}': accuracy {:.1}%, backend/reference agreement {}/{}",
         test_set.len(),
         dt,
         test_set.len() as f64 / dt.as_secs_f64(),
+        backend_name,
         served_acc * 100.0,
         agree,
         test_set.len()
     );
-    assert_eq!(agree, test_set.len(), "PJRT and rust forward must agree");
+    assert_eq!(agree, test_set.len(), "backend and rust reference forward must agree");
 
     // ---- 5) metrics + hardware cost ----
     let m = coord.metrics();
@@ -122,9 +122,10 @@ fn main() -> anyhow::Result<()> {
         m.sim_energy_j * 1e9 / test_set.len() as f64
     );
 
-    // summary line for EXPERIMENTS.md
+    // summary line for the experiment log
     println!(
-        "\nE2E-SUMMARY float_acc={:.3} ws_acc={:.3} pasm_acc={:.3} served_acc={:.3} req_per_s={:.1} p50_us={} sim_cycles={} sim_uJ={:.3}",
+        "\nE2E-SUMMARY backend={} float_acc={:.3} ws_acc={:.3} pasm_acc={:.3} served_acc={:.3} req_per_s={:.1} p50_us={} sim_cycles={} sim_uJ={:.3}",
+        backend_name,
         float_acc,
         ws_acc,
         pasm_acc,

@@ -2,14 +2,17 @@
 //! coordinator at increasing offered rates — the standard serving curve
 //! (latency stays flat until the knee, then queueing blows it up).
 //!
+//! Runs on the in-process [`NativeBackend`] by default; build with
+//! `--features pjrt` (after `make artifacts`) for the PJRT/Pallas model.
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example latency_under_load
+//! cargo run --release --example latency_under_load
 //! ```
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
 use pasm_accel::coordinator::loadgen::run_open_loop;
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{default_backend, BatchPolicy, CoordinatorBuilder};
 use pasm_accel::quant::fixed::QFormat;
 use std::time::Duration;
 
@@ -18,11 +21,11 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(61);
     let params = arch.init(&mut rng);
     let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
-    let coord = Coordinator::start(
-        "artifacts",
-        enc,
-        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
-    )?;
+
+    let coord = CoordinatorBuilder::new()
+        .boxed_backend(default_backend("artifacts", enc))
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+        .build()?;
 
     let pool: Vec<_> = (0..64).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect();
 
@@ -36,7 +39,10 @@ fn main() -> anyhow::Result<()> {
         rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
     }
     let capacity = burst as f64 / t0.elapsed().as_secs_f64();
-    println!("capacity probe: ~{capacity:.0} req/s (burst, full batches)\n");
+    println!(
+        "capacity probe ({} backend): ~{capacity:.0} req/s (burst, full batches)\n",
+        coord.metrics().backend
+    );
 
     println!(
         "{:>9} {:>10} {:>9} {:>9} {:>9} {:>9} {:>7}",

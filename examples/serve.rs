@@ -2,14 +2,18 @@
 //! from multiple client threads, reporting latency/throughput percentiles
 //! and the simulated PASM accelerator cost.
 //!
+//! Serves on the in-process [`NativeBackend`] by default (no artifacts
+//! needed); build with `--features pjrt` (after `make artifacts`) to serve
+//! the AOT-compiled PJRT/Pallas model instead.
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example serve -- 4 200
-//! #                                  client threads ----^   ^---- requests each
+//! cargo run --release --example serve -- 4 200
+//! #       client threads ----^   ^---- requests each
 //! ```
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{default_backend, BatchPolicy, CoordinatorBuilder};
 use pasm_accel::quant::fixed::QFormat;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,12 +28,16 @@ fn main() -> anyhow::Result<()> {
     let params = arch.init(&mut rng);
     let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
 
-    let coord = Arc::new(Coordinator::start(
-        "artifacts",
-        enc,
-        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
-    )?);
-    println!("coordinator up; {threads} clients x {per_thread} requests");
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .boxed_backend(default_backend("artifacts", enc))
+            .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+            .build()?,
+    );
+    println!(
+        "coordinator up ({} backend); {threads} clients x {per_thread} requests",
+        coord.metrics().backend
+    );
 
     let t0 = Instant::now();
     let handles: Vec<_> = (0..threads)

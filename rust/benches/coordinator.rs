@@ -1,13 +1,13 @@
 //! `cargo bench --bench coordinator` — end-to-end serving benchmark: the
-//! paper's system serving batched inference through the PJRT-compiled PASM
-//! model.  Reports request throughput, latency percentiles, batch
-//! occupancy, and the simulated accelerator cost per request.
-//!
-//! Requires `make artifacts` (run via `make bench`).
+//! paper's system serving batched inference through the configured
+//! execution backend (native reference kernels by default; the
+//! PJRT-compiled PASM model with `--features pjrt` after `make artifacts`).
+//! Reports request throughput, latency percentiles, batch occupancy, and
+//! the simulated accelerator cost per request.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{default_backend, BatchPolicy, CoordinatorBuilder};
 use pasm_accel::quant::fixed::QFormat;
 use std::time::{Duration, Instant};
 
@@ -17,12 +17,12 @@ fn main() {
     let params = arch.init(&mut rng);
     let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
 
-    let coord = Coordinator::start(
-        "artifacts",
-        enc,
-        BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)),
-    )
-    .expect("run `make artifacts` first");
+    let coord = CoordinatorBuilder::new()
+        .boxed_backend(default_backend("artifacts", enc))
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+        .build()
+        .expect("coordinator startup");
+    println!("backend: {}", coord.metrics().backend);
 
     // pre-render a request pool
     let pool: Vec<_> = (0..256)

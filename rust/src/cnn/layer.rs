@@ -100,6 +100,61 @@ pub fn dense(feat: &[f32], w: &Tensor<f32>, b: &[f32]) -> Vec<f32> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Fixed-point (raw integer) layer variants — the datapath the accelerator
+// actually implements.  Bias/ReLU/max-pool are order-preserving on raw
+// two's-complement values, so the paper's §5.3 PASM ≡ WS bit-exactness
+// carries through the whole network, not just the conv layers.
+// ---------------------------------------------------------------------------
+
+/// Add a per-output-channel raw bias in place: `x[m,·,·] += bias_raw[m]`.
+/// `bias_raw` must carry the same fractional bits as `x`.
+pub fn add_bias_fx(x: &mut Tensor<i64>, bias_raw: &[i64]) {
+    let dims = x.dims().to_vec();
+    assert_eq!(dims.len(), 3, "bias expects [M,H,W]");
+    assert_eq!(dims[0], bias_raw.len(), "bias length mismatch");
+    let plane = dims[1] * dims[2];
+    for (m, &b) in bias_raw.iter().enumerate() {
+        for v in &mut x.data_mut()[m * plane..(m + 1) * plane] {
+            *v = v.checked_add(b).expect("bias add overflow");
+        }
+    }
+}
+
+/// ReLU in place on raw values (sign test is format-independent).
+pub fn relu_fx(x: &mut Tensor<i64>) {
+    for v in x.data_mut() {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// 2x2 stride-2 VALID max-pool over raw `[C,H,W]` values.  Max commutes
+/// with the (monotonic) fixed-point encoding, so this matches [`maxpool2`]
+/// on the decoded values exactly.
+pub fn maxpool2_fx(x: &Tensor<i64>) -> Tensor<i64> {
+    let dims = x.dims();
+    assert_eq!(dims.len(), 3);
+    let (c, h, w) = (dims[0], dims[1], dims[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = i64::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(x.at(&[ci, oy * 2 + dy, ox * 2 + dx]));
+                    }
+                }
+                *out.at_mut(&[ci, oy, ox]) = m;
+            }
+        }
+    }
+    out
+}
+
 /// Numerically-stable softmax.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
     let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -188,5 +243,37 @@ mod tests {
     fn softmax_large_values_stable() {
         let p = softmax(&[1000.0, 1000.0]);
         assert!((p[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fx_bias_relu_match_float() {
+        // raw-integer bias/ReLU agree with the float path after decoding
+        let frac = 8u32;
+        let scale = (1i64 << frac) as f32;
+        let vals = [-1.5f32, 0.25, 2.0, -0.125];
+        let mut xf = Tensor::from_vec(&[2, 1, 2], vals.to_vec());
+        let mut xr = xf.map(|v| (v * scale) as i64);
+        add_bias(&mut xf, &[0.5, -1.0]);
+        relu(&mut xf);
+        add_bias_fx(&mut xr, &[(0.5 * scale as f64) as i64, (-1.0 * scale as f64) as i64]);
+        relu_fx(&mut xr);
+        for (r, f) in xr.data().iter().zip(xf.data()) {
+            assert!((*r as f32 / scale - f).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fx_maxpool_matches_float_order() {
+        let x = Tensor::from_vec(&[1, 2, 4], vec![1i64, 2, 5, 6, 3, 4, 7, 8]);
+        let p = maxpool2_fx(&x);
+        assert_eq!(p.dims(), &[1, 1, 2]);
+        assert_eq!(p.data(), &[4, 8]);
+    }
+
+    #[test]
+    fn fx_maxpool_negative_values() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![-9i64, -1, -4, -2]);
+        let p = maxpool2_fx(&x);
+        assert_eq!(p.data(), &[-1]);
     }
 }

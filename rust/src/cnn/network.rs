@@ -10,10 +10,14 @@
 //!          -conv2(16,3x3)-> [16,3,3] -+bias,relu-> flatten(144) -dense-> 10
 //! ```
 
-use crate::cnn::conv::{direct_conv_f32, pasm_conv_f32, ws_conv_f32};
-use crate::cnn::layer::{add_bias, argmax, dense, maxpool2, relu};
+use crate::cnn::conv::{
+    direct_conv_f32, pasm_conv_f32, pasm_conv_fx, ws_conv_f32, ws_conv_fx, FxConvInputs,
+};
+use crate::cnn::layer::{
+    add_bias, add_bias_fx, argmax, dense, maxpool2, maxpool2_fx, relu, relu_fx,
+};
 use crate::quant::codebook::{encode_weights, EncodedWeights};
-use crate::quant::fixed::QFormat;
+use crate::quant::fixed::{fx_rescale, QFormat};
 use crate::tensor::{ConvShape, Tensor};
 
 /// Float parameters of the digits CNN.
@@ -154,6 +158,54 @@ impl EncodedCnn {
         dense(&feat, &self.dense_w, &self.dense_b)
     }
 
+    /// Fixed-point forward: both conv layers run the raw-integer dataflows
+    /// (`ws_conv_fx` / `pasm_conv_fx`) with images in format `iq`,
+    /// activations requantized back to `iq` between layers, and the dense
+    /// head in float (as in the paper — PASM targets the conv layers).
+    ///
+    /// Because integer addition commutes, the PASM and WS variants of this
+    /// forward are **bit-identical** end to end (paper §5.3 lifted from one
+    /// layer to the whole network); the coordinator's `NativeBackend` serves
+    /// exactly this function in its fixed-point mode.
+    pub fn forward_fx(&self, image: &Tensor<f32>, variant: ConvVariant, iq: QFormat) -> Vec<f32> {
+        let conv = |inp: &FxConvInputs| match variant {
+            ConvVariant::WeightShared => ws_conv_fx(inp),
+            ConvVariant::Pasm => pasm_conv_fx(inp),
+        };
+        let bias_raw = |bias: &[f32], frac: u32| -> Vec<i64> {
+            let scale = (1u64 << frac) as f64;
+            bias.iter().map(|&b| (b as f64 * scale).round() as i64).collect()
+        };
+
+        let inp1 = FxConvInputs::encode(image, &self.conv1, iq, 1);
+        let frac1 = inp1.out_frac();
+        let mut h = conv(&inp1);
+        add_bias_fx(&mut h, &bias_raw(&self.conv1_b, frac1));
+        relu_fx(&mut h);
+        let h = maxpool2_fx(&h);
+
+        // requantize activations back to the image format for conv2,
+        // saturating to the format's width (the narrowing a hardware
+        // output stage performs)
+        let inp2 = FxConvInputs {
+            image_raw: h
+                .map(|r| fx_rescale(r, frac1, iq.frac).clamp(iq.min_raw(), iq.max_raw())),
+            bin_idx: self.conv2.bin_idx.clone(),
+            codebook_raw: self.conv2.codebook.raw(),
+            iq,
+            wq: self.conv2.codebook.wq,
+            stride: 1,
+        };
+        let frac2 = inp2.out_frac();
+        let mut h = conv(&inp2);
+        add_bias_fx(&mut h, &bias_raw(&self.conv2_b, frac2));
+        relu_fx(&mut h);
+
+        let scale2 = (1u64 << frac2) as f64;
+        let feat: Vec<f32> = h.data().iter().map(|&r| (r as f64 / scale2) as f32).collect();
+        dense(&feat, &self.dense_w, &self.dense_b)
+    }
+
     pub fn accuracy(&self, data: &[crate::cnn::data::Sample], variant: ConvVariant) -> f64 {
         let correct = data
             .iter()
@@ -199,6 +251,38 @@ mod tests {
         let b = enc.forward(&img, ConvVariant::Pasm);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fx_forward_pasm_bitexact_ws() {
+        // §5.3 lifted to the whole network: raw-integer PASM and WS
+        // forwards are the same function, bit for bit
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(11);
+        let params = arch.init(&mut rng);
+        let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W16);
+        for d in 0..5usize {
+            let img = render_digit(&mut rng, d, 0.1);
+            let a = enc.forward_fx(&img, ConvVariant::WeightShared, QFormat::IMAGE32);
+            let b = enc.forward_fx(&img, ConvVariant::Pasm, QFormat::IMAGE32);
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "digit {d}");
+        }
+    }
+
+    #[test]
+    fn fx_forward_close_to_f32_forward() {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(12);
+        let params = arch.init(&mut rng);
+        let enc = EncodedCnn::encode(arch, &params, 32, QFormat::W32);
+        let img = render_digit(&mut rng, 4, 0.05);
+        let f = enc.forward(&img, ConvVariant::Pasm);
+        let fx = enc.forward_fx(&img, ConvVariant::Pasm, QFormat::IMAGE32);
+        for (x, y) in f.iter().zip(&fx) {
+            assert!((x - y).abs() < 1e-2, "{x} vs {y}");
         }
     }
 

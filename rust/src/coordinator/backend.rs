@@ -1,0 +1,381 @@
+//! Execution backends: the numerics substrate behind the coordinator.
+//!
+//! The paper's thesis is that PASM changes the *silicon*, not the *math* —
+//! so the serving path must not be welded to one execution substrate.
+//! [`ExecutionBackend`] abstracts "compile this model at a batch size, then
+//! execute padded batches" behind a trait, with two implementations:
+//!
+//! * [`NativeBackend`] — runs the crate's own reference kernels
+//!   ([`crate::cnn::conv`]) directly from an [`EncodedCnn`]: f32, or
+//!   fixed-point raw-integer dataflows where PASM ≡ WS holds bit-exactly.
+//!   No artifacts, no external toolchain — this is the default serving and
+//!   CI path.
+//! * `PjrtBackend` (behind the `pjrt` cargo feature) — wraps the existing
+//!   [`crate::runtime`] PJRT/Pallas path: AOT-lowered HLO artifacts
+//!   compiled once per exported batch bucket (`make artifacts` first).
+//!
+//! Hardware *pricing* is deliberately not here — see
+//! [`crate::coordinator::cost::CostModel`]; any backend's batches can be
+//! priced as Direct / WS-MAC / PASM silicon interchangeably.
+
+use crate::cnn::network::{ConvVariant, EncodedCnn};
+use crate::quant::fixed::QFormat;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A model compiled at one fixed batch size.
+pub trait Executable {
+    /// The batch size this executable was compiled for.
+    fn batch(&self) -> usize;
+
+    /// Execute one padded batch: `[N, C, H, W]` images -> `[N, classes]`
+    /// logits, where `N == self.batch()`.  Rows at index `>= live` are
+    /// zero padding: backends may skip computing them (their logit rows
+    /// are never read), but the output must still be `[N, classes]`.
+    fn execute(&self, padded: &Tensor<f32>, live: usize) -> Result<Tensor<f32>>;
+}
+
+/// A numerics substrate the coordinator can serve from.
+///
+/// Implementations move into the coordinator's worker thread before any
+/// compilation happens (hence `Send`); `compile` is only ever called from
+/// that thread.
+pub trait ExecutionBackend: Send {
+    /// Short label for metrics and logs ("native", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// The dictionary-encoded model this backend serves.
+    fn encoded(&self) -> &EncodedCnn;
+
+    /// Input image dims `[C, H, W]`.
+    fn in_dims(&self) -> [usize; 3] {
+        let arch = &self.encoded().arch;
+        [1, arch.in_side, arch.in_side]
+    }
+
+    /// Number of output classes.
+    fn classes(&self) -> usize {
+        self.encoded().arch.classes
+    }
+
+    /// Batch buckets this backend prefers (e.g. the sizes an AOT flow
+    /// exported).  `None` means any bucket compiles.
+    fn preferred_buckets(&self) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Compile the model at one batch size.
+    fn compile(&self, batch: usize) -> Result<Box<dyn Executable>>;
+}
+
+// ---------------------------------------------------------------------------
+// NativeBackend: the crate's own reference kernels
+// ---------------------------------------------------------------------------
+
+/// Numeric mode of the [`NativeBackend`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativePrecision {
+    /// f32 reference dataflows (`EncodedCnn::forward`) — matches the float
+    /// reference forward bit for bit (same code path).
+    F32,
+    /// Raw-integer fixed-point dataflows (`EncodedCnn::forward_fx`) with
+    /// images in the given format — the paper's bit-exact PASM ≡ WS regime.
+    Fixed(QFormat),
+}
+
+/// In-process backend over the crate's reference kernels: serves an
+/// [`EncodedCnn`] with no artifacts or external runtime.  Any batch size
+/// compiles (the kernels are batch-agnostic; rows execute independently).
+pub struct NativeBackend {
+    enc: Arc<EncodedCnn>,
+    variant: ConvVariant,
+    precision: NativePrecision,
+}
+
+impl NativeBackend {
+    /// PASM dataflow at f32 precision (matching the reference forward).
+    pub fn new(enc: EncodedCnn) -> Self {
+        NativeBackend {
+            enc: Arc::new(enc),
+            variant: ConvVariant::Pasm,
+            precision: NativePrecision::F32,
+        }
+    }
+
+    /// Select the conv dataflow (PASM or weight-shared MAC).
+    pub fn with_variant(mut self, variant: ConvVariant) -> Self {
+        self.variant = variant;
+        self
+    }
+
+    /// Select the numeric mode.
+    pub fn with_precision(mut self, precision: NativePrecision) -> Self {
+        self.precision = precision;
+        self
+    }
+}
+
+impl ExecutionBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn encoded(&self) -> &EncodedCnn {
+        &self.enc
+    }
+
+    fn compile(&self, batch: usize) -> Result<Box<dyn Executable>> {
+        anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        Ok(Box::new(NativeExecutable {
+            enc: Arc::clone(&self.enc),
+            variant: self.variant,
+            precision: self.precision,
+            batch,
+            in_dims: self.in_dims(),
+            classes: self.classes(),
+        }))
+    }
+}
+
+struct NativeExecutable {
+    enc: Arc<EncodedCnn>,
+    variant: ConvVariant,
+    precision: NativePrecision,
+    batch: usize,
+    in_dims: [usize; 3],
+    classes: usize,
+}
+
+impl Executable for NativeExecutable {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn execute(&self, padded: &Tensor<f32>, live: usize) -> Result<Tensor<f32>> {
+        let want = [self.batch, self.in_dims[0], self.in_dims[1], self.in_dims[2]];
+        anyhow::ensure!(
+            padded.dims() == want,
+            "batch images dims {:?} != {:?}",
+            padded.dims(),
+            want
+        );
+        anyhow::ensure!(live <= self.batch, "live {live} exceeds batch {}", self.batch);
+        let img_len: usize = self.in_dims.iter().product();
+        let mut logits = vec![0f32; self.batch * self.classes];
+        // the kernels are batch-agnostic, so padding rows cost nothing here
+        // (unlike a fixed-shape compiled batch): compute live rows only
+        for i in 0..live {
+            let row = &padded.data()[i * img_len..(i + 1) * img_len];
+            let image = Tensor::from_vec(&self.in_dims, row.to_vec());
+            let out = match self.precision {
+                NativePrecision::F32 => self.enc.forward(&image, self.variant),
+                NativePrecision::Fixed(iq) => self.enc.forward_fx(&image, self.variant, iq),
+            };
+            anyhow::ensure!(out.len() == self.classes, "logit length mismatch");
+            logits[i * self.classes..(i + 1) * self.classes].copy_from_slice(&out);
+        }
+        Ok(Tensor::from_vec(&[self.batch, self.classes], logits))
+    }
+}
+
+/// The build's default backend for `enc`: `PjrtBackend` over
+/// `artifacts_dir` when the `pjrt` feature is enabled, else the in-process
+/// [`NativeBackend`] (which ignores `artifacts_dir`).  Examples, benches,
+/// and the deprecated `Coordinator::start` shim all route through here so
+/// the policy lives in one place.
+pub fn default_backend(artifacts_dir: &str, enc: EncodedCnn) -> Box<dyn ExecutionBackend> {
+    #[cfg(feature = "pjrt")]
+    {
+        Box::new(PjrtBackend::new(artifacts_dir, enc))
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = artifacts_dir;
+        Box::new(NativeBackend::new(enc))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtBackend: the AOT-compiled PJRT/Pallas path (feature `pjrt`)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::{Executable, ExecutionBackend};
+    use crate::cnn::network::EncodedCnn;
+    use crate::runtime::client::{ModelExecutable, ModelParams};
+    use crate::runtime::{ArtifactManifest, Runtime};
+    use crate::tensor::Tensor;
+    use anyhow::{Context, Result};
+    use std::sync::Mutex;
+
+    /// Backend over the PJRT CPU client and the AOT-lowered artifacts.
+    ///
+    /// Construction is cheap and infallible; the PJRT client is created on
+    /// the first `compile` call — i.e. on the coordinator's worker thread,
+    /// matching the old `Coordinator::start` behavior (PJRT handles are not
+    /// Send-safe to move across threads after use).
+    pub struct PjrtBackend {
+        dir: String,
+        enc: EncodedCnn,
+        params: ModelParams,
+        runtime: Mutex<Option<Runtime>>,
+    }
+
+    impl PjrtBackend {
+        /// `artifacts_dir` must contain `manifest.json` (`make artifacts`).
+        pub fn new(artifacts_dir: impl Into<String>, enc: EncodedCnn) -> Self {
+            let params = ModelParams::from_encoded(&enc);
+            PjrtBackend {
+                dir: artifacts_dir.into(),
+                enc,
+                params,
+                runtime: Mutex::new(None),
+            }
+        }
+    }
+
+    impl ExecutionBackend for PjrtBackend {
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+
+        fn encoded(&self) -> &EncodedCnn {
+            &self.enc
+        }
+
+        fn preferred_buckets(&self) -> Option<Vec<usize>> {
+            ArtifactManifest::load(&self.dir)
+                .ok()
+                .map(|m| m.model.batch_sizes)
+        }
+
+        fn compile(&self, batch: usize) -> Result<Box<dyn Executable>> {
+            let mut guard = self.runtime.lock().unwrap();
+            if guard.is_none() {
+                *guard = Some(Runtime::new(&self.dir).context("create PJRT runtime")?);
+            }
+            let rt = guard.as_ref().unwrap();
+            let exe = rt
+                .load_model(batch)
+                .with_context(|| format!("compile batch bucket {batch}"))?;
+            Ok(Box::new(PjrtExecutable { exe, params: self.params.clone(), batch }))
+        }
+    }
+
+    struct PjrtExecutable {
+        exe: ModelExecutable,
+        params: ModelParams,
+        batch: usize,
+    }
+
+    impl Executable for PjrtExecutable {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+
+        fn execute(&self, padded: &Tensor<f32>, _live: usize) -> Result<Tensor<f32>> {
+            // the compiled batch shape is fixed; padding rows execute anyway
+            self.exe.run(padded, &self.params)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::{render_digit, Rng};
+    use crate::cnn::network::DigitsCnn;
+
+    fn enc() -> EncodedCnn {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(5);
+        let params = arch.init(&mut rng);
+        EncodedCnn::encode(arch, &params, 8, QFormat::W16)
+    }
+
+    #[test]
+    fn native_compiles_any_bucket() {
+        let b = NativeBackend::new(enc());
+        for n in [1usize, 3, 8, 17] {
+            let exe = b.compile(n).unwrap();
+            assert_eq!(exe.batch(), n);
+        }
+        assert!(b.compile(0).is_err());
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.in_dims(), [1, 12, 12]);
+        assert_eq!(b.classes(), 10);
+        assert!(b.preferred_buckets().is_none());
+    }
+
+    #[test]
+    fn native_execute_matches_reference_forward() {
+        let e = enc();
+        let backend = NativeBackend::new(e.clone());
+        let exe = backend.compile(3).unwrap();
+        let mut rng = Rng::new(9);
+        let imgs: Vec<Tensor<f32>> =
+            (0..3).map(|d| render_digit(&mut rng, d, 0.05)).collect();
+        let mut data = Vec::new();
+        for img in &imgs {
+            data.extend_from_slice(img.data());
+        }
+        let batch = Tensor::from_vec(&[3, 1, 12, 12], data);
+        let logits = exe.execute(&batch, 3).unwrap();
+        assert_eq!(logits.dims(), &[3, 10]);
+        for (i, img) in imgs.iter().enumerate() {
+            let want = e.forward(img, ConvVariant::Pasm);
+            let got = &logits.data()[i * 10..(i + 1) * 10];
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn native_fixed_matches_fx_reference_bitexactly() {
+        let e = enc();
+        let backend = NativeBackend::new(e.clone())
+            .with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+        let exe = backend.compile(1).unwrap();
+        let mut rng = Rng::new(13);
+        let img = render_digit(&mut rng, 7, 0.05);
+        let batch = Tensor::from_vec(&[1, 1, 12, 12], img.data().to_vec());
+        let logits = exe.execute(&batch, 1).unwrap();
+        let want = e.forward_fx(&img, ConvVariant::Pasm, QFormat::IMAGE32);
+        assert_eq!(
+            logits.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn native_skips_padding_rows() {
+        let e = enc();
+        let exe = NativeBackend::new(e.clone()).compile(4).unwrap();
+        let mut rng = Rng::new(17);
+        let img = render_digit(&mut rng, 2, 0.05);
+        let img_len = 12 * 12;
+        let mut data = vec![0f32; 4 * img_len];
+        data[..img_len].copy_from_slice(img.data());
+        let batch = Tensor::from_vec(&[4, 1, 12, 12], data);
+        let logits = exe.execute(&batch, 1).unwrap();
+        let want = e.forward(&img, ConvVariant::Pasm);
+        assert_eq!(&logits.data()[..10], &want[..]);
+        // padding rows are never computed; their logit rows stay zero
+        assert!(logits.data()[10..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn native_rejects_wrong_dims() {
+        let exe = NativeBackend::new(enc()).compile(2).unwrap();
+        let bad = Tensor::<f32>::zeros(&[2, 3, 3, 3]);
+        assert!(exe.execute(&bad, 2).is_err());
+    }
+}

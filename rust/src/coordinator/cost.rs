@@ -1,0 +1,170 @@
+//! Hardware cost model: price a served batch on a modeled accelerator.
+//!
+//! Factored out of the engine so the *numerics* backend and the *cost*
+//! accounting are independent axes: the same request stream can be priced
+//! as if it ran on a Direct (dense-weight), weight-shared MAC, or PASM
+//! accelerator at any [`Tech`] point — the comparison the paper's
+//! evaluation makes, and the separation multiplier-less designs like TMA
+//! (arXiv:1909.04551) assume.  Cycles come from the latency model of each
+//! conv layer, energy from the 45 nm power model.
+
+use crate::accel::conv::{ConvAccel, ConvVariantKind};
+use crate::cnn::network::EncodedCnn;
+use crate::hw::Tech;
+use crate::tensor::ConvShape;
+
+/// Simulated hardware cost of serving work on the modeled accelerator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HwCost {
+    /// Accelerator cycles (all priced layers, all images).
+    pub cycles: u64,
+    /// Energy at the modeled tech point (J).
+    pub energy_j: f64,
+    /// Wall time on the modeled accelerator (s).
+    pub accel_time_s: f64,
+}
+
+impl HwCost {
+    /// Cost of `n` independent images at this per-image cost.
+    pub fn scale(&self, n: usize) -> HwCost {
+        HwCost {
+            cycles: self.cycles * n as u64,
+            energy_j: self.energy_j * n as f64,
+            accel_time_s: self.accel_time_s * n as f64,
+        }
+    }
+
+    fn plus(&self, other: &HwCost) -> HwCost {
+        HwCost {
+            cycles: self.cycles + other.cycles,
+            energy_j: self.energy_j + other.energy_j,
+            accel_time_s: self.accel_time_s + other.accel_time_s,
+        }
+    }
+}
+
+/// Maps (accelerator variant × tech × layer shape × bins × weight width)
+/// to a [`HwCost`].
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Which accelerator variant the deployment is priced as.
+    pub variant: ConvVariantKind,
+    /// Process/clock point of the modeled silicon.
+    pub tech: Tech,
+}
+
+impl CostModel {
+    pub fn new(variant: ConvVariantKind, tech: Tech) -> Self {
+        CostModel { variant, tech }
+    }
+
+    /// The paper's headline deployment: PASM at 45 nm / 1 GHz (the default
+    /// pricing; note energy is now summed per layer, `Σ Pᵢ·Tᵢ`, fixing the
+    /// pre-refactor engine's `(ΣPᵢ)·(ΣTᵢ)` overcount).
+    pub fn pasm_asic() -> Self {
+        CostModel::new(ConvVariantKind::Pasm, Tech::asic_1ghz())
+    }
+
+    /// Weight-shared MAC baseline at 45 nm / 1 GHz.
+    pub fn weight_shared_asic() -> Self {
+        CostModel::new(ConvVariantKind::WeightShared, Tech::asic_1ghz())
+    }
+
+    /// Dense-weight (non-shared) baseline at 45 nm / 1 GHz.
+    pub fn direct_asic() -> Self {
+        CostModel::new(ConvVariantKind::Direct, Tech::asic_1ghz())
+    }
+
+    /// Price one conv layer of the given shape at `bins` shared weights of
+    /// width `weight_width`.
+    pub fn price_conv(&self, shape: ConvShape, bins: usize, weight_width: u32) -> HwCost {
+        let accel = ConvAccel::new(self.variant, shape, bins, weight_width);
+        let cycles = accel.latency_cycles();
+        let time_s = cycles as f64 * self.tech.period_s();
+        HwCost {
+            cycles,
+            energy_j: accel.power(&self.tech).total_w() * time_s,
+            accel_time_s: time_s,
+        }
+    }
+
+    /// Price one image through both conv layers of the encoded digits CNN
+    /// (the dense head is not priced — PASM targets the convolutions).
+    /// Each layer is priced at its own codebook's bins/width.
+    pub fn price_image(&self, enc: &EncodedCnn) -> HwCost {
+        self.price_conv(
+            enc.arch.conv1_shape(),
+            enc.conv1.codebook.bins(),
+            enc.conv1.codebook.wq.width,
+        )
+        .plus(&self.price_conv(
+            enc.arch.conv2_shape(),
+            enc.conv2.codebook.bins(),
+            enc.conv2.codebook.wq.width,
+        ))
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::pasm_asic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::Rng;
+    use crate::cnn::network::DigitsCnn;
+    use crate::quant::fixed::QFormat;
+
+    fn enc(bins: usize) -> EncodedCnn {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(77);
+        let params = arch.init(&mut rng);
+        EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+    }
+
+    #[test]
+    fn scale_is_linear() {
+        let c = CostModel::pasm_asic().price_image(&enc(16));
+        let c4 = c.scale(4);
+        assert_eq!(c4.cycles, c.cycles * 4);
+        assert!((c4.energy_j - c.energy_j * 4.0).abs() < 1e-18);
+        assert!((c4.accel_time_s - c.accel_time_s * 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pasm_slower_than_ws_same_model() {
+        // Fig 14: PASM trades a few percent of latency for the silicon win
+        let e = enc(16);
+        let pasm = CostModel::pasm_asic().price_image(&e);
+        let ws = CostModel::weight_shared_asic().price_image(&e);
+        assert!(pasm.cycles > ws.cycles, "pasm {} vs ws {}", pasm.cycles, ws.cycles);
+        assert!(pasm.energy_j > 0.0 && ws.energy_j > 0.0);
+    }
+
+    #[test]
+    fn pasm_cheaper_energy_at_4_bins() {
+        // Fig 15 territory: at 4 bins PASM wins power by a wide margin, and
+        // the small latency overhead cannot flip the energy comparison
+        let e = enc(4);
+        let pasm = CostModel::pasm_asic().price_image(&e);
+        let ws = CostModel::weight_shared_asic().price_image(&e);
+        assert!(pasm.energy_j < ws.energy_j, "pasm {} vs ws {}", pasm.energy_j, ws.energy_j);
+    }
+
+    #[test]
+    fn all_variants_priceable() {
+        let e = enc(8);
+        for cm in [
+            CostModel::direct_asic(),
+            CostModel::weight_shared_asic(),
+            CostModel::pasm_asic(),
+            CostModel::new(ConvVariantKind::Pasm, Tech::asic_800mhz()),
+        ] {
+            let c = cm.price_image(&e);
+            assert!(c.cycles > 0 && c.energy_j > 0.0 && c.accel_time_s > 0.0);
+        }
+    }
+}

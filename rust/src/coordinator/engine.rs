@@ -1,91 +1,79 @@
-//! Batch execution engine: PJRT numerics + simulated hardware cost.
+//! Batch execution engine: backend numerics + modeled hardware cost.
 //!
-//! Owns one compiled [`ModelExecutable`] per exported batch bucket and the
-//! dictionary-encoded model parameters.  `run_batch` pads the live
-//! requests to the chosen bucket, executes once, splits the logits, and
-//! prices the batch on the modeled PASM accelerator: cycles from the
-//! latency model of each conv layer, energy from the 45 nm power model —
-//! the figures a deployment would actually trade off (the paper's thesis:
-//! same numerics, less silicon and power, slightly more cycles).
+//! Owns an [`ExecutionBackend`] and one compiled [`Executable`] per batch
+//! bucket.  `run_batch` pads the live requests to the chosen bucket,
+//! executes once, splits the logits, and attaches the [`CostModel`]'s price
+//! for the batch — the figures a deployment would actually trade off (the
+//! paper's thesis: same numerics, less silicon and power, slightly more
+//! cycles).  Numerics and pricing are independent: a native-served batch
+//! can be priced as PASM silicon and vice versa.
 
-use crate::accel::conv::{ConvAccel, ConvVariantKind};
 use crate::cnn::network::EncodedCnn;
+use crate::coordinator::backend::{Executable, ExecutionBackend};
+use crate::coordinator::cost::CostModel;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
-use crate::hw::Tech;
-use crate::runtime::client::{ModelExecutable, ModelParams};
-use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Simulated hardware cost of serving one batch on the PASM accelerator.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct HwCost {
-    /// Accelerator cycles for the batch (both conv layers, all images).
-    pub cycles: u64,
-    /// Energy at the modeled tech point (J).
-    pub energy_j: f64,
-    /// Wall time on the modeled accelerator (s).
-    pub accel_time_s: f64,
-}
+pub use crate::coordinator::cost::HwCost;
 
 /// The batch execution engine.
 pub struct Engine {
-    exes: BTreeMap<usize, ModelExecutable>,
-    params: ModelParams,
-    enc: EncodedCnn,
+    backend: Box<dyn ExecutionBackend>,
+    exes: BTreeMap<usize, Box<dyn Executable>>,
     classes: usize,
     in_dims: [usize; 3],
-    /// Per-image accelerator cost (cycles / energy), precomputed from the
-    /// hw model at construction.
-    per_image_cycles: u64,
-    per_image_energy_j: f64,
-    tech: Tech,
+    /// Per-image accelerator cost, precomputed from the cost model at
+    /// construction.
+    per_image: HwCost,
 }
 
 impl Engine {
-    /// Compile every exported batch bucket and price the encoded model's
-    /// conv layers on the PASM accelerator model.
-    pub fn new(runtime: &Runtime, enc: EncodedCnn) -> Result<Self> {
-        let m = &runtime.manifest.model;
+    /// Compile every batch bucket on `backend` and price the encoded
+    /// model's conv layers with `cost`.
+    pub fn new(
+        backend: Box<dyn ExecutionBackend>,
+        buckets: &[usize],
+        cost: &CostModel,
+    ) -> Result<Self> {
+        anyhow::ensure!(!buckets.is_empty(), "no batch buckets configured");
         let mut exes = BTreeMap::new();
-        for &b in &m.batch_sizes {
-            exes.insert(b, runtime.load_model(b).context("compile batch bucket")?);
+        for &b in buckets {
+            let exe = backend
+                .compile(b)
+                .with_context(|| format!("compile batch bucket {b}"))?;
+            exes.insert(b, exe);
         }
-        anyhow::ensure!(!exes.is_empty(), "no batch buckets exported");
-
-        // hardware pricing: both conv layers as PASM accelerators
-        let tech = Tech::asic_1ghz();
-        let bins = enc.conv1.codebook.bins();
-        let ww = enc.conv1.codebook.wq.width;
-        let accel1 = ConvAccel::new(ConvVariantKind::Pasm, enc.arch.conv1_shape(), bins, ww);
-        let accel2 = ConvAccel::new(ConvVariantKind::Pasm, enc.arch.conv2_shape(), bins, ww);
-        let cycles = accel1.latency_cycles() + accel2.latency_cycles();
-        let time_s = cycles as f64 * tech.period_s();
-        let power_w = accel1.power(&tech).total_w() + accel2.power(&tech).total_w();
-        let energy = power_w * time_s;
-
+        let per_image = cost.price_image(backend.encoded());
         Ok(Engine {
-            params: ModelParams::from_encoded(&enc),
-            enc,
-            classes: m.classes,
-            in_dims: [m.in_c, m.in_h, m.in_w],
+            classes: backend.classes(),
+            in_dims: backend.in_dims(),
+            backend,
             exes,
-            per_image_cycles: cycles,
-            per_image_energy_j: energy,
-            tech,
+            per_image,
         })
     }
 
-    /// Exported bucket sizes, ascending.
+    /// Compiled bucket sizes, ascending.
     pub fn buckets(&self) -> Vec<usize> {
         self.exes.keys().copied().collect()
     }
 
+    /// The backend's short label ("native", "pjrt", ...).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     /// The encoded model this engine serves.
     pub fn encoded(&self) -> &EncodedCnn {
-        &self.enc
+        self.backend.encoded()
+    }
+
+    /// Modeled per-image hardware cost.
+    pub fn per_image_cost(&self) -> HwCost {
+        self.per_image
     }
 
     /// Execute up to `bucket` live requests as one padded batch.
@@ -123,17 +111,11 @@ impl Engine {
         );
 
         let t0 = Instant::now();
-        let logits = exe.run(&batch, &self.params)?;
+        let logits = exe.execute(&batch, requests.len())?;
         let compute_us = t0.elapsed().as_micros() as u64;
         let done = Instant::now();
 
-        let hw = HwCost {
-            cycles: self.per_image_cycles * requests.len() as u64,
-            energy_j: self.per_image_energy_j * requests.len() as f64,
-            accel_time_s: self.per_image_cycles as f64
-                * requests.len() as f64
-                * self.tech.period_s(),
-        };
+        let hw = self.per_image.scale(requests.len());
 
         Ok(requests
             .iter()

@@ -5,6 +5,9 @@ use std::time::Duration;
 /// Rolling metrics for the coordinator.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// Label of the execution backend serving the requests ("native",
+    /// "pjrt", ...); empty until the worker starts.
+    pub backend: String,
     pub requests: u64,
     pub batches: u64,
     pub padded_slots: u64,
@@ -19,6 +22,10 @@ pub struct Metrics {
 impl Metrics {
     pub fn new() -> Self {
         Metrics::default()
+    }
+
+    pub fn record_backend(&mut self, name: &str) {
+        self.backend = name.to_string();
     }
 
     pub fn record_batch(&mut self, occupancy: usize, bucket: usize) {

@@ -1,28 +1,41 @@
 //! Layer-3 inference coordinator.
 //!
-//! The request-path owner: a worker thread holds the PJRT executables (one
-//! per exported batch size) and the dictionary-encoded model; clients
-//! submit single-image requests; the [`batcher`] groups them into the
-//! largest exported batch bucket that the queue can fill without exceeding
-//! the wait budget (vLLM-style bucketed dynamic batching, scaled to this
+//! The request-path owner: a worker thread holds an [`backend::ExecutionBackend`]'s
+//! compiled executables (one per batch bucket) and the dictionary-encoded
+//! model; clients submit single-image requests; the [`batcher`] groups them
+//! into the largest bucket that the queue can fill without exceeding the
+//! wait budget (vLLM-style bucketed dynamic batching, scaled to this
 //! model's sizes); the [`engine`] pads, executes, splits, and attaches the
-//! *simulated hardware cost* of serving that batch on the PASM accelerator
-//! (cycles from the latency model, energy from the power model) — the
-//! paper's metrics, reported per request.
+//! *simulated hardware cost* of serving that batch on the modeled
+//! accelerator (cycles from the latency model, energy from the power
+//! model) — the paper's metrics, reported per request.
+//!
+//! Backends and pricing are independent axes: [`backend::NativeBackend`]
+//! serves the crate's own f32/fixed-point reference kernels with no
+//! artifacts; `PjrtBackend` (feature `pjrt`) serves the AOT-compiled
+//! PJRT/Pallas path; either can be priced as Direct / WS-MAC / PASM
+//! silicon via [`cost::CostModel`].  Assemble with
+//! [`server::CoordinatorBuilder`].
 //!
 //! No async runtime is available in this offline build; the coordinator
 //! uses std threads + channels (one worker, many producers), which for a
 //! single-device CPU backend is also the contention-minimal design.
 
+pub mod backend;
 pub mod batcher;
+pub mod cost;
 pub mod engine;
 pub mod loadgen;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{default_backend, Executable, ExecutionBackend, NativeBackend, NativePrecision};
 pub use batcher::BatchPolicy;
-pub use engine::{Engine, HwCost};
+pub use cost::{CostModel, HwCost};
+pub use engine::Engine;
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse};
-pub use server::Coordinator;
+pub use server::{Coordinator, CoordinatorBuilder};

@@ -1,6 +1,6 @@
 //! Request/response types of the inference coordinator.
 
-use crate::coordinator::engine::HwCost;
+use crate::coordinator::cost::HwCost;
 use crate::tensor::Tensor;
 use std::time::Instant;
 

@@ -1,17 +1,21 @@
-//! The coordinator server: worker thread + submission handle.
+//! The coordinator server: builder, worker thread, submission handle.
 //!
-//! One worker thread owns the [`Engine`] (PJRT executables are not Sync)
-//! and drains a request channel, applying the [`BatchPolicy`]: wait for a
-//! fillable bucket or the oldest request's deadline, then launch.  Clients
-//! get a per-request response channel.  Drop the [`Coordinator`] to shut
-//! down cleanly (pending requests are flushed first).
+//! [`CoordinatorBuilder`] assembles a backend, a batch policy, and a cost
+//! model into a running [`Coordinator`].  One worker thread owns the
+//! [`Engine`] (backend executables need not be `Sync`; compilation happens
+//! on the worker) and drains a request channel, applying the
+//! [`BatchPolicy`]: wait for a fillable bucket or the oldest request's
+//! deadline, then launch.  Clients get a per-request response channel.
+//! Drop the [`Coordinator`] to shut down cleanly (pending requests are
+//! flushed first).
 
 use crate::cnn::network::EncodedCnn;
+use crate::coordinator::backend::{default_backend, ExecutionBackend};
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::cost::CostModel;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
-use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
@@ -26,38 +30,102 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle to a running coordinator.
-pub struct Coordinator {
-    tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
-    next_id: AtomicU64,
-    metrics: Arc<Mutex<Metrics>>,
+/// Builds a [`Coordinator`] from a backend, batch policy, and cost model.
+///
+/// The batch policy defaults to the backend's preferred buckets (e.g. the
+/// sizes an AOT flow exported) or [`BatchPolicy::default`]; the cost model
+/// defaults to PASM silicon at 45 nm / 1 GHz ([`CostModel::pasm_asic`]).
+///
+/// ```
+/// use pasm_accel::cnn::data::{render_digit, Rng};
+/// use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+/// use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder, NativeBackend};
+/// use pasm_accel::quant::fixed::QFormat;
+/// use std::time::Duration;
+///
+/// let arch = DigitsCnn::default();
+/// let mut rng = Rng::new(1);
+/// let params = arch.init(&mut rng);
+/// let enc = EncodedCnn::encode(arch, &params, 4, QFormat::W16);
+///
+/// let coord = CoordinatorBuilder::new()
+///     .backend(NativeBackend::new(enc))
+///     .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+///     .build()?;
+/// let resp = coord.infer(render_digit(&mut rng, 3, 0.05))?;
+/// assert_eq!(resp.logits.len(), 10);
+/// assert!(resp.hw.cycles > 0);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Default)]
+pub struct CoordinatorBuilder {
+    backend: Option<Box<dyn ExecutionBackend>>,
+    policy: Option<BatchPolicy>,
+    cost: Option<CostModel>,
 }
 
-impl Coordinator {
-    /// Start the worker: compiles all batch buckets, then serves until
-    /// dropped.  `artifacts_dir` must contain `manifest.json` (run
-    /// `make artifacts`).
-    pub fn start(
-        artifacts_dir: &str,
-        enc: EncodedCnn,
-        policy: BatchPolicy,
-    ) -> Result<Self> {
+impl CoordinatorBuilder {
+    pub fn new() -> Self {
+        CoordinatorBuilder::default()
+    }
+
+    /// The execution backend to serve from (required).
+    pub fn backend(mut self, backend: impl ExecutionBackend + 'static) -> Self {
+        self.backend = Some(Box::new(backend));
+        self
+    }
+
+    /// Same as [`CoordinatorBuilder::backend`] for an already-boxed backend.
+    pub fn boxed_backend(mut self, backend: Box<dyn ExecutionBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Bucketed dynamic-batching policy (default: the backend's preferred
+    /// buckets with a 2 ms wait budget, else [`BatchPolicy::default`]).
+    pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Hardware cost model batches are priced with (default:
+    /// [`CostModel::pasm_asic`]).
+    pub fn cost_model(mut self, cost: CostModel) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    /// Spawn the worker, compile every bucket, and start serving.  Returns
+    /// once the backend compiled successfully (startup errors surface
+    /// here, not on first request).
+    pub fn build(self) -> Result<Coordinator> {
+        let backend = self
+            .backend
+            .context("CoordinatorBuilder: a backend is required (use .backend(...))")?;
+        let policy = self.policy.unwrap_or_else(|| match backend.preferred_buckets() {
+            Some(buckets) if !buckets.is_empty() => {
+                BatchPolicy::new(buckets, BatchPolicy::default().max_wait)
+            }
+            _ => BatchPolicy::default(),
+        });
+        let cost = self.cost.unwrap_or_default();
+
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let metrics_worker = Arc::clone(&metrics);
         let (tx, rx) = mpsc::channel::<Msg>();
-        let dir = artifacts_dir.to_string();
 
-        // Compile on the worker thread (PJRT handles are not Send-safe to
-        // move across after use); report startup errors through a channel.
+        // Compile on the worker thread (backend executables may not be
+        // Send); report startup errors through a channel.
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let buckets = policy.buckets.clone();
         let worker = std::thread::Builder::new()
             .name("pasm-coordinator".into())
             .spawn(move || {
-                let engine = match Runtime::new(&dir)
-                    .and_then(|rt| Engine::new(&rt, enc))
-                {
+                let engine = match Engine::new(backend, &buckets, &cost) {
                     Ok(e) => {
+                        // label the metrics before signalling ready so
+                        // build() never returns with an empty backend name
+                        metrics_worker.lock().unwrap().record_backend(e.backend_name());
                         let _ = ready_tx.send(Ok(()));
                         e
                     }
@@ -76,6 +144,36 @@ impl Coordinator {
             .map_err(|e| anyhow::anyhow!(e))?;
 
         Ok(Coordinator { tx, worker: Some(worker), next_id: AtomicU64::new(1), metrics })
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    /// Deprecated constructor kept for source compatibility: serves `enc`
+    /// from `artifacts_dir` on the PJRT backend when the `pjrt` feature is
+    /// enabled, else falls back to the in-process
+    /// [`NativeBackend`](crate::coordinator::backend::NativeBackend)
+    /// (ignoring `artifacts_dir`).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use CoordinatorBuilder::new().backend(...).batch_policy(...).build()"
+    )]
+    pub fn start(
+        artifacts_dir: &str,
+        enc: EncodedCnn,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        CoordinatorBuilder::new()
+            .boxed_backend(default_backend(artifacts_dir, enc))
+            .batch_policy(policy)
+            .build()
     }
 
     /// Submit one image; returns a receiver for the response.
@@ -177,7 +275,21 @@ fn worker_loop(
         let batch: Vec<Pending> = queue.drain(..take).collect();
         let requests: Vec<InferenceRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
         let started = Instant::now();
-        match engine.run_batch(&requests, bucket) {
+        // Contain kernel panics (e.g. the fixed-point overflow guards on an
+        // extreme input): the batch fails, the worker keeps serving.  The
+        // engine holds no cross-batch mutable state, so resuming is sound.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run_batch(&requests, bucket)
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "kernel panicked".to_string());
+            Err(anyhow::anyhow!("execution panicked: {msg}"))
+        });
+        match result {
             Ok(responses) => {
                 // one lock per batch, not per request (§Perf)
                 let mut m = metrics.lock().unwrap();

@@ -26,16 +26,20 @@
 //!   of whole accelerators, with toggle counting that feeds the power model.
 //! * [`accel`] — accelerator variant builder (standalone 16-MAC vs
 //!   16-PAS-4-MAC units, full conv-layer accelerators, HLS directive knobs).
-//! * [`runtime`] — PJRT CPU client that loads the AOT-lowered JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them on the request
-//!   path (python never runs at inference time).
-//! * [`coordinator`] — tokio-based inference coordinator: request queue,
-//!   dynamic batcher, per-layer scheduler, metrics.
+//! * [`runtime`] — artifact manifest + JSON layers (always built) and, behind
+//!   the `pjrt` cargo feature, the PJRT CPU client that loads the AOT-lowered
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them on the
+//!   request path (python never runs at inference time).
+//! * [`coordinator`] — thread-based inference coordinator (std threads +
+//!   channels; no async runtime in the offline build): request queue,
+//!   bucketed dynamic batcher, pluggable [`coordinator::backend`] execution
+//!   substrate (native reference kernels or PJRT), hardware
+//!   [`coordinator::cost`] model, metrics.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
-//! See `DESIGN.md` for the experiment index and substitution map, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `rust/README.md` for the architecture overview and `ROADMAP.md` for
+//! where this is headed.
 
 pub mod accel;
 pub mod cnn;

@@ -3,7 +3,7 @@
 //! ```text
 //! repro report <id>|all          regenerate paper tables/figures
 //! repro simulate [--bins B] [--width W] [--variant ws|pasm] [--seed N]
-//! repro serve [--requests N] [--artifacts DIR]
+//! repro serve [--requests N] [--backend native|pjrt] [--artifacts DIR] [--fixed]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -15,7 +15,7 @@ use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
 use pasm_accel::cnn::conv::FxConvInputs;
 use pasm_accel::cnn::data::Rng;
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder, NativeBackend, NativePrecision};
 use pasm_accel::hw::Tech;
 use pasm_accel::quant::codebook::encode_weights;
 use pasm_accel::quant::fixed::QFormat;
@@ -61,7 +61,7 @@ fn main() -> ExitCode {
 const USAGE: &str = "usage: repro <report <id>|all> | simulate | serve | sweep | list
   report all | report fig15      regenerate paper exhibits
   simulate --variant pasm --bins 16 --width 32 --seed 1
-  serve --requests 64 --artifacts artifacts
+  serve --requests 64 --backend native|pjrt [--artifacts artifacts] [--fixed]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -166,12 +166,34 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .cloned()
         .unwrap_or_else(|| "artifacts".to_string());
     let bins: usize = flag(flags, "bins", 16);
+    let backend_kind = flags
+        .get("backend")
+        .cloned()
+        .unwrap_or_else(|| "native".to_string());
 
     let arch = DigitsCnn::default();
     let mut rng = Rng::new(7);
     let params = arch.init(&mut rng);
     let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
-    let coord = Coordinator::start(&dir, enc, BatchPolicy::default())?;
+
+    let builder = CoordinatorBuilder::new().batch_policy(BatchPolicy::default());
+    let builder = match backend_kind.as_str() {
+        "native" => {
+            let mut backend = NativeBackend::new(enc);
+            if flags.contains_key("fixed") {
+                backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+            }
+            let _ = &dir;
+            builder.backend(backend)
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => builder.backend(pasm_accel::coordinator::PjrtBackend::new(dir, enc)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!("pjrt backend not compiled in (build with --features pjrt)"),
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+    };
+    let coord = builder.build()?;
+    println!("serving on '{}' backend", coord.metrics().backend);
 
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n);

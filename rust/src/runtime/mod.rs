@@ -8,13 +8,20 @@
 //! module on the PJRT CPU client once at startup, and exposes typed
 //! execute calls.  Python never runs at inference time.
 //!
+//! The PJRT client (`client`) depends on the `xla` crate from the AOT
+//! toolchain image and is gated behind the `pjrt` cargo feature; the
+//! manifest and JSON layers are dependency-free and always available (the
+//! default build serves through the coordinator's `NativeBackend` instead).
+//!
 //! * [`json`] — minimal JSON parser (the offline build has no serde_json).
 //! * [`manifest`] — typed view of `artifacts/manifest.json`.
-//! * [`client`] — PJRT client wrapper + literal marshalling.
+//! * `client` — PJRT client wrapper + literal marshalling (feature `pjrt`).
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod json;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use client::{ModelExecutable, Runtime, TileExecutable};
 pub use manifest::{ArtifactManifest, ModelSpec, TileSpec};

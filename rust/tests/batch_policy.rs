@@ -1,0 +1,126 @@
+//! Property-style tests for [`BatchPolicy::decide`] — pure decision logic,
+//! no backend needed.  Randomized bucket configurations come from the
+//! crate's deterministic [`Rng`] (proptest is unavailable in the offline
+//! build; seeds reproduce failures exactly).
+
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::coordinator::BatchPolicy;
+use std::time::Duration;
+
+/// A random sorted/deduped bucket set with 1..=5 entries in 1..=64.
+fn random_policy(rng: &mut Rng) -> BatchPolicy {
+    let n = 1 + rng.below(5);
+    let buckets: Vec<usize> = (0..n).map(|_| 1 + rng.below(64)).collect();
+    BatchPolicy::new(buckets, Duration::from_millis(2))
+}
+
+#[test]
+fn decision_is_always_a_configured_bucket() {
+    let mut rng = Rng::new(1);
+    for _ in 0..200 {
+        let p = random_policy(&mut rng);
+        for queued in 0..=(p.max_bucket() + 8) {
+            for expired in [false, true] {
+                if let Some(b) = p.decide(queued, expired) {
+                    assert!(p.buckets.contains(&b), "{b} not in {:?}", p.buckets);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_fill_launches_immediately() {
+    // a queue that exactly fills some bucket never waits
+    let mut rng = Rng::new(2);
+    for _ in 0..200 {
+        let p = random_policy(&mut rng);
+        for &b in &p.buckets {
+            assert_eq!(p.decide(b, false), Some(b), "buckets {:?}", p.buckets);
+        }
+    }
+}
+
+#[test]
+fn underfull_after_deadline_pads_to_smallest_fitting_bucket() {
+    let mut rng = Rng::new(3);
+    for _ in 0..200 {
+        let p = random_policy(&mut rng);
+        for queued in 1..=p.max_bucket() {
+            let b = p
+                .decide(queued, true)
+                .expect("expired non-empty queue must launch");
+            // smallest configured bucket that fits everything queued
+            let want = p.buckets.iter().copied().find(|&x| x >= queued).unwrap();
+            assert_eq!(b, want, "queued {queued}, buckets {:?}", p.buckets);
+            assert!(b >= queued, "padding, never splitting, below max bucket");
+        }
+    }
+}
+
+#[test]
+fn queue_beyond_max_bucket_launches_max() {
+    // with more work than the largest bucket, launch the largest bucket at
+    // once — expired or not
+    let mut rng = Rng::new(4);
+    for _ in 0..200 {
+        let p = random_policy(&mut rng);
+        for extra in [0usize, 1, 7, 100] {
+            let queued = p.max_bucket() + extra;
+            for expired in [false, true] {
+                assert_eq!(p.decide(queued, expired), Some(p.max_bucket()));
+            }
+        }
+    }
+}
+
+#[test]
+fn never_launches_empty_and_never_drops_expired_work() {
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let p = random_policy(&mut rng);
+        assert_eq!(p.decide(0, false), None);
+        assert_eq!(p.decide(0, true), None);
+        for queued in 1..=(p.max_bucket() + 3) {
+            assert!(
+                p.decide(queued, true).is_some(),
+                "expired queue of {queued} must launch (buckets {:?})",
+                p.buckets
+            );
+        }
+    }
+}
+
+#[test]
+fn not_expired_waits_unless_exact_or_full() {
+    let mut rng = Rng::new(6);
+    for _ in 0..200 {
+        let p = random_policy(&mut rng);
+        for queued in 1..p.max_bucket() {
+            let d = p.decide(queued, false);
+            if p.buckets.contains(&queued) {
+                assert_eq!(d, Some(queued));
+            } else {
+                assert_eq!(d, None, "queued {queued}, buckets {:?}", p.buckets);
+            }
+        }
+    }
+}
+
+#[test]
+fn single_bucket_configs() {
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let b = 1 + rng.below(64);
+        let p = BatchPolicy::new(vec![b], Duration::ZERO);
+        assert_eq!(p.max_bucket(), b);
+        // below the bucket: wait until the deadline, then pad
+        for queued in 1..b {
+            assert_eq!(p.decide(queued, false), None);
+            assert_eq!(p.decide(queued, true), Some(b));
+        }
+        // at or beyond: launch immediately
+        assert_eq!(p.decide(b, false), Some(b));
+        assert_eq!(p.decide(b + 1 + rng.below(32), false), Some(b));
+    }
+}

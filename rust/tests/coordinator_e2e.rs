@@ -1,10 +1,14 @@
 //! Integration: the full coordinator path — submit concurrent requests,
 //! verify batching, numerics (vs the rust reference forward), metrics, and
-//! clean shutdown.  Requires `make artifacts`.
+//! clean shutdown.  Runs on the [`NativeBackend`] by default (no artifacts
+//! or external runtime needed); a PJRT variant is kept `#[ignore]`d behind
+//! the `pjrt` feature.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorBuilder, CostModel, NativeBackend, NativePrecision,
+};
 use pasm_accel::quant::fixed::QFormat;
 use std::time::Duration;
 
@@ -15,16 +19,22 @@ fn encoded_net(seed: u64) -> EncodedCnn {
     EncodedCnn::encode(arch, &params, 16, QFormat::W32)
 }
 
+fn native_coordinator(enc: EncodedCnn, policy: BatchPolicy) -> Coordinator {
+    CoordinatorBuilder::new()
+        .backend(NativeBackend::new(enc))
+        .batch_policy(policy)
+        .build()
+        .expect("native coordinator startup")
+}
+
 #[test]
 fn serves_concurrent_requests_correctly() {
     let enc = encoded_net(1);
     let reference = enc.clone();
-    let coord = Coordinator::start(
-        "artifacts",
+    let coord = native_coordinator(
         enc,
         BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(5)),
-    )
-    .expect("run `make artifacts` first");
+    );
 
     // fire 30 requests and hold the receivers
     let mut rng = Rng::new(42);
@@ -40,12 +50,10 @@ fn serves_concurrent_requests_correctly() {
             .recv_timeout(Duration::from_secs(30))
             .expect("no response")
             .expect("inference failed");
+        // NativeBackend runs the reference forward itself: bit-equal logits
         let want = reference.forward(&img, ConvVariant::Pasm);
         for (j, (&got, &w)) in resp.logits.iter().zip(want.iter()).enumerate() {
-            assert!(
-                (got - w).abs() < 1e-2,
-                "request {i} logit {j}: {got} vs {w}"
-            );
+            assert_eq!(got.to_bits(), w.to_bits(), "request {i} logit {j}: {got} vs {w}");
         }
         assert!(resp.batch_size >= resp.batch_occupancy);
         assert!(resp.hw.cycles > 0);
@@ -53,6 +61,7 @@ fn serves_concurrent_requests_correctly() {
     }
 
     let m = coord.metrics();
+    assert_eq!(m.backend, "native");
     assert_eq!(m.requests, 30);
     assert!(m.batches >= 2, "expected batching, got {} batches", m.batches);
     assert!(m.mean_occupancy() > 1.0);
@@ -63,8 +72,7 @@ fn serves_concurrent_requests_correctly() {
 fn single_blocking_infer() {
     let enc = encoded_net(2);
     let reference = enc.clone();
-    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default())
-        .expect("run `make artifacts` first");
+    let coord = native_coordinator(enc, BatchPolicy::default());
     let mut rng = Rng::new(7);
     let img = render_digit(&mut rng, 3, 0.05);
     let resp = coord.infer(img.clone()).unwrap();
@@ -76,12 +84,10 @@ fn single_blocking_infer() {
 #[test]
 fn shutdown_flushes_pending() {
     let enc = encoded_net(3);
-    let coord = Coordinator::start(
-        "artifacts",
+    let coord = native_coordinator(
         enc,
         BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(50)),
-    )
-    .expect("run `make artifacts` first");
+    );
     let mut rng = Rng::new(9);
     let mut rxs = Vec::new();
     for i in 0..5usize {
@@ -102,8 +108,7 @@ fn mixed_digit_accuracy_via_coordinator() {
     // must equal the reference forward's argmax for every image
     let enc = encoded_net(4);
     let reference = enc.clone();
-    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default())
-        .expect("run `make artifacts` first");
+    let coord = native_coordinator(enc, BatchPolicy::default());
     let mut rng = Rng::new(5);
     for d in 0..10usize {
         let img = render_digit(&mut rng, d, 0.1);
@@ -111,4 +116,109 @@ fn mixed_digit_accuracy_via_coordinator() {
         let want = reference.forward(&img, ConvVariant::Pasm);
         assert_eq!(resp.predicted, pasm_accel::cnn::layer::argmax(&want), "digit {d}");
     }
+}
+
+#[test]
+fn fixed_point_backend_bitexact_vs_reference() {
+    // the acceptance bar: NativeBackend in fixed-point mode must reproduce
+    // the EncodedCnn fixed-point reference forward bit for bit, through the
+    // whole batching/padding path
+    let enc = encoded_net(6);
+    let reference = enc.clone();
+    let coord = CoordinatorBuilder::new()
+        .backend(
+            NativeBackend::new(enc).with_precision(NativePrecision::Fixed(QFormat::IMAGE32)),
+        )
+        .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(2)))
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(31);
+    for d in 0..8usize {
+        let img = render_digit(&mut rng, d, 0.05);
+        let resp = coord.infer(img.clone()).unwrap();
+        let want = reference.forward_fx(&img, ConvVariant::Pasm, QFormat::IMAGE32);
+        let got: Vec<u32> = resp.logits.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, wb, "digit {d}");
+        // §5.3: the WS fixed-point forward is the same function
+        let ws = reference.forward_fx(&img, ConvVariant::WeightShared, QFormat::IMAGE32);
+        let wsb: Vec<u32> = ws.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, wsb, "digit {d} (ws)");
+    }
+}
+
+#[test]
+fn cost_model_decoupled_from_backend() {
+    // same backend + requests, different silicon pricing: the PASM model
+    // must report more cycles than the WS-MAC model (Fig 14's latency
+    // overhead) on identical numerics
+    let run = |cost: CostModel| -> u64 {
+        let coord = CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded_net(8)))
+            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+            .cost_model(cost)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let resp = coord.infer(render_digit(&mut rng, 2, 0.05)).unwrap();
+        resp.hw.cycles
+    };
+    let pasm = run(CostModel::pasm_asic());
+    let ws = run(CostModel::weight_shared_asic());
+    assert!(pasm > ws, "pasm {pasm} cycles vs ws {ws}");
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_start_shim_still_serves() {
+    // the old free-argument constructor must keep compiling and serving
+    // (natively when the pjrt feature is off)
+    let enc = encoded_net(9);
+    let reference = enc.clone();
+    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default());
+    #[cfg(feature = "pjrt")]
+    let coord = match coord {
+        Ok(c) => c,
+        Err(_) => return, // pjrt build without `make artifacts`: startup error is correct
+    };
+    #[cfg(not(feature = "pjrt"))]
+    let coord = coord.expect("shim must serve natively without artifacts");
+    let mut rng = Rng::new(10);
+    let img = render_digit(&mut rng, 1, 0.05);
+    let resp = coord.infer(img.clone()).unwrap();
+    let want = reference.forward(&img, ConvVariant::Pasm);
+    assert_eq!(resp.predicted, pasm_accel::cnn::layer::argmax(&want));
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
+#[ignore = "requires `make artifacts` and the pjrt feature"]
+fn serves_concurrent_requests_via_pjrt() {
+    use pasm_accel::coordinator::PjrtBackend;
+    let enc = encoded_net(1);
+    let reference = enc.clone();
+    let coord = CoordinatorBuilder::new()
+        .backend(PjrtBackend::new("artifacts", enc))
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(5)))
+        .build()
+        .expect("run `make artifacts` first");
+
+    let mut rng = Rng::new(42);
+    let mut cases = Vec::new();
+    for i in 0..30usize {
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit(img.clone()).unwrap();
+        cases.push((img, rx));
+    }
+    for (i, (img, rx)) in cases.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("no response")
+            .expect("inference failed");
+        let want = reference.forward(&img, ConvVariant::Pasm);
+        for (j, (&got, &w)) in resp.logits.iter().zip(want.iter()).enumerate() {
+            assert!((got - w).abs() < 1e-2, "request {i} logit {j}: {got} vs {w}");
+        }
+    }
+    assert_eq!(coord.metrics().backend, "pjrt");
 }

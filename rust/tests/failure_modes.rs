@@ -1,11 +1,13 @@
 //! Failure injection: the runtime and coordinator must fail loudly and
 //! precisely on bad inputs — and keep serving after a rejected request.
+//! Manifest and coordinator tests are artifact-free; the PJRT-client cases
+//! need `make artifacts` and the `pjrt` feature.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::{BatchPolicy, Coordinator};
+use pasm_accel::coordinator::{CoordinatorBuilder, NativeBackend, NativePrecision};
 use pasm_accel::quant::fixed::QFormat;
-use pasm_accel::runtime::{ArtifactManifest, Runtime};
+use pasm_accel::runtime::ArtifactManifest;
 use pasm_accel::tensor::Tensor;
 use std::path::PathBuf;
 
@@ -14,6 +16,13 @@ fn tmpdir(name: &str) -> PathBuf {
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
     dir
+}
+
+fn encoded_net(seed: u64) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, 16, QFormat::W32)
 }
 
 #[test]
@@ -40,71 +49,22 @@ fn manifest_missing_fields_rejected() {
 }
 
 #[test]
-fn dangling_artifact_path_fails_at_load() {
-    // valid manifest structure, but the HLO file it names does not exist
-    let real = ArtifactManifest::load("artifacts").expect("run `make artifacts` first");
-    let dir = tmpdir("dangling");
-    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
-    std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
-    // no hlo files copied
-    let rt = Runtime::new(&dir).expect("manifest parse should succeed");
-    let err = match rt.load_tile("pasm_tile") {
-        Ok(_) => panic!("load of dangling artifact should fail"),
-        Err(e) => e,
-    };
-    let msg = format!("{err:#}");
+fn builder_requires_backend() {
+    let err = CoordinatorBuilder::new().build();
+    assert!(err.is_err());
     assert!(
-        msg.contains("pasm_tile") || msg.contains("hlo"),
-        "error should name the artifact: {msg}"
+        format!("{:#}", err.unwrap_err()).contains("backend"),
+        "error should name the missing piece"
     );
-    drop(real);
-}
-
-#[test]
-fn corrupt_hlo_text_fails_at_compile() {
-    let dir = tmpdir("badhlo");
-    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
-    std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
-    std::fs::write(dir.join("pasm_tile.hlo.txt"), "HloModule garbage\nnot hlo").unwrap();
-    let rt = Runtime::new(&dir).unwrap();
-    assert!(rt.load_tile("pasm_tile").is_err());
-}
-
-#[test]
-fn tile_run_validates_shapes() {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-    let tile = rt.load_tile("pasm_tile").unwrap();
-    let good_image = Tensor::<f32>::zeros(&[15, 5, 5]);
-    let good_idx = Tensor::<u16>::zeros(&[2, 15, 3, 3]);
-    let good_cb = vec![0f32; tile.bins];
-    // wrong image shape
-    assert!(tile
-        .run(&Tensor::<f32>::zeros(&[3, 5, 5]), &good_idx, &good_cb)
-        .is_err());
-    // wrong codebook length
-    assert!(tile.run(&good_image, &good_idx, &vec![0f32; 3]).is_err());
-    // good shapes pass
-    assert!(tile.run(&good_image, &good_idx, &good_cb).is_ok());
-}
-
-#[test]
-fn model_rejects_unexported_batch() {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-    let err = match rt.load_model(7) {
-        Ok(_) => panic!("unexported batch size should fail"),
-        Err(e) => e,
-    };
-    assert!(format!("{err:#}").contains("7"));
 }
 
 #[test]
 fn coordinator_survives_bad_request() {
-    let arch = DigitsCnn::default();
+    let coord = CoordinatorBuilder::new()
+        .backend(NativeBackend::new(encoded_net(21)))
+        .build()
+        .unwrap();
     let mut rng = Rng::new(21);
-    let params = arch.init(&mut rng);
-    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
-    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default())
-        .expect("run `make artifacts` first");
 
     // wrong-shaped image: the whole batch it rides in fails, but the
     // coordinator must answer (with an error) and keep serving
@@ -120,11 +80,115 @@ fn coordinator_survives_bad_request() {
 }
 
 #[test]
-fn coordinator_bad_artifacts_dir_fails_at_startup() {
+fn coordinator_survives_kernel_panic() {
+    // extreme weights x extreme image overflow the fixed-point kernels'
+    // accumulator guards (a panic, by design); the batch must fail with an
+    // error response and the coordinator must keep serving
     let arch = DigitsCnn::default();
-    let mut rng = Rng::new(22);
-    let params = arch.init(&mut rng);
-    let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
-    let err = Coordinator::start("/nonexistent_dir", enc, BatchPolicy::default());
-    assert!(err.is_err());
+    let mut rng = Rng::new(33);
+    let mut params = arch.init(&mut rng);
+    for w in params.conv1_w.data_mut() {
+        *w = 30000.0;
+    }
+    let enc = EncodedCnn::encode(arch, &params, 4, QFormat::W32);
+    let coord = CoordinatorBuilder::new()
+        .backend(
+            NativeBackend::new(enc).with_precision(NativePrecision::Fixed(QFormat::IMAGE32)),
+        )
+        .build()
+        .unwrap();
+
+    let huge = Tensor::from_fn(&[1, 12, 12], |_| 32000.0f32);
+    let rx = coord.submit(huge).unwrap();
+    let resp = rx.recv().expect("coordinator dropped the overflowing request");
+    assert!(resp.is_err(), "overflowing batch must fail, not succeed");
+
+    let ok = coord.infer(render_digit(&mut rng, 1, 0.05));
+    assert!(ok.is_ok(), "coordinator must survive a kernel panic");
+}
+
+// -- PJRT-client failure cases (need artifacts + the pjrt feature) ----------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_failures {
+    use super::*;
+    use pasm_accel::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+    use pasm_accel::runtime::Runtime;
+
+    #[test]
+    #[ignore = "requires `make artifacts`"]
+    fn dangling_artifact_path_fails_at_load() {
+        // valid manifest structure, but the HLO file it names does not exist
+        let dir = tmpdir("dangling");
+        let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
+        // no hlo files copied
+        let rt = Runtime::new(&dir).expect("manifest parse should succeed");
+        let err = match rt.load_tile("pasm_tile") {
+            Ok(_) => panic!("load of dangling artifact should fail"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("pasm_tile") || msg.contains("hlo"),
+            "error should name the artifact: {msg}"
+        );
+    }
+
+    #[test]
+    #[ignore = "requires `make artifacts`"]
+    fn corrupt_hlo_text_fails_at_compile() {
+        let dir = tmpdir("badhlo");
+        let manifest_text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_text).unwrap();
+        std::fs::write(dir.join("pasm_tile.hlo.txt"), "HloModule garbage\nnot hlo").unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(rt.load_tile("pasm_tile").is_err());
+    }
+
+    #[test]
+    #[ignore = "requires `make artifacts`"]
+    fn tile_run_validates_shapes() {
+        let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+        let tile = rt.load_tile("pasm_tile").unwrap();
+        let good_image = Tensor::<f32>::zeros(&[15, 5, 5]);
+        let good_idx = Tensor::<u16>::zeros(&[2, 15, 3, 3]);
+        let good_cb = vec![0f32; tile.bins];
+        // wrong image shape
+        assert!(tile
+            .run(&Tensor::<f32>::zeros(&[3, 5, 5]), &good_idx, &good_cb)
+            .is_err());
+        // wrong codebook length
+        assert!(tile.run(&good_image, &good_idx, &vec![0f32; 3]).is_err());
+        // good shapes pass
+        assert!(tile.run(&good_image, &good_idx, &good_cb).is_ok());
+    }
+
+    #[test]
+    #[ignore = "requires `make artifacts`"]
+    fn model_rejects_unexported_batch() {
+        let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+        let err = match rt.load_model(7) {
+            Ok(_) => panic!("unexported batch size should fail"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("7"));
+    }
+
+    #[test]
+    fn coordinator_bad_artifacts_dir_fails_at_startup() {
+        let enc = encoded_net(22);
+        let err = CoordinatorBuilder::new()
+            .backend(PjrtBackend::new("/nonexistent_dir", enc))
+            .build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_start_bad_dir_fails_under_pjrt() {
+        let enc = encoded_net(23);
+        let err = Coordinator::start("/nonexistent_dir", enc, BatchPolicy::default());
+        assert!(err.is_err());
+    }
 }

@@ -2,7 +2,9 @@
 //! must match the rust functional dataflows — the cross-layer correctness
 //! proof that L1/L2 and L3 compute the same convolution.
 //!
-//! Requires `make artifacts` (part of the prescribed `make test` flow).
+//! Requires `make artifacts` and the `pjrt` cargo feature (part of the
+//! prescribed `make test` flow; compiled out of the default build).
+#![cfg(feature = "pjrt")]
 
 use pasm_accel::cnn::conv::{pasm_conv_f32, ws_conv_f32};
 use pasm_accel::cnn::data::Rng;
