@@ -1,67 +1,204 @@
 //! `cargo bench --bench coordinator` — end-to-end serving benchmark: the
-//! paper's system serving batched inference through the configured
-//! execution backend (native reference kernels by default; the
-//! PJRT-compiled PASM model with `--features pjrt` after `make artifacts`).
-//! Reports request throughput, latency percentiles, batch occupancy, and
-//! the simulated accelerator cost per request.
+//! paper's system serving batched fixed-point inference through the native
+//! backend.  Two configurations run back to back on identical numerics:
+//!
+//! * `baseline` — the pre-plan execution strategy (per-request
+//!   `FxConvInputs` encode, serial batch rows; what the serving path did
+//!   before the compiled-plan rework), via `NativeBackend::with_plan(false)`.
+//! * `planned` — the compiled-plan path: `CompiledCnn` built once at
+//!   startup, rows borrowed as slices and sharded across the worker pool.
+//!
+//! Before timing, the planned path is checked bit-identical to the
+//! reference `EncodedCnn::forward_fx`.  Results print to stdout, and
+//! `BENCH_serving.json` at the repository root is **rewritten** with this
+//! run's machine-readable results (req/s, latency percentiles, occupancy,
+//! backend label) — the perf trajectory across PRs lives in the committed
+//! history of that file, one snapshot per run.
+//!
+//! `--smoke` serves only the smallest load (the CI perf-harness check);
+//! the resulting file's `comparison.load` is 64, not the 1024 the
+//! acceptance bar reads — don't commit a smoke file over a full run.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
-use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::{default_backend, BatchPolicy, CoordinatorBuilder};
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend, NativePrecision,
+};
 use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::tensor::Tensor;
+use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
+const JSON_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+
+struct RunStats {
+    config: &'static str,
+    backend: String,
+    load: usize,
+    req_s: f64,
+    p50_us: u64,
+    p90_us: u64,
+    p99_us: u64,
+    mean_occupancy: f64,
+    padding_fraction: f64,
+    batches: u64,
+}
+
+fn build(enc: EncodedCnn, planned: bool) -> Coordinator {
+    let backend =
+        NativeBackend::new(enc).with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+    let backend = if planned {
+        backend
+    } else {
+        // the pre-PR serving strategy: no compiled plan, serial rows
+        backend.with_plan(false).with_threads(1)
+    };
+    CoordinatorBuilder::new()
+        .backend(backend)
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+        .build()
+        .expect("coordinator startup")
+}
+
+fn run_load(
+    config: &'static str,
+    enc: &EncodedCnn,
+    planned: bool,
+    load: usize,
+    pool: &[Tensor<f32>],
+) -> RunStats {
+    let coord = build(enc.clone(), planned);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..load)
+        .map(|i| coord.submit(pool[i % pool.len()].clone()).unwrap())
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    assert_eq!(ok, load);
+    let m = coord.metrics();
+    let req_s = load as f64 / dt.as_secs_f64();
+    println!(
+        "bench coordinator/{config}/serve_{load}: {dt:?} total, {req_s:.1} req/s, \
+         occupancy {:.2}, padding {:.1}%, p99 {} us",
+        m.mean_occupancy(),
+        m.padding_fraction() * 100.0,
+        m.percentile_us(99.0).unwrap()
+    );
+    RunStats {
+        config,
+        backend: m.backend.clone(),
+        load,
+        req_s,
+        p50_us: m.percentile_us(50.0).unwrap(),
+        p90_us: m.percentile_us(90.0).unwrap(),
+        p99_us: m.percentile_us(99.0).unwrap(),
+        mean_occupancy: m.mean_occupancy(),
+        padding_fraction: m.padding_fraction(),
+        batches: m.batches,
+    }
+}
+
+/// The planned serving path must be bit-identical to the reference
+/// fixed-point forward before any throughput number means anything.
+fn verify_bitexact(enc: &EncodedCnn, pool: &[Tensor<f32>]) {
+    let coord = build(enc.clone(), true);
+    for img in pool.iter().take(8) {
+        let resp = coord.infer(img.clone()).expect("verification inference");
+        let want = enc.forward_fx(img, ConvVariant::Pasm, QFormat::IMAGE32);
+        let got: Vec<u32> = resp.logits.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, wb, "planned serving diverged from reference forward_fx");
+    }
+    println!("verified: planned logits bit-identical to reference forward_fx");
+}
+
+fn write_json(runs: &[RunStats]) {
+    let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
+    let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load);
+    let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load);
+
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"coordinator_serving\",\n");
+    s.push_str("  \"model\": \"digits_cnn bins=16 wq=W32 fixed-point IMAGE32\",\n");
+    s.push_str("  \"baseline_label\": \"pre-plan per-request encode, serial rows\",\n");
+    s.push_str("  \"planned_label\": \"compiled layer plans + parallel batch rows\",\n");
+    s.push_str("  \"runs\": [\n");
+    for (i, r) in runs.iter().enumerate() {
+        let sep = if i + 1 == runs.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"config\": \"{}\", \"backend\": \"{}\", \"load\": {}, \
+             \"req_s\": {:.1}, \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}, \
+             \"mean_occupancy\": {:.2}, \"padding_fraction\": {:.3}, \"batches\": {}}}{sep}",
+            r.config,
+            r.backend,
+            r.load,
+            r.req_s,
+            r.p50_us,
+            r.p90_us,
+            r.p99_us,
+            r.mean_occupancy,
+            r.padding_fraction,
+            r.batches
+        );
+    }
+    s.push_str("  ],\n");
+    match (base, plan) {
+        (Some(b), Some(p)) => {
+            let _ = writeln!(
+                s,
+                "  \"comparison\": {{\"load\": {}, \"baseline_req_s\": {:.1}, \
+                 \"planned_req_s\": {:.1}, \"speedup\": {:.2}}}",
+                max_load,
+                b.req_s,
+                p.req_s,
+                p.req_s / b.req_s
+            );
+        }
+        _ => s.push_str("  \"comparison\": null\n"),
+    }
+    s.push_str("}\n");
+    std::fs::write(JSON_PATH, &s).expect("write BENCH_serving.json");
+    println!("wrote {JSON_PATH}");
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let loads: &[usize] = if smoke { &[64] } else { &[64, 256, 1024] };
+
     let arch = DigitsCnn::default();
     let mut rng = Rng::new(3);
     let params = arch.init(&mut rng);
     let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
-
-    let coord = CoordinatorBuilder::new()
-        .boxed_backend(default_backend("artifacts", enc))
-        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
-        .build()
-        .expect("coordinator startup");
-    println!("backend: {}", coord.metrics().backend);
 
     // pre-render a request pool
     let pool: Vec<_> = (0..256)
         .map(|i| render_digit(&mut rng, i % 10, 0.05))
         .collect();
 
-    for load in [64usize, 256, 1024] {
-        let t0 = Instant::now();
-        let rxs: Vec<_> = (0..load)
-            .map(|i| coord.submit(pool[i % pool.len()].clone()).unwrap())
-            .collect();
-        let mut ok = 0usize;
-        for rx in rxs {
-            if rx.recv().unwrap().is_ok() {
-                ok += 1;
-            }
-        }
-        let dt = t0.elapsed();
-        assert_eq!(ok, load);
-        println!(
-            "bench coordinator/serve_{load}: {:?} total, {:.1} req/s",
-            dt,
-            load as f64 / dt.as_secs_f64()
-        );
+    verify_bitexact(&enc, &pool);
+
+    let mut runs = Vec::new();
+    for &load in loads {
+        runs.push(run_load("baseline", &enc, false, load, &pool));
+        runs.push(run_load("planned", &enc, true, load, &pool));
     }
 
-    let m = coord.metrics();
+    let max_load = loads.last().copied().unwrap();
+    let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load).unwrap();
+    let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load).unwrap();
     println!(
-        "batches {} | mean occupancy {:.2} | padding {:.1}%",
-        m.batches,
-        m.mean_occupancy(),
-        m.padding_fraction() * 100.0
+        "speedup at load {max_load}: {:.2}x ({:.1} -> {:.1} req/s)",
+        plan.req_s / base.req_s,
+        base.req_s,
+        plan.req_s
     );
-    for p in [50.0, 90.0, 99.0] {
-        println!("p{p:.0} latency: {} us", m.percentile_us(p).unwrap());
-    }
-    println!(
-        "simulated accelerator totals: {} cycles, {:.3} uJ",
-        m.sim_cycles,
-        m.sim_energy_j * 1e6
-    );
+
+    write_json(&runs);
 }

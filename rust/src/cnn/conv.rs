@@ -20,7 +20,7 @@ use crate::tensor::{ConvShape, Tensor};
 /// Direct convolution (paper Fig 1 pseudo-code). `image [C,IH,IW]`,
 /// `weights [M,C,KY,KX]` -> `[M,OH,OW]`.
 pub fn direct_conv_f32(image: &Tensor<f32>, weights: &Tensor<f32>, stride: usize) -> Tensor<f32> {
-    let (shape, _) = conv_shapes(image.dims(), weights.dims(), stride);
+    let shape = conv_shapes(image.dims(), weights.dims(), stride);
     let mut out = Tensor::zeros(shape.out_shape().dims());
     for m in 0..shape.kernels {
         for oy in 0..shape.out_h() {
@@ -44,14 +44,17 @@ pub fn direct_conv_f32(image: &Tensor<f32>, weights: &Tensor<f32>, stride: usize
 
 /// Weight-shared MAC convolution (Fig 3/4): decode `codebook[bin_idx]` per
 /// tap, multiply-accumulate — the indirection of the weights register file.
+///
+/// Panics if any bin index is out of range for `codebook` (a corrupt
+/// encoding must be a hard error, not a silent wild read).
 pub fn ws_conv_f32(
     image: &Tensor<f32>,
     bin_idx: &Tensor<u16>,
     codebook: &[f32],
     stride: usize,
 ) -> Tensor<f32> {
-    let (shape, bins) = conv_shapes(image.dims(), bin_idx.dims(), stride);
-    assert!(codebook.len() >= bins, "codebook smaller than max bin index");
+    let shape = conv_shapes(image.dims(), bin_idx.dims(), stride);
+    assert_bins_in_range(bin_idx.data(), codebook.len());
     let mut out = Tensor::zeros(shape.out_shape().dims());
     for m in 0..shape.kernels {
         for oy in 0..shape.out_h() {
@@ -83,8 +86,8 @@ pub fn pasm_conv_f32(
     codebook: &[f32],
     stride: usize,
 ) -> Tensor<f32> {
-    let (shape, bins) = conv_shapes(image.dims(), bin_idx.dims(), stride);
-    assert!(codebook.len() >= bins);
+    let shape = conv_shapes(image.dims(), bin_idx.dims(), stride);
+    assert_bins_in_range(bin_idx.data(), codebook.len());
     let b_total = codebook.len();
     let mut out = Tensor::zeros(shape.out_shape().dims());
     let mut image_bin = vec![0f32; b_total];
@@ -136,6 +139,14 @@ pub struct FxConvInputs {
 
 impl FxConvInputs {
     /// Encode float inputs into the given fixed-point formats.
+    ///
+    /// Internal/reference-path only: this clones `bin_idx` and re-derives
+    /// the raw codebook on **every call**, which is exactly the per-request
+    /// overhead the serving path must not pay.  Serving code goes through
+    /// [`crate::cnn::plan::CompiledCnn`], which precomputes all weight-derived
+    /// state once; this constructor stays as the golden-oracle input builder
+    /// for tests and the cycle-accurate simulator.
+    #[doc(hidden)]
     pub fn encode(
         image: &Tensor<f32>,
         enc: &EncodedWeights,
@@ -153,7 +164,7 @@ impl FxConvInputs {
     }
 
     pub fn shape(&self) -> ConvShape {
-        conv_shapes(self.image_raw.dims(), self.bin_idx.dims(), self.stride).0
+        conv_shapes(self.image_raw.dims(), self.bin_idx.dims(), self.stride)
     }
 
     /// Fractional bits of the raw output values.
@@ -169,6 +180,7 @@ impl FxConvInputs {
 /// `Tensor::at` costs three multiplies per tap, which dominates the loop.
 pub fn ws_conv_fx(inp: &FxConvInputs) -> Tensor<i64> {
     let shape = inp.shape();
+    assert_bins_in_range(inp.bin_idx.data(), inp.codebook_raw.len());
     let (ih_w, k_w) = (shape.in_w, shape.kernel_w);
     let plane = shape.in_h * ih_w;
     let taps = shape.taps();
@@ -210,6 +222,7 @@ pub fn ws_conv_fx(inp: &FxConvInputs) -> Tensor<i64> {
 /// is enforced by property tests.
 pub fn pasm_conv_fx(inp: &FxConvInputs) -> Tensor<i64> {
     let shape = inp.shape();
+    assert_bins_in_range(inp.bin_idx.data(), inp.codebook_raw.len());
     let b_total = inp.codebook_raw.len();
     let (ih_w, k_w) = (shape.in_w, shape.kernel_w);
     let plane = shape.in_h * ih_w;
@@ -258,13 +271,12 @@ pub fn pasm_conv_fx(inp: &FxConvInputs) -> Tensor<i64> {
 // ---------------------------------------------------------------------------
 
 /// Validate and derive the conv shape from image dims `[C,IH,IW]` and kernel
-/// dims `[M,C,KY,KX]`; returns `(shape, max_bins_referenced)` where bins is
-/// only meaningful for index tensors.
-fn conv_shapes(image_dims: &[usize], kernel_dims: &[usize], stride: usize) -> (ConvShape, usize) {
+/// dims `[M,C,KY,KX]`.
+fn conv_shapes(image_dims: &[usize], kernel_dims: &[usize], stride: usize) -> ConvShape {
     assert_eq!(image_dims.len(), 3, "image must be [C,IH,IW]");
     assert_eq!(kernel_dims.len(), 4, "kernel must be [M,C,KY,KX]");
     assert_eq!(image_dims[0], kernel_dims[1], "channel mismatch");
-    let shape = ConvShape::new(
+    ConvShape::new(
         image_dims[0],
         image_dims[1],
         image_dims[2],
@@ -272,8 +284,19 @@ fn conv_shapes(image_dims: &[usize], kernel_dims: &[usize], stride: usize) -> (C
         kernel_dims[3],
         kernel_dims[0],
         stride,
+    )
+}
+
+/// Hard-error on any bin index outside the codebook: scans the (small)
+/// index tensor for its real maximum before the hot loops run, so a corrupt
+/// encoding fails loudly in both the f32 and fixed-point dataflows rather
+/// than indexing out of bounds mid-convolution.
+pub(crate) fn assert_bins_in_range(bin_idx: &[u16], codebook_len: usize) {
+    let max_bin = bin_idx.iter().copied().max().unwrap_or(0) as usize;
+    assert!(
+        max_bin < codebook_len,
+        "bin index {max_bin} out of range for codebook with {codebook_len} entries"
     );
-    (shape, 0)
 }
 
 #[cfg(test)]
@@ -396,5 +419,49 @@ mod tests {
         let image = Tensor::<f32>::zeros(&[3, 5, 5]);
         let weights = Tensor::<f32>::zeros(&[2, 4, 3, 3]);
         direct_conv_f32(&image, &weights, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn ws_f32_out_of_range_bin_is_hard_error() {
+        let image = Tensor::<f32>::zeros(&[1, 3, 3]);
+        let bin_idx = Tensor::from_vec(&[1, 1, 3, 3], vec![0u16, 1, 2, 3, 9, 0, 1, 2, 3]);
+        ws_conv_f32(&image, &bin_idx, &[0.5f32; 4], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pasm_f32_out_of_range_bin_is_hard_error() {
+        let image = Tensor::<f32>::zeros(&[1, 3, 3]);
+        let bin_idx = Tensor::from_vec(&[1, 1, 3, 3], vec![0u16, 1, 2, 3, 9, 0, 1, 2, 3]);
+        pasm_conv_f32(&image, &bin_idx, &[0.5f32; 4], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn ws_fx_out_of_range_bin_is_hard_error() {
+        let inp = FxConvInputs {
+            image_raw: Tensor::zeros(&[1, 3, 3]),
+            bin_idx: Tensor::from_vec(&[1, 1, 3, 3], vec![0u16, 1, 2, 3, 9, 0, 1, 2, 3]),
+            codebook_raw: vec![1i64; 4],
+            iq: QFormat::IMAGE32,
+            wq: QFormat::W16,
+            stride: 1,
+        };
+        ws_conv_fx(&inp);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pasm_fx_out_of_range_bin_is_hard_error() {
+        let inp = FxConvInputs {
+            image_raw: Tensor::zeros(&[1, 3, 3]),
+            bin_idx: Tensor::from_vec(&[1, 1, 3, 3], vec![0u16, 1, 2, 3, 9, 0, 1, 2, 3]),
+            codebook_raw: vec![1i64; 4],
+            iq: QFormat::IMAGE32,
+            wq: QFormat::W16,
+            stride: 1,
+        };
+        pasm_conv_fx(&inp);
     }
 }

@@ -3,6 +3,12 @@
 //! The paper's accelerator includes stride, bias and ReLU in the datapath
 //! (§4: "the activation function and bias parameters are not shared"); the
 //! pool/dense layers complete the digits CNN used by the e2e example.
+//!
+//! Each op exists in two forms: a tensor-level convenience and a
+//! slice-level `*_slice` / `*_into` worker the convenience delegates to.
+//! The workers are what [`crate::cnn::plan::CompiledCnn`] drives over its
+//! scratch arenas — one code path means the planned forward is
+//! bit-identical to the reference forward by construction, not by luck.
 
 use crate::tensor::Tensor;
 
@@ -10,10 +16,16 @@ use crate::tensor::Tensor;
 pub fn add_bias(x: &mut Tensor<f32>, bias: &[f32]) {
     let dims = x.dims().to_vec();
     assert_eq!(dims.len(), 3, "bias expects [M,H,W]");
-    assert_eq!(dims[0], bias.len(), "bias length mismatch");
     let plane = dims[1] * dims[2];
+    add_bias_slice(x.data_mut(), plane, bias);
+}
+
+/// Slice worker for [`add_bias`]: `x` is `[M,H,W]` flattened row-major with
+/// `plane = H * W`.
+pub fn add_bias_slice(x: &mut [f32], plane: usize, bias: &[f32]) {
+    assert_eq!(x.len(), plane * bias.len(), "bias length mismatch");
     for (m, &b) in bias.iter().enumerate() {
-        for v in &mut x.data_mut()[m * plane..(m + 1) * plane] {
+        for v in &mut x[m * plane..(m + 1) * plane] {
             *v += b;
         }
     }
@@ -21,7 +33,12 @@ pub fn add_bias(x: &mut Tensor<f32>, bias: &[f32]) {
 
 /// ReLU in place.
 pub fn relu(x: &mut Tensor<f32>) {
-    for v in x.data_mut() {
+    relu_slice(x.data_mut());
+}
+
+/// Slice worker for [`relu`].
+pub fn relu_slice(x: &mut [f32]) {
+    for v in x {
         if *v < 0.0 {
             *v = 0.0;
         }
@@ -34,22 +51,30 @@ pub fn maxpool2(x: &Tensor<f32>) -> Tensor<f32> {
     let dims = x.dims();
     assert_eq!(dims.len(), 3);
     let (c, h, w) = (dims[0], dims[1], dims[2]);
+    let mut out = Tensor::zeros(&[c, h / 2, w / 2]);
+    maxpool2_into(x.data(), c, h, w, out.data_mut());
+    out
+}
+
+/// Slice worker for [`maxpool2`]: `x` is `[C,H,W]` flattened, `out` must be
+/// `[C, H/2, W/2]` flattened.
+pub fn maxpool2_into(x: &[f32], c: usize, h: usize, w: usize, out: &mut [f32]) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(&[c, oh, ow]);
+    assert_eq!(x.len(), c * h * w, "maxpool input length mismatch");
+    assert_eq!(out.len(), c * oh * ow, "maxpool output length mismatch");
     for ci in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut m = f32::NEG_INFINITY;
                 for dy in 0..2 {
                     for dx in 0..2 {
-                        m = m.max(x.at(&[ci, oy * 2 + dy, ox * 2 + dx]));
+                        m = m.max(x[ci * h * w + (oy * 2 + dy) * w + (ox * 2 + dx)]);
                     }
                 }
-                *out.at_mut(&[ci, oy, ox]) = m;
+                out[ci * oh * ow + oy * ow + ox] = m;
             }
         }
     }
-    out
 }
 
 /// Max-pool backward helper: argmax mask positions (training path).
@@ -85,19 +110,27 @@ pub fn maxpool2_with_argmax(x: &Tensor<f32>) -> (Tensor<f32>, Vec<usize>) {
 
 /// Dense layer: `feat [K] @ w [K,N] + b [N]`.
 pub fn dense(feat: &[f32], w: &Tensor<f32>, b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; b.len()];
+    dense_into(feat, w, b, &mut out);
+    out
+}
+
+/// Slice worker for [`dense`]: writes the logits into a caller-provided
+/// buffer (the zero-allocation serving path).
+pub fn dense_into(feat: &[f32], w: &Tensor<f32>, b: &[f32], out: &mut [f32]) {
     let dims = w.dims();
     assert_eq!(dims.len(), 2);
     let (k, n) = (dims[0], dims[1]);
     assert_eq!(feat.len(), k, "feature dim mismatch");
     assert_eq!(b.len(), n);
-    let mut out = b.to_vec();
+    assert_eq!(out.len(), n, "logit buffer length mismatch");
+    out.copy_from_slice(b);
     for (i, &f) in feat.iter().enumerate() {
         let row = &w.data()[i * n..(i + 1) * n];
         for (o, &wv) in out.iter_mut().zip(row) {
             *o += f * wv;
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -112,10 +145,15 @@ pub fn dense(feat: &[f32], w: &Tensor<f32>, b: &[f32]) -> Vec<f32> {
 pub fn add_bias_fx(x: &mut Tensor<i64>, bias_raw: &[i64]) {
     let dims = x.dims().to_vec();
     assert_eq!(dims.len(), 3, "bias expects [M,H,W]");
-    assert_eq!(dims[0], bias_raw.len(), "bias length mismatch");
     let plane = dims[1] * dims[2];
+    add_bias_fx_slice(x.data_mut(), plane, bias_raw);
+}
+
+/// Slice worker for [`add_bias_fx`].
+pub fn add_bias_fx_slice(x: &mut [i64], plane: usize, bias_raw: &[i64]) {
+    assert_eq!(x.len(), plane * bias_raw.len(), "bias length mismatch");
     for (m, &b) in bias_raw.iter().enumerate() {
-        for v in &mut x.data_mut()[m * plane..(m + 1) * plane] {
+        for v in &mut x[m * plane..(m + 1) * plane] {
             *v = v.checked_add(b).expect("bias add overflow");
         }
     }
@@ -123,7 +161,12 @@ pub fn add_bias_fx(x: &mut Tensor<i64>, bias_raw: &[i64]) {
 
 /// ReLU in place on raw values (sign test is format-independent).
 pub fn relu_fx(x: &mut Tensor<i64>) {
-    for v in x.data_mut() {
+    relu_fx_slice(x.data_mut());
+}
+
+/// Slice worker for [`relu_fx`].
+pub fn relu_fx_slice(x: &mut [i64]) {
+    for v in x {
         if *v < 0 {
             *v = 0;
         }
@@ -137,22 +180,29 @@ pub fn maxpool2_fx(x: &Tensor<i64>) -> Tensor<i64> {
     let dims = x.dims();
     assert_eq!(dims.len(), 3);
     let (c, h, w) = (dims[0], dims[1], dims[2]);
+    let mut out = Tensor::zeros(&[c, h / 2, w / 2]);
+    maxpool2_fx_into(x.data(), c, h, w, out.data_mut());
+    out
+}
+
+/// Slice worker for [`maxpool2_fx`].
+pub fn maxpool2_fx_into(x: &[i64], c: usize, h: usize, w: usize, out: &mut [i64]) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(&[c, oh, ow]);
+    assert_eq!(x.len(), c * h * w, "maxpool input length mismatch");
+    assert_eq!(out.len(), c * oh * ow, "maxpool output length mismatch");
     for ci in 0..c {
         for oy in 0..oh {
             for ox in 0..ow {
                 let mut m = i64::MIN;
                 for dy in 0..2 {
                     for dx in 0..2 {
-                        m = m.max(x.at(&[ci, oy * 2 + dy, ox * 2 + dx]));
+                        m = m.max(x[ci * h * w + (oy * 2 + dy) * w + (ox * 2 + dx)]);
                     }
                 }
-                *out.at_mut(&[ci, oy, ox]) = m;
+                out[ci * oh * ow + oy * ow + ox] = m;
             }
         }
     }
-    out
 }
 
 /// Numerically-stable softmax.

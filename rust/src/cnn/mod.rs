@@ -6,9 +6,15 @@
 //!   (Fig 5/6/13), in both f32 and fixed-point (`i64`) arithmetic.  The
 //!   fixed-point PASM and WS paths are *bit-identical* (paper §5.3) — the
 //!   property tests enforce it.
-//! * [`layer`] — bias / ReLU / max-pool / dense building blocks.
+//! * [`layer`] — bias / ReLU / max-pool / dense building blocks (tensor
+//!   conveniences delegating to slice workers the planned path reuses).
 //! * [`network`] — the digits CNN (conv-relu-pool ×2 + dense) mirroring
 //!   `python/compile/model.py`, with float and dictionary-encoded forms.
+//! * [`plan`] — the plan/execute split: [`plan::CompiledCnn`] compiles an
+//!   [`network::EncodedCnn`] once (flattened indices, pre-encoded
+//!   codebooks/biases, plan-time overflow proof, reusable scratch) so a
+//!   steady-state forward allocates nothing; bit-identical to the
+//!   reference forwards and served by the coordinator's `NativeBackend`.
 //! * [`train`] — a small SGD trainer (backprop written out by hand) used by
 //!   the e2e example to get real trained weights to quantize.
 //! * [`data`] — synthetic 10-class digit dataset generator.
@@ -19,8 +25,10 @@ pub mod data;
 pub mod dense_ws;
 pub mod layer;
 pub mod network;
+pub mod plan;
 pub mod shapes;
 pub mod train;
 
 pub use conv::{direct_conv_f32, pasm_conv_fx, pasm_conv_f32, ws_conv_f32, ws_conv_fx, FxConvInputs};
 pub use network::{DigitsCnn, EncodedCnn, NetworkParams};
+pub use plan::{CompiledCnn, LayerPlan, Scratch};

@@ -17,7 +17,7 @@ use crate::cnn::layer::{
     add_bias, add_bias_fx, argmax, dense, maxpool2, maxpool2_fx, relu, relu_fx,
 };
 use crate::quant::codebook::{encode_weights, EncodedWeights};
-use crate::quant::fixed::{fx_rescale, QFormat};
+use crate::quant::fixed::{encode_bias_raw, fx_rescale, QFormat};
 use crate::tensor::{ConvShape, Tensor};
 
 /// Float parameters of the digits CNN.
@@ -158,6 +158,16 @@ impl EncodedCnn {
         dense(&feat, &self.dense_w, &self.dense_b)
     }
 
+    /// Compile this model into a [`crate::cnn::plan::CompiledCnn`] for
+    /// repeated execution: all weight-derived state (flattened indices,
+    /// fixed-point codebooks at image format `iq`, raw biases) is computed
+    /// once, and steady-state forwards allocate nothing.  The serving path
+    /// (`NativeBackend`) goes through this; `forward`/`forward_fx` below
+    /// stay as the allocating golden oracle the plan is pinned against.
+    pub fn compile(&self, iq: QFormat) -> anyhow::Result<crate::cnn::plan::CompiledCnn> {
+        crate::cnn::plan::CompiledCnn::compile(self, iq)
+    }
+
     /// Fixed-point forward: both conv layers run the raw-integer dataflows
     /// (`ws_conv_fx` / `pasm_conv_fx`) with images in format `iq`,
     /// activations requantized back to `iq` between layers, and the dense
@@ -172,15 +182,10 @@ impl EncodedCnn {
             ConvVariant::WeightShared => ws_conv_fx(inp),
             ConvVariant::Pasm => pasm_conv_fx(inp),
         };
-        let bias_raw = |bias: &[f32], frac: u32| -> Vec<i64> {
-            let scale = (1u64 << frac) as f64;
-            bias.iter().map(|&b| (b as f64 * scale).round() as i64).collect()
-        };
-
         let inp1 = FxConvInputs::encode(image, &self.conv1, iq, 1);
         let frac1 = inp1.out_frac();
         let mut h = conv(&inp1);
-        add_bias_fx(&mut h, &bias_raw(&self.conv1_b, frac1));
+        add_bias_fx(&mut h, &encode_bias_raw(&self.conv1_b, frac1));
         relu_fx(&mut h);
         let h = maxpool2_fx(&h);
 
@@ -198,7 +203,7 @@ impl EncodedCnn {
         };
         let frac2 = inp2.out_frac();
         let mut h = conv(&inp2);
-        add_bias_fx(&mut h, &bias_raw(&self.conv2_b, frac2));
+        add_bias_fx(&mut h, &encode_bias_raw(&self.conv2_b, frac2));
         relu_fx(&mut h);
 
         let scale2 = (1u64 << frac2) as f64;

@@ -1,0 +1,679 @@
+//! Compiled inference plans: the plan/execute split for native serving.
+//!
+//! The paper's PAS phase separates cheap accumulation from the shared
+//! multiply; the software hot path should exploit the same structure.
+//! Everything *weight-derived* is computed once at plan time — flattened
+//! bin indices, fixed-point codebooks, raw biases, shapes/strides, and an
+//! accumulator overflow bound — so a steady-state forward only streams
+//! activations through preassembled state (the way Deep Compression
+//! amortizes codebook decode across inference).
+//!
+//! * [`LayerPlan`] — one convolution layer, compiled: pre-flattened
+//!   `bin_idx`, pre-encoded codebook/bias, and a **plan-time overflow
+//!   proof**: if `taps · max|image_raw| · max|codebook_raw| + max|bias|`
+//!   fits in `i64` for every image representable in the input format, the
+//!   per-tap `checked_add` of the reference kernels becomes a plain add
+//!   (plus `debug_assert`), not a branch per tap.  Codebooks that defeat
+//!   the proof fall back to checked arithmetic — never to silence.
+//! * [`CompiledCnn`] — an [`EncodedCnn`] compiled end to end, executing
+//!   into caller-provided [`Scratch`] arenas: a steady-state
+//!   `forward_*_into` call performs **zero heap allocation**.
+//!
+//! Exactness contract: the planned forwards are **bit-identical** to the
+//! reference [`EncodedCnn::forward`] / [`EncodedCnn::forward_fx`] — in
+//! fixed point because integer addition commutes (paper §5.3), in f32
+//! because the planned path performs the identical sequence of IEEE
+//! operations (the non-conv stages literally share the slice workers in
+//! [`crate::cnn::layer`], and the conv loops mirror the reference
+//! accumulation order).  Property tests pin both claims.
+
+use crate::cnn::layer::{
+    add_bias_fx_slice, add_bias_slice, dense_into, maxpool2_fx_into, maxpool2_into, relu_fx_slice,
+    relu_slice,
+};
+use crate::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use crate::quant::codebook::EncodedWeights;
+use crate::quant::fixed::{encode_bias_raw, fx_rescale, QFormat};
+use crate::tensor::{ConvShape, Tensor};
+use anyhow::{ensure, Result};
+
+/// One convolution layer compiled for repeated execution.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    shape: ConvShape,
+    /// Bin indices flattened to `[kernels * taps]` row-major.
+    bin_idx: Vec<u16>,
+    /// Float codebook (positional identity with `codebook_raw`).
+    codebook_f32: Vec<f32>,
+    /// Fixed-point raw codebook in `wq`.
+    codebook_raw: Vec<i64>,
+    /// Float per-kernel bias.
+    bias_f32: Vec<f32>,
+    /// Raw bias carrying `out_frac` fractional bits.
+    bias_raw: Vec<i64>,
+    iq: QFormat,
+    wq: QFormat,
+    /// Plan-time proof that no accumulator can overflow `i64` for any
+    /// image representable in `iq` — lets the fixed-point kernels run
+    /// branch-free.
+    proved_no_overflow: bool,
+}
+
+impl LayerPlan {
+    /// Compile one layer: validate the encoding (out-of-range bins are a
+    /// hard error), pre-encode the fixed-point state, and establish the
+    /// accumulator overflow bound.
+    pub fn compile(
+        shape: ConvShape,
+        enc: &EncodedWeights,
+        bias: &[f32],
+        iq: QFormat,
+    ) -> Result<LayerPlan> {
+        ensure!(
+            enc.bin_idx.dims() == shape.weight_shape().dims(),
+            "bin_idx dims {:?} do not match layer weight shape {:?}",
+            enc.bin_idx.dims(),
+            shape.weight_shape().dims()
+        );
+        ensure!(
+            bias.len() == shape.kernels,
+            "bias length {} != kernels {}",
+            bias.len(),
+            shape.kernels
+        );
+        let codebook_raw = enc.codebook.raw();
+        let max_bin = enc.bin_idx.data().iter().copied().max().unwrap_or(0) as usize;
+        ensure!(
+            max_bin < codebook_raw.len(),
+            "bin index {} out of range for codebook with {} entries",
+            max_bin,
+            codebook_raw.len()
+        );
+        let wq = enc.codebook.wq;
+        let bias_raw = encode_bias_raw(bias, iq.frac + wq.frac);
+
+        // Overflow proof over *actual* codebook magnitudes (format-max
+        // would be hopelessly conservative for W32): the WS/post-pass
+        // accumulator is bounded by taps * max|img| * max|cb| + max|bias|,
+        // the PAS bins by taps * max|img|.
+        let taps = shape.taps() as i128;
+        let max_img = iq.max_raw().unsigned_abs().max(iq.min_raw().unsigned_abs()) as i128;
+        let max_cb = codebook_raw.iter().map(|c| c.unsigned_abs()).max().unwrap_or(0) as i128;
+        let max_bias = bias_raw.iter().map(|b| b.unsigned_abs()).max().unwrap_or(0) as i128;
+        let acc_bound = taps * max_img * max_cb + max_bias;
+        let pas_bound = taps * max_img;
+        let proved_no_overflow = acc_bound <= i64::MAX as i128 && pas_bound <= i64::MAX as i128;
+
+        Ok(LayerPlan {
+            shape,
+            bin_idx: enc.bin_idx.data().to_vec(),
+            codebook_f32: enc.codebook.values.clone(),
+            codebook_raw,
+            bias_f32: bias.to_vec(),
+            bias_raw,
+            iq,
+            wq,
+            proved_no_overflow,
+        })
+    }
+
+    pub fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    /// Codebook entries (`B`).
+    pub fn bins(&self) -> usize {
+        self.codebook_raw.len()
+    }
+
+    /// Fractional bits of the raw conv output (`iq.frac + wq.frac`).
+    pub fn out_frac(&self) -> u32 {
+        self.iq.frac + self.wq.frac
+    }
+
+    /// Raw per-kernel bias at [`LayerPlan::out_frac`] fractional bits.
+    pub fn bias_raw(&self) -> &[i64] {
+        &self.bias_raw
+    }
+
+    /// Float per-kernel bias.
+    pub fn bias_f32(&self) -> &[f32] {
+        &self.bias_f32
+    }
+
+    /// Did the plan-time bound prove the fixed-point kernels overflow-free?
+    pub fn proved_no_overflow(&self) -> bool {
+        self.proved_no_overflow
+    }
+
+    /// Fixed-point convolution (no bias/activation) into `out`
+    /// (`[kernels, OH, OW]` flattened).  `bins` is PASM scratch with at
+    /// least [`LayerPlan::bins`] slots; bit-identical to
+    /// [`crate::cnn::conv::ws_conv_fx`] / `pasm_conv_fx` on the same
+    /// encoded inputs.
+    pub fn conv_fx_into(
+        &self,
+        variant: ConvVariant,
+        img: &[i64],
+        bins: &mut [i64],
+        out: &mut [i64],
+    ) {
+        match (variant, self.proved_no_overflow) {
+            (ConvVariant::WeightShared, true) => self.ws_fx::<false>(img, out),
+            (ConvVariant::WeightShared, false) => self.ws_fx::<true>(img, out),
+            (ConvVariant::Pasm, true) => self.pasm_fx::<false>(img, bins, out),
+            (ConvVariant::Pasm, false) => self.pasm_fx::<true>(img, bins, out),
+        }
+    }
+
+    /// f32 convolution (no bias/activation) into `out`; performs the
+    /// identical IEEE operation sequence as
+    /// [`crate::cnn::conv::ws_conv_f32`] / `pasm_conv_f32`.
+    pub fn conv_f32_into(
+        &self,
+        variant: ConvVariant,
+        img: &[f32],
+        bins: &mut [f32],
+        out: &mut [f32],
+    ) {
+        match variant {
+            ConvVariant::WeightShared => self.ws_f32(img, out),
+            ConvVariant::Pasm => self.pasm_f32(img, bins, out),
+        }
+    }
+
+    fn check_lens(&self, img_len: usize, out_len: usize) {
+        let s = &self.shape;
+        assert_eq!(img_len, s.channels * s.in_h * s.in_w, "image length mismatch");
+        assert_eq!(out_len, s.kernels * s.out_pixels(), "output length mismatch");
+    }
+
+    fn ws_fx<const CHECKED: bool>(&self, img: &[i64], out: &mut [i64]) {
+        self.check_lens(img.len(), out.len());
+        let s = &self.shape;
+        let (ih_w, k_w) = (s.in_w, s.kernel_w);
+        let plane = s.in_h * ih_w;
+        let taps = s.taps();
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let cb = &self.codebook_raw;
+        for m in 0..s.kernels {
+            let bi_m = &self.bin_idx[m * taps..(m + 1) * taps];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i64;
+                    let mut t = 0usize;
+                    let base = oy * s.stride * ih_w + ox * s.stride;
+                    for c in 0..s.channels {
+                        let cplane = &img[c * plane..(c + 1) * plane];
+                        for ky in 0..s.kernel_h {
+                            let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                            for &iv in row {
+                                let b = bi_m[t] as usize;
+                                acc = acc_add::<CHECKED>(acc, mul::<CHECKED>(iv, cb[b]));
+                                t += 1;
+                            }
+                        }
+                    }
+                    out[m * oh * ow + oy * ow + ox] = acc;
+                }
+            }
+        }
+    }
+
+    fn pasm_fx<const CHECKED: bool>(&self, img: &[i64], bins: &mut [i64], out: &mut [i64]) {
+        self.check_lens(img.len(), out.len());
+        let s = &self.shape;
+        let cb = &self.codebook_raw;
+        let bins = &mut bins[..cb.len()];
+        let (ih_w, k_w) = (s.in_w, s.kernel_w);
+        let plane = s.in_h * ih_w;
+        let taps = s.taps();
+        let (oh, ow) = (s.out_h(), s.out_w());
+        for m in 0..s.kernels {
+            let bi_m = &self.bin_idx[m * taps..(m + 1) * taps];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    bins.fill(0);
+                    let mut t = 0usize;
+                    let base = oy * s.stride * ih_w + ox * s.stride;
+                    // PAS phase: weighted histogram of dictionary indices
+                    for c in 0..s.channels {
+                        let cplane = &img[c * plane..(c + 1) * plane];
+                        for ky in 0..s.kernel_h {
+                            let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                            for &iv in row {
+                                let b = bi_m[t] as usize;
+                                bins[b] = acc_add::<CHECKED>(bins[b], iv);
+                                t += 1;
+                            }
+                        }
+                    }
+                    // post-pass MAC: B multiplies, shared unit
+                    let mut acc = 0i64;
+                    for (bv, &cv) in bins.iter().zip(cb.iter()) {
+                        acc = acc_add::<CHECKED>(acc, mul::<CHECKED>(*bv, cv));
+                    }
+                    out[m * oh * ow + oy * ow + ox] = acc;
+                }
+            }
+        }
+    }
+
+    fn ws_f32(&self, img: &[f32], out: &mut [f32]) {
+        self.check_lens(img.len(), out.len());
+        let s = &self.shape;
+        let (ih_w, k_w) = (s.in_w, s.kernel_w);
+        let plane = s.in_h * ih_w;
+        let taps = s.taps();
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let cb = &self.codebook_f32;
+        for m in 0..s.kernels {
+            let bi_m = &self.bin_idx[m * taps..(m + 1) * taps];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0f32;
+                    let mut t = 0usize;
+                    let base = oy * s.stride * ih_w + ox * s.stride;
+                    for c in 0..s.channels {
+                        let cplane = &img[c * plane..(c + 1) * plane];
+                        for ky in 0..s.kernel_h {
+                            let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                            for &iv in row {
+                                acc += iv * cb[bi_m[t] as usize];
+                                t += 1;
+                            }
+                        }
+                    }
+                    out[m * oh * ow + oy * ow + ox] = acc;
+                }
+            }
+        }
+    }
+
+    fn pasm_f32(&self, img: &[f32], bins: &mut [f32], out: &mut [f32]) {
+        self.check_lens(img.len(), out.len());
+        let s = &self.shape;
+        let cb = &self.codebook_f32;
+        let bins = &mut bins[..cb.len()];
+        let (ih_w, k_w) = (s.in_w, s.kernel_w);
+        let plane = s.in_h * ih_w;
+        let taps = s.taps();
+        let (oh, ow) = (s.out_h(), s.out_w());
+        for m in 0..s.kernels {
+            let bi_m = &self.bin_idx[m * taps..(m + 1) * taps];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    bins.fill(0.0);
+                    let mut t = 0usize;
+                    let base = oy * s.stride * ih_w + ox * s.stride;
+                    for c in 0..s.channels {
+                        let cplane = &img[c * plane..(c + 1) * plane];
+                        for ky in 0..s.kernel_h {
+                            let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
+                            for &iv in row {
+                                bins[bi_m[t] as usize] += iv;
+                                t += 1;
+                            }
+                        }
+                    }
+                    let mut acc = 0f32;
+                    for (bv, &cv) in bins.iter().zip(cb.iter()) {
+                        acc += *bv * cv;
+                    }
+                    out[m * oh * ow + oy * ow + ox] = acc;
+                }
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn acc_add<const CHECKED: bool>(a: i64, b: i64) -> i64 {
+    if CHECKED {
+        a.checked_add(b).expect("planned accumulator overflow")
+    } else {
+        debug_assert!(a.checked_add(b).is_some(), "plan-time overflow bound violated (add)");
+        a.wrapping_add(b)
+    }
+}
+
+#[inline(always)]
+fn mul<const CHECKED: bool>(a: i64, b: i64) -> i64 {
+    if CHECKED {
+        a.checked_mul(b).expect("planned product overflow")
+    } else {
+        debug_assert!(a.checked_mul(b).is_some(), "plan-time overflow bound violated (mul)");
+        a.wrapping_mul(b)
+    }
+}
+
+/// Reusable per-worker scratch arenas: every intermediate buffer a forward
+/// pass touches, allocated once.  A steady-state `forward_*_into` call
+/// performs zero heap allocation.
+#[derive(Clone, Debug)]
+pub struct Scratch {
+    img_fx: Vec<i64>,
+    conv1_fx: Vec<i64>,
+    pooled_fx: Vec<i64>,
+    conv2_fx: Vec<i64>,
+    bins_fx: Vec<i64>,
+    feat: Vec<f32>,
+    conv1_f32: Vec<f32>,
+    pooled_f32: Vec<f32>,
+    conv2_f32: Vec<f32>,
+    bins_f32: Vec<f32>,
+}
+
+/// An [`EncodedCnn`] compiled once for repeated execution: per-layer
+/// [`LayerPlan`]s plus the dense head, driven over a [`Scratch`] arena.
+///
+/// Sits between [`EncodedCnn`] (the model) and the execution backends (the
+/// serving substrate): `NativeBackend` compiles one of these at startup and
+/// every request thereafter only streams activations.
+#[derive(Clone, Debug)]
+pub struct CompiledCnn {
+    arch: DigitsCnn,
+    conv1: LayerPlan,
+    conv2: LayerPlan,
+    dense_w: Tensor<f32>,
+    dense_b: Vec<f32>,
+    iq: QFormat,
+}
+
+impl CompiledCnn {
+    /// Compile `enc` with images in fixed-point format `iq` (the f32 path
+    /// ignores `iq`).  Fails on inconsistent shapes or out-of-range bin
+    /// indices — startup errors, never mid-request surprises.
+    pub fn compile(enc: &EncodedCnn, iq: QFormat) -> Result<CompiledCnn> {
+        let arch = enc.arch;
+        let s1 = arch.conv1_shape();
+        let s2 = arch.conv2_shape();
+        ensure!(
+            s2.channels == s1.kernels && s2.in_h == s1.out_h() / 2 && s2.in_w == s1.out_w() / 2,
+            "conv2 input shape does not match pooled conv1 output"
+        );
+        let conv1 = LayerPlan::compile(s1, &enc.conv1, &enc.conv1_b, iq)?;
+        let conv2 = LayerPlan::compile(s2, &enc.conv2, &enc.conv2_b, iq)?;
+        ensure!(
+            enc.dense_w.dims() == [arch.feature_dim(), arch.classes],
+            "dense weight dims {:?} != [{}, {}]",
+            enc.dense_w.dims(),
+            arch.feature_dim(),
+            arch.classes
+        );
+        ensure!(
+            enc.dense_b.len() == arch.classes,
+            "dense bias length {} != classes {}",
+            enc.dense_b.len(),
+            arch.classes
+        );
+        Ok(CompiledCnn {
+            arch,
+            conv1,
+            conv2,
+            dense_w: enc.dense_w.clone(),
+            dense_b: enc.dense_b.clone(),
+            iq,
+        })
+    }
+
+    pub fn arch(&self) -> &DigitsCnn {
+        &self.arch
+    }
+
+    /// Image fixed-point format the fixed-point path was compiled for.
+    pub fn iq(&self) -> QFormat {
+        self.iq
+    }
+
+    /// Flattened input image length (`C * IH * IW`).
+    pub fn in_len(&self) -> usize {
+        let s = self.conv1.shape();
+        s.channels * s.in_h * s.in_w
+    }
+
+    pub fn classes(&self) -> usize {
+        self.arch.classes
+    }
+
+    /// The per-layer plans (conv1, conv2).
+    pub fn layers(&self) -> (&LayerPlan, &LayerPlan) {
+        (&self.conv1, &self.conv2)
+    }
+
+    /// Allocate a scratch arena sized for this plan.  One per worker
+    /// thread; reuse it across requests for allocation-free forwards.
+    pub fn scratch(&self) -> Scratch {
+        let s1 = self.conv1.shape();
+        let s2 = self.conv2.shape();
+        let in_len = s1.channels * s1.in_h * s1.in_w;
+        let c1_len = s1.kernels * s1.out_pixels();
+        let pool_len = s2.channels * s2.in_h * s2.in_w;
+        let c2_len = s2.kernels * s2.out_pixels();
+        let bins = self.conv1.bins().max(self.conv2.bins());
+        Scratch {
+            img_fx: vec![0; in_len],
+            conv1_fx: vec![0; c1_len],
+            pooled_fx: vec![0; pool_len],
+            conv2_fx: vec![0; c2_len],
+            bins_fx: vec![0; bins],
+            feat: vec![0.0; c2_len],
+            conv1_f32: vec![0.0; c1_len],
+            pooled_f32: vec![0.0; pool_len],
+            conv2_f32: vec![0.0; c2_len],
+            bins_f32: vec![0.0; bins],
+        }
+    }
+
+    /// Fixed-point forward into `logits` — bit-identical to
+    /// [`EncodedCnn::forward_fx`] with the plan's `iq`, for either variant
+    /// (and across variants: paper §5.3).
+    pub fn forward_fx_into(
+        &self,
+        image: &[f32],
+        variant: ConvVariant,
+        s: &mut Scratch,
+        logits: &mut [f32],
+    ) {
+        assert_eq!(image.len(), self.in_len(), "image length mismatch");
+        assert_eq!(logits.len(), self.arch.classes, "logit buffer length mismatch");
+        let s1 = self.conv1.shape();
+        let s2 = self.conv2.shape();
+        // encode into iq (same op as the reference `map(|x| iq.encode(x))`)
+        for (dst, &x) in s.img_fx.iter_mut().zip(image) {
+            *dst = self.iq.encode(x as f64);
+        }
+        self.conv1.conv_fx_into(variant, &s.img_fx, &mut s.bins_fx, &mut s.conv1_fx);
+        add_bias_fx_slice(&mut s.conv1_fx, s1.out_pixels(), self.conv1.bias_raw());
+        relu_fx_slice(&mut s.conv1_fx);
+        maxpool2_fx_into(&s.conv1_fx, s1.kernels, s1.out_h(), s1.out_w(), &mut s.pooled_fx);
+        // requantize pooled activations back to the image format, saturating
+        // to its width (the narrowing a hardware output stage performs)
+        let frac1 = self.conv1.out_frac();
+        let (lo, hi) = (self.iq.min_raw(), self.iq.max_raw());
+        for v in &mut s.pooled_fx {
+            *v = fx_rescale(*v, frac1, self.iq.frac).clamp(lo, hi);
+        }
+        self.conv2.conv_fx_into(variant, &s.pooled_fx, &mut s.bins_fx, &mut s.conv2_fx);
+        add_bias_fx_slice(&mut s.conv2_fx, s2.out_pixels(), self.conv2.bias_raw());
+        relu_fx_slice(&mut s.conv2_fx);
+        let scale2 = (1u64 << self.conv2.out_frac()) as f64;
+        for (f, &r) in s.feat.iter_mut().zip(s.conv2_fx.iter()) {
+            *f = (r as f64 / scale2) as f32;
+        }
+        dense_into(&s.feat, &self.dense_w, &self.dense_b, logits);
+    }
+
+    /// f32 forward into `logits` — bit-identical to [`EncodedCnn::forward`]
+    /// (identical IEEE operation sequence; the non-conv stages share the
+    /// reference slice workers outright).
+    pub fn forward_f32_into(
+        &self,
+        image: &[f32],
+        variant: ConvVariant,
+        s: &mut Scratch,
+        logits: &mut [f32],
+    ) {
+        assert_eq!(image.len(), self.in_len(), "image length mismatch");
+        assert_eq!(logits.len(), self.arch.classes, "logit buffer length mismatch");
+        let s1 = self.conv1.shape();
+        let s2 = self.conv2.shape();
+        self.conv1.conv_f32_into(variant, image, &mut s.bins_f32, &mut s.conv1_f32);
+        add_bias_slice(&mut s.conv1_f32, s1.out_pixels(), self.conv1.bias_f32());
+        relu_slice(&mut s.conv1_f32);
+        maxpool2_into(&s.conv1_f32, s1.kernels, s1.out_h(), s1.out_w(), &mut s.pooled_f32);
+        self.conv2.conv_f32_into(variant, &s.pooled_f32, &mut s.bins_f32, &mut s.conv2_f32);
+        add_bias_slice(&mut s.conv2_f32, s2.out_pixels(), self.conv2.bias_f32());
+        relu_slice(&mut s.conv2_f32);
+        dense_into(&s.conv2_f32, &self.dense_w, &self.dense_b, logits);
+    }
+
+    /// Allocating convenience over [`CompiledCnn::forward_fx_into`].
+    pub fn forward_fx(&self, image: &Tensor<f32>, variant: ConvVariant) -> Vec<f32> {
+        let mut scratch = self.scratch();
+        let mut logits = vec![0f32; self.arch.classes];
+        self.forward_fx_into(image.data(), variant, &mut scratch, &mut logits);
+        logits
+    }
+
+    /// Allocating convenience over [`CompiledCnn::forward_f32_into`].
+    pub fn forward_f32(&self, image: &Tensor<f32>, variant: ConvVariant) -> Vec<f32> {
+        let mut scratch = self.scratch();
+        let mut logits = vec![0f32; self.arch.classes];
+        self.forward_f32_into(image.data(), variant, &mut scratch, &mut logits);
+        logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::conv::{ws_conv_fx, FxConvInputs};
+    use crate::cnn::data::{render_digit, Rng};
+    use crate::quant::codebook::{encode_weights, Codebook, EncodedWeights};
+
+    fn encoded_net(seed: u64, bins: usize, wq: QFormat) -> EncodedCnn {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(seed);
+        let params = arch.init(&mut rng);
+        EncodedCnn::encode(arch, &params, bins, wq)
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn compiled_fx_bitexact_reference() {
+        let enc = encoded_net(21, 16, QFormat::W16);
+        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
+        let mut rng = Rng::new(5);
+        for d in 0..6usize {
+            let img = render_digit(&mut rng, d, 0.1);
+            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+                let got = plan.forward_fx(&img, variant);
+                let want = enc.forward_fx(&img, variant, QFormat::IMAGE32);
+                assert_eq!(bits(&got), bits(&want), "digit {d} {variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_f32_bitexact_reference() {
+        let enc = encoded_net(22, 16, QFormat::W32);
+        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
+        let mut rng = Rng::new(6);
+        for d in 0..6usize {
+            let img = render_digit(&mut rng, d, 0.1);
+            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+                let got = plan.forward_f32(&img, variant);
+                let want = enc.forward(&img, variant);
+                assert_eq!(bits(&got), bits(&want), "digit {d} {variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_pure() {
+        // a dirty scratch from a previous request must not leak into the
+        // next forward
+        let enc = encoded_net(23, 8, QFormat::W16);
+        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
+        let mut rng = Rng::new(7);
+        let imgs: Vec<_> = (0..4).map(|d| render_digit(&mut rng, d, 0.1)).collect();
+        let mut scratch = plan.scratch();
+        let mut logits = vec![0f32; plan.classes()];
+        for img in &imgs {
+            plan.forward_fx_into(img.data(), ConvVariant::Pasm, &mut scratch, &mut logits);
+            let fresh = plan.forward_fx(img, ConvVariant::Pasm);
+            assert_eq!(bits(&logits), bits(&fresh));
+            plan.forward_f32_into(img.data(), ConvVariant::Pasm, &mut scratch, &mut logits);
+            let fresh = plan.forward_f32(img, ConvVariant::Pasm);
+            assert_eq!(bits(&logits), bits(&fresh));
+        }
+    }
+
+    #[test]
+    fn paper_formats_prove_overflow_free() {
+        // IMAGE32 x W16 and IMAGE32 x W32 with realistic (|w| ~ 1)
+        // codebooks must take the branch-free path
+        for wq in [QFormat::W16, QFormat::W32] {
+            let enc = encoded_net(24, 16, wq);
+            let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
+            let (l1, l2) = plan.layers();
+            assert!(l1.proved_no_overflow(), "{wq:?} conv1");
+            assert!(l2.proved_no_overflow(), "{wq:?} conv2");
+        }
+    }
+
+    #[test]
+    fn unprovable_codebook_falls_back_to_checked() {
+        // a full-scale W32 codebook defeats the plan-time bound; the layer
+        // must fall back to checked arithmetic and still match the
+        // reference kernel bit for bit on benign inputs
+        let shape = ConvShape::new(1, 4, 4, 3, 3, 1, 1);
+        let values = vec![30000.0f32, -30000.0];
+        let enc = EncodedWeights {
+            codebook: Codebook::new(values, QFormat::W32),
+            bin_idx: Tensor::from_fn(&[1, 1, 3, 3], |i| (i % 2) as u16),
+            mse: 0.0,
+        };
+        let plan = LayerPlan::compile(shape, &enc, &[0.0], QFormat::IMAGE32).unwrap();
+        assert!(!plan.proved_no_overflow());
+        let mut rng = Rng::new(9);
+        let image = Tensor::from_fn(&[1, 4, 4], |_| rng.signed());
+        let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1);
+        let want = ws_conv_fx(&inp);
+        let mut out = vec![0i64; 4];
+        let mut bins = vec![0i64; plan.bins()];
+        plan.conv_fx_into(ConvVariant::WeightShared, inp.image_raw.data(), &mut bins, &mut out);
+        assert_eq!(out.as_slice(), want.data());
+        plan.conv_fx_into(ConvVariant::Pasm, inp.image_raw.data(), &mut bins, &mut out);
+        assert_eq!(out.as_slice(), want.data());
+    }
+
+    #[test]
+    fn compile_rejects_out_of_range_bins() {
+        let mut enc = encoded_net(25, 4, QFormat::W16);
+        enc.conv1.bin_idx.data_mut()[0] = 100; // codebook has 4 entries
+        assert!(CompiledCnn::compile(&enc, QFormat::IMAGE32).is_err());
+    }
+
+    #[test]
+    fn layer_conv_matches_reference_kernel() {
+        // standalone LayerPlan conv vs the reference fx kernel on a
+        // non-default shape (stride 2)
+        let mut rng = Rng::new(31);
+        let shape = ConvShape::new(3, 9, 9, 3, 3, 2, 2);
+        let w = Tensor::from_fn(&[2, 3, 3, 3], |_| rng.signed());
+        let enc = encode_weights(&w, 8, QFormat::W16);
+        let image = Tensor::from_fn(&[3, 9, 9], |_| rng.signed() * 4.0);
+        let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 2);
+        let plan = LayerPlan::compile(shape, &enc, &[0.0, 0.0], QFormat::IMAGE32).unwrap();
+        let want = ws_conv_fx(&inp);
+        let mut out = vec![0i64; want.len()];
+        let mut bins = vec![0i64; plan.bins()];
+        plan.conv_fx_into(ConvVariant::Pasm, inp.image_raw.data(), &mut bins, &mut out);
+        assert_eq!(out.as_slice(), want.data());
+    }
+}

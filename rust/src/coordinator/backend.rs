@@ -5,11 +5,14 @@
 //! [`ExecutionBackend`] abstracts "compile this model at a batch size, then
 //! execute padded batches" behind a trait, with two implementations:
 //!
-//! * [`NativeBackend`] — runs the crate's own reference kernels
-//!   ([`crate::cnn::conv`]) directly from an [`EncodedCnn`]: f32, or
-//!   fixed-point raw-integer dataflows where PASM ≡ WS holds bit-exactly.
-//!   No artifacts, no external toolchain — this is the default serving and
-//!   CI path.
+//! * [`NativeBackend`] — compiles an [`EncodedCnn`] once into a
+//!   [`crate::cnn::plan::CompiledCnn`] (flattened indices, pre-encoded
+//!   fixed-point state, plan-time overflow proof) and executes batches by
+//!   borrowing rows as slices, sharded across a scoped worker pool: f32,
+//!   or fixed-point raw-integer dataflows where PASM ≡ WS holds
+//!   bit-exactly.  Output is bit-identical to the reference forwards
+//!   ([`crate::cnn::conv`]) in every mode.  No artifacts, no external
+//!   toolchain — this is the default serving and CI path.
 //! * `PjrtBackend` (behind the `pjrt` cargo feature) — wraps the existing
 //!   [`crate::runtime`] PJRT/Pallas path: AOT-lowered HLO artifacts
 //!   compiled once per exported batch bucket (`make artifacts` first).
@@ -19,10 +22,11 @@
 //! priced as Direct / WS-MAC / PASM silicon interchangeably.
 
 use crate::cnn::network::{ConvVariant, EncodedCnn};
+use crate::cnn::plan::{CompiledCnn, Scratch};
 use crate::quant::fixed::QFormat;
 use crate::tensor::Tensor;
-use anyhow::Result;
-use std::sync::Arc;
+use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
 
 /// A model compiled at one fixed batch size.
 pub trait Executable {
@@ -84,13 +88,30 @@ pub enum NativePrecision {
     Fixed(QFormat),
 }
 
-/// In-process backend over the crate's reference kernels: serves an
+/// In-process backend over the crate's own kernels: serves an
 /// [`EncodedCnn`] with no artifacts or external runtime.  Any batch size
 /// compiles (the kernels are batch-agnostic; rows execute independently).
+///
+/// By default the backend compiles the model **once** into a
+/// [`CompiledCnn`] plan (flattened indices, pre-encoded fixed-point state,
+/// plan-time overflow proof, per-worker scratch arenas) and executes
+/// batches by borrowing rows as slices, sharded across a scoped worker
+/// pool sized by `available_parallelism` (override with
+/// [`NativeBackend::with_threads`]).  Results are bit-identical to the
+/// reference forwards in every mode and at every thread count — rows are
+/// independent and the plan is exactness-pinned by property tests.
 pub struct NativeBackend {
     enc: Arc<EncodedCnn>,
     variant: ConvVariant,
     precision: NativePrecision,
+    /// Worker threads per batch; `None` = `available_parallelism`.
+    threads: Option<usize>,
+    /// Serve through the compiled plan (default).  `false` selects the
+    /// pre-plan per-request reference path — baseline benchmarking only.
+    use_plan: bool,
+    /// Plan cache: compiled on the first `compile` call, shared by every
+    /// batch-bucket executable (the plan is batch-size-agnostic).
+    plan: Mutex<Option<Arc<CompiledCnn>>>,
 }
 
 impl NativeBackend {
@@ -100,6 +121,9 @@ impl NativeBackend {
             enc: Arc::new(enc),
             variant: ConvVariant::Pasm,
             precision: NativePrecision::F32,
+            threads: None,
+            use_plan: true,
+            plan: Mutex::new(None),
         }
     }
 
@@ -112,6 +136,29 @@ impl NativeBackend {
     /// Select the numeric mode.
     pub fn with_precision(mut self, precision: NativePrecision) -> Self {
         self.precision = precision;
+        // the plan bakes in the fixed-point image format; recompile lazily
+        self.plan = Mutex::new(None);
+        self
+    }
+
+    /// Fix the per-batch worker pool size (default: `available_parallelism`;
+    /// `1` executes batches serially on the coordinator worker).  Only the
+    /// compiled-plan path shards rows; with [`NativeBackend::with_plan`]
+    /// `(false)` the reference path always runs serially and this setting
+    /// has no effect.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        assert!(threads >= 1, "thread pool needs at least one worker");
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Disable the compiled plan and serve through the pre-plan
+    /// per-request reference path ([`EncodedCnn::forward`] /
+    /// [`EncodedCnn::forward_fx`], re-encoding weight state every request).
+    /// Only useful as a benchmarking baseline and as an execution
+    /// cross-check; production serving should never turn this off.
+    pub fn with_plan(mut self, use_plan: bool) -> Self {
+        self.use_plan = use_plan;
         self
     }
 }
@@ -127,10 +174,30 @@ impl ExecutionBackend for NativeBackend {
 
     fn compile(&self, batch: usize) -> Result<Box<dyn Executable>> {
         anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        let plan = if self.use_plan {
+            let mut cached = self.plan.lock().unwrap();
+            if cached.is_none() {
+                let iq = match self.precision {
+                    NativePrecision::Fixed(iq) => iq,
+                    NativePrecision::F32 => QFormat::IMAGE32,
+                };
+                let compiled =
+                    CompiledCnn::compile(&self.enc, iq).context("compile layer plans")?;
+                *cached = Some(Arc::new(compiled));
+            }
+            cached.clone()
+        } else {
+            None
+        };
+        let threads = self.threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
         Ok(Box::new(NativeExecutable {
             enc: Arc::clone(&self.enc),
             variant: self.variant,
             precision: self.precision,
+            plan,
+            threads,
             batch,
             in_dims: self.in_dims(),
             classes: self.classes(),
@@ -142,6 +209,9 @@ struct NativeExecutable {
     enc: Arc<EncodedCnn>,
     variant: ConvVariant,
     precision: NativePrecision,
+    /// `Some` = the compiled-plan fast path; `None` = reference path.
+    plan: Option<Arc<CompiledCnn>>,
+    threads: usize,
     batch: usize,
     in_dims: [usize; 3],
     classes: usize,
@@ -165,6 +235,74 @@ impl Executable for NativeExecutable {
         let mut logits = vec![0f32; self.batch * self.classes];
         // the kernels are batch-agnostic, so padding rows cost nothing here
         // (unlike a fixed-shape compiled batch): compute live rows only
+        if live > 0 {
+            match &self.plan {
+                Some(plan) => {
+                    let rows = &padded.data()[..live * img_len];
+                    let out = &mut logits[..live * self.classes];
+                    self.run_planned(plan, rows, img_len, out);
+                }
+                None => self.run_reference(padded, live, img_len, &mut logits)?,
+            }
+        }
+        Ok(Tensor::from_vec(&[self.batch, self.classes], logits))
+    }
+}
+
+impl NativeExecutable {
+    /// Planned path: borrow each live row as a slice (no per-row clone or
+    /// `Tensor` rebuild) and shard contiguous row ranges across a scoped
+    /// worker pool.  Each worker owns one scratch arena; rows write
+    /// disjoint logit chunks, so any thread count produces bit-identical
+    /// output to the serial order.
+    fn run_planned(&self, plan: &CompiledCnn, rows: &[f32], img_len: usize, out: &mut [f32]) {
+        let classes = self.classes;
+        let live = rows.len() / img_len;
+        // threads >= 1 (enforced at construction) and live >= 1 (execute
+        // skips empty batches), so workers >= 1
+        let workers = self.threads.min(live);
+        if workers == 1 {
+            let mut scratch = plan.scratch();
+            for (row, out_row) in rows.chunks_exact(img_len).zip(out.chunks_exact_mut(classes)) {
+                self.run_row(plan, row, &mut scratch, out_row);
+            }
+            return;
+        }
+        let rows_per = live.div_ceil(workers);
+        std::thread::scope(|scope| {
+            let row_chunks = rows.chunks(rows_per * img_len);
+            let out_chunks = out.chunks_mut(rows_per * classes);
+            for (rchunk, ochunk) in row_chunks.zip(out_chunks) {
+                scope.spawn(move || {
+                    let mut scratch = plan.scratch();
+                    let row_iter = rchunk.chunks_exact(img_len);
+                    let out_iter = ochunk.chunks_exact_mut(classes);
+                    for (row, out_row) in row_iter.zip(out_iter) {
+                        self.run_row(plan, row, &mut scratch, out_row);
+                    }
+                });
+            }
+        });
+    }
+
+    fn run_row(&self, plan: &CompiledCnn, image: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        match self.precision {
+            NativePrecision::F32 => plan.forward_f32_into(image, self.variant, scratch, out),
+            NativePrecision::Fixed(_) => plan.forward_fx_into(image, self.variant, scratch, out),
+        }
+    }
+
+    /// Pre-plan reference path: rebuild a `Tensor` and re-encode weight
+    /// state per request through the golden-oracle forwards.  Kept only as
+    /// the benchmarking baseline and execution cross-check
+    /// ([`NativeBackend::with_plan`]).
+    fn run_reference(
+        &self,
+        padded: &Tensor<f32>,
+        live: usize,
+        img_len: usize,
+        logits: &mut [f32],
+    ) -> Result<()> {
         for i in 0..live {
             let row = &padded.data()[i * img_len..(i + 1) * img_len];
             let image = Tensor::from_vec(&self.in_dims, row.to_vec());
@@ -175,7 +313,7 @@ impl Executable for NativeExecutable {
             anyhow::ensure!(out.len() == self.classes, "logit length mismatch");
             logits[i * self.classes..(i + 1) * self.classes].copy_from_slice(&out);
         }
-        Ok(Tensor::from_vec(&[self.batch, self.classes], logits))
+        Ok(())
     }
 }
 
@@ -377,5 +515,85 @@ mod tests {
         let exe = NativeBackend::new(enc()).compile(2).unwrap();
         let bad = Tensor::<f32>::zeros(&[2, 3, 3, 3]);
         assert!(exe.execute(&bad, 2).is_err());
+    }
+
+    fn batch_of(n: usize, live: usize, seed: u64) -> Tensor<f32> {
+        let mut rng = Rng::new(seed);
+        let img_len = 12 * 12;
+        let mut data = vec![0f32; n * img_len];
+        for i in 0..live {
+            let img = render_digit(&mut rng, i % 10, 0.05);
+            data[i * img_len..(i + 1) * img_len].copy_from_slice(img.data());
+        }
+        Tensor::from_vec(&[n, 1, 12, 12], data)
+    }
+
+    fn logits_bits(t: &Tensor<f32>) -> Vec<u32> {
+        t.data().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn parallel_execution_bitexact_serial() {
+        // sharding rows across workers must not change a single bit, in
+        // either numeric mode, including uneven chunking (5 live rows
+        // over 3 workers) and threads > live
+        let e = enc();
+        let batch = batch_of(8, 5, 41);
+        for precision in [NativePrecision::F32, NativePrecision::Fixed(QFormat::IMAGE32)] {
+            let serial = NativeBackend::new(e.clone())
+                .with_precision(precision)
+                .with_threads(1)
+                .compile(8)
+                .unwrap()
+                .execute(&batch, 5)
+                .unwrap();
+            for threads in [2usize, 3, 8] {
+                let parallel = NativeBackend::new(e.clone())
+                    .with_precision(precision)
+                    .with_threads(threads)
+                    .compile(8)
+                    .unwrap()
+                    .execute(&batch, 5)
+                    .unwrap();
+                assert_eq!(
+                    logits_bits(&parallel),
+                    logits_bits(&serial),
+                    "{precision:?} threads {threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn planned_path_bitexact_reference_path() {
+        // the compiled plan must reproduce the pre-plan per-request path
+        // bit for bit in both numeric modes
+        let e = enc();
+        let batch = batch_of(4, 4, 43);
+        for precision in [NativePrecision::F32, NativePrecision::Fixed(QFormat::IMAGE32)] {
+            let planned = NativeBackend::new(e.clone())
+                .with_precision(precision)
+                .with_threads(2)
+                .compile(4)
+                .unwrap()
+                .execute(&batch, 4)
+                .unwrap();
+            let reference = NativeBackend::new(e.clone())
+                .with_precision(precision)
+                .with_plan(false)
+                .compile(4)
+                .unwrap()
+                .execute(&batch, 4)
+                .unwrap();
+            assert_eq!(logits_bits(&planned), logits_bits(&reference), "{precision:?}");
+        }
+    }
+
+    #[test]
+    fn plan_compile_error_surfaces_at_startup() {
+        let mut e = enc();
+        e.conv2.bin_idx.data_mut()[0] = 200; // codebook has 8 entries
+        let b = NativeBackend::new(e);
+        assert!(b.compile(1).is_err());
     }
 }

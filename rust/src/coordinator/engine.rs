@@ -28,6 +28,9 @@ pub struct Engine {
     /// Per-image accelerator cost, precomputed from the cost model at
     /// construction.
     per_image: HwCost,
+    /// Reused padded-batch staging buffer: one allocation amortized over
+    /// every batch instead of one per `run_batch` call.
+    pad_buf: Vec<f32>,
 }
 
 impl Engine {
@@ -53,6 +56,7 @@ impl Engine {
             backend,
             exes,
             per_image,
+            pad_buf: Vec::new(),
         })
     }
 
@@ -78,7 +82,7 @@ impl Engine {
 
     /// Execute up to `bucket` live requests as one padded batch.
     pub fn run_batch(
-        &self,
+        &mut self,
         requests: &[InferenceRequest],
         bucket: usize,
     ) -> Result<Vec<InferenceResponse>> {
@@ -92,9 +96,12 @@ impl Engine {
             requests.len()
         );
 
-        // pad with zeros up to the bucket
+        // pad with zeros up to the bucket, staging into the reused buffer
+        // (taken out and restored so a failed batch just re-allocates)
         let img_len: usize = self.in_dims.iter().product();
-        let mut data = vec![0f32; bucket * img_len];
+        let mut data = std::mem::take(&mut self.pad_buf);
+        data.clear();
+        data.resize(bucket * img_len, 0.0);
         for (i, r) in requests.iter().enumerate() {
             anyhow::ensure!(
                 r.image.dims() == self.in_dims,
@@ -111,7 +118,9 @@ impl Engine {
         );
 
         let t0 = Instant::now();
-        let logits = exe.execute(&batch, requests.len())?;
+        let result = exe.execute(&batch, requests.len());
+        self.pad_buf = batch.into_vec();
+        let logits = result?;
         let compute_us = t0.elapsed().as_micros() as u64;
         let done = Instant::now();
 

@@ -213,7 +213,7 @@ impl Drop for Coordinator {
 }
 
 fn worker_loop(
-    engine: Engine,
+    mut engine: Engine,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
@@ -277,7 +277,8 @@ fn worker_loop(
         let started = Instant::now();
         // Contain kernel panics (e.g. the fixed-point overflow guards on an
         // extreme input): the batch fails, the worker keeps serving.  The
-        // engine holds no cross-batch mutable state, so resuming is sound.
+        // engine's only cross-batch mutable state is a staging buffer that
+        // every batch fully overwrites, so resuming is sound.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             engine.run_batch(&requests, bucket)
         }))

@@ -18,7 +18,10 @@
 //!   (deep-compression style codebooks).
 //! * [`cnn`] — bit-exact functional implementations of the three
 //!   accelerator dataflows (direct / weight-shared / PASM) plus a tiny
-//!   trainable CNN used by the end-to-end example.
+//!   trainable CNN used by the end-to-end example, and [`cnn::plan`]: the
+//!   plan/execute split that compiles an encoded model once
+//!   ([`cnn::plan::CompiledCnn`]) so steady-state serving forwards
+//!   allocate nothing and skip every per-request weight-state rebuild.
 //! * [`hw`] — structural gate, area and power models for a 45 nm ASIC
 //!   (NAND2-normalized, FreePDK45-class constants).
 //! * [`fpga`] — DSP/BRAM/LUT/FF resource mapping for Zynq-7000 parts.
@@ -33,8 +36,8 @@
 //! * [`coordinator`] — thread-based inference coordinator (std threads +
 //!   channels; no async runtime in the offline build): request queue,
 //!   bucketed dynamic batcher, pluggable [`coordinator::backend`] execution
-//!   substrate (native reference kernels or PJRT), hardware
-//!   [`coordinator::cost`] model, metrics.
+//!   substrate (compiled-plan native kernels with a parallel batch worker
+//!   pool, or PJRT), hardware [`coordinator::cost`] model, metrics.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!

@@ -4,6 +4,7 @@
 //! repro report <id>|all          regenerate paper tables/figures
 //! repro simulate [--bins B] [--width W] [--variant ws|pasm] [--seed N]
 //! repro serve [--requests N] [--backend native|pjrt] [--artifacts DIR] [--fixed]
+//!             [--threads N] [--no-plan]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -62,6 +63,7 @@ const USAGE: &str = "usage: repro <report <id>|all> | simulate | serve | sweep |
   report all | report fig15      regenerate paper exhibits
   simulate --variant pasm --bins 16 --width 32 --seed 1
   serve --requests 64 --backend native|pjrt [--artifacts artifacts] [--fixed]
+        [--threads N] [--no-plan]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -182,6 +184,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let mut backend = NativeBackend::new(enc);
             if flags.contains_key("fixed") {
                 backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+            }
+            if let Some(threads) = flags.get("threads").and_then(|v| v.parse().ok()) {
+                backend = backend.with_threads(threads);
+            }
+            if flags.contains_key("no-plan") {
+                // pre-plan reference path: baseline benchmarking only
+                backend = backend.with_plan(false);
             }
             let _ = &dir;
             builder.backend(backend)

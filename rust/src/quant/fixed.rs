@@ -100,6 +100,16 @@ pub fn fx_mul(a_raw: i64, b_raw: i64) -> i64 {
         .expect("fixed-point product overflowed i64 (widths must be <= 32)")
 }
 
+/// Encode per-channel float biases to raw values carrying `frac`
+/// fractional bits (round-to-nearest).  The reference fixed-point forward
+/// (`EncodedCnn::forward_fx`) and the compiled plan (`cnn::plan`) must both
+/// use exactly this function: their bit-exactness contract depends on a
+/// single rounding rule.
+pub fn encode_bias_raw(bias: &[f32], frac: u32) -> Vec<i64> {
+    let scale = (1u64 << frac) as f64;
+    bias.iter().map(|&b| (b as f64 * scale).round() as i64).collect()
+}
+
 /// Rescale a raw value with `from_frac` fractional bits to `to_frac`
 /// (arithmetic shift, round-to-negative-infinity on narrowing — the
 /// behaviour of a hardware right-shift).
@@ -142,6 +152,13 @@ mod tests {
         let p = fx_mul(a.encode(1.5), b.encode(2.5));
         let dec = p as f64 / ((1u64 << (a.frac + b.frac)) as f64);
         assert!((dec - 3.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bias_raw_rounds_to_nearest() {
+        assert_eq!(encode_bias_raw(&[0.5, -0.25, 0.0], 8), vec![128, -64, 0]);
+        // ties round away from zero (f64::round)
+        assert_eq!(encode_bias_raw(&[0.001953125], 8), vec![1]);
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Property tests pinning the compiled plan to the golden reference
+//! (hand-rolled generator loop, deterministic seeds — proptest is not
+//! available in the offline build).
+//!
+//! Invariants:
+//! * `CompiledCnn` fixed-point forward is **bit-identical** to
+//!   `EncodedCnn::forward_fx` for random architectures, bin counts, weight
+//!   formats and images, for both `ConvVariant`s (and across variants —
+//!   paper §5.3 lifted through the plan).
+//! * `CompiledCnn` f32 forward is bit-identical to `EncodedCnn::forward`.
+//! * The multi-threaded `NativeBackend` batch path is bit-identical to the
+//!   single-threaded one at every thread count and occupancy.
+
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::cnn::plan::CompiledCnn;
+use pasm_accel::coordinator::{ExecutionBackend, NativeBackend, NativePrecision};
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::tensor::Tensor;
+
+/// Random digits-CNN architecture.  Constraint: the pooled conv1 output
+/// must still fit the conv2 kernel, i.e. `(in_side - kernel + 1) / 2 >=
+/// kernel`.
+fn random_arch(rng: &mut Rng) -> DigitsCnn {
+    let kernel = 1 + 2 * rng.below(2); // 1 or 3
+    let in_side = kernel * 2 + 5 + rng.below(6);
+    DigitsCnn {
+        in_side,
+        conv1_m: 1 + rng.below(6),
+        conv2_m: 1 + rng.below(8),
+        kernel,
+        classes: 2 + rng.below(9),
+    }
+}
+
+fn random_encoded(rng: &mut Rng) -> EncodedCnn {
+    let arch = random_arch(rng);
+    let mut prng = Rng::new(rng.next_u64());
+    let params = arch.init(&mut prng);
+    let bins = 1usize << (1 + rng.below(6));
+    let wq = [QFormat::W8, QFormat::W16, QFormat::W32][rng.below(3)];
+    EncodedCnn::encode(arch, &params, bins, wq)
+}
+
+fn random_image(rng: &mut Rng, arch: &DigitsCnn) -> Tensor<f32> {
+    Tensor::from_fn(&[1, arch.in_side, arch.in_side], |_| rng.signed() * 2.0)
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_plan_fx_bitexact_reference() {
+    let mut rng = Rng::new(9001);
+    for case_i in 0..15 {
+        let enc = random_encoded(&mut rng);
+        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).expect("plan compiles");
+        for img_i in 0..3 {
+            let img = random_image(&mut rng, &enc.arch);
+            let mut per_variant = Vec::new();
+            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+                let got = plan.forward_fx(&img, variant);
+                let want = enc.forward_fx(&img, variant, QFormat::IMAGE32);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "case {case_i} img {img_i} {variant:?}"
+                );
+                per_variant.push(bits(&got));
+            }
+            // §5.3 through the plan: PASM ≡ WS bit for bit
+            assert_eq!(per_variant[0], per_variant[1], "case {case_i} img {img_i}");
+        }
+    }
+}
+
+#[test]
+fn prop_plan_f32_bitexact_reference() {
+    let mut rng = Rng::new(9002);
+    for case_i in 0..15 {
+        let enc = random_encoded(&mut rng);
+        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).expect("plan compiles");
+        for img_i in 0..3 {
+            let img = random_image(&mut rng, &enc.arch);
+            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+                let got = plan.forward_f32(&img, variant);
+                let want = enc.forward(&img, variant);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "case {case_i} img {img_i} {variant:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_batch_bitexact_single_threaded() {
+    let mut rng = Rng::new(9003);
+    for case_i in 0..10 {
+        let enc = random_encoded(&mut rng);
+        let arch = enc.arch;
+        let batch = 1 + rng.below(16);
+        let live = 1 + rng.below(batch);
+        let img_len = arch.in_side * arch.in_side;
+        let mut data = vec![0f32; batch * img_len];
+        for i in 0..live {
+            let img = random_image(&mut rng, &arch);
+            data[i * img_len..(i + 1) * img_len].copy_from_slice(img.data());
+        }
+        let padded = Tensor::from_vec(&[batch, 1, arch.in_side, arch.in_side], data);
+        for precision in [NativePrecision::F32, NativePrecision::Fixed(QFormat::IMAGE32)] {
+            let run = |threads: usize| -> Vec<u32> {
+                let exe = NativeBackend::new(enc.clone())
+                    .with_precision(precision)
+                    .with_threads(threads)
+                    .compile(batch)
+                    .unwrap();
+                bits(exe.execute(&padded, live).unwrap().data())
+            };
+            let serial = run(1);
+            for threads in [2usize, 3, 5, 16] {
+                assert_eq!(
+                    run(threads),
+                    serial,
+                    "case {case_i} {precision:?} batch {batch} live {live} threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_plan_survives_scratch_reuse_across_mixed_variants() {
+    // interleaving variants and numeric modes over one scratch arena must
+    // not leak state between forwards
+    let mut rng = Rng::new(9004);
+    let enc = random_encoded(&mut rng);
+    let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
+    let mut scratch = plan.scratch();
+    let mut logits = vec![0f32; plan.classes()];
+    for i in 0..12 {
+        let img = random_image(&mut rng, &enc.arch);
+        let variant = if i % 2 == 0 {
+            ConvVariant::Pasm
+        } else {
+            ConvVariant::WeightShared
+        };
+        plan.forward_fx_into(img.data(), variant, &mut scratch, &mut logits);
+        let want = enc.forward_fx(&img, variant, QFormat::IMAGE32);
+        assert_eq!(bits(&logits), bits(&want), "fx iteration {i}");
+        plan.forward_f32_into(img.data(), variant, &mut scratch, &mut logits);
+        let want = enc.forward(&img, variant);
+        assert_eq!(bits(&logits), bits(&want), "f32 iteration {i}");
+    }
+}
