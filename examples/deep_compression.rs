@@ -65,13 +65,13 @@ fn main() {
 
     // ---- stage 3: Huffman-code the conv2 index stream ----
     let occupancy = enc.conv2.occupancy();
-    let code = huffman::build(&occupancy);
+    let code = huffman::build(&occupancy).expect("conv2 occupancy is a valid histogram");
     let mean_bits = code.mean_bits(&occupancy);
     let entropy = huffman::entropy_bits(&occupancy);
     // roundtrip sanity on the real stream
     let stream: Vec<u16> = enc.conv2.bin_idx.data().to_vec();
-    let bits = code.encode(&stream);
-    assert_eq!(code.decode(&bits, stream.len()), stream);
+    let bits = code.encode(&stream).expect("every live bin has a code");
+    assert_eq!(code.decode(&bits, stream.len()).expect("roundtrip decode"), stream);
     println!(
         "stage 3  huffman indices:          {:.2} bits/weight (entropy {:.2}, fixed {} bits)",
         mean_bits,

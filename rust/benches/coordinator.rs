@@ -1,18 +1,24 @@
 //! `cargo bench --bench coordinator` — end-to-end serving benchmark: the
 //! paper's system serving batched fixed-point inference through the native
-//! backend.  Two configurations run back to back on identical numerics:
+//! backend.  The served model travels the full production path first —
+//! packed to a `.pasm` artifact, loaded back through a
+//! [`pasm_accel::model_store::ModelRegistry`], verified bit-identical to
+//! the in-memory source — and two configurations then run back to back on
+//! identical numerics:
 //!
 //! * `baseline` — the pre-plan execution strategy (per-request
 //!   `FxConvInputs` encode, serial batch rows; what the serving path did
 //!   before the compiled-plan rework), via `NativeBackend::with_plan(false)`.
-//! * `planned` — the compiled-plan path: `CompiledCnn` built once at
-//!   startup, rows borrowed as slices and sharded across the worker pool.
+//! * `planned` — the compiled-plan path serving the **registry-loaded**
+//!   model: requests route by model id through the multi-model engine,
+//!   `CompiledCnn` built once at startup, rows sharded across the worker
+//!   pool.
 //!
-//! Before timing, the planned path is checked bit-identical to the
-//! reference `EncodedCnn::forward_fx`.  Results print to stdout, and
-//! `BENCH_serving.json` at the repository root is **rewritten** with this
-//! run's machine-readable results (req/s, latency percentiles, occupancy,
-//! backend label) — the perf trajectory across PRs lives in the committed
+//! Results print to stdout, and `BENCH_serving.json` at the repository
+//! root is **rewritten** with this run's machine-readable results (req/s,
+//! latency percentiles, occupancy, backend label, and the artifact's
+//! bytes-on-disk vs raw-f32 compression ratio — the paper's §2.1
+//! headline) — the perf trajectory across PRs lives in the committed
 //! history of that file, one snapshot per run.
 //!
 //! `--smoke` serves only the smallest load (the CI perf-harness check);
@@ -24,12 +30,16 @@ use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
 use pasm_accel::coordinator::{
     BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend, NativePrecision,
 };
+use pasm_accel::model_store::{self, ModelRegistry};
 use pasm_accel::quant::fixed::QFormat;
 use pasm_accel::tensor::Tensor;
 use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const JSON_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+const MODEL: &str = "digits";
 
 struct RunStats {
     config: &'static str,
@@ -44,30 +54,56 @@ struct RunStats {
     batches: u64,
 }
 
-fn build(enc: EncodedCnn, planned: bool) -> Coordinator {
+struct ArtifactStats {
+    file_bytes: u64,
+    raw_f32_bytes: u64,
+}
+
+impl ArtifactStats {
+    fn ratio(&self) -> f64 {
+        self.raw_f32_bytes as f64 / self.file_bytes as f64
+    }
+}
+
+/// Pack the model into a temp models dir and load it back through a
+/// registry — the serving path a production deployment takes.
+fn pack_into_registry(enc: &EncodedCnn) -> (Arc<ModelRegistry>, ArtifactStats, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("pasm_bench_models_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create bench models dir");
+    let file_bytes =
+        model_store::save_file(&dir.join(format!("{MODEL}.pasm")), enc).expect("pack model");
+    let registry = Arc::new(ModelRegistry::load_dir(&dir).expect("load models dir"));
+    let stats = ArtifactStats { file_bytes, raw_f32_bytes: model_store::raw_dense_bytes(enc) };
+    (registry, stats, dir)
+}
+
+fn build(enc: EncodedCnn, planned: bool, registry: Option<&Arc<ModelRegistry>>) -> Coordinator {
     let backend =
         NativeBackend::new(enc).with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
     let backend = if planned {
         backend
     } else {
-        // the pre-PR serving strategy: no compiled plan, serial rows
+        // the pre-plan serving strategy: no compiled plan, serial rows
         backend.with_plan(false).with_threads(1)
     };
-    CoordinatorBuilder::new()
+    let mut builder = CoordinatorBuilder::new()
         .backend(backend)
-        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
-        .build()
-        .expect("coordinator startup")
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)));
+    if let Some(reg) = registry {
+        // unnamed requests route to the registry model by id: the
+        // multi-model engine path, per-model executables and all
+        builder = builder.registry(Arc::clone(reg)).default_model(MODEL);
+    }
+    builder.build().expect("coordinator startup")
 }
 
 fn run_load(
     config: &'static str,
-    enc: &EncodedCnn,
-    planned: bool,
+    coord: &Coordinator,
     load: usize,
     pool: &[Tensor<f32>],
 ) -> RunStats {
-    let coord = build(enc.clone(), planned);
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..load)
         .map(|i| coord.submit(pool[i % pool.len()].clone()).unwrap())
@@ -103,21 +139,24 @@ fn run_load(
     }
 }
 
-/// The planned serving path must be bit-identical to the reference
-/// fixed-point forward before any throughput number means anything.
-fn verify_bitexact(enc: &EncodedCnn, pool: &[Tensor<f32>]) {
-    let coord = build(enc.clone(), true);
+/// The registry-served planned path must be bit-identical to the source
+/// model's reference fixed-point forward — pack → load → serve proves the
+/// artifact chain before any throughput number means anything.
+fn verify_bitexact(source: &EncodedCnn, registry: &Arc<ModelRegistry>, pool: &[Tensor<f32>]) {
+    let loaded = registry.get(MODEL).expect("registry model");
+    let coord = build((*loaded.enc).clone(), true, Some(registry));
     for img in pool.iter().take(8) {
         let resp = coord.infer(img.clone()).expect("verification inference");
-        let want = enc.forward_fx(img, ConvVariant::Pasm, QFormat::IMAGE32);
+        assert_eq!(resp.model.as_deref(), Some(MODEL));
+        let want = source.forward_fx(img, ConvVariant::Pasm, QFormat::IMAGE32);
         let got: Vec<u32> = resp.logits.iter().map(|x| x.to_bits()).collect();
         let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
-        assert_eq!(got, wb, "planned serving diverged from reference forward_fx");
+        assert_eq!(got, wb, "registry-served logits diverged from the source model");
     }
-    println!("verified: planned logits bit-identical to reference forward_fx");
+    println!("verified: packed+registry-served logits bit-identical to source forward_fx");
 }
 
-fn write_json(runs: &[RunStats]) {
+fn write_json(runs: &[RunStats], artifact: &ArtifactStats) {
     let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load);
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load);
@@ -125,9 +164,23 @@ fn write_json(runs: &[RunStats]) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"coordinator_serving\",\n");
-    s.push_str("  \"model\": \"digits_cnn bins=16 wq=W32 fixed-point IMAGE32\",\n");
+    s.push_str(
+        "  \"model\": \"digits_cnn bins=16 wq=W32 fixed-point IMAGE32, \
+         served from a .pasm registry\",\n",
+    );
     s.push_str("  \"baseline_label\": \"pre-plan per-request encode, serial rows\",\n");
-    s.push_str("  \"planned_label\": \"compiled layer plans + parallel batch rows\",\n");
+    s.push_str(
+        "  \"planned_label\": \"compiled layer plans + parallel batch rows, \
+         registry-loaded model\",\n",
+    );
+    let _ = writeln!(
+        s,
+        "  \"artifact\": {{\"file_bytes\": {}, \"raw_f32_bytes\": {}, \
+         \"compression_ratio\": {:.2}}},",
+        artifact.file_bytes,
+        artifact.raw_f32_bytes,
+        artifact.ratio()
+    );
     s.push_str("  \"runs\": [\n");
     for (i, r) in runs.iter().enumerate() {
         let sep = if i + 1 == runs.len() { "" } else { "," };
@@ -177,17 +230,30 @@ fn main() {
     let params = arch.init(&mut rng);
     let enc = EncodedCnn::encode(arch, &params, 16, QFormat::W32);
 
+    // pack -> registry: the artifact chain the planned path serves from
+    let (registry, artifact, models_dir) = pack_into_registry(&enc);
+    println!(
+        "artifact: {} bytes on disk vs {} bytes raw f32 -> {:.1}x compression",
+        artifact.file_bytes,
+        artifact.raw_f32_bytes,
+        artifact.ratio()
+    );
+
     // pre-render a request pool
     let pool: Vec<_> = (0..256)
         .map(|i| render_digit(&mut rng, i % 10, 0.05))
         .collect();
 
-    verify_bitexact(&enc, &pool);
+    verify_bitexact(&enc, &registry, &pool);
+    let loaded = (*registry.get(MODEL).expect("registry model").enc).clone();
 
     let mut runs = Vec::new();
     for &load in loads {
-        runs.push(run_load("baseline", &enc, false, load, &pool));
-        runs.push(run_load("planned", &enc, true, load, &pool));
+        let baseline = build(loaded.clone(), false, None);
+        runs.push(run_load("baseline", &baseline, load, &pool));
+        drop(baseline);
+        let planned = build(loaded.clone(), true, Some(&registry));
+        runs.push(run_load("planned", &planned, load, &pool));
     }
 
     let max_load = loads.last().copied().unwrap();
@@ -200,5 +266,6 @@ fn main() {
         plan.req_s
     );
 
-    write_json(&runs);
+    write_json(&runs, &artifact);
+    let _ = std::fs::remove_dir_all(&models_dir);
 }

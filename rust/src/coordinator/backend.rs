@@ -23,6 +23,7 @@
 
 use crate::cnn::network::{ConvVariant, EncodedCnn};
 use crate::cnn::plan::{CompiledCnn, Scratch};
+use crate::model_store::ModelEntry;
 use crate::quant::fixed::QFormat;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
@@ -71,6 +72,21 @@ pub trait ExecutionBackend: Send {
 
     /// Compile the model at one batch size.
     fn compile(&self, batch: usize) -> Result<Box<dyn Executable>>;
+
+    /// Compile a *registry* model at one batch size — the multi-model
+    /// serving path ([`crate::model_store::ModelRegistry`]).  Backends
+    /// welded to a single AOT-compiled model (e.g. `PjrtBackend`'s
+    /// exported artifacts) keep this default, which rejects every registry
+    /// model with a routable error instead of serving the wrong weights.
+    fn compile_entry(&self, entry: &ModelEntry, batch: usize) -> Result<Box<dyn Executable>> {
+        let _ = batch;
+        anyhow::bail!(
+            "backend '{}' serves only its built-in model and cannot compile \
+             registry model '{}'",
+            self.name(),
+            entry.name
+        )
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -161,6 +177,40 @@ impl NativeBackend {
         self.use_plan = use_plan;
         self
     }
+
+    /// Image format plans are compiled for under the current precision.
+    fn plan_iq(&self) -> QFormat {
+        match self.precision {
+            NativePrecision::Fixed(iq) => iq,
+            NativePrecision::F32 => QFormat::IMAGE32,
+        }
+    }
+
+    /// One executable over `enc` with `plan` — the single construction
+    /// path shared by [`ExecutionBackend::compile`] (default model) and
+    /// [`ExecutionBackend::compile_entry`] (registry models), so
+    /// precision mapping and thread sizing can never drift between them.
+    fn make_executable(
+        &self,
+        enc: Arc<EncodedCnn>,
+        plan: Option<Arc<CompiledCnn>>,
+        batch: usize,
+    ) -> NativeExecutable {
+        let threads = self.threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        let arch = &enc.arch;
+        NativeExecutable {
+            variant: self.variant,
+            precision: self.precision,
+            plan,
+            threads,
+            batch,
+            in_dims: [1, arch.in_side, arch.in_side],
+            classes: arch.classes,
+            enc,
+        }
+    }
 }
 
 impl ExecutionBackend for NativeBackend {
@@ -177,31 +227,28 @@ impl ExecutionBackend for NativeBackend {
         let plan = if self.use_plan {
             let mut cached = self.plan.lock().unwrap();
             if cached.is_none() {
-                let iq = match self.precision {
-                    NativePrecision::Fixed(iq) => iq,
-                    NativePrecision::F32 => QFormat::IMAGE32,
-                };
-                let compiled =
-                    CompiledCnn::compile(&self.enc, iq).context("compile layer plans")?;
+                let compiled = CompiledCnn::compile(&self.enc, self.plan_iq())
+                    .context("compile layer plans")?;
                 *cached = Some(Arc::new(compiled));
             }
             cached.clone()
         } else {
             None
         };
-        let threads = self.threads.unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        });
-        Ok(Box::new(NativeExecutable {
-            enc: Arc::clone(&self.enc),
-            variant: self.variant,
-            precision: self.precision,
-            plan,
-            threads,
-            batch,
-            in_dims: self.in_dims(),
-            classes: self.classes(),
-        }))
+        Ok(Box::new(self.make_executable(Arc::clone(&self.enc), plan, batch)))
+    }
+
+    fn compile_entry(&self, entry: &ModelEntry, batch: usize) -> Result<Box<dyn Executable>> {
+        anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        // The entry caches one compiled plan per image format, so every
+        // bucket (and every engine) of this model shares plan state —
+        // mirroring the single-model plan cache above.
+        let plan = if self.use_plan {
+            Some(entry.plan(self.plan_iq())?)
+        } else {
+            None
+        };
+        Ok(Box::new(self.make_executable(Arc::clone(&entry.enc), plan, batch)))
     }
 }
 
@@ -319,9 +366,8 @@ impl NativeExecutable {
 
 /// The build's default backend for `enc`: `PjrtBackend` over
 /// `artifacts_dir` when the `pjrt` feature is enabled, else the in-process
-/// [`NativeBackend`] (which ignores `artifacts_dir`).  Examples, benches,
-/// and the deprecated `Coordinator::start` shim all route through here so
-/// the policy lives in one place.
+/// [`NativeBackend`] (which ignores `artifacts_dir`).  Examples and
+/// benches route through here so the policy lives in one place.
 pub fn default_backend(artifacts_dir: &str, enc: EncodedCnn) -> Box<dyn ExecutionBackend> {
     #[cfg(feature = "pjrt")]
     {
@@ -354,9 +400,8 @@ mod pjrt {
     /// Backend over the PJRT CPU client and the AOT-lowered artifacts.
     ///
     /// Construction is cheap and infallible; the PJRT client is created on
-    /// the first `compile` call — i.e. on the coordinator's worker thread,
-    /// matching the old `Coordinator::start` behavior (PJRT handles are not
-    /// Send-safe to move across threads after use).
+    /// the first `compile` call — i.e. on the coordinator's worker thread
+    /// (PJRT handles are not Send-safe to move across threads after use).
     pub struct PjrtBackend {
         dir: String,
         enc: EncodedCnn,
@@ -595,5 +640,56 @@ mod tests {
         e.conv2.bin_idx.data_mut()[0] = 200; // codebook has 8 entries
         let b = NativeBackend::new(e);
         assert!(b.compile(1).is_err());
+    }
+
+    #[test]
+    fn compile_entry_serves_registry_models_bitexactly() {
+        use crate::model_store::ModelRegistry;
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(23);
+        let params = arch.init(&mut rng);
+        let other = EncodedCnn::encode(arch, &params, 4, QFormat::W32);
+        let reg = ModelRegistry::new();
+        reg.insert("other", other.clone());
+        let entry = reg.get("other").unwrap();
+
+        // a backend built around a *different* default model still
+        // compiles and serves the registry entry's weights
+        let backend = NativeBackend::new(enc());
+        let exe = backend.compile_entry(&entry, 2).unwrap();
+        assert_eq!(exe.batch(), 2);
+        let img = render_digit(&mut rng, 6, 0.05);
+        let mut data = img.data().to_vec();
+        data.resize(2 * 12 * 12, 0.0);
+        let batch = Tensor::from_vec(&[2, 1, 12, 12], data);
+        let logits = exe.execute(&batch, 1).unwrap();
+        let want = other.forward(&img, ConvVariant::Pasm);
+        assert_eq!(
+            logits.data()[..10].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn single_model_backends_reject_registry_entries() {
+        use crate::model_store::ModelRegistry;
+        struct OneTrick(EncodedCnn);
+        impl ExecutionBackend for OneTrick {
+            fn name(&self) -> &'static str {
+                "one-trick"
+            }
+            fn encoded(&self) -> &EncodedCnn {
+                &self.0
+            }
+            fn compile(&self, _batch: usize) -> Result<Box<dyn Executable>> {
+                anyhow::bail!("not under test")
+            }
+        }
+        let reg = ModelRegistry::new();
+        reg.insert("m", enc());
+        let entry = reg.get("m").unwrap();
+        let err = OneTrick(enc()).compile_entry(&entry, 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("registry model 'm'"), "unhelpful error: {msg}");
     }
 }

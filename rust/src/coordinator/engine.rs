@@ -1,23 +1,47 @@
 //! Batch execution engine: backend numerics + modeled hardware cost.
 //!
 //! Owns an [`ExecutionBackend`] and one compiled [`Executable`] per batch
-//! bucket.  `run_batch` pads the live requests to the chosen bucket,
-//! executes once, splits the logits, and attaches the [`CostModel`]'s price
-//! for the batch — the figures a deployment would actually trade off (the
-//! paper's thesis: same numerics, less silicon and power, slightly more
-//! cycles).  Numerics and pricing are independent: a native-served batch
-//! can be priced as PASM silicon and vice versa.
+//! bucket for the default model, plus — when a
+//! [`ModelRegistry`](crate::model_store::ModelRegistry) is attached — a
+//! lazily built slot of per-bucket executables for **every registry model
+//! requested**, keyed by the registry generation: the per-batch fast path
+//! is one atomic generation load, and only an actual hot-swap forces a
+//! re-resolve and recompile, so in-flight batches finish on the model
+//! snapshot they started with and the next batch picks up the new one.
+//!
+//! `run_batch` pads the live requests to the chosen bucket, executes once,
+//! splits the logits, and attaches the [`CostModel`]'s price for the batch
+//! — the figures a deployment would actually trade off (the paper's
+//! thesis: same numerics, less silicon and power, slightly more cycles).
+//! Numerics and pricing are independent: a native-served batch can be
+//! priced as PASM silicon and vice versa, and every registry model is
+//! priced through the same model.
 
 use crate::cnn::network::EncodedCnn;
 use crate::coordinator::backend::{Executable, ExecutionBackend};
 use crate::coordinator::cost::CostModel;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::model_store::{ModelEntry, ModelRegistry};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 pub use crate::coordinator::cost::HwCost;
+
+/// Per-registry-model compiled state, invalidated by generation.
+struct ModelSlot {
+    entry: Arc<ModelEntry>,
+    /// Registry generation at which `entry` was last confirmed current —
+    /// when it still matches [`ModelRegistry::generation`], the slot is
+    /// reused without touching the registry lock at all.
+    checked_at: u64,
+    exes: BTreeMap<usize, Box<dyn Executable>>,
+    per_image: HwCost,
+    in_dims: [usize; 3],
+    classes: usize,
+}
 
 /// The batch execution engine.
 pub struct Engine {
@@ -25,21 +49,27 @@ pub struct Engine {
     exes: BTreeMap<usize, Box<dyn Executable>>,
     classes: usize,
     in_dims: [usize; 3],
-    /// Per-image accelerator cost, precomputed from the cost model at
-    /// construction.
+    /// Per-image accelerator cost of the default model, precomputed from
+    /// the cost model at construction.
     per_image: HwCost,
+    cost: CostModel,
+    /// Multi-model serving state (None = single-model engine).
+    registry: Option<Arc<ModelRegistry>>,
+    slots: HashMap<String, ModelSlot>,
     /// Reused padded-batch staging buffer: one allocation amortized over
     /// every batch instead of one per `run_batch` call.
     pad_buf: Vec<f32>,
 }
 
 impl Engine {
-    /// Compile every batch bucket on `backend` and price the encoded
-    /// model's conv layers with `cost`.
+    /// Compile every batch bucket of the default model on `backend`, price
+    /// its conv layers with `cost`, and (optionally) attach the registry
+    /// that named-model requests resolve against.
     pub fn new(
         backend: Box<dyn ExecutionBackend>,
         buckets: &[usize],
         cost: &CostModel,
+        registry: Option<Arc<ModelRegistry>>,
     ) -> Result<Self> {
         anyhow::ensure!(!buckets.is_empty(), "no batch buckets configured");
         let mut exes = BTreeMap::new();
@@ -56,11 +86,14 @@ impl Engine {
             backend,
             exes,
             per_image,
+            cost: *cost,
+            registry,
+            slots: HashMap::new(),
             pad_buf: Vec::new(),
         })
     }
 
-    /// Compiled bucket sizes, ascending.
+    /// Compiled bucket sizes of the default model, ascending.
     pub fn buckets(&self) -> Vec<usize> {
         self.exes.keys().copied().collect()
     }
@@ -70,81 +103,184 @@ impl Engine {
         self.backend.name()
     }
 
-    /// The encoded model this engine serves.
+    /// The default encoded model this engine serves.
     pub fn encoded(&self) -> &EncodedCnn {
         self.backend.encoded()
     }
 
-    /// Modeled per-image hardware cost.
+    /// Modeled per-image hardware cost of the default model.
     pub fn per_image_cost(&self) -> HwCost {
         self.per_image
     }
 
-    /// Execute up to `bucket` live requests as one padded batch.
+    /// Execute up to `bucket` live requests as one padded batch.  All
+    /// requests must target the same model (the batcher buckets per
+    /// model); named models resolve through the attached registry.
     pub fn run_batch(
         &mut self,
         requests: &[InferenceRequest],
         bucket: usize,
     ) -> Result<Vec<InferenceResponse>> {
-        let exe = self
-            .exes
-            .get(&bucket)
-            .with_context(|| format!("bucket {bucket} not compiled"))?;
+        let model = requests.first().and_then(|r| r.model.clone());
         anyhow::ensure!(
-            requests.len() <= bucket,
-            "batch of {} exceeds bucket {bucket}",
-            requests.len()
+            requests.iter().all(|r| r.model.as_deref() == model.as_deref()),
+            "mixed-model batch (batcher invariant violated)"
         );
-
-        // pad with zeros up to the bucket, staging into the reused buffer
-        // (taken out and restored so a failed batch just re-allocates)
-        let img_len: usize = self.in_dims.iter().product();
-        let mut data = std::mem::take(&mut self.pad_buf);
-        data.clear();
-        data.resize(bucket * img_len, 0.0);
-        for (i, r) in requests.iter().enumerate() {
-            anyhow::ensure!(
-                r.image.dims() == self.in_dims,
-                "request {} image dims {:?} != model {:?}",
-                r.id,
-                r.image.dims(),
-                self.in_dims
-            );
-            data[i * img_len..(i + 1) * img_len].copy_from_slice(r.image.data());
-        }
-        let batch = Tensor::from_vec(
-            &[bucket, self.in_dims[0], self.in_dims[1], self.in_dims[2]],
-            data,
-        );
-
-        let t0 = Instant::now();
-        let result = exe.execute(&batch, requests.len());
-        self.pad_buf = batch.into_vec();
-        let logits = result?;
-        let compute_us = t0.elapsed().as_micros() as u64;
-        let done = Instant::now();
-
-        let hw = self.per_image.scale(requests.len());
-
-        Ok(requests
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let row = &logits.data()[i * self.classes..(i + 1) * self.classes];
-                InferenceResponse {
-                    id: r.id,
-                    logits: row.to_vec(),
-                    predicted: crate::cnn::layer::argmax(row),
-                    queue_us: done
-                        .duration_since(r.enqueued_at)
-                        .as_micros()
-                        .saturating_sub(compute_us as u128) as u64,
-                    compute_us,
-                    batch_size: bucket,
-                    batch_occupancy: requests.len(),
-                    hw,
+        match model {
+            None => {
+                let exe = self
+                    .exes
+                    .get(&bucket)
+                    .with_context(|| format!("bucket {bucket} not compiled"))?;
+                let ctx = BatchCtx {
+                    exe: exe.as_ref(),
+                    in_dims: self.in_dims,
+                    classes: self.classes,
+                    per_image: self.per_image,
+                    model: None,
+                };
+                execute_padded(ctx, requests, bucket, &mut self.pad_buf)
+            }
+            Some(name) => {
+                self.refresh_slot(&name)?;
+                // split borrows: slot (self.slots) + backend + pad_buf are
+                // disjoint fields
+                let slot = self.slots.get_mut(name.as_ref()).expect("slot just refreshed");
+                if !slot.exes.contains_key(&bucket) {
+                    let what = format!("compile model '{name}' at batch bucket {bucket}");
+                    let exe = self.backend.compile_entry(&slot.entry, bucket).context(what)?;
+                    slot.exes.insert(bucket, exe);
                 }
-            })
-            .collect())
+                let ctx = BatchCtx {
+                    exe: slot.exes.get(&bucket).expect("just inserted").as_ref(),
+                    in_dims: slot.in_dims,
+                    classes: slot.classes,
+                    per_image: slot.per_image,
+                    model: Some(&name),
+                };
+                execute_padded(ctx, requests, bucket, &mut self.pad_buf)
+            }
+        }
     }
+
+    /// Ensure the slot for `name` exists and reflects the current registry
+    /// generation.  Fast path: one atomic load; the registry lock is only
+    /// taken when the generation moved, and executables only recompile
+    /// when the entry itself was hot-swapped.
+    fn refresh_slot(&mut self, name: &str) -> Result<()> {
+        let registry = self.registry.as_ref().context(
+            "request names a model but no registry is attached \
+             (use CoordinatorBuilder::registry)",
+        )?;
+        let generation = registry.generation();
+        if let Some(slot) = self.slots.get(name) {
+            if slot.checked_at == generation {
+                return Ok(());
+            }
+        }
+        // slow path: the registry changed since this slot was validated,
+        // or the model was never resolved
+        let Some(entry) = registry.get(name) else {
+            // evict any stale slot so retired model names do not leak
+            // compiled executables in a long-running coordinator
+            self.slots.remove(name);
+            anyhow::bail!("model '{name}' is not in the registry");
+        };
+        match self.slots.get_mut(name) {
+            Some(slot) if slot.entry.generation == entry.generation => {
+                // registry changed, but not this model
+                slot.checked_at = generation;
+            }
+            // new model, or hot-swapped: (re)build the slot (insert
+            // overwrites, dropping the stale executables)
+            _ => self.insert_slot(name, entry, generation),
+        }
+        Ok(())
+    }
+
+    fn insert_slot(&mut self, name: &str, entry: Arc<ModelEntry>, generation: u64) {
+        let arch = &entry.enc.arch;
+        let slot = ModelSlot {
+            per_image: self.cost.price_image(&entry.enc),
+            in_dims: [1, arch.in_side, arch.in_side],
+            classes: arch.classes,
+            exes: BTreeMap::new(),
+            checked_at: generation,
+            entry,
+        };
+        self.slots.insert(name.to_string(), slot);
+    }
+}
+
+/// Everything `execute_padded` needs about the resolved model, bundled so
+/// the field-disjoint borrows out of [`Engine`] stay obvious.
+struct BatchCtx<'a> {
+    exe: &'a dyn Executable,
+    in_dims: [usize; 3],
+    classes: usize,
+    per_image: HwCost,
+    model: Option<&'a Arc<str>>,
+}
+
+/// Pad the live requests to `bucket`, execute once, split the logits.
+fn execute_padded(
+    ctx: BatchCtx,
+    requests: &[InferenceRequest],
+    bucket: usize,
+    pad_buf: &mut Vec<f32>,
+) -> Result<Vec<InferenceResponse>> {
+    anyhow::ensure!(
+        requests.len() <= bucket,
+        "batch of {} exceeds bucket {bucket}",
+        requests.len()
+    );
+
+    // pad with zeros up to the bucket, staging into the reused buffer
+    // (taken out and restored so a failed batch just re-allocates)
+    let img_len: usize = ctx.in_dims.iter().product();
+    let mut data = std::mem::take(pad_buf);
+    data.clear();
+    data.resize(bucket * img_len, 0.0);
+    for (i, r) in requests.iter().enumerate() {
+        anyhow::ensure!(
+            r.image.dims() == ctx.in_dims,
+            "request {} image dims {:?} != model {:?}",
+            r.id,
+            r.image.dims(),
+            ctx.in_dims
+        );
+        data[i * img_len..(i + 1) * img_len].copy_from_slice(r.image.data());
+    }
+    let batch = Tensor::from_vec(&[bucket, ctx.in_dims[0], ctx.in_dims[1], ctx.in_dims[2]], data);
+
+    let t0 = Instant::now();
+    let result = ctx.exe.execute(&batch, requests.len());
+    *pad_buf = batch.into_vec();
+    let logits = result?;
+    let compute_us = t0.elapsed().as_micros() as u64;
+    let done = Instant::now();
+
+    let hw = ctx.per_image.scale(requests.len());
+
+    Ok(requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let row = &logits.data()[i * ctx.classes..(i + 1) * ctx.classes];
+            InferenceResponse {
+                id: r.id,
+                model: ctx.model.cloned(),
+                logits: row.to_vec(),
+                predicted: crate::cnn::layer::argmax(row),
+                queue_us: done
+                    .duration_since(r.enqueued_at)
+                    .as_micros()
+                    .saturating_sub(compute_us as u128) as u64,
+                compute_us,
+                batch_size: bucket,
+                batch_occupancy: requests.len(),
+                hw,
+            }
+        })
+        .collect())
 }

@@ -1,6 +1,19 @@
-//! Serving metrics: counters and latency percentiles.
+//! Serving metrics: global and per-model counters, latency percentiles.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+/// Label used for requests served by the default (unnamed) backend model.
+pub const DEFAULT_MODEL_LABEL: &str = "default";
+
+/// Per-model serving counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModelCounters {
+    pub requests: u64,
+    pub batches: u64,
+    /// Batches that failed (execution error or panic) for this model.
+    pub failed_batches: u64,
+}
 
 /// Rolling metrics for the coordinator.
 #[derive(Clone, Debug, Default)]
@@ -10,7 +23,13 @@ pub struct Metrics {
     pub backend: String,
     pub requests: u64,
     pub batches: u64,
+    /// Batches that failed (execution error, panic, or unresolvable
+    /// model), across all models.
+    pub failed_batches: u64,
     pub padded_slots: u64,
+    /// Per-model request/batch counters, keyed by model name (the default
+    /// backend model records under [`DEFAULT_MODEL_LABEL`]).
+    pub per_model: BTreeMap<String, ModelCounters>,
     /// End-to-end latencies (µs), one per completed request.
     latencies_us: Vec<u64>,
     /// Total simulated accelerator energy (J).
@@ -28,10 +47,24 @@ impl Metrics {
         self.backend = name.to_string();
     }
 
-    pub fn record_batch(&mut self, occupancy: usize, bucket: usize) {
+    pub fn record_batch(&mut self, model: &str, occupancy: usize, bucket: usize) {
         self.batches += 1;
         self.requests += occupancy as u64;
         self.padded_slots += (bucket - occupancy) as u64;
+        let m = self.per_model.entry(model.to_string()).or_default();
+        m.batches += 1;
+        m.requests += occupancy as u64;
+    }
+
+    /// Count a failed batch.  The global counter always moves; the
+    /// per-model counter only moves for models that already have an
+    /// entry (i.e. served at least one batch) — a client submitting
+    /// made-up model names must not grow the map without bound.
+    pub fn record_failed_batch(&mut self, model: &str) {
+        self.failed_batches += 1;
+        if let Some(m) = self.per_model.get_mut(model) {
+            m.failed_batches += 1;
+        }
     }
 
     pub fn record_latency(&mut self, lat: Duration) {
@@ -41,6 +74,12 @@ impl Metrics {
     pub fn record_hw(&mut self, cycles: u64, energy_j: f64) {
         self.sim_cycles += cycles;
         self.sim_energy_j += energy_j;
+    }
+
+    /// Counters for one model (by name; [`DEFAULT_MODEL_LABEL`] for the
+    /// default backend model).
+    pub fn model(&self, name: &str) -> ModelCounters {
+        self.per_model.get(name).copied().unwrap_or_default()
     }
 
     /// Latency percentile (p in [0, 100]); None until data arrives.
@@ -81,13 +120,39 @@ mod tests {
     #[test]
     fn batch_accounting() {
         let mut m = Metrics::new();
-        m.record_batch(5, 8);
-        m.record_batch(16, 16);
+        m.record_batch(DEFAULT_MODEL_LABEL, 5, 8);
+        m.record_batch(DEFAULT_MODEL_LABEL, 16, 16);
         assert_eq!(m.requests, 21);
         assert_eq!(m.batches, 2);
         assert_eq!(m.padded_slots, 3);
         assert!((m.mean_occupancy() - 10.5).abs() < 1e-9);
         assert!((m.padding_fraction() - 3.0 / 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_model_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch("a", 4, 8);
+        m.record_batch("b", 8, 8);
+        m.record_batch("a", 2, 2);
+        m.record_failed_batch("b");
+        assert_eq!(m.model("a"), ModelCounters { requests: 6, batches: 2, failed_batches: 0 });
+        assert_eq!(m.model("b"), ModelCounters { requests: 8, batches: 1, failed_batches: 1 });
+        assert_eq!(m.model("missing"), ModelCounters::default());
+        // globals aggregate across models
+        assert_eq!(m.requests, 14);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.failed_batches, 1);
+    }
+
+    #[test]
+    fn unknown_model_failures_do_not_grow_the_map() {
+        let mut m = Metrics::new();
+        for i in 0..100 {
+            m.record_failed_batch(&format!("bogus-{i}"));
+        }
+        assert_eq!(m.failed_batches, 100);
+        assert!(m.per_model.is_empty(), "made-up names must not create entries");
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! silicon via [`cost::CostModel`].  Assemble with
 //! [`server::CoordinatorBuilder`].
 //!
+//! The coordinator is **multi-model**: attach a
+//! [`crate::model_store::ModelRegistry`] and requests may name any
+//! registered model variant ([`server::Coordinator::submit_to`]).  The
+//! batcher keeps one queue per model (a launched batch never mixes
+//! models), the [`engine`] holds per-model executables keyed by the
+//! registry generation, [`metrics::Metrics`] counts per model, and a
+//! hot-swapped artifact goes live on the next batch without dropping
+//! in-flight requests.
+//!
 //! No async runtime is available in this offline build; the coordinator
 //! uses std threads + channels (one worker, many producers), which for a
 //! single-device CPU backend is also the contention-minimal design.
@@ -36,6 +45,6 @@ pub use backend::{default_backend, Executable, ExecutionBackend, NativeBackend, 
 pub use batcher::BatchPolicy;
 pub use cost::{CostModel, HwCost};
 pub use engine::Engine;
-pub use metrics::Metrics;
+pub use metrics::{DEFAULT_MODEL_LABEL, Metrics, ModelCounters};
 pub use request::{InferenceRequest, InferenceResponse};
 pub use server::{Coordinator, CoordinatorBuilder};

@@ -2,6 +2,7 @@
 
 use crate::coordinator::cost::HwCost;
 use crate::tensor::Tensor;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// A single-image inference request.
@@ -10,12 +11,22 @@ pub struct InferenceRequest {
     pub id: u64,
     /// `[C, H, W]` input image (the digits model uses `[1, 12, 12]`).
     pub image: Tensor<f32>,
+    /// Registry model this request targets; `None` = the coordinator's
+    /// built-in default backend model.  The batcher buckets per model, so
+    /// one launched batch never mixes models.
+    pub model: Option<Arc<str>>,
     pub enqueued_at: Instant,
 }
 
 impl InferenceRequest {
     pub fn new(id: u64, image: Tensor<f32>) -> Self {
-        InferenceRequest { id, image, enqueued_at: Instant::now() }
+        InferenceRequest { id, image, model: None, enqueued_at: Instant::now() }
+    }
+
+    /// Target a named registry model instead of the default.
+    pub fn with_model(mut self, model: impl Into<Arc<str>>) -> Self {
+        self.model = Some(model.into());
+        self
     }
 }
 
@@ -23,11 +34,14 @@ impl InferenceRequest {
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// Which model served this request (`None` = the default backend
+    /// model) — echoes the request's routing for client-side assertions.
+    pub model: Option<Arc<str>>,
     pub logits: Vec<f32>,
     pub predicted: usize,
     /// Time spent queued before the batch launched.
     pub queue_us: u64,
-    /// PJRT execute wall time for the whole batch.
+    /// Backend execute wall time for the whole batch.
     pub compute_us: u64,
     /// Batch this request rode in (bucket size, incl. padding).
     pub batch_size: usize,
@@ -47,5 +61,13 @@ mod tests {
         let r = InferenceRequest::new(7, img);
         assert_eq!(r.id, 7);
         assert_eq!(r.image.dims(), &[1, 12, 12]);
+        assert!(r.model.is_none());
+    }
+
+    #[test]
+    fn request_routes_to_model() {
+        let img = Tensor::<f32>::zeros(&[1, 12, 12]);
+        let r = InferenceRequest::new(8, img).with_model("digits-b4");
+        assert_eq!(r.model.as_deref(), Some("digits-b4"));
     }
 }

@@ -1,24 +1,26 @@
 //! The coordinator server: builder, worker thread, submission handle.
 //!
-//! [`CoordinatorBuilder`] assembles a backend, a batch policy, and a cost
-//! model into a running [`Coordinator`].  One worker thread owns the
-//! [`Engine`] (backend executables need not be `Sync`; compilation happens
-//! on the worker) and drains a request channel, applying the
-//! [`BatchPolicy`]: wait for a fillable bucket or the oldest request's
-//! deadline, then launch.  Clients get a per-request response channel.
-//! Drop the [`Coordinator`] to shut down cleanly (pending requests are
-//! flushed first).
+//! [`CoordinatorBuilder`] assembles a backend (and/or a
+//! [`ModelRegistry`]), a batch policy, and a cost model into a running
+//! [`Coordinator`].  One worker thread owns the [`Engine`] (backend
+//! executables need not be `Sync`; compilation happens on the worker) and
+//! drains a request channel into **per-model queues**, applying the
+//! [`BatchPolicy`] to each: wait for a fillable bucket or the oldest
+//! request's deadline, then launch the queue whose front request has
+//! waited longest — one launched batch never mixes models.  Clients get a
+//! per-request response channel.  Drop the [`Coordinator`] to shut down
+//! cleanly (pending requests are flushed first).
 
-use crate::cnn::network::EncodedCnn;
-use crate::coordinator::backend::{default_backend, ExecutionBackend};
+use crate::coordinator::backend::{ExecutionBackend, NativeBackend};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::cost::CostModel;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{DEFAULT_MODEL_LABEL, Metrics};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::model_store::ModelRegistry;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -30,7 +32,8 @@ enum Msg {
     Shutdown,
 }
 
-/// Builds a [`Coordinator`] from a backend, batch policy, and cost model.
+/// Builds a [`Coordinator`] from a backend and/or model registry, a batch
+/// policy, and a cost model.
 ///
 /// The batch policy defaults to the backend's preferred buckets (e.g. the
 /// sizes an AOT flow exported) or [`BatchPolicy::default`]; the cost model
@@ -62,6 +65,8 @@ pub struct CoordinatorBuilder {
     backend: Option<Box<dyn ExecutionBackend>>,
     policy: Option<BatchPolicy>,
     cost: Option<CostModel>,
+    registry: Option<Arc<ModelRegistry>>,
+    default_model: Option<String>,
 }
 
 impl CoordinatorBuilder {
@@ -69,7 +74,8 @@ impl CoordinatorBuilder {
         CoordinatorBuilder::default()
     }
 
-    /// The execution backend to serve from (required).
+    /// The execution backend to serve from (required unless a
+    /// [`CoordinatorBuilder::registry`] provides the models).
     pub fn backend(mut self, backend: impl ExecutionBackend + 'static) -> Self {
         self.backend = Some(Box::new(backend));
         self
@@ -78,6 +84,44 @@ impl CoordinatorBuilder {
     /// Same as [`CoordinatorBuilder::backend`] for an already-boxed backend.
     pub fn boxed_backend(mut self, backend: Box<dyn ExecutionBackend>) -> Self {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Serve named models from this registry ([`Coordinator::submit_to`] /
+    /// [`Coordinator::infer_model`]).  Without an explicit
+    /// [`CoordinatorBuilder::backend`], a [`NativeBackend`] is built
+    /// around the registry's default model, and *unnamed* requests route
+    /// to that model **by name** — so hot-swapping its artifact takes
+    /// effect without a restart.
+    ///
+    /// ```
+    /// use pasm_accel::cnn::data::{render_digit, Rng};
+    /// use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+    /// use pasm_accel::coordinator::CoordinatorBuilder;
+    /// use pasm_accel::model_store::ModelRegistry;
+    /// use pasm_accel::quant::fixed::QFormat;
+    /// use std::sync::Arc;
+    ///
+    /// let arch = DigitsCnn::default();
+    /// let mut rng = Rng::new(1);
+    /// let registry = Arc::new(ModelRegistry::new());
+    /// registry.insert("b4", EncodedCnn::encode(arch, &arch.init(&mut rng), 4, QFormat::W16));
+    /// registry.insert("b8", EncodedCnn::encode(arch, &arch.init(&mut rng), 8, QFormat::W16));
+    ///
+    /// let coord = CoordinatorBuilder::new().registry(Arc::clone(&registry)).build()?;
+    /// let resp = coord.infer_model("b8", render_digit(&mut rng, 3, 0.05))?;
+    /// assert_eq!(resp.model.as_deref(), Some("b8"));
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn registry(mut self, registry: Arc<ModelRegistry>) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Which registry model unnamed requests route to (default: the
+    /// registry's alphabetically first model).  Requires a registry.
+    pub fn default_model(mut self, name: impl Into<String>) -> Self {
+        self.default_model = Some(name.into());
         self
     }
 
@@ -95,13 +139,47 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the worker, compile every bucket, and start serving.  Returns
-    /// once the backend compiled successfully (startup errors surface
-    /// here, not on first request).
+    /// Spawn the worker, compile every default-model bucket, and start
+    /// serving.  Returns once the backend compiled successfully (startup
+    /// errors surface here, not on first request); registry models
+    /// compile lazily on first use so a hot-dropped artifact needs no
+    /// restart.
     pub fn build(self) -> Result<Coordinator> {
-        let backend = self
-            .backend
-            .context("CoordinatorBuilder: a backend is required (use .backend(...))")?;
+        let registry = self.registry;
+        let mut default_model: Option<Arc<str>> = None;
+        let backend: Box<dyn ExecutionBackend> = match (self.backend, &registry) {
+            (Some(b), _) => {
+                if let Some(name) = &self.default_model {
+                    let reg = registry
+                        .as_ref()
+                        .context("CoordinatorBuilder: default_model requires .registry(...)")?;
+                    anyhow::ensure!(
+                        reg.get(name).is_some(),
+                        "default model '{name}' is not in the registry"
+                    );
+                    default_model = Some(Arc::from(name.as_str()));
+                }
+                b
+            }
+            (None, Some(reg)) => {
+                let name = match self.default_model {
+                    Some(n) => n,
+                    None => reg.default_name().context(
+                        "CoordinatorBuilder: the registry is empty — pack at least one \
+                         model or set .backend(...)",
+                    )?,
+                };
+                let entry = reg
+                    .get(&name)
+                    .with_context(|| format!("default model '{name}' is not in the registry"))?;
+                default_model = Some(Arc::from(name.as_str()));
+                Box::new(NativeBackend::new((*entry.enc).clone()))
+            }
+            (None, None) => anyhow::bail!(
+                "CoordinatorBuilder: a backend or a model registry is required \
+                 (use .backend(...) or .registry(...))"
+            ),
+        };
         let policy = self.policy.unwrap_or_else(|| match backend.preferred_buckets() {
             Some(buckets) if !buckets.is_empty() => {
                 BatchPolicy::new(buckets, BatchPolicy::default().max_wait)
@@ -118,10 +196,11 @@ impl CoordinatorBuilder {
         // Send); report startup errors through a channel.
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let buckets = policy.buckets.clone();
+        let registry_worker = registry.clone();
         let worker = std::thread::Builder::new()
             .name("pasm-coordinator".into())
             .spawn(move || {
-                let engine = match Engine::new(backend, &buckets, &cost) {
+                let engine = match Engine::new(backend, &buckets, &cost, registry_worker) {
                     Ok(e) => {
                         // label the metrics before signalling ready so
                         // build() never returns with an empty backend name
@@ -143,7 +222,14 @@ impl CoordinatorBuilder {
             .context("coordinator worker died during startup")?
             .map_err(|e| anyhow::anyhow!(e))?;
 
-        Ok(Coordinator { tx, worker: Some(worker), next_id: AtomicU64::new(1), metrics })
+        Ok(Coordinator {
+            tx,
+            worker: Some(worker),
+            next_id: AtomicU64::new(1),
+            metrics,
+            registry,
+            default_model,
+        })
     }
 }
 
@@ -153,48 +239,69 @@ pub struct Coordinator {
     worker: Option<JoinHandle<()>>,
     next_id: AtomicU64,
     metrics: Arc<Mutex<Metrics>>,
+    registry: Option<Arc<ModelRegistry>>,
+    default_model: Option<Arc<str>>,
 }
 
 impl Coordinator {
-    /// Deprecated constructor kept for source compatibility: serves `enc`
-    /// from `artifacts_dir` on the PJRT backend when the `pjrt` feature is
-    /// enabled, else falls back to the in-process
-    /// [`NativeBackend`](crate::coordinator::backend::NativeBackend)
-    /// (ignoring `artifacts_dir`).
-    #[deprecated(
-        since = "0.2.0",
-        note = "use CoordinatorBuilder::new().backend(...).batch_policy(...).build()"
-    )]
-    pub fn start(
-        artifacts_dir: &str,
-        enc: EncodedCnn,
-        policy: BatchPolicy,
-    ) -> Result<Self> {
-        CoordinatorBuilder::new()
-            .boxed_backend(default_backend(artifacts_dir, enc))
-            .batch_policy(policy)
-            .build()
-    }
-
-    /// Submit one image; returns a receiver for the response.
+    /// Submit one image to the default model; returns a receiver for the
+    /// response.
     pub fn submit(
         &self,
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        self.submit_routed(image, self.default_model.clone())
+    }
+
+    /// Submit one image to a named registry model.
+    pub fn submit_to(
+        &self,
+        model: &str,
+        image: Tensor<f32>,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        self.submit_routed(image, Some(Arc::from(model)))
+    }
+
+    fn submit_routed(
+        &self,
+        image: Tensor<f32>,
+        model: Option<Arc<str>>,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
+        let mut req = InferenceRequest::new(id, image);
+        req.model = model;
         self.tx
-            .send(Msg::Request(InferenceRequest::new(id, image), rtx))
+            .send(Msg::Request(req, rtx))
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
         Ok(rrx)
     }
 
-    /// Submit and block for the answer (convenience).
+    /// Submit to the default model and block for the answer (convenience).
     pub fn infer(&self, image: Tensor<f32>) -> Result<InferenceResponse> {
         let rx = self.submit(image)?;
         rx.recv()
             .context("coordinator dropped the request")?
             .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Submit to a named registry model and block for the answer.
+    pub fn infer_model(&self, model: &str, image: Tensor<f32>) -> Result<InferenceResponse> {
+        let rx = self.submit_to(model, image)?;
+        rx.recv()
+            .context("coordinator dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// The registry this coordinator serves named models from, if any.
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// The model unnamed requests route to (`None` = the backend's
+    /// built-in model).
+    pub fn default_model(&self) -> Option<&str> {
+        self.default_model.as_deref()
     }
 
     /// Snapshot of the serving metrics.
@@ -212,28 +319,38 @@ impl Drop for Coordinator {
     }
 }
 
+type ResponseTx = mpsc::Sender<Result<InferenceResponse, String>>;
+type Pending = (InferenceRequest, ResponseTx);
+type ModelQueues = BTreeMap<Option<Arc<str>>, VecDeque<Pending>>;
+
+fn push(queues: &mut ModelQueues, r: InferenceRequest, tx: ResponseTx) {
+    queues.entry(r.model.clone()).or_default().push_back((r, tx));
+}
+
 fn worker_loop(
     mut engine: Engine,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
 ) {
-    type Pending = (InferenceRequest, mpsc::Sender<Result<InferenceResponse, String>>);
-    let mut queue: VecDeque<Pending> = VecDeque::new();
+    // one queue per model: a launched batch never mixes models, and the
+    // policy's wait budget applies to each model's oldest request
+    let mut queues: ModelQueues = BTreeMap::new();
     let mut shutting_down = false;
 
     loop {
         // 1) drain the channel (non-blocking if we already hold requests,
-        //    blocking with deadline otherwise)
-        if queue.is_empty() && !shutting_down {
+        //    blocking otherwise)
+        let held: usize = queues.values().map(VecDeque::len).sum();
+        if held == 0 && !shutting_down {
             match rx.recv() {
-                Ok(Msg::Request(r, tx)) => queue.push_back((r, tx)),
+                Ok(Msg::Request(r, tx)) => push(&mut queues, r, tx),
                 Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(Msg::Request(r, tx)) => queue.push_back((r, tx)),
+                Ok(Msg::Request(r, tx)) => push(&mut queues, r, tx),
                 Ok(Msg::Shutdown) => {
                     shutting_down = true;
                     break;
@@ -246,24 +363,35 @@ fn worker_loop(
             }
         }
 
-        if queue.is_empty() {
+        queues.retain(|_, q| !q.is_empty());
+        if queues.is_empty() {
             if shutting_down {
                 return;
             }
             continue;
         }
 
-        // 2) batching decision
-        let oldest_expired = shutting_down
-            || queue
-                .front()
-                .map(|(r, _)| r.enqueued_at.elapsed() >= policy.max_wait)
-                .unwrap_or(false);
-        let Some(bucket) = policy.decide(queue.len(), oldest_expired) else {
+        // 2) batching decision, per model: among the launchable queues,
+        //    pick the one whose front request has waited longest
+        let mut launch: Option<(Option<Arc<str>>, usize, Instant)> = None;
+        for (model, q) in &queues {
+            let front = q.front().expect("empty queues were dropped above").0.enqueued_at;
+            let expired = shutting_down || front.elapsed() >= policy.max_wait;
+            if let Some(bucket) = policy.decide(q.len(), expired) {
+                let older = match &launch {
+                    None => true,
+                    Some((_, _, t)) => front < *t,
+                };
+                if older {
+                    launch = Some((model.clone(), bucket, front));
+                }
+            }
+        }
+        let Some((model, bucket, _)) = launch else {
             // wait a beat for more requests (bounded by the wait budget)
             if let Ok(msg) = rx.recv_timeout(policy.max_wait) {
                 match msg {
-                    Msg::Request(r, tx) => queue.push_back((r, tx)),
+                    Msg::Request(r, tx) => push(&mut queues, r, tx),
                     Msg::Shutdown => shutting_down = true,
                 }
             }
@@ -271,9 +399,11 @@ fn worker_loop(
         };
 
         // 3) launch
+        let queue = queues.get_mut(&model).expect("launch model has a queue");
         let take = bucket.min(queue.len());
         let batch: Vec<Pending> = queue.drain(..take).collect();
         let requests: Vec<InferenceRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
+        let label: &str = model.as_deref().unwrap_or(DEFAULT_MODEL_LABEL);
         let started = Instant::now();
         // Contain kernel panics (e.g. the fixed-point overflow guards on an
         // extreme input): the batch fails, the worker keeps serving.  The
@@ -294,7 +424,7 @@ fn worker_loop(
             Ok(responses) => {
                 // one lock per batch, not per request (§Perf)
                 let mut m = metrics.lock().unwrap();
-                m.record_batch(requests.len(), bucket);
+                m.record_batch(label, requests.len(), bucket);
                 if let Some(first) = responses.first() {
                     m.record_hw(first.hw.cycles, first.hw.energy_j);
                 }
@@ -307,6 +437,7 @@ fn worker_loop(
                 }
             }
             Err(e) => {
+                metrics.lock().unwrap().record_failed_batch(label);
                 let msg = format!("batch failed after {:?}: {e:#}", started.elapsed());
                 for (_, tx) in batch {
                     let _ = tx.send(Err(msg.clone()));

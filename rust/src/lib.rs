@@ -29,15 +29,24 @@
 //!   of whole accelerators, with toggle counting that feeds the power model.
 //! * [`accel`] — accelerator variant builder (standalone 16-MAC vs
 //!   16-PAS-4-MAC units, full conv-layer accelerators, HLS directive knobs).
+//! * [`model_store`] — durable model artifacts and multi-model serving
+//!   state: the `.pasm` binary format (per-layer codebooks +
+//!   Huffman-coded bin-index streams, fixed-point metadata, CRC-32
+//!   integrity; bit-exact `pack`/`load`) and the hot-swappable
+//!   [`model_store::ModelRegistry`] (atomic snapshot swaps, lock-free
+//!   generation checks, poll-based directory reload) the coordinator
+//!   serves many model variants from at once.
 //! * [`runtime`] — artifact manifest + JSON layers (always built) and, behind
 //!   the `pjrt` cargo feature, the PJRT CPU client that loads the AOT-lowered
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them on the
 //!   request path (python never runs at inference time).
 //! * [`coordinator`] — thread-based inference coordinator (std threads +
-//!   channels; no async runtime in the offline build): request queue,
-//!   bucketed dynamic batcher, pluggable [`coordinator::backend`] execution
-//!   substrate (compiled-plan native kernels with a parallel batch worker
-//!   pool, or PJRT), hardware [`coordinator::cost`] model, metrics.
+//!   channels; no async runtime in the offline build): per-model request
+//!   queues, bucketed dynamic batcher, pluggable [`coordinator::backend`]
+//!   execution substrate (compiled-plan native kernels with a parallel
+//!   batch worker pool, or PJRT) with per-model executables keyed by
+//!   registry generation, hardware [`coordinator::cost`] model, per-model
+//!   metrics.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
@@ -49,6 +58,7 @@ pub mod cnn;
 pub mod coordinator;
 pub mod fpga;
 pub mod hw;
+pub mod model_store;
 pub mod quant;
 pub mod report;
 pub mod runtime;

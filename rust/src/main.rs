@@ -3,8 +3,11 @@
 //! ```text
 //! repro report <id>|all          regenerate paper tables/figures
 //! repro simulate [--bins B] [--width W] [--variant ws|pasm] [--seed N]
+//! repro pack <dir> [--bins B] [--width W] [--name NAME] [--seed N]
 //! repro serve [--requests N] [--backend native|pjrt] [--artifacts DIR] [--fixed]
 //!             [--threads N] [--no-plan]
+//! repro serve --models <dir> [--requests N] [--model NAME] [--fixed]
+//!             [--poll-ms M] [--pack-midrun NAME=BINS]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -12,19 +15,24 @@
 //! (clap is unavailable in the offline build; arguments are parsed by
 //! hand — flags are `--key value` pairs.)
 
+use anyhow::Context;
 use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
 use pasm_accel::cnn::conv::FxConvInputs;
-use pasm_accel::cnn::data::Rng;
+use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
 use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder, NativeBackend, NativePrecision};
 use pasm_accel::hw::Tech;
+use pasm_accel::model_store::{self, ModelRegistry};
 use pasm_accel::quant::codebook::encode_weights;
 use pasm_accel::quant::fixed::QFormat;
 use pasm_accel::report::{all_report_ids, run_report};
 use pasm_accel::sim::simulate_conv;
 use pasm_accel::tensor::Tensor;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -36,6 +44,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "report" => cmd_report(&args),
         "simulate" => cmd_simulate(&flags),
+        "pack" => cmd_pack(&args, &flags),
         "serve" => cmd_serve(&flags),
         "sweep" => cmd_sweep(&flags),
         "list" => {
@@ -59,11 +68,14 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <report <id>|all> | simulate | serve | sweep | list
+const USAGE: &str = "usage: repro <report <id>|all> | simulate | pack | serve | sweep | list
   report all | report fig15      regenerate paper exhibits
   simulate --variant pasm --bins 16 --width 32 --seed 1
+  pack <dir> [--bins 16] [--width 32] [--name NAME] [--seed 7]
   serve --requests 64 --backend native|pjrt [--artifacts artifacts] [--fixed]
         [--threads N] [--no-plan]
+  serve --models <dir> [--requests 64] [--model NAME] [--fixed] [--poll-ms 25]
+        [--pack-midrun NAME=BINS]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -161,7 +173,184 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build a deterministic digits model and save it as a `.pasm` artifact.
+fn cmd_pack(args: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = args
+        .get(1)
+        .filter(|a| !a.starts_with("--"))
+        .context("usage: repro pack <dir> [--bins N] [--width 8|16|32] [--name NAME] [--seed S]")?;
+    let bins: usize = flag(flags, "bins", 16);
+    let width: u32 = flag(flags, "width", 32);
+    let seed: u64 = flag(flags, "seed", 7);
+    let wq = match width {
+        8 => QFormat::W8,
+        16 => QFormat::W16,
+        _ => QFormat::W32,
+    };
+    let name = flags
+        .get("name")
+        .cloned()
+        .unwrap_or_else(|| format!("digits-b{bins}-w{width}"));
+
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, bins, wq);
+
+    let path = PathBuf::from(dir).join(format!("{name}.pasm"));
+    let bytes = model_store::save_file(&path, &enc)?;
+    let raw = model_store::raw_dense_bytes(&enc);
+    println!(
+        "packed {} ({bytes} bytes on disk vs {raw} bytes raw f32 -> {:.1}x)",
+        path.display(),
+        raw as f64 / bytes as f64
+    );
+    Ok(())
+}
+
+/// Multi-model serving from a models directory: load every `.pasm`
+/// artifact into a registry, watch the directory for hot swaps, and
+/// round-robin requests across every model id — optionally packing a new
+/// variant mid-run to exercise zero-downtime reload end to end.
+fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Result<()> {
+    let n: usize = flag(flags, "requests", 64);
+    let poll_ms: u64 = flag(flags, "poll-ms", 25);
+    let dir_path = PathBuf::from(dir);
+
+    let registry = Arc::new(ModelRegistry::load_dir(&dir_path)?);
+    anyhow::ensure!(
+        !registry.is_empty(),
+        "no .pasm artifacts in {dir} (run `repro pack {dir}` first)"
+    );
+    registry.watch(dir_path.clone(), Duration::from_millis(poll_ms))?;
+
+    let default_name = match flags.get("model") {
+        Some(m) => m.clone(),
+        None => registry.default_name().expect("registry checked non-empty"),
+    };
+    let entry = registry
+        .get(&default_name)
+        .with_context(|| format!("model '{default_name}' is not in {dir}"))?;
+    let mut backend = NativeBackend::new((*entry.enc).clone());
+    if flags.contains_key("fixed") {
+        backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+    }
+    let coord = CoordinatorBuilder::new()
+        .backend(backend)
+        .registry(Arc::clone(&registry))
+        .default_model(&default_name)
+        .batch_policy(BatchPolicy::default())
+        .build()?;
+    let mut expected = registry.names();
+    // every model (including a --pack-midrun addition) must be reachable
+    // in both the pre- and post-swap halves of the round-robin
+    let final_models = expected.len() + usize::from(flags.contains_key("pack-midrun"));
+    anyhow::ensure!(
+        n >= 2 * final_models,
+        "--requests {n} cannot cover {final_models} model(s) in both halves \
+         (need at least {})",
+        2 * final_models
+    );
+    println!(
+        "serving {} model(s) from {dir} on '{}' backend: {expected:?}",
+        expected.len(),
+        coord.metrics().backend
+    );
+
+    let t0 = Instant::now();
+    let mut rng = Rng::new(11);
+    let mut rxs = Vec::with_capacity(n);
+    let first_half = n / 2;
+    for i in 0..first_half {
+        let name = expected[i % expected.len()].clone();
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit_to(&name, img)?;
+        rxs.push((name, rx));
+    }
+
+    // hot-swap: pack a new variant into the live dir while the phase-1
+    // requests above are still in flight, and wait for the watcher
+    if let Some(spec) = flags.get("pack-midrun") {
+        let (name, bins_str) = spec
+            .split_once('=')
+            .context("--pack-midrun expects NAME=BINS, e.g. digits-b4=4")?;
+        let bins: usize = bins_str.parse().context("--pack-midrun BINS must be a number")?;
+        let gen_before = registry.generation();
+        let arch = DigitsCnn::default();
+        let mut prng = Rng::new(43);
+        let params = arch.init(&mut prng);
+        let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
+        model_store::save_file(&dir_path.join(format!("{name}.pasm")), &enc)?;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while registry.get(name).map(|e| e.generation <= gen_before).unwrap_or(true) {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "watcher did not pick up '{name}' within 10s"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        println!(
+            "hot-swapped '{name}' (bins={bins}) into the registry, generation {}",
+            registry.generation()
+        );
+        if !expected.iter().any(|e| e == name) {
+            expected.push(name.to_string());
+        }
+    }
+
+    for i in first_half..n {
+        let name = expected[i % expected.len()].clone();
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit_to(&name, img)?;
+        rxs.push((name, rx));
+    }
+
+    let mut ok_by_model: BTreeMap<String, usize> = BTreeMap::new();
+    let mut failed = 0usize;
+    for (name, rx) in rxs {
+        match rx.recv()? {
+            Ok(resp) => {
+                anyhow::ensure!(
+                    resp.model.as_deref() == Some(name.as_str()),
+                    "mis-routed response: asked '{name}', served {:?}",
+                    resp.model
+                );
+                *ok_by_model.entry(name).or_default() += 1;
+            }
+            Err(e) => {
+                eprintln!("request to '{name}' failed: {e}");
+                failed += 1;
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "served {}/{n} requests in {dt:?} ({:.1} req/s)",
+        n - failed,
+        n as f64 / dt.as_secs_f64()
+    );
+    for (name, counters) in &m.per_model {
+        println!(
+            "  model {name}: {} requests in {} batches ({} failed)",
+            counters.requests, counters.batches, counters.failed_batches
+        );
+    }
+    for name in &expected {
+        anyhow::ensure!(
+            ok_by_model.get(name).copied().unwrap_or(0) > 0,
+            "model '{name}' answered no requests"
+        );
+    }
+    anyhow::ensure!(failed == 0, "{failed} request(s) failed");
+    println!("all {} model id(s) answered", expected.len());
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if let Some(models_dir) = flags.get("models") {
+        return cmd_serve_models(flags, models_dir);
+    }
     let n: usize = flag(flags, "requests", 64);
     let dir = flags
         .get("artifacts")

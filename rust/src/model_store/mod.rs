@@ -1,0 +1,32 @@
+//! Layer-2.5 model artifact store: durable compressed model artifacts and
+//! the multi-model registry the coordinator serves from.
+//!
+//! The paper's premise (§2.1) is that weight-shared models *live
+//! compressed*: pruning → K-means weight sharing → Huffman coding of the
+//! bin indices is what makes a decoder-table accelerator viable at all.
+//! This module makes that the system's storage story:
+//!
+//! * [`format`] — the `.pasm` binary artifact: versioned header, per-layer
+//!   codebooks + Huffman-coded bin-index streams (consuming
+//!   [`crate::quant::huffman`]), fixed-point metadata, and CRC-32
+//!   integrity.  `pack` → `load` round-trips an
+//!   [`crate::cnn::network::EncodedCnn`] bit-exactly; corrupt or truncated
+//!   files are typed errors, never panics.
+//! * [`registry`] — [`ModelRegistry`]: many named model variants
+//!   (different bin counts, weight widths, even architectures) held
+//!   concurrently behind an atomically swapped snapshot with a lock-free
+//!   generation fast path; entries lazily compile to
+//!   [`crate::cnn::plan::CompiledCnn`] plans on first use; a poll-based
+//!   directory watcher hot-swaps artifacts dropped into the models dir
+//!   with zero downtime.
+//!
+//! The serving stack threads model identity end to end: requests carry a
+//! model id, the coordinator batches per model, and
+//! [`crate::coordinator::Engine`] keys its per-model executables on the
+//! registry generation so a swap invalidates exactly the stale state.
+
+pub mod format;
+pub mod registry;
+
+pub use format::{load, load_file, pack, raw_dense_bytes, save_file};
+pub use registry::{ModelEntry, ModelRegistry, SourceMeta, SyncReport};

@@ -1,0 +1,450 @@
+//! Multi-model registry: many named model variants, atomically
+//! hot-swappable, each lazily compiled to a [`CompiledCnn`] plan.
+//!
+//! The registry holds an immutable **snapshot** (`name → ModelEntry`)
+//! behind a mutex that is only ever taken to *clone or swap an `Arc`* —
+//! every swap builds a fresh map and publishes it with a single pointer
+//! store, so readers never observe a half-updated registry and executing
+//! batches keep the old snapshot alive through their own `Arc`s.  The
+//! steady-state read path is **lock-free**: a monotonically increasing
+//! [`ModelRegistry::generation`] counter (one atomic load) tells the
+//! serving engine whether its cached [`ModelEntry`] handles are still
+//! current; only an actual change forces a re-resolve through the lock.
+//!
+//! [`ModelRegistry::sync_dir`] reconciles the registry against a models
+//! directory of `.pasm` artifacts (new file → added, changed mtime/len →
+//! reloaded + generation bump, file gone → removed); a parse failure —
+//! e.g. a torn half-copied artifact — keeps the previous version serving
+//! and reports the error instead of dropping the model.
+//! [`ModelRegistry::watch`] runs that reconcile on a poll interval from a
+//! background thread, which is how a new artifact dropped into the models
+//! dir goes live with zero coordinator restarts.
+
+use crate::cnn::network::EncodedCnn;
+use crate::cnn::plan::CompiledCnn;
+use crate::model_store::format;
+use crate::quant::fixed::QFormat;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime};
+
+/// Where a registry entry came from on disk (for change detection).
+#[derive(Clone, Debug)]
+pub struct SourceMeta {
+    pub path: PathBuf,
+    pub len: u64,
+    pub mtime: Option<SystemTime>,
+}
+
+/// One loaded model variant: the encoded network plus lazily compiled
+/// execution plans (one per fixed-point image format requested).
+#[derive(Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub enc: Arc<EncodedCnn>,
+    /// Registry generation at which this entry was (re)loaded; engines key
+    /// their per-model executables on it.
+    pub generation: u64,
+    /// Artifact provenance; `None` for programmatically inserted models.
+    pub source: Option<SourceMeta>,
+    plans: Mutex<HashMap<QFormat, Arc<CompiledCnn>>>,
+}
+
+impl ModelEntry {
+    fn new(name: String, enc: EncodedCnn, generation: u64, source: Option<SourceMeta>) -> Self {
+        ModelEntry {
+            name,
+            enc: Arc::new(enc),
+            generation,
+            source,
+            plans: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The compiled plan for image format `iq`, built on first use and
+    /// shared by every executable of this entry thereafter.
+    pub fn plan(&self, iq: QFormat) -> Result<Arc<CompiledCnn>> {
+        let mut plans = self.plans.lock().unwrap();
+        if let Some(p) = plans.get(&iq) {
+            return Ok(Arc::clone(p));
+        }
+        let compiled = CompiledCnn::compile(&self.enc, iq)
+            .with_context(|| format!("compile plan for model '{}'", self.name))?;
+        let compiled = Arc::new(compiled);
+        plans.insert(iq, Arc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    /// Artifact size on disk, if this entry was loaded from a file.
+    pub fn artifact_bytes(&self) -> Option<u64> {
+        self.source.as_ref().map(|s| s.len)
+    }
+}
+
+type Snapshot = BTreeMap<String, Arc<ModelEntry>>;
+
+/// What one [`ModelRegistry::sync_dir`] reconcile changed.
+#[derive(Clone, Debug, Default)]
+pub struct SyncReport {
+    pub added: Vec<String>,
+    pub updated: Vec<String>,
+    pub removed: Vec<String>,
+    /// Artifacts that failed to load (path, error); the previous version
+    /// of the model, if any, keeps serving.
+    pub errors: Vec<(PathBuf, String)>,
+}
+
+impl SyncReport {
+    pub fn changed(&self) -> bool {
+        !self.added.is_empty() || !self.updated.is_empty() || !self.removed.is_empty()
+    }
+}
+
+/// A concurrently readable, atomically hot-swappable set of named models.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    snapshot: Mutex<Arc<Snapshot>>,
+    generation: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// Create a registry pre-loaded from every `.pasm` artifact in `dir`.
+    pub fn load_dir(dir: &Path) -> Result<ModelRegistry> {
+        let reg = ModelRegistry::new();
+        reg.sync_dir(dir)?;
+        Ok(reg)
+    }
+
+    /// Monotonic change counter: bumped on every insert, reload, or
+    /// removal.  A single atomic load — the lock-free fast path engines
+    /// poll per batch to decide whether their cached entries are current.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Resolve a model by name (clones the entry handle out of the
+    /// current snapshot).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.snapshot.lock().unwrap().get(name).cloned()
+    }
+
+    /// All model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.snapshot.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.snapshot.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The default model: alphabetically first (deterministic across
+    /// restarts for a given models dir).
+    pub fn default_name(&self) -> Option<String> {
+        self.snapshot.lock().unwrap().keys().next().cloned()
+    }
+
+    /// Insert (or hot-swap) a model programmatically.  Returns the new
+    /// registry generation.
+    pub fn insert(&self, name: &str, enc: EncodedCnn) -> u64 {
+        let mut guard = self.snapshot.lock().unwrap();
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut next = (**guard).clone();
+        next.insert(
+            name.to_string(),
+            Arc::new(ModelEntry::new(name.to_string(), enc, generation, None)),
+        );
+        *guard = Arc::new(next);
+        generation
+    }
+
+    /// Remove a model by name; returns whether it existed.
+    pub fn remove(&self, name: &str) -> bool {
+        let mut guard = self.snapshot.lock().unwrap();
+        if !guard.contains_key(name) {
+            return false;
+        }
+        self.generation.fetch_add(1, Ordering::SeqCst);
+        let mut next = (**guard).clone();
+        next.remove(name);
+        *guard = Arc::new(next);
+        true
+    }
+
+    /// Load one artifact file as model `file_stem` (hot-swapping any
+    /// existing model of that name).  Returns the model name.
+    pub fn load_file(&self, path: &Path) -> Result<String> {
+        let name = artifact_name(path)
+            .with_context(|| format!("{} has no usable file stem", path.display()))?;
+        let enc = format::load_file(path)?;
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("stat artifact {}", path.display()))?;
+        let source = SourceMeta {
+            path: path.to_path_buf(),
+            len: meta.len(),
+            mtime: meta.modified().ok(),
+        };
+        let mut guard = self.snapshot.lock().unwrap();
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut next = (**guard).clone();
+        next.insert(
+            name.clone(),
+            Arc::new(ModelEntry::new(name.clone(), enc, generation, Some(source))),
+        );
+        *guard = Arc::new(next);
+        Ok(name)
+    }
+
+    /// Reconcile against the `.pasm` artifacts in `dir`: load new and
+    /// changed files, drop models whose artifact vanished, keep
+    /// programmatic entries untouched.  Unparseable artifacts (e.g. a
+    /// half-written file the watcher raced) leave the previous version
+    /// serving and are reported in [`SyncReport::errors`].
+    pub fn sync_dir(&self, dir: &Path) -> Result<SyncReport> {
+        let mut report = SyncReport::default();
+        let mut files: BTreeMap<String, SourceMeta> = BTreeMap::new();
+        let rd = std::fs::read_dir(dir)
+            .with_context(|| format!("read models dir {}", dir.display()))?;
+        for entry in rd {
+            let entry = entry.with_context(|| format!("list models dir {}", dir.display()))?;
+            let path = entry.path();
+            let Some(name) = artifact_name(&path) else { continue };
+            match entry.metadata() {
+                Ok(m) => {
+                    files.insert(
+                        name,
+                        SourceMeta { path, len: m.len(), mtime: m.modified().ok() },
+                    );
+                }
+                Err(e) => report.errors.push((path, e.to_string())),
+            }
+        }
+
+        let mut guard = self.snapshot.lock().unwrap();
+        let current = Arc::clone(&guard);
+        let mut next: Snapshot = BTreeMap::new();
+        for (name, entry) in current.iter() {
+            match &entry.source {
+                // programmatic entries are not governed by the directory
+                None => {
+                    next.insert(name.clone(), Arc::clone(entry));
+                }
+                Some(src) if !files.contains_key(name) => {
+                    if src.path.parent() == Some(dir) {
+                        // this dir owned the artifact and it vanished
+                        report.removed.push(name.clone());
+                    } else {
+                        // loaded from elsewhere; this dir does not govern it
+                        next.insert(name.clone(), Arc::clone(entry));
+                    }
+                }
+                // present in the dir scan: reconciled in the loop below
+                Some(_) => {}
+            }
+        }
+        for (name, meta) in files {
+            if let Some(old) = current.get(&name) {
+                if let Some(src) = &old.source {
+                    if src.path == meta.path && src.len == meta.len && src.mtime == meta.mtime {
+                        next.insert(name, Arc::clone(old));
+                        continue;
+                    }
+                }
+            }
+            match format::load_file(&meta.path) {
+                Ok(enc) => {
+                    let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+                    if current.contains_key(&name) {
+                        report.updated.push(name.clone());
+                    } else {
+                        report.added.push(name.clone());
+                    }
+                    next.insert(
+                        name.clone(),
+                        Arc::new(ModelEntry::new(name, enc, generation, Some(meta))),
+                    );
+                }
+                Err(e) => {
+                    report.errors.push((meta.path.clone(), format!("{e:#}")));
+                    if let Some(old) = current.get(&name) {
+                        next.insert(name, Arc::clone(old));
+                    }
+                }
+            }
+        }
+        if !report.removed.is_empty() {
+            self.generation.fetch_add(1, Ordering::SeqCst);
+        }
+        *guard = Arc::new(next);
+        Ok(report)
+    }
+
+    /// Spawn a background thread that [`ModelRegistry::sync_dir`]s every
+    /// `interval`.  The thread holds only a `Weak` handle: it exits when
+    /// the last `Arc<ModelRegistry>` drops (or after
+    /// [`ModelRegistry::stop_watching`]), so watching never leaks the
+    /// registry.  Call on an `Arc`: `registry.watch(dir, interval)?`.
+    pub fn watch(self: &Arc<Self>, dir: impl Into<PathBuf>, interval: Duration) -> Result<()> {
+        let weak = Arc::downgrade(self);
+        let dir = dir.into();
+        std::thread::Builder::new()
+            .name("pasm-model-watcher".into())
+            .spawn(move || loop {
+                std::thread::sleep(interval);
+                let Some(reg) = weak.upgrade() else { return };
+                if reg.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Err(e) = reg.sync_dir(&dir) {
+                    eprintln!("model watcher: {e:#}");
+                }
+            })
+            .context("spawn model watcher thread")?;
+        Ok(())
+    }
+
+    /// Ask any watcher threads to exit at their next poll tick.
+    pub fn stop_watching(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Model name for an artifact path: the file stem of `*.pasm` files.
+fn artifact_name(path: &Path) -> Option<String> {
+    if path.extension().and_then(|e| e.to_str()) != Some("pasm") {
+        return None;
+    }
+    path.file_stem().and_then(|s| s.to_str()).map(str::to_string)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::Rng;
+    use crate::cnn::network::DigitsCnn;
+
+    fn encoded(seed: u64, bins: usize) -> EncodedCnn {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(seed);
+        let params = arch.init(&mut rng);
+        EncodedCnn::encode(arch, &params, bins, QFormat::W16)
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pasm_reg_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn insert_get_swap_bumps_generation() {
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.generation(), 0);
+        assert!(reg.is_empty());
+        let g1 = reg.insert("a", encoded(1, 4));
+        assert_eq!(g1, 1);
+        let first = reg.get("a").unwrap();
+        assert_eq!(first.generation, 1);
+        // hot-swap the same name: new entry, new generation
+        let g2 = reg.insert("a", encoded(2, 8));
+        assert_eq!(g2, 2);
+        let second = reg.get("a").unwrap();
+        assert_eq!(second.generation, 2);
+        assert_eq!(second.enc.conv1.codebook.bins(), 8);
+        // the old handle stays alive and unchanged for in-flight work
+        assert_eq!(first.enc.conv1.codebook.bins(), 4);
+        assert!(reg.get("missing").is_none());
+        assert!(reg.remove("a"));
+        assert!(!reg.remove("a"));
+        assert_eq!(reg.generation(), 3);
+    }
+
+    #[test]
+    fn plans_are_cached_per_format() {
+        let reg = ModelRegistry::new();
+        reg.insert("m", encoded(3, 8));
+        let entry = reg.get("m").unwrap();
+        let p1 = entry.plan(QFormat::IMAGE32).unwrap();
+        let p2 = entry.plan(QFormat::IMAGE32).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "same format must share one plan");
+        let p3 = entry.plan(QFormat::new(16, 8)).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3), "different formats compile separately");
+    }
+
+    #[test]
+    fn sync_dir_adds_updates_removes() {
+        let dir = tmpdir("sync");
+        let reg = ModelRegistry::new();
+        reg.insert("programmatic", encoded(4, 4));
+
+        format::save_file(&dir.join("a.pasm"), &encoded(5, 4)).unwrap();
+        format::save_file(&dir.join("b.pasm"), &encoded(6, 8)).unwrap();
+        let r = reg.sync_dir(&dir).unwrap();
+        assert_eq!(r.added, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(reg.names(), vec!["a", "b", "programmatic"]);
+        assert_eq!(reg.default_name().as_deref(), Some("a"));
+
+        // unchanged files are not reloaded
+        let before = reg.generation();
+        let r = reg.sync_dir(&dir).unwrap();
+        assert!(!r.changed(), "{r:?}");
+        assert_eq!(reg.generation(), before);
+
+        // overwrite one artifact -> update + generation bump
+        format::save_file(&dir.join("a.pasm"), &encoded(7, 16)).unwrap();
+        let r = reg.sync_dir(&dir).unwrap();
+        assert_eq!(r.updated, vec!["a".to_string()]);
+        assert!(reg.generation() > before);
+        assert_eq!(reg.get("a").unwrap().enc.conv1.codebook.bins(), 16);
+
+        // delete one -> removed; programmatic entry survives
+        std::fs::remove_file(dir.join("b.pasm")).unwrap();
+        let r = reg.sync_dir(&dir).unwrap();
+        assert_eq!(r.removed, vec!["b".to_string()]);
+        assert_eq!(reg.names(), vec!["a", "programmatic"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_artifact_keeps_previous_version() {
+        let dir = tmpdir("corrupt");
+        let reg = ModelRegistry::new();
+        format::save_file(&dir.join("m.pasm"), &encoded(8, 8)).unwrap();
+        reg.sync_dir(&dir).unwrap();
+        let old = reg.get("m").unwrap();
+
+        std::fs::write(dir.join("m.pasm"), b"garbage, not an artifact").unwrap();
+        let r = reg.sync_dir(&dir).unwrap();
+        assert_eq!(r.errors.len(), 1, "{r:?}");
+        let kept = reg.get("m").expect("previous version must keep serving");
+        assert!(Arc::ptr_eq(&old, &kept));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watcher_picks_up_new_artifacts() {
+        let dir = tmpdir("watch");
+        let reg = Arc::new(ModelRegistry::new());
+        reg.watch(&dir, Duration::from_millis(10)).unwrap();
+        format::save_file(&dir.join("late.pasm"), &encoded(9, 4)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while reg.get("late").is_none() {
+            assert!(std::time::Instant::now() < deadline, "watcher never loaded the artifact");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        reg.stop_watching();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -9,7 +9,82 @@
 //!
 //! Canonical codes: only the code lengths are stored (B entries), the
 //! codebook is reconstructed deterministically — the form a hardware
-//! decoder table would use.
+//! decoder table would use, and the form the `.pasm` model artifact
+//! ([`crate::model_store::format`]) persists on disk.  Because decoder
+//! input now arrives from disk, every entry point returns a typed
+//! [`HuffmanError`] instead of panicking: degenerate alphabets, corrupt
+//! length tables (Kraft violations), exhausted or undecodable bitstreams
+//! are all recoverable errors.
+
+use std::fmt;
+
+/// Typed failure modes of Huffman construction and (de)coding.
+///
+/// Decoder input comes from disk artifacts, so none of these may panic:
+/// a corrupt file must surface as an error the caller can report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HuffmanError {
+    /// `build` was given zero symbols.
+    EmptyAlphabet,
+    /// `build` was given more symbols than a `u16` index can address.
+    AlphabetTooLarge { symbols: usize },
+    /// Every frequency was zero — there is nothing to code.
+    EmptyHistogram,
+    /// A code length exceeded the 32-bit decoder limit (pathologically
+    /// skewed histogram, or a corrupt on-disk length table).
+    CodeTooDeep { length: u32 },
+    /// The length table violates the Kraft inequality (over-subscribed
+    /// code space — not a prefix code; corrupt length table).
+    KraftViolation,
+    /// `encode` met a symbol whose frequency was zero at build time.
+    UnseenSymbol { symbol: u16 },
+    /// `encode` met a symbol outside the alphabet.
+    SymbolOutOfRange { symbol: u16, alphabet: usize },
+    /// `decode` ran off the end of the bitstream mid-symbol.
+    StreamExhausted { decoded: usize, expected: usize },
+    /// `decode` consumed 32 bits without matching any codeword (corrupt
+    /// stream or mismatched code).
+    Undecodable { decoded: usize },
+    /// A serialized bitstream's byte length does not match its bit count.
+    BitLengthMismatch { bits: usize, bytes: usize },
+}
+
+impl fmt::Display for HuffmanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HuffmanError::EmptyAlphabet => write!(f, "huffman: empty alphabet"),
+            HuffmanError::AlphabetTooLarge { symbols } => {
+                write!(f, "huffman: {symbols} symbols exceed the u16 index space")
+            }
+            HuffmanError::EmptyHistogram => {
+                write!(f, "huffman: all frequencies are zero")
+            }
+            HuffmanError::CodeTooDeep { length } => {
+                write!(f, "huffman: code length {length} exceeds the 32-bit decoder limit")
+            }
+            HuffmanError::KraftViolation => {
+                write!(f, "huffman: length table violates the Kraft inequality (corrupt)")
+            }
+            HuffmanError::UnseenSymbol { symbol } => {
+                write!(f, "huffman: symbol {symbol} has no code (frequency was 0)")
+            }
+            HuffmanError::SymbolOutOfRange { symbol, alphabet } => {
+                write!(f, "huffman: symbol {symbol} outside alphabet of {alphabet}")
+            }
+            HuffmanError::StreamExhausted { decoded, expected } => {
+                write!(f, "huffman: bitstream exhausted after {decoded}/{expected} symbols")
+            }
+            HuffmanError::Undecodable { decoded } => {
+                write!(f, "huffman: no codeword matched after symbol {decoded} (corrupt stream)")
+            }
+            HuffmanError::BitLengthMismatch { bits, bytes } => {
+                write!(f, "huffman: bit length {bits} does not fit {bytes} bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HuffmanError {}
 
 /// A canonical Huffman code over `B` symbols.
 #[derive(Clone, Debug)]
@@ -20,19 +95,28 @@ pub struct HuffmanCode {
     codes: Vec<u32>,
 }
 
-/// Build a Huffman code from symbol frequencies (length-limited to 32).
-pub fn build(freqs: &[usize]) -> HuffmanCode {
+/// Build a Huffman code from symbol frequencies.
+///
+/// Typed errors on degenerate inputs: an empty alphabet, an alphabet too
+/// large for `u16` symbols, an all-zero histogram, or a histogram so
+/// skewed the optimal code exceeds 32 bits (the decoder table limit).
+pub fn build(freqs: &[usize]) -> Result<HuffmanCode, HuffmanError> {
     let n = freqs.len();
-    assert!(n >= 1, "empty alphabet");
+    if n == 0 {
+        return Err(HuffmanError::EmptyAlphabet);
+    }
+    if n > (u16::MAX as usize) + 1 {
+        return Err(HuffmanError::AlphabetTooLarge { symbols: n });
+    }
     let alive: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
     let mut lengths = vec![0u8; n];
 
     match alive.len() {
-        0 => {}
+        0 => return Err(HuffmanError::EmptyHistogram),
         1 => lengths[alive[0]] = 1, // degenerate: one symbol still needs a bit
         _ => {
-            // package-merge-free simple heap Huffman (depths stay << 32 for
-            // realistic bin histograms)
+            // simple heap Huffman; depths stay far below 32 for realistic
+            // bin histograms, and deeper trees are rejected below
             #[derive(PartialEq, Eq)]
             struct Node {
                 weight: usize,
@@ -55,54 +139,47 @@ pub fn build(freqs: &[usize]) -> HuffmanCode {
             for &i in &alive {
                 heap.push(Node { weight: freqs[i], id: i });
             }
-            let mut next_id = n;
             while heap.len() > 1 {
                 let a = heap.pop().unwrap();
                 let b = heap.pop().unwrap();
+                let p = parent.len();
                 parent.push(usize::MAX);
-                let p = next_id;
-                next_id += 1;
-                if a.id < parent.len() {
-                    parent[a.id] = p;
-                }
-                if b.id < parent.len() {
-                    parent[b.id] = p;
-                }
-                // ensure capacity for ids beyond current len
-                while parent.len() <= a.id.max(b.id) {
-                    parent.push(usize::MAX);
-                }
                 parent[a.id] = p;
                 parent[b.id] = p;
-                heap.push(Node { weight: a.weight + b.weight, id: p });
+                heap.push(Node { weight: a.weight.saturating_add(b.weight), id: p });
             }
             let root = heap.pop().unwrap().id;
             for &i in &alive {
-                let mut d = 0u8;
+                let mut d = 0u32;
                 let mut cur = i;
                 while cur != root {
                     cur = parent[cur];
                     d += 1;
                 }
-                lengths[i] = d.max(1);
+                if d > 32 {
+                    return Err(HuffmanError::CodeTooDeep { length: d });
+                }
+                lengths[i] = (d as u8).max(1);
             }
         }
     }
 
-    HuffmanCode { codes: canonical_codes(&lengths), lengths }
+    Ok(HuffmanCode { codes: canonical_codes(&lengths), lengths })
 }
 
 /// Assign canonical codewords from lengths (shorter codes first, then
-/// symbol order).
+/// symbol order).  Computed in u64 so a maximal 32-bit code (which a
+/// Kraft-valid on-disk length table may legitimately declare) cannot
+/// overflow the shift.
 fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
     let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
     order.sort_by_key(|&i| (lengths[i], i));
     let mut codes = vec![0u32; lengths.len()];
-    let mut code = 0u32;
+    let mut code = 0u64;
     let mut prev_len = 0u8;
     for &i in &order {
         code <<= lengths[i] - prev_len;
-        codes[i] = code;
+        codes[i] = code as u32;
         code += 1;
         prev_len = lengths[i];
     }
@@ -110,7 +187,7 @@ fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
 }
 
 /// A packed bitstream.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct BitStream {
     bytes: Vec<u8>,
     bits: usize,
@@ -119,6 +196,22 @@ pub struct BitStream {
 impl BitStream {
     pub fn len_bits(&self) -> usize {
         self.bits
+    }
+
+    /// The packed bytes (MSB-first within each byte); the final byte is
+    /// zero-padded.  Together with [`BitStream::len_bits`] this is the
+    /// serialized form the model artifact stores.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Rebuild a bitstream from its serialized form; `bytes.len()` must be
+    /// exactly `ceil(bits / 8)`.
+    pub fn from_bytes(bytes: Vec<u8>, bits: usize) -> Result<BitStream, HuffmanError> {
+        if bytes.len() != bits.div_ceil(8) {
+            return Err(HuffmanError::BitLengthMismatch { bits, bytes: bytes.len() });
+        }
+        Ok(BitStream { bytes, bits })
     }
 
     fn push(&mut self, code: u32, len: u8) {
@@ -140,6 +233,35 @@ impl BitStream {
 }
 
 impl HuffmanCode {
+    /// Reconstruct a canonical code from its length table alone (the form
+    /// a decoder loads from disk).  Rejects corrupt tables: lengths over
+    /// 32 bits, or sets violating the Kraft inequality (not a prefix
+    /// code).  An all-zero table is a valid *empty* code — it decodes
+    /// only zero-symbol streams.
+    pub fn from_lengths(lengths: &[u8]) -> Result<HuffmanCode, HuffmanError> {
+        if lengths.is_empty() {
+            return Err(HuffmanError::EmptyAlphabet);
+        }
+        if lengths.len() > (u16::MAX as usize) + 1 {
+            return Err(HuffmanError::AlphabetTooLarge { symbols: lengths.len() });
+        }
+        // Kraft: sum of 2^-len over coded symbols must not exceed 1.
+        // Computed in units of 2^-32 to stay in integers.
+        let mut kraft: u64 = 0;
+        for &l in lengths {
+            if l > 32 {
+                return Err(HuffmanError::CodeTooDeep { length: l as u32 });
+            }
+            if l > 0 {
+                kraft += 1u64 << (32 - l as u32);
+            }
+        }
+        if kraft > 1u64 << 32 {
+            return Err(HuffmanError::KraftViolation);
+        }
+        Ok(HuffmanCode { codes: canonical_codes(lengths), lengths: lengths.to_vec() })
+    }
+
     /// Mean code length under the given frequency distribution (bits).
     pub fn mean_bits(&self, freqs: &[usize]) -> f64 {
         let total: usize = freqs.iter().sum();
@@ -155,18 +277,28 @@ impl HuffmanCode {
     }
 
     /// Encode a symbol stream.
-    pub fn encode(&self, symbols: &[u16]) -> BitStream {
+    pub fn encode(&self, symbols: &[u16]) -> Result<BitStream, HuffmanError> {
         let mut bs = BitStream::default();
         for &s in symbols {
-            let s = s as usize;
-            assert!(self.lengths[s] > 0, "symbol {s} has no code (freq 0)");
-            bs.push(self.codes[s], self.lengths[s]);
+            let i = s as usize;
+            if i >= self.lengths.len() {
+                return Err(HuffmanError::SymbolOutOfRange {
+                    symbol: s,
+                    alphabet: self.lengths.len(),
+                });
+            }
+            if self.lengths[i] == 0 {
+                return Err(HuffmanError::UnseenSymbol { symbol: s });
+            }
+            bs.push(self.codes[i], self.lengths[i]);
         }
-        bs
+        Ok(bs)
     }
 
-    /// Decode `count` symbols from a bitstream.
-    pub fn decode(&self, bs: &BitStream, count: usize) -> Vec<u16> {
+    /// Decode `count` symbols from a bitstream.  Corrupt streams surface
+    /// as [`HuffmanError::StreamExhausted`] / [`HuffmanError::Undecodable`],
+    /// never as a panic.
+    pub fn decode(&self, bs: &BitStream, count: usize) -> Result<Vec<u16>, HuffmanError> {
         // build (length, code) -> symbol lookup
         let mut table: std::collections::HashMap<(u8, u32), u16> = Default::default();
         for (i, (&l, &c)) in self.lengths.iter().zip(&self.codes).enumerate() {
@@ -174,13 +306,15 @@ impl HuffmanCode {
                 table.insert((l, c), i as u16);
             }
         }
-        let mut out = Vec::with_capacity(count);
+        let mut out = Vec::with_capacity(count.min(bs.len_bits().max(1)));
         let mut pos = 0usize;
-        for _ in 0..count {
+        for k in 0..count {
             let mut code = 0u32;
             let mut len = 0u8;
             loop {
-                assert!(pos < bs.len_bits(), "bitstream exhausted");
+                if pos >= bs.len_bits() {
+                    return Err(HuffmanError::StreamExhausted { decoded: k, expected: count });
+                }
                 code = (code << 1) | bs.get(pos);
                 pos += 1;
                 len += 1;
@@ -188,10 +322,12 @@ impl HuffmanCode {
                     out.push(sym);
                     break;
                 }
-                assert!(len < 33, "code too long / corrupt stream");
+                if len >= 32 {
+                    return Err(HuffmanError::Undecodable { decoded: k });
+                }
             }
         }
-        out
+        Ok(out)
     }
 }
 
@@ -219,10 +355,10 @@ mod tests {
     #[test]
     fn roundtrip_uniform() {
         let freqs = vec![10usize; 16];
-        let code = build(&freqs);
+        let code = build(&freqs).unwrap();
         let symbols: Vec<u16> = (0..160).map(|i| (i % 16) as u16).collect();
-        let bs = code.encode(&symbols);
-        assert_eq!(code.decode(&bs, symbols.len()), symbols);
+        let bs = code.encode(&symbols).unwrap();
+        assert_eq!(code.decode(&bs, symbols.len()).unwrap(), symbols);
         // uniform over 16 symbols -> exactly 4 bits each
         assert!((code.mean_bits(&freqs) - 4.0).abs() < 1e-9);
     }
@@ -231,7 +367,7 @@ mod tests {
     fn skewed_beats_fixed_width() {
         // heavily skewed histogram (like K-means bins over gaussian weights)
         let freqs = vec![1000usize, 500, 250, 120, 60, 30, 20, 10, 4, 2, 1, 1, 1, 1, 1, 1];
-        let code = build(&freqs);
+        let code = build(&freqs).unwrap();
         let mean = code.mean_bits(&freqs);
         assert!(mean < 4.0, "mean {mean} should beat the 4-bit fixed code");
         // and within 1 bit of entropy
@@ -243,29 +379,29 @@ mod tests {
     #[test]
     fn roundtrip_skewed_stream() {
         let freqs = vec![100usize, 50, 10, 5, 2, 1, 1, 1];
-        let code = build(&freqs);
+        let code = build(&freqs).unwrap();
         let mut symbols = Vec::new();
         for (s, &f) in freqs.iter().enumerate() {
-            symbols.extend(std::iter::repeat(s as u16).take(f));
+            symbols.resize(symbols.len() + f, s as u16);
         }
-        let bs = code.encode(&symbols);
-        assert_eq!(code.decode(&bs, symbols.len()), symbols);
+        let bs = code.encode(&symbols).unwrap();
+        assert_eq!(code.decode(&bs, symbols.len()).unwrap(), symbols);
     }
 
     #[test]
     fn single_symbol_alphabet() {
         let freqs = vec![0usize, 42, 0, 0];
-        let code = build(&freqs);
+        let code = build(&freqs).unwrap();
         let symbols = vec![1u16; 42];
-        let bs = code.encode(&symbols);
+        let bs = code.encode(&symbols).unwrap();
         assert_eq!(bs.len_bits(), 42); // 1 bit each
-        assert_eq!(code.decode(&bs, 42), symbols);
+        assert_eq!(code.decode(&bs, 42).unwrap(), symbols);
     }
 
     #[test]
     fn kraft_inequality_holds() {
         let freqs = vec![7usize, 3, 3, 2, 1, 1, 0, 5];
-        let code = build(&freqs);
+        let code = build(&freqs).unwrap();
         let kraft: f64 = code
             .lengths
             .iter()
@@ -276,18 +412,92 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn encoding_unseen_symbol_panics() {
+    fn degenerate_inputs_are_typed_errors() {
+        assert!(matches!(build(&[]), Err(HuffmanError::EmptyAlphabet)));
+        assert!(matches!(build(&[0, 0, 0]), Err(HuffmanError::EmptyHistogram)));
+        let huge = vec![1usize; (u16::MAX as usize) + 2];
+        assert!(matches!(build(&huge), Err(HuffmanError::AlphabetTooLarge { .. })));
+    }
+
+    #[test]
+    fn encoding_unseen_symbol_is_error() {
         let freqs = vec![5usize, 0];
-        let code = build(&freqs);
-        code.encode(&[1u16]);
+        let code = build(&freqs).unwrap();
+        assert_eq!(code.encode(&[1u16]), Err(HuffmanError::UnseenSymbol { symbol: 1 }));
+        assert_eq!(
+            code.encode(&[9u16]),
+            Err(HuffmanError::SymbolOutOfRange { symbol: 9, alphabet: 2 })
+        );
+    }
+
+    #[test]
+    fn decode_corrupt_streams_error_not_panic() {
+        let freqs = vec![8usize, 4, 2, 1, 1];
+        let code = build(&freqs).unwrap();
+        let bs = code.encode(&[0u16, 1, 2, 3, 4]).unwrap();
+        // asking for more symbols than the stream holds
+        assert!(matches!(
+            code.decode(&bs, 100),
+            Err(HuffmanError::StreamExhausted { .. })
+        ));
+        // a code with one deep symbol: feed it bits that never match
+        let deep = HuffmanCode::from_lengths(&[1, 0, 0]).unwrap();
+        let junk = BitStream::from_bytes(vec![0xFF; 8], 64).unwrap();
+        assert!(matches!(
+            deep.decode(&junk, 2),
+            Err(HuffmanError::Undecodable { .. }) | Err(HuffmanError::StreamExhausted { .. })
+        ));
+    }
+
+    #[test]
+    fn from_lengths_reconstructs_canonical_codes() {
+        let freqs = vec![100usize, 50, 10, 5, 2, 1, 1, 1];
+        let built = build(&freqs).unwrap();
+        let rebuilt = HuffmanCode::from_lengths(&built.lengths).unwrap();
+        assert_eq!(built.lengths, rebuilt.lengths);
+        assert_eq!(built.codes, rebuilt.codes);
+        let stream: Vec<u16> = (0..8).collect();
+        let bs = built.encode(&stream).unwrap();
+        assert_eq!(rebuilt.decode(&bs, stream.len()).unwrap(), stream);
+    }
+
+    #[test]
+    fn from_lengths_rejects_corrupt_tables() {
+        // over-subscribed code space: three 1-bit codes
+        assert!(matches!(
+            HuffmanCode::from_lengths(&[1, 1, 1]),
+            Err(HuffmanError::KraftViolation)
+        ));
+        assert!(matches!(
+            HuffmanCode::from_lengths(&[33]),
+            Err(HuffmanError::CodeTooDeep { .. })
+        ));
+        assert!(matches!(HuffmanCode::from_lengths(&[]), Err(HuffmanError::EmptyAlphabet)));
+        // an all-zero table is a valid empty code
+        let empty = HuffmanCode::from_lengths(&[0, 0]).unwrap();
+        assert_eq!(empty.decode(&BitStream::default(), 0).unwrap(), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn bitstream_serialization_roundtrip() {
+        let freqs = vec![10usize, 7, 3, 1];
+        let code = build(&freqs).unwrap();
+        let symbols = vec![0u16, 1, 2, 3, 0, 0, 1];
+        let bs = code.encode(&symbols).unwrap();
+        let rt = BitStream::from_bytes(bs.as_bytes().to_vec(), bs.len_bits()).unwrap();
+        assert_eq!(rt, bs);
+        assert_eq!(code.decode(&rt, symbols.len()).unwrap(), symbols);
+        assert!(matches!(
+            BitStream::from_bytes(vec![0u8; 2], 64),
+            Err(HuffmanError::BitLengthMismatch { .. })
+        ));
     }
 
     #[test]
     fn deterministic_codes() {
         let freqs = vec![3usize, 3, 2, 2];
-        let a = build(&freqs);
-        let b = build(&freqs);
+        let a = build(&freqs).unwrap();
+        let b = build(&freqs).unwrap();
         assert_eq!(a.lengths, b.lengths);
         assert_eq!(a.codes, b.codes);
     }

@@ -21,4 +21,5 @@ pub mod prune;
 
 pub use codebook::{encode_weights, Codebook, EncodedWeights};
 pub use fixed::QFormat;
+pub use huffman::{HuffmanCode, HuffmanError};
 pub use kmeans::{kmeans_1d, KmeansResult};

@@ -168,26 +168,143 @@ fn cost_model_decoupled_from_backend() {
     assert!(pasm > ws, "pasm {pasm} cycles vs ws {ws}");
 }
 
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn variant_net(seed: u64, bins: usize) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+}
+
 #[test]
-#[allow(deprecated)]
-fn deprecated_start_shim_still_serves() {
-    // the old free-argument constructor must keep compiling and serving
-    // (natively when the pjrt feature is off)
-    let enc = encoded_net(9);
-    let reference = enc.clone();
-    let coord = Coordinator::start("artifacts", enc, BatchPolicy::default());
-    #[cfg(feature = "pjrt")]
-    let coord = match coord {
-        Ok(c) => c,
-        Err(_) => return, // pjrt build without `make artifacts`: startup error is correct
-    };
-    #[cfg(not(feature = "pjrt"))]
-    let coord = coord.expect("shim must serve natively without artifacts");
-    let mut rng = Rng::new(10);
-    let img = render_digit(&mut rng, 1, 0.05);
-    let resp = coord.infer(img.clone()).unwrap();
-    let want = reference.forward(&img, ConvVariant::Pasm);
-    assert_eq!(resp.predicted, pasm_accel::cnn::layer::argmax(&want));
+fn registry_coordinator_routes_two_models_concurrently() {
+    use pasm_accel::model_store::ModelRegistry;
+    use std::sync::Arc;
+
+    let a = variant_net(11, 4);
+    let b = variant_net(12, 16);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("a", a.clone());
+    registry.insert("b", b.clone());
+    let coord = CoordinatorBuilder::new()
+        .registry(Arc::clone(&registry))
+        .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(2)))
+        .build()
+        .unwrap();
+
+    // interleave submissions to both models, holding every receiver so
+    // batches for the two models overlap in the queue
+    let mut rng = Rng::new(5);
+    let mut cases = Vec::new();
+    for i in 0..20usize {
+        let name = if i % 2 == 0 { "a" } else { "b" };
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit_to(name, img.clone()).unwrap();
+        cases.push((name, img, rx));
+    }
+    for (i, (name, img, rx)) in cases.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("no response")
+            .expect("inference failed");
+        assert_eq!(resp.model.as_deref(), Some(name), "request {i}");
+        let reference = if name == "a" { &a } else { &b };
+        let want = reference.forward(&img, ConvVariant::Pasm);
+        assert_eq!(bits(&resp.logits), bits(&want), "request {i} on '{name}'");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.model("a").requests, 10);
+    assert_eq!(m.model("b").requests, 10);
+    assert_eq!(m.requests, 20);
+}
+
+#[test]
+fn hot_swap_takes_effect_without_restart() {
+    use pasm_accel::model_store::ModelRegistry;
+    use std::sync::Arc;
+
+    let v1 = variant_net(13, 4);
+    let v2 = variant_net(14, 16);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", v1.clone());
+    let coord = CoordinatorBuilder::new().registry(Arc::clone(&registry)).build().unwrap();
+
+    let mut rng = Rng::new(6);
+    let img = render_digit(&mut rng, 3, 0.05);
+    let before = coord.infer_model("m", img.clone()).unwrap();
+    assert_eq!(bits(&before.logits), bits(&v1.forward(&img, ConvVariant::Pasm)));
+
+    // swap in the new variant — no rebuild, no restart
+    registry.insert("m", v2.clone());
+    let after = coord.infer_model("m", img.clone()).unwrap();
+    assert_eq!(bits(&after.logits), bits(&v2.forward(&img, ConvVariant::Pasm)));
+}
+
+#[test]
+fn hot_swap_under_load_drops_and_misroutes_nothing() {
+    use pasm_accel::model_store::ModelRegistry;
+    use std::sync::Arc;
+
+    let a = variant_net(15, 4);
+    let b = variant_net(16, 8);
+    let b2 = variant_net(17, 33);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("a", a.clone());
+    registry.insert("b", b.clone());
+    let coord = CoordinatorBuilder::new()
+        .registry(Arc::clone(&registry))
+        .batch_policy(BatchPolicy::new(vec![1, 8], Duration::from_millis(1)))
+        .build()
+        .unwrap();
+
+    let mut rng = Rng::new(7);
+    let mut cases = Vec::new();
+    for i in 0..16usize {
+        let name = if i % 2 == 0 { "a" } else { "b" };
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit_to(name, img.clone()).unwrap();
+        cases.push((name, img, rx));
+    }
+    // swap 'b' while those requests are in flight, then keep submitting
+    registry.insert("b", b2.clone());
+    for i in 16..32usize {
+        let name = if i % 2 == 0 { "a" } else { "b" };
+        let img = render_digit(&mut rng, i % 10, 0.05);
+        let rx = coord.submit_to(name, img.clone()).unwrap();
+        cases.push((name, img, rx));
+    }
+
+    for (i, (name, img, rx)) in cases.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request dropped across the hot swap")
+            .expect("inference failed across the hot swap");
+        assert_eq!(resp.model.as_deref(), Some(name), "request {i}");
+        match name {
+            // 'a' was never swapped: always bit-exact to its weights
+            "a" => {
+                let want = a.forward(&img, ConvVariant::Pasm);
+                assert_eq!(bits(&resp.logits), bits(&want), "request {i} on 'a'");
+            }
+            // 'b' answers with whichever version its batch ran on —
+            // never with 'a', and post-swap submissions get the new one
+            _ => {
+                let old = bits(&b.forward(&img, ConvVariant::Pasm));
+                let new = bits(&b2.forward(&img, ConvVariant::Pasm));
+                let got = bits(&resp.logits);
+                assert!(
+                    got == old || got == new,
+                    "request {i} on 'b' matches neither version"
+                );
+                if i >= 16 {
+                    assert_eq!(got, new, "post-swap request {i} served stale weights");
+                }
+            }
+        }
+    }
 }
 
 #[cfg(feature = "pjrt")]

@@ -80,6 +80,59 @@ fn coordinator_survives_bad_request() {
 }
 
 #[test]
+fn unknown_model_request_fails_cleanly_and_serving_continues() {
+    use pasm_accel::model_store::ModelRegistry;
+    use std::sync::Arc;
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("real", encoded_net(24));
+    let coord = CoordinatorBuilder::new().registry(Arc::clone(&registry)).build().unwrap();
+    let mut rng = Rng::new(24);
+
+    // a request naming a model that does not exist must error, not hang
+    // or kill the worker
+    let img = render_digit(&mut rng, 2, 0.05);
+    let rx = coord.submit_to("ghost", img).unwrap();
+    let resp = rx.recv().expect("coordinator dropped the unknown-model request");
+    let err = resp.expect_err("unknown model must be an error");
+    assert!(err.contains("ghost"), "error should name the model: {err}");
+
+    // and the real model still serves afterwards
+    let ok = coord.infer_model("real", render_digit(&mut rng, 5, 0.05));
+    assert!(ok.is_ok(), "coordinator died after an unknown-model request");
+
+    // a removed model stops serving with a clean error too
+    assert!(registry.remove("real"));
+    let gone = coord.infer_model("real", render_digit(&mut rng, 6, 0.05));
+    assert!(gone.is_err(), "removed model kept serving");
+}
+
+#[test]
+fn registry_builder_requires_nonempty_registry() {
+    use pasm_accel::model_store::ModelRegistry;
+    use std::sync::Arc;
+
+    let err = CoordinatorBuilder::new()
+        .registry(Arc::new(ModelRegistry::new()))
+        .build()
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("empty"),
+        "error should say the registry is empty: {err:#}"
+    );
+}
+
+#[test]
+fn corrupt_artifact_file_is_a_load_error() {
+    let dir = tmpdir("badpasm");
+    let path = dir.join("broken.pasm");
+    std::fs::write(&path, b"PASM but not really").unwrap();
+    let err = pasm_accel::model_store::load_file(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("broken.pasm"), "error should name the file: {msg}");
+}
+
+#[test]
 fn coordinator_survives_kernel_panic() {
     // extreme weights x extreme image overflow the fixed-point kernels'
     // accumulator guards (a panic, by design); the batch must fail with an
@@ -112,7 +165,7 @@ fn coordinator_survives_kernel_panic() {
 #[cfg(feature = "pjrt")]
 mod pjrt_failures {
     use super::*;
-    use pasm_accel::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+    use pasm_accel::coordinator::PjrtBackend;
     use pasm_accel::runtime::Runtime;
 
     #[test]
@@ -181,14 +234,6 @@ mod pjrt_failures {
         let err = CoordinatorBuilder::new()
             .backend(PjrtBackend::new("/nonexistent_dir", enc))
             .build();
-        assert!(err.is_err());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_start_bad_dir_fails_under_pjrt() {
-        let enc = encoded_net(23);
-        let err = Coordinator::start("/nonexistent_dir", enc, BatchPolicy::default());
         assert!(err.is_err());
     }
 }

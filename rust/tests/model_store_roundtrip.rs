@@ -1,0 +1,165 @@
+//! Property suite for the `.pasm` model artifact store: pack → load must
+//! be **bit-exact** (both the f32 and fixed-point forwards agree to the
+//! bit with the source model) across random architectures, bin counts and
+//! fixed-point formats — and corrupted or truncated artifacts must load
+//! as errors, never panics.
+
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::CoordinatorBuilder;
+use pasm_accel::model_store::{self, ModelRegistry};
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::tensor::Tensor;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A random but valid digits-style architecture: even input side so the
+/// 2x2 pool divides evenly, kernel 3, and a pooled side that still fits
+/// the second convolution.
+fn random_arch(rng: &mut Rng) -> DigitsCnn {
+    DigitsCnn {
+        in_side: [8, 10, 12, 14][rng.below(4)],
+        conv1_m: 2 + rng.below(6),
+        conv2_m: 2 + rng.below(10),
+        kernel: 3,
+        classes: 2 + rng.below(9),
+    }
+}
+
+fn random_model(rng: &mut Rng) -> EncodedCnn {
+    let arch = random_arch(rng);
+    let bins = [2usize, 3, 4, 8, 16, 33][rng.below(6)];
+    let wq = [QFormat::W8, QFormat::W16, QFormat::W32, QFormat::new(12, 6)][rng.below(4)];
+    let params = arch.init(rng);
+    EncodedCnn::encode(arch, &params, bins, wq)
+}
+
+#[test]
+fn pack_load_forward_bitexact_over_random_models() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..12u32 {
+        let enc = random_model(&mut rng);
+        let bytes = model_store::pack(&enc).expect("pack");
+        let back = model_store::load(&bytes).expect("load");
+        let side = enc.arch.in_side;
+        for img_i in 0..3u32 {
+            let img = Tensor::from_fn(&[1, side, side], |_| rng.signed());
+            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+                let tag = format!("trial {trial} img {img_i} {variant:?}");
+                assert_eq!(
+                    bits(&enc.forward(&img, variant)),
+                    bits(&back.forward(&img, variant)),
+                    "f32 forward diverged ({tag})"
+                );
+                assert_eq!(
+                    bits(&enc.forward_fx(&img, variant, QFormat::IMAGE32)),
+                    bits(&back.forward_fx(&img, variant, QFormat::IMAGE32)),
+                    "fixed-point forward diverged ({tag})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_is_deterministic() {
+    let mut rng = Rng::new(99);
+    let enc = random_model(&mut rng);
+    let a = model_store::pack(&enc).unwrap();
+    let b = model_store::pack(&enc).unwrap();
+    assert_eq!(a, b, "same model must pack to identical bytes");
+}
+
+#[test]
+fn corrupted_bytes_error_never_panic() {
+    let mut rng = Rng::new(7);
+    let enc = random_model(&mut rng);
+    let bytes = model_store::pack(&enc).unwrap();
+    // dense sweep over the header + start of payload, sparse over the rest
+    for pos in (0..bytes.len().min(64)).chain((64..bytes.len()).step_by(7)) {
+        for flip in [0x01u8, 0x80] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= flip;
+            assert!(
+                model_store::load(&bad).is_err(),
+                "flipped bit {flip:#x} at byte {pos} was not detected"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_files_error_never_panic() {
+    let mut rng = Rng::new(8);
+    let enc = random_model(&mut rng);
+    let bytes = model_store::pack(&enc).unwrap();
+    for keep in (0..bytes.len()).step_by(11).chain([bytes.len() - 1]) {
+        assert!(
+            model_store::load(&bytes[..keep]).is_err(),
+            "truncation to {keep}/{} bytes was accepted",
+            bytes.len()
+        );
+    }
+    // and garbage appended past the declared length is rejected too
+    let mut extended = bytes.clone();
+    extended.extend_from_slice(&[0u8; 9]);
+    assert!(model_store::load(&extended).is_err());
+}
+
+#[test]
+fn artifact_compresses_conv_weights() {
+    // the §2.1 story: a packed artifact is smaller than the raw f32
+    // parameters it encodes, at every swept bin count
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(21);
+    let params = arch.init(&mut rng);
+    for bins in [4usize, 16, 64] {
+        let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
+        let bytes = model_store::pack(&enc).unwrap();
+        let raw = model_store::raw_dense_bytes(&enc);
+        assert!(
+            (bytes.len() as u64) < raw,
+            "bins={bins}: artifact {} bytes vs raw {raw}",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn packed_artifact_serves_bitexact_through_registry_coordinator() {
+    // disk -> registry -> coordinator -> logits must equal the in-memory
+    // model's reference forward bit for bit
+    let dir = tmpdir("serve");
+    let mut rng = Rng::new(31);
+    let arch = DigitsCnn::default();
+    let params = arch.init(&mut rng);
+    let enc = EncodedCnn::encode(arch, &params, 8, QFormat::W16);
+    model_store::save_file(&dir.join("digits.pasm"), &enc).unwrap();
+
+    let registry = Arc::new(ModelRegistry::load_dir(&dir).unwrap());
+    let entry = registry.get("digits").expect("artifact loaded");
+    let on_disk = std::fs::metadata(dir.join("digits.pasm")).unwrap().len();
+    assert_eq!(entry.artifact_bytes(), Some(on_disk));
+
+    let coord = CoordinatorBuilder::new().registry(Arc::clone(&registry)).build().unwrap();
+    assert_eq!(coord.default_model(), Some("digits"));
+    for d in 0..4usize {
+        let img = pasm_accel::cnn::data::render_digit(&mut rng, d, 0.05);
+        let resp = coord.infer(img.clone()).unwrap();
+        assert_eq!(resp.model.as_deref(), Some("digits"));
+        let want = enc.forward(&img, ConvVariant::Pasm);
+        assert_eq!(bits(&resp.logits), bits(&want), "digit {d}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasm_store_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
