@@ -1,0 +1,87 @@
+//! Network serving end to end, in one process: build a registry with two
+//! quantization variants, front it with the TCP serving layer on an
+//! ephemeral port, drive both model ids over real sockets, hot-swap one
+//! variant mid-run, and print the combined metrics frame.
+//!
+//! ```bash
+//! cargo run --release --example net_serving
+//! ```
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder};
+use pasm_accel::model_store::ModelRegistry;
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::serving::{Client, Server, ServerConfig};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn encoded(seed: u64, bins: usize) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+}
+
+fn main() -> anyhow::Result<()> {
+    // model store: two variants of the digits model at different B
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("digits-b8", encoded(1, 8));
+    registry.insert("digits-b16", encoded(2, 16));
+
+    // coordinator + TCP front-end on an ephemeral port
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .registry(Arc::clone(&registry))
+            .batch_policy(BatchPolicy::new(vec![1, 8], Duration::from_millis(2)))
+            .build()?,
+    );
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default())?;
+    let addr = server.local_addr();
+    println!("serving on {addr}");
+
+    // two clients, one per model id, over real sockets
+    let n = 32usize;
+    std::thread::scope(|scope| {
+        for (model, seed) in [("digits-b8", 10u64), ("digits-b16", 20u64)] {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut rng = Rng::new(seed);
+                for i in 0..n {
+                    let img = render_digit(&mut rng, i % 10, 0.05);
+                    let reply = client.infer(Some(model), &img).expect("infer");
+                    assert_eq!(reply.model.as_deref(), Some(model));
+                }
+                println!("client for {model}: {n} replies ok");
+            });
+        }
+    });
+
+    // hot-swap digits-b8 to a new encoding; the next request serves it
+    let mut client = Client::connect(addr)?;
+    let probe = render_digit(&mut Rng::new(3), 7, 0.05);
+    let before = client.infer(Some("digits-b8"), &probe).map_err(|e| anyhow::anyhow!("{e}"))?;
+    registry.insert("digits-b8", encoded(9, 4));
+    let after = client.infer(Some("digits-b8"), &probe).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "hot-swap: logits changed = {} (B=8 -> B=4 re-encode, no restart)",
+        before.logits != after.logits
+    );
+
+    let models = client.list_models().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("models: {:?} (default {:?})", models.models, models.default);
+    let m = client.metrics().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "metrics: backend '{}', {} requests in {} batches; net: {} conns, {} frames in, {} ok",
+        m.backend,
+        m.requests,
+        m.batches,
+        m.net.connections_opened,
+        m.net.frames_received,
+        m.net.requests_ok
+    );
+    for (name, c) in &m.per_model {
+        println!("  model {name}: {} requests in {} batches", c.requests, c.batches);
+    }
+    Ok(())
+}

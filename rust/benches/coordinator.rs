@@ -21,17 +21,26 @@
 //! headline) — the perf trajectory across PRs lives in the committed
 //! history of that file, one snapshot per run.
 //!
+//! A third phase drives the same registry-served model **over real TCP
+//! sockets**: a `serving::net::Server` on an ephemeral port, loaded by
+//! `loadgen::run_open_loop_net` at ~70% of the planned path's measured
+//! capacity.  Its req/s and latency percentiles land in the `net`
+//! section of `BENCH_serving.json`, next to the in-process numbers, so
+//! the wire + framing overhead stays visible across PRs.
+//!
 //! `--smoke` serves only the smallest load (the CI perf-harness check);
 //! the resulting file's `comparison.load` is 64, not the 1024 the
 //! acceptance bar reads — don't commit a smoke file over a full run.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::loadgen::run_open_loop_net;
 use pasm_accel::coordinator::{
     BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend, NativePrecision,
 };
 use pasm_accel::model_store::{self, ModelRegistry};
 use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::serving::{Server, ServerConfig};
 use pasm_accel::tensor::Tensor;
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -52,6 +61,17 @@ struct RunStats {
     mean_occupancy: f64,
     padding_fraction: f64,
     batches: u64,
+}
+
+struct NetStats {
+    load: usize,
+    offered_hz: f64,
+    req_s: f64,
+    p50_us: u64,
+    p90_us: u64,
+    p99_us: u64,
+    overloaded: usize,
+    errors: usize,
 }
 
 struct ArtifactStats {
@@ -156,7 +176,58 @@ fn verify_bitexact(source: &EncodedCnn, registry: &Arc<ModelRegistry>, pool: &[T
     println!("verified: packed+registry-served logits bit-identical to source forward_fx");
 }
 
-fn write_json(runs: &[RunStats], artifact: &ArtifactStats) {
+/// Socket-path phase: front the registry-served planned coordinator with
+/// a TCP server on an ephemeral port and replay an open-loop Poisson
+/// schedule at ~70% of the planned path's measured capacity at each
+/// load — under capacity on purpose, so the number reflects wire +
+/// framing overhead rather than queueing collapse.
+fn run_net_loads(
+    loaded: &EncodedCnn,
+    registry: &Arc<ModelRegistry>,
+    runs: &[RunStats],
+    loads: &[usize],
+    pool: &[Tensor<f32>],
+) -> Vec<NetStats> {
+    let coord = Arc::new(build(loaded.clone(), true, Some(registry)));
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default())
+        .expect("bind bench server");
+    let addr = server.local_addr().to_string();
+    let mut rng = Rng::new(31);
+    let mut stats = Vec::new();
+    for &load in loads {
+        let planned_req_s = runs
+            .iter()
+            .find(|r| r.config == "planned" && r.load == load)
+            .map(|r| r.req_s)
+            .unwrap_or(500.0);
+        let rate = (planned_req_s * 0.7).max(50.0);
+        let conns = load.clamp(1, 8);
+        let r = run_open_loop_net(&addr, &[], pool, load, rate, conns, &mut rng)
+            .expect("net load run");
+        assert_eq!(r.errors, 0, "net bench requests failed");
+        println!(
+            "bench coordinator/net/serve_{load}: offered {:.1} req/s, achieved {:.1} req/s, \
+             p99 {} us ({} overloaded)",
+            r.offered_hz,
+            r.achieved_hz,
+            r.percentile_us(99.0),
+            r.overloaded
+        );
+        stats.push(NetStats {
+            load,
+            offered_hz: r.offered_hz,
+            req_s: r.achieved_hz,
+            p50_us: r.percentile_us(50.0),
+            p90_us: r.percentile_us(90.0),
+            p99_us: r.percentile_us(99.0),
+            overloaded: r.overloaded,
+            errors: r.errors,
+        });
+    }
+    stats
+}
+
+fn write_json(runs: &[RunStats], net: &[NetStats], artifact: &ArtifactStats) {
     let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load);
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load);
@@ -199,6 +270,22 @@ fn write_json(runs: &[RunStats], artifact: &ArtifactStats) {
             r.mean_occupancy,
             r.padding_fraction,
             r.batches
+        );
+    }
+    s.push_str("  ],\n");
+    s.push_str(
+        "  \"net_label\": \"open-loop Poisson over TCP sockets \
+         (serving::net + wire protocol), registry-loaded model\",\n",
+    );
+    s.push_str("  \"net\": [\n");
+    for (i, r) in net.iter().enumerate() {
+        let sep = if i + 1 == net.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"load\": {}, \"offered_hz\": {:.1}, \"req_s\": {:.1}, \
+             \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}, \
+             \"overloaded\": {}, \"errors\": {}}}{sep}",
+            r.load, r.offered_hz, r.req_s, r.p50_us, r.p90_us, r.p99_us, r.overloaded, r.errors
         );
     }
     s.push_str("  ],\n");
@@ -256,6 +343,9 @@ fn main() {
         runs.push(run_load("planned", &planned, load, &pool));
     }
 
+    // socket path: same model, same loads, through the TCP front-end
+    let net = run_net_loads(&loaded, &registry, &runs, loads, &pool);
+
     let max_load = loads.last().copied().unwrap();
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load).unwrap();
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load).unwrap();
@@ -266,6 +356,6 @@ fn main() {
         plan.req_s
     );
 
-    write_json(&runs, &artifact);
+    write_json(&runs, &net, &artifact);
     let _ = std::fs::remove_dir_all(&models_dir);
 }

@@ -53,12 +53,15 @@ pub enum ConvVariantKind {
 /// A sized convolution-layer accelerator.
 #[derive(Clone, Debug)]
 pub struct ConvAccel {
+    /// Which MAC architecture the accelerator uses.
     pub variant: ConvVariantKind,
+    /// The conv layer the accelerator is sized for.
     pub shape: ConvShape,
     /// Weight bins B (ignored by `Direct`).
     pub bins: usize,
     /// Kernel (weight) bit width W: the paper sweeps 8 and 32.
     pub weight_width: u32,
+    /// HLS directive knobs (unrolling, pipelining).
     pub hls: HlsConfig,
     /// Back the image cache with an SRAM macro instead of registers (the
     /// paper's footnote-1 what-if; the FreePDK45 flow could not synthesize
@@ -91,6 +94,7 @@ const PASM_LATENCY_FIXED: f64 = 2.0;
 const PASM_POSTPASS_OVERLAP: f64 = 180.0;
 
 impl ConvAccel {
+    /// An accelerator for `shape` with default HLS knobs and no SRAM cache.
     pub fn new(
         variant: ConvVariantKind,
         shape: ConvShape,

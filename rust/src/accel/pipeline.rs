@@ -15,8 +15,11 @@ use crate::hw::timing::PathDelay;
 /// resulting per-stage path, and the stage count (= added latency cycles).
 #[derive(Clone, Debug)]
 pub struct Pipelined {
+    /// Gate cost including the added pipeline registers.
     pub gates: GateBreakdown,
+    /// Combinational path of one stage.
     pub stage_path: PathDelay,
+    /// Stage count (equals the added latency in cycles).
     pub stages: u32,
 }
 

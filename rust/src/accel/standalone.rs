@@ -37,6 +37,7 @@ pub enum UnitKind {
 /// A sized standalone unit.
 #[derive(Clone, Copy, Debug)]
 pub struct StandaloneUnit {
+    /// MAC16 baseline or PAS16-MAC4 proposal.
     pub kind: UnitKind,
     /// Data bit width W (paper sweeps 4, 8, 16, 32).
     pub width: u32,
@@ -49,10 +50,12 @@ pub struct StandaloneUnit {
 }
 
 impl StandaloneUnit {
+    /// The paper's 16-MAC baseline at a given width and bin count.
     pub fn mac16(width: u32, bins: usize) -> Self {
         StandaloneUnit { kind: UnitKind::Mac16, width, bins, lanes: 16, postpass: 0 }
     }
 
+    /// The paper's 16-PAS-4-MAC proposal at a given width and bin count.
     pub fn pas16mac4(width: u32, bins: usize) -> Self {
         StandaloneUnit { kind: UnitKind::Pas16Mac4, width, bins, lanes: 16, postpass: 4 }
     }
@@ -195,9 +198,13 @@ impl StandaloneUnit {
 /// Evaluation record for one standalone configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct StandaloneReport {
+    /// The configuration evaluated.
     pub unit: StandaloneUnit,
+    /// NAND2-normalized gate breakdown.
     pub gates: GateBreakdown,
+    /// Power at the evaluation tech point.
     pub power: PowerBreakdown,
+    /// Exact cycles to stream 1024 (image, index) pairs (paper SS2.2).
     pub cycles_1024: u64,
 }
 

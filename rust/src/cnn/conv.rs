@@ -129,11 +129,17 @@ pub fn pasm_conv_f32(
 /// explicitly-audited step, as in the RTL).
 #[derive(Clone, Debug)]
 pub struct FxConvInputs {
+    /// Image in raw fixed point (format `iq`).
     pub image_raw: Tensor<i64>,
+    /// Per-weight dictionary bin indices `[M, C, KY, KX]`.
     pub bin_idx: Tensor<u16>,
+    /// Dictionary entries in raw fixed point (format `wq`).
     pub codebook_raw: Vec<i64>,
+    /// Image fixed-point format.
     pub iq: QFormat,
+    /// Weight fixed-point format.
     pub wq: QFormat,
+    /// Convolution stride.
     pub stride: usize,
 }
 
@@ -163,6 +169,7 @@ impl FxConvInputs {
         }
     }
 
+    /// The conv shape these inputs describe.
     pub fn shape(&self) -> ConvShape {
         conv_shapes(self.image_raw.dims(), self.bin_idx.dims(), self.stride)
     }

@@ -14,10 +14,13 @@ use crate::tensor::Tensor;
 pub struct Rng(u64);
 
 impl Rng {
+    /// Seeded generator (seed 0 is mapped to 1; xorshift needs a
+    /// non-zero state).
     pub fn new(seed: u64) -> Self {
         Rng(seed.max(1))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x >> 12;
@@ -66,6 +69,7 @@ pub const IMAGE_SIDE: usize = 12;
 pub struct Sample {
     /// `[1, 12, 12]` image, ink ~1.0 on ~0.0 background plus noise.
     pub image: Tensor<f32>,
+    /// Ground-truth digit (0-9).
     pub label: usize,
 }
 

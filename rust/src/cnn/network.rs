@@ -23,21 +23,32 @@ use crate::tensor::{ConvShape, Tensor};
 /// Float parameters of the digits CNN.
 #[derive(Clone, Debug)]
 pub struct NetworkParams {
-    pub conv1_w: Tensor<f32>, // [8, 1, 3, 3]
-    pub conv1_b: Vec<f32>,    // [8]
-    pub conv2_w: Tensor<f32>, // [16, 8, 3, 3]
-    pub conv2_b: Vec<f32>,    // [16]
-    pub dense_w: Tensor<f32>, // [144, 10]
-    pub dense_b: Vec<f32>,    // [10]
+    /// Conv1 weights `[conv1_m, 1, K, K]` (default `[8, 1, 3, 3]`).
+    pub conv1_w: Tensor<f32>,
+    /// Conv1 bias, one per kernel.
+    pub conv1_b: Vec<f32>,
+    /// Conv2 weights `[conv2_m, conv1_m, K, K]` (default `[16, 8, 3, 3]`).
+    pub conv2_w: Tensor<f32>,
+    /// Conv2 bias, one per kernel.
+    pub conv2_b: Vec<f32>,
+    /// Dense head weights `[feature_dim, classes]`.
+    pub dense_w: Tensor<f32>,
+    /// Dense head bias, one per class.
+    pub dense_b: Vec<f32>,
 }
 
 /// Static architecture description (must match `configs.E2E_MODEL`).
 #[derive(Clone, Copy, Debug)]
 pub struct DigitsCnn {
+    /// Input image side length (images are `[1, in_side, in_side]`).
     pub in_side: usize,
+    /// Conv1 kernel count `M1`.
     pub conv1_m: usize,
+    /// Conv2 kernel count `M2`.
     pub conv2_m: usize,
+    /// Square kernel side `K` for both conv layers.
     pub kernel: usize,
+    /// Output class count.
     pub classes: usize,
 }
 
@@ -48,15 +59,18 @@ impl Default for DigitsCnn {
 }
 
 impl DigitsCnn {
+    /// Conv1 layer shape.
     pub fn conv1_shape(&self) -> ConvShape {
         ConvShape::new(1, self.in_side, self.in_side, self.kernel, self.kernel, self.conv1_m, 1)
     }
 
+    /// Conv2 layer shape (after the 2x2 max-pool).
     pub fn conv2_shape(&self) -> ConvShape {
         let side = self.conv1_shape().out_h() / 2; // after 2x2 pool
         ConvShape::new(self.conv1_m, side, side, self.kernel, self.kernel, self.conv2_m, 1)
     }
 
+    /// Flattened feature length entering the dense head.
     pub fn feature_dim(&self) -> usize {
         let s2 = self.conv2_shape();
         self.conv2_m * s2.out_pixels()
@@ -114,12 +128,19 @@ pub enum ConvVariant {
 /// Dictionary-encoded form of the network (both conv layers weight-shared).
 #[derive(Clone, Debug)]
 pub struct EncodedCnn {
+    /// The architecture the weights belong to.
     pub arch: DigitsCnn,
+    /// Conv1 weights in dictionary-encoded form.
     pub conv1: EncodedWeights,
+    /// Conv1 bias (stays float).
     pub conv1_b: Vec<f32>,
+    /// Conv2 weights in dictionary-encoded form.
     pub conv2: EncodedWeights,
+    /// Conv2 bias (stays float).
     pub conv2_b: Vec<f32>,
+    /// Dense head weights (stay dense, as in the paper).
     pub dense_w: Tensor<f32>,
+    /// Dense head bias.
     pub dense_b: Vec<f32>,
 }
 
@@ -211,6 +232,7 @@ impl EncodedCnn {
         dense(&feat, &self.dense_w, &self.dense_b)
     }
 
+    /// Classification accuracy over a labelled sample set.
     pub fn accuracy(&self, data: &[crate::cnn::data::Sample], variant: ConvVariant) -> f64 {
         let correct = data
             .iter()

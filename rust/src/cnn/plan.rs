@@ -117,6 +117,7 @@ impl LayerPlan {
         })
     }
 
+    /// The conv shape this layer plan was compiled for.
     pub fn shape(&self) -> &ConvShape {
         &self.shape
     }
@@ -417,6 +418,7 @@ impl CompiledCnn {
         })
     }
 
+    /// The architecture the plan was compiled from.
     pub fn arch(&self) -> &DigitsCnn {
         &self.arch
     }
@@ -432,6 +434,7 @@ impl CompiledCnn {
         s.channels * s.in_h * s.in_w
     }
 
+    /// Output class count.
     pub fn classes(&self) -> usize {
         self.arch.classes
     }

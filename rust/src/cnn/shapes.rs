@@ -7,8 +7,9 @@
 
 use crate::tensor::ConvShape;
 
-/// Paper Table 2 grid: channels x kernel sizes.
+/// Paper Table 2 grid: the channel counts swept.
 pub const TABLE2_CHANNELS: [usize; 3] = [32, 128, 512];
+/// Paper Table 2 grid: the kernel sizes swept.
 pub const TABLE2_KERNELS: [usize; 4] = [1, 3, 5, 7];
 
 /// One Table 2 cell: MAC ops per output element.
@@ -38,7 +39,9 @@ pub fn pasm_amortization(shape: &ConvShape, bins: usize) -> f64 {
 /// A named convolution layer in a network table.
 #[derive(Clone, Debug)]
 pub struct LayerSpec {
+    /// Layer label (e.g. "conv3").
     pub name: &'static str,
+    /// The layer's convolution shape.
     pub shape: ConvShape,
 }
 

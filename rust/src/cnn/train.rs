@@ -15,9 +15,13 @@ use crate::tensor::Tensor;
 /// Training hyper-parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
+    /// Passes over the training set.
     pub epochs: usize,
+    /// SGD learning rate.
     pub lr: f32,
+    /// SGD momentum coefficient.
     pub momentum: f32,
+    /// Print a log line every N epochs (0 = silent).
     pub log_every: usize,
 }
 
@@ -53,8 +57,11 @@ impl Grads {
 /// One training epoch log entry.
 #[derive(Clone, Copy, Debug)]
 pub struct EpochStats {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Mean cross-entropy loss over the epoch.
     pub mean_loss: f64,
+    /// Accuracy on the training set after the epoch.
     pub train_accuracy: f64,
 }
 

@@ -19,6 +19,8 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
+    /// A policy over `buckets` (sorted + deduped; must be non-empty and
+    /// all ≥ 1) with the given wait budget.
     pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> Self {
         assert!(!buckets.is_empty(), "need at least one batch bucket");
         buckets.sort_unstable();
@@ -27,6 +29,7 @@ impl BatchPolicy {
         BatchPolicy { buckets, max_wait }
     }
 
+    /// The largest configured bucket.
     pub fn max_bucket(&self) -> usize {
         *self.buckets.last().unwrap()
     }

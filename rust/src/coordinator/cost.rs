@@ -14,7 +14,7 @@ use crate::hw::Tech;
 use crate::tensor::ConvShape;
 
 /// Simulated hardware cost of serving work on the modeled accelerator.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct HwCost {
     /// Accelerator cycles (all priced layers, all images).
     pub cycles: u64,
@@ -54,6 +54,7 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Price deployments as `variant` silicon at the `tech` point.
     pub fn new(variant: ConvVariantKind, tech: Tech) -> Self {
         CostModel { variant, tech }
     }

@@ -7,10 +7,22 @@
 //! [`run_open_loop`] replays them against a coordinator, returning
 //! per-request end-to-end latencies (`examples/latency_under_load.rs`
 //! sweeps the offered rate against capacity).
+//!
+//! [`run_open_loop_net`] is the same methodology over **real TCP
+//! sockets**: a pool of [`crate::serving::Client`] connections replays
+//! the schedule against a running [`crate::serving::net::Server`], so
+//! the measured latency includes framing, the network stack, and the
+//! server's admission control (`RESOURCE_EXHAUSTED` rejections are
+//! counted separately from hard errors).  `cargo bench --bench
+//! coordinator` records both paths side by side in `BENCH_serving.json`.
 
 use crate::cnn::data::Rng;
 use crate::coordinator::server::Coordinator;
+use crate::serving::client::{Client, ClientError};
+use crate::serving::proto::ErrorCode;
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Exponential inter-arrival times for `n` requests at `rate_hz`.
@@ -28,14 +40,22 @@ pub fn poisson_schedule(rng: &mut Rng, n: usize, rate_hz: f64) -> Vec<Duration> 
 /// Result of one open-loop run.
 #[derive(Clone, Debug)]
 pub struct LoadResult {
+    /// The arrival rate the schedule was drawn at (req/s).
     pub offered_hz: f64,
+    /// Completed requests divided by the run's wall time (req/s).
     pub achieved_hz: f64,
     /// Per-request end-to-end latencies (µs), submission to response.
     pub latencies_us: Vec<u64>,
+    /// Requests that failed outright (transport or execution errors).
     pub errors: usize,
+    /// Requests the server's admission control rejected with a typed
+    /// `RESOURCE_EXHAUSTED` frame (network runs only; always 0 for the
+    /// in-process path, which has no admission layer).
+    pub overloaded: usize,
 }
 
 impl LoadResult {
+    /// Latency percentile (`p` in `[0, 100]`); 0 when no request completed.
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.latencies_us.is_empty() {
             return 0;
@@ -46,6 +66,7 @@ impl LoadResult {
         v[rank.min(v.len() - 1)]
     }
 
+    /// Mean latency (µs); 0 when no request completed.
     pub fn mean_us(&self) -> f64 {
         if self.latencies_us.is_empty() {
             return 0.0;
@@ -100,7 +121,102 @@ pub fn run_open_loop(
         achieved_hz: latencies.len() as f64 / wall,
         latencies_us: latencies,
         errors,
+        overloaded: 0,
     }
+}
+
+/// Replay a Poisson arrival process of `n` requests at `rate_hz` against
+/// a network serving front-end at `addr`, over `connections` blocking
+/// [`Client`]s (images cycled from `pool`, model targets cycled from
+/// `models`; an empty `models` slice means every request goes to the
+/// server's default model).
+///
+/// The schedule is shared: workers claim arrival slots from a common
+/// counter and sleep until their slot's arrival time, so submissions
+/// stay open-loop as long as `connections` exceeds the typical in-flight
+/// depth.  Latency is measured from the request's *scheduled* arrival to
+/// its reply — a saturated connection pool therefore shows up as
+/// latency, exactly like a saturated server, instead of silently
+/// stretching the schedule.
+pub fn run_open_loop_net(
+    addr: &str,
+    models: &[Option<String>],
+    pool: &[Tensor<f32>],
+    n: usize,
+    rate_hz: f64,
+    connections: usize,
+    rng: &mut Rng,
+) -> anyhow::Result<LoadResult> {
+    anyhow::ensure!(!pool.is_empty(), "image pool is empty");
+    anyhow::ensure!(connections >= 1, "need at least one connection");
+    let default_models = [None];
+    let models: &[Option<String>] = if models.is_empty() { &default_models } else { models };
+
+    // cumulative arrival offsets from the run's start
+    let gaps = poisson_schedule(rng, n, rate_hz);
+    let mut offsets = Vec::with_capacity(n);
+    let mut acc = Duration::ZERO;
+    for gap in gaps {
+        acc += gap;
+        offsets.push(acc);
+    }
+
+    // connect up front so a refused connection fails the run loudly
+    // instead of skewing the measurement
+    let clients: Vec<Client> = (0..connections)
+        .map(|i| {
+            Client::connect(addr)
+                .map_err(|e| anyhow::anyhow!("connect load connection {i} to {addr}: {e}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<(Vec<u64>, usize, usize)> = Mutex::new((Vec::with_capacity(n), 0, 0));
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        let next = &next;
+        let results = &results;
+        let offsets = &offsets;
+        for mut client in clients {
+            scope.spawn(move || {
+                let mut latencies = Vec::new();
+                let mut errors = 0usize;
+                let mut overloaded = 0usize;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let due = started + offsets[i];
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    let model = models[i % models.len()].as_deref();
+                    match client.infer(model, &pool[i % pool.len()]) {
+                        Ok(_) => latencies.push(due.elapsed().as_micros() as u64),
+                        Err(ClientError::Server(e)) if e.code == ErrorCode::ResourceExhausted => {
+                            overloaded += 1;
+                        }
+                        Err(_) => errors += 1,
+                    }
+                }
+                let mut guard = results.lock().unwrap();
+                guard.0.extend(latencies);
+                guard.1 += errors;
+                guard.2 += overloaded;
+            });
+        }
+    });
+    let wall = started.elapsed().as_secs_f64();
+    let (latencies_us, errors, overloaded) = results.into_inner().unwrap();
+    Ok(LoadResult {
+        offered_hz: rate_hz,
+        achieved_hz: latencies_us.len() as f64 / wall,
+        latencies_us,
+        errors,
+        overloaded,
+    })
 }
 
 #[cfg(test)]
@@ -140,6 +256,7 @@ mod tests {
             achieved_hz: 1.0,
             latencies_us: (1..=100).collect(),
             errors: 0,
+            overloaded: 0,
         };
         assert!(r.percentile_us(50.0) <= r.percentile_us(99.0));
         assert_eq!(r.percentile_us(100.0), 100);

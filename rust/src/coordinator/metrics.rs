@@ -6,10 +6,17 @@ use std::time::Duration;
 /// Label used for requests served by the default (unnamed) backend model.
 pub const DEFAULT_MODEL_LABEL: &str = "default";
 
+/// Latency samples retained for percentile computation (a sliding window
+/// over the most recent requests — the network front-end serves
+/// indefinitely, so the history must not grow with total traffic).
+pub const LATENCY_WINDOW: usize = 65_536;
+
 /// Per-model serving counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ModelCounters {
+    /// Requests served (live batch slots, excl. padding).
     pub requests: u64,
+    /// Batches launched for this model.
     pub batches: u64,
     /// Batches that failed (execution error or panic) for this model.
     pub failed_batches: u64,
@@ -21,17 +28,24 @@ pub struct Metrics {
     /// Label of the execution backend serving the requests ("native",
     /// "pjrt", ...); empty until the worker starts.
     pub backend: String,
+    /// Requests served across all models.
     pub requests: u64,
+    /// Batches launched across all models.
     pub batches: u64,
     /// Batches that failed (execution error, panic, or unresolvable
     /// model), across all models.
     pub failed_batches: u64,
+    /// Executed batch slots that were zero padding.
     pub padded_slots: u64,
     /// Per-model request/batch counters, keyed by model name (the default
     /// backend model records under [`DEFAULT_MODEL_LABEL`]).
     pub per_model: BTreeMap<String, ModelCounters>,
-    /// End-to-end latencies (µs), one per completed request.
+    /// End-to-end latencies (µs): a sliding window over the most recent
+    /// [`LATENCY_WINDOW`] completed requests, so a long-running server's
+    /// memory and snapshot cost stay bounded.
     latencies_us: Vec<u64>,
+    /// Next window slot to overwrite once the window is full.
+    latency_cursor: usize,
     /// Total simulated accelerator energy (J).
     pub sim_energy_j: f64,
     /// Total simulated accelerator cycles.
@@ -39,14 +53,18 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// Record which backend is serving (shown in metrics snapshots).
     pub fn record_backend(&mut self, name: &str) {
         self.backend = name.to_string();
     }
 
+    /// Count one launched batch of `occupancy` live requests in a
+    /// `bucket`-slot batch for `model`.
     pub fn record_batch(&mut self, model: &str, occupancy: usize, bucket: usize) {
         self.batches += 1;
         self.requests += occupancy as u64;
@@ -67,10 +85,19 @@ impl Metrics {
         }
     }
 
+    /// Record one request's end-to-end latency (sliding window: once
+    /// [`LATENCY_WINDOW`] samples are held, the oldest is overwritten).
     pub fn record_latency(&mut self, lat: Duration) {
-        self.latencies_us.push(lat.as_micros() as u64);
+        let us = lat.as_micros() as u64;
+        if self.latencies_us.len() < LATENCY_WINDOW {
+            self.latencies_us.push(us);
+        } else {
+            self.latencies_us[self.latency_cursor] = us;
+        }
+        self.latency_cursor = (self.latency_cursor + 1) % LATENCY_WINDOW;
     }
 
+    /// Accumulate one batch's simulated accelerator cost.
     pub fn record_hw(&mut self, cycles: u64, energy_j: f64) {
         self.sim_cycles += cycles;
         self.sim_energy_j += energy_j;
@@ -170,6 +197,18 @@ mod tests {
     #[test]
     fn empty_percentile_none() {
         assert_eq!(Metrics::new().percentile_us(50.0), None);
+    }
+
+    #[test]
+    fn latency_window_is_bounded_and_slides() {
+        let mut m = Metrics::new();
+        for i in 0..(LATENCY_WINDOW + 10) {
+            m.record_latency(Duration::from_micros(i as u64));
+        }
+        assert_eq!(m.latencies_us.len(), LATENCY_WINDOW, "window must not grow");
+        // the oldest 10 samples were overwritten by the newest 10
+        assert_eq!(m.percentile_us(0.0), Some(10));
+        assert_eq!(m.percentile_us(100.0), Some((LATENCY_WINDOW + 9) as u64));
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::time::Instant;
 /// A single-image inference request.
 #[derive(Clone, Debug)]
 pub struct InferenceRequest {
+    /// Coordinator-assigned request id (unique per coordinator).
     pub id: u64,
     /// `[C, H, W]` input image (the digits model uses `[1, 12, 12]`).
     pub image: Tensor<f32>,
@@ -15,10 +16,12 @@ pub struct InferenceRequest {
     /// built-in default backend model.  The batcher buckets per model, so
     /// one launched batch never mixes models.
     pub model: Option<Arc<str>>,
+    /// When the request entered the system (queue-latency baseline).
     pub enqueued_at: Instant,
 }
 
 impl InferenceRequest {
+    /// A request for the default model, enqueued now.
     pub fn new(id: u64, image: Tensor<f32>) -> Self {
         InferenceRequest { id, image, model: None, enqueued_at: Instant::now() }
     }
@@ -33,11 +36,14 @@ impl InferenceRequest {
 /// The coordinator's answer for one request.
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
+    /// The request's id.
     pub id: u64,
     /// Which model served this request (`None` = the default backend
     /// model) — echoes the request's routing for client-side assertions.
     pub model: Option<Arc<str>>,
+    /// Raw logits, one per class.
     pub logits: Vec<f32>,
+    /// `argmax(logits)`.
     pub predicted: usize,
     /// Time spent queued before the batch launched.
     pub queue_us: u64,

@@ -70,6 +70,7 @@ pub struct CoordinatorBuilder {
 }
 
 impl CoordinatorBuilder {
+    /// An empty builder (equivalent to `CoordinatorBuilder::default()`).
     pub fn new() -> Self {
         CoordinatorBuilder::default()
     }

@@ -3,13 +3,18 @@
 /// FPGA resource vector (the columns of Vivado "report_utilization").
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Utilization {
+    /// Lookup tables.
     pub luts: u64,
+    /// Flip-flops.
     pub ffs: u64,
+    /// 18 Kb BRAM blocks.
     pub bram18: u64,
+    /// DSP48 slices.
     pub dsp: u64,
 }
 
 impl Utilization {
+    /// Whether this usage fits within a device's capacity.
     pub fn fits(&self, device: &Device) -> bool {
         self.luts <= device.luts
             && self.ffs <= device.ffs
@@ -43,11 +48,15 @@ impl std::ops::Add for Utilization {
 /// A Xilinx 7-series part.
 #[derive(Clone, Copy, Debug)]
 pub struct Device {
+    /// Part name (e.g. "XC7Z045").
     pub name: &'static str,
+    /// LUT capacity.
     pub luts: u64,
+    /// Flip-flop capacity.
     pub ffs: u64,
     /// 18 Kb BRAM blocks (a RAMB36 counts as two).
     pub bram18: u64,
+    /// DSP48 slice capacity.
     pub dsp: u64,
     /// Static power of the part at typical conditions (W).
     pub static_power_w: f64,

@@ -51,7 +51,9 @@ pub fn bram_blocks(entries: u64, width: u64, partitions: u64) -> u64 {
 /// A mapped FPGA design.
 #[derive(Clone, Debug)]
 pub struct FpgaDesign {
+    /// Design label (variant/width/bins).
     pub name: String,
+    /// Mapped resource usage.
     pub util: Utilization,
     /// Fabric activity estimate (weighted mean of component activities),
     /// feeds the power model.

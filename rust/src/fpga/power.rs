@@ -22,11 +22,14 @@ const FF_ACTIVITY: f64 = 0.25;
 /// FPGA power report (W).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FpgaPower {
+    /// Device static power.
     pub static_w: f64,
+    /// Activity-weighted dynamic power.
     pub dynamic_w: f64,
 }
 
 impl FpgaPower {
+    /// Static + dynamic power (W).
     pub fn total_w(&self) -> f64 {
         self.static_w + self.dynamic_w
     }

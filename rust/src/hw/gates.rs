@@ -14,13 +14,18 @@ use std::ops::{Add, AddAssign, Mul};
 /// they model average cell sizes).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct GateBreakdown {
+    /// Flip-flop (storage) gates.
     pub sequential: f64,
+    /// Inverter gates.
     pub inverter: f64,
+    /// Buffer gates.
     pub buffer: f64,
+    /// Remaining combinational gates.
     pub logic: f64,
 }
 
 impl GateBreakdown {
+    /// Total NAND2-equivalent gate count across all four categories.
     pub fn total(&self) -> f64 {
         self.sequential + self.inverter + self.buffer + self.logic
     }
@@ -70,7 +75,9 @@ impl Mul<f64> for GateBreakdown {
 /// A sized instance of a library component.
 #[derive(Clone, Debug)]
 pub struct Component {
+    /// Component label (for reports).
     pub name: String,
+    /// NAND2-normalized gate cost.
     pub gates: GateBreakdown,
     /// Default fraction of gates toggling in an active cycle.
     pub activity: f64,

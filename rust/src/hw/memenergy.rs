@@ -9,9 +9,10 @@
 
 use crate::tensor::ConvShape;
 
-/// Energy per 32-bit access (J) — Han et al. 2016's numbers, as quoted in
-/// the paper's introduction.
+/// Energy per 32-bit off-chip DRAM access (J) — Han et al. 2016's
+/// number, as quoted in the paper's introduction.
 pub const DRAM_ACCESS_32B_J: f64 = 640e-12;
+/// Energy per 32-bit on-chip SRAM access (J) — same source.
 pub const SRAM_ACCESS_32B_J: f64 = 5e-12;
 /// Register-file access (the shared-weight dictionary itself).
 pub const REGFILE_ACCESS_32B_J: f64 = 1e-12;
@@ -19,7 +20,9 @@ pub const REGFILE_ACCESS_32B_J: f64 = 1e-12;
 /// Where the weight data lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Residence {
+    /// Weights stream from off-chip DRAM.
     OffChipDram,
+    /// Weights fit in on-chip SRAM.
     OnChipSram,
 }
 

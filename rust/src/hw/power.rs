@@ -13,11 +13,14 @@ use crate::hw::tech::Tech;
 /// Power report for one design (Watts).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PowerBreakdown {
+    /// Static (leakage) power.
     pub leakage_w: f64,
+    /// Activity-weighted switching power (incl. clock tree).
     pub dynamic_w: f64,
 }
 
 impl PowerBreakdown {
+    /// Leakage + dynamic power (W).
     pub fn total_w(&self) -> f64 {
         self.leakage_w + self.dynamic_w
     }
@@ -39,6 +42,7 @@ struct Entry {
 }
 
 impl PowerModel {
+    /// An empty model (add components, then evaluate).
     pub fn new() -> Self {
         PowerModel { entries: Vec::new() }
     }

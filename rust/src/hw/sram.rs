@@ -30,11 +30,14 @@ const LEAK_PER_BIT_W: f64 = 1.2e-10;
 /// A single-bank SRAM macro.
 #[derive(Clone, Copy, Debug)]
 pub struct SramMacro {
+    /// Capacity in bits.
     pub bits: u64,
+    /// Read/write port count.
     pub ports: u32,
 }
 
 impl SramMacro {
+    /// A macro of `bits` capacity with `ports` ports (both >= 1).
     pub fn new(bits: u64, ports: u32) -> Self {
         assert!(bits > 0 && ports >= 1);
         SramMacro { bits, ports }

@@ -19,13 +19,16 @@ use crate::hw::tech::Tech;
 /// A combinational path: accumulated levels + fanout sinks + FF endpoints.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PathDelay {
+    /// Accumulated combinational depth in NAND2 levels.
     pub levels: f64,
+    /// Accumulated fanout sinks on the widest net.
     pub fanout_sinks: f64,
     /// Number of register boundaries crossed (usually 1: reg -> logic -> reg).
     pub ff_stages: f64,
 }
 
 impl PathDelay {
+    /// An empty single-stage path.
     pub fn new() -> Self {
         PathDelay { levels: 0.0, fanout_sinks: 0.0, ff_stages: 1.0 }
     }

@@ -47,11 +47,18 @@
 //!   batch worker pool, or PJRT) with per-model executables keyed by
 //!   registry generation, hardware [`coordinator::cost`] model, per-model
 //!   metrics.
+//! * [`serving`] — the network front-end: a length-prefixed JSON wire
+//!   protocol ([`serving::proto`], spec in `docs/WIRE_PROTOCOL.md`), a
+//!   thread-per-connection TCP server with admission control
+//!   ([`serving::net`]), and a blocking client ([`serving::client`]).
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
-//! See `rust/README.md` for the architecture overview and `ROADMAP.md` for
+//! See `docs/ARCHITECTURE.md` for the end-to-end request path and model
+//! lifecycle, `rust/README.md` for the layer map, and `ROADMAP.md` for
 //! where this is headed.
+
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod cnn;
@@ -62,6 +69,7 @@ pub mod model_store;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod tensor;
 

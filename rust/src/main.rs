@@ -8,6 +8,10 @@
 //!             [--threads N] [--no-plan]
 //! repro serve --models <dir> [--requests N] [--model NAME] [--fixed]
 //!             [--poll-ms M] [--pack-midrun NAME=BINS]
+//! repro serve --listen ADDR [--models <dir>] [--fixed] [--max-conns N]
+//!             [--max-inflight N] [--port-file PATH] [--for-s SECS]
+//! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
+//!             [--models a,b,c]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -26,6 +30,8 @@ use pasm_accel::model_store::{self, ModelRegistry};
 use pasm_accel::quant::codebook::encode_weights;
 use pasm_accel::quant::fixed::QFormat;
 use pasm_accel::report::{all_report_ids, run_report};
+use pasm_accel::serving::net::write_port_file;
+use pasm_accel::serving::{Server, ServerConfig};
 use pasm_accel::sim::simulate_conv;
 use pasm_accel::tensor::Tensor;
 use std::collections::{BTreeMap, HashMap};
@@ -46,6 +52,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&flags),
         "pack" => cmd_pack(&args, &flags),
         "serve" => cmd_serve(&flags),
+        "bench-net" => cmd_bench_net(&flags),
         "sweep" => cmd_sweep(&flags),
         "list" => {
             for id in all_report_ids() {
@@ -68,7 +75,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro <report <id>|all> | simulate | pack | serve | sweep | list
+const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|sweep|list
   report all | report fig15      regenerate paper exhibits
   simulate --variant pasm --bins 16 --width 32 --seed 1
   pack <dir> [--bins 16] [--width 32] [--name NAME] [--seed 7]
@@ -76,6 +83,10 @@ const USAGE: &str = "usage: repro <report <id>|all> | simulate | pack | serve | 
         [--threads N] [--no-plan]
   serve --models <dir> [--requests 64] [--model NAME] [--fixed] [--poll-ms 25]
         [--pack-midrun NAME=BINS]
+  serve --listen 127.0.0.1:7878 [--models <dir>] [--fixed] [--max-conns 64]
+        [--max-inflight 256] [--port-file PATH] [--for-s SECS]
+  bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
+        [--models digits-b8,digits-b16]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -347,7 +358,127 @@ fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Resul
     Ok(())
 }
 
+/// Network serving: bind a TCP front-end and serve wire-protocol frames
+/// until `--for-s` elapses (or forever).  With `--models DIR` every
+/// `.pasm` artifact in DIR is served by name (hot-swappable via the
+/// directory watcher); without it a deterministic built-in digits model
+/// serves as the default.
+fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Result<()> {
+    let builder = CoordinatorBuilder::new().batch_policy(BatchPolicy::default());
+    let builder = if let Some(dir) = flags.get("models") {
+        let dir_path = PathBuf::from(dir);
+        let registry = Arc::new(ModelRegistry::load_dir(&dir_path)?);
+        anyhow::ensure!(
+            !registry.is_empty(),
+            "no .pasm artifacts in {dir} (run `repro pack {dir}` first)"
+        );
+        let poll_ms: u64 = flag(flags, "poll-ms", 25);
+        registry.watch(dir_path, Duration::from_millis(poll_ms))?;
+        let default_name = match flags.get("model") {
+            Some(m) => m.clone(),
+            None => registry.default_name().expect("registry checked non-empty"),
+        };
+        let entry = registry
+            .get(&default_name)
+            .with_context(|| format!("model '{default_name}' is not in {dir}"))?;
+        let mut backend = NativeBackend::new((*entry.enc).clone());
+        if flags.contains_key("fixed") {
+            backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+        }
+        builder.backend(backend).registry(registry).default_model(&default_name)
+    } else {
+        let bins: usize = flag(flags, "bins", 16);
+        let seed: u64 = flag(flags, "seed", 7);
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(seed);
+        let params = arch.init(&mut rng);
+        let mut backend = NativeBackend::new(EncodedCnn::encode(arch, &params, bins, QFormat::W32));
+        if flags.contains_key("fixed") {
+            backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+        }
+        builder.backend(backend)
+    };
+    let coord = Arc::new(builder.build()?);
+
+    let config = ServerConfig {
+        max_connections: flag(flags, "max-conns", 64),
+        max_inflight: flag(flags, "max-inflight", 256),
+        ..ServerConfig::default()
+    };
+    let mut server = Server::bind(addr, Arc::clone(&coord), config)?;
+    println!("listening on {}", server.local_addr());
+    if let Some(path) = flags.get("port-file") {
+        write_port_file(std::path::Path::new(path), server.local_addr())?;
+    }
+    match flags.get("for-s").and_then(|v| v.parse::<u64>().ok()) {
+        Some(secs) => {
+            std::thread::sleep(Duration::from_secs(secs));
+            let net = server.net_metrics();
+            let m = coord.metrics();
+            println!(
+                "shutting down after {secs}s: {} connection(s), {} frame(s) in, \
+                 {} ok / {} failed / {} overloaded",
+                net.connections_opened,
+                net.frames_received,
+                net.requests_ok,
+                net.requests_failed,
+                net.overload_rejections
+            );
+            println!(
+                "coordinator: {} request(s) in {} batch(es), backend '{}'",
+                m.requests, m.batches, m.backend
+            );
+            server.shutdown();
+            Ok(())
+        }
+        None => loop {
+            std::thread::park();
+        },
+    }
+}
+
+/// Drive a running `repro serve --listen` server over real sockets with
+/// an open-loop Poisson arrival process and report req/s + latency
+/// percentiles.  Exits nonzero if any request failed outright.
+fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags
+        .get("addr")
+        .context("usage: repro bench-net --addr HOST:PORT [--requests N] [--rate HZ]")?;
+    let n: usize = flag(flags, "requests", 256);
+    let rate: f64 = flag(flags, "rate", 500.0);
+    let conns: usize = flag(flags, "conns", 8);
+    let models: Vec<Option<String>> = flags
+        .get("models")
+        .map(|spec| spec.split(',').map(|s| Some(s.trim().to_string())).collect())
+        .unwrap_or_default();
+
+    let mut rng = Rng::new(29);
+    let pool: Vec<Tensor<f32>> = (0..64).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect();
+    let r = pasm_accel::coordinator::loadgen::run_open_loop_net(
+        addr, &models, &pool, n, rate, conns, &mut rng,
+    )?;
+    println!(
+        "net bench against {addr}: offered {:.1} req/s, achieved {:.1} req/s over {conns} conn(s)",
+        r.offered_hz, r.achieved_hz
+    );
+    println!(
+        "completed {}: p50 {} us, p90 {} us, p99 {} us ({} overloaded, {} errors)",
+        r.latencies_us.len(),
+        r.percentile_us(50.0),
+        r.percentile_us(90.0),
+        r.percentile_us(99.0),
+        r.overloaded,
+        r.errors
+    );
+    anyhow::ensure!(r.errors == 0, "{} request(s) failed", r.errors);
+    anyhow::ensure!(!r.latencies_us.is_empty(), "no request completed");
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if let Some(addr) = flags.get("listen") {
+        return cmd_serve_listen(flags, addr);
+    }
     if let Some(models_dir) = flags.get("models") {
         return cmd_serve_models(flags, models_dir);
     }

@@ -34,8 +34,11 @@ use std::time::{Duration, SystemTime};
 /// Where a registry entry came from on disk (for change detection).
 #[derive(Clone, Debug)]
 pub struct SourceMeta {
+    /// Artifact file path.
     pub path: PathBuf,
+    /// File length at load time (bytes).
     pub len: u64,
+    /// File mtime at load time, when the filesystem reports one.
     pub mtime: Option<SystemTime>,
 }
 
@@ -43,7 +46,9 @@ pub struct SourceMeta {
 /// execution plans (one per fixed-point image format requested).
 #[derive(Debug)]
 pub struct ModelEntry {
+    /// Model name (the artifact's file stem, or the inserted name).
     pub name: String,
+    /// The dictionary-encoded network this entry serves.
     pub enc: Arc<EncodedCnn>,
     /// Registry generation at which this entry was (re)loaded; engines key
     /// their per-model executables on it.
@@ -89,8 +94,11 @@ type Snapshot = BTreeMap<String, Arc<ModelEntry>>;
 /// What one [`ModelRegistry::sync_dir`] reconcile changed.
 #[derive(Clone, Debug, Default)]
 pub struct SyncReport {
+    /// Models loaded from artifacts not previously in the registry.
     pub added: Vec<String>,
+    /// Models reloaded because their artifact changed.
     pub updated: Vec<String>,
+    /// Models dropped because their artifact vanished.
     pub removed: Vec<String>,
     /// Artifacts that failed to load (path, error); the previous version
     /// of the model, if any, keeps serving.
@@ -98,6 +106,7 @@ pub struct SyncReport {
 }
 
 impl SyncReport {
+    /// Did this reconcile change the registry at all?
     pub fn changed(&self) -> bool {
         !self.added.is_empty() || !self.updated.is_empty() || !self.removed.is_empty()
     }
@@ -112,6 +121,7 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// An empty registry at generation 0.
     pub fn new() -> Self {
         ModelRegistry::default()
     }
@@ -141,10 +151,12 @@ impl ModelRegistry {
         self.snapshot.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Number of registered models.
     pub fn len(&self) -> usize {
         self.snapshot.lock().unwrap().len()
     }
 
+    /// Whether no model is registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

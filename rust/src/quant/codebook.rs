@@ -20,11 +20,13 @@ pub struct Codebook {
 }
 
 impl Codebook {
+    /// A codebook over the given centroids (must be non-empty).
     pub fn new(values: Vec<f32>, wq: QFormat) -> Self {
         assert!(!values.is_empty());
         Codebook { values, wq }
     }
 
+    /// Number of dictionary entries `B`.
     pub fn bins(&self) -> usize {
         self.values.len()
     }
@@ -49,6 +51,7 @@ impl Codebook {
 /// A weight tensor in dictionary-encoded form.
 #[derive(Clone, Debug)]
 pub struct EncodedWeights {
+    /// The shared-weight dictionary.
     pub codebook: Codebook,
     /// Bin index per weight, same shape as the original tensor.
     pub bin_idx: Tensor<u16>,

@@ -11,11 +11,15 @@
 /// fractional bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct QFormat {
+    /// Total bits, including the sign bit.
     pub width: u32,
+    /// Fractional (sub-integer) bits.
     pub frac: u32,
 }
 
 impl QFormat {
+    /// A format of `width` total bits with `frac` fractional bits
+    /// (compile-time checked: `2 <= width <= 32`, `frac < width`).
     pub const fn new(width: u32, frac: u32) -> Self {
         assert!(width >= 2 && width <= 32, "supported widths: 2..=32");
         assert!(frac < width);
@@ -24,9 +28,11 @@ impl QFormat {
 
     /// The paper's image format: 32-bit int, 16 fractional bits.
     pub const IMAGE32: QFormat = QFormat::new(32, 16);
-    /// Weight formats swept in the paper (8/16/32-bit kernels).
+    /// 8-bit weight format swept in the paper.
     pub const W8: QFormat = QFormat::new(8, 4);
+    /// 16-bit weight format swept in the paper.
     pub const W16: QFormat = QFormat::new(16, 8);
+    /// 32-bit weight format swept in the paper.
     pub const W32: QFormat = QFormat::new(32, 16);
 
     /// Scale factor `2^frac`.

@@ -194,6 +194,7 @@ pub struct BitStream {
 }
 
 impl BitStream {
+    /// Number of valid bits in the stream.
     pub fn len_bits(&self) -> usize {
         self.bits
     }

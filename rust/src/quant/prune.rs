@@ -11,7 +11,9 @@ use crate::tensor::Tensor;
 /// A pruning mask: `true` = weight survives.
 #[derive(Clone, Debug)]
 pub struct PruneMask {
+    /// Per-weight survival flags, same shape as the weight tensor.
     pub mask: Tensor<bool>,
+    /// Number of surviving weights.
     pub kept: usize,
 }
 

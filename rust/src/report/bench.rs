@@ -11,21 +11,28 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Total timed iterations.
     pub iters: u64,
+    /// Total timed wall clock.
     pub total: Duration,
+    /// Mean per-iteration time of the fastest batch.
     pub best_batch_per_iter: Duration,
 }
 
 impl BenchResult {
+    /// Mean wall clock per iteration.
     pub fn per_iter(&self) -> Duration {
         Duration::from_nanos((self.total.as_nanos() / self.iters.max(1) as u128) as u64)
     }
 
+    /// Iterations per second.
     pub fn per_second(&self) -> f64 {
         self.iters as f64 / self.total.as_secs_f64()
     }
 
+    /// Print the stable one-line summary.
     pub fn print(&self) {
         println!(
             "bench {}: {:?} per iter, best {:?} ({} iters, {:.1}/s)",

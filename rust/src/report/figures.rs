@@ -16,11 +16,17 @@ use crate::sim::standalone::{random_streams, simulate_standalone};
 /// One regenerated exhibit.
 #[derive(Clone, Debug)]
 pub struct Report {
+    /// Stable exhibit id (e.g. "fig15", "table4").
     pub id: &'static str,
+    /// Human-readable exhibit title.
     pub title: String,
+    /// What the paper claims, verbatim enough to compare.
     pub paper_claim: String,
+    /// Table column headers.
     pub headers: Vec<String>,
+    /// Table rows (pre-formatted cells).
     pub rows: Vec<Vec<String>>,
+    /// Measured-result notes printed under the table.
     pub notes: Vec<String>,
 }
 

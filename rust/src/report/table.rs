@@ -46,6 +46,7 @@ pub fn fmt_gates(g: f64) -> String {
     }
 }
 
+/// Format a power value with an auto-selected W/mW/uW unit.
 pub fn fmt_power(w: f64) -> String {
     if w >= 1.0 {
         format!("{w:.2}W")
@@ -56,6 +57,7 @@ pub fn fmt_power(w: f64) -> String {
     }
 }
 
+/// Format a fraction as a signed percentage.
 pub fn fmt_pct(frac: f64) -> String {
     format!("{:+.1}%", frac * 100.0)
 }

@@ -13,25 +13,33 @@ use std::path::Path;
 /// The PJRT runtime: one CPU client plus the artifact manifest.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The loaded artifact manifest.
     pub manifest: ArtifactManifest,
 }
 
 /// A compiled conv-tile executable (pasm_tile / ws_tile).
 pub struct TileExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact name ("pasm_tile" / "ws_tile").
     pub name: String,
-    /// (C, IH, IW), (M, C, KY, KX), B, (M, OH, OW)
+    /// Input image dims `(C, IH, IW)`.
     pub image_dims: [usize; 3],
+    /// Bin-index dims `(M, C, KY, KX)`.
     pub idx_dims: [usize; 4],
+    /// Dictionary bins `B`.
     pub bins: usize,
+    /// Output dims `(M, OH, OW)`.
     pub out_dims: [usize; 3],
 }
 
 /// A compiled e2e model executable at a fixed batch size.
 pub struct ModelExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// The fixed batch size this executable was compiled at.
     pub batch: usize,
-    pub in_dims: [usize; 3], // (C, H, W)
+    /// Input image dims `(C, H, W)`.
+    pub in_dims: [usize; 3],
+    /// Output class count.
     pub classes: usize,
 }
 
@@ -45,7 +53,9 @@ pub struct ModelParams {
 /// One marshalled parameter.
 #[derive(Clone, Debug)]
 pub enum ParamValue {
+    /// f32 data with its shape.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data with its shape.
     I32(Vec<i32>, Vec<usize>),
 }
 

@@ -1,9 +1,15 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json`.
+//! Minimal JSON layer: hand-rolled parser + canonical serializer.
 //!
-//! The offline build environment has no serde_json, so we parse by hand.
-//! Supports the full JSON value grammar (objects, arrays, strings with
-//! escapes, numbers, booleans, null); numbers are kept as f64 (manifest
-//! values are small integers, exactly representable).
+//! The offline build environment has no serde_json, so we parse and write
+//! by hand.  [`parse`] supports the full JSON value grammar (objects,
+//! arrays, strings with escapes, numbers, booleans, null); numbers are
+//! kept as f64 (manifest values are small integers, exactly
+//! representable).  The [`fmt::Display`] impl is the inverse direction,
+//! used by the network wire protocol ([`crate::serving::proto`]): it
+//! emits **canonical** JSON — compact (no whitespace), object keys in
+//! lexicographic order (a [`BTreeMap`] invariant), and floats in Rust's
+//! shortest round-trip decimal form — so a given `Json` value always
+//! serializes to exactly one byte sequence.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -11,15 +17,23 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (kept as f64; integers ≤ 2^53 are exact).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` keeps keys sorted, making serialization
+    /// canonical.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object field lookup; `None` for non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -27,6 +41,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -34,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -41,10 +57,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `usize`, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -52,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -60,10 +79,69 @@ impl Json {
     }
 }
 
+impl fmt::Display for Json {
+    /// Canonical serialization: compact, sorted keys, shortest
+    /// round-tripping float form (Rust's `{}` for f64 — never scientific
+    /// notation, so the output re-parses to the identical value).
+    /// Non-finite numbers have no JSON form and serialize as `null`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) if n.is_finite() => write!(f, "{n}"),
+            Json::Num(_) => f.write_str("null"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(map) => {
+                f.write_str("{")?;
+                for (i, (key, val)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, key)?;
+                    write!(f, ":{val}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+/// Write `s` as a JSON string literal (quotes, `\"`, `\\`, and control
+/// characters escaped; multibyte UTF-8 passes through verbatim).
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            '\u{0008}' => f.write_str("\\b")?,
+            '\u{000C}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset in the input where parsing failed.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 
@@ -326,6 +404,54 @@ mod tests {
     fn whitespace_tolerant() {
         let v = parse("  {\n\t\"k\" :  [ 1 , 2 ]\r\n}  ").unwrap();
         assert_eq!(v.get("k").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn serializes_canonically() {
+        let v = parse(r#"{ "b" : [1, 2.5, true, null], "a": {"k": "v"} }"#).unwrap();
+        assert_eq!(v.to_string(), r#"{"a":{"k":"v"},"b":[1,2.5,true,null]}"#);
+    }
+
+    #[test]
+    fn serialize_parse_round_trip() {
+        let cases = [
+            r#"{"data":[0,0.5,1],"dims":[1,12,12],"id":7,"type":"infer","v":1}"#,
+            r#"[-12.5,0.0000011,100000000000000000000]"#,
+            r#"{"empty_arr":[],"empty_obj":{},"nested":[[1],[2,[3]]]}"#,
+            r#""line\nquote\" tab\t""#,
+            "\"héllo→\"",
+        ];
+        for case in cases {
+            let v = parse(case).unwrap();
+            assert_eq!(v.to_string(), case, "canonical form must round-trip");
+            assert_eq!(parse(&v.to_string()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn serialize_escapes_control_chars() {
+        let v = Json::Str("a\u{0001}b\u{0008}c".into());
+        assert_eq!(v.to_string(), r#""a\u0001b\bc""#);
+        assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn f32_survives_f64_round_trip() {
+        // the wire protocol carries f32 tensors as JSON numbers: f32 → f64
+        // is exact, Display round-trips f64, and casting back to f32
+        // recovers the original bits for every finite value
+        for bits in [0u32, 0x3f000000, 0x3f800001, 0x7f7fffff, 0x00000001, 0xbf99999a] {
+            let x = f32::from_bits(bits);
+            let s = Json::Num(x as f64).to_string();
+            let back = parse(&s).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back.to_bits(), bits, "{x} -> {s} -> {back}");
+        }
     }
 
     #[test]

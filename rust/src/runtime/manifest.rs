@@ -12,42 +12,64 @@ use std::path::{Path, PathBuf};
 /// Shape/dtype of one model parameter.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamSpec {
+    /// Parameter dims, outermost first.
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. "float32", "int32").
     pub dtype: String,
 }
 
 /// The paper-tile artifact description.
 #[derive(Clone, Debug)]
 pub struct TileSpec {
+    /// Input channels `C`.
     pub channels: usize,
+    /// Input spatial height `IH`.
     pub in_h: usize,
+    /// Input spatial width `IW`.
     pub in_w: usize,
+    /// Kernel spatial height `KY`.
     pub kernel_h: usize,
+    /// Kernel spatial width `KX`.
     pub kernel_w: usize,
+    /// Kernel count `M`.
     pub kernels: usize,
+    /// Dictionary bins `B`.
     pub bins: usize,
+    /// Output spatial height `OH`.
     pub out_h: usize,
+    /// Output spatial width `OW`.
     pub out_w: usize,
 }
 
 /// The e2e model artifact description.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
+    /// Input channels.
     pub in_c: usize,
+    /// Input spatial height.
     pub in_h: usize,
+    /// Input spatial width.
     pub in_w: usize,
+    /// Output class count.
     pub classes: usize,
+    /// Dictionary bins per conv layer.
     pub bins: usize,
+    /// Batch sizes the AOT flow exported executables for.
     pub batch_sizes: Vec<usize>,
+    /// Positional parameter order of the exported executables.
     pub param_order: Vec<String>,
+    /// Per-parameter shape/dtype specs, by name.
     pub params: BTreeMap<String, ParamSpec>,
 }
 
 /// Parsed manifest plus artifact file paths.
 #[derive(Clone, Debug)]
 pub struct ArtifactManifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Paper-tile artifact description.
     pub tile: TileSpec,
+    /// E2e model artifact description.
     pub model: ModelSpec,
     /// artifact name -> file name
     pub artifacts: BTreeMap<String, String>,

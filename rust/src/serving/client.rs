@@ -1,0 +1,168 @@
+//! Blocking wire-protocol client.
+//!
+//! [`Client`] speaks [`crate::serving::proto`] over one TCP connection:
+//! one request, one reply, in order (the server answers each
+//! connection's frames serially).  It is the reference consumer of the
+//! protocol — the e2e tests, the network load generator
+//! ([`crate::coordinator::loadgen::run_open_loop_net`]), and
+//! `repro bench-net` all drive a server through it.
+//!
+//! Errors split into [`ClientError::Server`] (the server answered with a
+//! typed `error` frame — inspect its [`proto::ErrorCode`], e.g.
+//! `RESOURCE_EXHAUSTED` is retryable) and transport-level failures
+//! (connection closed, malformed frame), so callers can tell overload
+//! from breakage.
+
+use crate::serving::proto::{
+    self, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame, ReadOutcome,
+};
+use crate::tensor::Tensor;
+use std::fmt;
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport-level I/O failure (connect, read, or write).
+    Io(std::io::Error),
+    /// The server answered with a typed `error` frame.
+    Server(ErrorFrame),
+    /// The server closed the connection before answering.
+    Closed,
+    /// The server sent something indecipherable or out of protocol
+    /// (wrong reply type, mismatched id, undecodable payload).
+    Protocol(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport error: {e}"),
+            ClientError::Server(e) => write!(f, "server error {e}"),
+            ClientError::Closed => f.write_str("server closed the connection"),
+            ClientError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl ClientError {
+    /// The server's error code, when this is a typed server rejection.
+    pub fn server_code(&self) -> Option<proto::ErrorCode> {
+        match self {
+            ClientError::Server(e) => Some(e.code),
+            _ => None,
+        }
+    }
+}
+
+/// A blocking connection to a serving front-end.
+pub struct Client {
+    stream: TcpStream,
+    next_id: u64,
+    max_frame_bytes: usize,
+}
+
+impl Client {
+    /// Connect to a running [`crate::serving::net::Server`].
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, next_id: 1, max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES })
+    }
+
+    /// Raise or lower the reply-size cap (must match the server's to
+    /// receive large metrics/model lists; the default matches
+    /// [`proto::DEFAULT_MAX_FRAME_BYTES`]).
+    pub fn with_max_frame_bytes(mut self, max: usize) -> Client {
+        self.max_frame_bytes = max;
+        self
+    }
+
+    fn roundtrip(&mut self, frame: &Frame) -> Result<Frame, ClientError> {
+        proto::write_frame(&mut self.stream, frame)?;
+        match proto::read_frame(&mut self.stream, self.max_frame_bytes)? {
+            ReadOutcome::Eof => Err(ClientError::Closed),
+            ReadOutcome::Bad(e) => Err(ClientError::Protocol(e.to_string())),
+            ReadOutcome::Frame(Frame::Error(e)) => Err(ClientError::Server(e)),
+            ReadOutcome::Frame(reply) => Ok(reply),
+        }
+    }
+
+    /// Run one `[C, H, W]` image through `model` (`None` = the server's
+    /// default model) and block for the reply.
+    pub fn infer(
+        &mut self,
+        model: Option<&str>,
+        image: &Tensor<f32>,
+    ) -> Result<InferOkFrame, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Infer(InferFrame {
+            id,
+            model: model.map(str::to_string),
+            dims: image.dims().to_vec(),
+            data: image.data().to_vec(),
+        });
+        match self.roundtrip(&frame)? {
+            Frame::InferOk(ok) if ok.id == id => Ok(ok),
+            Frame::InferOk(ok) => Err(ClientError::Protocol(format!(
+                "reply id {} does not match request id {id}",
+                ok.id
+            ))),
+            other => Err(ClientError::Protocol(format!(
+                "expected infer_ok, got '{}'",
+                other.type_str()
+            ))),
+        }
+    }
+
+    /// The server's registry model names and default model.
+    pub fn list_models(&mut self) -> Result<ModelsFrame, ClientError> {
+        match self.roundtrip(&Frame::ListModels)? {
+            Frame::Models(m) => Ok(m),
+            other => {
+                Err(ClientError::Protocol(format!("expected models, got '{}'", other.type_str())))
+            }
+        }
+    }
+
+    /// A serving metrics snapshot (coordinator + network layer).
+    pub fn metrics(&mut self) -> Result<MetricsFrame, ClientError> {
+        match self.roundtrip(&Frame::GetMetrics)? {
+            Frame::Metrics(m) => Ok(m),
+            other => {
+                Err(ClientError::Protocol(format!("expected metrics, got '{}'", other.type_str())))
+            }
+        }
+    }
+
+    /// Liveness probe: send a nonce, require the matching `pong`.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        let nonce = self.next_id;
+        self.next_id += 1;
+        match self.roundtrip(&Frame::Ping { nonce })? {
+            Frame::Pong { nonce: got } if got == nonce => Ok(()),
+            Frame::Pong { nonce: got } => {
+                Err(ClientError::Protocol(format!("pong nonce {got} != ping nonce {nonce}")))
+            }
+            other => {
+                Err(ClientError::Protocol(format!("expected pong, got '{}'", other.type_str())))
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Layer-4 network serving front-end: the process boundary.
+//!
+//! Everything below this layer is in-process: the
+//! [`crate::coordinator`] batches and executes, the
+//! [`crate::model_store`] hot-swaps artifacts — but nothing could reach
+//! them from outside.  This module is the host interface the paper's
+//! accelerator (and any multiplier-less design like TMA) needs to be
+//! deployable: a hand-rolled wire protocol and a TCP server in front of
+//! a [`crate::coordinator::Coordinator`].
+//!
+//! * [`proto`] — length-prefixed canonical-JSON frames (request /
+//!   response / error / metrics / model listing), reference
+//!   implementation of `docs/WIRE_PROTOCOL.md`; no serde, built on
+//!   [`crate::runtime::json`].
+//! * [`net`] — `std::net` TCP server: one accept thread, one thread per
+//!   connection (bounded), **admission control** (bounded in-flight
+//!   queue depth; overload answers a typed `RESOURCE_EXHAUSTED` frame
+//!   instead of stalling the socket), per-connection and per-model
+//!   metrics, clean drop-to-shutdown.
+//! * [`client`] — blocking client used by the e2e tests, the network
+//!   load generator, and `repro bench-net`.
+//!
+//! The full request path (socket → frame → coordinator queue → batch →
+//! compiled plan → PASM kernels → response frame) is walked through in
+//! `docs/ARCHITECTURE.md`.  Start a server from the CLI with
+//! `repro serve --listen 127.0.0.1:7878` and drive it with
+//! `repro bench-net --addr 127.0.0.1:7878`.
+
+pub mod client;
+pub mod net;
+pub mod proto;
+
+pub use client::{Client, ClientError};
+pub use net::{Server, ServerConfig};
+pub use proto::{ErrorCode, ErrorFrame, Frame, InferOkFrame, MetricsFrame, NetCounters};

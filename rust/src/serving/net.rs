@@ -1,0 +1,569 @@
+//! TCP front-end: thread-per-connection server over the wire protocol.
+//!
+//! [`Server::bind`] accepts connections on a `std::net` listener and
+//! serves [`crate::serving::proto`] frames against a shared
+//! [`Coordinator`].  No async runtime exists in the offline build, so the
+//! design is the contention-minimal std one: one accept thread, one
+//! thread per connection (bounded by
+//! [`ServerConfig::max_connections`]), frames handled serially per
+//! connection — responses come back in request order on each socket.
+//!
+//! **Admission control** keeps overload typed instead of silent: an
+//! `infer` frame is only submitted to the coordinator after taking one of
+//! [`ServerConfig::max_inflight`] slots (held until its response is
+//! written); at the cap the server immediately answers a
+//! `RESOURCE_EXHAUSTED` error frame and keeps the connection open — the
+//! socket never stalls behind an unbounded queue.  The connection cap
+//! works the same way: an over-cap accept is answered with one
+//! `RESOURCE_EXHAUSTED` frame and closed.
+//!
+//! Shutdown is clean by construction: [`Server::shutdown`] (also run on
+//! drop) stops the accept loop, then every connection thread finishes the
+//! request it is waiting on — the coordinator is kept alive by the
+//! server's own `Arc` — writes the response, and exits; admitted requests
+//! are never lost.
+
+use crate::coordinator::server::Coordinator;
+use crate::serving::proto::{
+    self, ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame,
+    NetCounters,
+};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Wall-clock grace a peer mid-frame gets to finish sending once
+/// shutdown begins.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Tunables of the network front-end.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Concurrent connection cap; over-cap accepts get one
+    /// `RESOURCE_EXHAUSTED` error frame and are closed.
+    pub max_connections: usize,
+    /// Admitted-but-unanswered `infer` cap across all connections; at the
+    /// cap new infer frames get `RESOURCE_EXHAUSTED` (the connection
+    /// stays open, the client may retry).
+    pub max_inflight: usize,
+    /// Per-frame payload size cap (bytes).
+    pub max_frame_bytes: usize,
+    /// How often blocked reads wake to check for shutdown.
+    pub poll_interval: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_connections: 64,
+            max_inflight: 256,
+            max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES,
+            poll_interval: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Monotonic counters + gauges of the network layer (all atomic; shared
+/// by every connection thread and snapshotted into the `metrics` frame).
+#[derive(Debug, Default)]
+struct NetMetrics {
+    connections_opened: AtomicU64,
+    connections_rejected: AtomicU64,
+    frames_received: AtomicU64,
+    frames_sent: AtomicU64,
+    overload_rejections: AtomicU64,
+    protocol_errors: AtomicU64,
+    requests_failed: AtomicU64,
+    requests_ok: AtomicU64,
+}
+
+/// State shared between the server handle, the accept thread, and every
+/// connection thread.
+struct Shared {
+    coord: Arc<Coordinator>,
+    config: ServerConfig,
+    shutdown: AtomicBool,
+    /// Gauge: connection threads currently alive.
+    open: AtomicUsize,
+    /// Gauge: infer requests admitted and not yet answered.
+    inflight: AtomicUsize,
+    metrics: NetMetrics,
+    /// Connection thread handles, reaped opportunistically and joined on
+    /// shutdown.
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn snapshot(&self) -> NetCounters {
+        NetCounters {
+            connections_open: self.open.load(Ordering::SeqCst) as u64,
+            connections_opened: self.metrics.connections_opened.load(Ordering::SeqCst),
+            connections_rejected: self.metrics.connections_rejected.load(Ordering::SeqCst),
+            frames_received: self.metrics.frames_received.load(Ordering::SeqCst),
+            frames_sent: self.metrics.frames_sent.load(Ordering::SeqCst),
+            inflight: self.inflight.load(Ordering::SeqCst) as u64,
+            overload_rejections: self.metrics.overload_rejections.load(Ordering::SeqCst),
+            protocol_errors: self.metrics.protocol_errors.load(Ordering::SeqCst),
+            requests_failed: self.metrics.requests_failed.load(Ordering::SeqCst),
+            requests_ok: self.metrics.requests_ok.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Handle to a running TCP serving front-end.  Dropping it shuts the
+/// server down cleanly (in-flight requests finish first).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting connections against `coord`.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        coord: Arc<Coordinator>,
+        config: ServerConfig,
+    ) -> Result<Server> {
+        anyhow::ensure!(config.max_connections >= 1, "max_connections must be >= 1");
+        anyhow::ensure!(config.max_inflight >= 1, "max_inflight must be >= 1");
+        let listener = TcpListener::bind(addr).context("bind serving listener")?;
+        let local = listener.local_addr().context("listener local addr")?;
+        let shared = Arc::new(Shared {
+            coord,
+            config,
+            shutdown: AtomicBool::new(false),
+            open: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            metrics: NetMetrics::default(),
+            conns: Mutex::new(Vec::new()),
+        });
+        let shared_accept = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("pasm-serving-accept".into())
+            .spawn(move || accept_loop(listener, shared_accept))
+            .context("spawn serving accept thread")?;
+        Ok(Server { addr: local, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The coordinator this server fronts.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.shared.coord
+    }
+
+    /// Snapshot of the network-layer counters.
+    pub fn net_metrics(&self) -> NetCounters {
+        self.shared.snapshot()
+    }
+
+    /// Stop accepting, let every admitted request finish and its response
+    /// be written, then join all threads.  Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // wake the blocking accept() with a throwaway connection; a
+        // wildcard bind (0.0.0.0 / ::) is not connectable on every
+        // platform, so aim the wake at the matching loopback address
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // transient accept failure (e.g. fd pressure): back off
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // connection cap: answer with one typed error frame and close
+        let open = shared.open.load(Ordering::SeqCst);
+        if open >= shared.config.max_connections {
+            shared.metrics.connections_rejected.fetch_add(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let frame = Frame::Error(ErrorFrame::new(
+                None,
+                ErrorCode::ResourceExhausted,
+                format!("server at max connections ({})", shared.config.max_connections),
+            ));
+            let _ = proto::write_frame(&mut stream, &frame);
+            continue;
+        }
+        shared.open.fetch_add(1, Ordering::SeqCst);
+        shared.metrics.connections_opened.fetch_add(1, Ordering::SeqCst);
+        let shared_conn = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("pasm-serving-conn".into())
+            .spawn(move || {
+                // decrement the open gauge even if the handler panics,
+                // or the connection cap would leak slots
+                let _open = OpenGuard(&shared_conn.open);
+                connection_loop(stream, &shared_conn);
+            });
+        match spawned {
+            Ok(handle) => {
+                let mut conns = shared.conns.lock().unwrap();
+                // opportunistically reap finished threads so a
+                // long-running server does not accumulate handles
+                let mut keep = Vec::with_capacity(conns.len() + 1);
+                for h in conns.drain(..) {
+                    if h.is_finished() {
+                        let _ = h.join();
+                    } else {
+                        keep.push(h);
+                    }
+                }
+                keep.push(handle);
+                *conns = keep;
+            }
+            Err(_) => {
+                shared.open.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// RAII decrement of the open-connections gauge (runs on panic too).
+struct OpenGuard<'a>(&'a AtomicUsize);
+
+impl Drop for OpenGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// What one shutdown-aware full read produced.
+enum FullRead {
+    /// The buffer was filled.
+    Done,
+    /// Clean EOF before the first byte.
+    Eof,
+    /// Shutdown was requested while idle at a frame boundary.
+    Shutdown,
+}
+
+/// Fill `buf` from `stream`, tolerating read timeouts (the socket has
+/// [`ServerConfig::poll_interval`] as its read timeout so blocked reads
+/// can observe `shutdown`).  Partial frames are never abandoned: once the
+/// first byte arrived, shutdown gives the peer [`SHUTDOWN_GRACE`] of
+/// wall clock to finish the frame.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+) -> std::io::Result<FullRead> {
+    use std::io::Read;
+    let mut filled = 0usize;
+    let mut shutdown_deadline: Option<Instant> = None;
+    while filled < buf.len() {
+        if shutdown.load(Ordering::SeqCst) {
+            if filled == 0 {
+                return Ok(FullRead::Shutdown);
+            }
+            let deadline =
+                *shutdown_deadline.get_or_insert_with(|| Instant::now() + SHUTDOWN_GRACE);
+            if Instant::now() > deadline {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "peer stalled mid-frame during shutdown",
+                ));
+            }
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(FullRead::Eof)
+                } else {
+                    Err(std::io::ErrorKind::UnexpectedEof.into())
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FullRead::Done)
+}
+
+/// Serve one connection until EOF, shutdown, or an unrecoverable
+/// transport/framing error.
+fn connection_loop(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.config.poll_interval));
+    loop {
+        let mut header = [0u8; 4];
+        match read_full(&mut stream, &mut header, &shared.shutdown) {
+            Ok(FullRead::Done) => {}
+            Ok(FullRead::Eof) | Ok(FullRead::Shutdown) | Err(_) => return,
+        }
+        let len = u32::from_be_bytes(header) as usize;
+        if len > shared.config.max_frame_bytes {
+            // framing can no longer be trusted: answer once, then close
+            shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
+            let frame = Frame::Error(ErrorFrame::new(
+                None,
+                ErrorCode::InvalidFrame,
+                format!(
+                    "frame of {len} bytes exceeds the {}-byte cap",
+                    shared.config.max_frame_bytes
+                ),
+            ));
+            send(&mut stream, shared, &frame);
+            return;
+        }
+        let mut payload = vec![0u8; len];
+        match read_full(&mut stream, &mut payload, &shared.shutdown) {
+            Ok(FullRead::Done) => {}
+            Ok(FullRead::Eof) | Ok(FullRead::Shutdown) | Err(_) => return,
+        }
+        shared.metrics.frames_received.fetch_add(1, Ordering::SeqCst);
+        let frame = match proto::decode(&payload) {
+            Ok(frame) => frame,
+            Err(e) => {
+                // well-framed but undecodable: typed error, keep serving
+                shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
+                send(&mut stream, shared, &Frame::Error(e));
+                continue;
+            }
+        };
+        // the admission slot (for infer frames) is released only after
+        // the reply is written, so the inflight gauge also covers
+        // responses stuck behind a slow-reading client
+        let (reply, slot) = handle_frame(frame, shared);
+        send(&mut stream, shared, &reply);
+        drop(slot);
+    }
+}
+
+fn send(stream: &mut TcpStream, shared: &Shared, frame: &Frame) {
+    if proto::write_frame(stream, frame).is_ok() {
+        shared.metrics.frames_sent.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Dispatch one decoded client frame to its reply frame (plus, for infer
+/// frames, the admission slot the caller must hold until the reply is
+/// written).
+fn handle_frame(frame: Frame, shared: &Shared) -> (Frame, Option<InflightSlot<'_>>) {
+    match frame {
+        Frame::Infer(req) => handle_infer(req, shared),
+        Frame::ListModels => {
+            let coord = &shared.coord;
+            let reply = Frame::Models(ModelsFrame {
+                models: coord.registry().map(|r| r.names()).unwrap_or_default(),
+                default: coord.default_model().map(str::to_string),
+            });
+            (reply, None)
+        }
+        Frame::GetMetrics => {
+            let m = shared.coord.metrics();
+            let reply = Frame::Metrics(MetricsFrame {
+                backend: m.backend.clone(),
+                requests: m.requests,
+                batches: m.batches,
+                failed_batches: m.failed_batches,
+                p50_us: m.percentile_us(50.0),
+                p90_us: m.percentile_us(90.0),
+                p99_us: m.percentile_us(99.0),
+                per_model: m.per_model.clone(),
+                net: shared.snapshot(),
+            });
+            (reply, None)
+        }
+        Frame::Ping { nonce } => (Frame::Pong { nonce }, None),
+        // server-to-client frames arriving at the server
+        other => (
+            Frame::Error(ErrorFrame::new(
+                None,
+                ErrorCode::InvalidFrame,
+                format!("servers do not accept '{}' frames", other.type_str()),
+            )),
+            None,
+        ),
+    }
+}
+
+/// RAII slot of the in-flight admission gauge.
+struct InflightSlot<'a>(&'a AtomicUsize);
+
+impl<'a> InflightSlot<'a> {
+    /// Take a slot unless the gauge is at `cap`.
+    fn acquire(gauge: &'a AtomicUsize, cap: usize) -> Option<Self> {
+        gauge
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n < cap {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            })
+            .ok()
+            .map(|_| InflightSlot(gauge))
+    }
+}
+
+impl Drop for InflightSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot<'_>>) {
+    let id = Some(req.id);
+    let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(id, code, msg));
+
+    // admission control first: reject before any validation work
+    let Some(slot) = InflightSlot::acquire(&shared.inflight, shared.config.max_inflight) else {
+        shared.metrics.overload_rejections.fetch_add(1, Ordering::SeqCst);
+        let reply = err(
+            ErrorCode::ResourceExhausted,
+            format!("server at max in-flight requests ({})", shared.config.max_inflight),
+        );
+        return (reply, None);
+    };
+    let slot = Some(slot);
+
+    // checked product: a crafted dims array must not wrap around to a
+    // plausible volume (or panic the thread in a debug build)
+    let volume = req.dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d));
+    let valid = matches!(volume, Some(v) if req.dims.len() == 3 && v > 0 && v == req.data.len());
+    if !valid {
+        let reply = err(
+            ErrorCode::BadImage,
+            format!(
+                "dims {:?} do not describe the {}-element data array",
+                req.dims,
+                req.data.len()
+            ),
+        );
+        return (reply, slot);
+    }
+    if !req.data.iter().all(|x| x.is_finite()) {
+        return (err(ErrorCode::BadImage, "image data contains non-finite values".into()), slot);
+    }
+    let image = Tensor::from_vec(&req.dims, req.data);
+
+    // pre-resolve the model name for a deterministic typed error (the
+    // engine would also reject it, but post-batching and stringly)
+    if let Some(model) = &req.model {
+        match shared.coord.registry() {
+            Some(reg) => {
+                if reg.get(model).is_none() {
+                    let reply = err(
+                        ErrorCode::UnknownModel,
+                        format!("model '{model}' is not in the registry"),
+                    );
+                    return (reply, slot);
+                }
+            }
+            None => {
+                let reply = err(
+                    ErrorCode::UnknownModel,
+                    format!("request names model '{model}' but the server has no registry"),
+                );
+                return (reply, slot);
+            }
+        }
+    }
+
+    let submitted = match &req.model {
+        Some(model) => shared.coord.submit_to(model, image),
+        None => shared.coord.submit(image),
+    };
+    let rx = match submitted {
+        Ok(rx) => rx,
+        Err(_) => {
+            shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
+            return (err(ErrorCode::ShuttingDown, "coordinator is shut down".into()), slot);
+        }
+    };
+    let reply = match rx.recv() {
+        Ok(Ok(resp)) => {
+            shared.metrics.requests_ok.fetch_add(1, Ordering::SeqCst);
+            Frame::InferOk(InferOkFrame {
+                id: req.id,
+                model: resp.model.as_deref().map(str::to_string),
+                logits: resp.logits,
+                predicted: resp.predicted,
+                queue_us: resp.queue_us,
+                compute_us: resp.compute_us,
+                batch_size: resp.batch_size,
+                batch_occupancy: resp.batch_occupancy,
+                hw: resp.hw,
+            })
+        }
+        Ok(Err(msg)) => {
+            shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
+            // a hot-removed model loses the pre-check race above; keep
+            // the error typed by recognizing the engine's message
+            let code = if msg.contains("is not in the registry") {
+                ErrorCode::UnknownModel
+            } else {
+                ErrorCode::Internal
+            };
+            err(code, msg)
+        }
+        Err(_) => {
+            shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
+            err(ErrorCode::Internal, "coordinator dropped the request".into())
+        }
+    };
+    (reply, slot)
+}
+
+/// Write the bound address to `path` atomically (temp file + rename), so
+/// a script that started the server on an ephemeral port (`--listen
+/// 127.0.0.1:0`) can read the real address without racing a partial
+/// write.  Used by `repro serve --port-file` and the CI quickstart check.
+pub fn write_port_file(path: &std::path::Path, addr: SocketAddr) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        write!(f, "{addr}").with_context(|| format!("write {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} into place", path.display()))?;
+    Ok(())
+}

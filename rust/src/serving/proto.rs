@@ -1,0 +1,917 @@
+//! The wire protocol: length-prefixed canonical-JSON frames.
+//!
+//! `docs/WIRE_PROTOCOL.md` is the normative spec; this module is the
+//! reference implementation, and `tests/wire_protocol_doc.rs` keeps the
+//! two in sync by round-tripping every example frame in the spec
+//! byte-for-byte through [`decode`] + [`encode`].
+//!
+//! Framing: every frame is a 4-byte **big-endian** unsigned payload
+//! length followed by that many bytes of UTF-8 JSON.  The JSON payload is
+//! **canonical** ([`crate::runtime::json`]): compact, object keys sorted
+//! lexicographically, floats in shortest round-trip decimal form, and
+//! optional fields *omitted* rather than `null` — so a given [`Frame`]
+//! value has exactly one byte encoding.  Every payload carries
+//! `"v": 1` ([`PROTOCOL_VERSION`]) and a `"type"` tag; unknown versions
+//! and types are rejected with typed [`ErrorFrame`]s, never by dropping
+//! the connection.
+//!
+//! Numbers ride as JSON numbers (f64): integers are exact up to 2^53,
+//! and `f32` tensor data survives the f32 → f64 → shortest-decimal →
+//! f64 → f32 round trip bit-exactly (pinned by a test in
+//! [`crate::runtime::json`]).
+
+use crate::coordinator::cost::HwCost;
+use crate::coordinator::metrics::ModelCounters;
+use crate::runtime::json::{self, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Protocol version every frame carries in its `"v"` field.  Additive,
+/// backwards-compatible changes (new frame types, new optional fields)
+/// keep the version; anything else bumps it, and a server rejects
+/// mismatches with `UNSUPPORTED_VERSION`.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Default cap on one frame's payload size (1 MiB — a digits-model infer
+/// frame is ~3 KiB, so this bounds a malicious or confused peer, not a
+/// legitimate one).
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Machine-readable error category carried by [`ErrorFrame`].
+///
+/// The string forms (SCREAMING_SNAKE_CASE) are the wire encoding and are
+/// part of the protocol spec — see `docs/WIRE_PROTOCOL.md` for when each
+/// code is returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The payload was not valid canonical-JSON, was missing required
+    /// fields, had wrong field types, or was a frame type the receiving
+    /// side never accepts.
+    InvalidFrame,
+    /// The frame's `"v"` did not match [`PROTOCOL_VERSION`].
+    UnsupportedVersion,
+    /// The `"type"` tag names no known frame type.
+    UnknownType,
+    /// The infer request's `dims`/`data` are inconsistent, empty, or not
+    /// finite numbers.
+    BadImage,
+    /// The named model is not in the server's registry (or the server
+    /// serves no registry at all).
+    UnknownModel,
+    /// Admission control rejected the request: the server is at its
+    /// in-flight request cap or connection cap.  Retryable by design.
+    ResourceExhausted,
+    /// The server is shutting down and no longer accepts work.
+    ShuttingDown,
+    /// Execution failed server-side (batch error or panic).
+    Internal,
+}
+
+impl ErrorCode {
+    /// The wire encoding of this code.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::InvalidFrame => "INVALID_FRAME",
+            ErrorCode::UnsupportedVersion => "UNSUPPORTED_VERSION",
+            ErrorCode::UnknownType => "UNKNOWN_TYPE",
+            ErrorCode::BadImage => "BAD_IMAGE",
+            ErrorCode::UnknownModel => "UNKNOWN_MODEL",
+            ErrorCode::ResourceExhausted => "RESOURCE_EXHAUSTED",
+            ErrorCode::ShuttingDown => "SHUTTING_DOWN",
+            ErrorCode::Internal => "INTERNAL",
+        }
+    }
+
+    /// Parse the wire encoding; `None` for unknown codes.
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "INVALID_FRAME" => ErrorCode::InvalidFrame,
+            "UNSUPPORTED_VERSION" => ErrorCode::UnsupportedVersion,
+            "UNKNOWN_TYPE" => ErrorCode::UnknownType,
+            "BAD_IMAGE" => ErrorCode::BadImage,
+            "UNKNOWN_MODEL" => ErrorCode::UnknownModel,
+            "RESOURCE_EXHAUSTED" => ErrorCode::ResourceExhausted,
+            "SHUTTING_DOWN" => ErrorCode::ShuttingDown,
+            "INTERNAL" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Whether a client may retry the identical request and reasonably
+    /// expect it to succeed (today: only `RESOURCE_EXHAUSTED`).
+    pub fn retryable(&self) -> bool {
+        matches!(self, ErrorCode::ResourceExhausted)
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// `infer` — client asks the server to run one image through a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferFrame {
+    /// Client-chosen request id, echoed verbatim in the reply.
+    pub id: u64,
+    /// Registry model to route to; `None` = the server's default model.
+    pub model: Option<String>,
+    /// Image dims `[C, H, W]`.
+    pub dims: Vec<usize>,
+    /// Row-major image data; `data.len()` must equal the dims product.
+    pub data: Vec<f32>,
+}
+
+/// `infer_ok` — the server's successful answer to an `infer` frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferOkFrame {
+    /// The request id this reply answers.
+    pub id: u64,
+    /// Model that served the request (`None` = the default backend model).
+    pub model: Option<String>,
+    /// Raw logits, one per class.
+    pub logits: Vec<f32>,
+    /// `argmax(logits)`.
+    pub predicted: usize,
+    /// Time the request spent queued before its batch launched (µs).
+    pub queue_us: u64,
+    /// Backend execute wall time for the whole batch (µs).
+    pub compute_us: u64,
+    /// Bucket size of the batch this request rode in (incl. padding).
+    pub batch_size: usize,
+    /// Live requests in that batch (excl. padding).
+    pub batch_occupancy: usize,
+    /// Simulated hardware cost of the batch on the modeled accelerator.
+    pub hw: HwCost,
+}
+
+/// `error` — the receiving side rejected or failed a frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorFrame {
+    /// The offending request's id, when the server could still read one.
+    pub id: Option<u64>,
+    /// Machine-readable category.
+    pub code: ErrorCode,
+    /// Human-readable detail (not part of the stable protocol surface).
+    pub message: String,
+}
+
+impl ErrorFrame {
+    /// Convenience constructor.
+    pub fn new(id: Option<u64>, code: ErrorCode, message: impl Into<String>) -> Self {
+        ErrorFrame { id, code, message: message.into() }
+    }
+}
+
+impl fmt::Display for ErrorFrame {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+/// `models` — the server's answer to `list_models`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelsFrame {
+    /// Registry model names, sorted (empty when no registry is attached).
+    pub models: Vec<String>,
+    /// Model unnamed requests route to, if any.
+    pub default: Option<String>,
+}
+
+/// Aggregate network-layer counters reported in the `metrics` frame.
+///
+/// `*_open`/`inflight` are gauges (current values); everything else is a
+/// monotonic counter since server start.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetCounters {
+    /// Connections currently open.
+    pub connections_open: u64,
+    /// Connections accepted since start.
+    pub connections_opened: u64,
+    /// Connections refused at the connection cap.
+    pub connections_rejected: u64,
+    /// Frames successfully read off sockets.
+    pub frames_received: u64,
+    /// Frames written to sockets.
+    pub frames_sent: u64,
+    /// Infer requests currently admitted and awaiting a response.
+    pub inflight: u64,
+    /// Infer frames rejected at the in-flight cap (`RESOURCE_EXHAUSTED`).
+    pub overload_rejections: u64,
+    /// Frames that failed to decode (connection survived).
+    pub protocol_errors: u64,
+    /// Infer requests that failed after admission.
+    pub requests_failed: u64,
+    /// Infer requests answered successfully.
+    pub requests_ok: u64,
+}
+
+/// `metrics` — serving metrics snapshot: the coordinator's counters and
+/// latency percentiles plus the network layer's [`NetCounters`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsFrame {
+    /// Execution backend label ("native", "pjrt", ...).
+    pub backend: String,
+    /// Total requests served by the coordinator.
+    pub requests: u64,
+    /// Total batches launched.
+    pub batches: u64,
+    /// Batches that failed (execution error, panic, unknown model).
+    pub failed_batches: u64,
+    /// End-to-end latency percentiles (µs); `None` until data arrives.
+    pub p50_us: Option<u64>,
+    /// 90th percentile latency (µs).
+    pub p90_us: Option<u64>,
+    /// 99th percentile latency (µs).
+    pub p99_us: Option<u64>,
+    /// Per-model request/batch counters, keyed by model name.
+    pub per_model: BTreeMap<String, ModelCounters>,
+    /// Network-layer counters.
+    pub net: NetCounters,
+}
+
+/// One protocol frame, either direction.
+///
+/// Clients send `Infer`, `ListModels`, `GetMetrics`, and `Ping`; servers
+/// answer with `InferOk`, `Models`, `Metrics`, `Pong`, or `Error`.  A
+/// frame arriving on the wrong side is answered with
+/// `ErrorCode::InvalidFrame`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Run one image through a model.
+    Infer(InferFrame),
+    /// Successful inference reply.
+    InferOk(InferOkFrame),
+    /// Typed rejection or failure.
+    Error(ErrorFrame),
+    /// Ask for the server's model names.
+    ListModels,
+    /// Model names reply.
+    Models(ModelsFrame),
+    /// Ask for a serving metrics snapshot.
+    GetMetrics,
+    /// Metrics snapshot reply.
+    Metrics(MetricsFrame),
+    /// Liveness probe; the server echoes the nonce back in a `Pong`.
+    Ping {
+        /// Arbitrary client-chosen value echoed in the reply.
+        nonce: u64,
+    },
+    /// Liveness reply carrying the `Ping`'s nonce.
+    Pong {
+        /// The probed frame's nonce.
+        nonce: u64,
+    },
+}
+
+impl Frame {
+    /// The frame's wire `"type"` tag.
+    pub fn type_str(&self) -> &'static str {
+        match self {
+            Frame::Infer(_) => "infer",
+            Frame::InferOk(_) => "infer_ok",
+            Frame::Error(_) => "error",
+            Frame::ListModels => "list_models",
+            Frame::Models(_) => "models",
+            Frame::GetMetrics => "get_metrics",
+            Frame::Metrics(_) => "metrics",
+            Frame::Ping { .. } => "ping",
+            Frame::Pong { .. } => "pong",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+fn uint(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn f32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| num(x as f64)).collect())
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| uint(x as u64)).collect())
+}
+
+fn opt_u64_json(v: Option<u64>) -> Json {
+    match v {
+        Some(n) => uint(n),
+        None => Json::Null,
+    }
+}
+
+/// Base object with the `v` and `type` fields every frame carries.
+fn base(type_str: &str) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), uint(PROTOCOL_VERSION));
+    m.insert("type".to_string(), Json::Str(type_str.to_string()));
+    m
+}
+
+fn put(m: &mut BTreeMap<String, Json>, key: &str, val: Json) {
+    m.insert(key.to_string(), val);
+}
+
+/// Serialize a frame to its canonical JSON payload (no length prefix).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut m = base(frame.type_str());
+    match frame {
+        Frame::Infer(f) => {
+            put(&mut m, "id", uint(f.id));
+            if let Some(model) = &f.model {
+                put(&mut m, "model", Json::Str(model.clone()));
+            }
+            put(&mut m, "dims", usize_arr(&f.dims));
+            put(&mut m, "data", f32_arr(&f.data));
+        }
+        Frame::InferOk(f) => {
+            put(&mut m, "id", uint(f.id));
+            if let Some(model) = &f.model {
+                put(&mut m, "model", Json::Str(model.clone()));
+            }
+            put(&mut m, "logits", f32_arr(&f.logits));
+            put(&mut m, "predicted", uint(f.predicted as u64));
+            put(&mut m, "queue_us", uint(f.queue_us));
+            put(&mut m, "compute_us", uint(f.compute_us));
+            put(&mut m, "batch_size", uint(f.batch_size as u64));
+            put(&mut m, "batch_occupancy", uint(f.batch_occupancy as u64));
+            let mut hw = BTreeMap::new();
+            put(&mut hw, "cycles", uint(f.hw.cycles));
+            put(&mut hw, "energy_j", num(f.hw.energy_j));
+            put(&mut hw, "accel_time_s", num(f.hw.accel_time_s));
+            put(&mut m, "hw", Json::Obj(hw));
+        }
+        Frame::Error(f) => {
+            if let Some(id) = f.id {
+                put(&mut m, "id", uint(id));
+            }
+            put(&mut m, "code", Json::Str(f.code.as_str().to_string()));
+            put(&mut m, "message", Json::Str(f.message.clone()));
+        }
+        Frame::ListModels | Frame::GetMetrics => {}
+        Frame::Models(f) => {
+            put(
+                &mut m,
+                "models",
+                Json::Arr(f.models.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+            if let Some(default) = &f.default {
+                put(&mut m, "default", Json::Str(default.clone()));
+            }
+        }
+        Frame::Metrics(f) => {
+            put(&mut m, "backend", Json::Str(f.backend.clone()));
+            put(&mut m, "requests", uint(f.requests));
+            put(&mut m, "batches", uint(f.batches));
+            put(&mut m, "failed_batches", uint(f.failed_batches));
+            put(&mut m, "p50_us", opt_u64_json(f.p50_us));
+            put(&mut m, "p90_us", opt_u64_json(f.p90_us));
+            put(&mut m, "p99_us", opt_u64_json(f.p99_us));
+            let mut per_model = BTreeMap::new();
+            for (name, c) in &f.per_model {
+                let mut cm = BTreeMap::new();
+                put(&mut cm, "requests", uint(c.requests));
+                put(&mut cm, "batches", uint(c.batches));
+                put(&mut cm, "failed_batches", uint(c.failed_batches));
+                per_model.insert(name.clone(), Json::Obj(cm));
+            }
+            put(&mut m, "per_model", Json::Obj(per_model));
+            let n = &f.net;
+            let mut nm = BTreeMap::new();
+            put(&mut nm, "connections_open", uint(n.connections_open));
+            put(&mut nm, "connections_opened", uint(n.connections_opened));
+            put(&mut nm, "connections_rejected", uint(n.connections_rejected));
+            put(&mut nm, "frames_received", uint(n.frames_received));
+            put(&mut nm, "frames_sent", uint(n.frames_sent));
+            put(&mut nm, "inflight", uint(n.inflight));
+            put(&mut nm, "overload_rejections", uint(n.overload_rejections));
+            put(&mut nm, "protocol_errors", uint(n.protocol_errors));
+            put(&mut nm, "requests_failed", uint(n.requests_failed));
+            put(&mut nm, "requests_ok", uint(n.requests_ok));
+            put(&mut m, "net", Json::Obj(nm));
+        }
+        Frame::Ping { nonce } | Frame::Pong { nonce } => {
+            put(&mut m, "nonce", uint(*nonce));
+        }
+    }
+    Json::Obj(m).to_string().into_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+type FieldResult<T> = Result<T, String>;
+
+fn need<'a>(obj: &'a BTreeMap<String, Json>, key: &str) -> FieldResult<&'a Json> {
+    obj.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn need_u64(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<u64> {
+    as_u64(need(obj, key)?).ok_or_else(|| format!("field '{key}' must be a non-negative integer"))
+}
+
+fn as_u64(v: &Json) -> Option<u64> {
+    let n = v.as_f64()?;
+    if n >= 0.0 && n.fract() == 0.0 && n <= (1u64 << 53) as f64 {
+        Some(n as u64)
+    } else {
+        None
+    }
+}
+
+fn opt_u64(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Option<u64>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => as_u64(v)
+            .map(Some)
+            .ok_or_else(|| format!("field '{key}' must be a non-negative integer or null")),
+    }
+}
+
+fn need_usize(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<usize> {
+    Ok(need_u64(obj, key)? as usize)
+}
+
+fn need_f64(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<f64> {
+    need(obj, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field '{key}' must be a number"))
+}
+
+fn need_str(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<String> {
+    Ok(need(obj, key)?
+        .as_str()
+        .ok_or_else(|| format!("field '{key}' must be a string"))?
+        .to_string())
+}
+
+fn opt_str(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Option<String>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_str().ok_or_else(|| format!("field '{key}' must be a string"))?.to_string(),
+        )),
+    }
+}
+
+fn need_f32_arr(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Vec<f32>> {
+    let items = need(obj, key)?
+        .as_arr()
+        .ok_or_else(|| format!("field '{key}' must be an array"))?;
+    items
+        .iter()
+        .map(|v| v.as_f64().map(|n| n as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| format!("field '{key}' must contain only numbers"))
+}
+
+fn need_usize_arr(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Vec<usize>> {
+    let items = need(obj, key)?
+        .as_arr()
+        .ok_or_else(|| format!("field '{key}' must be an array"))?;
+    items
+        .iter()
+        .map(|v| as_u64(v).map(|n| n as usize))
+        .collect::<Option<Vec<usize>>>()
+        .ok_or_else(|| format!("field '{key}' must contain only non-negative integers"))
+}
+
+fn need_str_arr(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Vec<String>> {
+    let items = need(obj, key)?
+        .as_arr()
+        .ok_or_else(|| format!("field '{key}' must be an array"))?;
+    items
+        .iter()
+        .map(|v| v.as_str().map(str::to_string))
+        .collect::<Option<Vec<String>>>()
+        .ok_or_else(|| format!("field '{key}' must contain only strings"))
+}
+
+/// Parse a canonical-JSON payload into a [`Frame`].
+///
+/// On failure, the returned [`ErrorFrame`] carries the appropriate
+/// [`ErrorCode`] (and the request's `id` when one could still be read),
+/// ready to be sent back as a typed `error` frame — a decode failure
+/// never requires dropping the connection, because framing is intact.
+pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
+    let bad = |code: ErrorCode, msg: String| ErrorFrame::new(None, code, msg);
+    let text = std::str::from_utf8(payload)
+        .map_err(|e| bad(ErrorCode::InvalidFrame, format!("payload is not UTF-8: {e}")))?;
+    let value = json::parse(text)
+        .map_err(|e| bad(ErrorCode::InvalidFrame, format!("payload is not JSON: {e}")))?;
+    let obj = value
+        .as_obj()
+        .ok_or_else(|| bad(ErrorCode::InvalidFrame, "payload is not a JSON object".into()))?;
+    // best-effort id for error attribution, before any validation
+    let id = obj.get("id").and_then(as_u64);
+    let fail = |code: ErrorCode, msg: String| ErrorFrame::new(id, code, msg);
+
+    let version = need_u64(obj, "v").map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
+    if version != PROTOCOL_VERSION {
+        return Err(fail(
+            ErrorCode::UnsupportedVersion,
+            format!("protocol version {version} (this build speaks {PROTOCOL_VERSION})"),
+        ));
+    }
+    let type_str = need_str(obj, "type").map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
+    let invalid = |m: String| fail(ErrorCode::InvalidFrame, m);
+    match type_str.as_str() {
+        "infer" => Ok(Frame::Infer(InferFrame {
+            id: need_u64(obj, "id").map_err(invalid)?,
+            model: opt_str(obj, "model").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+            dims: need_usize_arr(obj, "dims").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+            data: need_f32_arr(obj, "data").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+        })),
+        "infer_ok" => {
+            let hw_obj = need(obj, "hw")
+                .and_then(|v| v.as_obj().ok_or_else(|| "field 'hw' must be an object".into()))
+                .map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
+            let efail = |m: String| fail(ErrorCode::InvalidFrame, m);
+            Ok(Frame::InferOk(InferOkFrame {
+                id: need_u64(obj, "id").map_err(efail)?,
+                model: opt_str(obj, "model").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                logits: need_f32_arr(obj, "logits").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                predicted: need_usize(obj, "predicted")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                queue_us: need_u64(obj, "queue_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                compute_us: need_u64(obj, "compute_us")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                batch_size: need_usize(obj, "batch_size")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                batch_occupancy: need_usize(obj, "batch_occupancy")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                hw: HwCost {
+                    cycles: need_u64(hw_obj, "cycles")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    energy_j: need_f64(hw_obj, "energy_j")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    accel_time_s: need_f64(hw_obj, "accel_time_s")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                },
+            }))
+        }
+        "error" => {
+            let code_str = need_str(obj, "code").map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
+            let code = ErrorCode::parse(&code_str).ok_or_else(|| {
+                fail(ErrorCode::InvalidFrame, format!("unknown error code '{code_str}'"))
+            })?;
+            Ok(Frame::Error(ErrorFrame {
+                id,
+                code,
+                message: need_str(obj, "message").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+            }))
+        }
+        "list_models" => Ok(Frame::ListModels),
+        "models" => Ok(Frame::Models(ModelsFrame {
+            models: need_str_arr(obj, "models").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+            default: opt_str(obj, "default").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+        })),
+        "get_metrics" => Ok(Frame::GetMetrics),
+        "metrics" => {
+            let mfail = |m: String| fail(ErrorCode::InvalidFrame, m);
+            let per_model_obj = need(obj, "per_model")
+                .and_then(|v| {
+                    v.as_obj().ok_or_else(|| "field 'per_model' must be an object".into())
+                })
+                .map_err(mfail)?;
+            let mut per_model = BTreeMap::new();
+            for (name, counters) in per_model_obj {
+                let c = counters
+                    .as_obj()
+                    .ok_or_else(|| fail(ErrorCode::InvalidFrame, format!("model '{name}'")))?;
+                per_model.insert(
+                    name.clone(),
+                    ModelCounters {
+                        requests: need_u64(c, "requests")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                        batches: need_u64(c, "batches")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                        failed_batches: need_u64(c, "failed_batches")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    },
+                );
+            }
+            let net_obj = need(obj, "net")
+                .and_then(|v| v.as_obj().ok_or_else(|| "field 'net' must be an object".into()))
+                .map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
+            let nfail = |m: String| fail(ErrorCode::InvalidFrame, m);
+            Ok(Frame::Metrics(MetricsFrame {
+                backend: need_str(obj, "backend").map_err(nfail)?,
+                requests: need_u64(obj, "requests").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                batches: need_u64(obj, "batches").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                failed_batches: need_u64(obj, "failed_batches")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                p50_us: opt_u64(obj, "p50_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                p90_us: opt_u64(obj, "p90_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                p99_us: opt_u64(obj, "p99_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                per_model,
+                net: NetCounters {
+                    connections_open: need_u64(net_obj, "connections_open")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    connections_opened: need_u64(net_obj, "connections_opened")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    connections_rejected: need_u64(net_obj, "connections_rejected")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    frames_received: need_u64(net_obj, "frames_received")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    frames_sent: need_u64(net_obj, "frames_sent")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    inflight: need_u64(net_obj, "inflight")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    overload_rejections: need_u64(net_obj, "overload_rejections")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    protocol_errors: need_u64(net_obj, "protocol_errors")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    requests_failed: need_u64(net_obj, "requests_failed")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    requests_ok: need_u64(net_obj, "requests_ok")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                },
+            }))
+        }
+        "ping" => Ok(Frame::Ping {
+            nonce: need_u64(obj, "nonce").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+        }),
+        "pong" => Ok(Frame::Pong {
+            nonce: need_u64(obj, "nonce").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+        }),
+        other => Err(fail(ErrorCode::UnknownType, format!("unknown frame type '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framed transport
+// ---------------------------------------------------------------------------
+
+/// Result of one [`read_frame`] call.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// The peer closed the connection cleanly at a frame boundary.
+    Eof,
+    /// A well-formed frame.
+    Frame(Frame),
+    /// The payload was well-framed but failed to decode; the connection
+    /// can continue (send the [`ErrorFrame`] back and keep reading).
+    Bad(ErrorFrame),
+}
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let payload = encode(frame);
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame payload exceeds u32 length")
+    })?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()
+}
+
+/// Blocking read of one length-prefixed frame.
+///
+/// Clean EOF before the first header byte is [`ReadOutcome::Eof`]; EOF
+/// mid-frame is an `UnexpectedEof` error.  A declared payload length
+/// above `max_frame_bytes` is an `InvalidData` error — framing can no
+/// longer be trusted, so the caller must drop the connection.
+pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> std::io::Result<ReadOutcome> {
+    let mut header = [0u8; 4];
+    match r.read(&mut header)? {
+        0 => return Ok(ReadOutcome::Eof),
+        n => r.read_exact(&mut header[n..])?,
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max_frame_bytes {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {max_frame_bytes}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(match decode(&payload) {
+        Ok(frame) => ReadOutcome::Frame(frame),
+        Err(e) => ReadOutcome::Bad(e),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Infer(InferFrame {
+                id: 7,
+                model: Some("digits-b8".into()),
+                dims: vec![1, 2, 2],
+                data: vec![0.0, 0.5, -1.25, 3.0],
+            }),
+            Frame::Infer(InferFrame { id: 8, model: None, dims: vec![1, 1, 1], data: vec![1.0] }),
+            Frame::InferOk(InferOkFrame {
+                id: 7,
+                model: Some("digits-b8".into()),
+                logits: vec![0.125, -2.5],
+                predicted: 0,
+                queue_us: 140,
+                compute_us: 112,
+                batch_size: 8,
+                batch_occupancy: 5,
+                hw: HwCost { cycles: 9200, energy_j: 0.0000011, accel_time_s: 0.0000092 },
+            }),
+            Frame::Error(ErrorFrame::new(
+                Some(9),
+                ErrorCode::ResourceExhausted,
+                "server at max in-flight requests (256)",
+            )),
+            Frame::Error(ErrorFrame::new(None, ErrorCode::InvalidFrame, "payload is not JSON")),
+            Frame::ListModels,
+            Frame::Models(ModelsFrame {
+                models: vec!["digits-b16".into(), "digits-b8".into()],
+                default: Some("digits-b16".into()),
+            }),
+            Frame::GetMetrics,
+            Frame::Metrics(MetricsFrame {
+                backend: "native".into(),
+                requests: 38,
+                batches: 12,
+                failed_batches: 0,
+                p50_us: Some(950),
+                p90_us: Some(1800),
+                p99_us: None,
+                per_model: [(
+                    "digits-b8".to_string(),
+                    ModelCounters { requests: 20, batches: 6, failed_batches: 0 },
+                )]
+                .into_iter()
+                .collect(),
+                net: NetCounters {
+                    connections_open: 1,
+                    connections_opened: 3,
+                    connections_rejected: 0,
+                    frames_received: 40,
+                    frames_sent: 40,
+                    inflight: 1,
+                    overload_rejections: 2,
+                    protocol_errors: 0,
+                    requests_failed: 0,
+                    requests_ok: 38,
+                },
+            }),
+            Frame::Ping { nonce: 99 },
+            Frame::Pong { nonce: 99 },
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        for frame in sample_frames() {
+            let bytes = encode(&frame);
+            let back = decode(&bytes).unwrap_or_else(|e| panic!("{}: {e}", frame.type_str()));
+            assert_eq!(back, frame, "{}", frame.type_str());
+            // canonical: decode → encode reproduces the identical bytes
+            assert_eq!(encode(&back), bytes, "{}", frame.type_str());
+        }
+    }
+
+    #[test]
+    fn encoding_is_canonical_text() {
+        let frame = Frame::Infer(InferFrame {
+            id: 1,
+            model: None,
+            dims: vec![1, 2, 2],
+            data: vec![0.0, 0.5, 1.0, -2.0],
+        });
+        assert_eq!(
+            String::from_utf8(encode(&frame)).unwrap(),
+            r#"{"data":[0,0.5,1,-2],"dims":[1,2,2],"id":1,"type":"infer","v":1}"#
+        );
+        assert_eq!(
+            String::from_utf8(encode(&Frame::Ping { nonce: 7 })).unwrap(),
+            r#"{"nonce":7,"type":"ping","v":1}"#
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let e = decode(br#"{"type":"ping","nonce":1,"v":2}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+        let e = decode(br#"{"type":"ping","nonce":1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+    }
+
+    #[test]
+    fn rejects_unknown_type_and_garbage() {
+        let e = decode(br#"{"type":"teleport","v":1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownType);
+        let e = decode(b"not json at all").unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+        let e = decode(br#"[1,2,3]"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+        let e = decode(&[0xff, 0xfe]).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+    }
+
+    #[test]
+    fn decode_errors_carry_the_request_id() {
+        // id readable but dims missing: the error must name the request
+        let e = decode(br#"{"id":42,"type":"infer","v":1,"data":[]}"#).unwrap_err();
+        assert_eq!(e.id, Some(42));
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+    }
+
+    #[test]
+    fn rejects_non_integer_ids() {
+        let e = decode(br#"{"id":1.5,"type":"ping","nonce":1,"v":1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+        let e = decode(br#"{"data":[],"dims":[],"id":-3,"type":"infer","v":1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::InvalidFrame,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::UnknownType,
+            ErrorCode::BadImage,
+            ErrorCode::UnknownModel,
+            ErrorCode::ResourceExhausted,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("NOPE"), None);
+        assert!(ErrorCode::ResourceExhausted.retryable());
+        assert!(!ErrorCode::Internal.retryable());
+    }
+
+    #[test]
+    fn framed_transport_round_trips() {
+        let mut buf = Vec::new();
+        for frame in sample_frames() {
+            write_frame(&mut buf, &frame).unwrap();
+        }
+        let mut cursor = Cursor::new(buf);
+        for want in sample_frames() {
+            match read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap() {
+                ReadOutcome::Frame(got) => assert_eq!(got, want),
+                other => panic!("expected {}, got {other:?}", want.type_str()),
+            }
+        }
+        assert!(matches!(
+            read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap(),
+            ReadOutcome::Eof
+        ));
+    }
+
+    #[test]
+    fn oversized_frame_is_an_io_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ListModels).unwrap();
+        let mut cursor = Cursor::new(buf);
+        let err = read_frame(&mut cursor, 4).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_frame_is_unexpected_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ping { nonce: 1 }).unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut cursor = Cursor::new(buf);
+        let err = read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn bad_payload_keeps_the_connection_usable() {
+        // a well-framed but undecodable payload, then a good frame: the
+        // reader surfaces Bad and then keeps going
+        let mut buf = Vec::new();
+        let junk = br#"{"type":"teleport","v":1}"#;
+        buf.extend_from_slice(&(junk.len() as u32).to_be_bytes());
+        buf.extend_from_slice(junk);
+        write_frame(&mut buf, &Frame::Ping { nonce: 5 }).unwrap();
+        let mut cursor = Cursor::new(buf);
+        match read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap() {
+            ReadOutcome::Bad(e) => assert_eq!(e.code, ErrorCode::UnknownType),
+            other => panic!("expected Bad, got {other:?}"),
+        }
+        match read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap() {
+            ReadOutcome::Frame(Frame::Ping { nonce }) => assert_eq!(nonce, 5),
+            other => panic!("expected ping, got {other:?}"),
+        }
+    }
+}

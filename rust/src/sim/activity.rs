@@ -9,6 +9,7 @@
 /// Toggle counter for one register/bus of `width` bits.
 #[derive(Clone, Debug)]
 pub struct ToggleProbe {
+    /// Probe label, used in activity reports.
     pub name: String,
     width: u32,
     last: i64,
@@ -17,6 +18,7 @@ pub struct ToggleProbe {
 }
 
 impl ToggleProbe {
+    /// A zeroed probe over a `width`-bit register (1..=64).
     pub fn new(name: impl Into<String>, width: u32) -> Self {
         assert!(width >= 1 && width <= 64);
         ToggleProbe { name: name.into(), width, last: 0, toggles: 0, cycles: 0 }
@@ -38,10 +40,12 @@ impl ToggleProbe {
         self.cycles += 1;
     }
 
+    /// Total bit toggles observed.
     pub fn toggles(&self) -> u64 {
         self.toggles
     }
 
+    /// Total cycles observed (clocked + idle).
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
@@ -60,10 +64,12 @@ impl ToggleProbe {
 /// the caller's job; this is the plain per-bit mean).
 #[derive(Clone, Debug, Default)]
 pub struct ActivityReport {
+    /// `(probe name, per-bit activity)` pairs, in probe order.
     pub probes: Vec<(String, f64)>,
 }
 
 impl ActivityReport {
+    /// Snapshot the activity of each probe.
     pub fn from_probes<'a>(probes: impl IntoIterator<Item = &'a ToggleProbe>) -> Self {
         ActivityReport {
             probes: probes

@@ -19,16 +19,20 @@ use crate::sim::units::{PasUnit, PostPassMac, WsMacUnit};
 /// One lane's input stream.
 #[derive(Clone, Debug)]
 pub struct LaneStream {
+    /// Raw fixed-point image values, one per cycle.
     pub images: Vec<i64>,
+    /// Dictionary bin index paired with each image value.
     pub bin_idx: Vec<u16>,
 }
 
 impl LaneStream {
+    /// Number of (image, bin-index) pairs in the stream.
     pub fn len(&self) -> usize {
         debug_assert_eq!(self.images.len(), self.bin_idx.len());
         self.images.len()
     }
 
+    /// Whether the stream holds no pairs.
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }

@@ -11,12 +11,17 @@ use crate::sim::activity::ToggleProbe;
 pub struct WsMacUnit {
     /// Dictionary register file (B entries, raw fixed-point).
     pub weights: Vec<i64>,
+    /// Accumulator register.
     pub acc: i64,
+    /// Toggle probe on the accumulator register.
     pub acc_probe: ToggleProbe,
+    /// Toggle probe on the multiplier output bus.
     pub mul_probe: ToggleProbe,
 }
 
 impl WsMacUnit {
+    /// A zeroed unit over a raw fixed-point dictionary (non-empty) with
+    /// `acc_width`-bit probes.
     pub fn new(weights: Vec<i64>, acc_width: u32) -> Self {
         assert!(!weights.is_empty());
         WsMacUnit {
@@ -44,6 +49,7 @@ impl WsMacUnit {
         self.acc_probe.idle();
     }
 
+    /// Clear the accumulator (probes keep counting).
     pub fn reset(&mut self) {
         self.acc = 0;
     }
@@ -52,11 +58,14 @@ impl WsMacUnit {
 /// PAS unit (Fig 5/6a): `bins[bin_idx] += image` — the weighted histogram.
 #[derive(Clone, Debug)]
 pub struct PasUnit {
+    /// Accumulation bins, one per dictionary entry.
     pub bins: Vec<i64>,
+    /// Toggle probe on the bin write port.
     pub bin_probe: ToggleProbe,
 }
 
 impl PasUnit {
+    /// A zeroed unit with `n_bins` bins and an `acc_width`-bit probe.
     pub fn new(n_bins: usize, acc_width: u32) -> Self {
         assert!(n_bins >= 1);
         PasUnit {
@@ -73,11 +82,13 @@ impl PasUnit {
         self.bin_probe.clock(self.bins[b]);
     }
 
+    /// Idle clock (no input this cycle).
     #[inline]
     pub fn step_idle(&mut self) {
         self.bin_probe.idle();
     }
 
+    /// Clear every bin (probes keep counting).
     pub fn reset(&mut self) {
         self.bins.iter_mut().for_each(|b| *b = 0);
     }
@@ -87,12 +98,17 @@ impl PasUnit {
 /// per cycle.
 #[derive(Clone, Debug)]
 pub struct PostPassMac {
+    /// Raw fixed-point dictionary the bins contract against.
     pub codebook: Vec<i64>,
+    /// Accumulator register.
     pub acc: i64,
+    /// Toggle probe on the accumulator register.
     pub acc_probe: ToggleProbe,
 }
 
 impl PostPassMac {
+    /// A zeroed unit over a raw fixed-point codebook with an
+    /// `acc_width`-bit probe.
     pub fn new(codebook: Vec<i64>, acc_width: u32) -> Self {
         PostPassMac {
             codebook,
@@ -111,11 +127,13 @@ impl PostPassMac {
         self.acc_probe.clock(self.acc);
     }
 
+    /// Idle clock (no input this cycle).
     #[inline]
     pub fn step_idle(&mut self) {
         self.acc_probe.idle();
     }
 
+    /// Clear the accumulator (probes keep counting).
     pub fn reset(&mut self) {
         self.acc = 0;
     }

@@ -43,39 +43,48 @@ impl<T: Copy + Default> Tensor<T> {
         Tensor { shape, data }
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &Shape {
         &self.shape
     }
 
+    /// The dimension sizes, outermost first.
     pub fn dims(&self) -> &[usize] {
         self.shape.dims()
     }
 
+    /// Total element count (the shape's volume).
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// The elements in row-major order.
     pub fn data(&self) -> &[T] {
         &self.data
     }
 
+    /// Mutable view of the elements in row-major order.
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its row-major elements.
     pub fn into_vec(self) -> Vec<T> {
         self.data
     }
 
+    /// Element at a multi-dimensional index; panics out of bounds.
     #[inline]
     pub fn at(&self, idx: &[usize]) -> T {
         self.data[self.shape.offset(idx)]
     }
 
+    /// Mutable element at a multi-dimensional index; panics out of bounds.
     #[inline]
     pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
         let off = self.shape.offset(idx);

@@ -4,17 +4,23 @@ use std::fmt;
 
 /// A dense row-major shape (up to arbitrary rank; conv code uses rank 3/4).
 #[derive(Clone, PartialEq, Eq, Hash)]
-pub struct Shape(pub Vec<usize>);
+pub struct Shape(
+    /// The dimension sizes, outermost first.
+    pub Vec<usize>,
+);
 
 impl Shape {
+    /// A shape with the given dimension sizes.
     pub fn new(dims: &[usize]) -> Self {
         Shape(dims.to_vec())
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.0.len()
     }
 
+    /// The dimension sizes, outermost first.
     pub fn dims(&self) -> &[usize] {
         &self.0
     }
@@ -24,6 +30,7 @@ impl Shape {
         self.0.iter().product()
     }
 
+    /// Whether the shape has zero volume (some dim is 0).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -88,11 +95,13 @@ pub fn conv_out_dim(input: usize, kernel: usize, stride: usize) -> usize {
 pub struct ConvShape {
     /// Input channels `C`.
     pub channels: usize,
-    /// Input spatial dims `IH x IW`.
+    /// Input spatial height `IH`.
     pub in_h: usize,
+    /// Input spatial width `IW`.
     pub in_w: usize,
-    /// Kernel spatial dims `KY x KX`.
+    /// Kernel spatial height `KY`.
     pub kernel_h: usize,
+    /// Kernel spatial width `KX`.
     pub kernel_w: usize,
     /// Output channels (number of kernels) `M`.
     pub kernels: usize,
@@ -101,6 +110,7 @@ pub struct ConvShape {
 }
 
 impl ConvShape {
+    /// A validated conv shape (panics on degenerate dimensions).
     pub fn new(
         channels: usize,
         in_h: usize,
@@ -120,16 +130,19 @@ impl ConvShape {
         Self::new(15, 5, 5, 3, 3, 2, 1)
     }
 
+    /// Panic unless the dimensions describe a runnable VALID convolution.
     pub fn validate(&self) {
         assert!(self.channels >= 1 && self.kernels >= 1);
         assert!(self.in_h >= self.kernel_h && self.in_w >= self.kernel_w);
         assert!(self.stride >= 1);
     }
 
+    /// Output spatial height `OH`.
     pub fn out_h(&self) -> usize {
         conv_out_dim(self.in_h, self.kernel_h, self.stride)
     }
 
+    /// Output spatial width `OW`.
     pub fn out_w(&self) -> usize {
         conv_out_dim(self.in_w, self.kernel_w, self.stride)
     }
@@ -150,14 +163,17 @@ impl ConvShape {
         self.kernels * self.out_pixels() * self.taps()
     }
 
+    /// Input image shape `[C, IH, IW]`.
     pub fn image_shape(&self) -> Shape {
         Shape::new(&[self.channels, self.in_h, self.in_w])
     }
 
+    /// Weight tensor shape `[M, C, KY, KX]`.
     pub fn weight_shape(&self) -> Shape {
         Shape::new(&[self.kernels, self.channels, self.kernel_h, self.kernel_w])
     }
 
+    /// Output feature-map shape `[M, OH, OW]`.
     pub fn out_shape(&self) -> Shape {
         Shape::new(&[self.kernels, self.out_h(), self.out_w()])
     }

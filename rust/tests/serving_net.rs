@@ -1,0 +1,271 @@
+//! End-to-end over real sockets: a `serving::net::Server` on an
+//! ephemeral port, driven concurrently through `serving::client` —
+//! multiple model ids at once, a hot-swap mid-run, a deterministic
+//! forced-overload rejection, and a clean shutdown that loses no
+//! admitted request.
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend};
+use pasm_accel::model_store::ModelRegistry;
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::serving::{Client, ClientError, ErrorCode, Server, ServerConfig};
+use pasm_accel::tensor::Tensor;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn encoded(seed: u64, bins: usize) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+}
+
+fn registry_coordinator(registry: &Arc<ModelRegistry>) -> Arc<Coordinator> {
+    Arc::new(
+        CoordinatorBuilder::new()
+            .registry(Arc::clone(registry))
+            .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+            .build()
+            .expect("coordinator startup"),
+    )
+}
+
+#[test]
+fn serves_two_models_concurrently_with_midrun_hot_swap() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("alpha", encoded(1, 4));
+    registry.insert("beta", encoded(2, 8));
+    let coord = registry_coordinator(&registry);
+    let server =
+        Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default()).expect("bind");
+    let addr = server.local_addr();
+
+    // a fixed probe image: its logits must change when alpha is swapped
+    let probe = render_digit(&mut Rng::new(77), 3, 0.05);
+    let mut probe_client = Client::connect(addr).expect("connect probe");
+    let before = probe_client.infer(Some("alpha"), &probe).expect("probe before swap");
+
+    let n_per_model = 40usize;
+    let swap_at = 20usize;
+    std::thread::scope(|scope| {
+        let registry = &registry;
+        for (model, seed) in [("alpha", 100u64), ("beta", 200u64)] {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect worker");
+                let mut rng = Rng::new(seed);
+                for i in 0..n_per_model {
+                    if model == "alpha" && i == swap_at {
+                        // hot-swap alpha to a different encoding mid-run;
+                        // in-flight requests finish on the old snapshot,
+                        // the next batch serves the new one
+                        registry.insert("alpha", encoded(9, 16));
+                    }
+                    let img = render_digit(&mut rng, i % 10, 0.05);
+                    let reply = client
+                        .infer(Some(model), &img)
+                        .unwrap_or_else(|e| panic!("{model} request {i}: {e}"));
+                    assert_eq!(reply.model.as_deref(), Some(model), "request {i}");
+                    assert_eq!(reply.logits.len(), 10, "request {i}");
+                    assert!(reply.hw.cycles > 0, "request {i}");
+                }
+            });
+        }
+    });
+
+    let after = probe_client.infer(Some("alpha"), &probe).expect("probe after swap");
+    assert_eq!(after.model.as_deref(), Some("alpha"));
+    assert_ne!(
+        before.logits, after.logits,
+        "hot-swapped model must serve different weights for the same image"
+    );
+
+    // model listing reflects the registry
+    let models = probe_client.list_models().expect("list_models");
+    assert_eq!(models.models, vec!["alpha".to_string(), "beta".to_string()]);
+    assert_eq!(models.default.as_deref(), Some("alpha"));
+
+    // ping is alive, and metrics account for every request we sent
+    probe_client.ping().expect("ping");
+    let m = probe_client.metrics().expect("metrics");
+    assert_eq!(m.backend, "native");
+    let alpha = m.per_model.get("alpha").copied().unwrap_or_default();
+    let beta = m.per_model.get("beta").copied().unwrap_or_default();
+    assert_eq!(alpha.requests, n_per_model as u64 + 2, "alpha = worker + 2 probes");
+    assert_eq!(beta.requests, n_per_model as u64);
+    assert_eq!(m.failed_batches, 0);
+    assert!(m.net.frames_received >= m.net.frames_sent);
+    assert_eq!(m.net.requests_failed, 0);
+    assert_eq!(m.net.protocol_errors, 0);
+
+    // unknown model is a typed, routable error — not a hang or a close
+    let err = probe_client.infer(Some("nope"), &probe).expect_err("unknown model");
+    assert_eq!(err.server_code(), Some(ErrorCode::UnknownModel));
+    probe_client.ping().expect("connection survives a typed error");
+
+    drop(server);
+    // after shutdown the port no longer answers
+    assert!(Client::connect(addr).is_err() || {
+        let mut c = Client::connect(addr).unwrap();
+        c.ping().is_err()
+    });
+}
+
+/// Deterministic overload: one in-flight slot, a batch policy that parks
+/// the first request (bucket of 4, 400 ms wait budget), so a second
+/// request must hit the cap while the first is still admitted.
+#[test]
+fn overload_is_a_typed_retryable_error_and_no_request_is_lost() {
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(3, 8)))
+            .batch_policy(BatchPolicy::new(vec![4], Duration::from_millis(400)))
+            .build()
+            .expect("coordinator startup"),
+    );
+    let config = ServerConfig { max_inflight: 1, ..ServerConfig::default() };
+    let mut server = Server::bind("127.0.0.1:0", Arc::clone(&coord), config).expect("bind");
+    let addr = server.local_addr();
+    let img = render_digit(&mut Rng::new(5), 4, 0.05);
+
+    // phase 1: occupy the only slot with a parked request, then overload
+    let slow = {
+        let img = img.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect(addr).expect("connect slow");
+            client.infer(None, &img)
+        })
+    };
+    let mut client = Client::connect(addr).expect("connect main");
+    // wait (via the metrics frame, which needs no admission slot) until
+    // the slow request is admitted — this makes the overload deterministic
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = client.metrics().expect("metrics");
+        if m.net.inflight == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slow request never admitted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let err = client.infer(None, &img).expect_err("must be rejected at the cap");
+    match &err {
+        ClientError::Server(e) => {
+            assert_eq!(e.code, ErrorCode::ResourceExhausted);
+            assert!(e.code.retryable());
+            assert_eq!(e.id, Some(1), "error frame echoes the request id");
+        }
+        other => panic!("expected a typed server rejection, got {other}"),
+    }
+    // the parked request completes untouched (wait-budget expiry launches it)
+    let slow_reply = slow.join().expect("slow thread").expect("parked request must succeed");
+    assert_eq!(slow_reply.logits.len(), 10);
+
+    // the slot is free again: the same connection retries successfully
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let retried = loop {
+        match client.infer(None, &img) {
+            Ok(ok) => break ok,
+            Err(ClientError::Server(e)) if e.code == ErrorCode::ResourceExhausted => {
+                assert!(Instant::now() < deadline, "slot never freed");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(other) => panic!("retry failed: {other}"),
+        }
+    };
+    assert_eq!(retried.logits, slow_reply.logits, "same image, same model, same logits");
+    let m = client.metrics().expect("metrics");
+    assert!(m.net.overload_rejections >= 1);
+
+    // phase 2: clean shutdown loses no admitted request — park another
+    // request, shut down while it is in flight, and require its response
+    let parked = {
+        let img = img.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect(addr).expect("connect parked");
+            client.infer(None, &img)
+        })
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    server.shutdown(); // blocks until every connection thread finished
+    let reply = parked.join().expect("parked thread").expect("request lost in shutdown");
+    assert_eq!(reply.logits, slow_reply.logits);
+}
+
+#[test]
+fn connection_cap_rejects_with_a_typed_frame() {
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(4, 4)))
+            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+            .build()
+            .expect("coordinator startup"),
+    );
+    let config = ServerConfig { max_connections: 1, ..ServerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&coord), config).expect("bind");
+    let addr = server.local_addr();
+
+    let mut first = Client::connect(addr).expect("connect first");
+    first.ping().expect("first connection serves");
+
+    let mut second = Client::connect(addr).expect("tcp connect still succeeds");
+    let err = second.ping().expect_err("over-cap connection must be refused");
+    match err {
+        ClientError::Server(e) => assert_eq!(e.code, ErrorCode::ResourceExhausted),
+        // the error frame races the close; a hard close is also acceptable
+        ClientError::Io(_) | ClientError::Closed => {}
+        other => panic!("unexpected rejection shape: {other}"),
+    }
+
+    // the first connection is unaffected
+    first.ping().expect("capped server keeps serving admitted connections");
+
+    // once the first connection closes, a new one is admitted
+    drop(first);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut c = Client::connect(addr).expect("connect");
+        if c.ping().is_ok() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slot never freed after disconnect");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn bad_frames_get_typed_errors_without_dropping_the_connection() {
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(6, 4)))
+            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+            .build()
+            .expect("coordinator startup"),
+    );
+    let server =
+        Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default()).expect("bind");
+    let mut client = Client::connect(server.local_addr()).expect("connect");
+
+    // wrong image volume
+    let bad = Tensor::<f32>::zeros(&[2, 3, 3]);
+    let err = client.infer(None, &bad).expect_err("wrong dims");
+    assert_eq!(err.server_code(), Some(ErrorCode::BadImage));
+
+    // non-finite data
+    let mut inf = Tensor::<f32>::zeros(&[1, 12, 12]);
+    inf.data_mut()[0] = f32::INFINITY;
+    let err = client.infer(None, &inf).expect_err("non-finite");
+    assert_eq!(err.server_code(), Some(ErrorCode::BadImage));
+
+    // naming a model on a registry-less server
+    let good = render_digit(&mut Rng::new(8), 1, 0.05);
+    let err = client.infer(Some("ghost"), &good).expect_err("no registry");
+    assert_eq!(err.server_code(), Some(ErrorCode::UnknownModel));
+
+    // and the connection still serves real work after all of that
+    let ok = client.infer(None, &good).expect("recovery");
+    assert_eq!(ok.logits.len(), 10);
+    let m = client.metrics().expect("metrics");
+    assert_eq!(m.net.requests_ok, 1);
+    assert_eq!(m.net.connections_open, 1);
+}

@@ -1,0 +1,105 @@
+//! Keeps `docs/WIRE_PROTOCOL.md` normative: every ```json example frame
+//! in the spec must decode to a valid frame and re-encode **byte for
+//! byte** — so a drifted field name, a non-canonical key order, or a
+//! float that doesn't round-trip fails the build, not a reader.
+
+use pasm_accel::serving::proto;
+use std::collections::BTreeSet;
+
+const SPEC: &str = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/WIRE_PROTOCOL.md"));
+
+/// Every ```json fenced block in the spec, one example frame per block.
+fn example_frames() -> Vec<String> {
+    let mut frames = Vec::new();
+    let mut in_block = false;
+    let mut current = String::new();
+    for line in SPEC.lines() {
+        let trimmed = line.trim();
+        if in_block {
+            if trimmed == "```" {
+                in_block = false;
+                frames.push(std::mem::take(&mut current));
+            } else {
+                if !current.is_empty() {
+                    current.push('\n');
+                }
+                current.push_str(trimmed);
+            }
+        } else if trimmed == "```json" {
+            in_block = true;
+        }
+    }
+    assert!(!in_block, "unterminated ```json block in WIRE_PROTOCOL.md");
+    frames
+}
+
+#[test]
+fn every_documented_example_round_trips_byte_for_byte() {
+    let frames = example_frames();
+    assert!(
+        frames.len() >= 10,
+        "expected at least one example per frame type, found {}",
+        frames.len()
+    );
+    let mut seen_types = BTreeSet::new();
+    for (i, example) in frames.iter().enumerate() {
+        assert!(
+            !example.contains('\n'),
+            "example {i} spans multiple lines; canonical frames are one line:\n{example}"
+        );
+        let frame = proto::decode(example.as_bytes())
+            .unwrap_or_else(|e| panic!("example {i} does not decode ({e}):\n{example}"));
+        let encoded = String::from_utf8(proto::encode(&frame)).unwrap();
+        assert_eq!(
+            encoded, *example,
+            "example {i} ({}) is not in canonical encoding",
+            frame.type_str()
+        );
+        seen_types.insert(frame.type_str());
+    }
+    for required in [
+        "infer",
+        "infer_ok",
+        "error",
+        "list_models",
+        "models",
+        "get_metrics",
+        "metrics",
+        "ping",
+        "pong",
+    ] {
+        assert!(
+            seen_types.contains(required),
+            "WIRE_PROTOCOL.md documents no '{required}' example"
+        );
+    }
+}
+
+#[test]
+fn spec_documents_every_error_code() {
+    use proto::ErrorCode::*;
+    for code in [
+        InvalidFrame,
+        UnsupportedVersion,
+        UnknownType,
+        BadImage,
+        UnknownModel,
+        ResourceExhausted,
+        ShuttingDown,
+        Internal,
+    ] {
+        assert!(
+            SPEC.contains(code.as_str()),
+            "WIRE_PROTOCOL.md does not mention error code {}",
+            code.as_str()
+        );
+    }
+}
+
+#[test]
+fn spec_states_the_current_protocol_version() {
+    assert!(
+        SPEC.contains(&format!("`\"v\": {}`", proto::PROTOCOL_VERSION)),
+        "WIRE_PROTOCOL.md must state the current protocol version"
+    );
+}
