@@ -28,13 +28,19 @@
 //! section of `BENCH_serving.json`, next to the in-process numbers, so
 //! the wire + framing overhead stays visible across PRs.
 //!
+//! A fourth phase measures **coordinator sharding**: four model variants
+//! under the same open-loop schedule, served by a 1-shard and then a
+//! 4-shard pool (one execution thread per shard, so the shard count is
+//! the parallelism axis).  Merged req/s and per-shard batch counts land
+//! in the `shards` section; `shard_comparison` holds the 1-vs-4 speedup.
+//!
 //! `--smoke` serves only the smallest load (the CI perf-harness check);
 //! the resulting file's `comparison.load` is 64, not the 1024 the
 //! acceptance bar reads — don't commit a smoke file over a full run.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
-use pasm_accel::coordinator::loadgen::run_open_loop_net;
+use pasm_accel::coordinator::loadgen::{run_open_loop_models, run_open_loop_net};
 use pasm_accel::coordinator::{
     BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend, NativePrecision,
 };
@@ -72,6 +78,17 @@ struct NetStats {
     p99_us: u64,
     overloaded: usize,
     errors: usize,
+}
+
+struct ShardStats {
+    shards: usize,
+    models: usize,
+    load: usize,
+    offered_hz: f64,
+    req_s: f64,
+    p50_us: u64,
+    p99_us: u64,
+    per_shard_batches: Vec<u64>,
 }
 
 struct ArtifactStats {
@@ -227,7 +244,85 @@ fn run_net_loads(
     stats
 }
 
-fn write_json(runs: &[RunStats], net: &[NetStats], artifact: &ArtifactStats) {
+/// Model names chosen to spread over all 4 shards under the stable
+/// FNV-1a routing hash (shards 0, 3, 2, 1 respectively — pinned by a
+/// unit test in `coordinator::server`), so the 4-shard run actually
+/// exercises the whole pool.
+const SHARD_MODELS: [&str; 4] = ["digits-v0", "digits-v1", "digits-v2", "digits-v3"];
+
+/// Shard-scaling phase: the same ≥2-model open-loop load against a
+/// 1-shard and a 4-shard pool, back to back.  Backends run with one
+/// execution thread per shard so the shard count — not row parallelism —
+/// is the axis being measured; the offered rate is set well above the
+/// single-shard capacity, so the achieved rate reads as each pool's
+/// capacity.
+fn run_shard_scaling(runs: &[RunStats], pool: &[Tensor<f32>], load: usize) -> Vec<ShardStats> {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(51);
+    let registry = Arc::new(ModelRegistry::new());
+    for (i, name) in SHARD_MODELS.iter().enumerate() {
+        let params = arch.init(&mut rng);
+        registry.insert(*name, EncodedCnn::encode(arch, &params, 4 * (i + 1), QFormat::W32));
+    }
+    let models: Vec<Option<String>> =
+        SHARD_MODELS.iter().map(|m| Some((*m).to_string())).collect();
+
+    let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
+    let planned_req_s = runs
+        .iter()
+        .find(|r| r.config == "planned" && r.load == max_load)
+        .map(|r| r.req_s)
+        .unwrap_or(500.0);
+    let rate = (planned_req_s * 3.0).max(200.0);
+
+    let mut stats = Vec::new();
+    for shards in [1usize, 4] {
+        let entry = registry.get(SHARD_MODELS[0]).expect("registry model");
+        let backend = NativeBackend::new((*entry.enc).clone())
+            .with_precision(NativePrecision::Fixed(QFormat::IMAGE32))
+            .with_threads(1);
+        let coord = CoordinatorBuilder::new()
+            .backend(backend)
+            .registry(Arc::clone(&registry))
+            .default_model(SHARD_MODELS[0])
+            .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+            .shards(shards)
+            .build()
+            .expect("sharded coordinator startup");
+        assert_eq!(coord.shards(), shards);
+        let mut lrng = Rng::new(61);
+        let r = run_open_loop_models(&coord, &models, pool, load, rate, &mut lrng);
+        assert_eq!(r.errors, 0, "shard bench requests failed");
+        let per_shard_batches: Vec<u64> =
+            coord.shard_metrics().iter().map(|m| m.batches).collect();
+        println!(
+            "bench coordinator/shards_{shards}/serve_{load}: offered {:.1} req/s, \
+             achieved {:.1} req/s, p99 {} us, per-shard batches {:?}",
+            r.offered_hz,
+            r.achieved_hz,
+            r.percentile_us(99.0),
+            per_shard_batches
+        );
+        stats.push(ShardStats {
+            shards,
+            models: SHARD_MODELS.len(),
+            load,
+            offered_hz: r.offered_hz,
+            req_s: r.achieved_hz,
+            p50_us: r.percentile_us(50.0),
+            p99_us: r.percentile_us(99.0),
+            per_shard_batches,
+        });
+    }
+    stats
+}
+
+fn write_json(
+    runs: &[RunStats],
+    net: &[NetStats],
+    shards: &[ShardStats],
+    artifact: &ArtifactStats,
+) {
     let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load);
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load);
@@ -289,6 +384,46 @@ fn write_json(runs: &[RunStats], net: &[NetStats], artifact: &ArtifactStats) {
         );
     }
     s.push_str("  ],\n");
+    s.push_str(
+        "  \"shards_label\": \"1-shard vs 4-shard coordinator pool, 4 models, \
+         open-loop over-capacity load, 1 execution thread per shard\",\n",
+    );
+    s.push_str("  \"shards\": [\n");
+    for (i, r) in shards.iter().enumerate() {
+        let sep = if i + 1 == shards.len() { "" } else { "," };
+        let batches: Vec<String> = r.per_shard_batches.iter().map(u64::to_string).collect();
+        let _ = writeln!(
+            s,
+            "    {{\"shards\": {}, \"models\": {}, \"load\": {}, \"offered_hz\": {:.1}, \
+             \"req_s\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"per_shard_batches\": [{}]}}{sep}",
+            r.shards,
+            r.models,
+            r.load,
+            r.offered_hz,
+            r.req_s,
+            r.p50_us,
+            r.p99_us,
+            batches.join(", ")
+        );
+    }
+    s.push_str("  ],\n");
+    let one = shards.iter().find(|r| r.shards == 1);
+    let four = shards.iter().find(|r| r.shards == 4);
+    match (one, four) {
+        (Some(o), Some(f)) => {
+            let _ = writeln!(
+                s,
+                "  \"shard_comparison\": {{\"load\": {}, \"shards_1_req_s\": {:.1}, \
+                 \"shards_4_req_s\": {:.1}, \"speedup\": {:.2}}},",
+                o.load,
+                o.req_s,
+                f.req_s,
+                f.req_s / o.req_s
+            );
+        }
+        _ => s.push_str("  \"shard_comparison\": null,\n"),
+    }
     match (base, plan) {
         (Some(b), Some(p)) => {
             let _ = writeln!(
@@ -346,6 +481,10 @@ fn main() {
     // socket path: same model, same loads, through the TCP front-end
     let net = run_net_loads(&loaded, &registry, &runs, loads, &pool);
 
+    // shard scaling: ≥2 models under open-loop load, 1 vs 4 shards
+    let shard_load = if smoke { 256 } else { 2048 };
+    let shards = run_shard_scaling(&runs, &pool, shard_load);
+
     let max_load = loads.last().copied().unwrap();
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load).unwrap();
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load).unwrap();
@@ -355,7 +494,19 @@ fn main() {
         base.req_s,
         plan.req_s
     );
+    if let (Some(one), Some(four)) = (
+        shards.iter().find(|r| r.shards == 1),
+        shards.iter().find(|r| r.shards == 4),
+    ) {
+        println!(
+            "shard speedup at load {}: {:.2}x ({:.1} -> {:.1} req/s)",
+            one.load,
+            four.req_s / one.req_s,
+            one.req_s,
+            four.req_s
+        );
+    }
 
-    write_json(&runs, &net, &artifact);
+    write_json(&runs, &net, &shards, &artifact);
     let _ = std::fs::remove_dir_all(&models_dir);
 }

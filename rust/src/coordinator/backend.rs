@@ -73,6 +73,19 @@ pub trait ExecutionBackend: Send {
     /// Compile the model at one batch size.
     fn compile(&self, batch: usize) -> Result<Box<dyn Executable>>;
 
+    /// Clone this backend for another coordinator shard
+    /// ([`crate::coordinator::CoordinatorBuilder::shards`]): every shard
+    /// of the pool owns an independent backend + engine, so replication
+    /// must yield a functionally identical instance.  Cheap, shareable
+    /// state (an `Arc`'d model, a compiled plan cache) should be shared,
+    /// not recomputed.  The default returns `None` — backends welded to a
+    /// single-instance resource (e.g. `PjrtBackend`'s AOT runtime handle)
+    /// cannot shard, and the builder then serves from one shard (or fails
+    /// startup when more were explicitly requested).
+    fn replicate(&self) -> Option<Box<dyn ExecutionBackend>> {
+        None
+    }
+
     /// Compile a *registry* model at one batch size — the multi-model
     /// serving path ([`crate::model_store::ModelRegistry`]).  Backends
     /// welded to a single AOT-compiled model (e.g. `PjrtBackend`'s
@@ -126,8 +139,10 @@ pub struct NativeBackend {
     /// pre-plan per-request reference path — baseline benchmarking only.
     use_plan: bool,
     /// Plan cache: compiled on the first `compile` call, shared by every
-    /// batch-bucket executable (the plan is batch-size-agnostic).
-    plan: Mutex<Option<Arc<CompiledCnn>>>,
+    /// batch-bucket executable (the plan is batch-size-agnostic) — and,
+    /// through [`ExecutionBackend::replicate`], by every shard replica:
+    /// whichever shard compiles first populates it for the whole pool.
+    plan: Arc<Mutex<Option<Arc<CompiledCnn>>>>,
 }
 
 impl NativeBackend {
@@ -139,7 +154,7 @@ impl NativeBackend {
             precision: NativePrecision::F32,
             threads: None,
             use_plan: true,
-            plan: Mutex::new(None),
+            plan: Arc::new(Mutex::new(None)),
         }
     }
 
@@ -153,7 +168,8 @@ impl NativeBackend {
     pub fn with_precision(mut self, precision: NativePrecision) -> Self {
         self.precision = precision;
         // the plan bakes in the fixed-point image format; recompile lazily
-        self.plan = Mutex::new(None);
+        // (a fresh cache — replicas made before this call keep the old one)
+        self.plan = Arc::new(Mutex::new(None));
         self
     }
 
@@ -249,6 +265,21 @@ impl ExecutionBackend for NativeBackend {
             None
         };
         Ok(Box::new(self.make_executable(Arc::clone(&entry.enc), plan, batch)))
+    }
+
+    fn replicate(&self) -> Option<Box<dyn ExecutionBackend>> {
+        // share the model Arc and the plan *cache* itself, so a pool of N
+        // shards compiles the default model once, not N times — whichever
+        // shard compiles first fills the cache for all (replication
+        // happens before any shard has compiled)
+        Some(Box::new(NativeBackend {
+            enc: Arc::clone(&self.enc),
+            variant: self.variant,
+            precision: self.precision,
+            threads: self.threads,
+            use_plan: self.use_plan,
+            plan: Arc::clone(&self.plan),
+        }))
     }
 }
 
@@ -632,6 +663,25 @@ mod tests {
                 .unwrap();
             assert_eq!(logits_bits(&planned), logits_bits(&reference), "{precision:?}");
         }
+    }
+
+    #[test]
+    fn replicated_backend_serves_identical_logits() {
+        let e = enc();
+        let original = NativeBackend::new(e.clone())
+            .with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
+        // replicas share the plan *cache*, so compile order is free —
+        // whichever instance compiles first fills it for both
+        let exe = original.compile(1).unwrap();
+        let replica = original.replicate().expect("native backends replicate");
+        assert_eq!(replica.name(), "native");
+        let rexe = replica.compile(1).unwrap();
+        let mut rng = Rng::new(19);
+        let img = render_digit(&mut rng, 5, 0.05);
+        let batch = Tensor::from_vec(&[1, 1, 12, 12], img.data().to_vec());
+        let a = exe.execute(&batch, 1).unwrap();
+        let b = rexe.execute(&batch, 1).unwrap();
+        assert_eq!(logits_bits(&a), logits_bits(&b));
     }
 
     #[test]

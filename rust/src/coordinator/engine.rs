@@ -279,6 +279,10 @@ fn execute_padded(
                 compute_us,
                 batch_size: bucket,
                 batch_occupancy: requests.len(),
+                // the engine is shard-agnostic; the owning shard's worker
+                // loop stamps these before the response is sent
+                shard: 0,
+                batch_seq: 0,
                 hw,
             }
         })

@@ -6,7 +6,10 @@
 //! inter-arrival gaps from the deterministic [`Rng`], and
 //! [`run_open_loop`] replays them against a coordinator, returning
 //! per-request end-to-end latencies (`examples/latency_under_load.rs`
-//! sweeps the offered rate against capacity).
+//! sweeps the offered rate against capacity); [`run_open_loop_models`]
+//! cycles the same schedule across several model ids — the load shape
+//! that exercises a **sharded** coordinator pool, where each model's
+//! traffic lands on its own shard.
 //!
 //! [`run_open_loop_net`] is the same methodology over **real TCP
 //! sockets**: a pool of [`crate::serving::Client`] connections replays
@@ -86,7 +89,26 @@ pub fn run_open_loop(
     rate_hz: f64,
     rng: &mut Rng,
 ) -> LoadResult {
+    run_open_loop_models(coord, &[], pool, n, rate_hz, rng)
+}
+
+/// [`run_open_loop`] with per-request model routing: targets cycle
+/// through `models` (`None` entries go to the coordinator's default
+/// model; an empty slice means all-default).  With several model ids
+/// this is the load shape that exercises a sharded coordinator — each
+/// model's traffic lands on its own shard, so the merged req/s scales
+/// with the pool instead of serializing on one worker.
+pub fn run_open_loop_models(
+    coord: &Coordinator,
+    models: &[Option<String>],
+    pool: &[Tensor<f32>],
+    n: usize,
+    rate_hz: f64,
+    rng: &mut Rng,
+) -> LoadResult {
     assert!(!pool.is_empty());
+    let default_models = [None];
+    let models: &[Option<String>] = if models.is_empty() { &default_models } else { models };
     let gaps = poisson_schedule(rng, n, rate_hz);
     let started = Instant::now();
 
@@ -101,7 +123,11 @@ pub fn run_open_loop(
         if next > now {
             std::thread::sleep(next - now);
         }
-        match coord.submit(pool[i % pool.len()].clone()) {
+        let submitted = match &models[i % models.len()] {
+            Some(name) => coord.submit_to(name, pool[i % pool.len()].clone()),
+            None => coord.submit(pool[i % pool.len()].clone()),
+        };
+        match submitted {
             Ok(rx) => inflight.push(rx),
             Err(_) => {} // coordinator gone; counted as errors below
         }

@@ -1,4 +1,13 @@
-//! Serving metrics: global and per-model counters, latency percentiles.
+//! Serving metrics: per-shard counters merged on snapshot.
+//!
+//! Every coordinator shard owns one [`Metrics`] value and is its only
+//! writer, so recording a completed batch touches an **uncontended**
+//! shard-local lock — no global mutex sits on the request path.  Readers
+//! ([`crate::coordinator::Coordinator::metrics`], the `metrics` wire
+//! frame) clone each shard's value and [`Metrics::merge`] them into one
+//! aggregate; [`ShardCounters`] is the compact per-shard summary those
+//! snapshots also report, so an operator can see whether traffic actually
+//! spreads across the pool.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -22,7 +31,20 @@ pub struct ModelCounters {
     pub failed_batches: u64,
 }
 
-/// Rolling metrics for the coordinator.
+/// Compact per-shard counter summary, reported next to the merged
+/// aggregate in metrics snapshots and the `metrics` wire frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardCounters {
+    /// Requests this shard served (live batch slots, excl. padding).
+    pub requests: u64,
+    /// Batches this shard launched.
+    pub batches: u64,
+    /// Batches that failed on this shard.
+    pub failed_batches: u64,
+}
+
+/// Rolling metrics for one coordinator shard (or, after
+/// [`Metrics::merge`], for the whole pool).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     /// Label of the execution backend serving the requests ("native",
@@ -107,6 +129,38 @@ impl Metrics {
     /// default backend model).
     pub fn model(&self, name: &str) -> ModelCounters {
         self.per_model.get(name).copied().unwrap_or_default()
+    }
+
+    /// This shard's compact counter summary.
+    pub fn counters(&self) -> ShardCounters {
+        ShardCounters {
+            requests: self.requests,
+            batches: self.batches,
+            failed_batches: self.failed_batches,
+        }
+    }
+
+    /// Fold another shard's snapshot into this one: counters sum,
+    /// per-model maps merge, latency samples concatenate (the merged
+    /// value is a *snapshot* for percentile queries — shards keep
+    /// recording into their own windows).
+    pub fn merge(&mut self, other: &Metrics) {
+        if self.backend.is_empty() {
+            self.backend = other.backend.clone();
+        }
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.failed_batches += other.failed_batches;
+        self.padded_slots += other.padded_slots;
+        self.sim_cycles += other.sim_cycles;
+        self.sim_energy_j += other.sim_energy_j;
+        for (name, c) in &other.per_model {
+            let m = self.per_model.entry(name.clone()).or_default();
+            m.requests += c.requests;
+            m.batches += c.batches;
+            m.failed_batches += c.failed_batches;
+        }
+        self.latencies_us.extend_from_slice(&other.latencies_us);
     }
 
     /// Latency percentile (p in [0, 100]); None until data arrives.
@@ -209,6 +263,47 @@ mod tests {
         // the oldest 10 samples were overwritten by the newest 10
         assert_eq!(m.percentile_us(0.0), Some(10));
         assert_eq!(m.percentile_us(100.0), Some((LATENCY_WINDOW + 9) as u64));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_concatenates_latencies() {
+        let mut a = Metrics::new();
+        a.record_backend("native");
+        a.record_batch("x", 4, 8);
+        a.record_latency(Duration::from_micros(100));
+        a.record_hw(1000, 1e-6);
+        let mut b = Metrics::new();
+        b.record_backend("native");
+        b.record_batch("x", 2, 2);
+        b.record_batch("y", 8, 8);
+        b.record_failed_batch("y");
+        b.record_latency(Duration::from_micros(300));
+        b.record_latency(Duration::from_micros(500));
+        b.record_hw(500, 5e-7);
+
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.backend, "native");
+        assert_eq!(merged.requests, 14);
+        assert_eq!(merged.batches, 3);
+        assert_eq!(merged.failed_batches, 1);
+        assert_eq!(merged.padded_slots, 4);
+        assert_eq!(merged.model("x"), ModelCounters { requests: 6, batches: 2, failed_batches: 0 });
+        assert_eq!(merged.model("y"), ModelCounters { requests: 8, batches: 1, failed_batches: 1 });
+        assert_eq!(merged.percentile_us(0.0), Some(100));
+        assert_eq!(merged.percentile_us(100.0), Some(500));
+        assert_eq!(merged.sim_cycles, 1500);
+        assert!((merged.sim_energy_j - 1.5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_summarize_one_shard() {
+        let mut m = Metrics::new();
+        m.record_batch("a", 3, 4);
+        m.record_batch("a", 4, 4);
+        m.record_failed_batch("a");
+        assert_eq!(m.counters(), ShardCounters { requests: 7, batches: 2, failed_batches: 1 });
     }
 
     #[test]

@@ -1,34 +1,53 @@
-//! Layer-3 inference coordinator.
+//! Layer-3 inference coordinator: a sharded pool of batching workers.
 //!
-//! The request-path owner: a worker thread holds an [`backend::ExecutionBackend`]'s
-//! compiled executables (one per batch bucket) and the dictionary-encoded
-//! model; clients submit single-image requests; the [`batcher`] groups them
-//! into the largest bucket that the queue can fill without exceeding the
-//! wait budget (vLLM-style bucketed dynamic batching, scaled to this
-//! model's sizes); the [`engine`] pads, executes, splits, and attaches the
-//! *simulated hardware cost* of serving that batch on the modeled
-//! accelerator (cycles from the latency model, energy from the power
-//! model) — the paper's metrics, reported per request.
+//! The request-path owner, scaled the way the paper scales silicon — by
+//! replication.  PASM makes each compute unit small enough to afford
+//! many in parallel; the coordinator applies the same logic to batching:
+//! [`server::CoordinatorBuilder::shards`] spawns **N independent shard
+//! workers** (default: `available_parallelism`, capped, when a model
+//! registry is attached; one shard otherwise), each owning its own
+//! [`engine::Engine`] with compiled executables, its own per-model
+//! queues, and its own shard-local [`metrics::Metrics`].  A router
+//! assigns every request to a shard by a **stable hash of its model id**
+//! ([`server::Coordinator::shard_for`]), so all traffic for one model
+//! lands on one shard and the core invariants need zero cross-shard
+//! coordination:
+//!
+//! * a launched batch never mixes models (per-model queues, per shard);
+//! * per-model FIFO order (one FIFO queue per model, on one shard);
+//! * a hot-swapped artifact goes live on the owning shard's next batch
+//!   without dropping in-flight requests (each shard's engine observes
+//!   the registry generation independently);
+//! * shutdown drains every shard before the pool exits — nothing is
+//!   lost, exactly as with the old single worker.
+//!
+//! Within a shard, the [`batcher`] groups queued requests into the
+//! largest bucket the queue can fill without exceeding the wait budget
+//! (vLLM-style bucketed dynamic batching, scaled to this model's sizes);
+//! the [`engine`] pads, executes, splits, and attaches the *simulated
+//! hardware cost* of serving that batch on the modeled accelerator
+//! (cycles from the latency model, energy from the power model) — the
+//! paper's metrics, reported per request.
 //!
 //! Backends and pricing are independent axes: [`backend::NativeBackend`]
 //! serves the crate's own f32/fixed-point reference kernels with no
-//! artifacts; `PjrtBackend` (feature `pjrt`) serves the AOT-compiled
-//! PJRT/Pallas path; either can be priced as Direct / WS-MAC / PASM
-//! silicon via [`cost::CostModel`].  Assemble with
+//! artifacts (and [`backend::ExecutionBackend::replicate`]s across
+//! shards); `PjrtBackend` (feature `pjrt`) serves the AOT-compiled
+//! PJRT/Pallas path from a single shard; either can be priced as Direct
+//! / WS-MAC / PASM silicon via [`cost::CostModel`].  Assemble with
 //! [`server::CoordinatorBuilder`].
 //!
 //! The coordinator is **multi-model**: attach a
 //! [`crate::model_store::ModelRegistry`] and requests may name any
-//! registered model variant ([`server::Coordinator::submit_to`]).  The
-//! batcher keeps one queue per model (a launched batch never mixes
-//! models), the [`engine`] holds per-model executables keyed by the
-//! registry generation, [`metrics::Metrics`] counts per model, and a
-//! hot-swapped artifact goes live on the next batch without dropping
-//! in-flight requests.
+//! registered model variant ([`server::Coordinator::submit_to`]).
+//! [`metrics::Metrics`] counts per model and per shard; snapshots merge
+//! shard-local values on demand, so no global metrics lock sits on the
+//! request path.
 //!
 //! No async runtime is available in this offline build; the coordinator
-//! uses std threads + channels (one worker, many producers), which for a
-//! single-device CPU backend is also the contention-minimal design.
+//! uses std threads + channels (N shard workers, many producers), which
+//! for CPU backends is also the contention-minimal design — each shard's
+//! channel has a single consumer and the shards share no mutable state.
 
 pub mod backend;
 pub mod batcher;
@@ -45,6 +64,6 @@ pub use backend::{default_backend, Executable, ExecutionBackend, NativeBackend, 
 pub use batcher::BatchPolicy;
 pub use cost::{CostModel, HwCost};
 pub use engine::Engine;
-pub use metrics::{DEFAULT_MODEL_LABEL, Metrics, ModelCounters};
+pub use metrics::{DEFAULT_MODEL_LABEL, Metrics, ModelCounters, ShardCounters};
 pub use request::{InferenceRequest, InferenceResponse};
-pub use server::{Coordinator, CoordinatorBuilder};
+pub use server::{Coordinator, CoordinatorBuilder, DEFAULT_MAX_SHARDS};

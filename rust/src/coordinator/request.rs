@@ -53,6 +53,15 @@ pub struct InferenceResponse {
     pub batch_size: usize,
     /// Live requests in the batch (excl. padding).
     pub batch_occupancy: usize,
+    /// Coordinator shard that served the batch.  Requests route to
+    /// shards by a stable hash of the model id, so one model's traffic
+    /// always reports the same shard.
+    pub shard: usize,
+    /// The serving shard's batch sequence number (0, 1, 2, ... per
+    /// shard).  Within one model this is non-decreasing in submission
+    /// order — the observable form of the per-model FIFO guarantee,
+    /// pinned by `tests/shard_routing.rs`.
+    pub batch_seq: u64,
     /// Simulated hardware cost of this batch on the PASM accelerator.
     pub hw: HwCost,
 }

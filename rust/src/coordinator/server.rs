@@ -1,21 +1,37 @@
-//! The coordinator server: builder, worker thread, submission handle.
+//! The coordinator server: builder, shard pool, submission handle.
 //!
 //! [`CoordinatorBuilder`] assembles a backend (and/or a
 //! [`ModelRegistry`]), a batch policy, and a cost model into a running
-//! [`Coordinator`].  One worker thread owns the [`Engine`] (backend
-//! executables need not be `Sync`; compilation happens on the worker) and
-//! drains a request channel into **per-model queues**, applying the
-//! [`BatchPolicy`] to each: wait for a fillable bucket or the oldest
-//! request's deadline, then launch the queue whose front request has
-//! waited longest — one launched batch never mixes models.  Clients get a
-//! per-request response channel.  Drop the [`Coordinator`] to shut down
-//! cleanly (pending requests are flushed first).
+//! [`Coordinator`] — a **pool of N independent shard workers**
+//! ([`CoordinatorBuilder::shards`]; default `available_parallelism`,
+//! capped at [`DEFAULT_MAX_SHARDS`]).  Each shard owns its own
+//! [`Engine`] (backend executables need not be `Sync`; compilation
+//! happens on the shard's thread), its own per-model queues, and its own
+//! shard-local [`Metrics`], so batching and dispatch scale past one core
+//! with **zero cross-shard coordination**.
+//!
+//! Requests route to shards by a stable FNV-1a hash of the model id
+//! ([`Coordinator::shard_for`]): all traffic for one model lands on one
+//! shard, so the single-worker invariants — a launched batch never mixes
+//! models, per-model FIFO order, hot-swap without dropping in-flight
+//! requests — hold per shard by construction, which is to say globally.
+//! Unnamed requests route by the default model's name (or a fixed key
+//! when no registry is attached), so they share a shard with the named
+//! traffic of the same model.
+//!
+//! Within a shard the worker drains its request channel into per-model
+//! queues, applying the [`BatchPolicy`] to each: wait for a fillable
+//! bucket or the oldest request's deadline, then launch the queue whose
+//! front request has waited longest.  Clients get a per-request response
+//! channel.  Drop the [`Coordinator`] to shut down cleanly: every shard
+//! flushes its pending requests before its worker exits — the pool
+//! drains losing nothing, exactly like the old single worker.
 
 use crate::coordinator::backend::{ExecutionBackend, NativeBackend};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::cost::CostModel;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::{DEFAULT_MODEL_LABEL, Metrics};
+use crate::coordinator::metrics::{DEFAULT_MODEL_LABEL, Metrics, ShardCounters};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::model_store::ModelRegistry;
 use crate::tensor::Tensor;
@@ -27,17 +43,40 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// Cap on the *default* shard count (an explicit
+/// [`CoordinatorBuilder::shards`] may exceed it).  Each shard is a full
+/// engine with compiled executables; past a handful of shards the
+/// batcher stops being the bottleneck and extra shards only fragment
+/// batches.
+pub const DEFAULT_MAX_SHARDS: usize = 8;
+
 enum Msg {
     Request(InferenceRequest, mpsc::Sender<Result<InferenceResponse, String>>),
     Shutdown,
 }
 
+/// Stable routing hash (FNV-1a, 64-bit): deterministic across runs,
+/// processes, and platforms, so a model's shard assignment is a fixed
+/// function of its name and the shard count.
+fn route_hash(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Builds a [`Coordinator`] from a backend and/or model registry, a batch
-/// policy, and a cost model.
+/// policy, a cost model, and a shard count.
 ///
 /// The batch policy defaults to the backend's preferred buckets (e.g. the
 /// sizes an AOT flow exported) or [`BatchPolicy::default`]; the cost model
-/// defaults to PASM silicon at 45 nm / 1 GHz ([`CostModel::pasm_asic`]).
+/// defaults to PASM silicon at 45 nm / 1 GHz ([`CostModel::pasm_asic`]);
+/// the shard count defaults to `available_parallelism` capped at
+/// [`DEFAULT_MAX_SHARDS`] when a registry is attached, else 1 (backends
+/// that cannot [`ExecutionBackend::replicate`] also serve from one
+/// shard).
 ///
 /// ```
 /// use pasm_accel::cnn::data::{render_digit, Rng};
@@ -54,6 +93,7 @@ enum Msg {
 /// let coord = CoordinatorBuilder::new()
 ///     .backend(NativeBackend::new(enc))
 ///     .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+///     .shards(2)
 ///     .build()?;
 /// let resp = coord.infer(render_digit(&mut rng, 3, 0.05))?;
 /// assert_eq!(resp.logits.len(), 10);
@@ -67,6 +107,7 @@ pub struct CoordinatorBuilder {
     cost: Option<CostModel>,
     registry: Option<Arc<ModelRegistry>>,
     default_model: Option<String>,
+    shards: Option<usize>,
 }
 
 impl CoordinatorBuilder {
@@ -128,6 +169,7 @@ impl CoordinatorBuilder {
 
     /// Bucketed dynamic-batching policy (default: the backend's preferred
     /// buckets with a 2 ms wait budget, else [`BatchPolicy::default`]).
+    /// Every shard applies the same policy to its own queues.
     pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
         self.policy = Some(policy);
         self
@@ -140,13 +182,54 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the worker, compile every default-model bucket, and start
-    /// serving.  Returns once the backend compiled successfully (startup
-    /// errors surface here, not on first request); registry models
-    /// compile lazily on first use so a hot-dropped artifact needs no
-    /// restart.
+    /// Size of the shard pool: `n` independent workers, each owning its
+    /// own engine, queues, and metrics; requests route by stable hash of
+    /// the model id ([`Coordinator::shard_for`]).
+    ///
+    /// Default: `available_parallelism` capped at [`DEFAULT_MAX_SHARDS`]
+    /// when a registry is attached, else **1** (without a registry there
+    /// is exactly one routable model, so extra shards could never
+    /// receive traffic).  A backend whose
+    /// [`ExecutionBackend::replicate`] returns `None` falls back to one
+    /// shard under the default, but explicitly requesting `n > 1` shards
+    /// with such a backend is a startup error.
+    ///
+    /// Shard workers multiply with any per-batch parallelism inside the
+    /// backend: N shards each running a [`NativeBackend`] row pool of M
+    /// threads can occupy N×M cores at peak.  The registry-default
+    /// backend divides its row pool by the shard count automatically;
+    /// when supplying your own backend to a multi-shard pool, size
+    /// [`NativeBackend::with_threads`] accordingly.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n);
+        self
+    }
+
+    /// Spawn the shard workers, compile every default-model bucket on
+    /// each, and start serving.  Returns once every shard compiled
+    /// successfully (startup errors surface here, not on first request);
+    /// registry models compile lazily on first use so a hot-dropped
+    /// artifact needs no restart.
     pub fn build(self) -> Result<Coordinator> {
+        anyhow::ensure!(
+            self.shards != Some(0),
+            "CoordinatorBuilder: .shards(0) — the pool needs at least one shard"
+        );
         let registry = self.registry;
+        // Resolve the pool size first (backend construction below can
+        // depend on it).  Without a registry there is exactly one
+        // routable key — the default model — so extra shards could never
+        // receive traffic and the default is a single shard; with a
+        // registry the default scales with the machine.
+        let requested = self.shards;
+        let want = match requested {
+            Some(n) => n,
+            None if registry.is_some() => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(DEFAULT_MAX_SHARDS),
+            None => 1,
+        };
         let mut default_model: Option<Arc<str>> = None;
         let backend: Box<dyn ExecutionBackend> = match (self.backend, &registry) {
             (Some(b), _) => {
@@ -174,7 +257,12 @@ impl CoordinatorBuilder {
                     .get(&name)
                     .with_context(|| format!("default model '{name}' is not in the registry"))?;
                 default_model = Some(Arc::from(name.as_str()));
-                Box::new(NativeBackend::new((*entry.enc).clone()))
+                // divide the per-batch row pool across the shards so the
+                // default configuration cannot oversubscribe the machine
+                // (N shards x N row workers)
+                let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                let per_shard = (cores / want).max(1);
+                Box::new(NativeBackend::new((*entry.enc).clone()).with_threads(per_shard))
             }
             (None, None) => anyhow::bail!(
                 "CoordinatorBuilder: a backend or a model registry is required \
@@ -189,57 +277,107 @@ impl CoordinatorBuilder {
         });
         let cost = self.cost.unwrap_or_default();
 
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let metrics_worker = Arc::clone(&metrics);
-        let (tx, rx) = mpsc::channel::<Msg>();
+        // Populate the pool: the primary backend serves shard 0, replicas
+        // serve the rest.  An explicitly requested size must be honored
+        // exactly or fail loudly; the default degrades to one shard for
+        // single-instance backends.
+        let mut backends: Vec<Box<dyn ExecutionBackend>> = Vec::with_capacity(want);
+        for _ in 1..want {
+            match backend.replicate() {
+                Some(b) => backends.push(b),
+                None => {
+                    anyhow::ensure!(
+                        requested.is_none(),
+                        "CoordinatorBuilder: backend '{}' cannot be replicated across \
+                         {want} shards (single-instance resource) — use .shards(1)",
+                        backend.name()
+                    );
+                    backends.clear();
+                    break;
+                }
+            }
+        }
+        backends.insert(0, backend);
 
-        // Compile on the worker thread (backend executables may not be
-        // Send); report startup errors through a channel.
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let buckets = policy.buckets.clone();
-        let registry_worker = registry.clone();
-        let worker = std::thread::Builder::new()
-            .name("pasm-coordinator".into())
-            .spawn(move || {
-                let engine = match Engine::new(backend, &buckets, &cost, registry_worker) {
-                    Ok(e) => {
-                        // label the metrics before signalling ready so
-                        // build() never returns with an empty backend name
-                        metrics_worker.lock().unwrap().record_backend(e.backend_name());
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                worker_loop(engine, policy, rx, metrics_worker);
-            })
-            .context("spawn coordinator worker")?;
-
-        ready_rx
-            .recv()
-            .context("coordinator worker died during startup")?
-            .map_err(|e| anyhow::anyhow!(e))?;
+        // Spawn every shard worker; each compiles on its own thread
+        // (backend executables may not be Send) and reports startup
+        // through a ready channel.  All shards must come up before
+        // build() returns.
+        let mut shards = Vec::with_capacity(backends.len());
+        let mut readies = Vec::with_capacity(backends.len());
+        for (shard_id, backend) in backends.into_iter().enumerate() {
+            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            let metrics_worker = Arc::clone(&metrics);
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+            let buckets = policy.buckets.clone();
+            let policy_worker = policy.clone();
+            let registry_worker = registry.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("pasm-coord-{shard_id}"))
+                .spawn(move || {
+                    let engine = match Engine::new(backend, &buckets, &cost, registry_worker) {
+                        Ok(e) => {
+                            // label the metrics before signalling ready so
+                            // build() never returns with an empty backend name
+                            metrics_worker.lock().unwrap().record_backend(e.backend_name());
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                            return;
+                        }
+                    };
+                    worker_loop(engine, policy_worker, rx, metrics_worker, shard_id);
+                })
+                .with_context(|| format!("spawn coordinator shard {shard_id}"))?;
+            shards.push(Shard { tx, worker: Some(worker), metrics });
+            readies.push(ready_rx);
+        }
+        for (shard_id, ready_rx) in readies.into_iter().enumerate() {
+            let started = ready_rx
+                .recv()
+                .with_context(|| format!("coordinator shard {shard_id} died during startup"))
+                .and_then(|r| r.map_err(|e| anyhow::anyhow!(e)));
+            if let Err(e) = started {
+                // tear the partial pool down: dropping the senders ends
+                // every healthy worker, and Shard::drop joins them
+                drop(shards);
+                return Err(e);
+            }
+        }
 
         Ok(Coordinator {
-            tx,
-            worker: Some(worker),
+            shards,
             next_id: AtomicU64::new(1),
-            metrics,
             registry,
             default_model,
         })
     }
 }
 
-/// Handle to a running coordinator.
-pub struct Coordinator {
+/// One shard of the pool: its request channel, worker thread, and
+/// shard-local metrics.
+struct Shard {
     tx: mpsc::Sender<Msg>,
     worker: Option<JoinHandle<()>>,
-    next_id: AtomicU64,
     metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a running coordinator pool.
+pub struct Coordinator {
+    shards: Vec<Shard>,
+    next_id: AtomicU64,
     registry: Option<Arc<ModelRegistry>>,
     default_model: Option<Arc<str>>,
 }
@@ -268,11 +406,13 @@ impl Coordinator {
         image: Tensor<f32>,
         model: Option<Arc<str>>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        let shard = self.shard_for(model.as_deref());
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         let mut req = InferenceRequest::new(id, image);
         req.model = model;
-        self.tx
+        self.shards[shard]
+            .tx
             .send(Msg::Request(req, rtx))
             .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
         Ok(rrx)
@@ -305,17 +445,60 @@ impl Coordinator {
         self.default_model.as_deref()
     }
 
-    /// Snapshot of the serving metrics.
+    /// Number of shards in the pool.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard requests for `model` route to (`None` = unnamed
+    /// traffic, which follows the default model).  Deterministic: a
+    /// stable FNV-1a hash of the model name modulo the shard count, so
+    /// the answer never changes for the lifetime of the pool.
+    pub fn shard_for(&self, model: Option<&str>) -> usize {
+        let key = model.or(self.default_model.as_deref()).unwrap_or("");
+        (route_hash(key) % self.shards.len() as u64) as usize
+    }
+
+    /// Merged snapshot of the serving metrics across all shards.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.metrics_with_shards().0
+    }
+
+    /// One *consistent* snapshot: every shard's metrics are read once,
+    /// and both the merged aggregate and the per-shard counters derive
+    /// from those same values — so the counters always sum to the merged
+    /// totals, the invariant the `metrics` wire frame documents.
+    /// (Reading [`Coordinator::metrics`] and
+    /// [`Coordinator::shard_counters`] separately under live traffic
+    /// could disagree by whatever completed in between.)
+    pub fn metrics_with_shards(&self) -> (Metrics, Vec<ShardCounters>) {
+        let per_shard = self.shard_metrics();
+        let mut merged = Metrics::new();
+        for m in &per_shard {
+            merged.merge(m);
+        }
+        let counters = per_shard.iter().map(Metrics::counters).collect();
+        (merged, counters)
+    }
+
+    /// Per-shard metrics snapshots, indexed by shard id.
+    pub fn shard_metrics(&self) -> Vec<Metrics> {
+        self.shards.iter().map(|s| s.metrics.lock().unwrap().clone()).collect()
+    }
+
+    /// Compact per-shard counters, indexed by shard id (what the
+    /// `metrics` wire frame reports next to the merged aggregate).
+    pub fn shard_counters(&self) -> Vec<ShardCounters> {
+        self.shards.iter().map(|s| s.metrics.lock().unwrap().counters()).collect()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        // wake every shard first so they drain in parallel; Shard::drop
+        // then joins each worker (its Shutdown re-send is a no-op)
+        for shard in &self.shards {
+            let _ = shard.tx.send(Msg::Shutdown);
         }
     }
 }
@@ -333,11 +516,15 @@ fn worker_loop(
     policy: BatchPolicy,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
+    shard_id: usize,
 ) {
     // one queue per model: a launched batch never mixes models, and the
     // policy's wait budget applies to each model's oldest request
     let mut queues: ModelQueues = BTreeMap::new();
     let mut shutting_down = false;
+    // this shard's batch sequence, stamped into every response: within
+    // one model it is non-decreasing in submission order (FIFO witness)
+    let mut batch_seq: u64 = 0;
 
     loop {
         // 1) drain the channel (non-blocking if we already hold requests,
@@ -406,6 +593,8 @@ fn worker_loop(
         let requests: Vec<InferenceRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
         let label: &str = model.as_deref().unwrap_or(DEFAULT_MODEL_LABEL);
         let started = Instant::now();
+        let seq = batch_seq;
+        batch_seq += 1;
         // Contain kernel panics (e.g. the fixed-point overflow guards on an
         // extreme input): the batch fails, the worker keeps serving.  The
         // engine's only cross-batch mutable state is a staging buffer that
@@ -422,8 +611,13 @@ fn worker_loop(
             Err(anyhow::anyhow!("execution panicked: {msg}"))
         });
         match result {
-            Ok(responses) => {
-                // one lock per batch, not per request (§Perf)
+            Ok(mut responses) => {
+                for resp in &mut responses {
+                    resp.shard = shard_id;
+                    resp.batch_seq = seq;
+                }
+                // one uncontended shard-local lock per batch, never a
+                // global one: snapshot readers merge across shards
                 let mut m = metrics.lock().unwrap();
                 m.record_batch(label, requests.len(), bucket);
                 if let Some(first) = responses.first() {
@@ -445,5 +639,27 @@ fn worker_loop(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_hash_is_the_pinned_fnv1a() {
+        // the routing hash is part of the coordinator's stable behavior:
+        // a model's shard must not move between builds.  Reference
+        // values computed from the FNV-1a spec (offset 0xcbf29ce484222325,
+        // prime 0x100000001b3).
+        assert_eq!(route_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(route_hash("alpha") % 4, 3);
+        assert_eq!(route_hash("beta") % 4, 3);
+        assert_eq!(route_hash("gamma") % 4, 2);
+        assert_eq!(route_hash("delta") % 4, 1);
+        assert_eq!(route_hash("digits-v0") % 4, 0);
+        assert_eq!(route_hash("digits-v1") % 4, 3);
+        assert_eq!(route_hash("digits-v2") % 4, 2);
+        assert_eq!(route_hash("digits-v3") % 4, 1);
     }
 }

@@ -40,13 +40,15 @@
 //!   the `pjrt` cargo feature, the PJRT CPU client that loads the AOT-lowered
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them on the
 //!   request path (python never runs at inference time).
-//! * [`coordinator`] — thread-based inference coordinator (std threads +
-//!   channels; no async runtime in the offline build): per-model request
-//!   queues, bucketed dynamic batcher, pluggable [`coordinator::backend`]
-//!   execution substrate (compiled-plan native kernels with a parallel
-//!   batch worker pool, or PJRT) with per-model executables keyed by
-//!   registry generation, hardware [`coordinator::cost`] model, per-model
-//!   metrics.
+//! * [`coordinator`] — sharded inference coordinator (std threads +
+//!   channels; no async runtime in the offline build): a pool of N
+//!   independent batching workers routed by a stable hash of the model
+//!   id, each with per-model request queues, a bucketed dynamic batcher,
+//!   a pluggable [`coordinator::backend`] execution substrate
+//!   (compiled-plan native kernels with a parallel batch worker pool, or
+//!   PJRT) with per-model executables keyed by registry generation, a
+//!   hardware [`coordinator::cost`] model, and shard-local per-model
+//!   metrics merged on snapshot.
 //! * [`serving`] — the network front-end: a length-prefixed JSON wire
 //!   protocol ([`serving::proto`], spec in `docs/WIRE_PROTOCOL.md`), a
 //!   thread-per-connection TCP server with admission control

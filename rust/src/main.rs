@@ -5,13 +5,13 @@
 //! repro simulate [--bins B] [--width W] [--variant ws|pasm] [--seed N]
 //! repro pack <dir> [--bins B] [--width W] [--name NAME] [--seed N]
 //! repro serve [--requests N] [--backend native|pjrt] [--artifacts DIR] [--fixed]
-//!             [--threads N] [--no-plan]
+//!             [--threads N] [--no-plan] [--shards N]
 //! repro serve --models <dir> [--requests N] [--model NAME] [--fixed]
-//!             [--poll-ms M] [--pack-midrun NAME=BINS]
+//!             [--poll-ms M] [--pack-midrun NAME=BINS] [--shards N]
 //! repro serve --listen ADDR [--models <dir>] [--fixed] [--max-conns N]
-//!             [--max-inflight N] [--port-file PATH] [--for-s SECS]
+//!             [--max-inflight N] [--port-file PATH] [--for-s SECS] [--shards N]
 //! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
-//!             [--models a,b,c]
+//!             [--models a,b,c] [--expect-multi-shard]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -80,13 +80,13 @@ const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|sweep|lis
   simulate --variant pasm --bins 16 --width 32 --seed 1
   pack <dir> [--bins 16] [--width 32] [--name NAME] [--seed 7]
   serve --requests 64 --backend native|pjrt [--artifacts artifacts] [--fixed]
-        [--threads N] [--no-plan]
+        [--threads N] [--no-plan] [--shards N]
   serve --models <dir> [--requests 64] [--model NAME] [--fixed] [--poll-ms 25]
-        [--pack-midrun NAME=BINS]
+        [--pack-midrun NAME=BINS] [--shards N]
   serve --listen 127.0.0.1:7878 [--models <dir>] [--fixed] [--max-conns 64]
-        [--max-inflight 256] [--port-file PATH] [--for-s SECS]
+        [--max-inflight 256] [--port-file PATH] [--for-s SECS] [--shards N]
   bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
-        [--models digits-b8,digits-b16]
+        [--models digits-b8,digits-b16] [--expect-multi-shard]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -113,6 +113,25 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, defaul
         .get(key)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Apply `--shards N` to a coordinator builder (absent = the builder's
+/// default: `available_parallelism` capped when serving a models
+/// registry, one shard otherwise).
+fn apply_shards(
+    builder: CoordinatorBuilder,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<CoordinatorBuilder> {
+    match flags.get("shards") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--shards expects a positive integer, got '{v}'"))?;
+            anyhow::ensure!(n >= 1, "--shards must be >= 1");
+            Ok(builder.shards(n))
+        }
+        None => Ok(builder),
+    }
 }
 
 fn cmd_report(args: &[String]) -> anyhow::Result<()> {
@@ -246,12 +265,12 @@ fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Resul
     if flags.contains_key("fixed") {
         backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
     }
-    let coord = CoordinatorBuilder::new()
+    let builder = CoordinatorBuilder::new()
         .backend(backend)
         .registry(Arc::clone(&registry))
         .default_model(&default_name)
-        .batch_policy(BatchPolicy::default())
-        .build()?;
+        .batch_policy(BatchPolicy::default());
+    let coord = apply_shards(builder, flags)?.build()?;
     let mut expected = registry.names();
     // every model (including a --pack-midrun addition) must be reachable
     // in both the pre- and post-swap halves of the round-robin
@@ -398,7 +417,7 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
         }
         builder.backend(backend)
     };
-    let coord = Arc::new(builder.build()?);
+    let coord = Arc::new(apply_shards(builder, flags)?.build()?);
 
     let config = ServerConfig {
         max_connections: flag(flags, "max-conns", 64),
@@ -406,7 +425,7 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
         ..ServerConfig::default()
     };
     let mut server = Server::bind(addr, Arc::clone(&coord), config)?;
-    println!("listening on {}", server.local_addr());
+    println!("listening on {} ({} coordinator shard(s))", server.local_addr(), coord.shards());
     if let Some(path) = flags.get("port-file") {
         write_port_file(std::path::Path::new(path), server.local_addr())?;
     }
@@ -428,6 +447,12 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
                 "coordinator: {} request(s) in {} batch(es), backend '{}'",
                 m.requests, m.batches, m.backend
             );
+            for (i, s) in coord.shard_counters().iter().enumerate() {
+                println!(
+                    "  shard {i}: {} request(s) in {} batch(es) ({} failed)",
+                    s.requests, s.batches, s.failed_batches
+                );
+            }
             server.shutdown();
             Ok(())
         }
@@ -439,7 +464,10 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
 
 /// Drive a running `repro serve --listen` server over real sockets with
 /// an open-loop Poisson arrival process and report req/s + latency
-/// percentiles.  Exits nonzero if any request failed outright.
+/// percentiles, plus the server's shard utilization from its `metrics`
+/// frame.  Exits nonzero if any request failed outright, or — with
+/// `--expect-multi-shard` — if fewer than two coordinator shards served
+/// batches (the CI check that sharded serving actually shards).
 fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = flags
         .get("addr")
@@ -472,6 +500,27 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     );
     anyhow::ensure!(r.errors == 0, "{} request(s) failed", r.errors);
     anyhow::ensure!(!r.latencies_us.is_empty(), "no request completed");
+
+    // shard utilization, straight from the server's metrics frame
+    let mut client = pasm_accel::serving::Client::connect(addr.as_str())
+        .map_err(|e| anyhow::anyhow!("connect for metrics: {e}"))?;
+    let m = client.metrics().map_err(|e| anyhow::anyhow!("fetch metrics: {e}"))?;
+    let active = m.shards.iter().filter(|s| s.batches > 0).count();
+    println!("server shards: {} total, {active} served batches", m.shards.len());
+    for (i, s) in m.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: {} request(s) in {} batch(es) ({} failed)",
+            s.requests, s.batches, s.failed_batches
+        );
+    }
+    if flags.contains_key("expect-multi-shard") {
+        anyhow::ensure!(
+            active >= 2,
+            "expected more than one shard to serve batches, but only {active} of {} did \
+             (is the server running with --shards > 1 and multiple model ids?)",
+            m.shards.len()
+        );
+    }
     Ok(())
 }
 
@@ -521,8 +570,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "pjrt" => anyhow::bail!("pjrt backend not compiled in (build with --features pjrt)"),
         other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
     };
-    let coord = builder.build()?;
-    println!("serving on '{}' backend", coord.metrics().backend);
+    let coord = apply_shards(builder, flags)?.build()?;
+    println!("serving on '{}' backend ({} shard(s))", coord.metrics().backend, coord.shards());
 
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n);

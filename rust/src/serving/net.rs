@@ -2,11 +2,15 @@
 //!
 //! [`Server::bind`] accepts connections on a `std::net` listener and
 //! serves [`crate::serving::proto`] frames against a shared
-//! [`Coordinator`].  No async runtime exists in the offline build, so the
-//! design is the contention-minimal std one: one accept thread, one
-//! thread per connection (bounded by
-//! [`ServerConfig::max_connections`]), frames handled serially per
-//! connection — responses come back in request order on each socket.
+//! [`Coordinator`] — since the sharding rework, a **pool** of batching
+//! workers the coordinator routes into by model id; the server neither
+//! knows nor cares, and the wire protocol is unchanged except for the
+//! richer `metrics` frame (merged + per-shard counters).  No async
+//! runtime exists in the offline build, so the design is the
+//! contention-minimal std one: one accept thread, one thread per
+//! connection (bounded by [`ServerConfig::max_connections`]), frames
+//! handled serially per connection — responses come back in request
+//! order on each socket.
 //!
 //! **Admission control** keeps overload typed instead of silent: an
 //! `infer` frame is only submitted to the coordinator after taking one of
@@ -397,7 +401,11 @@ fn handle_frame(frame: Frame, shared: &Shared) -> (Frame, Option<InflightSlot<'_
             (reply, None)
         }
         Frame::GetMetrics => {
-            let m = shared.coord.metrics();
+            // merged across the shard pool, plus the per-shard counters —
+            // the only place sharding is visible on the wire.  One
+            // consistent snapshot: the counters must sum to the merged
+            // totals even under live traffic.
+            let (m, shards) = shared.coord.metrics_with_shards();
             let reply = Frame::Metrics(MetricsFrame {
                 backend: m.backend.clone(),
                 requests: m.requests,
@@ -407,6 +415,7 @@ fn handle_frame(frame: Frame, shared: &Shared) -> (Frame, Option<InflightSlot<'_
                 p90_us: m.percentile_us(90.0),
                 p99_us: m.percentile_us(99.0),
                 per_model: m.per_model.clone(),
+                shards,
                 net: shared.snapshot(),
             });
             (reply, None)

@@ -21,7 +21,7 @@
 //! [`crate::runtime::json`]).
 
 use crate::coordinator::cost::HwCost;
-use crate::coordinator::metrics::ModelCounters;
+use crate::coordinator::metrics::{ModelCounters, ShardCounters};
 use crate::runtime::json::{self, Json};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -228,6 +228,10 @@ pub struct MetricsFrame {
     pub p99_us: Option<u64>,
     /// Per-model request/batch counters, keyed by model name.
     pub per_model: BTreeMap<String, ModelCounters>,
+    /// Per-shard counters, indexed by shard id (added in the sharded
+    /// coordinator rework; a v1-additive field — sharding is otherwise
+    /// invisible on the wire).  Older peers that omit it decode as empty.
+    pub shards: Vec<ShardCounters>,
     /// Network-layer counters.
     pub net: NetCounters,
 }
@@ -386,6 +390,18 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 per_model.insert(name.clone(), Json::Obj(cm));
             }
             put(&mut m, "per_model", Json::Obj(per_model));
+            let shards = f
+                .shards
+                .iter()
+                .map(|s| {
+                    let mut sm = BTreeMap::new();
+                    put(&mut sm, "requests", uint(s.requests));
+                    put(&mut sm, "batches", uint(s.batches));
+                    put(&mut sm, "failed_batches", uint(s.failed_batches));
+                    Json::Obj(sm)
+                })
+                .collect();
+            put(&mut m, "shards", Json::Arr(shards));
             let n = &f.net;
             let mut nm = BTreeMap::new();
             put(&mut nm, "connections_open", uint(n.connections_open));
@@ -602,6 +618,26 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                     },
                 );
             }
+            // additive v1 field: absent (an older peer) decodes as empty
+            let mut shards = Vec::new();
+            if let Some(shards_val) = obj.get("shards") {
+                let items = shards_val.as_arr().ok_or_else(|| {
+                    fail(ErrorCode::InvalidFrame, "field 'shards' must be an array".into())
+                })?;
+                for (i, item) in items.iter().enumerate() {
+                    let s = item.as_obj().ok_or_else(|| {
+                        fail(ErrorCode::InvalidFrame, format!("shard entry {i} must be an object"))
+                    })?;
+                    shards.push(ShardCounters {
+                        requests: need_u64(s, "requests")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                        batches: need_u64(s, "batches")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                        failed_batches: need_u64(s, "failed_batches")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    });
+                }
+            }
             let net_obj = need(obj, "net")
                 .and_then(|v| v.as_obj().ok_or_else(|| "field 'net' must be an object".into()))
                 .map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
@@ -616,6 +652,7 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                 p90_us: opt_u64(obj, "p90_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                 p99_us: opt_u64(obj, "p99_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                 per_model,
+                shards,
                 net: NetCounters {
                     connections_open: need_u64(net_obj, "connections_open")
                         .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
@@ -755,6 +792,10 @@ mod tests {
                 )]
                 .into_iter()
                 .collect(),
+                shards: vec![
+                    ShardCounters { requests: 20, batches: 6, failed_batches: 0 },
+                    ShardCounters { requests: 18, batches: 6, failed_batches: 0 },
+                ],
                 net: NetCounters {
                     connections_open: 1,
                     connections_opened: 3,
@@ -800,6 +841,20 @@ mod tests {
             String::from_utf8(encode(&Frame::Ping { nonce: 7 })).unwrap(),
             r#"{"nonce":7,"type":"ping","v":1}"#
         );
+    }
+
+    #[test]
+    fn metrics_without_shards_decodes_as_empty() {
+        // a pre-sharding peer omits the additive 'shards' field; the frame
+        // must still decode (v1 compatibility), with no shard entries
+        let payload = br#"{"backend":"native","batches":1,"failed_batches":0,"net":{"connections_open":0,"connections_opened":0,"connections_rejected":0,"frames_received":0,"frames_sent":0,"inflight":0,"overload_rejections":0,"protocol_errors":0,"requests_failed":0,"requests_ok":0},"p50_us":null,"p90_us":null,"p99_us":null,"per_model":{},"requests":1,"type":"metrics","v":1}"#;
+        match decode(payload).unwrap() {
+            Frame::Metrics(m) => {
+                assert_eq!(m.requests, 1);
+                assert!(m.shards.is_empty());
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
     }
 
     #[test]

@@ -233,6 +233,78 @@ fn connection_cap_rejects_with_a_typed_frame() {
     }
 }
 
+/// The sharded pool behind the TCP front-end: the wire protocol is
+/// unchanged, but the `metrics` frame reports per-shard counters; two
+/// models on distinct shards light up two entries, and a mid-run
+/// hot-swap lands on the owning shard only.
+#[test]
+fn sharded_server_reports_per_shard_metrics_and_hot_swaps() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("gamma", encoded(31, 4));
+    registry.insert("delta", encoded(32, 8));
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .registry(Arc::clone(&registry))
+            .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+            .shards(4)
+            .build()
+            .expect("coordinator startup"),
+    );
+    // the stable router puts these two models on different shards
+    assert_ne!(coord.shard_for(Some("gamma")), coord.shard_for(Some("delta")));
+    let server =
+        Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default()).expect("bind");
+    let addr = server.local_addr();
+
+    // drive both models concurrently over real sockets
+    std::thread::scope(|scope| {
+        for (model, seed) in [("gamma", 300u64), ("delta", 400u64)] {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect worker");
+                let mut rng = Rng::new(seed);
+                for i in 0..24usize {
+                    let img = render_digit(&mut rng, i % 10, 0.05);
+                    let reply = client
+                        .infer(Some(model), &img)
+                        .unwrap_or_else(|e| panic!("{model} request {i}: {e}"));
+                    assert_eq!(reply.model.as_deref(), Some(model), "request {i}");
+                    assert_eq!(reply.logits.len(), 10, "request {i}");
+                }
+            });
+        }
+    });
+
+    // the metrics frame reports the pool: four shard entries whose
+    // counters sum to the merged totals, with (at least) the two owning
+    // shards active
+    let mut client = Client::connect(addr).expect("connect");
+    let m = client.metrics().expect("metrics");
+    assert_eq!(m.shards.len(), 4, "one counters entry per shard");
+    assert_eq!(m.requests, 48);
+    let sum: u64 = m.shards.iter().map(|s| s.requests).sum();
+    assert_eq!(sum, m.requests, "per-shard counters must sum to the merged total");
+    let active = m.shards.iter().filter(|s| s.batches > 0).count();
+    assert!(active >= 2, "two models on distinct shards must light up two shards");
+    assert_eq!(m.failed_batches, 0);
+
+    // wire-level mid-run hot swap: the owning shard serves the new
+    // weights on its next batch; the other shard is untouched
+    let probe = render_digit(&mut Rng::new(88), 6, 0.05);
+    let before_g = client.infer(Some("gamma"), &probe).expect("probe gamma");
+    let before_d = client.infer(Some("delta"), &probe).expect("probe delta");
+    registry.insert("gamma", encoded(33, 16));
+    let after_g = client.infer(Some("gamma"), &probe).expect("probe gamma post-swap");
+    let after_d = client.infer(Some("delta"), &probe).expect("probe delta post-swap");
+    assert_ne!(
+        before_g.logits, after_g.logits,
+        "hot-swapped model must serve different weights"
+    );
+    assert_eq!(
+        before_d.logits, after_d.logits,
+        "un-swapped model must be unaffected by a swap on another shard"
+    );
+}
+
 #[test]
 fn bad_frames_get_typed_errors_without_dropping_the_connection() {
     let coord = Arc::new(

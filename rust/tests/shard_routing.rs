@@ -1,0 +1,303 @@
+//! Routing invariants of the sharded coordinator pool: one model, one
+//! shard (stable across requests and builds); per-model FIFO witnessed
+//! through batch sequence numbers; no batch mixes models at any shard
+//! count; a mid-run hot-swap goes live on the owning shard's next batch
+//! without touching the others; shutdown drains every shard.
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorBuilder, Executable, ExecutionBackend, NativeBackend,
+};
+use pasm_accel::model_store::ModelRegistry;
+use pasm_accel::quant::fixed::QFormat;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// FNV-1a at 4 shards: alpha -> 3, beta -> 3 (a deliberate collision),
+/// gamma -> 2, delta -> 1 — three distinct shards busy, one pair sharing.
+const MODELS: [&str; 4] = ["alpha", "beta", "gamma", "delta"];
+
+fn encoded(seed: u64, bins: usize) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+}
+
+fn four_model_registry() -> Arc<ModelRegistry> {
+    let registry = Arc::new(ModelRegistry::new());
+    for (i, name) in MODELS.iter().enumerate() {
+        registry.insert(*name, encoded(i as u64 + 1, 4 * (i + 1)));
+    }
+    registry
+}
+
+fn pool(registry: &Arc<ModelRegistry>, shards: usize) -> Coordinator {
+    CoordinatorBuilder::new()
+        .registry(Arc::clone(registry))
+        .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+        .shards(shards)
+        .build()
+        .expect("coordinator startup")
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn one_model_lands_on_one_shard_only() {
+    let registry = four_model_registry();
+    let coord = pool(&registry, 4);
+    assert_eq!(coord.shards(), 4);
+
+    let mut rng = Rng::new(9);
+    let mut rxs = Vec::new();
+    for i in 0..40usize {
+        let name = MODELS[i % MODELS.len()];
+        let rx = coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap();
+        rxs.push((name, rx));
+    }
+    let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+    for (name, rx) in rxs {
+        let resp = rx.recv().unwrap().expect("inference failed");
+        assert_eq!(
+            resp.shard,
+            coord.shard_for(Some(name)),
+            "'{name}' served off its routed shard"
+        );
+        if let Some(&shard) = seen.get(name) {
+            assert_eq!(shard, resp.shard, "'{name}' moved between shards");
+        }
+        seen.insert(name, resp.shard);
+    }
+
+    // the per-shard metrics agree: each model's counters live on exactly
+    // the shard the router names, and nowhere else
+    let per_shard = coord.shard_metrics();
+    for name in MODELS {
+        let with_counts: Vec<usize> = per_shard
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.model(name).requests > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(with_counts, vec![coord.shard_for(Some(name))], "model '{name}'");
+    }
+    // and the merged snapshot aggregates everything
+    let merged = coord.metrics();
+    assert_eq!(merged.requests, 40);
+    assert_eq!(merged.failed_batches, 0);
+    let summed: u64 = coord.shard_counters().iter().map(|s| s.requests).sum();
+    assert_eq!(summed, 40);
+}
+
+#[test]
+fn per_model_fifo_is_preserved_at_every_shard_count() {
+    for shards in [1usize, 2, 4, 5] {
+        let registry = four_model_registry();
+        let coord = pool(&registry, shards);
+        let mut rng = Rng::new(13);
+        let mut rxs = Vec::new();
+        for i in 0..60usize {
+            let name = MODELS[i % MODELS.len()];
+            let rx = coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap();
+            rxs.push((name, i, rx));
+        }
+        // receive in submission order: within one model, the serving
+        // batch sequence must never go backwards — a later request in an
+        // earlier batch would be a FIFO violation
+        let mut last: BTreeMap<&str, (usize, u64)> = BTreeMap::new();
+        for (name, i, rx) in rxs {
+            let resp = rx.recv().unwrap().expect("inference failed");
+            if let Some(&(shard, seq)) = last.get(name) {
+                assert_eq!(resp.shard, shard, "'{name}' moved shards ({shards} shards)");
+                assert!(
+                    resp.batch_seq >= seq,
+                    "model '{name}' request {i}: batch_seq {} after {} \
+                     ({shards} shards) — FIFO violated",
+                    resp.batch_seq,
+                    seq
+                );
+            }
+            last.insert(name, (resp.shard, resp.batch_seq));
+        }
+    }
+}
+
+#[test]
+fn no_batch_mixes_models_at_any_shard_count() {
+    for shards in [1usize, 2, 4] {
+        let registry = four_model_registry();
+        let coord = pool(&registry, shards);
+        let mut rng = Rng::new(17);
+        // hold every receiver while submitting so queues for different
+        // models overlap inside each shard
+        let mut rxs = Vec::new();
+        for i in 0..80usize {
+            let name = MODELS[i % MODELS.len()];
+            let rx = coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap();
+            rxs.push((name, rx));
+        }
+        // a batch is identified by (shard, batch_seq); every response in
+        // it must name the same model
+        let mut batch_model: BTreeMap<(usize, u64), &str> = BTreeMap::new();
+        for (name, rx) in rxs {
+            let resp = rx.recv().unwrap().expect("inference failed");
+            assert_eq!(resp.model.as_deref(), Some(name));
+            match batch_model.get(&(resp.shard, resp.batch_seq)) {
+                Some(&m) => assert_eq!(
+                    m, name,
+                    "batch (shard {}, seq {}) mixed '{m}' and '{name}' ({shards} shards)",
+                    resp.shard, resp.batch_seq
+                ),
+                None => {
+                    batch_model.insert((resp.shard, resp.batch_seq), name);
+                }
+            }
+        }
+        // the engine hard-errors mixed batches; none may have fired
+        assert_eq!(coord.metrics().failed_batches, 0, "{shards} shards");
+    }
+}
+
+#[test]
+fn hot_swap_becomes_visible_on_the_owning_shard() {
+    let registry = four_model_registry();
+    let coord = pool(&registry, 4);
+    // gamma and delta live on different shards (FNV-1a: 2 vs 1)
+    assert_ne!(coord.shard_for(Some("gamma")), coord.shard_for(Some("delta")));
+
+    let img = render_digit(&mut Rng::new(3), 3, 0.05);
+    let before_g = coord.infer_model("gamma", img.clone()).unwrap();
+    let before_d = coord.infer_model("delta", img.clone()).unwrap();
+
+    let v2 = encoded(99, 16);
+    registry.insert("gamma", v2.clone());
+
+    // the owning shard serves the new weights on its next batch...
+    let after_g = coord.infer_model("gamma", img.clone()).unwrap();
+    assert_ne!(
+        bits(&before_g.logits),
+        bits(&after_g.logits),
+        "hot-swapped model must serve different weights"
+    );
+    assert_eq!(
+        bits(&after_g.logits),
+        bits(&v2.forward(&img, ConvVariant::Pasm)),
+        "post-swap logits must be bit-exact to the new model"
+    );
+    // ...and the other shards are untouched
+    let after_d = coord.infer_model("delta", img.clone()).unwrap();
+    assert_eq!(bits(&before_d.logits), bits(&after_d.logits));
+}
+
+#[test]
+fn unnamed_traffic_follows_the_default_model() {
+    let registry = four_model_registry();
+    let coord = CoordinatorBuilder::new()
+        .registry(Arc::clone(&registry))
+        .default_model("delta")
+        .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+        .shards(4)
+        .build()
+        .unwrap();
+    assert_eq!(coord.shard_for(None), coord.shard_for(Some("delta")));
+
+    let resp = coord.infer(render_digit(&mut Rng::new(5), 2, 0.05)).unwrap();
+    assert_eq!(resp.model.as_deref(), Some("delta"));
+    assert_eq!(resp.shard, coord.shard_for(Some("delta")));
+}
+
+#[test]
+fn shutdown_drains_every_shard() {
+    let registry = four_model_registry();
+    // a bucket that cannot fill and a long wait budget: every request
+    // parks in its shard's queue until shutdown forces the flush
+    let coord = CoordinatorBuilder::new()
+        .registry(Arc::clone(&registry))
+        .batch_policy(BatchPolicy::new(vec![8], Duration::from_secs(5)))
+        .shards(4)
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(23);
+    let mut rxs = Vec::new();
+    for i in 0..12usize {
+        let name = MODELS[i % MODELS.len()];
+        let rx = coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap();
+        rxs.push((name, rx));
+    }
+    drop(coord); // shutdown must flush all four shards, losing nothing
+    for (i, (name, rx)) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("request {i} to '{name}' was dropped at shutdown"));
+        let resp = resp.unwrap_or_else(|e| panic!("request {i} to '{name}' failed: {e}"));
+        assert_eq!(resp.model.as_deref(), Some(name));
+    }
+}
+
+#[test]
+fn zero_shards_is_a_startup_error() {
+    let err = CoordinatorBuilder::new()
+        .backend(NativeBackend::new(encoded(1, 4)))
+        .shards(0)
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shard"), "error should name the problem: {err:#}");
+}
+
+/// A backend that works but cannot be replicated (the default
+/// `ExecutionBackend::replicate` returns `None`), standing in for
+/// single-instance resources like an AOT runtime handle.
+struct SingleInstance(NativeBackend);
+
+impl ExecutionBackend for SingleInstance {
+    fn name(&self) -> &'static str {
+        "single-instance"
+    }
+    fn encoded(&self) -> &EncodedCnn {
+        self.0.encoded()
+    }
+    fn compile(&self, batch: usize) -> anyhow::Result<Box<dyn Executable>> {
+        self.0.compile(batch)
+    }
+}
+
+#[test]
+fn non_replicable_backend_explicit_shards_errors_default_degrades() {
+    // explicitly asking for a pool the backend cannot populate fails loudly
+    let err = CoordinatorBuilder::new()
+        .backend(SingleInstance(NativeBackend::new(encoded(2, 4))))
+        .shards(2)
+        .build()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("replicated"), "unhelpful error: {msg}");
+
+    // under the default shard count (multi-shard once a registry is
+    // attached) the pool degrades to one shard and serves
+    let registry = four_model_registry();
+    let coord = CoordinatorBuilder::new()
+        .backend(SingleInstance(NativeBackend::new(encoded(2, 4))))
+        .registry(Arc::clone(&registry))
+        .build()
+        .unwrap();
+    assert_eq!(coord.shards(), 1);
+    let resp = coord.infer(render_digit(&mut Rng::new(7), 4, 0.05)).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert_eq!(resp.shard, 0);
+}
+
+#[test]
+fn plain_backend_defaults_to_one_shard() {
+    // without a registry there is exactly one routable model: the
+    // default pool must not spawn workers that can never receive traffic
+    let coord = CoordinatorBuilder::new()
+        .backend(NativeBackend::new(encoded(1, 4)))
+        .build()
+        .unwrap();
+    assert_eq!(coord.shards(), 1);
+}
