@@ -34,18 +34,38 @@
 //! the parallelism axis).  Merged req/s and per-shard batch counts land
 //! in the `shards` section; `shard_comparison` holds the 1-vs-4 speedup.
 //!
+//! A fifth phase compares the two **serving front-ends**: the same
+//! open-loop socket loads run against the thread-per-connection server
+//! and the evented readiness-loop server back to back (`net` entries
+//! carry a `server` field; `frontend_comparison` holds the ratio at the
+//! top load).  A sixth phase isolates **protocol pipelining**: one
+//! connection drives the evented server closed-loop with a window of 1
+//! (serial) and then a window of 32, and the run *asserts* the
+//! pipelined leg beats the serial leg — that claim is the acceptance
+//! bar, so it fails the bench rather than silently recording a
+//! regression.
+//!
+//! The bench never writes placeholders: every section is validated as
+//! measured (non-empty, positive req/s) before `BENCH_serving.json` is
+//! rewritten, and any shortfall panics the run (non-zero exit) instead
+//! of committing a file that looks like data.
+//!
 //! `--smoke` serves only the smallest load (the CI perf-harness check);
 //! the resulting file's `comparison.load` is 64, not the 1024 the
 //! acceptance bar reads — don't commit a smoke file over a full run.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+#[cfg(unix)]
+use pasm_accel::coordinator::loadgen::run_closed_loop_pipelined;
 use pasm_accel::coordinator::loadgen::{run_open_loop_models, run_open_loop_net};
 use pasm_accel::coordinator::{
     BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend, NativePrecision,
 };
 use pasm_accel::model_store::{self, ModelRegistry};
 use pasm_accel::quant::fixed::QFormat;
+#[cfg(unix)]
+use pasm_accel::serving::{EventedConfig, EventedServer};
 use pasm_accel::serving::{Server, ServerConfig};
 use pasm_accel::tensor::Tensor;
 use std::fmt::Write as _;
@@ -70,6 +90,7 @@ struct RunStats {
 }
 
 struct NetStats {
+    server: &'static str,
     load: usize,
     offered_hz: f64,
     req_s: f64,
@@ -78,6 +99,14 @@ struct NetStats {
     p99_us: u64,
     overloaded: usize,
     errors: usize,
+}
+
+struct PipelineStats {
+    requests: usize,
+    depth: usize,
+    window: usize,
+    serial_req_s: f64,
+    pipelined_req_s: f64,
 }
 
 struct ShardStats {
@@ -193,12 +222,51 @@ fn verify_bitexact(source: &EncodedCnn, registry: &Arc<ModelRegistry>, pool: &[T
     println!("verified: packed+registry-served logits bit-identical to source forward_fx");
 }
 
+/// Either bench server kind behind one address; holding the handle keeps
+/// the server alive for the measurement and drops it cleanly after.
+enum BenchServer {
+    Threaded(Server),
+    #[cfg(unix)]
+    Evented(EventedServer),
+}
+
+impl BenchServer {
+    fn bind(kind: &str, coord: &Arc<Coordinator>) -> Option<BenchServer> {
+        match kind {
+            "threaded" => {
+                let server = Server::bind("127.0.0.1:0", Arc::clone(coord), ServerConfig::default())
+                    .expect("bind threaded bench server");
+                Some(BenchServer::Threaded(server))
+            }
+            #[cfg(unix)]
+            "evented" => {
+                let server =
+                    EventedServer::bind("127.0.0.1:0", Arc::clone(coord), EventedConfig::default())
+                        .expect("bind evented bench server");
+                Some(BenchServer::Evented(server))
+            }
+            _ => None,
+        }
+    }
+
+    fn addr(&self) -> String {
+        match self {
+            BenchServer::Threaded(s) => s.local_addr().to_string(),
+            #[cfg(unix)]
+            BenchServer::Evented(s) => s.local_addr().to_string(),
+        }
+    }
+}
+
 /// Socket-path phase: front the registry-served planned coordinator with
-/// a TCP server on an ephemeral port and replay an open-loop Poisson
-/// schedule at ~70% of the planned path's measured capacity at each
-/// load — under capacity on purpose, so the number reflects wire +
-/// framing overhead rather than queueing collapse.
+/// a TCP server (`kind` selects the threaded or the evented front-end)
+/// on an ephemeral port and replay an open-loop Poisson schedule at ~70%
+/// of the planned path's measured capacity at each load — under capacity
+/// on purpose, so the number reflects wire + framing overhead rather
+/// than queueing collapse.  Returns nothing when `kind` is unavailable
+/// on this platform (evented is unix-only).
 fn run_net_loads(
+    kind: &'static str,
     loaded: &EncodedCnn,
     registry: &Arc<ModelRegistry>,
     runs: &[RunStats],
@@ -206,9 +274,10 @@ fn run_net_loads(
     pool: &[Tensor<f32>],
 ) -> Vec<NetStats> {
     let coord = Arc::new(build(loaded.clone(), true, Some(registry)));
-    let server = Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default())
-        .expect("bind bench server");
-    let addr = server.local_addr().to_string();
+    let Some(server) = BenchServer::bind(kind, &coord) else {
+        return Vec::new();
+    };
+    let addr = server.addr();
     let mut rng = Rng::new(31);
     let mut stats = Vec::new();
     for &load in loads {
@@ -223,14 +292,15 @@ fn run_net_loads(
             .expect("net load run");
         assert_eq!(r.errors, 0, "net bench requests failed");
         println!(
-            "bench coordinator/net/serve_{load}: offered {:.1} req/s, achieved {:.1} req/s, \
-             p99 {} us ({} overloaded)",
+            "bench coordinator/net-{kind}/serve_{load}: offered {:.1} req/s, \
+             achieved {:.1} req/s, p99 {} us ({} overloaded)",
             r.offered_hz,
             r.achieved_hz,
             r.percentile_us(99.0),
             r.overloaded
         );
         stats.push(NetStats {
+            server: kind,
             load,
             offered_hz: r.offered_hz,
             req_s: r.achieved_hz,
@@ -242,6 +312,70 @@ fn run_net_loads(
         });
     }
     stats
+}
+
+/// Protocol-pipelining phase: one connection, closed loop, against the
+/// evented server — a serial window of 1, then a pipelined window of
+/// `depth`.  Everything else (model, coordinator, socket, frames) is
+/// identical, so the ratio is what pipelined mode itself buys by
+/// amortizing round trips over the window.  **Asserts** the pipelined
+/// leg wins: that is the PR's acceptance claim, and a bench that can't
+/// demonstrate it should fail, not record it.
+#[cfg(unix)]
+fn run_pipeline_comparison(
+    loaded: &EncodedCnn,
+    registry: &Arc<ModelRegistry>,
+    requests: usize,
+    depth: usize,
+    pool: &[Tensor<f32>],
+) -> Option<PipelineStats> {
+    let coord = Arc::new(build(loaded.clone(), true, Some(registry)));
+    let server = EventedServer::bind("127.0.0.1:0", Arc::clone(&coord), EventedConfig::default())
+        .expect("bind evented bench server");
+    let addr = server.local_addr().to_string();
+    let serial =
+        run_closed_loop_pipelined(&addr, None, pool, requests, 1).expect("serial closed loop");
+    let piped =
+        run_closed_loop_pipelined(&addr, None, pool, requests, depth).expect("pipelined loop");
+    assert_eq!(serial.errors + piped.errors, 0, "pipeline bench requests failed");
+    println!(
+        "bench coordinator/pipeline/serve_{requests}: serial {:.1} req/s, \
+         pipelined(window {}) {:.1} req/s ({:.2}x)",
+        serial.req_per_s,
+        piped.window,
+        piped.req_per_s,
+        piped.req_per_s / serial.req_per_s
+    );
+    assert!(
+        piped.window >= 16,
+        "server granted window {} — the comparison needs depth >= 16",
+        piped.window
+    );
+    assert!(
+        piped.req_per_s > serial.req_per_s,
+        "pipelined (depth {}) {:.1} req/s did not beat serial {:.1} req/s on one connection",
+        piped.window,
+        piped.req_per_s,
+        serial.req_per_s
+    );
+    Some(PipelineStats {
+        requests,
+        depth,
+        window: piped.window,
+        serial_req_s: serial.req_per_s,
+        pipelined_req_s: piped.req_per_s,
+    })
+}
+
+#[cfg(not(unix))]
+fn run_pipeline_comparison(
+    _loaded: &EncodedCnn,
+    _registry: &Arc<ModelRegistry>,
+    _requests: usize,
+    _depth: usize,
+    _pool: &[Tensor<f32>],
+) -> Option<PipelineStats> {
+    None
 }
 
 /// Model names chosen to spread over all 4 shards under the stable
@@ -317,12 +451,48 @@ fn run_shard_scaling(runs: &[RunStats], pool: &[Tensor<f32>], load: usize) -> Ve
     stats
 }
 
+/// Loud-failure gate: every section this run claims to have measured
+/// must hold real numbers.  A placeholder (empty section, zero req/s)
+/// panics — `BENCH_serving.json` is only ever rewritten with data.
+fn ensure_measured(
+    runs: &[RunStats],
+    net: &[NetStats],
+    shards: &[ShardStats],
+    pipeline: Option<&PipelineStats>,
+) {
+    assert!(!runs.is_empty(), "refusing to write a placeholder: no in-process runs measured");
+    assert!(!net.is_empty(), "refusing to write a placeholder: no socket loads measured");
+    assert!(!shards.is_empty(), "refusing to write a placeholder: no shard runs measured");
+    for r in runs {
+        assert!(r.req_s > 0.0, "placeholder req_s in run '{}' at load {}", r.config, r.load);
+    }
+    for r in net {
+        assert!(r.req_s > 0.0, "placeholder req_s in net/{} at load {}", r.server, r.load);
+    }
+    for r in shards {
+        assert!(r.req_s > 0.0, "placeholder req_s in shards={} run", r.shards);
+    }
+    if cfg!(unix) {
+        assert!(
+            net.iter().any(|r| r.server == "evented"),
+            "refusing to write a placeholder: the evented front-end was not measured"
+        );
+        let p = pipeline.expect("refusing to write a placeholder: pipelining was not measured");
+        assert!(
+            p.serial_req_s > 0.0 && p.pipelined_req_s > 0.0,
+            "placeholder req_s in the pipeline comparison"
+        );
+    }
+}
+
 fn write_json(
     runs: &[RunStats],
     net: &[NetStats],
     shards: &[ShardStats],
+    pipeline: Option<&PipelineStats>,
     artifact: &ArtifactStats,
 ) {
+    ensure_measured(runs, net, shards, pipeline);
     let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load);
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load);
@@ -369,21 +539,66 @@ fn write_json(
     }
     s.push_str("  ],\n");
     s.push_str(
-        "  \"net_label\": \"open-loop Poisson over TCP sockets \
-         (serving::net + wire protocol), registry-loaded model\",\n",
+        "  \"net_label\": \"open-loop Poisson over TCP sockets (wire protocol), \
+         registry-loaded model; 'server' is the front-end kind\",\n",
     );
     s.push_str("  \"net\": [\n");
     for (i, r) in net.iter().enumerate() {
         let sep = if i + 1 == net.len() { "" } else { "," };
         let _ = writeln!(
             s,
-            "    {{\"load\": {}, \"offered_hz\": {:.1}, \"req_s\": {:.1}, \
+            "    {{\"server\": \"{}\", \"load\": {}, \"offered_hz\": {:.1}, \"req_s\": {:.1}, \
              \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}, \
              \"overloaded\": {}, \"errors\": {}}}{sep}",
-            r.load, r.offered_hz, r.req_s, r.p50_us, r.p90_us, r.p99_us, r.overloaded, r.errors
+            r.server,
+            r.load,
+            r.offered_hz,
+            r.req_s,
+            r.p50_us,
+            r.p90_us,
+            r.p99_us,
+            r.overloaded,
+            r.errors
         );
     }
     s.push_str("  ],\n");
+    let max_net = net.iter().map(|r| r.load).max().unwrap_or(0);
+    let threaded = net.iter().find(|r| r.server == "threaded" && r.load == max_net);
+    let evented = net.iter().find(|r| r.server == "evented" && r.load == max_net);
+    match (threaded, evented) {
+        (Some(t), Some(e)) => {
+            let _ = writeln!(
+                s,
+                "  \"frontend_comparison\": {{\"load\": {}, \"threaded_req_s\": {:.1}, \
+                 \"evented_req_s\": {:.1}, \"ratio\": {:.2}}},",
+                max_net,
+                t.req_s,
+                e.req_s,
+                e.req_s / t.req_s
+            );
+        }
+        _ => s.push_str("  \"frontend_comparison\": null,\n"),
+    }
+    s.push_str(
+        "  \"pipeline_label\": \"one connection, closed loop against the evented server: \
+         serial window of 1 vs negotiated pipelined window\",\n",
+    );
+    match pipeline {
+        Some(p) => {
+            let _ = writeln!(
+                s,
+                "  \"pipeline\": {{\"requests\": {}, \"depth\": {}, \"window\": {}, \
+                 \"serial_req_s\": {:.1}, \"pipelined_req_s\": {:.1}, \"speedup\": {:.2}}},",
+                p.requests,
+                p.depth,
+                p.window,
+                p.serial_req_s,
+                p.pipelined_req_s,
+                p.pipelined_req_s / p.serial_req_s
+            );
+        }
+        None => s.push_str("  \"pipeline\": null,\n"),
+    }
     s.push_str(
         "  \"shards_label\": \"1-shard vs 4-shard coordinator pool, 4 models, \
          open-loop over-capacity load, 1 execution thread per shard\",\n",
@@ -478,8 +693,13 @@ fn main() {
         runs.push(run_load("planned", &planned, load, &pool));
     }
 
-    // socket path: same model, same loads, through the TCP front-end
-    let net = run_net_loads(&loaded, &registry, &runs, loads, &pool);
+    // socket path: same model, same loads, through both TCP front-ends
+    let mut net = run_net_loads("threaded", &loaded, &registry, &runs, loads, &pool);
+    net.extend(run_net_loads("evented", &loaded, &registry, &runs, loads, &pool));
+
+    // protocol pipelining: serial vs windowed on one evented connection
+    let pipe_requests = if smoke { 256 } else { 1024 };
+    let pipeline = run_pipeline_comparison(&loaded, &registry, pipe_requests, 32, &pool);
 
     // shard scaling: ≥2 models under open-loop load, 1 vs 4 shards
     let shard_load = if smoke { 256 } else { 2048 };
@@ -507,6 +727,6 @@ fn main() {
         );
     }
 
-    write_json(&runs, &net, &shards, &artifact);
+    write_json(&runs, &net, &shards, pipeline.as_ref(), &artifact);
     let _ = std::fs::remove_dir_all(&models_dir);
 }

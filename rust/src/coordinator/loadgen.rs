@@ -13,15 +13,20 @@
 //!
 //! [`run_open_loop_net`] is the same methodology over **real TCP
 //! sockets**: a pool of [`crate::serving::Client`] connections replays
-//! the schedule against a running [`crate::serving::net::Server`], so
-//! the measured latency includes framing, the network stack, and the
-//! server's admission control (`RESOURCE_EXHAUSTED` rejections are
-//! counted separately from hard errors).  `cargo bench --bench
-//! coordinator` records both paths side by side in `BENCH_serving.json`.
+//! the schedule against a running serving front-end, so the measured
+//! latency includes framing, the network stack, and the server's
+//! admission control (`RESOURCE_EXHAUSTED` rejections are counted
+//! separately from hard errors).  [`run_closed_loop_pipelined`] is the
+//! single-connection closed-loop complement: it drives **one** socket
+//! with a fixed window of pipelined requests, which is how the
+//! serial-vs-pipelined comparison in `BENCH_serving.json` isolates the
+//! protocol's round-trip amortization from connection-level
+//! parallelism.  `cargo bench --bench coordinator` records all of these
+//! paths in `BENCH_serving.json`.
 
 use crate::cnn::data::Rng;
 use crate::coordinator::server::Coordinator;
-use crate::serving::client::{Client, ClientError};
+use crate::serving::client::{Client, ClientError, PipelinedClient};
 use crate::serving::proto::ErrorCode;
 use crate::tensor::Tensor;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -242,6 +247,72 @@ pub fn run_open_loop_net(
         latencies_us,
         errors,
         overloaded,
+    })
+}
+
+/// Result of one single-connection closed-loop run.
+#[derive(Clone, Debug)]
+pub struct ClosedLoopResult {
+    /// Requests completed (including per-request server errors).
+    pub requests: usize,
+    /// Requests answered with a typed per-request error frame.
+    pub errors: usize,
+    /// The window depth actually used (server grant may cap the ask).
+    pub window: usize,
+    /// Wall time of the run (seconds).
+    pub wall_s: f64,
+    /// Successful requests divided by wall time (req/s).
+    pub req_per_s: f64,
+}
+
+/// Drive **one** connection closed-loop with a window of up to `depth`
+/// pipelined requests (images cycled from `pool`, all against `model`;
+/// `None` = the server's default).  `depth == 1` degenerates to the
+/// classic serial closed loop — same connection, same frames — so a
+/// depth sweep isolates what pipelining itself buys: with a window of
+/// `w`, the per-request round trip is amortized over `w` in-flight
+/// requests instead of being paid serially.
+///
+/// Transport failures abort the run with an error; per-request typed
+/// error frames are counted and the loop continues.
+pub fn run_closed_loop_pipelined(
+    addr: &str,
+    model: Option<&str>,
+    pool: &[Tensor<f32>],
+    n: usize,
+    depth: usize,
+) -> anyhow::Result<ClosedLoopResult> {
+    anyhow::ensure!(!pool.is_empty(), "image pool is empty");
+    anyhow::ensure!(n >= 1, "need at least one request");
+    anyhow::ensure!(depth >= 1, "window depth must be >= 1");
+    let mut client = PipelinedClient::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect pipelined client to {addr}: {e}"))?;
+    let window = (depth as u64).min(client.depth()).max(1) as usize;
+
+    let started = Instant::now();
+    let mut submitted = 0usize;
+    let mut received = 0usize;
+    let mut errors = 0usize;
+    while received < n {
+        while submitted < n && client.in_flight() < window {
+            client
+                .submit(model, &pool[submitted % pool.len()])
+                .map_err(|e| anyhow::anyhow!("submit request {submitted}: {e}"))?;
+            submitted += 1;
+        }
+        let reply = client.recv().map_err(|e| anyhow::anyhow!("receive reply: {e}"))?;
+        received += 1;
+        if reply.result.is_err() {
+            errors += 1;
+        }
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+    Ok(ClosedLoopResult {
+        requests: received,
+        errors,
+        window,
+        wall_s,
+        req_per_s: (received - errors) as f64 / wall_s,
     })
 }
 

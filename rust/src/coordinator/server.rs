@@ -51,8 +51,33 @@ use std::time::Instant;
 pub const DEFAULT_MAX_SHARDS: usize = 8;
 
 enum Msg {
-    Request(InferenceRequest, mpsc::Sender<Result<InferenceResponse, String>>),
+    Request(InferenceRequest, Completion),
     Shutdown,
+}
+
+/// How a finished request is delivered back to its submitter.
+///
+/// The channel form backs the blocking [`Coordinator::submit`] family;
+/// the callback form backs [`Coordinator::submit_with`], which the
+/// evented serving front-end uses so a completion costs a queue push and
+/// a wake instead of a parked thread per in-flight request.
+enum Completion {
+    /// Send down a per-request response channel (receiver may be gone).
+    Channel(mpsc::Sender<Result<InferenceResponse, String>>),
+    /// Invoke a closure on the shard worker's thread.  Must be cheap and
+    /// must not block: it runs inside the batching loop.
+    Callback(Box<dyn FnOnce(Result<InferenceResponse, String>) + Send>),
+}
+
+impl Completion {
+    fn deliver(self, result: Result<InferenceResponse, String>) {
+        match self {
+            Completion::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            Completion::Callback(f) => f(result),
+        }
+    }
 }
 
 /// Stable routing hash (FNV-1a, 64-bit): deterministic across runs,
@@ -406,16 +431,44 @@ impl Coordinator {
         image: Tensor<f32>,
         model: Option<Arc<str>>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit_completion(image, model, Completion::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Submit one image and deliver the result through `on_done` instead
+    /// of a channel (`model` = `None` routes to the default model).
+    ///
+    /// The callback runs on the shard worker's thread right after the
+    /// batch completes (or fails), so it must be cheap and non-blocking —
+    /// push to a queue and wake a poller, don't do work.  This is the
+    /// submission path of the evented serving front-end, where no thread
+    /// exists to park on a response channel.
+    pub fn submit_with<F>(&self, model: Option<&str>, image: Tensor<f32>, on_done: F) -> Result<()>
+    where
+        F: FnOnce(Result<InferenceResponse, String>) + Send + 'static,
+    {
+        let model = match model {
+            Some(m) => Some(Arc::from(m)),
+            None => self.default_model.clone(),
+        };
+        self.submit_completion(image, model, Completion::Callback(Box::new(on_done)))
+    }
+
+    fn submit_completion(
+        &self,
+        image: Tensor<f32>,
+        model: Option<Arc<str>>,
+        completion: Completion,
+    ) -> Result<()> {
         let shard = self.shard_for(model.as_deref());
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (rtx, rrx) = mpsc::channel();
         let mut req = InferenceRequest::new(id, image);
         req.model = model;
         self.shards[shard]
             .tx
-            .send(Msg::Request(req, rtx))
-            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
-        Ok(rrx)
+            .send(Msg::Request(req, completion))
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
     }
 
     /// Submit to the default model and block for the answer (convenience).
@@ -503,12 +556,11 @@ impl Drop for Coordinator {
     }
 }
 
-type ResponseTx = mpsc::Sender<Result<InferenceResponse, String>>;
-type Pending = (InferenceRequest, ResponseTx);
+type Pending = (InferenceRequest, Completion);
 type ModelQueues = BTreeMap<Option<Arc<str>>, VecDeque<Pending>>;
 
-fn push(queues: &mut ModelQueues, r: InferenceRequest, tx: ResponseTx) {
-    queues.entry(r.model.clone()).or_default().push_back((r, tx));
+fn push(queues: &mut ModelQueues, r: InferenceRequest, done: Completion) {
+    queues.entry(r.model.clone()).or_default().push_back((r, done));
 }
 
 fn worker_loop(
@@ -532,13 +584,13 @@ fn worker_loop(
         let held: usize = queues.values().map(VecDeque::len).sum();
         if held == 0 && !shutting_down {
             match rx.recv() {
-                Ok(Msg::Request(r, tx)) => push(&mut queues, r, tx),
+                Ok(Msg::Request(r, done)) => push(&mut queues, r, done),
                 Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(Msg::Request(r, tx)) => push(&mut queues, r, tx),
+                Ok(Msg::Request(r, done)) => push(&mut queues, r, done),
                 Ok(Msg::Shutdown) => {
                     shutting_down = true;
                     break;
@@ -579,7 +631,7 @@ fn worker_loop(
             // wait a beat for more requests (bounded by the wait budget)
             if let Ok(msg) = rx.recv_timeout(policy.max_wait) {
                 match msg {
-                    Msg::Request(r, tx) => push(&mut queues, r, tx),
+                    Msg::Request(r, done) => push(&mut queues, r, done),
                     Msg::Shutdown => shutting_down = true,
                 }
             }
@@ -627,15 +679,15 @@ fn worker_loop(
                     m.record_latency(req.enqueued_at.elapsed());
                 }
                 drop(m);
-                for ((_, tx), resp) in batch.into_iter().zip(responses) {
-                    let _ = tx.send(Ok(resp));
+                for ((_, done), resp) in batch.into_iter().zip(responses) {
+                    done.deliver(Ok(resp));
                 }
             }
             Err(e) => {
                 metrics.lock().unwrap().record_failed_batch(label);
                 let msg = format!("batch failed after {:?}: {e:#}", started.elapsed());
-                for (_, tx) in batch {
-                    let _ = tx.send(Err(msg.clone()));
+                for (_, done) in batch {
+                    done.deliver(Err(msg.clone()));
                 }
             }
         }

@@ -8,10 +8,11 @@
 //!             [--threads N] [--no-plan] [--shards N]
 //! repro serve --models <dir> [--requests N] [--model NAME] [--fixed]
 //!             [--poll-ms M] [--pack-midrun NAME=BINS] [--shards N]
-//! repro serve --listen ADDR [--models <dir>] [--fixed] [--max-conns N]
+//! repro serve --listen ADDR [--evented] [--models <dir>] [--fixed] [--max-conns N]
 //!             [--max-inflight N] [--port-file PATH] [--for-s SECS] [--shards N]
 //! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
 //!             [--models a,b,c] [--expect-multi-shard]
+//!             [--pipeline-depth D] [--idle-conns N]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -31,7 +32,9 @@ use pasm_accel::quant::codebook::encode_weights;
 use pasm_accel::quant::fixed::QFormat;
 use pasm_accel::report::{all_report_ids, run_report};
 use pasm_accel::serving::net::write_port_file;
-use pasm_accel::serving::{Server, ServerConfig};
+#[cfg(unix)]
+use pasm_accel::serving::{EventedConfig, EventedServer};
+use pasm_accel::serving::{NetCounters, Server, ServerConfig};
 use pasm_accel::sim::simulate_conv;
 use pasm_accel::tensor::Tensor;
 use std::collections::{BTreeMap, HashMap};
@@ -83,10 +86,12 @@ const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|sweep|lis
         [--threads N] [--no-plan] [--shards N]
   serve --models <dir> [--requests 64] [--model NAME] [--fixed] [--poll-ms 25]
         [--pack-midrun NAME=BINS] [--shards N]
-  serve --listen 127.0.0.1:7878 [--models <dir>] [--fixed] [--max-conns 64]
-        [--max-inflight 256] [--port-file PATH] [--for-s SECS] [--shards N]
+  serve --listen 127.0.0.1:7878 [--evented] [--workers N] [--max-pipeline 32]
+        [--models <dir>] [--fixed] [--max-conns 64] [--max-inflight 256]
+        [--port-file PATH] [--for-s SECS] [--shards N]
   bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
         [--models digits-b8,digits-b16] [--expect-multi-shard]
+        [--pipeline-depth 32] [--idle-conns 5000]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -377,11 +382,81 @@ fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Resul
     Ok(())
 }
 
+/// Either serving front-end behind one interface, so `serve --listen`
+/// drives both the thread-per-connection server and (with `--evented`)
+/// the readiness-loop server through identical code.
+enum FrontEnd {
+    Threaded(Server),
+    #[cfg(unix)]
+    Evented(EventedServer),
+}
+
+impl FrontEnd {
+    fn local_addr(&self) -> std::net::SocketAddr {
+        match self {
+            FrontEnd::Threaded(s) => s.local_addr(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.local_addr(),
+        }
+    }
+
+    fn net_metrics(&self) -> NetCounters {
+        match self {
+            FrontEnd::Threaded(s) => s.net_metrics(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.net_metrics(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        match self {
+            FrontEnd::Threaded(s) => s.shutdown(),
+            #[cfg(unix)]
+            FrontEnd::Evented(s) => s.shutdown(),
+        }
+    }
+}
+
+#[cfg(unix)]
+fn bind_evented(
+    addr: &str,
+    coord: &Arc<pasm_accel::coordinator::Coordinator>,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<FrontEnd> {
+    let config = EventedConfig {
+        workers: flag(flags, "workers", EventedConfig::default().workers),
+        max_connections: flag(flags, "max-conns", 8192),
+        max_inflight: flag(flags, "max-inflight", 256),
+        max_pipeline: flag(flags, "max-pipeline", 32),
+        ..EventedConfig::default()
+    };
+    // a C100K front-end needs the fds to match: raise the soft limit
+    // toward the connection cap (CI runners often default to 1024)
+    let want = config.max_connections as u64 + 512;
+    if let Ok(limit) = pasm_accel::serving::evented::raise_fd_limit(want) {
+        if limit < want {
+            eprintln!("note: fd limit {limit} is below max-conns {}", config.max_connections);
+        }
+    }
+    Ok(FrontEnd::Evented(EventedServer::bind(addr, Arc::clone(coord), config)?))
+}
+
+#[cfg(not(unix))]
+fn bind_evented(
+    _addr: &str,
+    _coord: &Arc<pasm_accel::coordinator::Coordinator>,
+    _flags: &HashMap<String, String>,
+) -> anyhow::Result<FrontEnd> {
+    anyhow::bail!("--evented requires a unix platform (epoll/poll readiness)")
+}
+
 /// Network serving: bind a TCP front-end and serve wire-protocol frames
 /// until `--for-s` elapses (or forever).  With `--models DIR` every
 /// `.pasm` artifact in DIR is served by name (hot-swappable via the
 /// directory watcher); without it a deterministic built-in digits model
-/// serves as the default.
+/// serves as the default.  `--evented` selects the readiness-loop
+/// server (tens of thousands of connections, pipelining) instead of the
+/// thread-per-connection one.
 fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Result<()> {
     let builder = CoordinatorBuilder::new().batch_policy(BatchPolicy::default());
     let builder = if let Some(dir) = flags.get("models") {
@@ -419,13 +494,22 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
     };
     let coord = Arc::new(apply_shards(builder, flags)?.build()?);
 
-    let config = ServerConfig {
-        max_connections: flag(flags, "max-conns", 64),
-        max_inflight: flag(flags, "max-inflight", 256),
-        ..ServerConfig::default()
+    let mut server = if flags.contains_key("evented") {
+        bind_evented(addr, &coord, flags)?
+    } else {
+        let config = ServerConfig {
+            max_connections: flag(flags, "max-conns", 64),
+            max_inflight: flag(flags, "max-inflight", 256),
+            ..ServerConfig::default()
+        };
+        FrontEnd::Threaded(Server::bind(addr, Arc::clone(&coord), config)?)
     };
-    let mut server = Server::bind(addr, Arc::clone(&coord), config)?;
-    println!("listening on {} ({} coordinator shard(s))", server.local_addr(), coord.shards());
+    let kind = if flags.contains_key("evented") { "evented" } else { "threaded" };
+    println!(
+        "listening on {} ({kind} front-end, {} coordinator shard(s))",
+        server.local_addr(),
+        coord.shards()
+    );
     if let Some(path) = flags.get("port-file") {
         write_port_file(std::path::Path::new(path), server.local_addr())?;
     }
@@ -468,10 +552,20 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
 /// frame.  Exits nonzero if any request failed outright, or — with
 /// `--expect-multi-shard` — if fewer than two coordinator shards served
 /// batches (the CI check that sharded serving actually shards).
+///
+/// `--pipeline-depth D` additionally runs the single-connection
+/// closed-loop comparison (serial window of 1 vs a pipelined window of
+/// D on the same socket) and fails if either leg errors.
+/// `--idle-conns N` is a standalone smoke instead: hold N open idle
+/// sockets against the server and require it to keep answering.
 fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = flags
         .get("addr")
         .context("usage: repro bench-net --addr HOST:PORT [--requests N] [--rate HZ]")?;
+    if let Some(idle) = flags.get("idle-conns") {
+        let idle: usize = idle.parse().context("--idle-conns takes a count")?;
+        return cmd_idle_conns(addr, idle);
+    }
     let n: usize = flag(flags, "requests", 256);
     let rate: f64 = flag(flags, "rate", 500.0);
     let conns: usize = flag(flags, "conns", 8);
@@ -521,6 +615,75 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             m.shards.len()
         );
     }
+
+    // serial-vs-pipelined closed loop on one connection: what does the
+    // pipelined protocol mode itself buy, round-trips amortized over
+    // the window, with connection parallelism held at exactly 1?
+    if let Some(depth) = flags.get("pipeline-depth") {
+        let depth: usize = depth.parse().context("--pipeline-depth takes a window size")?;
+        anyhow::ensure!(depth >= 2, "--pipeline-depth below 2 cannot pipeline");
+        let model = models.first().cloned().flatten();
+        let loadgen = pasm_accel::coordinator::loadgen::run_closed_loop_pipelined;
+        let serial = loadgen(addr, model.as_deref(), &pool, n, 1)?;
+        let piped = loadgen(addr, model.as_deref(), &pool, n, depth)?;
+        println!(
+            "one connection, {n} requests: serial {:.1} req/s, pipelined(depth {}) {:.1} req/s \
+             ({:.2}x)",
+            serial.req_per_s,
+            piped.window,
+            piped.req_per_s,
+            piped.req_per_s / serial.req_per_s.max(1e-9)
+        );
+        anyhow::ensure!(serial.errors == 0, "{} serial request(s) failed", serial.errors);
+        anyhow::ensure!(piped.errors == 0, "{} pipelined request(s) failed", piped.errors);
+        anyhow::ensure!(
+            piped.window >= 2,
+            "server granted no pipelining (window {}); is it running --evented?",
+            piped.window
+        );
+    }
+    Ok(())
+}
+
+/// `bench-net --idle-conns N`: open and hold N idle sockets, then prove
+/// the server still answers new requests — the C100K smoke.  Raises the
+/// process fd limit itself so CI runners with a 1024 soft limit work.
+fn cmd_idle_conns(addr: &str, n: usize) -> anyhow::Result<()> {
+    #[cfg(unix)]
+    {
+        let limit = pasm_accel::serving::evented::raise_fd_limit(n as u64 + 256)?;
+        anyhow::ensure!(
+            limit > n as u64 + 64,
+            "fd limit {limit} too low for {n} sockets (raise the hard limit with ulimit -Hn)"
+        );
+    }
+    let mut socks = Vec::with_capacity(n);
+    for i in 0..n {
+        let sock = std::net::TcpStream::connect(addr)
+            .with_context(|| format!("open idle connection {i} of {n} to {addr}"))?;
+        socks.push(sock);
+    }
+    // with every socket parked, the server must still accept and answer
+    let mut client = pasm_accel::serving::Client::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect while {n} idle sockets held: {e}"))?;
+    client.ping().map_err(|e| anyhow::anyhow!("ping while {n} idle sockets held: {e}"))?;
+    // the accept thread may still be draining the tail of the burst;
+    // give the gauge a moment to cover every socket we hold
+    let mut open = 0u64;
+    for _ in 0..100 {
+        let m = client.metrics().map_err(|e| anyhow::anyhow!("fetch metrics: {e}"))?;
+        open = m.net.connections_open;
+        if open as usize > n {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("{n} idle connection(s) held, server answers; connections_open = {open}");
+    anyhow::ensure!(
+        open as usize > n,
+        "server reports {open} open connections, expected more than {n}"
+    );
+    drop(socks);
     Ok(())
 }
 

@@ -1,4 +1,4 @@
-//! Blocking wire-protocol client.
+//! Blocking wire-protocol clients.
 //!
 //! [`Client`] speaks [`crate::serving::proto`] over one TCP connection:
 //! one request, one reply, in order (the server answers each
@@ -6,6 +6,12 @@
 //! protocol — the e2e tests, the network load generator
 //! ([`crate::coordinator::loadgen::run_open_loop_net`]), and
 //! `repro bench-net` all drive a server through it.
+//!
+//! [`PipelinedClient`] negotiates pipelined mode (`hello` /
+//! `hello_ok`) and keeps a window of requests in flight on one socket;
+//! responses arrive **out of order** and are handed back as they come,
+//! each carrying the `id` of the request it answers.  Against a server
+//! that only grants serial mode it degrades to a window of one.
 //!
 //! Errors split into [`ClientError::Server`] (the server answered with a
 //! typed `error` frame — inspect its [`proto::ErrorCode`], e.g.
@@ -163,6 +169,135 @@ impl Client {
             other => {
                 Err(ClientError::Protocol(format!("expected pong, got '{}'", other.type_str())))
             }
+        }
+    }
+}
+
+/// One answered request from a pipelined window: which request it was
+/// and how it went.
+#[derive(Debug)]
+pub struct PipelinedReply {
+    /// The request id this reply answers.
+    pub id: u64,
+    /// The typed outcome: the response frame, or the server's error
+    /// frame for that request.
+    pub result: Result<InferOkFrame, ErrorFrame>,
+}
+
+/// A pipelined connection to a serving front-end.
+///
+/// [`PipelinedClient::connect`] performs the `hello` negotiation and
+/// records the granted window depth.  [`PipelinedClient::submit`] sends
+/// an `infer` without waiting; [`PipelinedClient::recv`] blocks for the
+/// next reply, whichever request it answers.  The caller matches
+/// replies to requests by [`PipelinedReply::id`].
+pub struct PipelinedClient {
+    stream: TcpStream,
+    next_id: u64,
+    max_frame_bytes: usize,
+    depth: u64,
+    in_flight: usize,
+}
+
+impl PipelinedClient {
+    /// Connect and negotiate pipelining.  A server that grants only
+    /// serial mode (e.g. the threaded front-end) yields a working
+    /// client with a window depth of 1.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<PipelinedClient, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let mut client = PipelinedClient {
+            stream,
+            next_id: 1,
+            max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES,
+            depth: 1,
+            in_flight: 0,
+        };
+        proto::write_frame(&mut client.stream, &Frame::Hello { pipeline: true })?;
+        match proto::read_frame(&mut client.stream, client.max_frame_bytes)? {
+            ReadOutcome::Eof => return Err(ClientError::Closed),
+            ReadOutcome::Bad(e) => return Err(ClientError::Protocol(e.to_string())),
+            ReadOutcome::Frame(Frame::HelloOk { pipeline, depth }) => {
+                client.depth = if pipeline { depth.max(1) } else { 1 };
+            }
+            // a pre-negotiation server rejects the hello frame as
+            // unknown; fall back to a serial window of one
+            ReadOutcome::Frame(Frame::Error(_)) => client.depth = 1,
+            ReadOutcome::Frame(other) => {
+                return Err(ClientError::Protocol(format!(
+                    "expected hello_ok, got '{}'",
+                    other.type_str()
+                )));
+            }
+        }
+        Ok(client)
+    }
+
+    /// The window depth the server granted (1 = serial).
+    pub fn depth(&self) -> u64 {
+        self.depth
+    }
+
+    /// Requests submitted and not yet answered.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Send one `[C, H, W]` infer without waiting for the reply and
+    /// return its request id.  Fails with [`ClientError::Protocol`] if
+    /// the granted window is already full — call
+    /// [`PipelinedClient::recv`] first to free a slot.
+    pub fn submit(
+        &mut self,
+        model: Option<&str>,
+        image: &Tensor<f32>,
+    ) -> Result<u64, ClientError> {
+        if self.in_flight as u64 >= self.depth {
+            return Err(ClientError::Protocol(format!(
+                "pipeline window full ({} in flight, depth {})",
+                self.in_flight, self.depth
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Infer(InferFrame {
+            id,
+            model: model.map(str::to_string),
+            dims: image.dims().to_vec(),
+            data: image.data().to_vec(),
+        });
+        proto::write_frame(&mut self.stream, &frame)?;
+        self.in_flight += 1;
+        Ok(id)
+    }
+
+    /// Block for the next reply in the window, whichever request it
+    /// answers.  Per-request server errors come back inside the
+    /// [`PipelinedReply`] (the window slot is freed either way);
+    /// transport-level failures are the outer `Err`.
+    pub fn recv(&mut self) -> Result<PipelinedReply, ClientError> {
+        if self.in_flight == 0 {
+            return Err(ClientError::Protocol("recv with no requests in flight".into()));
+        }
+        match proto::read_frame(&mut self.stream, self.max_frame_bytes)? {
+            ReadOutcome::Eof => Err(ClientError::Closed),
+            ReadOutcome::Bad(e) => Err(ClientError::Protocol(e.to_string())),
+            ReadOutcome::Frame(Frame::InferOk(ok)) => {
+                self.in_flight -= 1;
+                Ok(PipelinedReply { id: ok.id, result: Ok(ok) })
+            }
+            ReadOutcome::Frame(Frame::Error(e)) => match e.id {
+                // a typed per-request error frees that request's slot
+                Some(id) => {
+                    self.in_flight -= 1;
+                    Ok(PipelinedReply { id, result: Err(e) })
+                }
+                None => Err(ClientError::Server(e)),
+            },
+            ReadOutcome::Frame(other) => Err(ClientError::Protocol(format!(
+                "expected infer_ok or error, got '{}'",
+                other.type_str()
+            ))),
         }
     }
 }

@@ -1,0 +1,947 @@
+//! Evented TCP front-end: C100K readiness-loop server with pipelining.
+//!
+//! [`EventedServer`] serves the same wire protocol as the threaded
+//! [`crate::serving::net::Server`], but multiplexes tens of thousands of
+//! connections over a **fixed** set of worker threads instead of one
+//! thread per connection.  Each worker owns a [`crate::serving::poller`]
+//! readiness poller (epoll on Linux, `poll(2)` elsewhere) and a slab of
+//! per-connection state machines; all socket I/O is non-blocking, so a
+//! slow peer costs a few hundred bytes of state, never a parked thread.
+//!
+//! **Request flow.**  The accept thread hands each socket to a worker's
+//! mailbox (woken through a socketpair).  The worker reads frames
+//! incrementally — 4-byte length header, then payload — and submits
+//! admitted `infer` frames to the coordinator with a completion
+//! *callback* ([`Coordinator::submit_with`]): the shard worker that
+//! finishes the batch pushes the finished reply back into the owning
+//! worker's mailbox, so no thread ever blocks on a response channel.
+//! Connection slots are generation-stamped; a completion for a
+//! connection that died in the meantime is simply dropped.
+//!
+//! **Serial by default, pipelined by negotiation.**  A connection that
+//! never sends `hello` gets exactly the threaded server's observable
+//! behavior: one request in flight, responses in request order,
+//! byte-for-byte identical frames.  A client that sends
+//! `hello {pipeline:true}` and receives `hello_ok {pipeline:true}` may
+//! keep up to the granted `depth` of `infer` frames in flight on one
+//! socket; responses then come back **out of order**, matched by `id`.
+//!
+//! **Backpressure is byte-level.**  Every reply is queued in a bounded
+//! per-connection write buffer and flushed as the socket drains.  When
+//! the buffer crosses [`EventedConfig::max_write_buffer`], the worker
+//! stops *reading* from that connection until the peer drains half of
+//! it — a reader that stops draining cannot balloon server memory, and
+//! its admission slots stay held (the global in-flight gauge counts
+//! responses not yet flushed).  Idle peers and slow-loris senders are
+//! reaped by deadline sweeps, same policy as the threaded server.
+//!
+//! Shutdown drains: workers stop reading, admitted requests complete and
+//! their responses flush (bounded by a grace period), then sockets close.
+
+use crate::coordinator::server::Coordinator;
+use crate::serving::poller::{PollEvent, Poller};
+use crate::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferFrame, NetCounters};
+use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ValidInfer};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Wall-clock grace admitted requests and their response flushes get
+/// once shutdown begins (mirrors the threaded server's grace).
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Poller token reserved for the worker's mailbox wake pipe.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Tunables of the evented front-end.
+#[derive(Clone, Debug)]
+pub struct EventedConfig {
+    /// Event-loop worker threads; connections are distributed round-robin.
+    pub workers: usize,
+    /// Concurrent connection cap; over-cap accepts get one
+    /// `RESOURCE_EXHAUSTED` error frame and are closed.
+    pub max_connections: usize,
+    /// Admitted-but-unflushed `infer` cap across all connections; at the
+    /// cap new infer frames get `RESOURCE_EXHAUSTED`.
+    pub max_inflight: usize,
+    /// Per-frame payload size cap (bytes).
+    pub max_frame_bytes: usize,
+    /// Per-connection in-flight cap granted to clients that negotiate
+    /// pipelining via `hello` (serial connections are capped at 1).
+    pub max_pipeline: usize,
+    /// Per-connection write-buffer high watermark (bytes): past it the
+    /// worker stops reading from the connection until the peer drains
+    /// the buffer below half of it.
+    pub max_write_buffer: usize,
+    /// Close a connection with no request in flight and no frame bytes
+    /// received for this long.
+    pub idle_timeout: Duration,
+    /// Once the first byte of a frame arrives, the rest must follow
+    /// within this budget (slow-loris reap).
+    pub frame_timeout: Duration,
+    /// Deadline-sweep cadence; also the poller wait timeout.
+    pub sweep_interval: Duration,
+    /// Kernel send-buffer size (`SO_SNDBUF`) applied to accepted sockets
+    /// (Linux only; `None` keeps the kernel default).  Small values make
+    /// byte-level backpressure observable in tests.
+    pub sock_sndbuf: Option<usize>,
+}
+
+impl Default for EventedConfig {
+    fn default() -> Self {
+        EventedConfig {
+            workers: 2,
+            max_connections: 8192,
+            max_inflight: 256,
+            max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES,
+            max_pipeline: 32,
+            max_write_buffer: 1 << 20,
+            idle_timeout: Duration::from_secs(60),
+            frame_timeout: Duration::from_secs(10),
+            sweep_interval: Duration::from_millis(100),
+            sock_sndbuf: None,
+        }
+    }
+}
+
+/// A finished request on its way back to the connection that issued it.
+struct CompletionMsg {
+    /// Slab index of the issuing connection on the owning worker.
+    conn: usize,
+    /// Generation stamp of the issuing connection; a mismatch means the
+    /// connection died and was replaced — drop the message.
+    gen: u64,
+    /// The reply frame to enqueue.
+    reply: Frame,
+    /// The admission slot, released when the reply bytes are flushed.
+    slot: Option<InflightSlot>,
+}
+
+/// Everything a worker can receive from other threads.
+#[derive(Default)]
+struct MailQueue {
+    incoming: Vec<TcpStream>,
+    completions: Vec<CompletionMsg>,
+}
+
+/// One worker's inbox plus the wake pipe that interrupts its poller.
+struct Mailbox {
+    queue: Mutex<MailQueue>,
+    /// Write end of the worker's wake socketpair (non-blocking; a full
+    /// pipe means a wake is already pending, which is all we need).
+    wake: Mutex<UnixStream>,
+}
+
+impl Mailbox {
+    fn wake(&self) {
+        use std::io::Write;
+        let mut w = self.wake.lock().unwrap();
+        let _ = w.write(&[1]);
+    }
+
+    fn push_conn(&self, stream: TcpStream) {
+        self.queue.lock().unwrap().incoming.push(stream);
+        self.wake();
+    }
+
+    fn push_completion(&self, msg: CompletionMsg) {
+        self.queue.lock().unwrap().completions.push(msg);
+        self.wake();
+    }
+}
+
+/// State shared between the server handle, the accept thread, every
+/// worker, and in-flight completion callbacks.
+struct EvShared {
+    coord: Arc<Coordinator>,
+    config: EventedConfig,
+    shutdown: AtomicBool,
+    /// Gauge: connections currently registered (or in a mailbox).
+    open: AtomicUsize,
+    /// Gauge: infer requests admitted and not yet flushed.
+    inflight: Arc<AtomicUsize>,
+    metrics: NetMetrics,
+    mailboxes: Vec<Mailbox>,
+}
+
+impl EvShared {
+    fn snapshot(&self) -> NetCounters {
+        self.metrics
+            .snapshot(self.open.load(Ordering::SeqCst), self.inflight.load(Ordering::SeqCst))
+    }
+}
+
+/// Handle to a running evented serving front-end.  Dropping it shuts the
+/// server down cleanly (admitted requests finish and flush first).
+pub struct EventedServer {
+    addr: SocketAddr,
+    shared: Arc<EvShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EventedServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// the accept thread plus the event-loop workers against `coord`.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        coord: Arc<Coordinator>,
+        config: EventedConfig,
+    ) -> Result<EventedServer> {
+        anyhow::ensure!(config.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(config.max_connections >= 1, "max_connections must be >= 1");
+        anyhow::ensure!(config.max_inflight >= 1, "max_inflight must be >= 1");
+        anyhow::ensure!(config.max_pipeline >= 1, "max_pipeline must be >= 1");
+        anyhow::ensure!(config.max_write_buffer >= 4096, "max_write_buffer must be >= 4096");
+        let listener = TcpListener::bind(addr).context("bind evented listener")?;
+        let local = listener.local_addr().context("listener local addr")?;
+
+        // wake pipes and pollers are created up front so bind fails fast
+        // on fd exhaustion instead of spawning half a server
+        let mut mailboxes = Vec::with_capacity(config.workers);
+        let mut loops = Vec::with_capacity(config.workers);
+        for _ in 0..config.workers {
+            let (tx, rx) = UnixStream::pair().context("create worker wake pipe")?;
+            tx.set_nonblocking(true).context("wake pipe nonblocking")?;
+            rx.set_nonblocking(true).context("wake pipe nonblocking")?;
+            mailboxes.push(Mailbox {
+                queue: Mutex::new(MailQueue::default()),
+                wake: Mutex::new(tx),
+            });
+            loops.push((Poller::new().context("create poller")?, rx));
+        }
+        let shared = Arc::new(EvShared {
+            coord,
+            config,
+            shutdown: AtomicBool::new(false),
+            open: AtomicUsize::new(0),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            metrics: NetMetrics::default(),
+            mailboxes,
+        });
+
+        let mut workers = Vec::with_capacity(loops.len());
+        for (i, (poller, wake_rx)) in loops.into_iter().enumerate() {
+            let shared_worker = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("pasm-evented-{i}"))
+                .spawn(move || worker_loop(i, shared_worker, poller, wake_rx))
+                .context("spawn evented worker")?;
+            workers.push(handle);
+        }
+        let shared_accept = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("pasm-evented-accept".into())
+            .spawn(move || accept_loop(listener, shared_accept))
+            .context("spawn evented accept thread")?;
+        Ok(EventedServer { addr: local, shared, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The coordinator this server fronts.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.shared.coord
+    }
+
+    /// Snapshot of the network-layer counters.
+    pub fn net_metrics(&self) -> NetCounters {
+        self.shared.snapshot()
+    }
+
+    /// Stop accepting, let every admitted request finish and its response
+    /// flush (bounded by a grace period), then join all threads.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // wake the blocking accept() with a throwaway connection, aimed
+        // at loopback when the server bound a wildcard address
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+        for mb in &self.shared.mailboxes {
+            mb.wake();
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventedServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<EvShared>) {
+    let mut next = 0usize;
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // transient accept failure (e.g. fd pressure): back off
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if shared.open.load(Ordering::SeqCst) >= shared.config.max_connections {
+            shared.metrics.connections_rejected.fetch_add(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+            let frame = Frame::Error(ErrorFrame::new(
+                None,
+                ErrorCode::ResourceExhausted,
+                format!("server at max connections ({})", shared.config.max_connections),
+            ));
+            let _ = proto::write_frame(&mut stream, &frame);
+            continue;
+        }
+        shared.open.fetch_add(1, Ordering::SeqCst);
+        shared.metrics.connections_opened.fetch_add(1, Ordering::SeqCst);
+        shared.mailboxes[next % shared.mailboxes.len()].push_conn(stream);
+        next = next.wrapping_add(1);
+    }
+}
+
+/// Incremental frame-read progress of one connection.
+enum ReadState {
+    /// Reading the 4-byte big-endian length header.
+    Header { buf: [u8; 4], filled: usize },
+    /// Reading the payload announced by the header.
+    Payload { buf: Vec<u8>, filled: usize },
+}
+
+/// Per-connection state machine on a worker's slab.
+struct Conn {
+    stream: TcpStream,
+    /// Generation stamp; completions carry it so a reply can never be
+    /// delivered to a reused slab slot.
+    gen: u64,
+    read: ReadState,
+    /// Bytes queued for the peer, flushed as the socket drains.
+    write_buf: VecDeque<u8>,
+    /// Lifetime bytes ever queued / ever flushed; admission slots are
+    /// released when `total_flushed` passes their reply's queue offset.
+    total_queued: u64,
+    total_flushed: u64,
+    pending_slots: VecDeque<(u64, InflightSlot)>,
+    /// Negotiated via `hello`: out-of-order responses allowed.
+    pipeline: bool,
+    /// Admitted-but-unanswered infer frames on this connection.
+    admitted: usize,
+    /// Serial mode: an infer is in flight, stop processing input.
+    blocked: bool,
+    /// Backpressure: write buffer over the high watermark, reads off.
+    paused: bool,
+    /// Fatal framing error: flush the goodbye error, then close (by the
+    /// stored deadline at the latest).
+    closing: Option<Instant>,
+    /// Interest currently registered with the poller.
+    reg_read: bool,
+    reg_write: bool,
+    /// Last read/flush progress (idle reaping).
+    last_activity: Instant,
+    /// Deadline for the in-progress frame (slow-loris reaping).
+    frame_deadline: Option<Instant>,
+}
+
+fn worker_loop(worker: usize, shared: Arc<EvShared>, mut poller: Poller, wake: UnixStream) {
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut gen_counter: u64 = 0;
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+    let mut last_sweep = Instant::now();
+    if poller.add(wake.as_raw_fd(), WAKE_TOKEN, true, false).is_err() {
+        return;
+    }
+    loop {
+        let draining = shared.shutdown.load(Ordering::SeqCst);
+        if draining && drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + SHUTDOWN_GRACE);
+            // stop reading everywhere; only completions and flushes now
+            for (idx, slot) in conns.iter_mut().enumerate() {
+                if let Some(conn) = slot.as_mut() {
+                    let _ = update_interest(&mut poller, conn, idx, true);
+                }
+            }
+        }
+        if poller.wait(&mut events, Some(shared.config.sweep_interval)).is_err() {
+            return;
+        }
+        if events.iter().any(|e| e.token == WAKE_TOKEN) {
+            drain_wake(&wake);
+        }
+        let (incoming, completions) = {
+            let mut q = shared.mailboxes[worker].queue.lock().unwrap();
+            (std::mem::take(&mut q.incoming), std::mem::take(&mut q.completions))
+        };
+        for stream in incoming {
+            if draining {
+                shared.open.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            register_conn(&shared, &mut poller, &mut conns, &mut free, &mut gen_counter, stream);
+        }
+        for msg in completions {
+            let idx = msg.conn;
+            let alive = {
+                let conn = conns.get_mut(idx).and_then(Option::as_mut);
+                match conn {
+                    Some(conn) if conn.gen == msg.gen => {
+                        conn.admitted = conn.admitted.saturating_sub(1);
+                        conn.blocked = false;
+                        enqueue_reply(&shared, conn, &msg.reply, msg.slot)
+                            && update_interest(&mut poller, conn, idx, draining).is_ok()
+                    }
+                    // the connection died first: drop the reply (and the
+                    // slot riding in `msg`)
+                    _ => continue,
+                }
+            };
+            if !alive {
+                close_conn(&shared, &mut poller, &mut conns, &mut free, idx);
+            }
+        }
+        let evs = std::mem::take(&mut events);
+        for ev in &evs {
+            if ev.token == WAKE_TOKEN {
+                continue;
+            }
+            let idx = ev.token as usize;
+            let alive = {
+                let Some(conn) = conns.get_mut(idx).and_then(Option::as_mut) else {
+                    continue;
+                };
+                let mut alive = true;
+                if ev.writable {
+                    alive = try_flush(&shared, conn);
+                    if alive && conn.closing.is_some() && conn.write_buf.is_empty() {
+                        // the goodbye error frame is out: close for real
+                        alive = false;
+                    }
+                }
+                if alive && ev.readable {
+                    alive = process_input(&shared, conn, idx, worker, draining);
+                }
+                alive && update_interest(&mut poller, conn, idx, draining).is_ok()
+            };
+            if !alive {
+                close_conn(&shared, &mut poller, &mut conns, &mut free, idx);
+            }
+        }
+        events = evs;
+
+        let now = Instant::now();
+        if now.duration_since(last_sweep) >= shared.config.sweep_interval {
+            last_sweep = now;
+            let doomed = sweep_deadlines(&shared, &conns, now);
+            for idx in doomed {
+                close_conn(&shared, &mut poller, &mut conns, &mut free, idx);
+            }
+        }
+        if draining {
+            let expired = drain_deadline.is_some_and(|d| now > d);
+            let mut doomed = Vec::new();
+            let mut busy = 0usize;
+            for (idx, slot) in conns.iter().enumerate() {
+                let Some(conn) = slot else { continue };
+                if expired || (conn.admitted == 0 && conn.write_buf.is_empty()) {
+                    doomed.push(idx);
+                } else {
+                    busy += 1;
+                }
+            }
+            for idx in doomed {
+                close_conn(&shared, &mut poller, &mut conns, &mut free, idx);
+            }
+            if busy == 0 {
+                return;
+            }
+        }
+    }
+}
+
+/// Empty the wake pipe so level-triggered polling quiets down.
+fn drain_wake(wake: &UnixStream) {
+    use std::io::Read;
+    let mut r = wake;
+    let mut buf = [0u8; 64];
+    loop {
+        match r.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+fn register_conn(
+    shared: &Arc<EvShared>,
+    poller: &mut Poller,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    gen_counter: &mut u64,
+    stream: TcpStream,
+) {
+    if stream.set_nonblocking(true).is_err() {
+        shared.open.fetch_sub(1, Ordering::SeqCst);
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    #[cfg(target_os = "linux")]
+    if let Some(bytes) = shared.config.sock_sndbuf {
+        let _ = set_send_buffer(&stream, bytes);
+    }
+    let idx = match free.pop() {
+        Some(idx) => idx,
+        None => {
+            conns.push(None);
+            conns.len() - 1
+        }
+    };
+    if poller.add(stream.as_raw_fd(), idx as u64, true, false).is_err() {
+        free.push(idx);
+        shared.open.fetch_sub(1, Ordering::SeqCst);
+        return;
+    }
+    *gen_counter += 1;
+    conns[idx] = Some(Conn {
+        stream,
+        gen: *gen_counter,
+        read: ReadState::Header { buf: [0; 4], filled: 0 },
+        write_buf: VecDeque::new(),
+        total_queued: 0,
+        total_flushed: 0,
+        pending_slots: VecDeque::new(),
+        pipeline: false,
+        admitted: 0,
+        blocked: false,
+        paused: false,
+        closing: None,
+        reg_read: true,
+        reg_write: false,
+        last_activity: Instant::now(),
+        frame_deadline: None,
+    });
+}
+
+fn close_conn(
+    shared: &Arc<EvShared>,
+    poller: &mut Poller,
+    conns: &mut [Option<Conn>],
+    free: &mut Vec<usize>,
+    idx: usize,
+) {
+    if let Some(conn) = conns[idx].take() {
+        // deregister while the fd is still open, then drop: the stream
+        // closes and any pending admission slots release
+        let _ = poller.remove(conn.stream.as_raw_fd());
+        free.push(idx);
+        shared.open.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Reconcile the poller's registered interest with the connection's
+/// state: read while the state machine wants input, write while bytes
+/// are queued.
+fn update_interest(
+    poller: &mut Poller,
+    conn: &mut Conn,
+    idx: usize,
+    draining: bool,
+) -> std::io::Result<()> {
+    let want_read = !draining && !conn.blocked && !conn.paused && conn.closing.is_none();
+    let want_write = !conn.write_buf.is_empty();
+    if (want_read, want_write) != (conn.reg_read, conn.reg_write) {
+        poller.modify(conn.stream.as_raw_fd(), idx as u64, want_read, want_write)?;
+        conn.reg_read = want_read;
+        conn.reg_write = want_write;
+    }
+    Ok(())
+}
+
+/// Deadline sweep: indices of connections past their idle, slow-loris,
+/// or closing-flush deadlines.
+fn sweep_deadlines(shared: &EvShared, conns: &[Option<Conn>], now: Instant) -> Vec<usize> {
+    let mut doomed = Vec::new();
+    for (idx, slot) in conns.iter().enumerate() {
+        let Some(conn) = slot else { continue };
+        let dead = match conn.closing {
+            Some(deadline) => conn.write_buf.is_empty() || now > deadline,
+            None => match conn.frame_deadline {
+                Some(deadline) => now > deadline,
+                None => {
+                    conn.admitted == 0
+                        && now.duration_since(conn.last_activity) > shared.config.idle_timeout
+                }
+            },
+        };
+        if dead {
+            doomed.push(idx);
+        }
+    }
+    doomed
+}
+
+/// Queue a reply on the connection and flush opportunistically.  `slot`
+/// (for infer replies) is released when the reply bytes reach the
+/// socket.  Returns `false` when the transport failed and the
+/// connection must close.
+fn enqueue_reply(
+    shared: &EvShared,
+    conn: &mut Conn,
+    frame: &Frame,
+    slot: Option<InflightSlot>,
+) -> bool {
+    let payload = proto::encode(frame);
+    let Ok(len) = u32::try_from(payload.len()) else {
+        return false;
+    };
+    conn.write_buf.extend(len.to_be_bytes());
+    conn.write_buf.extend(payload);
+    conn.total_queued += 4 + u64::from(len);
+    if let Some(slot) = slot {
+        conn.pending_slots.push_back((conn.total_queued, slot));
+    }
+    shared.metrics.frames_sent.fetch_add(1, Ordering::SeqCst);
+    conn.last_activity = Instant::now();
+    let alive = try_flush(shared, conn);
+    if alive && conn.write_buf.len() > shared.config.max_write_buffer {
+        conn.paused = true;
+    }
+    alive
+}
+
+/// Write queued bytes until the socket would block.  Releases admission
+/// slots whose replies are fully flushed and lifts backpressure at the
+/// low watermark.  Returns `false` on a transport error.
+fn try_flush(shared: &EvShared, conn: &mut Conn) -> bool {
+    use std::io::Write;
+    loop {
+        if conn.write_buf.is_empty() {
+            break;
+        }
+        let (head, _) = conn.write_buf.as_slices();
+        match conn.stream.write(head) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.write_buf.drain(..n);
+                conn.total_flushed += n as u64;
+                conn.last_activity = Instant::now();
+                while matches!(
+                    conn.pending_slots.front(),
+                    Some((off, _)) if *off <= conn.total_flushed
+                ) {
+                    conn.pending_slots.pop_front();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if conn.paused && conn.write_buf.len() <= shared.config.max_write_buffer / 2 {
+        conn.paused = false;
+    }
+    true
+}
+
+/// Pump the connection's read state machine until the socket runs dry or
+/// the connection stops wanting input (serial block, backpressure pause,
+/// fatal framing error).  Returns `false` when the connection must close.
+fn process_input(
+    shared: &Arc<EvShared>,
+    conn: &mut Conn,
+    idx: usize,
+    worker: usize,
+    draining: bool,
+) -> bool {
+    use std::io::Read;
+    loop {
+        if draining || conn.blocked || conn.paused || conn.closing.is_some() {
+            return true;
+        }
+        // a complete header opens the payload stage
+        let mut header_len: Option<usize> = None;
+        if let ReadState::Header { buf, filled } = &conn.read {
+            if *filled == buf.len() {
+                header_len = Some(u32::from_be_bytes(*buf) as usize);
+            }
+        }
+        if let Some(len) = header_len {
+            if len > shared.config.max_frame_bytes {
+                // framing can no longer be trusted: answer once, flush,
+                // then close
+                shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
+                let frame = Frame::Error(ErrorFrame::new(
+                    None,
+                    ErrorCode::InvalidFrame,
+                    format!(
+                        "frame of {len} bytes exceeds the {}-byte cap",
+                        shared.config.max_frame_bytes
+                    ),
+                ));
+                let alive = enqueue_reply(shared, conn, &frame, None);
+                conn.closing = Some(Instant::now() + shared.config.frame_timeout);
+                return alive && !conn.write_buf.is_empty();
+            }
+            conn.read = ReadState::Payload { buf: vec![0u8; len], filled: 0 };
+            continue;
+        }
+        // a complete payload is one whole frame: handle it
+        let payload_done = matches!(
+            &conn.read,
+            ReadState::Payload { buf, filled } if *filled == buf.len()
+        );
+        if payload_done {
+            let fresh = ReadState::Header { buf: [0; 4], filled: 0 };
+            let old = std::mem::replace(&mut conn.read, fresh);
+            conn.frame_deadline = None;
+            shared.metrics.frames_received.fetch_add(1, Ordering::SeqCst);
+            if let ReadState::Payload { buf, .. } = old {
+                if !handle_frame_bytes(shared, conn, idx, worker, &buf) {
+                    return false;
+                }
+            }
+            continue;
+        }
+        // otherwise pull more bytes for the current stage
+        let (dst, filled): (&mut [u8], &mut usize) = match &mut conn.read {
+            ReadState::Header { buf, filled } => (&mut buf[..], filled),
+            ReadState::Payload { buf, filled } => (&mut buf[..], filled),
+        };
+        match conn.stream.read(&mut dst[*filled..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                *filled += n;
+                conn.last_activity = Instant::now();
+                if conn.frame_deadline.is_none() {
+                    conn.frame_deadline = Some(Instant::now() + shared.config.frame_timeout);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Decode and dispatch one framed payload.  Returns `false` when the
+/// connection must close.
+fn handle_frame_bytes(
+    shared: &Arc<EvShared>,
+    conn: &mut Conn,
+    idx: usize,
+    worker: usize,
+    payload: &[u8],
+) -> bool {
+    let frame = match proto::decode(payload) {
+        Ok(frame) => frame,
+        Err(e) => {
+            // well-framed but undecodable: typed error, keep serving
+            shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
+            return enqueue_reply(shared, conn, &Frame::Error(e), None);
+        }
+    };
+    match frame {
+        Frame::Infer(req) => handle_infer(shared, conn, idx, worker, req),
+        Frame::Hello { pipeline } => {
+            // this transport can interleave: grant pipelining when asked
+            // for and configured
+            let granted = pipeline && shared.config.max_pipeline > 1;
+            conn.pipeline = granted;
+            let depth = if granted { shared.config.max_pipeline as u64 } else { 1 };
+            enqueue_reply(shared, conn, &Frame::HelloOk { pipeline: granted, depth }, None)
+        }
+        Frame::ListModels => {
+            enqueue_reply(shared, conn, &common::models_frame(&shared.coord), None)
+        }
+        Frame::GetMetrics => {
+            let reply = common::metrics_frame(&shared.coord, shared.snapshot());
+            enqueue_reply(shared, conn, &reply, None)
+        }
+        Frame::Ping { nonce } => enqueue_reply(shared, conn, &Frame::Pong { nonce }, None),
+        // server-to-client frames arriving at the server
+        other => enqueue_reply(shared, conn, &common::wrong_direction_frame(&other), None),
+    }
+}
+
+/// Admit, validate, and submit one `infer` frame; the reply comes back
+/// later through the worker's mailbox as a [`CompletionMsg`].
+fn handle_infer(
+    shared: &Arc<EvShared>,
+    conn: &mut Conn,
+    idx: usize,
+    worker: usize,
+    req: InferFrame,
+) -> bool {
+    let req_id = req.id;
+    let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(Some(req_id), code, msg));
+
+    // per-connection fairness first: one pipelined peer cannot consume
+    // the whole global in-flight budget
+    let cap = if conn.pipeline { shared.config.max_pipeline } else { 1 };
+    if conn.admitted >= cap {
+        shared.metrics.overload_rejections.fetch_add(1, Ordering::SeqCst);
+        let reply = err(
+            ErrorCode::ResourceExhausted,
+            format!("connection at max pipelined requests ({cap})"),
+        );
+        return enqueue_reply(shared, conn, &reply, None);
+    }
+    // then global admission control, before any validation work
+    let Some(slot) = InflightSlot::acquire(&shared.inflight, shared.config.max_inflight) else {
+        shared.metrics.overload_rejections.fetch_add(1, Ordering::SeqCst);
+        let reply = err(
+            ErrorCode::ResourceExhausted,
+            format!("server at max in-flight requests ({})", shared.config.max_inflight),
+        );
+        return enqueue_reply(shared, conn, &reply, None);
+    };
+    let ValidInfer { id, model, image } = match common::validate_infer(req, &shared.coord) {
+        Ok(v) => v,
+        // the validation error holds the slot through its flush, same
+        // accounting as a real response
+        Err(reply) => return enqueue_reply(shared, conn, &reply, Some(slot)),
+    };
+
+    let gen = conn.gen;
+    let shared_cb = Arc::clone(shared);
+    let submitted = shared.coord.submit_with(model.as_deref(), image, move |result| {
+        let reply = match result {
+            Ok(resp) => {
+                shared_cb.metrics.requests_ok.fetch_add(1, Ordering::SeqCst);
+                common::infer_ok_frame(id, resp)
+            }
+            Err(msg) => {
+                shared_cb.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
+                common::infer_err_frame(id, msg)
+            }
+        };
+        let msg = CompletionMsg { conn: idx, gen, reply, slot: Some(slot) };
+        shared_cb.mailboxes[worker].push_completion(msg);
+    });
+    match submitted {
+        Ok(()) => {
+            conn.admitted += 1;
+            if !conn.pipeline {
+                // serial contract: stop processing input until the reply
+                // is enqueued, so responses stay in request order
+                conn.blocked = true;
+            }
+            true
+        }
+        Err(_) => {
+            // the callback (and the slot inside it) was dropped by the
+            // failed submit, so the gauge is already released
+            shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
+            let reply = err(ErrorCode::ShuttingDown, "coordinator is shut down".into());
+            enqueue_reply(shared, conn, &reply, None)
+        }
+    }
+}
+
+/// Set the kernel send-buffer size (`SO_SNDBUF`) on a socket.  Small
+/// values make byte-level backpressure kick in after a few kilobytes,
+/// which the e2e suite uses to observe the server pausing its reads.
+#[cfg(target_os = "linux")]
+pub fn set_send_buffer(sock: &impl AsRawFd, bytes: usize) -> std::io::Result<()> {
+    sockopt::set(sock.as_raw_fd(), sockopt::SO_SNDBUF, bytes)
+}
+
+/// Set the kernel receive-buffer size (`SO_RCVBUF`) on a socket.  The
+/// backpressure test shrinks a client's receive window with this so the
+/// server's write buffer fills deterministically.
+#[cfg(target_os = "linux")]
+pub fn set_recv_buffer(sock: &impl AsRawFd, bytes: usize) -> std::io::Result<()> {
+    sockopt::set(sock.as_raw_fd(), sockopt::SO_RCVBUF, bytes)
+}
+
+#[cfg(target_os = "linux")]
+mod sockopt {
+    const SOL_SOCKET: i32 = 1;
+    pub(super) const SO_SNDBUF: i32 = 7;
+    pub(super) const SO_RCVBUF: i32 = 8;
+
+    extern "C" {
+        fn setsockopt(fd: i32, level: i32, optname: i32, optval: *const i32, optlen: u32) -> i32;
+    }
+
+    pub(super) fn set(fd: i32, opt: i32, bytes: usize) -> std::io::Result<()> {
+        let val = i32::try_from(bytes).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "buffer size exceeds i32")
+        })?;
+        let rc = unsafe {
+            setsockopt(fd, SOL_SOCKET, opt, &val, std::mem::size_of::<i32>() as u32)
+        };
+        if rc < 0 {
+            Err(std::io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Raise this process's soft open-file limit (`RLIMIT_NOFILE`) toward
+/// `want`, capped by the hard limit, and return the resulting soft
+/// limit.  Ten thousand sockets need ten thousand fds; CI runners often
+/// default the soft limit to 1024, so the high-connection tests and
+/// `bench-net --idle-conns` raise it themselves instead of asking every
+/// harness to remember `ulimit -n`.
+pub fn raise_fd_limit(want: u64) -> std::io::Result<u64> {
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+
+    let mut lim = RLimit { cur: 0, max: 0 };
+    let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) };
+    if rc < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    let target = want.min(lim.max);
+    if target > lim.cur {
+        lim.cur = target;
+        let rc = unsafe { setrlimit(RLIMIT_NOFILE, &lim) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+    }
+    Ok(lim.cur)
+}

@@ -5,31 +5,49 @@
 //! [`crate::model_store`] hot-swaps artifacts — but nothing could reach
 //! them from outside.  This module is the host interface the paper's
 //! accelerator (and any multiplier-less design like TMA) needs to be
-//! deployable: a hand-rolled wire protocol and a TCP server in front of
-//! a [`crate::coordinator::Coordinator`].
+//! deployable: a hand-rolled wire protocol and two interchangeable TCP
+//! servers in front of a [`crate::coordinator::Coordinator`].
 //!
 //! * [`proto`] — length-prefixed canonical-JSON frames (request /
-//!   response / error / metrics / model listing), reference
+//!   response / error / metrics / model listing, plus the
+//!   `hello`/`hello_ok` pipelining negotiation), reference
 //!   implementation of `docs/WIRE_PROTOCOL.md`; no serde, built on
 //!   [`crate::runtime::json`].
 //! * [`net`] — `std::net` TCP server: one accept thread, one thread per
 //!   connection (bounded), **admission control** (bounded in-flight
 //!   queue depth; overload answers a typed `RESOURCE_EXHAUSTED` frame
-//!   instead of stalling the socket), per-connection and per-model
-//!   metrics, clean drop-to-shutdown.
-//! * [`client`] — blocking client used by the e2e tests, the network
-//!   load generator, and `repro bench-net`.
+//!   instead of stalling the socket), idle/slow-loris reaping, clean
+//!   drop-to-shutdown.  Simple and debuggable; capacity is bounded by
+//!   thread count.
+//! * [`evented`] (unix) — C100K readiness-loop server: a fixed set of
+//!   event-loop workers multiplexes tens of thousands of connections
+//!   (epoll on Linux, `poll(2)` elsewhere), with per-connection
+//!   byte-level backpressure and negotiated **pipelining** (many
+//!   requests in flight per socket, responses matched by id).  Same
+//!   protocol, same admission semantics — the e2e suite runs every
+//!   scenario against both servers.
+//! * [`client`] — blocking serial client plus the pipelined client used
+//!   by the e2e tests, the network load generator, and
+//!   `repro bench-net`.
 //!
 //! The full request path (socket → frame → coordinator queue → batch →
 //! compiled plan → PASM kernels → response frame) is walked through in
-//! `docs/ARCHITECTURE.md`.  Start a server from the CLI with
-//! `repro serve --listen 127.0.0.1:7878` and drive it with
+//! `docs/ARCHITECTURE.md` for both servers.  Start one from the CLI
+//! with `repro serve --listen 127.0.0.1:7878` (add `--evented` for the
+//! readiness-loop front-end) and drive it with
 //! `repro bench-net --addr 127.0.0.1:7878`.
 
 pub mod client;
+#[cfg(unix)]
+pub mod evented;
 pub mod net;
+#[cfg(unix)]
+pub(crate) mod poller;
 pub mod proto;
+pub(crate) mod shared;
 
-pub use client::{Client, ClientError};
+pub use client::{Client, ClientError, PipelinedClient, PipelinedReply};
+#[cfg(unix)]
+pub use evented::{EventedConfig, EventedServer};
 pub use net::{Server, ServerConfig};
 pub use proto::{ErrorCode, ErrorFrame, Frame, InferOkFrame, MetricsFrame, NetCounters};

@@ -28,15 +28,12 @@
 //! are never lost.
 
 use crate::coordinator::server::Coordinator;
-use crate::serving::proto::{
-    self, ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame,
-    NetCounters,
-};
-use crate::tensor::Tensor;
+use crate::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferFrame, NetCounters};
+use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ValidInfer};
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -59,6 +56,17 @@ pub struct ServerConfig {
     pub max_frame_bytes: usize,
     /// How often blocked reads wake to check for shutdown.
     pub poll_interval: Duration,
+    /// Close a connection that has been idle (no request in flight, not
+    /// a single byte of a new frame received) for this long, so half-open
+    /// or abandoned clients cannot hold connection slots forever.
+    pub idle_timeout: Duration,
+    /// Once the first byte of a frame has arrived, the rest must follow
+    /// within this budget or the connection is closed — a slow-loris
+    /// peer trickling one byte at a time cannot pin a connection slot.
+    pub frame_timeout: Duration,
+    /// Socket write timeout: a peer that stops draining its responses is
+    /// disconnected instead of blocking the connection thread forever.
+    pub write_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -68,22 +76,11 @@ impl Default for ServerConfig {
             max_inflight: 256,
             max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES,
             poll_interval: Duration::from_millis(100),
+            idle_timeout: Duration::from_secs(60),
+            frame_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
         }
     }
-}
-
-/// Monotonic counters + gauges of the network layer (all atomic; shared
-/// by every connection thread and snapshotted into the `metrics` frame).
-#[derive(Debug, Default)]
-struct NetMetrics {
-    connections_opened: AtomicU64,
-    connections_rejected: AtomicU64,
-    frames_received: AtomicU64,
-    frames_sent: AtomicU64,
-    overload_rejections: AtomicU64,
-    protocol_errors: AtomicU64,
-    requests_failed: AtomicU64,
-    requests_ok: AtomicU64,
 }
 
 /// State shared between the server handle, the accept thread, and every
@@ -94,8 +91,9 @@ struct Shared {
     shutdown: AtomicBool,
     /// Gauge: connection threads currently alive.
     open: AtomicUsize,
-    /// Gauge: infer requests admitted and not yet answered.
-    inflight: AtomicUsize,
+    /// Gauge: infer requests admitted and not yet answered (`Arc` so
+    /// [`InflightSlot`]s can own a handle to it).
+    inflight: Arc<AtomicUsize>,
     metrics: NetMetrics,
     /// Connection thread handles, reaped opportunistically and joined on
     /// shutdown.
@@ -104,18 +102,8 @@ struct Shared {
 
 impl Shared {
     fn snapshot(&self) -> NetCounters {
-        NetCounters {
-            connections_open: self.open.load(Ordering::SeqCst) as u64,
-            connections_opened: self.metrics.connections_opened.load(Ordering::SeqCst),
-            connections_rejected: self.metrics.connections_rejected.load(Ordering::SeqCst),
-            frames_received: self.metrics.frames_received.load(Ordering::SeqCst),
-            frames_sent: self.metrics.frames_sent.load(Ordering::SeqCst),
-            inflight: self.inflight.load(Ordering::SeqCst) as u64,
-            overload_rejections: self.metrics.overload_rejections.load(Ordering::SeqCst),
-            protocol_errors: self.metrics.protocol_errors.load(Ordering::SeqCst),
-            requests_failed: self.metrics.requests_failed.load(Ordering::SeqCst),
-            requests_ok: self.metrics.requests_ok.load(Ordering::SeqCst),
-        }
+        self.metrics
+            .snapshot(self.open.load(Ordering::SeqCst), self.inflight.load(Ordering::SeqCst))
     }
 }
 
@@ -144,7 +132,7 @@ impl Server {
             config,
             shutdown: AtomicBool::new(false),
             open: AtomicUsize::new(0),
-            inflight: AtomicUsize::new(0),
+            inflight: Arc::new(AtomicUsize::new(0)),
             metrics: NetMetrics::default(),
             conns: Mutex::new(Vec::new()),
         });
@@ -282,24 +270,34 @@ enum FullRead {
     Eof,
     /// Shutdown was requested while idle at a frame boundary.
     Shutdown,
+    /// [`ServerConfig::idle_timeout`] expired before a new frame began.
+    Idle,
 }
 
 /// Fill `buf` from `stream`, tolerating read timeouts (the socket has
 /// [`ServerConfig::poll_interval`] as its read timeout so blocked reads
-/// can observe `shutdown`).  Partial frames are never abandoned: once the
-/// first byte arrived, shutdown gives the peer [`SHUTDOWN_GRACE`] of
-/// wall clock to finish the frame.
+/// can observe `shutdown` and the deadlines).  Partial frames are never
+/// abandoned to shutdown: once the first byte of a frame arrived,
+/// shutdown gives the peer [`SHUTDOWN_GRACE`] of wall clock to finish it.
+///
+/// `idle_deadline` applies only while no byte of the current frame has
+/// arrived (reaping idle/half-open peers between frames);
+/// `frame_deadline` is set at the frame's first byte and shared between
+/// the header and payload reads, so a slow-loris peer trickling bytes
+/// cannot stretch a single frame forever.
 fn read_full(
     stream: &mut TcpStream,
     buf: &mut [u8],
-    shutdown: &AtomicBool,
+    shared: &Shared,
+    idle_deadline: Option<Instant>,
+    frame_deadline: &mut Option<Instant>,
 ) -> std::io::Result<FullRead> {
     use std::io::Read;
     let mut filled = 0usize;
     let mut shutdown_deadline: Option<Instant> = None;
     while filled < buf.len() {
-        if shutdown.load(Ordering::SeqCst) {
-            if filled == 0 {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            if filled == 0 && frame_deadline.is_none() {
                 return Ok(FullRead::Shutdown);
             }
             let deadline =
@@ -310,6 +308,24 @@ fn read_full(
                     "peer stalled mid-frame during shutdown",
                 ));
             }
+        } else {
+            match *frame_deadline {
+                None => {
+                    if let Some(idle) = idle_deadline {
+                        if Instant::now() > idle {
+                            return Ok(FullRead::Idle);
+                        }
+                    }
+                }
+                Some(deadline) => {
+                    if Instant::now() > deadline {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "peer stalled mid-frame (slow-loris reap)",
+                        ));
+                    }
+                }
+            }
         }
         match stream.read(&mut buf[filled..]) {
             Ok(0) => {
@@ -319,7 +335,12 @@ fn read_full(
                     Err(std::io::ErrorKind::UnexpectedEof.into())
                 };
             }
-            Ok(n) => filled += n,
+            Ok(n) => {
+                filled += n;
+                if frame_deadline.is_none() {
+                    *frame_deadline = Some(Instant::now() + shared.config.frame_timeout);
+                }
+            }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut => {}
@@ -330,16 +351,20 @@ fn read_full(
     Ok(FullRead::Done)
 }
 
-/// Serve one connection until EOF, shutdown, or an unrecoverable
-/// transport/framing error.
+/// Serve one connection until EOF, shutdown, a timeout reap, or an
+/// unrecoverable transport/framing error.
 fn connection_loop(mut stream: TcpStream, shared: &Shared) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(shared.config.poll_interval));
+    let _ = stream.set_write_timeout(Some(shared.config.write_timeout));
     loop {
+        // both reap deadlines restart at each frame boundary
+        let idle = Instant::now() + shared.config.idle_timeout;
+        let mut frame_deadline: Option<Instant> = None;
         let mut header = [0u8; 4];
-        match read_full(&mut stream, &mut header, &shared.shutdown) {
+        match read_full(&mut stream, &mut header, shared, Some(idle), &mut frame_deadline) {
             Ok(FullRead::Done) => {}
-            Ok(FullRead::Eof) | Ok(FullRead::Shutdown) | Err(_) => return,
+            Ok(_) | Err(_) => return,
         }
         let len = u32::from_be_bytes(header) as usize;
         if len > shared.config.max_frame_bytes {
@@ -357,9 +382,9 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
             return;
         }
         let mut payload = vec![0u8; len];
-        match read_full(&mut stream, &mut payload, &shared.shutdown) {
+        match read_full(&mut stream, &mut payload, shared, None, &mut frame_deadline) {
             Ok(FullRead::Done) => {}
-            Ok(FullRead::Eof) | Ok(FullRead::Shutdown) | Err(_) => return,
+            Ok(_) | Err(_) => return,
         }
         shared.metrics.frames_received.fetch_add(1, Ordering::SeqCst);
         let frame = match proto::decode(&payload) {
@@ -367,7 +392,9 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
             Err(e) => {
                 // well-framed but undecodable: typed error, keep serving
                 shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
-                send(&mut stream, shared, &Frame::Error(e));
+                if !send(&mut stream, shared, &Frame::Error(e)) {
+                    return;
+                }
                 continue;
             }
         };
@@ -375,92 +402,45 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
         // the reply is written, so the inflight gauge also covers
         // responses stuck behind a slow-reading client
         let (reply, slot) = handle_frame(frame, shared);
-        send(&mut stream, shared, &reply);
+        let sent = send(&mut stream, shared, &reply);
         drop(slot);
+        if !sent {
+            // a failed/timed-out write leaves the peer's framing state
+            // unknowable; close instead of serving a corrupt stream
+            return;
+        }
     }
 }
 
-fn send(stream: &mut TcpStream, shared: &Shared, frame: &Frame) {
+fn send(stream: &mut TcpStream, shared: &Shared, frame: &Frame) -> bool {
     if proto::write_frame(stream, frame).is_ok() {
         shared.metrics.frames_sent.fetch_add(1, Ordering::SeqCst);
+        true
+    } else {
+        false
     }
 }
 
 /// Dispatch one decoded client frame to its reply frame (plus, for infer
 /// frames, the admission slot the caller must hold until the reply is
 /// written).
-fn handle_frame(frame: Frame, shared: &Shared) -> (Frame, Option<InflightSlot<'_>>) {
+fn handle_frame(frame: Frame, shared: &Shared) -> (Frame, Option<InflightSlot>) {
     match frame {
         Frame::Infer(req) => handle_infer(req, shared),
-        Frame::ListModels => {
-            let coord = &shared.coord;
-            let reply = Frame::Models(ModelsFrame {
-                models: coord.registry().map(|r| r.names()).unwrap_or_default(),
-                default: coord.default_model().map(str::to_string),
-            });
-            (reply, None)
-        }
-        Frame::GetMetrics => {
-            // merged across the shard pool, plus the per-shard counters —
-            // the only place sharding is visible on the wire.  One
-            // consistent snapshot: the counters must sum to the merged
-            // totals even under live traffic.
-            let (m, shards) = shared.coord.metrics_with_shards();
-            let reply = Frame::Metrics(MetricsFrame {
-                backend: m.backend.clone(),
-                requests: m.requests,
-                batches: m.batches,
-                failed_batches: m.failed_batches,
-                p50_us: m.percentile_us(50.0),
-                p90_us: m.percentile_us(90.0),
-                p99_us: m.percentile_us(99.0),
-                per_model: m.per_model.clone(),
-                shards,
-                net: shared.snapshot(),
-            });
-            (reply, None)
-        }
+        // this transport is serial by construction: grant no pipelining,
+        // whatever the client asked for (the evented server grants it)
+        Frame::Hello { .. } => (Frame::HelloOk { pipeline: false, depth: 1 }, None),
+        Frame::ListModels => (common::models_frame(&shared.coord), None),
+        Frame::GetMetrics => (common::metrics_frame(&shared.coord, shared.snapshot()), None),
         Frame::Ping { nonce } => (Frame::Pong { nonce }, None),
         // server-to-client frames arriving at the server
-        other => (
-            Frame::Error(ErrorFrame::new(
-                None,
-                ErrorCode::InvalidFrame,
-                format!("servers do not accept '{}' frames", other.type_str()),
-            )),
-            None,
-        ),
+        other => (common::wrong_direction_frame(&other), None),
     }
 }
 
-/// RAII slot of the in-flight admission gauge.
-struct InflightSlot<'a>(&'a AtomicUsize);
-
-impl<'a> InflightSlot<'a> {
-    /// Take a slot unless the gauge is at `cap`.
-    fn acquire(gauge: &'a AtomicUsize, cap: usize) -> Option<Self> {
-        gauge
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
-                if n < cap {
-                    Some(n + 1)
-                } else {
-                    None
-                }
-            })
-            .ok()
-            .map(|_| InflightSlot(gauge))
-    }
-}
-
-impl Drop for InflightSlot<'_> {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot<'_>>) {
-    let id = Some(req.id);
-    let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(id, code, msg));
+fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot>) {
+    let req_id = req.id;
+    let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(Some(req_id), code, msg));
 
     // admission control first: reject before any validation work
     let Some(slot) = InflightSlot::acquire(&shared.inflight, shared.config.max_inflight) else {
@@ -473,50 +453,12 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
     };
     let slot = Some(slot);
 
-    // checked product: a crafted dims array must not wrap around to a
-    // plausible volume (or panic the thread in a debug build)
-    let volume = req.dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d));
-    let valid = matches!(volume, Some(v) if req.dims.len() == 3 && v > 0 && v == req.data.len());
-    if !valid {
-        let reply = err(
-            ErrorCode::BadImage,
-            format!(
-                "dims {:?} do not describe the {}-element data array",
-                req.dims,
-                req.data.len()
-            ),
-        );
-        return (reply, slot);
-    }
-    if !req.data.iter().all(|x| x.is_finite()) {
-        return (err(ErrorCode::BadImage, "image data contains non-finite values".into()), slot);
-    }
-    let image = Tensor::from_vec(&req.dims, req.data);
+    let ValidInfer { id, model, image } = match common::validate_infer(req, &shared.coord) {
+        Ok(v) => v,
+        Err(reply) => return (reply, slot),
+    };
 
-    // pre-resolve the model name for a deterministic typed error (the
-    // engine would also reject it, but post-batching and stringly)
-    if let Some(model) = &req.model {
-        match shared.coord.registry() {
-            Some(reg) => {
-                if reg.get(model).is_none() {
-                    let reply = err(
-                        ErrorCode::UnknownModel,
-                        format!("model '{model}' is not in the registry"),
-                    );
-                    return (reply, slot);
-                }
-            }
-            None => {
-                let reply = err(
-                    ErrorCode::UnknownModel,
-                    format!("request names model '{model}' but the server has no registry"),
-                );
-                return (reply, slot);
-            }
-        }
-    }
-
-    let submitted = match &req.model {
+    let submitted = match model.as_deref() {
         Some(model) => shared.coord.submit_to(model, image),
         None => shared.coord.submit(image),
     };
@@ -530,28 +472,11 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
     let reply = match rx.recv() {
         Ok(Ok(resp)) => {
             shared.metrics.requests_ok.fetch_add(1, Ordering::SeqCst);
-            Frame::InferOk(InferOkFrame {
-                id: req.id,
-                model: resp.model.as_deref().map(str::to_string),
-                logits: resp.logits,
-                predicted: resp.predicted,
-                queue_us: resp.queue_us,
-                compute_us: resp.compute_us,
-                batch_size: resp.batch_size,
-                batch_occupancy: resp.batch_occupancy,
-                hw: resp.hw,
-            })
+            common::infer_ok_frame(id, resp)
         }
         Ok(Err(msg)) => {
             shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
-            // a hot-removed model loses the pre-check race above; keep
-            // the error typed by recognizing the engine's message
-            let code = if msg.contains("is not in the registry") {
-                ErrorCode::UnknownModel
-            } else {
-                ErrorCode::Internal
-            };
-            err(code, msg)
+            common::infer_err_frame(id, msg)
         }
         Err(_) => {
             shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);

@@ -268,6 +268,24 @@ pub enum Frame {
         /// The probed frame's nonce.
         nonce: u64,
     },
+    /// Capability negotiation, client → server (v1-additive; optional).
+    /// A client that wants pipelined mode sends `hello` as its first
+    /// frame; a client that never sends one gets classic serial mode.
+    Hello {
+        /// Whether the client asks for pipelined (out-of-order,
+        /// multiple-in-flight) responses on this connection.
+        pipeline: bool,
+    },
+    /// The server's answer to `Hello`: what this connection actually got.
+    HelloOk {
+        /// Whether the server granted pipelined mode.  When `false` the
+        /// connection stays serial (one in-flight request, responses in
+        /// request order) regardless of what the client asked for.
+        pipeline: bool,
+        /// Per-connection in-flight request cap the server will enforce
+        /// (1 when `pipeline` is `false`).
+        depth: u64,
+    },
 }
 
 impl Frame {
@@ -283,6 +301,8 @@ impl Frame {
             Frame::Metrics(_) => "metrics",
             Frame::Ping { .. } => "ping",
             Frame::Pong { .. } => "pong",
+            Frame::Hello { .. } => "hello",
+            Frame::HelloOk { .. } => "hello_ok",
         }
     }
 }
@@ -419,6 +439,17 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         Frame::Ping { nonce } | Frame::Pong { nonce } => {
             put(&mut m, "nonce", uint(*nonce));
         }
+        Frame::Hello { pipeline } => {
+            // canonical form omits the default: a plain hello asks for
+            // nothing and exists only to probe what the server grants
+            if *pipeline {
+                put(&mut m, "pipeline", Json::Bool(true));
+            }
+        }
+        Frame::HelloOk { pipeline, depth } => {
+            put(&mut m, "pipeline", Json::Bool(*pipeline));
+            put(&mut m, "depth", uint(*depth));
+        }
     }
     Json::Obj(m).to_string().into_bytes()
 }
@@ -470,6 +501,21 @@ fn need_str(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<String> {
         .as_str()
         .ok_or_else(|| format!("field '{key}' must be a string"))?
         .to_string())
+}
+
+fn need_bool(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<bool> {
+    match need(obj, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(format!("field '{key}' must be a boolean")),
+    }
+}
+
+fn opt_bool(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Option<bool>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(format!("field '{key}' must be a boolean or null")),
+    }
 }
 
 fn opt_str(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Option<String>> {
@@ -683,6 +729,15 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
         "pong" => Ok(Frame::Pong {
             nonce: need_u64(obj, "nonce").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
         }),
+        "hello" => Ok(Frame::Hello {
+            pipeline: opt_bool(obj, "pipeline")
+                .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                .unwrap_or(false),
+        }),
+        "hello_ok" => Ok(Frame::HelloOk {
+            pipeline: need_bool(obj, "pipeline").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+            depth: need_u64(obj, "depth").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+        }),
         other => Err(fail(ErrorCode::UnknownType, format!("unknown frame type '{other}'"))),
     }
 }
@@ -811,6 +866,10 @@ mod tests {
             }),
             Frame::Ping { nonce: 99 },
             Frame::Pong { nonce: 99 },
+            Frame::Hello { pipeline: true },
+            Frame::Hello { pipeline: false },
+            Frame::HelloOk { pipeline: true, depth: 32 },
+            Frame::HelloOk { pipeline: false, depth: 1 },
         ]
     }
 
@@ -841,6 +900,33 @@ mod tests {
             String::from_utf8(encode(&Frame::Ping { nonce: 7 })).unwrap(),
             r#"{"nonce":7,"type":"ping","v":1}"#
         );
+    }
+
+    #[test]
+    fn hello_negotiation_is_v1_additive() {
+        // the canonical non-pipelined hello omits the default field, so
+        // old decoders that never learned 'pipeline' are not the only
+        // compatibility story — new decoders accept its absence too
+        assert_eq!(
+            String::from_utf8(encode(&Frame::Hello { pipeline: false })).unwrap(),
+            r#"{"type":"hello","v":1}"#
+        );
+        assert_eq!(
+            String::from_utf8(encode(&Frame::Hello { pipeline: true })).unwrap(),
+            r#"{"pipeline":true,"type":"hello","v":1}"#
+        );
+        assert_eq!(
+            String::from_utf8(encode(&Frame::HelloOk { pipeline: true, depth: 32 })).unwrap(),
+            r#"{"depth":32,"pipeline":true,"type":"hello_ok","v":1}"#
+        );
+        match decode(br#"{"type":"hello","v":1}"#).unwrap() {
+            Frame::Hello { pipeline } => assert!(!pipeline),
+            other => panic!("expected hello, got {other:?}"),
+        }
+        let e = decode(br#"{"pipeline":1,"type":"hello","v":1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame);
+        let e = decode(br#"{"pipeline":true,"type":"hello_ok","v":1}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::InvalidFrame); // missing depth
     }
 
     #[test]

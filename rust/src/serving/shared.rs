@@ -1,0 +1,215 @@
+//! Logic shared by both serving front-ends.
+//!
+//! The thread-per-connection server ([`crate::serving::net`]) and the
+//! evented server ([`crate::serving::evented`]) must be two transports
+//! over *one* behavior: same admission control, same request validation,
+//! same typed errors, same metrics semantics.  This module is that
+//! behavior — everything here is transport-agnostic, and the e2e suite
+//! runs every scenario against both servers to keep it that way.
+
+use crate::coordinator::request::InferenceResponse;
+use crate::coordinator::server::Coordinator;
+use crate::serving::proto::{
+    ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame, NetCounters,
+};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Monotonic counters of the network layer (all atomic; shared by every
+/// connection and snapshotted into the `metrics` frame together with the
+/// open/inflight gauges the owning server tracks).
+#[derive(Debug, Default)]
+pub(crate) struct NetMetrics {
+    pub(crate) connections_opened: AtomicU64,
+    pub(crate) connections_rejected: AtomicU64,
+    pub(crate) frames_received: AtomicU64,
+    pub(crate) frames_sent: AtomicU64,
+    pub(crate) overload_rejections: AtomicU64,
+    pub(crate) protocol_errors: AtomicU64,
+    pub(crate) requests_failed: AtomicU64,
+    pub(crate) requests_ok: AtomicU64,
+}
+
+impl NetMetrics {
+    /// One consistent snapshot, combined with the caller's gauges.
+    pub(crate) fn snapshot(&self, open: usize, inflight: usize) -> NetCounters {
+        NetCounters {
+            connections_open: open as u64,
+            connections_opened: self.connections_opened.load(Ordering::SeqCst),
+            connections_rejected: self.connections_rejected.load(Ordering::SeqCst),
+            frames_received: self.frames_received.load(Ordering::SeqCst),
+            frames_sent: self.frames_sent.load(Ordering::SeqCst),
+            inflight: inflight as u64,
+            overload_rejections: self.overload_rejections.load(Ordering::SeqCst),
+            protocol_errors: self.protocol_errors.load(Ordering::SeqCst),
+            requests_failed: self.requests_failed.load(Ordering::SeqCst),
+            requests_ok: self.requests_ok.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// RAII slot of the in-flight admission gauge.  Owned (the gauge rides
+/// an `Arc`) so a slot can outlive the stack frame that acquired it —
+/// the evented server parks slots inside connection state and completion
+/// messages until the response bytes are actually flushed.
+pub(crate) struct InflightSlot(Arc<AtomicUsize>);
+
+impl InflightSlot {
+    /// Take a slot unless the gauge is at `cap`.
+    pub(crate) fn acquire(gauge: &Arc<AtomicUsize>, cap: usize) -> Option<InflightSlot> {
+        gauge
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if n < cap { Some(n + 1) } else { None }
+            })
+            .ok()
+            .map(|_| InflightSlot(Arc::clone(gauge)))
+    }
+}
+
+impl Drop for InflightSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// An `infer` frame that passed validation, ready to submit.
+pub(crate) struct ValidInfer {
+    /// Client-chosen request id, echoed in the reply.
+    pub(crate) id: u64,
+    /// Pre-checked registry model (`None` = default model).
+    pub(crate) model: Option<String>,
+    /// The image tensor built from the frame's dims/data.
+    pub(crate) image: Tensor<f32>,
+}
+
+/// Validate an admitted `infer` frame: dims/data consistency, finiteness,
+/// and a registry pre-check of the named model (a deterministic typed
+/// error instead of the engine's post-batching stringly one).
+pub(crate) fn validate_infer(req: InferFrame, coord: &Coordinator) -> Result<ValidInfer, Frame> {
+    let id = Some(req.id);
+    let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(id, code, msg));
+
+    // checked product: a crafted dims array must not wrap around to a
+    // plausible volume (or panic the thread in a debug build)
+    let volume = req.dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d));
+    let valid = matches!(volume, Some(v) if req.dims.len() == 3 && v > 0 && v == req.data.len());
+    if !valid {
+        return Err(err(
+            ErrorCode::BadImage,
+            format!(
+                "dims {:?} do not describe the {}-element data array",
+                req.dims,
+                req.data.len()
+            ),
+        ));
+    }
+    if !req.data.iter().all(|x| x.is_finite()) {
+        return Err(err(ErrorCode::BadImage, "image data contains non-finite values".into()));
+    }
+    if let Some(model) = &req.model {
+        match coord.registry() {
+            Some(reg) => {
+                if reg.get(model).is_none() {
+                    return Err(err(
+                        ErrorCode::UnknownModel,
+                        format!("model '{model}' is not in the registry"),
+                    ));
+                }
+            }
+            None => {
+                return Err(err(
+                    ErrorCode::UnknownModel,
+                    format!("request names model '{model}' but the server has no registry"),
+                ));
+            }
+        }
+    }
+    let image = Tensor::from_vec(&req.dims, req.data);
+    Ok(ValidInfer { id: req.id, model: req.model, image })
+}
+
+/// The `infer_ok` reply for a completed request.
+pub(crate) fn infer_ok_frame(id: u64, resp: InferenceResponse) -> Frame {
+    Frame::InferOk(InferOkFrame {
+        id,
+        model: resp.model.as_deref().map(str::to_string),
+        logits: resp.logits,
+        predicted: resp.predicted,
+        queue_us: resp.queue_us,
+        compute_us: resp.compute_us,
+        batch_size: resp.batch_size,
+        batch_occupancy: resp.batch_occupancy,
+        hw: resp.hw,
+    })
+}
+
+/// The typed `error` reply for a request that failed after admission.
+/// A hot-removed model loses the registry pre-check race; keep the error
+/// typed by recognizing the engine's message.
+pub(crate) fn infer_err_frame(id: u64, msg: String) -> Frame {
+    let code = if msg.contains("is not in the registry") {
+        ErrorCode::UnknownModel
+    } else {
+        ErrorCode::Internal
+    };
+    Frame::Error(ErrorFrame::new(Some(id), code, msg))
+}
+
+/// The `models` reply to a `list_models` frame.
+pub(crate) fn models_frame(coord: &Coordinator) -> Frame {
+    Frame::Models(ModelsFrame {
+        models: coord.registry().map(|r| r.names()).unwrap_or_default(),
+        default: coord.default_model().map(str::to_string),
+    })
+}
+
+/// The `metrics` reply to a `get_metrics` frame: merged across the shard
+/// pool, plus the per-shard counters — the only place sharding is
+/// visible on the wire.  One consistent snapshot: the counters must sum
+/// to the merged totals even under live traffic.
+pub(crate) fn metrics_frame(coord: &Coordinator, net: NetCounters) -> Frame {
+    let (m, shards) = coord.metrics_with_shards();
+    Frame::Metrics(MetricsFrame {
+        backend: m.backend.clone(),
+        requests: m.requests,
+        batches: m.batches,
+        failed_batches: m.failed_batches,
+        p50_us: m.percentile_us(50.0),
+        p90_us: m.percentile_us(90.0),
+        p99_us: m.percentile_us(99.0),
+        per_model: m.per_model.clone(),
+        shards,
+        net,
+    })
+}
+
+/// The reply to a frame type the server never accepts (server-to-client
+/// frames arriving at the server).
+pub(crate) fn wrong_direction_frame(frame: &Frame) -> Frame {
+    Frame::Error(ErrorFrame::new(
+        None,
+        ErrorCode::InvalidFrame,
+        format!("servers do not accept '{}' frames", frame.type_str()),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inflight_slot_is_a_bounded_gauge() {
+        let gauge = Arc::new(AtomicUsize::new(0));
+        let a = InflightSlot::acquire(&gauge, 2).expect("first slot");
+        let b = InflightSlot::acquire(&gauge, 2).expect("second slot");
+        assert!(InflightSlot::acquire(&gauge, 2).is_none(), "cap enforced");
+        assert_eq!(gauge.load(Ordering::SeqCst), 2);
+        drop(a);
+        assert_eq!(gauge.load(Ordering::SeqCst), 1);
+        let c = InflightSlot::acquire(&gauge, 2).expect("freed slot reusable");
+        drop(b);
+        drop(c);
+        assert_eq!(gauge.load(Ordering::SeqCst), 0);
+    }
+}

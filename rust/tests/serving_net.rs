@@ -1,16 +1,28 @@
-//! End-to-end over real sockets: a `serving::net::Server` on an
-//! ephemeral port, driven concurrently through `serving::client` —
-//! multiple model ids at once, a hot-swap mid-run, a deterministic
-//! forced-overload rejection, and a clean shutdown that loses no
-//! admitted request.
+//! End-to-end over real sockets, against **both** serving front-ends:
+//! the threaded `serving::net::Server` and the evented
+//! `serving::evented::EventedServer` on ephemeral ports, driven
+//! concurrently through `serving::client` — multiple model ids at once,
+//! a hot-swap mid-run, a deterministic forced-overload rejection, and a
+//! clean shutdown that loses no admitted request.  Every shared-protocol
+//! scenario runs against each front-end; the evented server additionally
+//! gets C100K-shaped coverage (a thousand multiplexed connections,
+//! out-of-order pipelined replies, byte-level backpressure, slow-loris
+//! and idle reaping).
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
 use pasm_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend};
 use pasm_accel::model_store::ModelRegistry;
 use pasm_accel::quant::fixed::QFormat;
+#[cfg(unix)]
+use pasm_accel::serving::evented;
+#[cfg(unix)]
+use pasm_accel::serving::proto::{self, Frame, InferFrame, ReadOutcome};
+#[cfg(unix)]
+use pasm_accel::serving::{EventedConfig, EventedServer, PipelinedClient};
 use pasm_accel::serving::{Client, ClientError, ErrorCode, Server, ServerConfig};
 use pasm_accel::tensor::Tensor;
+use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -31,84 +43,176 @@ fn registry_coordinator(registry: &Arc<ModelRegistry>) -> Arc<Coordinator> {
     )
 }
 
+/// Config overrides applied uniformly to whichever front-end a scenario
+/// is bound against; `None` keeps that server's default.
+#[derive(Clone, Default)]
+struct Tune {
+    max_connections: Option<usize>,
+    max_inflight: Option<usize>,
+    idle_timeout: Option<Duration>,
+    frame_timeout: Option<Duration>,
+}
+
+/// One of the two interchangeable serving front-ends under test.
+enum TestServer {
+    Threaded(Server),
+    #[cfg(unix)]
+    Evented(EventedServer),
+}
+
+impl TestServer {
+    /// The front-end kinds available on this platform.  Every shared
+    /// scenario loops over all of them.
+    fn kinds() -> Vec<&'static str> {
+        if cfg!(unix) {
+            vec!["threaded", "evented"]
+        } else {
+            vec!["threaded"]
+        }
+    }
+
+    fn bind(kind: &str, coord: &Arc<Coordinator>, tune: &Tune) -> TestServer {
+        match kind {
+            "threaded" => {
+                let mut config = ServerConfig::default();
+                if let Some(v) = tune.max_connections {
+                    config.max_connections = v;
+                }
+                if let Some(v) = tune.max_inflight {
+                    config.max_inflight = v;
+                }
+                if let Some(v) = tune.idle_timeout {
+                    config.idle_timeout = v;
+                }
+                if let Some(v) = tune.frame_timeout {
+                    config.frame_timeout = v;
+                }
+                let server =
+                    Server::bind("127.0.0.1:0", Arc::clone(coord), config).expect("bind threaded");
+                TestServer::Threaded(server)
+            }
+            #[cfg(unix)]
+            "evented" => {
+                let mut config = EventedConfig::default();
+                if let Some(v) = tune.max_connections {
+                    config.max_connections = v;
+                }
+                if let Some(v) = tune.max_inflight {
+                    config.max_inflight = v;
+                }
+                if let Some(v) = tune.idle_timeout {
+                    config.idle_timeout = v;
+                }
+                if let Some(v) = tune.frame_timeout {
+                    config.frame_timeout = v;
+                }
+                let server = EventedServer::bind("127.0.0.1:0", Arc::clone(coord), config)
+                    .expect("bind evented");
+                TestServer::Evented(server)
+            }
+            other => panic!("unknown server kind '{other}'"),
+        }
+    }
+
+    fn local_addr(&self) -> SocketAddr {
+        match self {
+            TestServer::Threaded(s) => s.local_addr(),
+            #[cfg(unix)]
+            TestServer::Evented(s) => s.local_addr(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        match self {
+            TestServer::Threaded(s) => s.shutdown(),
+            #[cfg(unix)]
+            TestServer::Evented(s) => s.shutdown(),
+        }
+    }
+}
+
 #[test]
 fn serves_two_models_concurrently_with_midrun_hot_swap() {
-    let registry = Arc::new(ModelRegistry::new());
-    registry.insert("alpha", encoded(1, 4));
-    registry.insert("beta", encoded(2, 8));
-    let coord = registry_coordinator(&registry);
-    let server =
-        Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default()).expect("bind");
-    let addr = server.local_addr();
+    for kind in TestServer::kinds() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("alpha", encoded(1, 4));
+        registry.insert("beta", encoded(2, 8));
+        let coord = registry_coordinator(&registry);
+        let server = TestServer::bind(kind, &coord, &Tune::default());
+        let addr = server.local_addr();
 
-    // a fixed probe image: its logits must change when alpha is swapped
-    let probe = render_digit(&mut Rng::new(77), 3, 0.05);
-    let mut probe_client = Client::connect(addr).expect("connect probe");
-    let before = probe_client.infer(Some("alpha"), &probe).expect("probe before swap");
+        // a fixed probe image: its logits must change when alpha is swapped
+        let probe = render_digit(&mut Rng::new(77), 3, 0.05);
+        let mut probe_client = Client::connect(addr).expect("connect probe");
+        let before = probe_client.infer(Some("alpha"), &probe).expect("probe before swap");
 
-    let n_per_model = 40usize;
-    let swap_at = 20usize;
-    std::thread::scope(|scope| {
-        let registry = &registry;
-        for (model, seed) in [("alpha", 100u64), ("beta", 200u64)] {
-            scope.spawn(move || {
-                let mut client = Client::connect(addr).expect("connect worker");
-                let mut rng = Rng::new(seed);
-                for i in 0..n_per_model {
-                    if model == "alpha" && i == swap_at {
-                        // hot-swap alpha to a different encoding mid-run;
-                        // in-flight requests finish on the old snapshot,
-                        // the next batch serves the new one
-                        registry.insert("alpha", encoded(9, 16));
+        let n_per_model = 40usize;
+        let swap_at = 20usize;
+        std::thread::scope(|scope| {
+            let registry = &registry;
+            for (model, seed) in [("alpha", 100u64), ("beta", 200u64)] {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect worker");
+                    let mut rng = Rng::new(seed);
+                    for i in 0..n_per_model {
+                        if model == "alpha" && i == swap_at {
+                            // hot-swap alpha to a different encoding mid-run;
+                            // in-flight requests finish on the old snapshot,
+                            // the next batch serves the new one
+                            registry.insert("alpha", encoded(9, 16));
+                        }
+                        let img = render_digit(&mut rng, i % 10, 0.05);
+                        let reply = client
+                            .infer(Some(model), &img)
+                            .unwrap_or_else(|e| panic!("{kind}: {model} request {i}: {e}"));
+                        assert_eq!(reply.model.as_deref(), Some(model), "{kind} request {i}");
+                        assert_eq!(reply.logits.len(), 10, "{kind} request {i}");
+                        assert!(reply.hw.cycles > 0, "{kind} request {i}");
                     }
-                    let img = render_digit(&mut rng, i % 10, 0.05);
-                    let reply = client
-                        .infer(Some(model), &img)
-                        .unwrap_or_else(|e| panic!("{model} request {i}: {e}"));
-                    assert_eq!(reply.model.as_deref(), Some(model), "request {i}");
-                    assert_eq!(reply.logits.len(), 10, "request {i}");
-                    assert!(reply.hw.cycles > 0, "request {i}");
-                }
-            });
-        }
-    });
+                });
+            }
+        });
 
-    let after = probe_client.infer(Some("alpha"), &probe).expect("probe after swap");
-    assert_eq!(after.model.as_deref(), Some("alpha"));
-    assert_ne!(
-        before.logits, after.logits,
-        "hot-swapped model must serve different weights for the same image"
-    );
+        let after = probe_client.infer(Some("alpha"), &probe).expect("probe after swap");
+        assert_eq!(after.model.as_deref(), Some("alpha"));
+        assert_ne!(
+            before.logits, after.logits,
+            "{kind}: hot-swapped model must serve different weights for the same image"
+        );
 
-    // model listing reflects the registry
-    let models = probe_client.list_models().expect("list_models");
-    assert_eq!(models.models, vec!["alpha".to_string(), "beta".to_string()]);
-    assert_eq!(models.default.as_deref(), Some("alpha"));
+        // model listing reflects the registry
+        let models = probe_client.list_models().expect("list_models");
+        assert_eq!(models.models, vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(models.default.as_deref(), Some("alpha"));
 
-    // ping is alive, and metrics account for every request we sent
-    probe_client.ping().expect("ping");
-    let m = probe_client.metrics().expect("metrics");
-    assert_eq!(m.backend, "native");
-    let alpha = m.per_model.get("alpha").copied().unwrap_or_default();
-    let beta = m.per_model.get("beta").copied().unwrap_or_default();
-    assert_eq!(alpha.requests, n_per_model as u64 + 2, "alpha = worker + 2 probes");
-    assert_eq!(beta.requests, n_per_model as u64);
-    assert_eq!(m.failed_batches, 0);
-    assert!(m.net.frames_received >= m.net.frames_sent);
-    assert_eq!(m.net.requests_failed, 0);
-    assert_eq!(m.net.protocol_errors, 0);
+        // ping is alive, and metrics account for every request we sent
+        probe_client.ping().expect("ping");
+        let m = probe_client.metrics().expect("metrics");
+        assert_eq!(m.backend, "native");
+        let alpha = m.per_model.get("alpha").copied().unwrap_or_default();
+        let beta = m.per_model.get("beta").copied().unwrap_or_default();
+        assert_eq!(alpha.requests, n_per_model as u64 + 2, "{kind}: alpha = worker + 2 probes");
+        assert_eq!(beta.requests, n_per_model as u64, "{kind}");
+        assert_eq!(m.failed_batches, 0, "{kind}");
+        assert!(m.net.frames_received >= m.net.frames_sent, "{kind}");
+        assert_eq!(m.net.requests_failed, 0, "{kind}");
+        assert_eq!(m.net.protocol_errors, 0, "{kind}");
 
-    // unknown model is a typed, routable error — not a hang or a close
-    let err = probe_client.infer(Some("nope"), &probe).expect_err("unknown model");
-    assert_eq!(err.server_code(), Some(ErrorCode::UnknownModel));
-    probe_client.ping().expect("connection survives a typed error");
+        // unknown model is a typed, routable error — not a hang or a close
+        let err = probe_client.infer(Some("nope"), &probe).expect_err("unknown model");
+        assert_eq!(err.server_code(), Some(ErrorCode::UnknownModel), "{kind}");
+        probe_client.ping().expect("connection survives a typed error");
 
-    drop(server);
-    // after shutdown the port no longer answers
-    assert!(Client::connect(addr).is_err() || {
-        let mut c = Client::connect(addr).unwrap();
-        c.ping().is_err()
-    });
+        drop(server);
+        // after shutdown the port no longer answers
+        assert!(
+            Client::connect(addr).is_err() || {
+                let mut c = Client::connect(addr).unwrap();
+                c.ping().is_err()
+            },
+            "{kind}: port answered after shutdown"
+        );
+    }
 }
 
 /// Deterministic overload: one in-flight slot, a batch policy that parks
@@ -116,120 +220,127 @@ fn serves_two_models_concurrently_with_midrun_hot_swap() {
 /// request must hit the cap while the first is still admitted.
 #[test]
 fn overload_is_a_typed_retryable_error_and_no_request_is_lost() {
-    let coord = Arc::new(
-        CoordinatorBuilder::new()
-            .backend(NativeBackend::new(encoded(3, 8)))
-            .batch_policy(BatchPolicy::new(vec![4], Duration::from_millis(400)))
-            .build()
-            .expect("coordinator startup"),
-    );
-    let config = ServerConfig { max_inflight: 1, ..ServerConfig::default() };
-    let mut server = Server::bind("127.0.0.1:0", Arc::clone(&coord), config).expect("bind");
-    let addr = server.local_addr();
-    let img = render_digit(&mut Rng::new(5), 4, 0.05);
+    for kind in TestServer::kinds() {
+        let coord = Arc::new(
+            CoordinatorBuilder::new()
+                .backend(NativeBackend::new(encoded(3, 8)))
+                .batch_policy(BatchPolicy::new(vec![4], Duration::from_millis(400)))
+                .build()
+                .expect("coordinator startup"),
+        );
+        let tune = Tune { max_inflight: Some(1), ..Tune::default() };
+        let mut server = TestServer::bind(kind, &coord, &tune);
+        let addr = server.local_addr();
+        let img = render_digit(&mut Rng::new(5), 4, 0.05);
 
-    // phase 1: occupy the only slot with a parked request, then overload
-    let slow = {
-        let img = img.clone();
-        std::thread::spawn(move || {
-            let mut client = Client::connect(addr).expect("connect slow");
-            client.infer(None, &img)
-        })
-    };
-    let mut client = Client::connect(addr).expect("connect main");
-    // wait (via the metrics frame, which needs no admission slot) until
-    // the slow request is admitted — this makes the overload deterministic
-    let deadline = Instant::now() + Duration::from_secs(10);
-    loop {
-        let m = client.metrics().expect("metrics");
-        if m.net.inflight == 1 {
-            break;
-        }
-        assert!(Instant::now() < deadline, "slow request never admitted");
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    let err = client.infer(None, &img).expect_err("must be rejected at the cap");
-    match &err {
-        ClientError::Server(e) => {
-            assert_eq!(e.code, ErrorCode::ResourceExhausted);
-            assert!(e.code.retryable());
-            assert_eq!(e.id, Some(1), "error frame echoes the request id");
-        }
-        other => panic!("expected a typed server rejection, got {other}"),
-    }
-    // the parked request completes untouched (wait-budget expiry launches it)
-    let slow_reply = slow.join().expect("slow thread").expect("parked request must succeed");
-    assert_eq!(slow_reply.logits.len(), 10);
-
-    // the slot is free again: the same connection retries successfully
-    let deadline = Instant::now() + Duration::from_secs(10);
-    let retried = loop {
-        match client.infer(None, &img) {
-            Ok(ok) => break ok,
-            Err(ClientError::Server(e)) if e.code == ErrorCode::ResourceExhausted => {
-                assert!(Instant::now() < deadline, "slot never freed");
-                std::thread::sleep(Duration::from_millis(5));
+        // phase 1: occupy the only slot with a parked request, then overload
+        let slow = {
+            let img = img.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect slow");
+                client.infer(None, &img)
+            })
+        };
+        let mut client = Client::connect(addr).expect("connect main");
+        // wait (via the metrics frame, which needs no admission slot) until
+        // the slow request is admitted — this makes the overload deterministic
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let m = client.metrics().expect("metrics");
+            if m.net.inflight == 1 {
+                break;
             }
-            Err(other) => panic!("retry failed: {other}"),
+            assert!(Instant::now() < deadline, "{kind}: slow request never admitted");
+            std::thread::sleep(Duration::from_millis(5));
         }
-    };
-    assert_eq!(retried.logits, slow_reply.logits, "same image, same model, same logits");
-    let m = client.metrics().expect("metrics");
-    assert!(m.net.overload_rejections >= 1);
+        let err = client.infer(None, &img).expect_err("must be rejected at the cap");
+        match &err {
+            ClientError::Server(e) => {
+                assert_eq!(e.code, ErrorCode::ResourceExhausted, "{kind}");
+                assert!(e.code.retryable(), "{kind}");
+                assert_eq!(e.id, Some(1), "{kind}: error frame echoes the request id");
+            }
+            other => panic!("{kind}: expected a typed server rejection, got {other}"),
+        }
+        // the parked request completes untouched (wait-budget expiry launches it)
+        let slow_reply = slow.join().expect("slow thread").expect("parked request must succeed");
+        assert_eq!(slow_reply.logits.len(), 10);
 
-    // phase 2: clean shutdown loses no admitted request — park another
-    // request, shut down while it is in flight, and require its response
-    let parked = {
-        let img = img.clone();
-        std::thread::spawn(move || {
-            let mut client = Client::connect(addr).expect("connect parked");
-            client.infer(None, &img)
-        })
-    };
-    std::thread::sleep(Duration::from_millis(100));
-    server.shutdown(); // blocks until every connection thread finished
-    let reply = parked.join().expect("parked thread").expect("request lost in shutdown");
-    assert_eq!(reply.logits, slow_reply.logits);
+        // the slot is free again: the same connection retries successfully
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let retried = loop {
+            match client.infer(None, &img) {
+                Ok(ok) => break ok,
+                Err(ClientError::Server(e)) if e.code == ErrorCode::ResourceExhausted => {
+                    assert!(Instant::now() < deadline, "{kind}: slot never freed");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(other) => panic!("{kind}: retry failed: {other}"),
+            }
+        };
+        assert_eq!(retried.logits, slow_reply.logits, "same image, same model, same logits");
+        let m = client.metrics().expect("metrics");
+        assert!(m.net.overload_rejections >= 1, "{kind}");
+
+        // phase 2: clean shutdown loses no admitted request — park another
+        // request, shut down while it is in flight, and require its response
+        let parked = {
+            let img = img.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr).expect("connect parked");
+                client.infer(None, &img)
+            })
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        server.shutdown(); // blocks until the front-end drained
+        let reply = parked.join().expect("parked thread").expect("request lost in shutdown");
+        assert_eq!(reply.logits, slow_reply.logits, "{kind}");
+    }
 }
 
 #[test]
 fn connection_cap_rejects_with_a_typed_frame() {
-    let coord = Arc::new(
-        CoordinatorBuilder::new()
-            .backend(NativeBackend::new(encoded(4, 4)))
-            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
-            .build()
-            .expect("coordinator startup"),
-    );
-    let config = ServerConfig { max_connections: 1, ..ServerConfig::default() };
-    let server = Server::bind("127.0.0.1:0", Arc::clone(&coord), config).expect("bind");
-    let addr = server.local_addr();
+    for kind in TestServer::kinds() {
+        let coord = Arc::new(
+            CoordinatorBuilder::new()
+                .backend(NativeBackend::new(encoded(4, 4)))
+                .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+                .build()
+                .expect("coordinator startup"),
+        );
+        let tune = Tune { max_connections: Some(1), ..Tune::default() };
+        let server = TestServer::bind(kind, &coord, &tune);
+        let addr = server.local_addr();
 
-    let mut first = Client::connect(addr).expect("connect first");
-    first.ping().expect("first connection serves");
+        let mut first = Client::connect(addr).expect("connect first");
+        first.ping().expect("first connection serves");
 
-    let mut second = Client::connect(addr).expect("tcp connect still succeeds");
-    let err = second.ping().expect_err("over-cap connection must be refused");
-    match err {
-        ClientError::Server(e) => assert_eq!(e.code, ErrorCode::ResourceExhausted),
-        // the error frame races the close; a hard close is also acceptable
-        ClientError::Io(_) | ClientError::Closed => {}
-        other => panic!("unexpected rejection shape: {other}"),
-    }
-
-    // the first connection is unaffected
-    first.ping().expect("capped server keeps serving admitted connections");
-
-    // once the first connection closes, a new one is admitted
-    drop(first);
-    let deadline = Instant::now() + Duration::from_secs(10);
-    loop {
-        let mut c = Client::connect(addr).expect("connect");
-        if c.ping().is_ok() {
-            break;
+        let mut second = Client::connect(addr).expect("tcp connect still succeeds");
+        let err = second.ping().expect_err("over-cap connection must be refused");
+        match err {
+            ClientError::Server(e) => {
+                assert_eq!(e.code, ErrorCode::ResourceExhausted, "{kind}");
+            }
+            // the error frame races the close; a hard close is also acceptable
+            ClientError::Io(_) | ClientError::Closed => {}
+            other => panic!("{kind}: unexpected rejection shape: {other}"),
         }
-        assert!(Instant::now() < deadline, "slot never freed after disconnect");
-        std::thread::sleep(Duration::from_millis(10));
+
+        // the first connection is unaffected
+        first.ping().expect("capped server keeps serving admitted connections");
+
+        // once the first connection closes, a new one is admitted
+        drop(first);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let mut c = Client::connect(addr).expect("connect");
+            if c.ping().is_ok() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "{kind}: slot never freed after disconnect");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(server);
     }
 }
 
@@ -239,105 +350,429 @@ fn connection_cap_rejects_with_a_typed_frame() {
 /// hot-swap lands on the owning shard only.
 #[test]
 fn sharded_server_reports_per_shard_metrics_and_hot_swaps() {
-    let registry = Arc::new(ModelRegistry::new());
-    registry.insert("gamma", encoded(31, 4));
-    registry.insert("delta", encoded(32, 8));
-    let coord = Arc::new(
-        CoordinatorBuilder::new()
-            .registry(Arc::clone(&registry))
-            .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
-            .shards(4)
-            .build()
-            .expect("coordinator startup"),
-    );
-    // the stable router puts these two models on different shards
-    assert_ne!(coord.shard_for(Some("gamma")), coord.shard_for(Some("delta")));
-    let server =
-        Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default()).expect("bind");
-    let addr = server.local_addr();
+    for kind in TestServer::kinds() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("gamma", encoded(31, 4));
+        registry.insert("delta", encoded(32, 8));
+        let coord = Arc::new(
+            CoordinatorBuilder::new()
+                .registry(Arc::clone(&registry))
+                .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+                .shards(4)
+                .build()
+                .expect("coordinator startup"),
+        );
+        // the stable router puts these two models on different shards
+        assert_ne!(coord.shard_for(Some("gamma")), coord.shard_for(Some("delta")));
+        let server = TestServer::bind(kind, &coord, &Tune::default());
+        let addr = server.local_addr();
 
-    // drive both models concurrently over real sockets
-    std::thread::scope(|scope| {
-        for (model, seed) in [("gamma", 300u64), ("delta", 400u64)] {
-            scope.spawn(move || {
-                let mut client = Client::connect(addr).expect("connect worker");
-                let mut rng = Rng::new(seed);
-                for i in 0..24usize {
-                    let img = render_digit(&mut rng, i % 10, 0.05);
-                    let reply = client
-                        .infer(Some(model), &img)
-                        .unwrap_or_else(|e| panic!("{model} request {i}: {e}"));
-                    assert_eq!(reply.model.as_deref(), Some(model), "request {i}");
-                    assert_eq!(reply.logits.len(), 10, "request {i}");
-                }
-            });
-        }
-    });
+        // drive both models concurrently over real sockets
+        std::thread::scope(|scope| {
+            for (model, seed) in [("gamma", 300u64), ("delta", 400u64)] {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).expect("connect worker");
+                    let mut rng = Rng::new(seed);
+                    for i in 0..24usize {
+                        let img = render_digit(&mut rng, i % 10, 0.05);
+                        let reply = client
+                            .infer(Some(model), &img)
+                            .unwrap_or_else(|e| panic!("{kind}: {model} request {i}: {e}"));
+                        assert_eq!(reply.model.as_deref(), Some(model), "{kind} request {i}");
+                        assert_eq!(reply.logits.len(), 10, "{kind} request {i}");
+                    }
+                });
+            }
+        });
 
-    // the metrics frame reports the pool: four shard entries whose
-    // counters sum to the merged totals, with (at least) the two owning
-    // shards active
-    let mut client = Client::connect(addr).expect("connect");
-    let m = client.metrics().expect("metrics");
-    assert_eq!(m.shards.len(), 4, "one counters entry per shard");
-    assert_eq!(m.requests, 48);
-    let sum: u64 = m.shards.iter().map(|s| s.requests).sum();
-    assert_eq!(sum, m.requests, "per-shard counters must sum to the merged total");
-    let active = m.shards.iter().filter(|s| s.batches > 0).count();
-    assert!(active >= 2, "two models on distinct shards must light up two shards");
-    assert_eq!(m.failed_batches, 0);
+        // the metrics frame reports the pool: four shard entries whose
+        // counters sum to the merged totals, with (at least) the two owning
+        // shards active
+        let mut client = Client::connect(addr).expect("connect");
+        let m = client.metrics().expect("metrics");
+        assert_eq!(m.shards.len(), 4, "{kind}: one counters entry per shard");
+        assert_eq!(m.requests, 48, "{kind}");
+        let sum: u64 = m.shards.iter().map(|s| s.requests).sum();
+        assert_eq!(sum, m.requests, "{kind}: per-shard counters must sum to the merged total");
+        let active = m.shards.iter().filter(|s| s.batches > 0).count();
+        assert!(active >= 2, "{kind}: two models on distinct shards must light up two shards");
+        assert_eq!(m.failed_batches, 0, "{kind}");
 
-    // wire-level mid-run hot swap: the owning shard serves the new
-    // weights on its next batch; the other shard is untouched
-    let probe = render_digit(&mut Rng::new(88), 6, 0.05);
-    let before_g = client.infer(Some("gamma"), &probe).expect("probe gamma");
-    let before_d = client.infer(Some("delta"), &probe).expect("probe delta");
-    registry.insert("gamma", encoded(33, 16));
-    let after_g = client.infer(Some("gamma"), &probe).expect("probe gamma post-swap");
-    let after_d = client.infer(Some("delta"), &probe).expect("probe delta post-swap");
-    assert_ne!(
-        before_g.logits, after_g.logits,
-        "hot-swapped model must serve different weights"
-    );
-    assert_eq!(
-        before_d.logits, after_d.logits,
-        "un-swapped model must be unaffected by a swap on another shard"
-    );
+        // wire-level mid-run hot swap: the owning shard serves the new
+        // weights on its next batch; the other shard is untouched
+        let probe = render_digit(&mut Rng::new(88), 6, 0.05);
+        let before_g = client.infer(Some("gamma"), &probe).expect("probe gamma");
+        let before_d = client.infer(Some("delta"), &probe).expect("probe delta");
+        registry.insert("gamma", encoded(33, 16));
+        let after_g = client.infer(Some("gamma"), &probe).expect("probe gamma post-swap");
+        let after_d = client.infer(Some("delta"), &probe).expect("probe delta post-swap");
+        assert_ne!(
+            before_g.logits, after_g.logits,
+            "{kind}: hot-swapped model must serve different weights"
+        );
+        assert_eq!(
+            before_d.logits, after_d.logits,
+            "{kind}: un-swapped model must be unaffected by a swap on another shard"
+        );
+        drop(server);
+    }
 }
 
 #[test]
 fn bad_frames_get_typed_errors_without_dropping_the_connection() {
+    for kind in TestServer::kinds() {
+        let coord = Arc::new(
+            CoordinatorBuilder::new()
+                .backend(NativeBackend::new(encoded(6, 4)))
+                .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+                .build()
+                .expect("coordinator startup"),
+        );
+        let server = TestServer::bind(kind, &coord, &Tune::default());
+        let mut client = Client::connect(server.local_addr()).expect("connect");
+
+        // wrong image volume
+        let bad = Tensor::<f32>::zeros(&[2, 3, 3]);
+        let err = client.infer(None, &bad).expect_err("wrong dims");
+        assert_eq!(err.server_code(), Some(ErrorCode::BadImage), "{kind}");
+
+        // non-finite data
+        let mut inf = Tensor::<f32>::zeros(&[1, 12, 12]);
+        inf.data_mut()[0] = f32::INFINITY;
+        let err = client.infer(None, &inf).expect_err("non-finite");
+        assert_eq!(err.server_code(), Some(ErrorCode::BadImage), "{kind}");
+
+        // naming a model on a registry-less server
+        let good = render_digit(&mut Rng::new(8), 1, 0.05);
+        let err = client.infer(Some("ghost"), &good).expect_err("no registry");
+        assert_eq!(err.server_code(), Some(ErrorCode::UnknownModel), "{kind}");
+
+        // and the connection still serves real work after all of that
+        let ok = client.infer(None, &good).expect("recovery");
+        assert_eq!(ok.logits.len(), 10, "{kind}");
+        let m = client.metrics().expect("metrics");
+        assert_eq!(m.net.requests_ok, 1, "{kind}");
+        assert_eq!(m.net.connections_open, 1, "{kind}");
+        drop(server);
+    }
+}
+
+/// Both front-ends reap connections that go quiet: an idle socket that
+/// never sends a frame, and a slow-loris peer that dribbles a partial
+/// header then stalls, are both closed by deadline — while a healthy
+/// connection pinging through the same window stays up.
+#[test]
+fn idle_and_slow_loris_connections_are_reaped_while_healthy_ones_survive() {
+    use std::io::{Read, Write};
+    for kind in TestServer::kinds() {
+        let coord = Arc::new(
+            CoordinatorBuilder::new()
+                .backend(NativeBackend::new(encoded(11, 4)))
+                .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+                .build()
+                .expect("coordinator startup"),
+        );
+        let tune = Tune {
+            idle_timeout: Some(Duration::from_millis(300)),
+            frame_timeout: Some(Duration::from_millis(200)),
+            ..Tune::default()
+        };
+        let server = TestServer::bind(kind, &coord, &tune);
+        let addr = server.local_addr();
+
+        // an idle connection (no bytes at all) and a slow-loris one (two
+        // bytes of a four-byte header, then silence)
+        let idle = std::net::TcpStream::connect(addr).expect("connect idle");
+        let mut loris = std::net::TcpStream::connect(addr).expect("connect loris");
+        loris.write_all(&[0, 0]).expect("partial header");
+
+        // a healthy client keeps pinging through the reap window
+        let mut healthy = Client::connect(addr).expect("connect healthy");
+        for _ in 0..16 {
+            healthy.ping().unwrap_or_else(|e| panic!("{kind}: healthy ping failed: {e}"));
+            std::thread::sleep(Duration::from_millis(50));
+        }
+
+        // both quiet connections must observe EOF (or a reset) by now
+        for (name, mut stream) in [("idle", idle), ("slow-loris", loris)] {
+            stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+            let mut buf = [0u8; 16];
+            match stream.read(&mut buf) {
+                Ok(0) | Err(_) => {}
+                Ok(n) => panic!("{kind}: {name} connection got {n} bytes instead of a close"),
+            }
+        }
+
+        // the healthy connection is still alive after the reaping
+        healthy.ping().unwrap_or_else(|e| panic!("{kind}: survivor ping failed: {e}"));
+        drop(server);
+    }
+}
+
+/// A pipelined client against the threaded front-end degrades cleanly:
+/// the `hello` negotiation grants a serial window of one and requests
+/// still round-trip.
+#[cfg(unix)]
+#[test]
+fn pipelined_client_degrades_to_serial_against_the_threaded_server() {
     let coord = Arc::new(
         CoordinatorBuilder::new()
-            .backend(NativeBackend::new(encoded(6, 4)))
+            .backend(NativeBackend::new(encoded(12, 4)))
             .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
             .build()
             .expect("coordinator startup"),
     );
     let server =
         Server::bind("127.0.0.1:0", Arc::clone(&coord), ServerConfig::default()).expect("bind");
-    let mut client = Client::connect(server.local_addr()).expect("connect");
+    let mut client = PipelinedClient::connect(server.local_addr()).expect("negotiate");
+    assert_eq!(client.depth(), 1, "threaded server grants a serial window");
 
-    // wrong image volume
-    let bad = Tensor::<f32>::zeros(&[2, 3, 3]);
-    let err = client.infer(None, &bad).expect_err("wrong dims");
-    assert_eq!(err.server_code(), Some(ErrorCode::BadImage));
+    let img = render_digit(&mut Rng::new(13), 7, 0.05);
+    for _ in 0..4 {
+        let id = client.submit(None, &img).expect("submit");
+        let reply = client.recv().expect("recv");
+        assert_eq!(reply.id, id);
+        let ok = reply.result.expect("infer ok");
+        assert_eq!(ok.logits.len(), 10);
+    }
+    // the window really is one: a second submit without a recv is refused
+    let _ = client.submit(None, &img).expect("submit");
+    assert!(client.submit(None, &img).is_err(), "window of one must refuse a second in-flight");
+}
 
-    // non-finite data
-    let mut inf = Tensor::<f32>::zeros(&[1, 12, 12]);
-    inf.data_mut()[0] = f32::INFINITY;
-    let err = client.infer(None, &inf).expect_err("non-finite");
-    assert_eq!(err.server_code(), Some(ErrorCode::BadImage));
+/// The headline pipelining behavior: one connection, several requests in
+/// flight, responses returning **out of order** and matched by id.  A
+/// single-bucket batch policy makes the reordering deterministic — the
+/// first-submitted request (model `a`, alone in its bucket) parks on the
+/// wait budget while four model-`b` requests fill an exact bucket and
+/// launch immediately, so `a`'s reply arrives last.
+#[cfg(unix)]
+#[test]
+fn pipelined_responses_come_back_out_of_order_matched_by_id() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("a", encoded(21, 4));
+    registry.insert("b", encoded(22, 4));
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .registry(Arc::clone(&registry))
+            .batch_policy(BatchPolicy::new(vec![4], Duration::from_millis(300)))
+            .build()
+            .expect("coordinator startup"),
+    );
+    let server = EventedServer::bind("127.0.0.1:0", Arc::clone(&coord), EventedConfig::default())
+        .expect("bind");
 
-    // naming a model on a registry-less server
-    let good = render_digit(&mut Rng::new(8), 1, 0.05);
-    let err = client.infer(Some("ghost"), &good).expect_err("no registry");
-    assert_eq!(err.server_code(), Some(ErrorCode::UnknownModel));
+    let mut client = PipelinedClient::connect(server.local_addr()).expect("negotiate");
+    assert!(client.depth() >= 16, "granted depth {} is below the pipelining bar", client.depth());
 
-    // and the connection still serves real work after all of that
-    let ok = client.infer(None, &good).expect("recovery");
-    assert_eq!(ok.logits.len(), 10);
-    let m = client.metrics().expect("metrics");
-    assert_eq!(m.net.requests_ok, 1);
-    assert_eq!(m.net.connections_open, 1);
+    let img = render_digit(&mut Rng::new(23), 5, 0.05);
+    let a_id = client.submit(Some("a"), &img).expect("submit a");
+    let b_ids: Vec<u64> = (0..4)
+        .map(|i| client.submit(Some("b"), &img).unwrap_or_else(|e| panic!("b {i}: {e}")))
+        .collect();
+    assert_eq!(client.in_flight(), 5);
+
+    let mut order = Vec::new();
+    for i in 0..5 {
+        let reply = client.recv().unwrap_or_else(|e| panic!("recv {i}: {e}"));
+        let ok = reply.result.unwrap_or_else(|e| panic!("request {} failed: {e}", reply.id));
+        assert_eq!(ok.id, reply.id);
+        assert_eq!(ok.logits.len(), 10);
+        order.push(reply.id);
+    }
+    assert_eq!(client.in_flight(), 0);
+
+    // submission order was [a, b, b, b, b]; arrival order must not be —
+    // the batched b's overtake the parked a, which lands last
+    assert_eq!(order.last(), Some(&a_id), "the parked request must arrive last");
+    assert_ne!(order.first(), Some(&a_id));
+    let mut overtakers: Vec<u64> = order[..4].to_vec();
+    overtakers.sort_unstable();
+    let mut expected = b_ids.clone();
+    expected.sort_unstable();
+    assert_eq!(overtakers, expected, "every b reply arrives before the parked a reply");
+}
+
+/// C100K shape: a thousand idle connections held open on one evented
+/// server (two workers, a handful of threads total) while real inference
+/// traffic flows beside them, and sampled idle sockets still answer
+/// pings — every connection stays multiplexed, none is starved.
+#[cfg(unix)]
+#[test]
+fn evented_server_multiplexes_a_thousand_connections() {
+    let soft = evented::raise_fd_limit(4096).expect("raise fd limit");
+    assert!(soft >= 1200, "soft fd limit {soft} too low even after raising");
+
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(41, 4)))
+            .batch_policy(BatchPolicy::new(vec![1, 8], Duration::from_millis(1)))
+            .build()
+            .expect("coordinator startup"),
+    );
+    let config = EventedConfig { max_connections: 2048, ..EventedConfig::default() };
+    let server = EventedServer::bind("127.0.0.1:0", Arc::clone(&coord), config).expect("bind");
+    let addr = server.local_addr();
+
+    let held: Vec<std::net::TcpStream> = (0..1000)
+        .map(|i| std::net::TcpStream::connect(addr).unwrap_or_else(|e| panic!("connect {i}: {e}")))
+        .collect();
+
+    // the server registers all of them (plus our metrics connection)
+    let mut metrics_client = Client::connect(addr).expect("connect metrics");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = metrics_client.metrics().expect("metrics");
+        if m.net.connections_open >= 1001 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "only {} of 1001 connections registered",
+            m.net.connections_open
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // real work flows beside the idle mass
+    std::thread::scope(|scope| {
+        for seed in 0..8u64 {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect worker");
+                let mut rng = Rng::new(500 + seed);
+                for i in 0..25usize {
+                    let img = render_digit(&mut rng, i % 10, 0.05);
+                    let reply = client
+                        .infer(None, &img)
+                        .unwrap_or_else(|e| panic!("worker {seed} request {i}: {e}"));
+                    assert_eq!(reply.logits.len(), 10);
+                }
+            });
+        }
+    });
+
+    // sampled held connections are live, not just accepted: each answers
+    // a ping frame in place
+    for (i, stream) in held.iter().enumerate().step_by(100) {
+        let mut stream = stream;
+        stream.set_read_timeout(Some(Duration::from_secs(10))).expect("read timeout");
+        let nonce = 9000 + i as u64;
+        proto::write_frame(&mut stream, &Frame::Ping { nonce })
+            .unwrap_or_else(|e| panic!("ping {i}: {e}"));
+        match proto::read_frame(&mut stream, proto::DEFAULT_MAX_FRAME_BYTES) {
+            Ok(ReadOutcome::Frame(Frame::Pong { nonce: got })) => assert_eq!(got, nonce),
+            other => panic!("held connection {i}: expected pong, got {other:?}"),
+        }
+    }
+
+    let m = metrics_client.metrics().expect("metrics");
+    assert!(m.net.requests_ok >= 200, "all 200 concurrent requests served");
+    assert_eq!(m.net.requests_failed, 0);
+    assert_eq!(m.net.protocol_errors, 0);
+    drop(held);
+    drop(server);
+}
+
+/// Byte-level backpressure: a client that fires hundreds of requests but
+/// never reads its replies.  With a tiny server write buffer and socket
+/// buffers, the server must *stop reading* from that connection once its
+/// write buffer crosses the high watermark — `frames_received` plateaus
+/// far below the request count instead of ballooning server memory —
+/// and admission slots for the unflushed replies stay held.  When the
+/// client finally drains, every reply arrives, in order, matched by id.
+#[cfg(target_os = "linux")]
+#[test]
+fn backpressure_pauses_reads_on_a_non_draining_connection() {
+    use std::io::Write;
+
+    const N: u64 = 600;
+    let coord = Arc::new(
+        CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(51, 4)))
+            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+            .build()
+            .expect("coordinator startup"),
+    );
+    let config = EventedConfig {
+        max_write_buffer: 4096,
+        sock_sndbuf: Some(4096),
+        idle_timeout: Duration::from_secs(120),
+        frame_timeout: Duration::from_secs(120),
+        ..EventedConfig::default()
+    };
+    let server = EventedServer::bind("127.0.0.1:0", Arc::clone(&coord), config).expect("bind");
+    let addr = server.local_addr();
+
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    // shrink our receive window so the kernel cannot absorb the replies
+    evented::set_recv_buffer(&stream, 4096).expect("shrink rcvbuf");
+    let mut reader = stream.try_clone().expect("clone stream");
+    let img = render_digit(&mut Rng::new(53), 2, 0.05);
+
+    // writer half: fire all N requests without ever reading a reply; the
+    // write itself blocks once the server stops reading from us
+    let writer = {
+        let mut stream = stream;
+        let img = img.clone();
+        std::thread::spawn(move || {
+            for id in 1..=N {
+                let frame = Frame::Infer(InferFrame {
+                    id,
+                    model: None,
+                    dims: img.dims().to_vec(),
+                    data: img.data().to_vec(),
+                });
+                proto::write_frame(&mut stream, &frame)
+                    .unwrap_or_else(|e| panic!("write {id}: {e}"));
+            }
+            let _ = stream.flush();
+        })
+    };
+
+    // watch from a second connection: frames_received must plateau well
+    // below N while the reply bytes sit unflushed in the write buffer.
+    // Each metrics poll is itself one received frame (counted before its
+    // own reply snapshot), so subtract our polls to isolate the infers.
+    let mut metrics_client = Client::connect(addr).expect("connect metrics");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut polls = 0u64;
+    let mut last = 0u64;
+    let mut stable = 0u32;
+    let plateau = loop {
+        polls += 1;
+        let m = metrics_client.metrics().expect("metrics");
+        let received = m.net.frames_received - polls;
+        if received == last && last > 0 {
+            stable += 1;
+            if stable >= 20 {
+                assert!(m.net.inflight >= 1, "unflushed replies must hold admission slots");
+                break received;
+            }
+        } else {
+            stable = 0;
+            last = received;
+        }
+        assert!(Instant::now() < deadline, "reads never plateaued (received {last})");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(
+        plateau < N,
+        "server read all {N} requests while the peer drained nothing — no backpressure"
+    );
+
+    // now drain: every reply arrives, serial order, matched by id
+    reader.set_read_timeout(Some(Duration::from_secs(60))).expect("read timeout");
+    for expect in 1..=N {
+        match proto::read_frame(&mut reader, proto::DEFAULT_MAX_FRAME_BYTES) {
+            Ok(ReadOutcome::Frame(Frame::InferOk(ok))) => {
+                assert_eq!(ok.id, expect, "serial replies must stay in request order");
+                assert_eq!(ok.logits.len(), 10);
+            }
+            other => panic!("reply {expect}: expected infer_ok, got {other:?}"),
+        }
+    }
+    writer.join().expect("writer thread");
+    let m = metrics_client.metrics().expect("metrics");
+    assert_eq!(m.net.overload_rejections, 0, "backpressure must pause, not reject");
+    drop(server);
 }

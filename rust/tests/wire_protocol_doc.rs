@@ -67,6 +67,8 @@ fn every_documented_example_round_trips_byte_for_byte() {
         "metrics",
         "ping",
         "pong",
+        "hello",
+        "hello_ok",
     ] {
         assert!(
             seen_types.contains(required),
