@@ -58,7 +58,9 @@ use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
 #[cfg(unix)]
 use pasm_accel::coordinator::loadgen::run_closed_loop_pipelined;
-use pasm_accel::coordinator::loadgen::{run_open_loop_models, run_open_loop_net};
+use pasm_accel::coordinator::loadgen::{
+    DEFAULT_REQUEST_TIMEOUT, NetLoadOptions, run_open_loop_models, run_open_loop_net,
+};
 use pasm_accel::coordinator::{
     BatchPolicy, Coordinator, CoordinatorBuilder, NativeBackend, NativePrecision,
 };
@@ -287,8 +289,9 @@ fn run_net_loads(
             .map(|r| r.req_s)
             .unwrap_or(500.0);
         let rate = (planned_req_s * 0.7).max(50.0);
-        let conns = load.clamp(1, 8);
-        let r = run_open_loop_net(&addr, &[], pool, load, rate, conns, &mut rng)
+        let opts = NetLoadOptions { connections: load.clamp(1, 8), ..NetLoadOptions::default() };
+        let conns = opts.connections;
+        let r = run_open_loop_net(&addr, &[], pool, load, rate, opts, &mut rng)
             .expect("net load run");
         assert_eq!(r.errors, 0, "net bench requests failed");
         println!(
@@ -425,7 +428,8 @@ fn run_shard_scaling(runs: &[RunStats], pool: &[Tensor<f32>], load: usize) -> Ve
             .expect("sharded coordinator startup");
         assert_eq!(coord.shards(), shards);
         let mut lrng = Rng::new(61);
-        let r = run_open_loop_models(&coord, &models, pool, load, rate, &mut lrng);
+        let timeout = DEFAULT_REQUEST_TIMEOUT;
+        let r = run_open_loop_models(&coord, &models, pool, load, rate, &mut lrng, timeout);
         assert_eq!(r.errors, 0, "shard bench requests failed");
         let per_shard_batches: Vec<u64> =
             coord.shard_metrics().iter().map(|m| m.batches).collect();

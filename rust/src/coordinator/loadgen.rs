@@ -26,12 +26,16 @@
 
 use crate::cnn::data::Rng;
 use crate::coordinator::server::Coordinator;
-use crate::serving::client::{Client, ClientError, PipelinedClient};
+use crate::serving::client::{Client, ClientError, PipelinedClient, RetryPolicy};
 use crate::serving::proto::ErrorCode;
 use crate::tensor::Tensor;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
+
+/// How long [`run_open_loop`] waits on each in-process completion before
+/// counting the request as a deadline miss.
+pub const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Exponential inter-arrival times for `n` requests at `rate_hz`.
 pub fn poisson_schedule(rng: &mut Rng, n: usize, rate_hz: f64) -> Vec<Duration> {
@@ -54,12 +58,21 @@ pub struct LoadResult {
     pub achieved_hz: f64,
     /// Per-request end-to-end latencies (µs), submission to response.
     pub latencies_us: Vec<u64>,
-    /// Requests that failed outright (transport or execution errors).
+    /// Requests that failed outright (transport or execution errors),
+    /// after any retries were exhausted.
     pub errors: usize,
     /// Requests the server's admission control rejected with a typed
     /// `RESOURCE_EXHAUSTED` frame (network runs only; always 0 for the
     /// in-process path, which has no admission layer).
     pub overloaded: usize,
+    /// Requests that missed their deadline: a typed `DEADLINE_EXCEEDED`
+    /// reply, or a client-side wait that outlived the per-request
+    /// timeout.  Counted separately from `errors` — a missed deadline is
+    /// the latency policy working, not the stack breaking.
+    pub deadline_misses: usize,
+    /// Retries the client layer performed across the run (network runs
+    /// only).  Deterministic for a fixed schedule and retry seed.
+    pub retries: u64,
 }
 
 impl LoadResult {
@@ -94,7 +107,7 @@ pub fn run_open_loop(
     rate_hz: f64,
     rng: &mut Rng,
 ) -> LoadResult {
-    run_open_loop_models(coord, &[], pool, n, rate_hz, rng)
+    run_open_loop_models(coord, &[], pool, n, rate_hz, rng, DEFAULT_REQUEST_TIMEOUT)
 }
 
 /// [`run_open_loop`] with per-request model routing: targets cycle
@@ -103,6 +116,10 @@ pub fn run_open_loop(
 /// this is the load shape that exercises a sharded coordinator — each
 /// model's traffic lands on its own shard, so the merged req/s scales
 /// with the pool instead of serializing on one worker.
+///
+/// `timeout` bounds how long the drain waits on each completion; an
+/// expiry (or a typed deadline-exceeded reply) is recorded as a
+/// deadline miss, not an abort — the run always reports every request.
 pub fn run_open_loop_models(
     coord: &Coordinator,
     models: &[Option<String>],
@@ -110,6 +127,7 @@ pub fn run_open_loop_models(
     n: usize,
     rate_hz: f64,
     rng: &mut Rng,
+    timeout: Duration,
 ) -> LoadResult {
     assert!(!pool.is_empty());
     let default_models = [None];
@@ -140,10 +158,14 @@ pub fn run_open_loop_models(
 
     let mut latencies = Vec::with_capacity(inflight.len());
     let mut errors = n - inflight.len();
+    let mut deadline_misses = 0usize;
     for rx in inflight {
-        match rx.recv_timeout(Duration::from_secs(60)) {
+        match rx.recv_timeout(timeout) {
             Ok(Ok(resp)) => latencies.push(resp.queue_us + resp.compute_us),
-            _ => errors += 1,
+            Ok(Err(msg)) if msg.contains("deadline exceeded") => deadline_misses += 1,
+            Ok(Err(_)) => errors += 1,
+            Err(mpsc::RecvTimeoutError::Timeout) => deadline_misses += 1,
+            Err(mpsc::RecvTimeoutError::Disconnected) => errors += 1,
         }
     }
     let wall = started.elapsed().as_secs_f64();
@@ -153,21 +175,52 @@ pub fn run_open_loop_models(
         latencies_us: latencies,
         errors,
         overloaded: 0,
+        deadline_misses,
+        retries: 0,
+    }
+}
+
+/// Knobs of a network load run ([`run_open_loop_net`]).
+#[derive(Clone, Copy, Debug)]
+pub struct NetLoadOptions {
+    /// Blocking client connections driving the shared schedule.
+    pub connections: usize,
+    /// Client retry policy; each connection derives its jitter stream
+    /// from `retry.seed` plus its connection index, so a fixed seed
+    /// replays the whole fleet's backoff schedule.
+    pub retry: RetryPolicy,
+    /// Relative deadline attached to every request (`None` = none);
+    /// typed `DEADLINE_EXCEEDED` replies count as deadline misses.
+    pub deadline_ms: Option<u64>,
+    /// Client-side bound on each reply wait; an expiry is recorded as a
+    /// deadline miss (never retried — the request may still land) and
+    /// the connection is reset.
+    pub timeout: Duration,
+}
+
+impl Default for NetLoadOptions {
+    fn default() -> Self {
+        NetLoadOptions {
+            connections: 4,
+            retry: RetryPolicy::none(),
+            deadline_ms: None,
+            timeout: DEFAULT_REQUEST_TIMEOUT,
+        }
     }
 }
 
 /// Replay a Poisson arrival process of `n` requests at `rate_hz` against
-/// a network serving front-end at `addr`, over `connections` blocking
-/// [`Client`]s (images cycled from `pool`, model targets cycled from
-/// `models`; an empty `models` slice means every request goes to the
-/// server's default model).
+/// a network serving front-end at `addr`, over `opts.connections`
+/// blocking [`Client`]s (images cycled from `pool`, model targets cycled
+/// from `models`; an empty `models` slice means every request goes to
+/// the server's default model).
 ///
 /// The schedule is shared: workers claim arrival slots from a common
 /// counter and sleep until their slot's arrival time, so submissions
-/// stay open-loop as long as `connections` exceeds the typical in-flight
-/// depth.  Latency is measured from the request's *scheduled* arrival to
-/// its reply — a saturated connection pool therefore shows up as
-/// latency, exactly like a saturated server, instead of silently
+/// stay open-loop as long as `opts.connections` exceeds the typical
+/// in-flight depth.  Latency is measured from the request's *scheduled*
+/// arrival to its reply — a saturated connection pool therefore shows up
+/// as latency, exactly like a saturated server, instead of silently
 /// stretching the schedule.
 pub fn run_open_loop_net(
     addr: &str,
@@ -175,11 +228,11 @@ pub fn run_open_loop_net(
     pool: &[Tensor<f32>],
     n: usize,
     rate_hz: f64,
-    connections: usize,
+    opts: NetLoadOptions,
     rng: &mut Rng,
 ) -> anyhow::Result<LoadResult> {
     anyhow::ensure!(!pool.is_empty(), "image pool is empty");
-    anyhow::ensure!(connections >= 1, "need at least one connection");
+    anyhow::ensure!(opts.connections >= 1, "need at least one connection");
     let default_models = [None];
     let models: &[Option<String>] = if models.is_empty() { &default_models } else { models };
 
@@ -194,25 +247,30 @@ pub fn run_open_loop_net(
 
     // connect up front so a refused connection fails the run loudly
     // instead of skewing the measurement
-    let clients: Vec<Client> = (0..connections)
+    let clients: Vec<Client> = (0..opts.connections)
         .map(|i| {
+            let retry = RetryPolicy { seed: opts.retry.seed.wrapping_add(i as u64), ..opts.retry };
             Client::connect(addr)
+                .and_then(|c| c.with_retry(retry).with_read_timeout(opts.timeout))
                 .map_err(|e| anyhow::anyhow!("connect load connection {i} to {addr}: {e}"))
         })
         .collect::<anyhow::Result<_>>()?;
 
     let next = AtomicUsize::new(0);
-    let results: Mutex<(Vec<u64>, usize, usize)> = Mutex::new((Vec::with_capacity(n), 0, 0));
+    type NetTally = (Vec<u64>, usize, usize, usize, u64);
+    let results: Mutex<NetTally> = Mutex::new((Vec::with_capacity(n), 0, 0, 0, 0));
     let started = Instant::now();
     std::thread::scope(|scope| {
         let next = &next;
         let results = &results;
         let offsets = &offsets;
+        let opts = &opts;
         for mut client in clients {
             scope.spawn(move || {
                 let mut latencies = Vec::new();
                 let mut errors = 0usize;
                 let mut overloaded = 0usize;
+                let mut deadline_misses = 0usize;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
@@ -224,10 +282,25 @@ pub fn run_open_loop_net(
                         std::thread::sleep(due - now);
                     }
                     let model = models[i % models.len()].as_deref();
-                    match client.infer(model, &pool[i % pool.len()]) {
+                    match client.infer_deadline(model, &pool[i % pool.len()], opts.deadline_ms) {
                         Ok(_) => latencies.push(due.elapsed().as_micros() as u64),
                         Err(ClientError::Server(e)) if e.code == ErrorCode::ResourceExhausted => {
                             overloaded += 1;
+                        }
+                        Err(ClientError::Server(e)) if e.code == ErrorCode::DeadlineExceeded => {
+                            deadline_misses += 1;
+                        }
+                        Err(ClientError::Io(e))
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                            ) =>
+                        {
+                            // client-side wait expired: a miss, not an
+                            // abort; reset so a late reply cannot
+                            // mis-match the next request on this stream
+                            deadline_misses += 1;
+                            let _ = client.reset();
                         }
                         Err(_) => errors += 1,
                     }
@@ -236,17 +309,22 @@ pub fn run_open_loop_net(
                 guard.0.extend(latencies);
                 guard.1 += errors;
                 guard.2 += overloaded;
+                guard.3 += deadline_misses;
+                guard.4 += client.retries();
             });
         }
     });
     let wall = started.elapsed().as_secs_f64();
-    let (latencies_us, errors, overloaded) = results.into_inner().unwrap();
+    let (latencies_us, errors, overloaded, deadline_misses, retries) =
+        results.into_inner().unwrap();
     Ok(LoadResult {
         offered_hz: rate_hz,
         achieved_hz: latencies_us.len() as f64 / wall,
         latencies_us,
         errors,
         overloaded,
+        deadline_misses,
+        retries,
     })
 }
 
@@ -354,6 +432,8 @@ mod tests {
             latencies_us: (1..=100).collect(),
             errors: 0,
             overloaded: 0,
+            deadline_misses: 0,
+            retries: 0,
         };
         assert!(r.percentile_us(50.0) <= r.percentile_us(99.0));
         assert_eq!(r.percentile_us(100.0), 100);

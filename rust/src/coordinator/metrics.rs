@@ -29,6 +29,8 @@ pub struct ModelCounters {
     pub batches: u64,
     /// Batches that failed (execution error or panic) for this model.
     pub failed_batches: u64,
+    /// Requests whose deadline expired before their batch launched.
+    pub deadline_misses: u64,
 }
 
 /// Compact per-shard counter summary, reported next to the merged
@@ -41,6 +43,8 @@ pub struct ShardCounters {
     pub batches: u64,
     /// Batches that failed on this shard.
     pub failed_batches: u64,
+    /// Requests this shard dropped for an expired deadline.
+    pub deadline_misses: u64,
 }
 
 /// Rolling metrics for one coordinator shard (or, after
@@ -57,6 +61,9 @@ pub struct Metrics {
     /// Batches that failed (execution error, panic, or unresolvable
     /// model), across all models.
     pub failed_batches: u64,
+    /// Requests dropped because their deadline expired before launch,
+    /// across all models.
+    pub deadline_misses: u64,
     /// Executed batch slots that were zero padding.
     pub padded_slots: u64,
     /// Per-model request/batch counters, keyed by model name (the default
@@ -107,6 +114,16 @@ impl Metrics {
         }
     }
 
+    /// Count a request dropped for an expired deadline.  Same map-growth
+    /// guard as [`Metrics::record_failed_batch`]: the per-model counter
+    /// only moves for models that already have an entry.
+    pub fn record_deadline_miss(&mut self, model: &str) {
+        self.deadline_misses += 1;
+        if let Some(m) = self.per_model.get_mut(model) {
+            m.deadline_misses += 1;
+        }
+    }
+
     /// Record one request's end-to-end latency (sliding window: once
     /// [`LATENCY_WINDOW`] samples are held, the oldest is overwritten).
     pub fn record_latency(&mut self, lat: Duration) {
@@ -137,6 +154,7 @@ impl Metrics {
             requests: self.requests,
             batches: self.batches,
             failed_batches: self.failed_batches,
+            deadline_misses: self.deadline_misses,
         }
     }
 
@@ -151,6 +169,7 @@ impl Metrics {
         self.requests += other.requests;
         self.batches += other.batches;
         self.failed_batches += other.failed_batches;
+        self.deadline_misses += other.deadline_misses;
         self.padded_slots += other.padded_slots;
         self.sim_cycles += other.sim_cycles;
         self.sim_energy_j += other.sim_energy_j;
@@ -159,6 +178,7 @@ impl Metrics {
             m.requests += c.requests;
             m.batches += c.batches;
             m.failed_batches += c.failed_batches;
+            m.deadline_misses += c.deadline_misses;
         }
         self.latencies_us.extend_from_slice(&other.latencies_us);
     }
@@ -217,8 +237,10 @@ mod tests {
         m.record_batch("b", 8, 8);
         m.record_batch("a", 2, 2);
         m.record_failed_batch("b");
-        assert_eq!(m.model("a"), ModelCounters { requests: 6, batches: 2, failed_batches: 0 });
-        assert_eq!(m.model("b"), ModelCounters { requests: 8, batches: 1, failed_batches: 1 });
+        let a = ModelCounters { requests: 6, batches: 2, failed_batches: 0, deadline_misses: 0 };
+        assert_eq!(m.model("a"), a);
+        let b = ModelCounters { requests: 8, batches: 1, failed_batches: 1, deadline_misses: 0 };
+        assert_eq!(m.model("b"), b);
         assert_eq!(m.model("missing"), ModelCounters::default());
         // globals aggregate across models
         assert_eq!(m.requests, 14);
@@ -234,6 +256,17 @@ mod tests {
         }
         assert_eq!(m.failed_batches, 100);
         assert!(m.per_model.is_empty(), "made-up names must not create entries");
+    }
+
+    #[test]
+    fn deadline_misses_follow_the_same_map_growth_guard() {
+        let mut m = Metrics::new();
+        m.record_batch("real", 1, 1);
+        m.record_deadline_miss("real");
+        m.record_deadline_miss("bogus");
+        assert_eq!(m.deadline_misses, 2);
+        assert_eq!(m.model("real").deadline_misses, 1);
+        assert_eq!(m.per_model.len(), 1, "made-up names must not create entries");
     }
 
     #[test]
@@ -289,8 +322,10 @@ mod tests {
         assert_eq!(merged.batches, 3);
         assert_eq!(merged.failed_batches, 1);
         assert_eq!(merged.padded_slots, 4);
-        assert_eq!(merged.model("x"), ModelCounters { requests: 6, batches: 2, failed_batches: 0 });
-        assert_eq!(merged.model("y"), ModelCounters { requests: 8, batches: 1, failed_batches: 1 });
+        let x = ModelCounters { requests: 6, batches: 2, failed_batches: 0, deadline_misses: 0 };
+        assert_eq!(merged.model("x"), x);
+        let y = ModelCounters { requests: 8, batches: 1, failed_batches: 1, deadline_misses: 0 };
+        assert_eq!(merged.model("y"), y);
         assert_eq!(merged.percentile_us(0.0), Some(100));
         assert_eq!(merged.percentile_us(100.0), Some(500));
         assert_eq!(merged.sim_cycles, 1500);
@@ -303,7 +338,11 @@ mod tests {
         m.record_batch("a", 3, 4);
         m.record_batch("a", 4, 4);
         m.record_failed_batch("a");
-        assert_eq!(m.counters(), ShardCounters { requests: 7, batches: 2, failed_batches: 1 });
+        m.record_deadline_miss("a");
+        assert_eq!(
+            m.counters(),
+            ShardCounters { requests: 7, batches: 2, failed_batches: 1, deadline_misses: 1 }
+        );
     }
 
     #[test]

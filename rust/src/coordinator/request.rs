@@ -18,18 +18,34 @@ pub struct InferenceRequest {
     pub model: Option<Arc<str>>,
     /// When the request entered the system (queue-latency baseline).
     pub enqueued_at: Instant,
+    /// Absolute deadline; `None` = wait forever.  The batcher purges
+    /// expired requests *before* launch and answers them with a typed
+    /// deadline-exceeded error instead of spending compute on a reply
+    /// nobody is waiting for.
+    pub deadline: Option<Instant>,
 }
 
 impl InferenceRequest {
     /// A request for the default model, enqueued now.
     pub fn new(id: u64, image: Tensor<f32>) -> Self {
-        InferenceRequest { id, image, model: None, enqueued_at: Instant::now() }
+        InferenceRequest { id, image, model: None, enqueued_at: Instant::now(), deadline: None }
     }
 
     /// Target a named registry model instead of the default.
     pub fn with_model(mut self, model: impl Into<Arc<str>>) -> Self {
         self.model = Some(model.into());
         self
+    }
+
+    /// Attach an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// True once the deadline (if any) has passed at `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -84,5 +100,17 @@ mod tests {
         let img = Tensor::<f32>::zeros(&[1, 12, 12]);
         let r = InferenceRequest::new(8, img).with_model("digits-b4");
         assert_eq!(r.model.as_deref(), Some("digits-b4"));
+    }
+
+    #[test]
+    fn deadline_expiry_is_checked_against_now() {
+        let img = Tensor::<f32>::zeros(&[1, 12, 12]);
+        let now = Instant::now();
+        let r = InferenceRequest::new(9, img);
+        assert!(!r.expired_at(now + std::time::Duration::from_secs(3600)), "no deadline");
+        let r = r.with_deadline(now + std::time::Duration::from_millis(10));
+        assert!(!r.expired_at(now));
+        assert!(r.expired_at(now + std::time::Duration::from_millis(10)));
+        assert!(r.expired_at(now + std::time::Duration::from_secs(1)));
     }
 }

@@ -1,4 +1,5 @@
-//! The coordinator server: builder, shard pool, submission handle.
+//! The coordinator server: builder, supervised shard pool, submission
+//! handle.
 //!
 //! [`CoordinatorBuilder`] assembles a backend (and/or a
 //! [`ModelRegistry`]), a batch policy, and a cost model into a running
@@ -20,12 +21,40 @@
 //! traffic of the same model.
 //!
 //! Within a shard the worker drains its request channel into per-model
-//! queues, applying the [`BatchPolicy`] to each: wait for a fillable
-//! bucket or the oldest request's deadline, then launch the queue whose
-//! front request has waited longest.  Clients get a per-request response
+//! queues, purges requests whose [`InferenceRequest::deadline`] already
+//! expired (each purge is answered with a typed `deadline exceeded`
+//! error and counted in [`Metrics::record_deadline_miss`]), then applies
+//! the [`BatchPolicy`] to each queue: wait for a fillable bucket or the
+//! oldest request's wait budget, then launch the queue whose front
+//! request has waited longest.  Clients get a per-request response
 //! channel.  Drop the [`Coordinator`] to shut down cleanly: every shard
 //! flushes its pending requests before its worker exits — the pool
 //! drains losing nothing, exactly like the old single worker.
+//!
+//! # Supervision
+//!
+//! `catch_unwind` contains a kernel panic per batch, but nothing used to
+//! catch a worker *thread* dying outright — that stranded its queues
+//! forever.  The pool now runs a **supervisor thread** that sweeps the
+//! shards every few tens of milliseconds: a dead worker is joined, its
+//! stranded requests are answered with a typed `shard worker died` error
+//! (every [`Completion`] is a drop-guard, so a request dropped anywhere
+//! on the way down still gets a terminal reply), and a fresh worker is
+//! respawned from the registry snapshot (or a
+//! [`ExecutionBackend::replicate`] template).  Restarts are counted in
+//! [`Coordinator::shard_restarts`] and reported in the `metrics` wire
+//! frame.  Submissions that race a dead shard fail with a retryable
+//! `unavailable` error rather than hanging.  Backends that cannot
+//! replicate (and have no registry to rebuild from) are served without
+//! respawn — the drop-guards still answer every stranded request.
+//!
+//! # Fault injection
+//!
+//! [`CoordinatorBuilder::fault_plan`] attaches a deterministic
+//! [`FaultPlan`] (see [`crate::faults`]): the worker loop consults it
+//! before each launch for injected latency, execution errors, kernel
+//! panics, and worker kills, and an attached registry inherits the plan
+//! for torn artifact loads.  Without a plan every hook is inert.
 
 use crate::coordinator::backend::{ExecutionBackend, NativeBackend};
 use crate::coordinator::batcher::BatchPolicy;
@@ -33,15 +62,16 @@ use crate::coordinator::cost::CostModel;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::{DEFAULT_MODEL_LABEL, Metrics, ShardCounters};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::faults::{FaultPlan, FaultSite};
 use crate::model_store::ModelRegistry;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Cap on the *default* shard count (an explicit
 /// [`CoordinatorBuilder::shards`] may exceed it).  Each shard is a full
@@ -50,9 +80,37 @@ use std::time::Instant;
 /// batches.
 pub const DEFAULT_MAX_SHARDS: usize = 8;
 
+/// How often the supervisor sweeps the pool for dead shard workers.
+const SUPERVISOR_SWEEP: Duration = Duration::from_millis(20);
+
+/// Error text a request stranded by a dead worker is answered with (the
+/// serving layer maps it to a retryable `UNAVAILABLE` wire error).
+const WORKER_DIED: &str = "shard worker died before the request was served";
+
+// Poison-tolerant lock helpers: a panicking holder must not cascade into
+// every later lock site (the data is counters and channel handles — the
+// protected state stays coherent because writers never panic mid-update).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+fn wlock<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
 enum Msg {
     Request(InferenceRequest, Completion),
     Shutdown,
+}
+
+enum CompletionKind {
+    /// Send down a per-request response channel (receiver may be gone).
+    Channel(mpsc::Sender<Result<InferenceResponse, String>>),
+    /// Invoke a closure on the shard worker's thread.  Must be cheap and
+    /// must not block: it runs inside the batching loop.
+    Callback(Box<dyn FnOnce(Result<InferenceResponse, String>) + Send>),
 }
 
 /// How a finished request is delivered back to its submitter.
@@ -61,21 +119,52 @@ enum Msg {
 /// the callback form backs [`Coordinator::submit_with`], which the
 /// evented serving front-end uses so a completion costs a queue push and
 /// a wake instead of a parked thread per in-flight request.
-enum Completion {
-    /// Send down a per-request response channel (receiver may be gone).
-    Channel(mpsc::Sender<Result<InferenceResponse, String>>),
-    /// Invoke a closure on the shard worker's thread.  Must be cheap and
-    /// must not block: it runs inside the batching loop.
-    Callback(Box<dyn FnOnce(Result<InferenceResponse, String>) + Send>),
-}
+///
+/// A `Completion` is a **drop-guard**: if it is destroyed without
+/// [`Completion::deliver`] being called — a worker thread died with the
+/// request still queued, a channel buffer was torn down — it delivers a
+/// typed [`WORKER_DIED`] error on the way out.  That is the mechanism
+/// behind the pool's "every admitted request gets a terminal reply"
+/// guarantee; no code path needs to remember to fail requests by hand.
+struct Completion(Option<CompletionKind>);
 
 impl Completion {
-    fn deliver(self, result: Result<InferenceResponse, String>) {
-        match self {
-            Completion::Channel(tx) => {
-                let _ = tx.send(result);
+    fn channel(tx: mpsc::Sender<Result<InferenceResponse, String>>) -> Self {
+        Completion(Some(CompletionKind::Channel(tx)))
+    }
+
+    fn callback(f: Box<dyn FnOnce(Result<InferenceResponse, String>) + Send>) -> Self {
+        Completion(Some(CompletionKind::Callback(f)))
+    }
+
+    fn deliver(mut self, result: Result<InferenceResponse, String>) {
+        if let Some(kind) = self.0.take() {
+            match kind {
+                CompletionKind::Channel(tx) => {
+                    let _ = tx.send(result);
+                }
+                CompletionKind::Callback(f) => f(result),
             }
-            Completion::Callback(f) => f(result),
+        }
+    }
+
+    /// Defuse the drop-guard: the completion is being handed back to a
+    /// caller who will report the failure itself (a failed submit must
+    /// not *also* fire the callback).
+    fn disarm(mut self) {
+        self.0 = None;
+    }
+}
+
+impl Drop for Completion {
+    fn drop(&mut self) {
+        if let Some(kind) = self.0.take() {
+            match kind {
+                CompletionKind::Channel(tx) => {
+                    let _ = tx.send(Err(WORKER_DIED.to_string()));
+                }
+                CompletionKind::Callback(f) => f(Err(WORKER_DIED.to_string())),
+            }
         }
     }
 }
@@ -133,6 +222,7 @@ pub struct CoordinatorBuilder {
     registry: Option<Arc<ModelRegistry>>,
     default_model: Option<String>,
     shards: Option<usize>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl CoordinatorBuilder {
@@ -207,6 +297,16 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Attach a deterministic fault-injection plan (see
+    /// [`crate::faults`]).  The shard workers consult it before every
+    /// batch launch, and an attached [`CoordinatorBuilder::registry`]
+    /// inherits it for torn-artifact-load injection.  Without this call
+    /// no fault is ever injected.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(Arc::new(plan));
+        self
+    }
+
     /// Size of the shard pool: `n` independent workers, each owning its
     /// own engine, queues, and metrics; requests route by stable hash of
     /// the model id ([`Coordinator::shard_for`]).
@@ -241,6 +341,12 @@ impl CoordinatorBuilder {
             "CoordinatorBuilder: .shards(0) — the pool needs at least one shard"
         );
         let registry = self.registry;
+        let faults = self.faults;
+        if let (Some(reg), Some(plan)) = (&registry, &faults) {
+            // the registry participates in the same seeded plan: torn
+            // artifact loads come from the TornLoad stream
+            reg.set_fault_plan(Arc::clone(plan));
+        }
         // Resolve the pool size first (backend construction below can
         // depend on it).  Without a registry there is exactly one
         // routable key — the default model — so extra shards could never
@@ -256,6 +362,9 @@ impl CoordinatorBuilder {
             None => 1,
         };
         let mut default_model: Option<Arc<str>> = None;
+        // how the supervisor rebuilds a dead shard's backend; None = no
+        // respawn possible (single-instance backend without a registry)
+        let mut factory: Option<BackendFactory> = None;
         let backend: Box<dyn ExecutionBackend> = match (self.backend, &registry) {
             (Some(b), _) => {
                 if let Some(name) = &self.default_model {
@@ -267,6 +376,13 @@ impl CoordinatorBuilder {
                         "default model '{name}' is not in the registry"
                     );
                     default_model = Some(Arc::from(name.as_str()));
+                }
+                // respawn template: one extra replica kept aside (shares
+                // the model Arc / plan cache, so the cost is a handle)
+                if let Some(template) = b.replicate() {
+                    factory = Some(Box::new(move || {
+                        template.replicate().context("backend template lost replicability")
+                    }));
                 }
                 b
             }
@@ -287,6 +403,17 @@ impl CoordinatorBuilder {
                 // (N shards x N row workers)
                 let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
                 let per_shard = (cores / want).max(1);
+                // respawn path: rebuild from the *current* registry
+                // snapshot, so a worker that died across a hot-swap comes
+                // back serving the new artifact
+                let reg_factory = Arc::clone(reg);
+                let name_factory = name.clone();
+                factory = Some(Box::new(move || {
+                    let entry = reg_factory.get(&name_factory).with_context(|| {
+                        format!("default model '{name_factory}' is no longer in the registry")
+                    })?;
+                    Ok(Box::new(NativeBackend::new((*entry.enc).clone()).with_threads(per_shard)))
+                }));
                 Box::new(NativeBackend::new((*entry.enc).clone()).with_threads(per_shard))
             }
             (None, None) => anyhow::bail!(
@@ -332,79 +459,201 @@ impl CoordinatorBuilder {
         let mut readies = Vec::with_capacity(backends.len());
         for (shard_id, backend) in backends.into_iter().enumerate() {
             let metrics = Arc::new(Mutex::new(Metrics::new()));
-            let metrics_worker = Arc::clone(&metrics);
-            let (tx, rx) = mpsc::channel::<Msg>();
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-            let buckets = policy.buckets.clone();
-            let policy_worker = policy.clone();
-            let registry_worker = registry.clone();
-            let worker = std::thread::Builder::new()
-                .name(format!("pasm-coord-{shard_id}"))
-                .spawn(move || {
-                    let engine = match Engine::new(backend, &buckets, &cost, registry_worker) {
-                        Ok(e) => {
-                            // label the metrics before signalling ready so
-                            // build() never returns with an empty backend name
-                            metrics_worker.lock().unwrap().record_backend(e.backend_name());
-                            let _ = ready_tx.send(Ok(()));
-                            e
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(format!("{e:#}")));
-                            return;
-                        }
-                    };
-                    worker_loop(engine, policy_worker, rx, metrics_worker, shard_id);
-                })
-                .with_context(|| format!("spawn coordinator shard {shard_id}"))?;
-            shards.push(Shard { tx, worker: Some(worker), metrics });
+            let (tx, worker, ready_rx) = spawn_shard(
+                shard_id,
+                backend,
+                &policy,
+                &cost,
+                registry.clone(),
+                Arc::clone(&metrics),
+                faults.clone(),
+            )?;
+            shards.push(ShardState {
+                tx: RwLock::new(tx),
+                worker: Mutex::new(Some(worker)),
+                metrics,
+            });
             readies.push(ready_rx);
         }
-        for (shard_id, ready_rx) in readies.into_iter().enumerate() {
+        for (shard_id, ready_rx) in readies.iter().enumerate() {
             let started = ready_rx
                 .recv()
                 .with_context(|| format!("coordinator shard {shard_id} died during startup"))
                 .and_then(|r| r.map_err(|e| anyhow::anyhow!(e)));
             if let Err(e) = started {
-                // tear the partial pool down: dropping the senders ends
-                // every healthy worker, and Shard::drop joins them
-                drop(shards);
+                // tear the partial pool down: wake every healthy worker
+                // and join it before reporting the startup failure
+                for shard in &shards {
+                    let _ = rlock(&shard.tx).send(Msg::Shutdown);
+                }
+                for shard in &shards {
+                    if let Some(h) = lock(&shard.worker).take() {
+                        let _ = h.join();
+                    }
+                }
                 return Err(e);
             }
         }
 
-        Ok(Coordinator {
+        let pool = Arc::new(Pool {
             shards,
+            restarts: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let respawner = Respawner {
+            factory,
+            policy,
+            cost,
+            registry: registry.clone(),
+            faults: faults.clone(),
+        };
+        let supervisor_pool = Arc::clone(&pool);
+        let supervisor = std::thread::Builder::new()
+            .name("pasm-coord-supervisor".to_string())
+            .spawn(move || supervise(supervisor_pool, respawner))
+            .context("spawn coordinator supervisor")?;
+
+        Ok(Coordinator {
+            pool,
+            supervisor: Some(supervisor),
             next_id: AtomicU64::new(1),
             registry,
             default_model,
+            faults,
         })
     }
 }
 
-/// One shard of the pool: its request channel, worker thread, and
-/// shard-local metrics.
-struct Shard {
-    tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+/// Rebuilds a shard's execution backend for a respawn.
+type BackendFactory = Box<dyn Fn() -> Result<Box<dyn ExecutionBackend>> + Send>;
+
+/// One shard of the pool: its request channel (swapped on respawn, hence
+/// the `RwLock` — submissions take the read side), worker thread, and
+/// shard-local metrics.  The metrics `Arc` survives respawns, so a
+/// restarted shard keeps its counters.
+struct ShardState {
+    tx: RwLock<mpsc::Sender<Msg>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
     metrics: Arc<Mutex<Metrics>>,
 }
 
-impl Drop for Shard {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+/// The shard pool shared between the [`Coordinator`] handle and the
+/// supervisor thread.
+struct Pool {
+    shards: Vec<ShardState>,
+    restarts: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// Everything the supervisor needs to rebuild a dead shard.
+struct Respawner {
+    factory: Option<BackendFactory>,
+    policy: BatchPolicy,
+    cost: CostModel,
+    registry: Option<Arc<ModelRegistry>>,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+/// Spawn one shard worker; the returned ready channel reports whether its
+/// engine compiled (build() waits on all shards in parallel, the
+/// supervisor on one).
+fn spawn_shard(
+    shard_id: usize,
+    backend: Box<dyn ExecutionBackend>,
+    policy: &BatchPolicy,
+    cost: &CostModel,
+    registry: Option<Arc<ModelRegistry>>,
+    metrics: Arc<Mutex<Metrics>>,
+    faults: Option<Arc<FaultPlan>>,
+) -> Result<(mpsc::Sender<Msg>, JoinHandle<()>, mpsc::Receiver<Result<(), String>>)> {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    let buckets = policy.buckets.clone();
+    let policy_worker = policy.clone();
+    let cost = *cost;
+    let worker = std::thread::Builder::new()
+        .name(format!("pasm-coord-{shard_id}"))
+        .spawn(move || {
+            let engine = match Engine::new(backend, &buckets, &cost, registry) {
+                Ok(e) => {
+                    // label the metrics before signalling ready so
+                    // build() never returns with an empty backend name
+                    lock(&metrics).record_backend(e.backend_name());
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            worker_loop(engine, policy_worker, rx, metrics, shard_id, faults);
+        })
+        .with_context(|| format!("spawn coordinator shard {shard_id}"))?;
+    Ok((tx, worker, ready_rx))
+}
+
+/// The supervisor loop: sweep for dead shard workers and respawn them.
+///
+/// A shard whose respawn fails (factory error, engine compile error) is
+/// left dead and retried on the next sweep — a transiently torn default
+/// artifact heals once the registry recovers.
+fn supervise(pool: Arc<Pool>, respawner: Respawner) {
+    while !pool.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(SUPERVISOR_SWEEP);
+        for (shard_id, shard) in pool.shards.iter().enumerate() {
+            if pool.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let dead = lock(&shard.worker).as_ref().is_none_or(JoinHandle::is_finished);
+            if !dead {
+                continue;
+            }
+            // join the corpse; its queues and channel already dropped,
+            // so every stranded Completion has delivered WORKER_DIED
+            if let Some(h) = lock(&shard.worker).take() {
+                let _ = h.join();
+            }
+            let Some(factory) = &respawner.factory else {
+                continue;
+            };
+            let respawned = factory().and_then(|backend| {
+                spawn_shard(
+                    shard_id,
+                    backend,
+                    &respawner.policy,
+                    &respawner.cost,
+                    respawner.registry.clone(),
+                    Arc::clone(&shard.metrics),
+                    respawner.faults.clone(),
+                )
+            });
+            let Ok((tx, worker, ready_rx)) = respawned else {
+                continue;
+            };
+            match ready_rx.recv() {
+                Ok(Ok(())) => {
+                    *wlock(&shard.tx) = tx;
+                    *lock(&shard.worker) = Some(worker);
+                    pool.restarts.fetch_add(1, Ordering::Relaxed);
+                }
+                // compile failed: reap the stillborn worker, retry later
+                _ => {
+                    let _ = worker.join();
+                }
+            }
         }
     }
 }
 
 /// Handle to a running coordinator pool.
 pub struct Coordinator {
-    shards: Vec<Shard>,
+    pool: Arc<Pool>,
+    supervisor: Option<JoinHandle<()>>,
     next_id: AtomicU64,
     registry: Option<Arc<ModelRegistry>>,
     default_model: Option<Arc<str>>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Coordinator {
@@ -414,7 +663,7 @@ impl Coordinator {
         &self,
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
-        self.submit_routed(image, self.default_model.clone())
+        self.submit_routed(image, self.default_model.clone(), None)
     }
 
     /// Submit one image to a named registry model.
@@ -423,16 +672,34 @@ impl Coordinator {
         model: &str,
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
-        self.submit_routed(image, Some(Arc::from(model)))
+        self.submit_routed(image, Some(Arc::from(model)), None)
+    }
+
+    /// Submit with an optional model *and* an optional absolute deadline;
+    /// returns a receiver for the response.  A request whose deadline
+    /// expires before its batch launches is answered with a typed
+    /// `deadline exceeded` error and counted as a deadline miss.
+    pub fn submit_deadline(
+        &self,
+        model: Option<&str>,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        let model = match model {
+            Some(m) => Some(Arc::from(m)),
+            None => self.default_model.clone(),
+        };
+        self.submit_routed(image, model, deadline)
     }
 
     fn submit_routed(
         &self,
         image: Tensor<f32>,
         model: Option<Arc<str>>,
+        deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit_completion(image, model, Completion::Channel(rtx))?;
+        self.submit_completion(image, model, deadline, Completion::channel(rtx))?;
         Ok(rrx)
     }
 
@@ -448,27 +715,54 @@ impl Coordinator {
     where
         F: FnOnce(Result<InferenceResponse, String>) + Send + 'static,
     {
+        self.submit_with_deadline(model, image, None, on_done)
+    }
+
+    /// [`Coordinator::submit_with`] plus an optional absolute deadline.
+    pub fn submit_with_deadline<F>(
+        &self,
+        model: Option<&str>,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+        on_done: F,
+    ) -> Result<()>
+    where
+        F: FnOnce(Result<InferenceResponse, String>) + Send + 'static,
+    {
         let model = match model {
             Some(m) => Some(Arc::from(m)),
             None => self.default_model.clone(),
         };
-        self.submit_completion(image, model, Completion::Callback(Box::new(on_done)))
+        self.submit_completion(image, model, deadline, Completion::callback(Box::new(on_done)))
     }
 
     fn submit_completion(
         &self,
         image: Tensor<f32>,
         model: Option<Arc<str>>,
+        deadline: Option<Instant>,
         completion: Completion,
     ) -> Result<()> {
         let shard = self.shard_for(model.as_deref());
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = InferenceRequest::new(id, image);
         req.model = model;
-        self.shards[shard]
-            .tx
-            .send(Msg::Request(req, completion))
-            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))
+        req.deadline = deadline;
+        // clone the sender out of the read lock so a respawn (write
+        // lock) never waits on a blocking channel send
+        let tx = rlock(&self.pool.shards[shard].tx).clone();
+        tx.send(Msg::Request(req, completion)).map_err(|e| {
+            // hand the completion back undelivered: the submitter gets
+            // the error through this Result, not through the callback too
+            if let Msg::Request(_, c) = e.0 {
+                c.disarm();
+            }
+            if self.pool.shutdown.load(Ordering::SeqCst) {
+                anyhow::anyhow!("coordinator is shut down")
+            } else {
+                anyhow::anyhow!("shard {shard} unavailable (worker died; respawn pending)")
+            }
+        })
     }
 
     /// Submit to the default model and block for the answer (convenience).
@@ -492,6 +786,12 @@ impl Coordinator {
         self.registry.as_ref()
     }
 
+    /// The fault-injection plan attached at build time, if any (the
+    /// serving front-ends consult it for socket resets).
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
+    }
+
     /// The model unnamed requests route to (`None` = the backend's
     /// built-in model).
     pub fn default_model(&self) -> Option<&str> {
@@ -500,7 +800,12 @@ impl Coordinator {
 
     /// Number of shards in the pool.
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.pool.shards.len()
+    }
+
+    /// How many dead shard workers the supervisor has respawned.
+    pub fn shard_restarts(&self) -> u64 {
+        self.pool.restarts.load(Ordering::Relaxed)
     }
 
     /// Which shard requests for `model` route to (`None` = unnamed
@@ -509,7 +814,7 @@ impl Coordinator {
     /// the answer never changes for the lifetime of the pool.
     pub fn shard_for(&self, model: Option<&str>) -> usize {
         let key = model.or(self.default_model.as_deref()).unwrap_or("");
-        (route_hash(key) % self.shards.len() as u64) as usize
+        (route_hash(key) % self.pool.shards.len() as u64) as usize
     }
 
     /// Merged snapshot of the serving metrics across all shards.
@@ -536,22 +841,32 @@ impl Coordinator {
 
     /// Per-shard metrics snapshots, indexed by shard id.
     pub fn shard_metrics(&self) -> Vec<Metrics> {
-        self.shards.iter().map(|s| s.metrics.lock().unwrap().clone()).collect()
+        self.pool.shards.iter().map(|s| lock(&s.metrics).clone()).collect()
     }
 
     /// Compact per-shard counters, indexed by shard id (what the
     /// `metrics` wire frame reports next to the merged aggregate).
     pub fn shard_counters(&self) -> Vec<ShardCounters> {
-        self.shards.iter().map(|s| s.metrics.lock().unwrap().counters()).collect()
+        self.pool.shards.iter().map(|s| lock(&s.metrics).counters()).collect()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        // wake every shard first so they drain in parallel; Shard::drop
-        // then joins each worker (its Shutdown re-send is a no-op)
-        for shard in &self.shards {
-            let _ = shard.tx.send(Msg::Shutdown);
+        // Ordering matters: stop the supervisor *first*, so a worker we
+        // are about to shut down is not respawned behind our back; only
+        // then wake every shard (they drain in parallel) and join them.
+        self.pool.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        for shard in &self.pool.shards {
+            let _ = rlock(&shard.tx).send(Msg::Shutdown);
+        }
+        for shard in &self.pool.shards {
+            if let Some(h) = lock(&shard.worker).take() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -563,12 +878,38 @@ fn push(queues: &mut ModelQueues, r: InferenceRequest, done: Completion) {
     queues.entry(r.model.clone()).or_default().push_back((r, done));
 }
 
+/// Drop every queued request whose deadline has passed, answering each
+/// with a typed error and counting it as a deadline miss.  Runs on every
+/// worker iteration, *before* the launch decision — an expired request
+/// never costs a batch slot.
+fn purge_expired(queues: &mut ModelQueues, metrics: &Mutex<Metrics>, now: Instant) {
+    for (model, q) in queues.iter_mut() {
+        if !q.iter().any(|(r, _)| r.expired_at(now)) {
+            continue;
+        }
+        let label: &str = model.as_deref().unwrap_or(DEFAULT_MODEL_LABEL);
+        let mut kept = VecDeque::with_capacity(q.len());
+        for (r, done) in q.drain(..) {
+            if r.expired_at(now) {
+                lock(metrics).record_deadline_miss(label);
+                let queued = now.duration_since(r.enqueued_at);
+                let msg = format!("deadline exceeded before batch launch (queued {queued:?})");
+                done.deliver(Err(msg));
+            } else {
+                kept.push_back((r, done));
+            }
+        }
+        *q = kept;
+    }
+}
+
 fn worker_loop(
     mut engine: Engine,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
     shard_id: usize,
+    faults: Option<Arc<FaultPlan>>,
 ) {
     // one queue per model: a launched batch never mixes models, and the
     // policy's wait budget applies to each model's oldest request
@@ -603,6 +944,7 @@ fn worker_loop(
             }
         }
 
+        purge_expired(&mut queues, &metrics, Instant::now());
         queues.retain(|_, q| !q.is_empty());
         if queues.is_empty() {
             if shutting_down {
@@ -638,6 +980,20 @@ fn worker_loop(
             continue;
         };
 
+        // injected faults, decided per launched batch so the storm scales
+        // with traffic (all inert without a plan)
+        if let Some(plan) = &faults {
+            if plan.should(FaultSite::WorkerKill) {
+                // die silently with queues still held: the completion
+                // drop-guards answer every stranded request with a typed
+                // error, and the supervisor respawns this shard
+                return;
+            }
+            if let Some(extra) = plan.injected_latency() {
+                std::thread::sleep(extra);
+            }
+        }
+
         // 3) launch
         let queue = queues.get_mut(&model).expect("launch model has a queue");
         let take = bucket.min(queue.len());
@@ -651,17 +1007,25 @@ fn worker_loop(
         // extreme input): the batch fails, the worker keeps serving.  The
         // engine's only cross-batch mutable state is a staging buffer that
         // every batch fully overwrites, so resuming is sound.
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            engine.run_batch(&requests, bucket)
-        }))
-        .unwrap_or_else(|p| {
-            let msg = p
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| p.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "kernel panicked".to_string());
-            Err(anyhow::anyhow!("execution panicked: {msg}"))
-        });
+        let injected_err = faults.as_ref().is_some_and(|p| p.should(FaultSite::ExecError));
+        let result = if injected_err {
+            Err(anyhow::anyhow!("injected fault: execution error"))
+        } else {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if faults.as_ref().is_some_and(|p| p.should(FaultSite::BatchPanic)) {
+                    panic!("injected fault: kernel panic");
+                }
+                engine.run_batch(&requests, bucket)
+            }))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "kernel panicked".to_string());
+                Err(anyhow::anyhow!("execution panicked: {msg}"))
+            })
+        };
         match result {
             Ok(mut responses) => {
                 for resp in &mut responses {
@@ -670,7 +1034,7 @@ fn worker_loop(
                 }
                 // one uncontended shard-local lock per batch, never a
                 // global one: snapshot readers merge across shards
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock(&metrics);
                 m.record_batch(label, requests.len(), bucket);
                 if let Some(first) = responses.first() {
                     m.record_hw(first.hw.cycles, first.hw.energy_j);
@@ -684,7 +1048,7 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                metrics.lock().unwrap().record_failed_batch(label);
+                lock(&metrics).record_failed_batch(label);
                 let msg = format!("batch failed after {:?}: {e:#}", started.elapsed());
                 for (_, done) in batch {
                     done.deliver(Err(msg.clone()));
@@ -697,6 +1061,9 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cnn::data::{render_digit, Rng};
+    use crate::cnn::network::{DigitsCnn, EncodedCnn};
+    use crate::quant::fixed::QFormat;
 
     #[test]
     fn route_hash_is_the_pinned_fnv1a() {
@@ -713,5 +1080,84 @@ mod tests {
         assert_eq!(route_hash("digits-v1") % 4, 3);
         assert_eq!(route_hash("digits-v2") % 4, 2);
         assert_eq!(route_hash("digits-v3") % 4, 1);
+    }
+
+    fn encoded(seed: u64, bins: usize) -> EncodedCnn {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(seed);
+        let params = arch.init(&mut rng);
+        EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+    }
+
+    #[test]
+    fn expired_requests_get_a_typed_error_and_count_as_misses() {
+        let coord = CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(1, 4)))
+            .batch_policy(BatchPolicy::new(vec![4], Duration::from_millis(200)))
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(2);
+        // already expired on arrival: the purge must answer it without
+        // ever launching a batch
+        let rx = coord
+            .submit_deadline(None, render_digit(&mut rng, 3, 0.05), Some(Instant::now()))
+            .unwrap();
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.contains("deadline exceeded"), "got: {err}");
+        let m = coord.metrics();
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.batches, 0, "an expired request must not cost a batch");
+        // a request with headroom still completes normally
+        let resp = coord.infer(render_digit(&mut rng, 5, 0.05)).unwrap();
+        assert_eq!(resp.logits.len(), 10);
+    }
+
+    #[test]
+    fn killed_workers_are_respawned_and_stranded_requests_get_typed_errors() {
+        let coord = CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(1, 4)))
+            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+            .fault_plan(FaultPlan::seeded(3).with(FaultSite::WorkerKill, 1.0))
+            .shards(1)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(2);
+        // every batch launch kills the worker, so the request is answered
+        // by the completion drop-guard, not by execution
+        let err = coord.infer(render_digit(&mut rng, 3, 0.05)).unwrap_err().to_string();
+        assert!(
+            err.contains("worker died") || err.contains("unavailable"),
+            "expected a typed worker-death error, got: {err}"
+        );
+        // the supervisor must notice and respawn (restart count moves)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while coord.shard_restarts() == 0 {
+            assert!(Instant::now() < deadline, "supervisor never respawned the shard");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // submissions that race the dead window surface a typed error,
+        // never a hang: hammer a few and require terminal outcomes
+        for _ in 0..5 {
+            let _ = coord.infer(render_digit(&mut rng, 4, 0.05));
+        }
+    }
+
+    #[test]
+    fn inert_fault_plan_changes_nothing() {
+        let coord = CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(1, 4)))
+            .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+            .fault_plan(FaultPlan::seeded(7))
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(2);
+        for digit in 0..5 {
+            let resp = coord.infer(render_digit(&mut rng, digit, 0.05)).unwrap();
+            assert_eq!(resp.logits.len(), 10);
+        }
+        assert_eq!(coord.shard_restarts(), 0);
+        assert_eq!(coord.metrics().failed_batches, 0);
+        let plan = coord.fault_plan().unwrap();
+        assert_eq!(plan.counters().total(), 0, "an inert plan must never fire");
     }
 }

@@ -1,0 +1,310 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded, probabilistic schedule of failures that
+//! the coordinator, the model registry, and both serving front-ends
+//! consult at well-defined injection points ([`FaultSite`]): batch
+//! execution errors, kernel panics, injected pre-batch latency, shard
+//! worker deaths, torn `.pasm` artifact loads, and server-side socket
+//! resets.  The module is **always compiled in** — there is no cfg flag
+//! to forget in production builds — and a stack with no plan attached
+//! (or a plan whose probabilities are all zero) takes the exact same
+//! code paths with zero injected faults.
+//!
+//! Decisions are **deterministic**: the n-th roll at a given site is a
+//! pure function of `(seed, site, n)`, independent of thread timing, so
+//! a chaos run replays identically for a given request schedule and two
+//! identically seeded plans agree roll for roll.  Every triggered fault
+//! increments a per-site counter ([`FaultPlan::counters`]); a clean run
+//! must end with [`FaultCounters::total`] of zero, which is how the
+//! chaos e2e proves the injection layer is inert when disabled.
+//!
+//! Plans come from code ([`FaultPlan::seeded`] + the `with_*` setters)
+//! or from a compact CLI spec ([`FaultPlan::parse`]), e.g.
+//! `repro serve --chaos seed=7,panic=0.05,reset=0.02`.
+
+use crate::cnn::data::Rng;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// An injection point in the serving stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Batch execution returns an error instead of running the kernel
+    /// (the whole batch fails with a typed `INTERNAL` reply).
+    ExecError,
+    /// The kernel panics inside `run_batch`; the per-batch
+    /// `catch_unwind` in the shard worker must contain it.
+    BatchPanic,
+    /// Extra latency is injected before a batch launches (drives
+    /// deadline misses under load).
+    Latency,
+    /// The shard worker thread dies before serving the selected batch;
+    /// the supervisor must fail the stranded requests and respawn it.
+    WorkerKill,
+    /// A `.pasm` artifact load is reported torn/corrupt; the registry
+    /// must keep the previous version serving.
+    TornLoad,
+    /// The server drops the connection instead of answering a frame.
+    SocketReset,
+}
+
+const SITES: usize = 6;
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::ExecError => 0,
+            FaultSite::BatchPanic => 1,
+            FaultSite::Latency => 2,
+            FaultSite::WorkerKill => 3,
+            FaultSite::TornLoad => 4,
+            FaultSite::SocketReset => 5,
+        }
+    }
+}
+
+/// Counts of faults actually injected, one per [`FaultSite`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Batches failed with an injected execution error.
+    pub exec_errors: u64,
+    /// Batches failed with an injected kernel panic.
+    pub panics: u64,
+    /// Batches delayed by injected latency.
+    pub latency_injections: u64,
+    /// Shard workers killed.
+    pub worker_kills: u64,
+    /// Artifact loads reported torn.
+    pub torn_loads: u64,
+    /// Connections dropped instead of answered.
+    pub socket_resets: u64,
+}
+
+impl FaultCounters {
+    /// Total faults injected across every site.
+    pub fn total(&self) -> u64 {
+        self.exec_errors
+            + self.panics
+            + self.latency_injections
+            + self.worker_kills
+            + self.torn_loads
+            + self.socket_resets
+    }
+}
+
+/// A seeded, deterministic schedule of injected faults.
+///
+/// Thread-safe: injection points share one plan behind an `Arc` and
+/// roll concurrently; per-site atomic draw counters keep each site's
+/// roll sequence deterministic in aggregate (the set of outcomes over
+/// n draws is fixed; which thread observes which draw is not).
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Trigger probability per site, in `[0, 1]`.
+    probs: [f64; SITES],
+    /// Injected latency amount for [`FaultSite::Latency`] triggers.
+    latency: Duration,
+    /// Draws made per site (deterministic sequence position).
+    draws: [AtomicU64; SITES],
+    /// Faults actually injected per site.
+    hits: [AtomicU64; SITES],
+}
+
+impl FaultPlan {
+    /// An inert plan (all probabilities zero) with the given seed.
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            probs: [0.0; SITES],
+            latency: Duration::from_millis(5),
+            draws: Default::default(),
+            hits: Default::default(),
+        }
+    }
+
+    /// Parse a compact `key=value` spec, e.g.
+    /// `seed=7,panic=0.05,reset=0.02,latency=0.1,latency_ms=5`.
+    ///
+    /// Keys: `seed` (u64, default 1), `exec`, `panic`, `latency`,
+    /// `kill`, `torn`, `reset` (probabilities in `[0, 1]`, default 0),
+    /// and `latency_ms` (injected delay, default 5).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::seeded(1);
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("chaos spec '{part}': expected key=value"))?;
+            let parse_p = || -> Result<f64> {
+                let p: f64 = value
+                    .parse()
+                    .with_context(|| format!("chaos spec '{part}': not a number"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "chaos spec '{part}': probability must be in [0, 1]"
+                );
+                Ok(p)
+            };
+            match key {
+                "seed" => {
+                    plan.seed =
+                        value.parse().with_context(|| format!("chaos spec '{part}': bad seed"))?;
+                }
+                "exec" => plan.probs[FaultSite::ExecError.index()] = parse_p()?,
+                "panic" => plan.probs[FaultSite::BatchPanic.index()] = parse_p()?,
+                "latency" => plan.probs[FaultSite::Latency.index()] = parse_p()?,
+                "kill" => plan.probs[FaultSite::WorkerKill.index()] = parse_p()?,
+                "torn" => plan.probs[FaultSite::TornLoad.index()] = parse_p()?,
+                "reset" => plan.probs[FaultSite::SocketReset.index()] = parse_p()?,
+                "latency_ms" => {
+                    let ms: u64 = value
+                        .parse()
+                        .with_context(|| format!("chaos spec '{part}': bad latency_ms"))?;
+                    plan.latency = Duration::from_millis(ms);
+                }
+                other => anyhow::bail!(
+                    "chaos spec: unknown key '{other}' \
+                     (expected seed, exec, panic, latency, kill, torn, reset, latency_ms)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Set the trigger probability for one site (builder style).
+    pub fn with(mut self, site: FaultSite, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "fault probability must be in [0, 1]");
+        self.probs[site.index()] = p;
+        self
+    }
+
+    /// Set the delay injected on [`FaultSite::Latency`] triggers.
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// The plan's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Roll the dice at `site`: `true` means inject the fault (and the
+    /// site's hit counter was incremented).  The n-th call for a site
+    /// returns a fixed answer for a given seed.
+    pub fn should(&self, site: FaultSite) -> bool {
+        let i = site.index();
+        let p = self.probs[i];
+        if p <= 0.0 {
+            return false;
+        }
+        let n = self.draws[i].fetch_add(1, Ordering::Relaxed);
+        // decorrelate (seed, site, n) into an independent stream: a few
+        // xorshift* steps over a splitmix-style mix of the inputs
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ (i as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9)
+                ^ n.wrapping_mul(0x94d0_49bb_1331_11eb),
+        );
+        rng.next_u64();
+        let hit = f64::from(rng.uniform()) < p;
+        if hit {
+            self.hits[i].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Roll [`FaultSite::Latency`]; `Some(delay)` means sleep that long
+    /// before launching the batch.
+    pub fn injected_latency(&self) -> Option<Duration> {
+        self.should(FaultSite::Latency).then_some(self.latency)
+    }
+
+    /// Snapshot of every site's injected-fault count.
+    pub fn counters(&self) -> FaultCounters {
+        let h = |s: FaultSite| self.hits[s.index()].load(Ordering::Relaxed);
+        FaultCounters {
+            exec_errors: h(FaultSite::ExecError),
+            panics: h(FaultSite::BatchPanic),
+            latency_injections: h(FaultSite::Latency),
+            worker_kills: h(FaultSite::WorkerKill),
+            torn_loads: h(FaultSite::TornLoad),
+            socket_resets: h(FaultSite::SocketReset),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_cli_spec() {
+        let plan = FaultPlan::parse("seed=7,panic=0.05,reset=0.02,latency_ms=9").unwrap();
+        assert_eq!(plan.seed(), 7);
+        assert_eq!(plan.probs[FaultSite::BatchPanic.index()], 0.05);
+        assert_eq!(plan.probs[FaultSite::SocketReset.index()], 0.02);
+        assert_eq!(plan.latency, Duration::from_millis(9));
+        assert_eq!(plan.probs[FaultSite::ExecError.index()], 0.0);
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("panic=1.5").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+    }
+
+    #[test]
+    fn empty_spec_and_zero_probabilities_are_inert() {
+        let plan = FaultPlan::parse("").unwrap();
+        for site in [
+            FaultSite::ExecError,
+            FaultSite::BatchPanic,
+            FaultSite::Latency,
+            FaultSite::WorkerKill,
+            FaultSite::TornLoad,
+            FaultSite::SocketReset,
+        ] {
+            for _ in 0..100 {
+                assert!(!plan.should(site));
+            }
+        }
+        assert_eq!(plan.counters().total(), 0);
+        assert_eq!(plan.injected_latency(), None);
+    }
+
+    #[test]
+    fn rolls_are_deterministic_per_seed_and_site() {
+        let a = FaultPlan::seeded(42).with(FaultSite::BatchPanic, 0.3);
+        let b = FaultPlan::seeded(42).with(FaultSite::BatchPanic, 0.3);
+        let seq_a: Vec<bool> = (0..200).map(|_| a.should(FaultSite::BatchPanic)).collect();
+        let seq_b: Vec<bool> = (0..200).map(|_| b.should(FaultSite::BatchPanic)).collect();
+        assert_eq!(seq_a, seq_b, "same seed must produce the same roll sequence");
+        let hits = seq_a.iter().filter(|&&h| h).count() as u64;
+        assert!(hits > 0, "p=0.3 over 200 rolls must trigger");
+        assert_eq!(a.counters().panics, hits);
+        assert_eq!(a.counters().total(), hits);
+
+        let c = FaultPlan::seeded(43).with(FaultSite::BatchPanic, 0.3);
+        let seq_c: Vec<bool> = (0..200).map(|_| c.should(FaultSite::BatchPanic)).collect();
+        assert_ne!(seq_a, seq_c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let plan = FaultPlan::seeded(5)
+            .with(FaultSite::ExecError, 0.5)
+            .with(FaultSite::SocketReset, 0.5);
+        let a: Vec<bool> = (0..64).map(|_| plan.should(FaultSite::ExecError)).collect();
+        let b: Vec<bool> = (0..64).map(|_| plan.should(FaultSite::SocketReset)).collect();
+        assert_ne!(a, b, "two sites at the same seed must not share a stream");
+    }
+
+    #[test]
+    fn hit_rate_tracks_the_probability() {
+        let plan = FaultPlan::seeded(11).with(FaultSite::TornLoad, 0.2);
+        let n = 5000;
+        let hits = (0..n).filter(|_| plan.should(FaultSite::TornLoad)).count();
+        let rate = hits as f64 / f64::from(n);
+        assert!((rate - 0.2).abs() < 0.03, "rate {rate} too far from 0.2");
+    }
+}

@@ -52,7 +52,13 @@
 //! * [`serving`] — the network front-end: a length-prefixed JSON wire
 //!   protocol ([`serving::proto`], spec in `docs/WIRE_PROTOCOL.md`), a
 //!   thread-per-connection TCP server with admission control
-//!   ([`serving::net`]), and a blocking client ([`serving::client`]).
+//!   ([`serving::net`]), and a blocking client ([`serving::client`])
+//!   with bounded, seeded-jitter retries.
+//! * [`faults`] — deterministic fault injection ([`faults::FaultPlan`]):
+//!   seeded schedules of batch panics, execution errors, injected
+//!   latency, shard-worker kills, torn artifact loads, and socket
+//!   resets, always compiled in and inert when unset — the harness the
+//!   chaos e2e uses to prove the failure paths.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 //!
@@ -65,6 +71,7 @@
 pub mod accel;
 pub mod cnn;
 pub mod coordinator;
+pub mod faults;
 pub mod fpga;
 pub mod hw;
 pub mod model_store;

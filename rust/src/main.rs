@@ -10,9 +10,11 @@
 //!             [--poll-ms M] [--pack-midrun NAME=BINS] [--shards N]
 //! repro serve --listen ADDR [--evented] [--models <dir>] [--fixed] [--max-conns N]
 //!             [--max-inflight N] [--port-file PATH] [--for-s SECS] [--shards N]
+//!             [--chaos seed=7,panic=0.05,reset=0.02]
 //! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
 //!             [--models a,b,c] [--expect-multi-shard]
 //!             [--pipeline-depth D] [--idle-conns N]
+//!             [--retries R] [--retry-seed S] [--deadline-ms MS] [--expect-faults]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -25,7 +27,9 @@ use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
 use pasm_accel::cnn::conv::FxConvInputs;
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::loadgen::NetLoadOptions;
 use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder, NativeBackend, NativePrecision};
+use pasm_accel::faults::FaultPlan;
 use pasm_accel::hw::Tech;
 use pasm_accel::model_store::{self, ModelRegistry};
 use pasm_accel::quant::codebook::encode_weights;
@@ -34,7 +38,7 @@ use pasm_accel::report::{all_report_ids, run_report};
 use pasm_accel::serving::net::write_port_file;
 #[cfg(unix)]
 use pasm_accel::serving::{EventedConfig, EventedServer};
-use pasm_accel::serving::{NetCounters, Server, ServerConfig};
+use pasm_accel::serving::{NetCounters, RetryPolicy, Server, ServerConfig};
 use pasm_accel::sim::simulate_conv;
 use pasm_accel::tensor::Tensor;
 use std::collections::{BTreeMap, HashMap};
@@ -89,9 +93,11 @@ const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|sweep|lis
   serve --listen 127.0.0.1:7878 [--evented] [--workers N] [--max-pipeline 32]
         [--models <dir>] [--fixed] [--max-conns 64] [--max-inflight 256]
         [--port-file PATH] [--for-s SECS] [--shards N]
+        [--chaos seed=7,panic=0.05,reset=0.02]
   bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
         [--models digits-b8,digits-b16] [--expect-multi-shard]
         [--pipeline-depth 32] [--idle-conns 5000]
+        [--retries 3] [--retry-seed 29] [--deadline-ms 250] [--expect-faults]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -135,6 +141,20 @@ fn apply_shards(
             anyhow::ensure!(n >= 1, "--shards must be >= 1");
             Ok(builder.shards(n))
         }
+        None => Ok(builder),
+    }
+}
+
+/// Apply `--chaos SPEC` (a seeded deterministic fault-injection plan,
+/// e.g. `seed=7,panic=0.05,reset=0.02`) to a coordinator builder.
+/// Absent, the server runs with no plan at all — the injection hooks
+/// are compiled in but inert.
+fn apply_chaos(
+    builder: CoordinatorBuilder,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<CoordinatorBuilder> {
+    match flags.get("chaos") {
+        Some(spec) => Ok(builder.fault_plan(FaultPlan::parse(spec)?)),
         None => Ok(builder),
     }
 }
@@ -275,7 +295,7 @@ fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Resul
         .registry(Arc::clone(&registry))
         .default_model(&default_name)
         .batch_policy(BatchPolicy::default());
-    let coord = apply_shards(builder, flags)?.build()?;
+    let coord = apply_chaos(apply_shards(builder, flags)?, flags)?.build()?;
     let mut expected = registry.names();
     // every model (including a --pack-midrun addition) must be reachable
     // in both the pre- and post-swap halves of the round-robin
@@ -492,7 +512,7 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
         }
         builder.backend(backend)
     };
-    let coord = Arc::new(apply_shards(builder, flags)?.build()?);
+    let coord = Arc::new(apply_chaos(apply_shards(builder, flags)?, flags)?.build()?);
 
     let mut server = if flags.contains_key("evented") {
         bind_evented(addr, &coord, flags)?
@@ -528,13 +548,33 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
                 net.overload_rejections
             );
             println!(
-                "coordinator: {} request(s) in {} batch(es), backend '{}'",
-                m.requests, m.batches, m.backend
+                "coordinator: {} request(s) in {} batch(es), backend '{}', \
+                 {} deadline miss(es), {} shard restart(s)",
+                m.requests,
+                m.batches,
+                m.backend,
+                m.deadline_misses,
+                coord.shard_restarts()
             );
             for (i, s) in coord.shard_counters().iter().enumerate() {
                 println!(
                     "  shard {i}: {} request(s) in {} batch(es) ({} failed)",
                     s.requests, s.batches, s.failed_batches
+                );
+            }
+            if let Some(plan) = coord.fault_plan() {
+                let f = plan.counters();
+                println!(
+                    "chaos (seed {}): {} injected fault(s) — {} exec, {} panic, {} latency, \
+                     {} kill, {} torn, {} reset",
+                    plan.seed(),
+                    f.total(),
+                    f.exec_errors,
+                    f.panics,
+                    f.latency_injections,
+                    f.worker_kills,
+                    f.torn_loads,
+                    f.socket_resets
                 );
             }
             server.shutdown();
@@ -558,6 +598,13 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
 /// D on the same socket) and fails if either leg errors.
 /// `--idle-conns N` is a standalone smoke instead: hold N open idle
 /// sockets against the server and require it to keep answering.
+///
+/// `--retries R` arms client-side retries (R attempts beyond the
+/// first, seeded jitter from `--retry-seed`); `--deadline-ms MS`
+/// attaches a relative deadline to every request.  `--expect-faults`
+/// is the chaos-smoke mode: hard errors are tolerated (the server is
+/// injecting them on purpose), but every request must still reach a
+/// terminal reply and at least one must succeed.
 fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = flags
         .get("addr")
@@ -569,6 +616,10 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let n: usize = flag(flags, "requests", 256);
     let rate: f64 = flag(flags, "rate", 500.0);
     let conns: usize = flag(flags, "conns", 8);
+    let retries: u32 = flag(flags, "retries", 0);
+    let retry_seed: u64 = flag(flags, "retry-seed", 29);
+    let deadline_ms: Option<u64> = flags.get("deadline-ms").and_then(|v| v.parse().ok());
+    let expect_faults = flags.contains_key("expect-faults");
     let models: Vec<Option<String>> = flags
         .get("models")
         .map(|spec| spec.split(',').map(|s| Some(s.trim().to_string())).collect())
@@ -576,29 +627,59 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
     let mut rng = Rng::new(29);
     let pool: Vec<Tensor<f32>> = (0..64).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect();
+    let opts = NetLoadOptions {
+        connections: conns,
+        retry: RetryPolicy::standard(retries + 1, retry_seed),
+        deadline_ms,
+        ..NetLoadOptions::default()
+    };
     let r = pasm_accel::coordinator::loadgen::run_open_loop_net(
-        addr, &models, &pool, n, rate, conns, &mut rng,
+        addr, &models, &pool, n, rate, opts, &mut rng,
     )?;
     println!(
         "net bench against {addr}: offered {:.1} req/s, achieved {:.1} req/s over {conns} conn(s)",
         r.offered_hz, r.achieved_hz
     );
     println!(
-        "completed {}: p50 {} us, p90 {} us, p99 {} us ({} overloaded, {} errors)",
+        "completed {}: p50 {} us, p90 {} us, p99 {} us \
+         ({} overloaded, {} errors, {} deadline miss(es), {} retries)",
         r.latencies_us.len(),
         r.percentile_us(50.0),
         r.percentile_us(90.0),
         r.percentile_us(99.0),
         r.overloaded,
-        r.errors
+        r.errors,
+        r.deadline_misses,
+        r.retries
     );
-    anyhow::ensure!(r.errors == 0, "{} request(s) failed", r.errors);
+    // every request must reach a terminal outcome either way; without
+    // --expect-faults a hard error also fails the run outright
+    let answered = r.latencies_us.len() + r.errors + r.overloaded + r.deadline_misses;
+    anyhow::ensure!(answered == n, "{} of {n} request(s) never got a terminal reply", n - answered);
+    if !expect_faults {
+        anyhow::ensure!(r.errors == 0, "{} request(s) failed", r.errors);
+    }
     anyhow::ensure!(!r.latencies_us.is_empty(), "no request completed");
 
-    // shard utilization, straight from the server's metrics frame
-    let mut client = pasm_accel::serving::Client::connect(addr.as_str())
-        .map_err(|e| anyhow::anyhow!("connect for metrics: {e}"))?;
-    let m = client.metrics().map_err(|e| anyhow::anyhow!("fetch metrics: {e}"))?;
+    // shard utilization, straight from the server's metrics frame.  With
+    // --expect-faults a chaos plan may reset this very connection before
+    // the reply flushes, so the fetch gets a few fresh-connection tries.
+    let attempts = if expect_faults { 5 } else { 1 };
+    let mut fetched = None;
+    let mut last_err = anyhow::anyhow!("metrics fetch never attempted");
+    for _ in 0..attempts {
+        match pasm_accel::serving::Client::connect(addr.as_str()) {
+            Ok(mut client) => match client.metrics() {
+                Ok(frame) => {
+                    fetched = Some(frame);
+                    break;
+                }
+                Err(e) => last_err = anyhow::anyhow!("fetch metrics: {e}"),
+            },
+            Err(e) => last_err = anyhow::anyhow!("connect for metrics: {e}"),
+        }
+    }
+    let Some(m) = fetched else { return Err(last_err) };
     let active = m.shards.iter().filter(|s| s.batches > 0).count();
     println!("server shards: {} total, {active} served batches", m.shards.len());
     for (i, s) in m.shards.iter().enumerate() {
@@ -733,7 +814,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "pjrt" => anyhow::bail!("pjrt backend not compiled in (build with --features pjrt)"),
         other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
     };
-    let coord = apply_shards(builder, flags)?.build()?;
+    let coord = apply_chaos(apply_shards(builder, flags)?, flags)?.build()?;
     println!("serving on '{}' backend ({} shard(s))", coord.metrics().backend, coord.shards());
 
     let t0 = std::time::Instant::now();

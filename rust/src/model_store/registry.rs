@@ -22,6 +22,7 @@
 
 use crate::cnn::network::EncodedCnn;
 use crate::cnn::plan::CompiledCnn;
+use crate::faults::{FaultPlan, FaultSite};
 use crate::model_store::format;
 use crate::quant::fixed::QFormat;
 use anyhow::{Context, Result};
@@ -118,6 +119,7 @@ pub struct ModelRegistry {
     snapshot: Mutex<Arc<Snapshot>>,
     generation: AtomicU64,
     stop: AtomicBool,
+    faults: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl ModelRegistry {
@@ -199,7 +201,7 @@ impl ModelRegistry {
     pub fn load_file(&self, path: &Path) -> Result<String> {
         let name = artifact_name(path)
             .with_context(|| format!("{} has no usable file stem", path.display()))?;
-        let enc = format::load_file(path)?;
+        let enc = self.load_artifact(path)?;
         let meta = std::fs::metadata(path)
             .with_context(|| format!("stat artifact {}", path.display()))?;
         let source = SourceMeta {
@@ -274,7 +276,7 @@ impl ModelRegistry {
                     }
                 }
             }
-            match format::load_file(&meta.path) {
+            match self.load_artifact(&meta.path) {
                 Ok(enc) => {
                     let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
                     if current.contains_key(&name) {
@@ -329,6 +331,32 @@ impl ModelRegistry {
     /// Ask any watcher threads to exit at their next poll tick.
     pub fn stop_watching(&self) {
         self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Attach a deterministic fault-injection plan (see [`crate::faults`]):
+    /// artifact loads roll the [`FaultSite::TornLoad`] stream and fail with
+    /// a typed error when it fires, exercising the keep-previous-version
+    /// path without writing garbage to disk.
+    /// [`crate::coordinator::CoordinatorBuilder::fault_plan`] calls this
+    /// automatically for an attached registry.
+    pub fn set_fault_plan(&self, plan: Arc<FaultPlan>) {
+        *self.faults.lock().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+    }
+
+    /// Load an artifact through the fault plan, if one is attached: a
+    /// TornLoad hit replaces the result with a typed error, feeding the
+    /// same error path a half-copied artifact would.
+    fn load_artifact(&self, path: &Path) -> Result<EncodedCnn> {
+        let torn = self
+            .faults
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .is_some_and(|p| p.should(FaultSite::TornLoad));
+        if torn {
+            anyhow::bail!("injected fault: torn artifact load of {}", path.display());
+        }
+        format::load_file(path)
     }
 }
 
@@ -440,6 +468,26 @@ mod tests {
         std::fs::write(dir.join("m.pasm"), b"garbage, not an artifact").unwrap();
         let r = reg.sync_dir(&dir).unwrap();
         assert_eq!(r.errors.len(), 1, "{r:?}");
+        let kept = reg.get("m").expect("previous version must keep serving");
+        assert!(Arc::ptr_eq(&old, &kept));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_torn_loads_keep_the_previous_version() {
+        let dir = tmpdir("torn");
+        let reg = ModelRegistry::new();
+        format::save_file(&dir.join("m.pasm"), &encoded(10, 8)).unwrap();
+        reg.sync_dir(&dir).unwrap();
+        let old = reg.get("m").unwrap();
+
+        reg.set_fault_plan(Arc::new(FaultPlan::seeded(5).with(FaultSite::TornLoad, 1.0)));
+        // the rewritten artifact is perfectly valid on disk — only the
+        // injected tear fails it, driving the keep-previous-version path
+        format::save_file(&dir.join("m.pasm"), &encoded(11, 16)).unwrap();
+        let r = reg.sync_dir(&dir).unwrap();
+        assert_eq!(r.errors.len(), 1, "{r:?}");
+        assert!(r.errors[0].1.contains("injected fault"), "{r:?}");
         let kept = reg.get("m").expect("previous version must keep serving");
         assert!(Arc::ptr_eq(&old, &kept));
         let _ = std::fs::remove_dir_all(&dir);

@@ -18,13 +18,26 @@
 //! `RESOURCE_EXHAUSTED` is retryable) and transport-level failures
 //! (connection closed, malformed frame), so callers can tell overload
 //! from breakage.
+//!
+//! **Retries.**  Both clients accept a [`RetryPolicy`]: a bounded number
+//! of attempts with exponential backoff and deterministic seeded jitter.
+//! Only connection loss and the protocol's retryable rejections
+//! (`RESOURCE_EXHAUSTED`, `UNAVAILABLE`) are retried — an execution
+//! error or deadline miss is a terminal answer, and resubmitting it
+//! would double-spend compute on a request the server already judged.
+//! The jitter stream is seeded, so a load run's retry schedule replays
+//! exactly under a fixed seed (`tests/retry_backoff.rs` pins this).
 
+use crate::cnn::data::Rng;
 use crate::serving::proto::{
-    self, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame, ReadOutcome,
+    self, ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame,
+    ReadOutcome,
 };
 use crate::tensor::Tensor;
+use std::collections::VecDeque;
 use std::fmt;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 /// Why a client call failed.
 #[derive(Debug)]
@@ -74,13 +87,91 @@ impl ClientError {
             _ => None,
         }
     }
+
+    /// Whether a [`RetryPolicy`] may resubmit after this failure:
+    /// connection loss (the socket died, not the request) and the
+    /// protocol's retryable rejections.  A read *timeout* is not
+    /// retryable — the request may still be in flight, and the caller
+    /// (e.g. the load generator) accounts it as a deadline miss.
+    pub fn retryable(&self) -> bool {
+        match self {
+            ClientError::Closed => true,
+            ClientError::Io(e) => !matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            ),
+            ClientError::Server(e) => e.code.retryable(),
+            ClientError::Protocol(_) => false,
+        }
+    }
+}
+
+/// Bounded exponential backoff with deterministic seeded jitter.
+///
+/// Retry `n` (zero-based) sleeps `min(base * 2^n, cap)` scaled by a
+/// jitter factor in `[0.5, 1.0)` drawn from a seeded
+/// [`crate::cnn::data::Rng`] — decorrelated enough to avoid thundering
+/// herds, deterministic enough that a fixed seed replays the exact
+/// schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (1 = never retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base: Duration,
+    /// Upper bound the exponential doubling saturates at.
+    pub cap: Duration,
+    /// Seed of the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::none()
+    }
+}
+
+impl RetryPolicy {
+    /// No retries: one attempt, failures surface immediately.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+            seed: 1,
+        }
+    }
+
+    /// A sane default for chaos/load runs: up to `attempts` attempts,
+    /// 10 ms base doubling to a 500 ms cap, jitter seeded by `seed`.
+    pub fn standard(attempts: u32, seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: attempts.max(1),
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+            seed,
+        }
+    }
+
+    /// The sleep before zero-based retry `attempt`, drawing jitter from
+    /// `rng` (pass a fresh `Rng::new(policy.seed)` per request stream
+    /// for reproducible schedules).
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let doubled = self.base.saturating_mul(1u32 << attempt.min(16));
+        doubled.min(self.cap).mul_f64(0.5 + 0.5 * f64::from(rng.uniform()))
+    }
 }
 
 /// A blocking connection to a serving front-end.
 pub struct Client {
     stream: TcpStream,
+    addr: SocketAddr,
     next_id: u64,
     max_frame_bytes: usize,
+    read_timeout: Option<Duration>,
+    retry: RetryPolicy,
+    rng: Rng,
+    retries: u64,
 }
 
 impl Client {
@@ -88,7 +179,17 @@ impl Client {
     pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(Client { stream, next_id: 1, max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES })
+        let addr = stream.peer_addr()?;
+        Ok(Client {
+            stream,
+            addr,
+            next_id: 1,
+            max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES,
+            read_timeout: None,
+            retry: RetryPolicy::none(),
+            rng: Rng::new(1),
+            retries: 0,
+        })
     }
 
     /// Raise or lower the reply-size cap (must match the server's to
@@ -97,6 +198,43 @@ impl Client {
     pub fn with_max_frame_bytes(mut self, max: usize) -> Client {
         self.max_frame_bytes = max;
         self
+    }
+
+    /// Retry retryable infer failures under `policy` (reconnecting on
+    /// connection loss).  The jitter stream restarts at `policy.seed`.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Client {
+        self.retry = policy;
+        self.rng = Rng::new(policy.seed);
+        self
+    }
+
+    /// Bound every blocking read; an expiry surfaces as
+    /// [`ClientError::Io`] with `TimedOut`/`WouldBlock`, which retries
+    /// never resubmit (the request may still be in flight server-side).
+    pub fn with_read_timeout(mut self, timeout: Duration) -> std::io::Result<Client> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        self.read_timeout = Some(timeout);
+        Ok(self)
+    }
+
+    /// Retries performed over this client's lifetime.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    fn reconnect(&mut self) -> std::io::Result<()> {
+        let stream = TcpStream::connect(self.addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(self.read_timeout)?;
+        self.stream = stream;
+        Ok(())
+    }
+
+    /// Tear down and rebuild the connection.  After a read timeout the
+    /// stream may hold a late reply for an abandoned request; a reset
+    /// guarantees the next call cannot mis-match it.
+    pub fn reset(&mut self) -> std::io::Result<()> {
+        self.reconnect()
     }
 
     fn roundtrip(&mut self, frame: &Frame) -> Result<Frame, ClientError> {
@@ -109,18 +247,18 @@ impl Client {
         }
     }
 
-    /// Run one `[C, H, W]` image through `model` (`None` = the server's
-    /// default model) and block for the reply.
-    pub fn infer(
+    fn infer_once(
         &mut self,
         model: Option<&str>,
         image: &Tensor<f32>,
+        deadline_ms: Option<u64>,
     ) -> Result<InferOkFrame, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
         let frame = Frame::Infer(InferFrame {
             id,
             model: model.map(str::to_string),
+            deadline_ms,
             dims: image.dims().to_vec(),
             data: image.data().to_vec(),
         });
@@ -134,6 +272,49 @@ impl Client {
                 "expected infer_ok, got '{}'",
                 other.type_str()
             ))),
+        }
+    }
+
+    /// Run one `[C, H, W]` image through `model` (`None` = the server's
+    /// default model) and block for the reply.
+    pub fn infer(
+        &mut self,
+        model: Option<&str>,
+        image: &Tensor<f32>,
+    ) -> Result<InferOkFrame, ClientError> {
+        self.infer_deadline(model, image, None)
+    }
+
+    /// [`Client::infer`] with an optional relative deadline: the server
+    /// answers `DEADLINE_EXCEEDED` instead of computing a reply it can
+    /// no longer deliver in time.
+    ///
+    /// Retryable failures ([`ClientError::retryable`]) are resubmitted
+    /// under the client's [`RetryPolicy`] — as a fresh request id, after
+    /// a reconnect when the connection itself died.
+    pub fn infer_deadline(
+        &mut self,
+        model: Option<&str>,
+        image: &Tensor<f32>,
+        deadline_ms: Option<u64>,
+    ) -> Result<InferOkFrame, ClientError> {
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.infer_once(model, image, deadline_ms) {
+                Ok(ok) => return Ok(ok),
+                Err(e) => e,
+            };
+            if attempt + 1 >= self.retry.max_attempts || !err.retryable() {
+                return Err(err);
+            }
+            self.retries += 1;
+            std::thread::sleep(self.retry.backoff(attempt, &mut self.rng));
+            if matches!(err, ClientError::Io(_) | ClientError::Closed) {
+                // a failed reconnect leaves the dead stream in place; the
+                // next attempt fails fast and consumes the next backoff
+                let _ = self.reconnect();
+            }
+            attempt += 1;
         }
     }
 
@@ -191,12 +372,27 @@ pub struct PipelinedReply {
 /// an `infer` without waiting; [`PipelinedClient::recv`] blocks for the
 /// next reply, whichever request it answers.  The caller matches
 /// replies to requests by [`PipelinedReply::id`].
+///
+/// With a [`RetryPolicy`] attached, a dropped connection is rebuilt
+/// (backoff + re-negotiation) instead of surfacing as a transport
+/// error; the requests that were in flight on the dead socket cannot be
+/// safely resubmitted (the server may have executed them), so each is
+/// handed back as a **typed terminal reply** — an `UNAVAILABLE` error
+/// frame — and the caller decides whether to resubmit.
 pub struct PipelinedClient {
     stream: TcpStream,
+    addr: SocketAddr,
     next_id: u64,
     max_frame_bytes: usize,
     depth: u64,
-    in_flight: usize,
+    /// Ids in flight on the current connection, oldest first.
+    pending: VecDeque<u64>,
+    /// Ids lost to a connection drop, surfaced one per `recv` call as
+    /// synthetic `UNAVAILABLE` replies.
+    lost: VecDeque<u64>,
+    retry: RetryPolicy,
+    rng: Rng,
+    retries: u64,
 }
 
 impl PipelinedClient {
@@ -206,23 +402,43 @@ impl PipelinedClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<PipelinedClient, ClientError> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
+        let addr = stream.peer_addr().map_err(ClientError::Io)?;
         let mut client = PipelinedClient {
             stream,
+            addr,
             next_id: 1,
             max_frame_bytes: proto::DEFAULT_MAX_FRAME_BYTES,
             depth: 1,
-            in_flight: 0,
+            pending: VecDeque::new(),
+            lost: VecDeque::new(),
+            retry: RetryPolicy::none(),
+            rng: Rng::new(1),
+            retries: 0,
         };
-        proto::write_frame(&mut client.stream, &Frame::Hello { pipeline: true })?;
-        match proto::read_frame(&mut client.stream, client.max_frame_bytes)? {
+        client.negotiate()?;
+        Ok(client)
+    }
+
+    /// Rebuild dropped connections under `policy` instead of failing
+    /// `recv`/`submit` with a transport error.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> PipelinedClient {
+        self.retry = policy;
+        self.rng = Rng::new(policy.seed);
+        self
+    }
+
+    /// Send `hello` on the current stream and record the granted depth.
+    fn negotiate(&mut self) -> Result<(), ClientError> {
+        proto::write_frame(&mut self.stream, &Frame::Hello { pipeline: true })?;
+        match proto::read_frame(&mut self.stream, self.max_frame_bytes)? {
             ReadOutcome::Eof => return Err(ClientError::Closed),
             ReadOutcome::Bad(e) => return Err(ClientError::Protocol(e.to_string())),
             ReadOutcome::Frame(Frame::HelloOk { pipeline, depth }) => {
-                client.depth = if pipeline { depth.max(1) } else { 1 };
+                self.depth = if pipeline { depth.max(1) } else { 1 };
             }
             // a pre-negotiation server rejects the hello frame as
             // unknown; fall back to a serial window of one
-            ReadOutcome::Frame(Frame::Error(_)) => client.depth = 1,
+            ReadOutcome::Frame(Frame::Error(_)) => self.depth = 1,
             ReadOutcome::Frame(other) => {
                 return Err(ClientError::Protocol(format!(
                     "expected hello_ok, got '{}'",
@@ -230,7 +446,34 @@ impl PipelinedClient {
                 )));
             }
         }
-        Ok(client)
+        Ok(())
+    }
+
+    /// Declare the current connection dead: every pending id becomes a
+    /// synthetic terminal reply, then reconnect + renegotiate under the
+    /// retry policy (bounded attempts, jittered backoff).
+    fn reconnect(&mut self, err: ClientError) -> Result<(), ClientError> {
+        self.lost.extend(self.pending.drain(..));
+        let mut last = err;
+        for attempt in 0..self.retry.max_attempts.saturating_sub(1) {
+            if !last.retryable() {
+                return Err(last);
+            }
+            self.retries += 1;
+            std::thread::sleep(self.retry.backoff(attempt, &mut self.rng));
+            match TcpStream::connect(self.addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    self.stream = stream;
+                    match self.negotiate() {
+                        Ok(()) => return Ok(()),
+                        Err(e) => last = e,
+                    }
+                }
+                Err(e) => last = ClientError::Io(e),
+            }
+        }
+        Err(last)
     }
 
     /// The window depth the server granted (1 = serial).
@@ -238,9 +481,15 @@ impl PipelinedClient {
         self.depth
     }
 
-    /// Requests submitted and not yet answered.
+    /// Requests submitted and not yet answered (including lost ones not
+    /// yet surfaced by [`PipelinedClient::recv`]).
     pub fn in_flight(&self) -> usize {
-        self.in_flight
+        self.pending.len() + self.lost.len()
+    }
+
+    /// Reconnections performed over this client's lifetime.
+    pub fn retries(&self) -> u64 {
+        self.retries
     }
 
     /// Send one `[C, H, W]` infer without waiting for the reply and
@@ -252,10 +501,23 @@ impl PipelinedClient {
         model: Option<&str>,
         image: &Tensor<f32>,
     ) -> Result<u64, ClientError> {
-        if self.in_flight as u64 >= self.depth {
+        self.submit_deadline(model, image, None)
+    }
+
+    /// [`PipelinedClient::submit`] with an optional relative deadline
+    /// (milliseconds), carried to the server as the frame's
+    /// `deadline_ms` field.
+    pub fn submit_deadline(
+        &mut self,
+        model: Option<&str>,
+        image: &Tensor<f32>,
+        deadline_ms: Option<u64>,
+    ) -> Result<u64, ClientError> {
+        if self.in_flight() as u64 >= self.depth {
             return Err(ClientError::Protocol(format!(
                 "pipeline window full ({} in flight, depth {})",
-                self.in_flight, self.depth
+                self.in_flight(),
+                self.depth
             )));
         }
         let id = self.next_id;
@@ -263,33 +525,68 @@ impl PipelinedClient {
         let frame = Frame::Infer(InferFrame {
             id,
             model: model.map(str::to_string),
+            deadline_ms,
             dims: image.dims().to_vec(),
             data: image.data().to_vec(),
         });
-        proto::write_frame(&mut self.stream, &frame)?;
-        self.in_flight += 1;
+        if let Err(e) = proto::write_frame(&mut self.stream, &frame) {
+            // the write may have been half-sent: treat the connection as
+            // dead and this id as lost, then rebuild under the policy
+            self.pending.push_back(id);
+            self.reconnect(ClientError::Io(e))?;
+            return Ok(id);
+        }
+        self.pending.push_back(id);
         Ok(id)
     }
 
     /// Block for the next reply in the window, whichever request it
     /// answers.  Per-request server errors come back inside the
     /// [`PipelinedReply`] (the window slot is freed either way);
-    /// transport-level failures are the outer `Err`.
+    /// transport-level failures are the outer `Err` — unless a
+    /// [`RetryPolicy`] is attached, in which case the connection is
+    /// rebuilt and the interrupted requests surface as synthetic
+    /// `UNAVAILABLE` replies.
     pub fn recv(&mut self) -> Result<PipelinedReply, ClientError> {
-        if self.in_flight == 0 {
-            return Err(ClientError::Protocol("recv with no requests in flight".into()));
+        loop {
+            if let Some(id) = self.lost.pop_front() {
+                let e = ErrorFrame::new(
+                    Some(id),
+                    ErrorCode::Unavailable,
+                    "connection lost before the reply arrived",
+                );
+                return Ok(PipelinedReply { id, result: Err(e) });
+            }
+            if self.pending.is_empty() {
+                return Err(ClientError::Protocol("recv with no requests in flight".into()));
+            }
+            let err = match self.recv_once() {
+                Ok(reply) => return Ok(reply),
+                Err(e) => e,
+            };
+            if self.retry.max_attempts <= 1
+                || !matches!(err, ClientError::Io(_) | ClientError::Closed)
+                || !err.retryable()
+            {
+                return Err(err);
+            }
+            // the loop surfaces the newly lost ids on its next pass
+            self.reconnect(err)?;
         }
+    }
+
+    fn recv_once(&mut self) -> Result<PipelinedReply, ClientError> {
         match proto::read_frame(&mut self.stream, self.max_frame_bytes)? {
             ReadOutcome::Eof => Err(ClientError::Closed),
             ReadOutcome::Bad(e) => Err(ClientError::Protocol(e.to_string())),
             ReadOutcome::Frame(Frame::InferOk(ok)) => {
-                self.in_flight -= 1;
+                self.pending.retain(|&p| p != ok.id);
                 Ok(PipelinedReply { id: ok.id, result: Ok(ok) })
             }
             ReadOutcome::Frame(Frame::Error(e)) => match e.id {
                 // a typed per-request error frees that request's slot
                 Some(id) => {
-                    self.in_flight -= 1;
+                    self.pending.retain(|&p| p != id);
                     Ok(PipelinedReply { id, result: Err(e) })
                 }
                 None => Err(ClientError::Server(e)),

@@ -39,6 +39,7 @@
 //! their responses flush (bounded by a grace period), then sockets close.
 
 use crate::coordinator::server::Coordinator;
+use crate::faults::FaultSite;
 use crate::serving::poller::{PollEvent, Poller};
 use crate::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferFrame, NetCounters};
 use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ValidInfer};
@@ -139,19 +140,23 @@ struct Mailbox {
 }
 
 impl Mailbox {
+    // all mailbox locks tolerate poison (common::lock_unpoisoned): a
+    // panicking completion callback must not cascade into every thread
+    // that shares the mailbox — one bad request would otherwise take the
+    // whole worker (and the accept loop pushing into it) down
     fn wake(&self) {
         use std::io::Write;
-        let mut w = self.wake.lock().unwrap();
+        let mut w = common::lock_unpoisoned(&self.wake);
         let _ = w.write(&[1]);
     }
 
     fn push_conn(&self, stream: TcpStream) {
-        self.queue.lock().unwrap().incoming.push(stream);
+        common::lock_unpoisoned(&self.queue).incoming.push(stream);
         self.wake();
     }
 
     fn push_completion(&self, msg: CompletionMsg) {
-        self.queue.lock().unwrap().completions.push(msg);
+        common::lock_unpoisoned(&self.queue).completions.push(msg);
         self.wake();
     }
 }
@@ -397,7 +402,7 @@ fn worker_loop(worker: usize, shared: Arc<EvShared>, mut poller: Poller, wake: U
             drain_wake(&wake);
         }
         let (incoming, completions) = {
-            let mut q = shared.mailboxes[worker].queue.lock().unwrap();
+            let mut q = common::lock_unpoisoned(&shared.mailboxes[worker].queue);
             (std::mem::take(&mut q.incoming), std::mem::take(&mut q.completions))
         };
         for stream in incoming {
@@ -586,7 +591,10 @@ fn update_interest(
 }
 
 /// Deadline sweep: indices of connections past their idle, slow-loris,
-/// or closing-flush deadlines.
+/// or closing-flush deadlines.  Idle and slow-loris reaps increment
+/// their `metrics` counters (`idle_reaped` / `loris_reaped`); a
+/// closing-flush close is the tail of a framing error already counted
+/// under `protocol_errors`.
 fn sweep_deadlines(shared: &EvShared, conns: &[Option<Conn>], now: Instant) -> Vec<usize> {
     let mut doomed = Vec::new();
     for (idx, slot) in conns.iter().enumerate() {
@@ -594,10 +602,20 @@ fn sweep_deadlines(shared: &EvShared, conns: &[Option<Conn>], now: Instant) -> V
         let dead = match conn.closing {
             Some(deadline) => conn.write_buf.is_empty() || now > deadline,
             None => match conn.frame_deadline {
-                Some(deadline) => now > deadline,
+                Some(deadline) => {
+                    let dead = now > deadline;
+                    if dead {
+                        shared.metrics.loris_reaped.fetch_add(1, Ordering::SeqCst);
+                    }
+                    dead
+                }
                 None => {
-                    conn.admitted == 0
-                        && now.duration_since(conn.last_activity) > shared.config.idle_timeout
+                    let dead = conn.admitted == 0
+                        && now.duration_since(conn.last_activity) > shared.config.idle_timeout;
+                    if dead {
+                        shared.metrics.idle_reaped.fetch_add(1, Ordering::SeqCst);
+                    }
+                    dead
                 }
             },
         };
@@ -768,6 +786,15 @@ fn handle_frame_bytes(
             return enqueue_reply(shared, conn, &Frame::Error(e), None);
         }
     };
+    // fault injection: a chaos plan may reset the socket instead of
+    // answering — completions for requests already in flight on this
+    // connection are dropped by their generation stamp, and clients with
+    // a retry policy reconnect and resubmit
+    if let Some(plan) = shared.coord.fault_plan() {
+        if plan.should(FaultSite::SocketReset) {
+            return false;
+        }
+    }
     match frame {
         Frame::Infer(req) => handle_infer(shared, conn, idx, worker, req),
         Frame::Hello { pipeline } => {
@@ -823,16 +850,17 @@ fn handle_infer(
         );
         return enqueue_reply(shared, conn, &reply, None);
     };
-    let ValidInfer { id, model, image } = match common::validate_infer(req, &shared.coord) {
+    let valid = match common::validate_infer(req, &shared.coord) {
         Ok(v) => v,
         // the validation error holds the slot through its flush, same
         // accounting as a real response
         Err(reply) => return enqueue_reply(shared, conn, &reply, Some(slot)),
     };
+    let ValidInfer { id, model, image, deadline } = valid;
 
     let gen = conn.gen;
     let shared_cb = Arc::clone(shared);
-    let submitted = shared.coord.submit_with(model.as_deref(), image, move |result| {
+    let on_done = move |result: Result<crate::coordinator::request::InferenceResponse, String>| {
         let reply = match result {
             Ok(resp) => {
                 shared_cb.metrics.requests_ok.fetch_add(1, Ordering::SeqCst);
@@ -845,8 +873,8 @@ fn handle_infer(
         };
         let msg = CompletionMsg { conn: idx, gen, reply, slot: Some(slot) };
         shared_cb.mailboxes[worker].push_completion(msg);
-    });
-    match submitted {
+    };
+    match shared.coord.submit_with_deadline(model.as_deref(), image, deadline, on_done) {
         Ok(()) => {
             conn.admitted += 1;
             if !conn.pipeline {
@@ -856,12 +884,18 @@ fn handle_infer(
             }
             true
         }
-        Err(_) => {
+        Err(e) => {
             // the callback (and the slot inside it) was dropped by the
             // failed submit, so the gauge is already released
             shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
-            let reply = err(ErrorCode::ShuttingDown, "coordinator is shut down".into());
-            enqueue_reply(shared, conn, &reply, None)
+            let msg = e.to_string();
+            let code = if msg.contains("unavailable") {
+                // a dying shard is transient (the supervisor respawns it)
+                ErrorCode::Unavailable
+            } else {
+                ErrorCode::ShuttingDown
+            };
+            enqueue_reply(shared, conn, &err(code, msg), None)
         }
     }
 }

@@ -46,7 +46,7 @@ pub(crate) mod poller;
 pub mod proto;
 pub(crate) mod shared;
 
-pub use client::{Client, ClientError, PipelinedClient, PipelinedReply};
+pub use client::{Client, ClientError, PipelinedClient, PipelinedReply, RetryPolicy};
 #[cfg(unix)]
 pub use evented::{EventedConfig, EventedServer};
 pub use net::{Server, ServerConfig};

@@ -28,6 +28,7 @@
 //! are never lost.
 
 use crate::coordinator::server::Coordinator;
+use crate::faults::FaultSite;
 use crate::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferFrame, NetCounters};
 use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ValidInfer};
 use anyhow::{Context, Result};
@@ -177,7 +178,8 @@ impl Server {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *common::lock_unpoisoned(&self.shared.conns));
         for h in handles {
             let _ = h.join();
         }
@@ -232,7 +234,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             });
         match spawned {
             Ok(handle) => {
-                let mut conns = shared.conns.lock().unwrap();
+                let mut conns = common::lock_unpoisoned(&shared.conns);
                 // opportunistically reap finished threads so a
                 // long-running server does not accumulate handles
                 let mut keep = Vec::with_capacity(conns.len() + 1);
@@ -272,6 +274,9 @@ enum FullRead {
     Shutdown,
     /// [`ServerConfig::idle_timeout`] expired before a new frame began.
     Idle,
+    /// [`ServerConfig::frame_timeout`] expired mid-frame — a slow-loris
+    /// peer trickling bytes is reaped rather than waited on.
+    Loris,
 }
 
 /// Fill `buf` from `stream`, tolerating read timeouts (the socket has
@@ -319,10 +324,7 @@ fn read_full(
                 }
                 Some(deadline) => {
                     if Instant::now() > deadline {
-                        return Err(std::io::Error::new(
-                            std::io::ErrorKind::TimedOut,
-                            "peer stalled mid-frame (slow-loris reap)",
-                        ));
+                        return Ok(FullRead::Loris);
                     }
                 }
             }
@@ -364,6 +366,14 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
         let mut header = [0u8; 4];
         match read_full(&mut stream, &mut header, shared, Some(idle), &mut frame_deadline) {
             Ok(FullRead::Done) => {}
+            Ok(FullRead::Idle) => {
+                shared.metrics.idle_reaped.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            Ok(FullRead::Loris) => {
+                shared.metrics.loris_reaped.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
             Ok(_) | Err(_) => return,
         }
         let len = u32::from_be_bytes(header) as usize;
@@ -384,6 +394,10 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
         let mut payload = vec![0u8; len];
         match read_full(&mut stream, &mut payload, shared, None, &mut frame_deadline) {
             Ok(FullRead::Done) => {}
+            Ok(FullRead::Loris) => {
+                shared.metrics.loris_reaped.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
             Ok(_) | Err(_) => return,
         }
         shared.metrics.frames_received.fetch_add(1, Ordering::SeqCst);
@@ -402,6 +416,14 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
         // the reply is written, so the inflight gauge also covers
         // responses stuck behind a slow-reading client
         let (reply, slot) = handle_frame(frame, shared);
+        // fault injection: a chaos plan may reset the socket instead of
+        // answering — the client sees a dropped connection and (with a
+        // retry policy) resubmits; the admission slot is still released
+        if let Some(plan) = shared.coord.fault_plan() {
+            if plan.should(FaultSite::SocketReset) {
+                return;
+            }
+        }
         let sent = send(&mut stream, shared, &reply);
         drop(slot);
         if !sent {
@@ -453,20 +475,24 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
     };
     let slot = Some(slot);
 
-    let ValidInfer { id, model, image } = match common::validate_infer(req, &shared.coord) {
+    let valid = match common::validate_infer(req, &shared.coord) {
         Ok(v) => v,
         Err(reply) => return (reply, slot),
     };
+    let ValidInfer { id, model, image, deadline } = valid;
 
-    let submitted = match model.as_deref() {
-        Some(model) => shared.coord.submit_to(model, image),
-        None => shared.coord.submit(image),
-    };
-    let rx = match submitted {
+    let rx = match shared.coord.submit_deadline(model.as_deref(), image, deadline) {
         Ok(rx) => rx,
-        Err(_) => {
+        Err(e) => {
             shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
-            return (err(ErrorCode::ShuttingDown, "coordinator is shut down".into()), slot);
+            let msg = e.to_string();
+            let code = if msg.contains("unavailable") {
+                // a dying shard is transient (the supervisor respawns it)
+                ErrorCode::Unavailable
+            } else {
+                ErrorCode::ShuttingDown
+            };
+            return (err(code, msg), slot);
         }
     };
     let reply = match rx.recv() {
@@ -480,7 +506,7 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
         }
         Err(_) => {
             shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
-            err(ErrorCode::Internal, "coordinator dropped the request".into())
+            err(ErrorCode::Unavailable, "coordinator dropped the request".into())
         }
     };
     (reply, slot)

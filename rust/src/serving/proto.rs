@@ -66,6 +66,13 @@ pub enum ErrorCode {
     ShuttingDown,
     /// Execution failed server-side (batch error or panic).
     Internal,
+    /// The request's deadline expired before a reply could be produced
+    /// (v1-additive).  Not retryable: the client's time budget is spent.
+    DeadlineExceeded,
+    /// The serving path was transiently unavailable — e.g. a shard
+    /// worker died before the request was served and is being respawned
+    /// (v1-additive).  Retryable by design.
+    Unavailable,
 }
 
 impl ErrorCode {
@@ -80,6 +87,8 @@ impl ErrorCode {
             ErrorCode::ResourceExhausted => "RESOURCE_EXHAUSTED",
             ErrorCode::ShuttingDown => "SHUTTING_DOWN",
             ErrorCode::Internal => "INTERNAL",
+            ErrorCode::DeadlineExceeded => "DEADLINE_EXCEEDED",
+            ErrorCode::Unavailable => "UNAVAILABLE",
         }
     }
 
@@ -94,14 +103,18 @@ impl ErrorCode {
             "RESOURCE_EXHAUSTED" => ErrorCode::ResourceExhausted,
             "SHUTTING_DOWN" => ErrorCode::ShuttingDown,
             "INTERNAL" => ErrorCode::Internal,
+            "DEADLINE_EXCEEDED" => ErrorCode::DeadlineExceeded,
+            "UNAVAILABLE" => ErrorCode::Unavailable,
             _ => return None,
         })
     }
 
     /// Whether a client may retry the identical request and reasonably
-    /// expect it to succeed (today: only `RESOURCE_EXHAUSTED`).
+    /// expect it to succeed (today: `RESOURCE_EXHAUSTED` and
+    /// `UNAVAILABLE`).  Execution failures (`INTERNAL`) and spent time
+    /// budgets (`DEADLINE_EXCEEDED`) are never retryable.
     pub fn retryable(&self) -> bool {
-        matches!(self, ErrorCode::ResourceExhausted)
+        matches!(self, ErrorCode::ResourceExhausted | ErrorCode::Unavailable)
     }
 }
 
@@ -118,6 +131,11 @@ pub struct InferFrame {
     pub id: u64,
     /// Registry model to route to; `None` = the server's default model.
     pub model: Option<String>,
+    /// Per-request deadline in milliseconds, measured from server
+    /// receipt (v1-additive; `None` = no deadline).  A request whose
+    /// deadline expires before its batch launches is answered with
+    /// `DEADLINE_EXCEEDED` instead of being served late.
+    pub deadline_ms: Option<u64>,
     /// Image dims `[C, H, W]`.
     pub dims: Vec<usize>,
     /// Row-major image data; `data.len()` must equal the dims product.
@@ -198,6 +216,12 @@ pub struct NetCounters {
     pub frames_sent: u64,
     /// Infer requests currently admitted and awaiting a response.
     pub inflight: u64,
+    /// Idle connections closed by the reaper (no frame within the idle
+    /// timeout; v1-additive, absent decodes as 0).
+    pub idle_reaped: u64,
+    /// Slow-loris connections closed by the reaper (stalled mid-frame
+    /// past the frame timeout; v1-additive, absent decodes as 0).
+    pub loris_reaped: u64,
     /// Infer frames rejected at the in-flight cap (`RESOURCE_EXHAUSTED`).
     pub overload_rejections: u64,
     /// Frames that failed to decode (connection survived).
@@ -220,6 +244,12 @@ pub struct MetricsFrame {
     pub batches: u64,
     /// Batches that failed (execution error, panic, unknown model).
     pub failed_batches: u64,
+    /// Requests dropped because their deadline expired before launch
+    /// (v1-additive, absent decodes as 0).
+    pub deadline_misses: u64,
+    /// Shard workers respawned by the supervisor after dying
+    /// (v1-additive, absent decodes as 0).
+    pub shard_restarts: u64,
     /// End-to-end latency percentiles (µs); `None` until data arrives.
     pub p50_us: Option<u64>,
     /// 90th percentile latency (µs).
@@ -355,6 +385,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             if let Some(model) = &f.model {
                 put(&mut m, "model", Json::Str(model.clone()));
             }
+            if let Some(deadline_ms) = f.deadline_ms {
+                put(&mut m, "deadline_ms", uint(deadline_ms));
+            }
             put(&mut m, "dims", usize_arr(&f.dims));
             put(&mut m, "data", f32_arr(&f.data));
         }
@@ -398,6 +431,8 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put(&mut m, "requests", uint(f.requests));
             put(&mut m, "batches", uint(f.batches));
             put(&mut m, "failed_batches", uint(f.failed_batches));
+            put(&mut m, "deadline_misses", uint(f.deadline_misses));
+            put(&mut m, "shard_restarts", uint(f.shard_restarts));
             put(&mut m, "p50_us", opt_u64_json(f.p50_us));
             put(&mut m, "p90_us", opt_u64_json(f.p90_us));
             put(&mut m, "p99_us", opt_u64_json(f.p99_us));
@@ -407,6 +442,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put(&mut cm, "requests", uint(c.requests));
                 put(&mut cm, "batches", uint(c.batches));
                 put(&mut cm, "failed_batches", uint(c.failed_batches));
+                put(&mut cm, "deadline_misses", uint(c.deadline_misses));
                 per_model.insert(name.clone(), Json::Obj(cm));
             }
             put(&mut m, "per_model", Json::Obj(per_model));
@@ -418,6 +454,7 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                     put(&mut sm, "requests", uint(s.requests));
                     put(&mut sm, "batches", uint(s.batches));
                     put(&mut sm, "failed_batches", uint(s.failed_batches));
+                    put(&mut sm, "deadline_misses", uint(s.deadline_misses));
                     Json::Obj(sm)
                 })
                 .collect();
@@ -429,7 +466,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put(&mut nm, "connections_rejected", uint(n.connections_rejected));
             put(&mut nm, "frames_received", uint(n.frames_received));
             put(&mut nm, "frames_sent", uint(n.frames_sent));
+            put(&mut nm, "idle_reaped", uint(n.idle_reaped));
             put(&mut nm, "inflight", uint(n.inflight));
+            put(&mut nm, "loris_reaped", uint(n.loris_reaped));
             put(&mut nm, "overload_rejections", uint(n.overload_rejections));
             put(&mut nm, "protocol_errors", uint(n.protocol_errors));
             put(&mut nm, "requests_failed", uint(n.requests_failed));
@@ -592,6 +631,8 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
         "infer" => Ok(Frame::Infer(InferFrame {
             id: need_u64(obj, "id").map_err(invalid)?,
             model: opt_str(obj, "model").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+            deadline_ms: opt_u64(obj, "deadline_ms")
+                .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
             dims: need_usize_arr(obj, "dims").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
             data: need_f32_arr(obj, "data").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
         })),
@@ -661,6 +702,9 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                         failed_batches: need_u64(c, "failed_batches")
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                        deadline_misses: opt_u64(c, "deadline_misses")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                            .unwrap_or(0),
                     },
                 );
             }
@@ -681,6 +725,9 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                         failed_batches: need_u64(s, "failed_batches")
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                        deadline_misses: opt_u64(s, "deadline_misses")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                            .unwrap_or(0),
                     });
                 }
             }
@@ -694,6 +741,12 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                 batches: need_u64(obj, "batches").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                 failed_batches: need_u64(obj, "failed_batches")
                     .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                deadline_misses: opt_u64(obj, "deadline_misses")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                    .unwrap_or(0),
+                shard_restarts: opt_u64(obj, "shard_restarts")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                    .unwrap_or(0),
                 p50_us: opt_u64(obj, "p50_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                 p90_us: opt_u64(obj, "p90_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                 p99_us: opt_u64(obj, "p99_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
@@ -710,8 +763,14 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                         .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                     frames_sent: need_u64(net_obj, "frames_sent")
                         .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    idle_reaped: opt_u64(net_obj, "idle_reaped")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                        .unwrap_or(0),
                     inflight: need_u64(net_obj, "inflight")
                         .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    loris_reaped: opt_u64(net_obj, "loris_reaped")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                        .unwrap_or(0),
                     overload_rejections: need_u64(net_obj, "overload_rejections")
                         .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                     protocol_errors: need_u64(net_obj, "protocol_errors")
@@ -806,10 +865,17 @@ mod tests {
             Frame::Infer(InferFrame {
                 id: 7,
                 model: Some("digits-b8".into()),
+                deadline_ms: Some(250),
                 dims: vec![1, 2, 2],
                 data: vec![0.0, 0.5, -1.25, 3.0],
             }),
-            Frame::Infer(InferFrame { id: 8, model: None, dims: vec![1, 1, 1], data: vec![1.0] }),
+            Frame::Infer(InferFrame {
+                id: 8,
+                model: None,
+                deadline_ms: None,
+                dims: vec![1, 1, 1],
+                data: vec![1.0],
+            }),
             Frame::InferOk(InferOkFrame {
                 id: 7,
                 model: Some("digits-b8".into()),
@@ -838,18 +904,35 @@ mod tests {
                 requests: 38,
                 batches: 12,
                 failed_batches: 0,
+                deadline_misses: 2,
+                shard_restarts: 1,
                 p50_us: Some(950),
                 p90_us: Some(1800),
                 p99_us: None,
                 per_model: [(
                     "digits-b8".to_string(),
-                    ModelCounters { requests: 20, batches: 6, failed_batches: 0 },
+                    ModelCounters {
+                        requests: 20,
+                        batches: 6,
+                        failed_batches: 0,
+                        deadline_misses: 2,
+                    },
                 )]
                 .into_iter()
                 .collect(),
                 shards: vec![
-                    ShardCounters { requests: 20, batches: 6, failed_batches: 0 },
-                    ShardCounters { requests: 18, batches: 6, failed_batches: 0 },
+                    ShardCounters {
+                        requests: 20,
+                        batches: 6,
+                        failed_batches: 0,
+                        deadline_misses: 2,
+                    },
+                    ShardCounters {
+                        requests: 18,
+                        batches: 6,
+                        failed_batches: 0,
+                        deadline_misses: 0,
+                    },
                 ],
                 net: NetCounters {
                     connections_open: 1,
@@ -857,7 +940,9 @@ mod tests {
                     connections_rejected: 0,
                     frames_received: 40,
                     frames_sent: 40,
+                    idle_reaped: 1,
                     inflight: 1,
+                    loris_reaped: 1,
                     overload_rejections: 2,
                     protocol_errors: 0,
                     requests_failed: 0,
@@ -889,6 +974,7 @@ mod tests {
         let frame = Frame::Infer(InferFrame {
             id: 1,
             model: None,
+            deadline_ms: None,
             dims: vec![1, 2, 2],
             data: vec![0.0, 0.5, 1.0, -2.0],
         });
@@ -989,13 +1075,45 @@ mod tests {
             ErrorCode::UnknownModel,
             ErrorCode::ResourceExhausted,
             ErrorCode::ShuttingDown,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Unavailable,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
         }
         assert_eq!(ErrorCode::parse("NOPE"), None);
         assert!(ErrorCode::ResourceExhausted.retryable());
+        assert!(ErrorCode::Unavailable.retryable());
+        assert!(!ErrorCode::DeadlineExceeded.retryable());
         assert!(!ErrorCode::Internal.retryable());
+    }
+
+    #[test]
+    fn deadline_and_fault_counters_are_v1_additive() {
+        // an older peer omits deadline_ms: decodes as None, and the
+        // canonical re-encode also omits it
+        let payload = br#"{"data":[1],"dims":[1,1,1],"id":3,"type":"infer","v":1}"#;
+        match decode(payload).unwrap() {
+            Frame::Infer(f) => {
+                assert_eq!(f.deadline_ms, None);
+                assert_eq!(encode(&Frame::Infer(f)), payload.to_vec());
+            }
+            other => panic!("expected infer, got {other:?}"),
+        }
+        // a pre-fault-tolerance metrics frame omits every new counter;
+        // they all decode as zero
+        let payload = br#"{"backend":"native","batches":1,"failed_batches":0,"net":{"connections_open":0,"connections_opened":0,"connections_rejected":0,"frames_received":0,"frames_sent":0,"inflight":0,"overload_rejections":0,"protocol_errors":0,"requests_failed":0,"requests_ok":0},"p50_us":null,"p90_us":null,"p99_us":null,"per_model":{"m":{"batches":1,"failed_batches":0,"requests":1}},"requests":1,"shards":[{"batches":1,"failed_batches":0,"requests":1}],"type":"metrics","v":1}"#;
+        match decode(payload).unwrap() {
+            Frame::Metrics(m) => {
+                assert_eq!(m.deadline_misses, 0);
+                assert_eq!(m.shard_restarts, 0);
+                assert_eq!(m.net.idle_reaped, 0);
+                assert_eq!(m.net.loris_reaped, 0);
+                assert_eq!(m.per_model["m"].deadline_misses, 0);
+                assert_eq!(m.shards[0].deadline_misses, 0);
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
     }
 
     #[test]

@@ -13,8 +13,22 @@ use crate::serving::proto::{
     ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame, NetCounters,
 };
 use crate::tensor::Tensor;
-use std::sync::Arc;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// The serving layer shares connection tables and write halves across
+/// threads; a panic while holding one of those locks poisons it, and the
+/// default `unwrap()` would then cascade the panic into every other
+/// connection touching the same mutex — one bad request taking down the
+/// whole accept loop.  All serving-layer lock sites go through this
+/// helper instead: the protected data is counters and socket handles,
+/// which stay structurally valid even if a holder died mid-update.
+pub(crate) fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Monotonic counters of the network layer (all atomic; shared by every
 /// connection and snapshotted into the `metrics` frame together with the
@@ -25,6 +39,8 @@ pub(crate) struct NetMetrics {
     pub(crate) connections_rejected: AtomicU64,
     pub(crate) frames_received: AtomicU64,
     pub(crate) frames_sent: AtomicU64,
+    pub(crate) idle_reaped: AtomicU64,
+    pub(crate) loris_reaped: AtomicU64,
     pub(crate) overload_rejections: AtomicU64,
     pub(crate) protocol_errors: AtomicU64,
     pub(crate) requests_failed: AtomicU64,
@@ -40,7 +56,9 @@ impl NetMetrics {
             connections_rejected: self.connections_rejected.load(Ordering::SeqCst),
             frames_received: self.frames_received.load(Ordering::SeqCst),
             frames_sent: self.frames_sent.load(Ordering::SeqCst),
+            idle_reaped: self.idle_reaped.load(Ordering::SeqCst),
             inflight: inflight as u64,
+            loris_reaped: self.loris_reaped.load(Ordering::SeqCst),
             overload_rejections: self.overload_rejections.load(Ordering::SeqCst),
             protocol_errors: self.protocol_errors.load(Ordering::SeqCst),
             requests_failed: self.requests_failed.load(Ordering::SeqCst),
@@ -81,6 +99,9 @@ pub(crate) struct ValidInfer {
     pub(crate) model: Option<String>,
     /// The image tensor built from the frame's dims/data.
     pub(crate) image: Tensor<f32>,
+    /// Absolute deadline derived from the frame's `deadline_ms`, anchored
+    /// at frame receipt (`None` = wait forever).
+    pub(crate) deadline: Option<Instant>,
 }
 
 /// Validate an admitted `infer` frame: dims/data consistency, finiteness,
@@ -126,7 +147,8 @@ pub(crate) fn validate_infer(req: InferFrame, coord: &Coordinator) -> Result<Val
         }
     }
     let image = Tensor::from_vec(&req.dims, req.data);
-    Ok(ValidInfer { id: req.id, model: req.model, image })
+    let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    Ok(ValidInfer { id: req.id, model: req.model, image, deadline })
 }
 
 /// The `infer_ok` reply for a completed request.
@@ -145,11 +167,18 @@ pub(crate) fn infer_ok_frame(id: u64, resp: InferenceResponse) -> Frame {
 }
 
 /// The typed `error` reply for a request that failed after admission.
-/// A hot-removed model loses the registry pre-check race; keep the error
-/// typed by recognizing the engine's message.
+/// The coordinator reports failures as strings; keep the wire error
+/// typed by recognizing the messages that have a dedicated code: a
+/// hot-removed model losing the registry pre-check race, a deadline the
+/// batcher purged, and a request stranded by a dying shard worker (the
+/// retryable case — the supervisor respawns the shard).
 pub(crate) fn infer_err_frame(id: u64, msg: String) -> Frame {
     let code = if msg.contains("is not in the registry") {
         ErrorCode::UnknownModel
+    } else if msg.contains("deadline exceeded") {
+        ErrorCode::DeadlineExceeded
+    } else if msg.contains("worker died") || msg.contains("unavailable") {
+        ErrorCode::Unavailable
     } else {
         ErrorCode::Internal
     };
@@ -175,6 +204,8 @@ pub(crate) fn metrics_frame(coord: &Coordinator, net: NetCounters) -> Frame {
         requests: m.requests,
         batches: m.batches,
         failed_batches: m.failed_batches,
+        deadline_misses: m.deadline_misses,
+        shard_restarts: coord.shard_restarts(),
         p50_us: m.percentile_us(50.0),
         p90_us: m.percentile_us(90.0),
         p99_us: m.percentile_us(99.0),
@@ -197,6 +228,38 @@ pub(crate) fn wrong_direction_frame(frame: &Frame) -> Frame {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lock_unpoisoned_survives_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the lock must actually be poisoned");
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 8, "data survives the poisoned holder");
+    }
+
+    #[test]
+    fn coordinator_failures_map_to_typed_codes() {
+        let code = |msg: &str| match infer_err_frame(1, msg.to_string()) {
+            Frame::Error(e) => e.code,
+            other => panic!("expected error frame, got {other:?}"),
+        };
+        assert_eq!(code("model 'x' is not in the registry"), ErrorCode::UnknownModel);
+        assert_eq!(
+            code("deadline exceeded before batch launch (queued 5ms)"),
+            ErrorCode::DeadlineExceeded
+        );
+        let died = "shard worker died before the request was served";
+        assert_eq!(code(died), ErrorCode::Unavailable);
+        let pending = "shard 0 unavailable (worker died; respawn pending)";
+        assert_eq!(code(pending), ErrorCode::Unavailable);
+        assert_eq!(code("kernel panic: index out of bounds"), ErrorCode::Internal);
+    }
 
     #[test]
     fn inflight_slot_is_a_bounded_gauge() {

@@ -1,0 +1,271 @@
+//! End-to-end chaos: a seeded [`FaultPlan`] injects execution errors,
+//! kernel panics, pre-batch latency, shard-worker kills, torn `.pasm`
+//! loads, and socket resets into the full serving stack — against
+//! **both** front-ends — and the fault-tolerance invariants must hold:
+//!
+//! * every admitted request reaches a terminal reply (success, typed
+//!   error, overload, or deadline miss — never silence);
+//! * the server stays up and keeps answering after the storm;
+//! * a killed shard worker is respawned and its shard keeps serving;
+//! * a torn artifact swap keeps the previous version serving;
+//! * a plan with zero probabilities injects exactly nothing.
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::coordinator::loadgen::{NetLoadOptions, run_open_loop_net};
+use pasm_accel::coordinator::{BatchPolicy, Coordinator, CoordinatorBuilder};
+use pasm_accel::faults::{FaultPlan, FaultSite};
+use pasm_accel::model_store::{ModelRegistry, save_file};
+use pasm_accel::quant::fixed::QFormat;
+#[cfg(unix)]
+use pasm_accel::serving::{EventedConfig, EventedServer};
+use pasm_accel::serving::{Client, MetricsFrame, RetryPolicy, Server, ServerConfig};
+use pasm_accel::tensor::Tensor;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn encoded(seed: u64, bins: usize) -> EncodedCnn {
+    let arch = DigitsCnn::default();
+    let mut rng = Rng::new(seed);
+    let params = arch.init(&mut rng);
+    EncodedCnn::encode(arch, &params, bins, QFormat::W32)
+}
+
+fn image_pool() -> Vec<Tensor<f32>> {
+    let mut rng = Rng::new(9);
+    (0..8).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pasm_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 2-shard registry coordinator with the given fault plan attached
+/// (`build` also wires the plan into the registry's artifact loads).
+fn chaos_coordinator(registry: &Arc<ModelRegistry>, plan: FaultPlan) -> Arc<Coordinator> {
+    Arc::new(
+        CoordinatorBuilder::new()
+            .registry(Arc::clone(registry))
+            .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+            .shards(2)
+            .fault_plan(plan)
+            .build()
+            .expect("coordinator startup"),
+    )
+}
+
+/// The front-end kinds available on this platform; every scenario runs
+/// against each of them.
+fn kinds() -> Vec<&'static str> {
+    if cfg!(unix) {
+        vec!["threaded", "evented"]
+    } else {
+        vec!["threaded"]
+    }
+}
+
+/// One of the two interchangeable serving front-ends under test.
+enum TestServer {
+    Threaded(Server),
+    #[cfg(unix)]
+    Evented(EventedServer),
+}
+
+impl TestServer {
+    fn bind(kind: &str, coord: &Arc<Coordinator>) -> TestServer {
+        match kind {
+            "threaded" => {
+                let config = ServerConfig::default();
+                let server =
+                    Server::bind("127.0.0.1:0", Arc::clone(coord), config).expect("bind threaded");
+                TestServer::Threaded(server)
+            }
+            #[cfg(unix)]
+            "evented" => {
+                let config = EventedConfig::default();
+                let server = EventedServer::bind("127.0.0.1:0", Arc::clone(coord), config)
+                    .expect("bind evented");
+                TestServer::Evented(server)
+            }
+            other => panic!("unknown server kind '{other}'"),
+        }
+    }
+
+    fn local_addr(&self) -> SocketAddr {
+        match self {
+            TestServer::Threaded(s) => s.local_addr(),
+            #[cfg(unix)]
+            TestServer::Evented(s) => s.local_addr(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        match self {
+            TestServer::Threaded(s) => s.shutdown(),
+            #[cfg(unix)]
+            TestServer::Evented(s) => s.shutdown(),
+        }
+    }
+}
+
+/// Post-storm liveness probe.  The plan may reset this very connection
+/// instead of answering, so the probe gets a few fresh connections.
+fn probe_metrics(addr: SocketAddr) -> MetricsFrame {
+    let mut last = String::from("never connected");
+    for _ in 0..10 {
+        match Client::connect(addr) {
+            Ok(mut c) => match c.metrics() {
+                Ok(m) => return m,
+                Err(e) => last = e.to_string(),
+            },
+            Err(e) => last = e.to_string(),
+        }
+    }
+    panic!("server not answering after the storm: {last}");
+}
+
+#[test]
+fn chaos_storm_every_admitted_request_reaches_a_terminal_reply() {
+    for kind in kinds() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("alpha", encoded(1, 4));
+        registry.insert("beta", encoded(2, 8));
+        let plan = FaultPlan::seeded(7)
+            .with(FaultSite::ExecError, 0.15)
+            .with(FaultSite::BatchPanic, 0.15)
+            .with(FaultSite::Latency, 0.2)
+            .with(FaultSite::SocketReset, 0.05)
+            .with_latency(Duration::from_millis(2));
+        let coord = chaos_coordinator(&registry, plan);
+        let mut server = TestServer::bind(kind, &coord);
+        let addr = server.local_addr();
+
+        let n = 96;
+        let models = [Some("alpha".to_string()), Some("beta".to_string())];
+        let opts = NetLoadOptions {
+            connections: 4,
+            retry: RetryPolicy::standard(5, 23),
+            ..NetLoadOptions::default()
+        };
+        let mut rng = Rng::new(5);
+        let r =
+            run_open_loop_net(&addr.to_string(), &models, &image_pool(), n, 800.0, opts, &mut rng)
+                .expect("chaos load run");
+
+        // the core invariant: success, typed failure, overload, or miss
+        // — but never an admitted request that simply vanishes
+        let answered = r.latencies_us.len() + r.errors + r.overloaded + r.deadline_misses;
+        assert_eq!(answered, n, "{kind}: request(s) without a terminal reply: {r:?}");
+        assert!(!r.latencies_us.is_empty(), "{kind}: nothing succeeded under the storm: {r:?}");
+
+        let injected = coord.fault_plan().expect("plan attached").counters();
+        assert!(injected.total() > 0, "{kind}: the storm injected nothing: {injected:?}");
+
+        // the server must still answer a fresh connection after the storm
+        let m = probe_metrics(addr);
+        assert!(m.requests >= r.latencies_us.len() as u64, "{kind}: metrics lost requests");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn killed_shard_workers_respawn_and_the_shard_keeps_serving() {
+    for kind in kinds() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("alpha", encoded(1, 4));
+        let plan = FaultPlan::seeded(11).with(FaultSite::WorkerKill, 0.4);
+        let coord = chaos_coordinator(&registry, plan);
+        let mut server = TestServer::bind(kind, &coord);
+        let addr = server.local_addr();
+
+        let image = render_digit(&mut Rng::new(3), 4, 0.05);
+        let mut client = Client::connect(addr)
+            .expect("connect")
+            .with_retry(RetryPolicy::standard(8, 31));
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while coord.shard_restarts() == 0 {
+            assert!(Instant::now() < deadline, "{kind}: no respawn observed within 30s");
+            if client.infer(Some("alpha"), &image).is_err() {
+                let _ = client.reset();
+            }
+        }
+
+        // the supervisor replaced the dead worker: traffic still flows
+        // (each batch still rolls the kill dice, hence the filter)
+        let served = (0..20).filter(|_| client.infer(Some("alpha"), &image).is_ok()).count();
+        assert!(served > 0, "{kind}: shard never recovered after a worker kill");
+        assert!(coord.shard_restarts() > 0, "{kind}: restart counter must move");
+        assert!(
+            coord.fault_plan().expect("plan attached").counters().worker_kills > 0,
+            "{kind}: kill counter must move"
+        );
+        server.shutdown();
+    }
+}
+
+#[test]
+fn torn_artifact_swap_keeps_the_previous_version_serving() {
+    for kind in kinds() {
+        let dir = tmpdir(&format!("swap_{kind}"));
+        save_file(&dir.join("m.pasm"), &encoded(10, 8)).expect("save artifact");
+        let registry = Arc::new(ModelRegistry::new());
+        registry.sync_dir(&dir).expect("initial sync");
+
+        let plan = FaultPlan::seeded(5).with(FaultSite::TornLoad, 1.0);
+        let coord = chaos_coordinator(&registry, plan);
+        let mut server = TestServer::bind(kind, &coord);
+        let addr = server.local_addr();
+
+        let image = render_digit(&mut Rng::new(3), 7, 0.05);
+        let mut client = Client::connect(addr).expect("connect");
+        let before = client.infer(Some("m"), &image).expect("infer before swap");
+
+        // the rewritten artifact is perfectly valid on disk; only the
+        // injected tear fails its load — mid-run, with the server up
+        save_file(&dir.join("m.pasm"), &encoded(11, 16)).expect("rewrite artifact");
+        let report = registry.sync_dir(&dir).expect("resync walks the dir");
+        assert_eq!(report.errors.len(), 1, "{kind}: the torn load must surface: {report:?}");
+        assert!(report.errors[0].1.contains("injected fault"), "{kind}: {report:?}");
+
+        let after = client.infer(Some("m"), &image).expect("infer after torn swap");
+        assert_eq!(before.logits, after.logits, "{kind}: previous version must keep serving");
+        assert!(coord.fault_plan().expect("plan attached").counters().torn_loads > 0);
+        server.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn disabled_plan_is_inert_and_counts_zero_injected_faults() {
+    for kind in kinds() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("alpha", encoded(1, 4));
+        registry.insert("beta", encoded(2, 8));
+        // same seed as the storm, all probabilities left at zero: the
+        // exact same code paths must inject nothing at all
+        let coord = chaos_coordinator(&registry, FaultPlan::seeded(7));
+        let mut server = TestServer::bind(kind, &coord);
+        let addr = server.local_addr();
+
+        let n = 48;
+        let models = [Some("alpha".to_string()), Some("beta".to_string())];
+        let opts = NetLoadOptions { connections: 4, ..NetLoadOptions::default() };
+        let mut rng = Rng::new(5);
+        let r =
+            run_open_loop_net(&addr.to_string(), &models, &image_pool(), n, 800.0, opts, &mut rng)
+                .expect("clean load run");
+
+        assert_eq!(r.latencies_us.len(), n, "{kind}: clean run must fully succeed: {r:?}");
+        assert_eq!(r.errors + r.overloaded + r.deadline_misses, 0, "{kind}: {r:?}");
+        assert_eq!(r.retries, 0, "{kind}: nothing to retry on a clean run");
+        let injected = coord.fault_plan().expect("plan attached").counters();
+        assert_eq!(injected.total(), 0, "{kind}: inert plan injected faults: {injected:?}");
+        assert_eq!(coord.shard_restarts(), 0, "{kind}: no worker may die on a clean run");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,172 @@
+//! Retry and backoff behavior of the serving client, pinned for
+//! determinism: the jittered exponential backoff schedule is a pure
+//! function of the policy seed, and a full network load run against a
+//! scripted flaky server reports identical retry accounting on every
+//! same-seed run.
+//!
+//! The flaky server here is scripted, not chaos-injected: it answers
+//! each `infer` by a fixed per-connection pattern (alternate
+//! fail/succeed, always-fail retryable, always-fail non-retryable),
+//! which makes *exact* retry counts assertable — a real server with an
+//! attached fault plan can only promise the aggregate distribution, not
+//! which request observes a fault.
+
+use pasm_accel::cnn::data::{render_digit, Rng};
+use pasm_accel::coordinator::loadgen::{LoadResult, NetLoadOptions, run_open_loop_net};
+use pasm_accel::coordinator::HwCost;
+use pasm_accel::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferOkFrame, ReadOutcome};
+use pasm_accel::serving::RetryPolicy;
+use pasm_accel::tensor::Tensor;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+#[test]
+fn backoff_schedule_is_deterministic_capped_and_jittered() {
+    let policy = RetryPolicy {
+        max_attempts: 8,
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(500),
+        seed: 42,
+    };
+    let schedule = |seed: u64| -> Vec<Duration> {
+        let mut rng = Rng::new(seed);
+        (0..12).map(|attempt| policy.backoff(attempt, &mut rng)).collect()
+    };
+    let a = schedule(42);
+    assert_eq!(a, schedule(42), "same jitter seed must produce the same schedule");
+    assert_ne!(a, schedule(43), "different jitter seeds must diverge");
+
+    for (i, &delay) in a.iter().enumerate() {
+        let attempt = u32::try_from(i).unwrap();
+        let full = policy.base.saturating_mul(1u32 << attempt.min(16)).min(policy.cap);
+        assert!(delay <= full, "attempt {attempt}: {delay:?} above un-jittered {full:?}");
+        assert!(delay >= full.mul_f64(0.5), "attempt {attempt}: {delay:?} under half of {full:?}");
+        assert!(delay <= policy.cap, "attempt {attempt}: {delay:?} exceeds the cap");
+    }
+    // the exponential actually grows before the cap bites: attempt 2's
+    // jitter floor (20ms) clears attempt 0's jitter ceiling (10ms)
+    assert!(a[2] > a[0], "backoff must grow: attempt 0 {:?}, attempt 2 {:?}", a[0], a[2]);
+}
+
+/// How the scripted server answers each `infer` frame.
+#[derive(Clone, Copy)]
+enum Script {
+    /// Per connection, alternate `RESOURCE_EXHAUSTED` / success starting
+    /// with the failure.  A retrying client resends on the same
+    /// connection, so every request costs exactly one retry — however
+    /// the load generator spreads requests over connections.
+    AlternateExhausted,
+    /// Every infer gets `RESOURCE_EXHAUSTED`: retries must exhaust.
+    AlwaysExhausted,
+    /// Every infer gets `INTERNAL`: not retryable, must fail at once.
+    AlwaysInternal,
+}
+
+/// A minimal protocol-speaking TCP server with scripted replies.  The
+/// accept thread outlives the test harmlessly; handlers exit on EOF.
+fn scripted_server(script: Script) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind scripted server");
+    let addr = listener.local_addr().expect("scripted server addr");
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { return };
+            std::thread::spawn(move || serve_conn(stream, script));
+        }
+    });
+    addr
+}
+
+fn serve_conn(mut stream: TcpStream, script: Script) {
+    let mut fail_next = true;
+    loop {
+        let frame = match proto::read_frame(&mut stream, proto::DEFAULT_MAX_FRAME_BYTES) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(_) | Err(_) => return,
+        };
+        let reply = match frame {
+            Frame::Infer(req) => {
+                let fail_code = match script {
+                    Script::AlternateExhausted => {
+                        let fail = fail_next;
+                        fail_next = !fail_next;
+                        fail.then_some(ErrorCode::ResourceExhausted)
+                    }
+                    Script::AlwaysExhausted => Some(ErrorCode::ResourceExhausted),
+                    Script::AlwaysInternal => Some(ErrorCode::Internal),
+                };
+                match fail_code {
+                    Some(code) => {
+                        Frame::Error(ErrorFrame::new(Some(req.id), code, "scripted failure"))
+                    }
+                    None => Frame::InferOk(InferOkFrame {
+                        id: req.id,
+                        model: req.model.clone(),
+                        logits: vec![0.0; 10],
+                        predicted: 0,
+                        queue_us: 50,
+                        compute_us: 50,
+                        batch_size: 1,
+                        batch_occupancy: 1,
+                        hw: HwCost::default(),
+                    }),
+                }
+            }
+            Frame::Ping { nonce } => Frame::Pong { nonce },
+            _ => return,
+        };
+        if proto::write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn image_pool() -> Vec<Tensor<f32>> {
+    let mut rng = Rng::new(9);
+    (0..8).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect()
+}
+
+fn drive(addr: SocketAddr, n: usize, retry: RetryPolicy) -> LoadResult {
+    let opts = NetLoadOptions { connections: 2, retry, ..NetLoadOptions::default() };
+    let mut rng = Rng::new(17);
+    run_open_loop_net(&addr.to_string(), &[], &image_pool(), n, 2000.0, opts, &mut rng)
+        .expect("load run against scripted server")
+}
+
+#[test]
+fn retried_failures_cost_exactly_one_retry_each_and_replay_identically() {
+    let addr = scripted_server(Script::AlternateExhausted);
+    let n = 24;
+    let a = drive(addr, n, RetryPolicy::standard(3, 7));
+    let b = drive(addr, n, RetryPolicy::standard(3, 7));
+    for r in [&a, &b] {
+        assert_eq!(r.latencies_us.len(), n, "every request must succeed on its retry");
+        assert_eq!(r.errors, 0);
+        assert_eq!(r.overloaded, 0);
+        assert_eq!(r.deadline_misses, 0);
+        assert_eq!(r.retries, n as u64, "one failed first attempt per request");
+    }
+    assert_eq!(a.retries, b.retries, "same seeds must reproduce the same retry count");
+}
+
+#[test]
+fn retries_are_bounded_by_max_attempts() {
+    let addr = scripted_server(Script::AlwaysExhausted);
+    let n = 8;
+    let r = drive(addr, n, RetryPolicy::standard(3, 7));
+    assert!(r.latencies_us.is_empty(), "an always-failing server cannot complete a request");
+    // terminal classification: exhausted retries on RESOURCE_EXHAUSTED
+    // land in `overloaded`, not `errors`
+    assert_eq!(r.overloaded, n);
+    assert_eq!(r.errors, 0);
+    assert_eq!(r.retries, 2 * n as u64, "3 attempts = 2 retries per request, then give up");
+}
+
+#[test]
+fn non_retryable_errors_are_never_retried() {
+    let addr = scripted_server(Script::AlwaysInternal);
+    let n = 8;
+    let r = drive(addr, n, RetryPolicy::standard(4, 7));
+    assert!(r.latencies_us.is_empty());
+    assert_eq!(r.errors, n, "INTERNAL is terminal");
+    assert_eq!(r.retries, 0, "execution errors must not be resubmitted");
+}

@@ -719,6 +719,7 @@ fn backpressure_pauses_reads_on_a_non_draining_connection() {
                 let frame = Frame::Infer(InferFrame {
                     id,
                     model: None,
+                    deadline_ms: None,
                     dims: img.dims().to_vec(),
                     data: img.data().to_vec(),
                 });

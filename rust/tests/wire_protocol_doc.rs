@@ -87,6 +87,8 @@ fn spec_documents_every_error_code() {
         BadImage,
         UnknownModel,
         ResourceExhausted,
+        DeadlineExceeded,
+        Unavailable,
         ShuttingDown,
         Internal,
     ] {
