@@ -9,6 +9,18 @@
 
 use std::time::Duration;
 
+/// Why [`BatchPolicy::decide_reason`] chose to launch a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaunchReason {
+    /// The queue held at least a full maximum bucket.
+    Filled,
+    /// The queue exactly filled a configured bucket.
+    ExactFill,
+    /// The oldest request exhausted its wait budget; launch underfull,
+    /// padding up to the chosen bucket.
+    Timeout,
+}
+
 /// Batching configuration.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
@@ -41,26 +53,43 @@ impl BatchPolicy {
     /// (taking `min(queued, bucket)` live requests, padding the rest), or
     /// `None` to keep waiting.
     pub fn decide(&self, queued: usize, oldest_expired: bool) -> Option<usize> {
+        self.decide_reason(queued, oldest_expired).map(|(bucket, _)| bucket)
+    }
+
+    /// [`BatchPolicy::decide`] plus *why* the launch fired — the
+    /// observability layer reports the reason next to the chosen bucket
+    /// (e.g. the bench's stage breakdown separates timeout launches,
+    /// which pay padding, from filled ones).
+    pub fn decide_reason(
+        &self,
+        queued: usize,
+        oldest_expired: bool,
+    ) -> Option<(usize, LaunchReason)> {
         if queued == 0 {
             return None;
         }
         // a full max bucket always launches immediately
         if queued >= self.max_bucket() {
-            return Some(self.max_bucket());
+            return Some((self.max_bucket(), LaunchReason::Filled));
         }
         if !oldest_expired {
             // can we exactly fill some bucket? launch it; otherwise wait
             // for either more requests or the timeout
-            return self.buckets.iter().copied().find(|&b| b == queued);
-        }
-        // timeout: smallest bucket that fits everything queued, else max
-        Some(
-            self.buckets
+            return self
+                .buckets
                 .iter()
                 .copied()
-                .find(|&b| b >= queued)
-                .unwrap_or_else(|| self.max_bucket()),
-        )
+                .find(|&b| b == queued)
+                .map(|b| (b, LaunchReason::ExactFill));
+        }
+        // timeout: smallest bucket that fits everything queued, else max
+        let bucket = self
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= queued)
+            .unwrap_or_else(|| self.max_bucket());
+        Some((bucket, LaunchReason::Timeout))
     }
 }
 
@@ -120,5 +149,25 @@ mod tests {
     #[should_panic]
     fn empty_buckets_rejected() {
         BatchPolicy::new(vec![], Duration::ZERO);
+    }
+
+    #[test]
+    fn launch_reasons_are_reported() {
+        let p = policy();
+        assert_eq!(p.decide_reason(0, true), None);
+        assert_eq!(p.decide_reason(16, false), Some((16, LaunchReason::Filled)));
+        assert_eq!(p.decide_reason(40, false), Some((16, LaunchReason::Filled)));
+        assert_eq!(p.decide_reason(8, false), Some((8, LaunchReason::ExactFill)));
+        assert_eq!(p.decide_reason(5, false), None);
+        assert_eq!(p.decide_reason(5, true), Some((8, LaunchReason::Timeout)));
+        // decide() stays the bucket projection of decide_reason()
+        for queued in 0..40 {
+            for expired in [false, true] {
+                assert_eq!(
+                    p.decide(queued, expired),
+                    p.decide_reason(queued, expired).map(|(b, _)| b)
+                );
+            }
+        }
     }
 }

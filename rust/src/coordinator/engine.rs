@@ -22,6 +22,7 @@ use crate::coordinator::backend::{Executable, ExecutionBackend};
 use crate::coordinator::cost::CostModel;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::model_store::{ModelEntry, ModelRegistry};
+use crate::obs::{Stage, TraceBuf};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -59,6 +60,10 @@ pub struct Engine {
     /// Reused padded-batch staging buffer: one allocation amortized over
     /// every batch instead of one per `run_batch` call.
     pad_buf: Vec<f32>,
+    /// Lifecycle trace ring + owning shard id, when tracing is on: the
+    /// engine stamps `launched` (executable resolved, kernel about to
+    /// start) and `executed` (kernel finished) around the backend call.
+    tracer: Option<(Arc<TraceBuf>, usize)>,
 }
 
 impl Engine {
@@ -90,7 +95,15 @@ impl Engine {
             registry,
             slots: HashMap::new(),
             pad_buf: Vec::new(),
+            tracer: None,
         })
+    }
+
+    /// Attach a lifecycle trace ring (the coordinator's, shared by every
+    /// shard) and the shard id this engine serves: `run_batch` then
+    /// records `launched`/`executed` events around every kernel call.
+    pub fn set_tracer(&mut self, tracer: Arc<TraceBuf>, shard: usize) {
+        self.tracer = Some((tracer, shard));
     }
 
     /// Compiled bucket sizes of the default model, ascending.
@@ -138,6 +151,7 @@ impl Engine {
                     classes: self.classes,
                     per_image: self.per_image,
                     model: None,
+                    tracer: self.tracer.as_ref(),
                 };
                 execute_padded(ctx, requests, bucket, &mut self.pad_buf)
             }
@@ -157,6 +171,7 @@ impl Engine {
                     classes: slot.classes,
                     per_image: slot.per_image,
                     model: Some(&name),
+                    tracer: self.tracer.as_ref(),
                 };
                 execute_padded(ctx, requests, bucket, &mut self.pad_buf)
             }
@@ -220,6 +235,7 @@ struct BatchCtx<'a> {
     classes: usize,
     per_image: HwCost,
     model: Option<&'a Arc<str>>,
+    tracer: Option<&'a (Arc<TraceBuf>, usize)>,
 }
 
 /// Pad the live requests to `bucket`, execute once, split the logits.
@@ -254,11 +270,23 @@ fn execute_padded(
     let batch = Tensor::from_vec(&[bucket, ctx.in_dims[0], ctx.in_dims[1], ctx.in_dims[2]], data);
 
     let t0 = Instant::now();
+    if let Some((t, shard)) = ctx.tracer {
+        // `launched` is stamped *after* executable resolution and padding:
+        // the gap to `batch_formed` is the batch-form overhead
+        for r in requests {
+            t.record_at(*shard, r.id, Stage::Launched, t0, bucket as u64);
+        }
+    }
     let result = ctx.exe.execute(&batch, requests.len());
     *pad_buf = batch.into_vec();
     let logits = result?;
     let compute_us = t0.elapsed().as_micros() as u64;
     let done = Instant::now();
+    if let Some((t, shard)) = ctx.tracer {
+        for r in requests {
+            t.record_at(*shard, r.id, Stage::Executed, done, compute_us);
+        }
+    }
 
     let hw = ctx.per_image.scale(requests.len());
 

@@ -76,23 +76,25 @@ pub struct LoadResult {
 }
 
 impl LoadResult {
-    /// Latency percentile (`p` in `[0, 100]`); 0 when no request completed.
-    pub fn percentile_us(&self, p: f64) -> u64 {
+    /// Latency percentile (`p` in `[0, 100]`); `None` when no request
+    /// completed — a run where everything failed must not report a
+    /// perfect 0 µs tail.
+    pub fn percentile_us(&self, p: f64) -> Option<u64> {
         if self.latencies_us.is_empty() {
-            return 0;
+            return None;
         }
         let mut v = self.latencies_us.clone();
         v.sort_unstable();
         let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[rank.min(v.len() - 1)]
+        Some(v[rank.min(v.len() - 1)])
     }
 
-    /// Mean latency (µs); 0 when no request completed.
-    pub fn mean_us(&self) -> f64 {
+    /// Mean latency (µs); `None` when no request completed.
+    pub fn mean_us(&self) -> Option<f64> {
         if self.latencies_us.is_empty() {
-            return 0.0;
+            return None;
         }
-        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+        Some(self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64)
     }
 }
 
@@ -436,7 +438,22 @@ mod tests {
             retries: 0,
         };
         assert!(r.percentile_us(50.0) <= r.percentile_us(99.0));
-        assert_eq!(r.percentile_us(100.0), 100);
-        assert!((r.mean_us() - 50.5).abs() < 1e-9);
+        assert_eq!(r.percentile_us(100.0), Some(100));
+        assert!((r.mean_us().unwrap() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_has_no_percentiles() {
+        let r = LoadResult {
+            offered_hz: 1.0,
+            achieved_hz: 0.0,
+            latencies_us: Vec::new(),
+            errors: 5,
+            overloaded: 0,
+            deadline_misses: 0,
+            retries: 0,
+        };
+        assert_eq!(r.percentile_us(99.0), None, "all-failed run must not report 0 µs");
+        assert_eq!(r.mean_us(), None);
     }
 }

@@ -1,4 +1,5 @@
-//! Serving metrics: per-shard counters merged on snapshot.
+//! Serving metrics: per-shard counters and latency histograms merged on
+//! snapshot.
 //!
 //! Every coordinator shard owns one [`Metrics`] value and is its only
 //! writer, so recording a completed batch touches an **uncontended**
@@ -8,17 +9,22 @@
 //! aggregate; [`ShardCounters`] is the compact per-shard summary those
 //! snapshots also report, so an operator can see whether traffic actually
 //! spreads across the pool.
+//!
+//! Latency lives in fixed-size log-bucketed histograms
+//! ([`crate::obs::LogHistogram`]): one end-to-end histogram plus a
+//! per-stage set ([`crate::obs::StageHistograms`] — queue-wait,
+//! batch-form, execute, write-back) kept both shard-wide and per model.
+//! Histograms merge by bucket-wise addition, so a merged snapshot is
+//! exact, order-independent, and bounded — unlike the sliding-window
+//! sample concatenation this replaced, which could exceed the window
+//! and over-weight recently-idle shards.
 
+use crate::obs::{LogHistogram, StageHistograms};
 use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Label used for requests served by the default (unnamed) backend model.
 pub const DEFAULT_MODEL_LABEL: &str = "default";
-
-/// Latency samples retained for percentile computation (a sliding window
-/// over the most recent requests — the network front-end serves
-/// indefinitely, so the history must not grow with total traffic).
-pub const LATENCY_WINDOW: usize = 65_536;
 
 /// Per-model serving counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -69,12 +75,19 @@ pub struct Metrics {
     /// Per-model request/batch counters, keyed by model name (the default
     /// backend model records under [`DEFAULT_MODEL_LABEL`]).
     pub per_model: BTreeMap<String, ModelCounters>,
-    /// End-to-end latencies (µs): a sliding window over the most recent
-    /// [`LATENCY_WINDOW`] completed requests, so a long-running server's
-    /// memory and snapshot cost stay bounded.
-    latencies_us: Vec<u64>,
-    /// Next window slot to overwrite once the window is full.
-    latency_cursor: usize,
+    /// Per-stage latency histograms (queue-wait / batch-form / execute /
+    /// write-back) across all models.
+    pub stages: StageHistograms,
+    /// Per-model per-stage latency histograms.  Kept beside
+    /// [`Metrics::per_model`] (instead of inside [`ModelCounters`]) so
+    /// the counter summary stays `Copy`; entries appear only for models
+    /// that actually served a batch (same map-growth guard as the
+    /// counters).
+    pub per_model_stages: BTreeMap<String, StageHistograms>,
+    /// End-to-end latency histogram (µs, enqueue → delivery): fixed
+    /// bucket count, so a long-running server's memory and snapshot
+    /// cost stay bounded no matter the traffic volume.
+    latency: LogHistogram,
     /// Total simulated accelerator energy (J).
     pub sim_energy_j: f64,
     /// Total simulated accelerator cycles.
@@ -124,16 +137,47 @@ impl Metrics {
         }
     }
 
-    /// Record one request's end-to-end latency (sliding window: once
-    /// [`LATENCY_WINDOW`] samples are held, the oldest is overwritten).
+    /// Record one request's end-to-end latency into the bounded
+    /// histogram.
     pub fn record_latency(&mut self, lat: Duration) {
-        let us = lat.as_micros() as u64;
-        if self.latencies_us.len() < LATENCY_WINDOW {
-            self.latencies_us.push(us);
-        } else {
-            self.latencies_us[self.latency_cursor] = us;
+        self.latency.record_duration(lat);
+    }
+
+    /// Record one request's queue-wait (enqueue → batch formation) for
+    /// `model`.  The shard-wide stage histogram always records; the
+    /// per-model one follows the same map-growth guard as the counters
+    /// (only models with a [`Metrics::per_model`] entry).
+    pub fn record_queue_wait(&mut self, model: &str, wait: Duration) {
+        self.stages.queue.record_duration(wait);
+        if self.per_model.contains_key(model) {
+            self.per_model_stages.entry(model.to_string()).or_default().queue.record_duration(wait);
         }
-        self.latency_cursor = (self.latency_cursor + 1) % LATENCY_WINDOW;
+    }
+
+    /// Record one launched batch's formation overhead (drain + padding +
+    /// executable resolve, excluding execution) and its kernel execution
+    /// time for `model`.
+    pub fn record_batch_stages(&mut self, model: &str, batch_form: Duration, execute_us: u64) {
+        self.stages.batch_form.record_duration(batch_form);
+        self.stages.execute.record(execute_us);
+        if self.per_model.contains_key(model) {
+            let s = self.per_model_stages.entry(model.to_string()).or_default();
+            s.batch_form.record_duration(batch_form);
+            s.execute.record(execute_us);
+        }
+    }
+
+    /// Record one reply's write-back time (encode + socket write on the
+    /// front-end) for `model`.
+    pub fn record_write_back(&mut self, model: &str, write: Duration) {
+        self.stages.write_back.record_duration(write);
+        if self.per_model.contains_key(model) {
+            self.per_model_stages
+                .entry(model.to_string())
+                .or_default()
+                .write_back
+                .record_duration(write);
+        }
     }
 
     /// Accumulate one batch's simulated accelerator cost.
@@ -148,6 +192,18 @@ impl Metrics {
         self.per_model.get(name).copied().unwrap_or_default()
     }
 
+    /// Per-stage histograms for one model (empty set when the model has
+    /// recorded nothing).
+    pub fn model_stages(&self, name: &str) -> StageHistograms {
+        self.per_model_stages.get(name).cloned().unwrap_or_default()
+    }
+
+    /// The end-to-end latency histogram (for wire export; use
+    /// [`Metrics::percentile_us`] for queries).
+    pub fn latency_histogram(&self) -> &LogHistogram {
+        &self.latency
+    }
+
     /// This shard's compact counter summary.
     pub fn counters(&self) -> ShardCounters {
         ShardCounters {
@@ -159,9 +215,13 @@ impl Metrics {
     }
 
     /// Fold another shard's snapshot into this one: counters sum,
-    /// per-model maps merge, latency samples concatenate (the merged
-    /// value is a *snapshot* for percentile queries — shards keep
-    /// recording into their own windows).
+    /// per-model maps merge, and every latency histogram merges by
+    /// bucket-wise addition — associative, commutative, and bounded, so
+    /// the merged value weighs each shard by exactly the samples it
+    /// recorded (an idle shard contributes nothing) and never grows
+    /// beyond the fixed bucket count.  The merged value is a *snapshot*
+    /// for percentile queries — shards keep recording into their own
+    /// histograms.
     pub fn merge(&mut self, other: &Metrics) {
         if self.backend.is_empty() {
             self.backend = other.backend.clone();
@@ -180,18 +240,18 @@ impl Metrics {
             m.failed_batches += c.failed_batches;
             m.deadline_misses += c.deadline_misses;
         }
-        self.latencies_us.extend_from_slice(&other.latencies_us);
+        for (name, s) in &other.per_model_stages {
+            self.per_model_stages.entry(name.clone()).or_default().merge(s);
+        }
+        self.stages.merge(&other.stages);
+        self.latency.merge(&other.latency);
     }
 
-    /// Latency percentile (p in [0, 100]); None until data arrives.
+    /// End-to-end latency percentile (p in [0, 100]); `None` until data
+    /// arrives.  Exact within one histogram bucket (≤ ~3.1% relative
+    /// error, always conservative) and exact at `p = 100`.
     pub fn percentile_us(&self, p: f64) -> Option<u64> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        Some(v[rank.min(v.len() - 1)])
+        self.latency.percentile_us(p)
     }
 
     /// Mean batch occupancy (live requests per launched batch).
@@ -270,15 +330,19 @@ mod tests {
     }
 
     #[test]
-    fn percentiles() {
+    fn percentiles_are_exact_within_a_bucket() {
         let mut m = Metrics::new();
         for us in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1000] {
             m.record_latency(Duration::from_micros(us));
         }
-        assert_eq!(m.percentile_us(0.0), Some(100));
-        assert_eq!(m.percentile_us(100.0), Some(1000));
+        // the histogram reports a bucket upper edge: conservative, and
+        // within 1/32 relative error of the exact order statistic
+        let p0 = m.percentile_us(0.0).unwrap();
+        assert!((100..=104).contains(&p0), "p0 {p0}");
         let p50 = m.percentile_us(50.0).unwrap();
-        assert!((500..=600).contains(&p50));
+        assert!((500..=620).contains(&p50), "p50 {p50}");
+        // p100 is the exact observed maximum
+        assert_eq!(m.percentile_us(100.0), Some(1000));
     }
 
     #[test]
@@ -287,19 +351,20 @@ mod tests {
     }
 
     #[test]
-    fn latency_window_is_bounded_and_slides() {
+    fn latency_history_is_bounded() {
         let mut m = Metrics::new();
-        for i in 0..(LATENCY_WINDOW + 10) {
-            m.record_latency(Duration::from_micros(i as u64));
+        for i in 0..200_000u64 {
+            m.record_latency(Duration::from_micros(i));
         }
-        assert_eq!(m.latencies_us.len(), LATENCY_WINDOW, "window must not grow");
-        // the oldest 10 samples were overwritten by the newest 10
-        assert_eq!(m.percentile_us(0.0), Some(10));
-        assert_eq!(m.percentile_us(100.0), Some((LATENCY_WINDOW + 9) as u64));
+        // the histogram's footprint is fixed regardless of volume
+        assert!(m.latency_histogram().to_sparse().len() <= crate::obs::BUCKET_COUNT);
+        assert_eq!(m.latency_histogram().count(), 200_000);
+        // and the exact maximum survives
+        assert_eq!(m.percentile_us(100.0), Some(199_999));
     }
 
     #[test]
-    fn merge_sums_counters_and_concatenates_latencies() {
+    fn merge_sums_counters_and_adds_histogram_buckets() {
         let mut a = Metrics::new();
         a.record_backend("native");
         a.record_batch("x", 4, 8);
@@ -326,10 +391,78 @@ mod tests {
         assert_eq!(merged.model("x"), x);
         let y = ModelCounters { requests: 8, batches: 1, failed_batches: 1, deadline_misses: 0 };
         assert_eq!(merged.model("y"), y);
-        assert_eq!(merged.percentile_us(0.0), Some(100));
+        // histograms merged by bucket addition: all three samples
+        // present, count exact, max exact
+        assert_eq!(merged.latency_histogram().count(), 3);
+        let p0 = merged.percentile_us(0.0).unwrap();
+        assert!((100..=104).contains(&p0), "p0 {p0}");
         assert_eq!(merged.percentile_us(100.0), Some(500));
         assert_eq!(merged.sim_cycles, 1500);
         assert!((merged.sim_energy_j - 1.5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_snapshots_stay_bounded_and_weigh_shards_by_samples() {
+        // the bug this replaced: concatenating shard windows grew the
+        // merged sample set without bound and over-weighted idle shards
+        let mut busy = Metrics::new();
+        for i in 0..100_000u64 {
+            busy.record_latency(Duration::from_micros(i % 1000));
+        }
+        let mut idle = Metrics::new();
+        idle.record_latency(Duration::from_micros(5));
+
+        let mut merged = Metrics::new();
+        merged.merge(&busy);
+        merged.merge(&idle);
+        assert_eq!(merged.latency_histogram().count(), 100_001);
+        assert!(merged.latency_histogram().to_sparse().len() <= crate::obs::BUCKET_COUNT);
+        // the idle shard's single sample cannot drag the median
+        assert!(merged.percentile_us(50.0).unwrap() >= 400);
+    }
+
+    #[test]
+    fn stage_recording_and_per_model_guard() {
+        let mut m = Metrics::new();
+        m.record_batch("a", 4, 8);
+        m.record_queue_wait("a", Duration::from_micros(50));
+        m.record_batch_stages("a", Duration::from_micros(20), 700);
+        m.record_write_back("a", Duration::from_micros(9));
+        // unknown model: shard-wide stages record, the map does not grow
+        m.record_queue_wait("bogus", Duration::from_micros(1));
+        m.record_write_back("bogus", Duration::from_micros(1));
+
+        assert_eq!(m.stages.queue.count(), 2);
+        assert_eq!(m.stages.batch_form.count(), 1);
+        assert_eq!(m.stages.execute.count(), 1);
+        assert_eq!(m.stages.write_back.count(), 2);
+        assert_eq!(m.stages.execute.percentile_us(100.0), Some(700));
+
+        let a = m.model_stages("a");
+        assert_eq!(a.queue.count(), 1);
+        assert_eq!(a.write_back.count(), 1);
+        assert!(m.model_stages("bogus").is_empty());
+        assert_eq!(m.per_model_stages.len(), 1, "made-up names must not create entries");
+    }
+
+    #[test]
+    fn merge_combines_stage_histograms_per_model() {
+        let mut a = Metrics::new();
+        a.record_batch("x", 1, 1);
+        a.record_queue_wait("x", Duration::from_micros(10));
+        let mut b = Metrics::new();
+        b.record_batch("x", 1, 1);
+        b.record_queue_wait("x", Duration::from_micros(30));
+        b.record_batch("y", 1, 1);
+        b.record_batch_stages("y", Duration::from_micros(5), 80);
+
+        let mut merged = Metrics::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.stages.queue.count(), 2);
+        assert_eq!(merged.model_stages("x").queue.count(), 2);
+        assert_eq!(merged.model_stages("y").execute.count(), 1);
+        assert_eq!(merged.model_stages("y").execute.max_us(), 80);
     }
 
     #[test]

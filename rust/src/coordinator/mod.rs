@@ -61,9 +61,9 @@ pub mod server;
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use backend::{default_backend, Executable, ExecutionBackend, NativeBackend, NativePrecision};
-pub use batcher::BatchPolicy;
+pub use batcher::{BatchPolicy, LaunchReason};
 pub use cost::{CostModel, HwCost};
 pub use engine::Engine;
 pub use metrics::{DEFAULT_MODEL_LABEL, Metrics, ModelCounters, ShardCounters};
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{InferenceRequest, InferenceResponse, Ingress};
 pub use server::{Coordinator, CoordinatorBuilder, DEFAULT_MAX_SHARDS};

@@ -23,12 +23,35 @@ pub struct InferenceRequest {
     /// deadline-exceeded error instead of spending compute on a reply
     /// nobody is waiting for.
     pub deadline: Option<Instant>,
+    /// Ingress timestamps captured by a network front-end (`None` for
+    /// in-process submissions).  Carried on the request so the owning
+    /// shard records the `accepted`/`decoded` lifecycle events into its
+    /// own trace ring — keeping ring writes single-stage-ordered without
+    /// a cross-thread handshake on the hot path.
+    pub ingress: Option<Ingress>,
+}
+
+/// Front-end ingress timestamps for one request (see
+/// [`crate::obs::Stage`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Ingress {
+    /// Frame header fully read off the socket.
+    pub accepted: Instant,
+    /// Wire frame decoded and validated.
+    pub decoded: Instant,
 }
 
 impl InferenceRequest {
     /// A request for the default model, enqueued now.
     pub fn new(id: u64, image: Tensor<f32>) -> Self {
-        InferenceRequest { id, image, model: None, enqueued_at: Instant::now(), deadline: None }
+        InferenceRequest {
+            id,
+            image,
+            model: None,
+            enqueued_at: Instant::now(),
+            deadline: None,
+            ingress: None,
+        }
     }
 
     /// Target a named registry model instead of the default.
@@ -40,6 +63,12 @@ impl InferenceRequest {
     /// Attach an absolute deadline.
     pub fn with_deadline(mut self, deadline: Instant) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach front-end ingress timestamps (trace `accepted`/`decoded`).
+    pub fn with_ingress(mut self, ingress: Ingress) -> Self {
+        self.ingress = Some(ingress);
         self
     }
 

@@ -55,15 +55,32 @@
 //! before each launch for injected latency, execution errors, kernel
 //! panics, and worker kills, and an attached registry inherits the plan
 //! for torn artifact loads.  Without a plan every hook is inert.
+//!
+//! # Observability
+//!
+//! Unless disabled with [`CoordinatorBuilder::trace_capacity`]`(0)`, the
+//! pool allocates one lock-free [`TraceBuf`] ring per shard and records
+//! every request's lifecycle into it: `enqueued` → `batch_formed` →
+//! `launched` → `executed` on the worker (plus `accepted`/`decoded`
+//! ingress timestamps carried in on the request, and
+//! `deadline_drop`/`fault` annotations), with the serving front-ends
+//! appending `reply_written`/`retried` through
+//! [`Coordinator::record_reply_written`] /
+//! [`Coordinator::record_retry_advised`].  The same stage boundaries
+//! feed the per-stage latency histograms in each shard's [`Metrics`]
+//! (queue-wait, batch-form, execute, write-back).  See
+//! `docs/ARCHITECTURE.md` ("Observability") for the stage diagram and
+//! overhead budget.
 
 use crate::coordinator::backend::{ExecutionBackend, NativeBackend};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::cost::CostModel;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::{DEFAULT_MODEL_LABEL, Metrics, ShardCounters};
-use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::coordinator::request::{InferenceRequest, InferenceResponse, Ingress};
 use crate::faults::{FaultPlan, FaultSite};
 use crate::model_store::ModelRegistry;
+use crate::obs::{DEFAULT_TRACE_CAPACITY, Stage, TraceBuf};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -223,6 +240,7 @@ pub struct CoordinatorBuilder {
     default_model: Option<String>,
     shards: Option<usize>,
     faults: Option<Arc<FaultPlan>>,
+    trace_capacity: Option<usize>,
 }
 
 impl CoordinatorBuilder {
@@ -327,6 +345,17 @@ impl CoordinatorBuilder {
     /// [`NativeBackend::with_threads`] accordingly.
     pub fn shards(mut self, n: usize) -> Self {
         self.shards = Some(n);
+        self
+    }
+
+    /// Per-shard capacity (events) of the request-lifecycle trace ring
+    /// (default [`DEFAULT_TRACE_CAPACITY`]).  `0` disables tracing
+    /// entirely — no ring is allocated and no event is ever recorded —
+    /// which is the configuration the coordinator bench's overhead
+    /// phase compares against.  The ring overwrites oldest-first, so
+    /// the capacity bounds memory, not history.
+    pub fn trace_capacity(mut self, events_per_shard: usize) -> Self {
+        self.trace_capacity = Some(events_per_shard);
         self
     }
 
@@ -451,6 +480,20 @@ impl CoordinatorBuilder {
         }
         backends.insert(0, backend);
 
+        // One lock-free trace ring per shard, allocated up front (0 =
+        // tracing off; the recording code never runs).
+        let tracer = match self.trace_capacity.unwrap_or(DEFAULT_TRACE_CAPACITY) {
+            0 => None,
+            cap => Some(Arc::new(TraceBuf::new(backends.len(), cap))),
+        };
+        let config = ShardConfig {
+            policy,
+            cost,
+            registry: registry.clone(),
+            faults: faults.clone(),
+            tracer: tracer.clone(),
+        };
+
         // Spawn every shard worker; each compiles on its own thread
         // (backend executables may not be Send) and reports startup
         // through a ready channel.  All shards must come up before
@@ -459,15 +502,8 @@ impl CoordinatorBuilder {
         let mut readies = Vec::with_capacity(backends.len());
         for (shard_id, backend) in backends.into_iter().enumerate() {
             let metrics = Arc::new(Mutex::new(Metrics::new()));
-            let (tx, worker, ready_rx) = spawn_shard(
-                shard_id,
-                backend,
-                &policy,
-                &cost,
-                registry.clone(),
-                Arc::clone(&metrics),
-                faults.clone(),
-            )?;
+            let (tx, worker, ready_rx) =
+                spawn_shard(shard_id, backend, &config, Arc::clone(&metrics))?;
             shards.push(ShardState {
                 tx: RwLock::new(tx),
                 worker: Mutex::new(Some(worker)),
@@ -500,13 +536,7 @@ impl CoordinatorBuilder {
             restarts: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         });
-        let respawner = Respawner {
-            factory,
-            policy,
-            cost,
-            registry: registry.clone(),
-            faults: faults.clone(),
-        };
+        let respawner = Respawner { factory, config };
         let supervisor_pool = Arc::clone(&pool);
         let supervisor = std::thread::Builder::new()
             .name("pasm-coord-supervisor".to_string())
@@ -520,6 +550,7 @@ impl CoordinatorBuilder {
             registry,
             default_model,
             faults,
+            tracer,
         })
     }
 }
@@ -548,10 +579,19 @@ struct Pool {
 /// Everything the supervisor needs to rebuild a dead shard.
 struct Respawner {
     factory: Option<BackendFactory>,
+    config: ShardConfig,
+}
+
+/// Everything a shard worker needs besides its backend and its metrics
+/// slot — shared verbatim between the initial spawns and supervisor
+/// respawns, so a restarted shard runs the same policy, fault plan, and
+/// trace ring as the one it replaces.
+struct ShardConfig {
     policy: BatchPolicy,
     cost: CostModel,
     registry: Option<Arc<ModelRegistry>>,
     faults: Option<Arc<FaultPlan>>,
+    tracer: Option<Arc<TraceBuf>>,
 }
 
 /// Spawn one shard worker; the returned ready channel reports whether its
@@ -560,21 +600,21 @@ struct Respawner {
 fn spawn_shard(
     shard_id: usize,
     backend: Box<dyn ExecutionBackend>,
-    policy: &BatchPolicy,
-    cost: &CostModel,
-    registry: Option<Arc<ModelRegistry>>,
+    config: &ShardConfig,
     metrics: Arc<Mutex<Metrics>>,
-    faults: Option<Arc<FaultPlan>>,
 ) -> Result<(mpsc::Sender<Msg>, JoinHandle<()>, mpsc::Receiver<Result<(), String>>)> {
     let (tx, rx) = mpsc::channel::<Msg>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-    let buckets = policy.buckets.clone();
-    let policy_worker = policy.clone();
-    let cost = *cost;
+    let buckets = config.policy.buckets.clone();
+    let policy = config.policy.clone();
+    let cost = config.cost;
+    let registry = config.registry.clone();
+    let faults = config.faults.clone();
+    let tracer = config.tracer.clone();
     let worker = std::thread::Builder::new()
         .name(format!("pasm-coord-{shard_id}"))
         .spawn(move || {
-            let engine = match Engine::new(backend, &buckets, &cost, registry) {
+            let mut engine = match Engine::new(backend, &buckets, &cost, registry) {
                 Ok(e) => {
                     // label the metrics before signalling ready so
                     // build() never returns with an empty backend name
@@ -587,7 +627,12 @@ fn spawn_shard(
                     return;
                 }
             };
-            worker_loop(engine, policy_worker, rx, metrics, shard_id, faults);
+            if let Some(t) = &tracer {
+                // the engine stamps `launched`/`executed` itself, right
+                // around the kernel call
+                engine.set_tracer(Arc::clone(t), shard_id);
+            }
+            worker_loop(engine, policy, rx, metrics, shard_id, faults, tracer);
         })
         .with_context(|| format!("spawn coordinator shard {shard_id}"))?;
     Ok((tx, worker, ready_rx))
@@ -618,15 +663,7 @@ fn supervise(pool: Arc<Pool>, respawner: Respawner) {
                 continue;
             };
             let respawned = factory().and_then(|backend| {
-                spawn_shard(
-                    shard_id,
-                    backend,
-                    &respawner.policy,
-                    &respawner.cost,
-                    respawner.registry.clone(),
-                    Arc::clone(&shard.metrics),
-                    respawner.faults.clone(),
-                )
+                spawn_shard(shard_id, backend, &respawner.config, Arc::clone(&shard.metrics))
             });
             let Ok((tx, worker, ready_rx)) = respawned else {
                 continue;
@@ -654,6 +691,7 @@ pub struct Coordinator {
     registry: Option<Arc<ModelRegistry>>,
     default_model: Option<Arc<str>>,
     faults: Option<Arc<FaultPlan>>,
+    tracer: Option<Arc<TraceBuf>>,
 }
 
 impl Coordinator {
@@ -663,7 +701,7 @@ impl Coordinator {
         &self,
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
-        self.submit_routed(image, self.default_model.clone(), None)
+        Ok(self.submit_routed(image, self.default_model.clone(), None, None)?.1)
     }
 
     /// Submit one image to a named registry model.
@@ -672,7 +710,7 @@ impl Coordinator {
         model: &str,
         image: Tensor<f32>,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
-        self.submit_routed(image, Some(Arc::from(model)), None)
+        Ok(self.submit_routed(image, Some(Arc::from(model)), None, None)?.1)
     }
 
     /// Submit with an optional model *and* an optional absolute deadline;
@@ -689,7 +727,27 @@ impl Coordinator {
             Some(m) => Some(Arc::from(m)),
             None => self.default_model.clone(),
         };
-        self.submit_routed(image, model, deadline)
+        Ok(self.submit_routed(image, model, deadline, None)?.1)
+    }
+
+    /// [`Coordinator::submit_deadline`] plus front-end [`Ingress`]
+    /// timestamps, returning the coordinator-assigned request id next to
+    /// the response receiver.  The id is what later lifecycle events
+    /// ([`Coordinator::record_reply_written`],
+    /// [`Coordinator::record_retry_advised`]) key on, and what the
+    /// `get_trace` wire frame filters by.
+    pub fn submit_traced(
+        &self,
+        model: Option<&str>,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+        ingress: Option<Ingress>,
+    ) -> Result<(u64, mpsc::Receiver<Result<InferenceResponse, String>>)> {
+        let model = match model {
+            Some(m) => Some(Arc::from(m)),
+            None => self.default_model.clone(),
+        };
+        self.submit_routed(image, model, deadline, ingress)
     }
 
     fn submit_routed(
@@ -697,10 +755,11 @@ impl Coordinator {
         image: Tensor<f32>,
         model: Option<Arc<str>>,
         deadline: Option<Instant>,
-    ) -> Result<mpsc::Receiver<Result<InferenceResponse, String>>> {
+        ingress: Option<Ingress>,
+    ) -> Result<(u64, mpsc::Receiver<Result<InferenceResponse, String>>)> {
         let (rtx, rrx) = mpsc::channel();
-        self.submit_completion(image, model, deadline, Completion::channel(rtx))?;
-        Ok(rrx)
+        let id = self.submit_completion(image, model, deadline, ingress, Completion::channel(rtx))?;
+        Ok((id, rrx))
     }
 
     /// Submit one image and deliver the result through `on_done` instead
@@ -729,11 +788,34 @@ impl Coordinator {
     where
         F: FnOnce(Result<InferenceResponse, String>) + Send + 'static,
     {
+        self.submit_with_traced(model, image, deadline, None, move |_, r| on_done(r)).map(|_| ())
+    }
+
+    /// [`Coordinator::submit_with_deadline`] plus front-end [`Ingress`]
+    /// timestamps, returning the assigned request id (see
+    /// [`Coordinator::submit_traced`]).  The callback also receives that
+    /// id as its first argument — it is allocated *before* the request
+    /// enters a shard queue, so even a completion that fires before this
+    /// method returns can key its trace events correctly.
+    pub fn submit_with_traced<F>(
+        &self,
+        model: Option<&str>,
+        image: Tensor<f32>,
+        deadline: Option<Instant>,
+        ingress: Option<Ingress>,
+        on_done: F,
+    ) -> Result<u64>
+    where
+        F: FnOnce(u64, Result<InferenceResponse, String>) + Send + 'static,
+    {
         let model = match model {
             Some(m) => Some(Arc::from(m)),
             None => self.default_model.clone(),
         };
-        self.submit_completion(image, model, deadline, Completion::callback(Box::new(on_done)))
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let done = Completion::callback(Box::new(move |r| on_done(id, r)));
+        self.submit_prepared(id, image, model, deadline, ingress, done)?;
+        Ok(id)
     }
 
     fn submit_completion(
@@ -741,13 +823,28 @@ impl Coordinator {
         image: Tensor<f32>,
         model: Option<Arc<str>>,
         deadline: Option<Instant>,
+        ingress: Option<Ingress>,
+        completion: Completion,
+    ) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_prepared(id, image, model, deadline, ingress, completion)?;
+        Ok(id)
+    }
+
+    fn submit_prepared(
+        &self,
+        id: u64,
+        image: Tensor<f32>,
+        model: Option<Arc<str>>,
+        deadline: Option<Instant>,
+        ingress: Option<Ingress>,
         completion: Completion,
     ) -> Result<()> {
         let shard = self.shard_for(model.as_deref());
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = InferenceRequest::new(id, image);
         req.model = model;
         req.deadline = deadline;
+        req.ingress = ingress;
         // clone the sender out of the read lock so a respawn (write
         // lock) never waits on a blocking channel send
         let tx = rlock(&self.pool.shards[shard].tx).clone();
@@ -762,7 +859,8 @@ impl Coordinator {
             } else {
                 anyhow::anyhow!("shard {shard} unavailable (worker died; respawn pending)")
             }
-        })
+        })?;
+        Ok(())
     }
 
     /// Submit to the default model and block for the answer (convenience).
@@ -790,6 +888,47 @@ impl Coordinator {
     /// serving front-ends consult it for socket resets).
     pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
         self.faults.as_ref()
+    }
+
+    /// The request-lifecycle trace rings, if tracing is enabled (see
+    /// [`CoordinatorBuilder::trace_capacity`]).  Front-ends record
+    /// their own events through this handle; the `get_trace` wire frame
+    /// snapshots it.
+    pub fn tracer(&self) -> Option<&Arc<TraceBuf>> {
+        self.tracer.as_ref()
+    }
+
+    /// Record that the serving front-end wrote (or queued) the reply for
+    /// request `id`: a `reply_written` trace event (`aux` = encoded
+    /// reply bytes) plus a write-back sample in the owning shard's
+    /// per-stage histograms.  `model` labels the per-model histogram;
+    /// unnamed traffic follows the default model, mirroring request
+    /// routing.
+    pub fn record_reply_written(
+        &self,
+        shard: usize,
+        id: u64,
+        model: Option<&str>,
+        took: Duration,
+        bytes: usize,
+    ) {
+        if let Some(t) = &self.tracer {
+            t.record(shard, id, Stage::ReplyWritten, bytes as u64);
+        }
+        if let Some(s) = self.pool.shards.get(shard) {
+            let label = model.or(self.default_model.as_deref()).unwrap_or(DEFAULT_MODEL_LABEL);
+            lock(&s.metrics).record_write_back(label, took);
+        }
+    }
+
+    /// Record a `retried` trace event: request `id` was answered with
+    /// the retryable error code `code` (as `aux`).  The client's retry
+    /// arrives as a fresh request id — a new span — so this event is
+    /// what links the two when reading a trace.
+    pub fn record_retry_advised(&self, shard: usize, id: u64, code: u64) {
+        if let Some(t) = &self.tracer {
+            t.record(shard, id, Stage::Retried, code);
+        }
     }
 
     /// The model unnamed requests route to (`None` = the backend's
@@ -874,15 +1013,38 @@ impl Drop for Coordinator {
 type Pending = (InferenceRequest, Completion);
 type ModelQueues = BTreeMap<Option<Arc<str>>, VecDeque<Pending>>;
 
-fn push(queues: &mut ModelQueues, r: InferenceRequest, done: Completion) {
-    queues.entry(r.model.clone()).or_default().push_back((r, done));
+/// Enqueue one request, recording its `accepted`/`decoded` ingress
+/// timestamps (if a front-end captured them) and the `enqueued` event
+/// (`aux` = queue depth after the push) into the shard's trace ring.
+fn push(
+    queues: &mut ModelQueues,
+    r: InferenceRequest,
+    done: Completion,
+    tracer: Option<&Arc<TraceBuf>>,
+    shard_id: usize,
+) {
+    let q = queues.entry(r.model.clone()).or_default();
+    if let Some(t) = tracer {
+        if let Some(ing) = r.ingress {
+            t.record_at(shard_id, r.id, Stage::Accepted, ing.accepted, 0);
+            t.record_at(shard_id, r.id, Stage::Decoded, ing.decoded, 0);
+        }
+        t.record(shard_id, r.id, Stage::Enqueued, (q.len() + 1) as u64);
+    }
+    q.push_back((r, done));
 }
 
 /// Drop every queued request whose deadline has passed, answering each
 /// with a typed error and counting it as a deadline miss.  Runs on every
 /// worker iteration, *before* the launch decision — an expired request
 /// never costs a batch slot.
-fn purge_expired(queues: &mut ModelQueues, metrics: &Mutex<Metrics>, now: Instant) {
+fn purge_expired(
+    queues: &mut ModelQueues,
+    metrics: &Mutex<Metrics>,
+    now: Instant,
+    tracer: Option<&Arc<TraceBuf>>,
+    shard_id: usize,
+) {
     for (model, q) in queues.iter_mut() {
         if !q.iter().any(|(r, _)| r.expired_at(now)) {
             continue;
@@ -893,6 +1055,9 @@ fn purge_expired(queues: &mut ModelQueues, metrics: &Mutex<Metrics>, now: Instan
             if r.expired_at(now) {
                 lock(metrics).record_deadline_miss(label);
                 let queued = now.duration_since(r.enqueued_at);
+                if let Some(t) = tracer {
+                    t.record(shard_id, r.id, Stage::DeadlineDrop, queued.as_micros() as u64);
+                }
                 let msg = format!("deadline exceeded before batch launch (queued {queued:?})");
                 done.deliver(Err(msg));
             } else {
@@ -910,6 +1075,7 @@ fn worker_loop(
     metrics: Arc<Mutex<Metrics>>,
     shard_id: usize,
     faults: Option<Arc<FaultPlan>>,
+    tracer: Option<Arc<TraceBuf>>,
 ) {
     // one queue per model: a launched batch never mixes models, and the
     // policy's wait budget applies to each model's oldest request
@@ -925,13 +1091,13 @@ fn worker_loop(
         let held: usize = queues.values().map(VecDeque::len).sum();
         if held == 0 && !shutting_down {
             match rx.recv() {
-                Ok(Msg::Request(r, done)) => push(&mut queues, r, done),
+                Ok(Msg::Request(r, done)) => push(&mut queues, r, done, tracer.as_ref(), shard_id),
                 Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(Msg::Request(r, done)) => push(&mut queues, r, done),
+                Ok(Msg::Request(r, done)) => push(&mut queues, r, done, tracer.as_ref(), shard_id),
                 Ok(Msg::Shutdown) => {
                     shutting_down = true;
                     break;
@@ -944,7 +1110,7 @@ fn worker_loop(
             }
         }
 
-        purge_expired(&mut queues, &metrics, Instant::now());
+        purge_expired(&mut queues, &metrics, Instant::now(), tracer.as_ref(), shard_id);
         queues.retain(|_, q| !q.is_empty());
         if queues.is_empty() {
             if shutting_down {
@@ -973,7 +1139,7 @@ fn worker_loop(
             // wait a beat for more requests (bounded by the wait budget)
             if let Ok(msg) = rx.recv_timeout(policy.max_wait) {
                 match msg {
-                    Msg::Request(r, done) => push(&mut queues, r, done),
+                    Msg::Request(r, done) => push(&mut queues, r, done, tracer.as_ref(), shard_id),
                     Msg::Shutdown => shutting_down = true,
                 }
             }
@@ -987,9 +1153,15 @@ fn worker_loop(
                 // die silently with queues still held: the completion
                 // drop-guards answer every stranded request with a typed
                 // error, and the supervisor respawns this shard
+                if let Some(t) = &tracer {
+                    t.record(shard_id, 0, Stage::Fault, 1);
+                }
                 return;
             }
             if let Some(extra) = plan.injected_latency() {
+                if let Some(t) = &tracer {
+                    t.record(shard_id, 0, Stage::Fault, 4);
+                }
                 std::thread::sleep(extra);
             }
         }
@@ -1003,6 +1175,15 @@ fn worker_loop(
         let started = Instant::now();
         let seq = batch_seq;
         batch_seq += 1;
+        // `started` is the batch-formation instant: queue-wait ends here
+        // for every drained request, batch-form overhead starts here
+        if let Some(t) = &tracer {
+            for (r, _) in &batch {
+                t.record_at(shard_id, r.id, Stage::BatchFormed, started, bucket as u64);
+            }
+        }
+        let queue_waits: Vec<Duration> =
+            batch.iter().map(|(r, _)| started.saturating_duration_since(r.enqueued_at)).collect();
         // Contain kernel panics (e.g. the fixed-point overflow guards on an
         // extreme input): the batch fails, the worker keeps serving.  The
         // engine's only cross-batch mutable state is a staging buffer that
@@ -1032,6 +1213,11 @@ fn worker_loop(
                     resp.shard = shard_id;
                     resp.batch_seq = seq;
                 }
+                // batch-form overhead = wall time around the engine call
+                // minus the kernel execution the engine measured itself
+                let compute_us = responses.first().map_or(0, |r| r.compute_us);
+                let batch_form =
+                    started.elapsed().saturating_sub(Duration::from_micros(compute_us));
                 // one uncontended shard-local lock per batch, never a
                 // global one: snapshot readers merge across shards
                 let mut m = lock(&metrics);
@@ -1042,14 +1228,30 @@ fn worker_loop(
                 for (req, _) in &batch {
                     m.record_latency(req.enqueued_at.elapsed());
                 }
+                for w in &queue_waits {
+                    m.record_queue_wait(label, *w);
+                }
+                m.record_batch_stages(label, batch_form, compute_us);
                 drop(m);
                 for ((_, done), resp) in batch.into_iter().zip(responses) {
                     done.deliver(Ok(resp));
                 }
             }
             Err(e) => {
-                lock(&metrics).record_failed_batch(label);
                 let msg = format!("batch failed after {:?}: {e:#}", started.elapsed());
+                if let Some(t) = &tracer {
+                    // fault kinds: 2 = execution error, 3 = kernel panic
+                    let kind = if msg.contains("execution panicked") { 3 } else { 2 };
+                    for (r, _) in &batch {
+                        t.record(shard_id, r.id, Stage::Fault, kind);
+                    }
+                }
+                let mut m = lock(&metrics);
+                m.record_failed_batch(label);
+                for w in &queue_waits {
+                    m.record_queue_wait(label, *w);
+                }
+                drop(m);
                 for (_, done) in batch {
                     done.deliver(Err(msg.clone()));
                 }
@@ -1159,5 +1361,52 @@ mod tests {
         assert_eq!(coord.metrics().failed_batches, 0);
         let plan = coord.fault_plan().unwrap();
         assert_eq!(plan.counters().total(), 0, "an inert plan must never fire");
+    }
+
+    #[test]
+    fn lifecycle_events_and_stage_histograms_are_recorded() {
+        let coord = CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(1, 4)))
+            .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(2);
+        let resp = coord.infer(render_digit(&mut rng, 3, 0.05)).unwrap();
+        let tracer = coord.tracer().expect("tracing is on by default");
+        let spans = crate::obs::assemble_spans(&tracer.snapshot());
+        let span = spans.iter().find(|s| s.id == resp.id).expect("span for the served request");
+        let mut last = 0u64;
+        for stage in [Stage::Enqueued, Stage::BatchFormed, Stage::Launched, Stage::Executed] {
+            let t = span.stage_time(stage).unwrap_or_else(|| panic!("missing {stage:?}"));
+            assert!(t >= last, "{stage:?} ran backwards");
+            last = t;
+        }
+        // in-process submissions have no front-end, so the span is not
+        // *complete* (no accepted/decoded/reply_written)
+        assert!(!span.is_complete());
+        // the front-end helpers append write-back under the same id
+        coord.record_reply_written(resp.shard, resp.id, None, Duration::from_micros(5), 64);
+        let m = coord.metrics();
+        assert!(m.stages.queue.count() > 0, "queue-wait histogram is empty");
+        assert!(m.stages.batch_form.count() > 0, "batch-form histogram is empty");
+        assert!(m.stages.execute.count() > 0, "execute histogram is empty");
+        assert!(m.stages.write_back.count() > 0, "write-back histogram is empty");
+    }
+
+    #[test]
+    fn trace_capacity_zero_disables_tracing() {
+        let coord = CoordinatorBuilder::new()
+            .backend(NativeBackend::new(encoded(1, 4)))
+            .batch_policy(BatchPolicy::new(vec![1], Duration::from_millis(1)))
+            .trace_capacity(0)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(2);
+        let resp = coord.infer(render_digit(&mut rng, 3, 0.05)).unwrap();
+        assert!(coord.tracer().is_none());
+        // the write-back histogram still records: stage metrics are
+        // independent of tracing
+        coord.record_reply_written(resp.shard, resp.id, None, Duration::from_micros(5), 64);
+        assert!(coord.metrics().stages.write_back.count() > 0);
     }
 }

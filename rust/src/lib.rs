@@ -54,6 +54,11 @@
 //!   thread-per-connection TCP server with admission control
 //!   ([`serving::net`]), and a blocking client ([`serving::client`])
 //!   with bounded, seeded-jitter retries.
+//! * [`obs`] — observability primitives: mergeable log-bucketed latency
+//!   histograms ([`obs::LogHistogram`], bounded memory, exact-within-bucket
+//!   percentiles) and lock-free per-shard request-lifecycle trace rings
+//!   ([`obs::TraceBuf`]), threaded through the coordinator and both
+//!   front-ends and exported over the wire (`metrics` / `trace` frames).
 //! * [`faults`] — deterministic fault injection ([`faults::FaultPlan`]):
 //!   seeded schedules of batch panics, execution errors, injected
 //!   latency, shard-worker kills, torn artifact loads, and socket
@@ -75,6 +80,7 @@ pub mod faults;
 pub mod fpga;
 pub mod hw;
 pub mod model_store;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -12,9 +12,12 @@
 //!             [--max-inflight N] [--port-file PATH] [--for-s SECS] [--shards N]
 //!             [--chaos seed=7,panic=0.05,reset=0.02]
 //! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
-//!             [--models a,b,c] [--expect-multi-shard]
+//!             [--models a,b,c] [--expect-multi-shard] [--stage-breakdown]
 //!             [--pipeline-depth D] [--idle-conns N]
 //!             [--retries R] [--retry-seed S] [--deadline-ms MS] [--expect-faults]
+//! repro trace --addr ADDR [--id N] [--limit N] [--json] [--require-complete]
+//! repro perf-gate --baseline PATH --current PATH [--max-req-regress F]
+//!             [--max-p99-growth F] [--allow-regression]
 //! repro sweep [--target asic|fpga]
 //! repro list                     list report ids
 //! ```
@@ -32,9 +35,11 @@ use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder, NativeBackend, Na
 use pasm_accel::faults::FaultPlan;
 use pasm_accel::hw::Tech;
 use pasm_accel::model_store::{self, ModelRegistry};
+use pasm_accel::obs::{assemble_spans, Span, TraceEvent};
 use pasm_accel::quant::codebook::encode_weights;
 use pasm_accel::quant::fixed::QFormat;
 use pasm_accel::report::{all_report_ids, run_report};
+use pasm_accel::runtime::json::{self, Json};
 use pasm_accel::serving::net::write_port_file;
 #[cfg(unix)]
 use pasm_accel::serving::{EventedConfig, EventedServer};
@@ -60,6 +65,8 @@ fn main() -> ExitCode {
         "pack" => cmd_pack(&args, &flags),
         "serve" => cmd_serve(&flags),
         "bench-net" => cmd_bench_net(&flags),
+        "trace" => cmd_trace(&flags),
+        "perf-gate" => cmd_perf_gate(&flags),
         "sweep" => cmd_sweep(&flags),
         "list" => {
             for id in all_report_ids() {
@@ -82,7 +89,7 @@ fn main() -> ExitCode {
     }
 }
 
-const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|sweep|list
+const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|trace|perf-gate|sweep|list
   report all | report fig15      regenerate paper exhibits
   simulate --variant pasm --bins 16 --width 32 --seed 1
   pack <dir> [--bins 16] [--width 32] [--name NAME] [--seed 7]
@@ -95,9 +102,12 @@ const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|sweep|lis
         [--port-file PATH] [--for-s SECS] [--shards N]
         [--chaos seed=7,panic=0.05,reset=0.02]
   bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
-        [--models digits-b8,digits-b16] [--expect-multi-shard]
+        [--models digits-b8,digits-b16] [--expect-multi-shard] [--stage-breakdown]
         [--pipeline-depth 32] [--idle-conns 5000]
         [--retries 3] [--retry-seed 29] [--deadline-ms 250] [--expect-faults]
+  trace --addr 127.0.0.1:7878 [--id N] [--limit 512] [--json] [--require-complete]
+  perf-gate --baseline BENCH_baseline.json --current BENCH_serving.json
+        [--max-req-regress 0.10] [--max-p99-growth 0.15] [--allow-regression]
   sweep --target asic|fpga";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -640,13 +650,16 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "net bench against {addr}: offered {:.1} req/s, achieved {:.1} req/s over {conns} conn(s)",
         r.offered_hz, r.achieved_hz
     );
+    // a run where nothing completed has no percentiles — print "-",
+    // the terminal-outcome checks below decide whether that's an error
+    let pct = |p: f64| r.percentile_us(p).map_or_else(|| "-".to_string(), |v| v.to_string());
     println!(
         "completed {}: p50 {} us, p90 {} us, p99 {} us \
          ({} overloaded, {} errors, {} deadline miss(es), {} retries)",
         r.latencies_us.len(),
-        r.percentile_us(50.0),
-        r.percentile_us(90.0),
-        r.percentile_us(99.0),
+        pct(50.0),
+        pct(90.0),
+        pct(99.0),
         r.overloaded,
         r.errors,
         r.deadline_misses,
@@ -687,6 +700,26 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             "  shard {i}: {} request(s) in {} batch(es) ({} failed)",
             s.requests, s.batches, s.failed_batches
         );
+    }
+    if flags.contains_key("stage-breakdown") {
+        println!("per-stage latency (merged across shards):");
+        for (name, h) in m.stages.named() {
+            match (h.percentile_us(50.0), h.percentile_us(99.0), h.mean_us()) {
+                (Some(p50), Some(p99), Some(mean)) => println!(
+                    "  {name:<11} {:>7} sample(s): p50 {p50} us, p99 {p99} us, mean {mean:.1} us",
+                    h.count()
+                ),
+                _ => println!("  {name:<11} no samples"),
+            }
+        }
+        for (i, st) in m.shard_stages.iter().enumerate() {
+            println!(
+                "  shard {i}: {} executed batch(es), queue p99 {} us, execute p99 {} us",
+                st.execute.count(),
+                st.queue.percentile_us(99.0).unwrap_or(0),
+                st.execute.percentile_us(99.0).unwrap_or(0)
+            );
+        }
     }
     if flags.contains_key("expect-multi-shard") {
         anyhow::ensure!(
@@ -766,6 +799,220 @@ fn cmd_idle_conns(addr: &str, n: usize) -> anyhow::Result<()> {
     );
     drop(socks);
     Ok(())
+}
+
+/// `repro trace --addr HOST:PORT`: pull the server's request-lifecycle
+/// trace ring over the wire (`get_trace`), assemble per-request spans,
+/// and pretty-print each stage as a delta from the span's first event.
+/// `--id N` filters to one request, `--limit N` caps the event count,
+/// `--json` dumps raw events + span summaries as one JSON document, and
+/// `--require-complete` turns the command into a smoke check: it fails
+/// unless at least one span carries every lifecycle stage in order.
+fn cmd_trace(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags.get("addr").context(
+        "usage: repro trace --addr HOST:PORT [--id N] [--limit N] [--json] [--require-complete]",
+    )?;
+    let id: Option<u64> = flags.get("id").and_then(|v| v.parse().ok());
+    let limit: Option<u64> = flags.get("limit").and_then(|v| v.parse().ok());
+    let mut client = pasm_accel::serving::Client::connect(addr.as_str())
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let frame = client.trace(id, limit).map_err(|e| anyhow::anyhow!("fetch trace: {e}"))?;
+    let events: Vec<TraceEvent> = frame
+        .events
+        .iter()
+        .map(|e| TraceEvent {
+            id: e.id,
+            shard: e.shard as usize,
+            stage: e.stage,
+            t_us: e.t_us,
+            aux: e.aux,
+        })
+        .collect();
+    let spans = assemble_spans(&events);
+    if flags.contains_key("json") {
+        print_trace_json(&events, &spans);
+    } else {
+        print_trace_pretty(&events, &spans);
+    }
+    if flags.contains_key("require-complete") {
+        let complete = spans.iter().filter(|s| s.is_complete()).count();
+        anyhow::ensure!(
+            complete >= 1,
+            "no complete request span in {} event(s) across {} span(s) — is tracing enabled \
+             on the server (trace_capacity > 0) and has it served an inference?",
+            events.len(),
+            spans.len()
+        );
+        println!("ok: {complete} complete span(s)");
+    }
+    Ok(())
+}
+
+fn print_trace_pretty(events: &[TraceEvent], spans: &[Span]) {
+    if spans.is_empty() {
+        println!("no request spans recorded (is the server tracing and serving?)");
+    }
+    for span in spans {
+        let t0 = span.events.first().map(|e| e.t_us).unwrap_or(0);
+        let last = span.events.last().map(|e| e.t_us.saturating_sub(t0)).unwrap_or(0);
+        let status = if span.is_complete() { "complete" } else { "partial" };
+        println!("request {} ({status}, {last} us end-to-end):", span.id);
+        for e in &span.events {
+            let aux = if e.aux != 0 { format!(", aux {}", e.aux) } else { String::new() };
+            println!(
+                "  {:<13} t+{:<8} us (shard {}{aux})",
+                e.stage.as_str(),
+                e.t_us.saturating_sub(t0),
+                e.shard
+            );
+        }
+    }
+    let shard_level = events.iter().filter(|e| e.id == 0).count();
+    if shard_level > 0 {
+        println!("({shard_level} shard-level event(s) — fault annotations — in --json output)");
+    }
+}
+
+/// One JSON document: every raw event (including shard-level id-0
+/// annotations `assemble_spans` excludes) plus per-span summaries.
+fn print_trace_json(events: &[TraceEvent], spans: &[Span]) {
+    use std::fmt::Write as _;
+    let mut s = String::from("{\"events\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"id\":{},\"shard\":{},\"stage\":\"{}\",\"t_us\":{},\"aux\":{}}}",
+            e.id,
+            e.shard,
+            e.stage.as_str(),
+            e.t_us,
+            e.aux
+        );
+    }
+    s.push_str("],\"spans\":[");
+    for (i, span) in spans.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let t0 = span.events.first().map(|e| e.t_us).unwrap_or(0);
+        let last = span.events.last().map(|e| e.t_us.saturating_sub(t0)).unwrap_or(0);
+        let _ = write!(
+            s,
+            "{{\"id\":{},\"complete\":{},\"total_us\":{}}}",
+            span.id,
+            span.is_complete(),
+            last
+        );
+    }
+    s.push_str("]}");
+    println!("{s}");
+}
+
+/// `repro perf-gate --baseline PATH --current PATH`: the CI perf
+/// regression gate.  Both paths are `BENCH_serving.json`-shaped
+/// snapshots; the gate compares the **planned** path at the largest
+/// load present in both files and fails when req/s regressed more than
+/// `--max-req-regress` (default 10%) or p99 grew more than
+/// `--max-p99-growth` (default 15%).  `--allow-regression` downgrades
+/// a failure to a loud warning — the documented one-off override for a
+/// noisy runner; refreshing `BENCH_baseline.json` from a quiet full
+/// run is the durable fix (see docs/ARCHITECTURE.md).
+fn cmd_perf_gate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let baseline_path = flags.get("baseline").context(
+        "usage: repro perf-gate --baseline BENCH_baseline.json --current BENCH_serving.json",
+    )?;
+    let current_path = flags.get("current").context("perf-gate needs --current PATH")?;
+    let max_req_regress: f64 = flag(flags, "max-req-regress", 0.10);
+    let max_p99_growth: f64 = flag(flags, "max-p99-growth", 0.15);
+
+    let base_runs = planned_runs(baseline_path)?;
+    let cur_runs = planned_runs(current_path)?;
+    anyhow::ensure!(
+        !cur_runs.is_empty(),
+        "{current_path}: no planned-path runs recorded — did the bench actually run?"
+    );
+    if base_runs.is_empty() {
+        // a freshly-seeded repo ships a placeholder baseline; the gate
+        // arms itself the first time a measured baseline is committed
+        println!(
+            "perf gate: {baseline_path} is a placeholder (no planned runs) — passing \
+             vacuously.  Arm the gate: run `cargo bench --bench coordinator` on a quiet \
+             machine, then `cp BENCH_serving.json BENCH_baseline.json` and commit it."
+        );
+        return Ok(());
+    }
+    let load = *base_runs
+        .keys()
+        .filter(|l| cur_runs.contains_key(l))
+        .max()
+        .context("no common planned-path load between baseline and current run sets")?;
+    let (b_req, b_p99) = base_runs[&load];
+    let (c_req, c_p99) = cur_runs[&load];
+    anyhow::ensure!(b_req > 0.0 && b_p99 > 0.0, "{baseline_path}: zero baseline measurements");
+    let req_regress = (b_req - c_req) / b_req;
+    let p99_growth = (c_p99 - b_p99) / b_p99;
+    println!("perf gate, planned path at load {load}:");
+    println!(
+        "  req/s: baseline {b_req:.1} -> current {c_req:.1} ({:+.1}%)",
+        -req_regress * 100.0
+    );
+    println!(
+        "  p99:   baseline {b_p99:.0} us -> current {c_p99:.0} us ({:+.1}%)",
+        p99_growth * 100.0
+    );
+    if req_regress <= max_req_regress && p99_growth <= max_p99_growth {
+        println!(
+            "ok: within gate (req/s regression <= {:.0}%, p99 growth <= {:.0}%)",
+            max_req_regress * 100.0,
+            max_p99_growth * 100.0
+        );
+        return Ok(());
+    }
+    if flags.contains_key("allow-regression") {
+        println!(
+            "REGRESSION beyond gate tolerated by --allow-regression — if the new numbers are \
+             intended, refresh BENCH_baseline.json from a full quiet-machine run"
+        );
+        return Ok(());
+    }
+    anyhow::bail!(
+        "perf regression beyond gate: req/s {:+.1}% (limit -{:.0}%), p99 {:+.1}% (limit +{:.0}%)\n\
+         if this change intentionally trades throughput, refresh the baseline: run\n\
+         `cargo bench --bench coordinator` on a quiet machine, then\n\
+         `cp BENCH_serving.json BENCH_baseline.json` and commit both; for a one-off noisy\n\
+         runner, re-run with --allow-regression (see docs/ARCHITECTURE.md, Observability)",
+        -req_regress * 100.0,
+        max_req_regress * 100.0,
+        p99_growth * 100.0,
+        max_p99_growth * 100.0
+    );
+}
+
+/// Planned-path rows of a `BENCH_serving.json` snapshot: load →
+/// (req_s, p99_us).
+fn planned_runs(path: &str) -> anyhow::Result<BTreeMap<u64, (f64, f64)>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let runs = doc
+        .get("runs")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{path}: no 'runs' array — not a BENCH_serving.json?"))?;
+    let mut out = BTreeMap::new();
+    for r in runs {
+        if r.get("config").and_then(Json::as_str) != Some("planned") {
+            continue;
+        }
+        let field = |k: &str| {
+            r.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{path}: planned run missing numeric '{k}'"))
+        };
+        out.insert(field("load")? as u64, (field("req_s")?, field("p99_us")?));
+    }
+    Ok(out)
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {

@@ -31,7 +31,7 @@
 use crate::cnn::data::Rng;
 use crate::serving::proto::{
     self, ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame,
-    ReadOutcome,
+    ReadOutcome, TraceFrame,
 };
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
@@ -334,6 +334,23 @@ impl Client {
             Frame::Metrics(m) => Ok(m),
             other => {
                 Err(ClientError::Protocol(format!("expected metrics, got '{}'", other.type_str())))
+            }
+        }
+    }
+
+    /// A request-lifecycle trace snapshot (empty when the server runs
+    /// with tracing disabled).  `id` filters to one coordinator request
+    /// id; `limit` keeps only the most recent events (the server clamps
+    /// it to its own cap either way).
+    pub fn trace(
+        &mut self,
+        id: Option<u64>,
+        limit: Option<u64>,
+    ) -> Result<TraceFrame, ClientError> {
+        match self.roundtrip(&Frame::GetTrace { id, limit })? {
+            Frame::Trace(t) => Ok(t),
+            other => {
+                Err(ClientError::Protocol(format!("expected trace, got '{}'", other.type_str())))
             }
         }
     }

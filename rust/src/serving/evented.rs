@@ -38,11 +38,12 @@
 //! Shutdown drains: workers stop reading, admitted requests complete and
 //! their responses flush (bounded by a grace period), then sockets close.
 
+use crate::coordinator::request::Ingress;
 use crate::coordinator::server::Coordinator;
 use crate::faults::FaultSite;
 use crate::serving::poller::{PollEvent, Poller};
 use crate::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferFrame, NetCounters};
-use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ValidInfer};
+use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ReplyTrace, ValidInfer};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -122,6 +123,9 @@ struct CompletionMsg {
     reply: Frame,
     /// The admission slot, released when the reply bytes are flushed.
     slot: Option<InflightSlot>,
+    /// Span bookkeeping to finish once the reply is queued (infer
+    /// replies that reached the coordinator only).
+    trace: Option<ReplyTrace>,
 }
 
 /// Everything a worker can receive from other threads.
@@ -372,6 +376,9 @@ struct Conn {
     last_activity: Instant,
     /// Deadline for the in-progress frame (slow-loris reaping).
     frame_deadline: Option<Instant>,
+    /// When the in-progress frame's header completed — the `accepted`
+    /// ingress timestamp of the request it turns out to carry.
+    accepted_at: Option<Instant>,
 }
 
 fn worker_loop(worker: usize, shared: Arc<EvShared>, mut poller: Poller, wake: UnixStream) {
@@ -420,7 +427,16 @@ fn worker_loop(worker: usize, shared: Arc<EvShared>, mut poller: Poller, wake: U
                     Some(conn) if conn.gen == msg.gen => {
                         conn.admitted = conn.admitted.saturating_sub(1);
                         conn.blocked = false;
-                        enqueue_reply(&shared, conn, &msg.reply, msg.slot)
+                        // the write-back stage here is "queued on the
+                        // connection (plus any opportunistic flush)" —
+                        // actual drain is driven by the peer and would
+                        // measure the peer, not the server
+                        let write_started = Instant::now();
+                        let sent = enqueue_reply(&shared, conn, &msg.reply, msg.slot);
+                        if let (Some(bytes), Some(t)) = (sent, &msg.trace) {
+                            t.finish(&shared.coord, write_started.elapsed(), bytes);
+                        }
+                        sent.is_some()
                             && update_interest(&mut poller, conn, idx, draining).is_ok()
                     }
                     // the connection died first: drop the reply (and the
@@ -552,6 +568,7 @@ fn register_conn(
         reg_write: false,
         last_activity: Instant::now(),
         frame_deadline: None,
+        accepted_at: None,
     });
 }
 
@@ -628,18 +645,16 @@ fn sweep_deadlines(shared: &EvShared, conns: &[Option<Conn>], now: Instant) -> V
 
 /// Queue a reply on the connection and flush opportunistically.  `slot`
 /// (for infer replies) is released when the reply bytes reach the
-/// socket.  Returns `false` when the transport failed and the
-/// connection must close.
+/// socket.  Returns the payload byte count on success, `None` when the
+/// transport failed and the connection must close.
 fn enqueue_reply(
     shared: &EvShared,
     conn: &mut Conn,
     frame: &Frame,
     slot: Option<InflightSlot>,
-) -> bool {
+) -> Option<usize> {
     let payload = proto::encode(frame);
-    let Ok(len) = u32::try_from(payload.len()) else {
-        return false;
-    };
+    let len = u32::try_from(payload.len()).ok()?;
     conn.write_buf.extend(len.to_be_bytes());
     conn.write_buf.extend(payload);
     conn.total_queued += 4 + u64::from(len);
@@ -648,11 +663,13 @@ fn enqueue_reply(
     }
     shared.metrics.frames_sent.fetch_add(1, Ordering::SeqCst);
     conn.last_activity = Instant::now();
-    let alive = try_flush(shared, conn);
-    if alive && conn.write_buf.len() > shared.config.max_write_buffer {
+    if !try_flush(shared, conn) {
+        return None;
+    }
+    if conn.write_buf.len() > shared.config.max_write_buffer {
         conn.paused = true;
     }
-    alive
+    Some(len as usize)
 }
 
 /// Write queued bytes until the socket would block.  Releases admission
@@ -724,10 +741,11 @@ fn process_input(
                         shared.config.max_frame_bytes
                     ),
                 ));
-                let alive = enqueue_reply(shared, conn, &frame, None);
+                let alive = enqueue_reply(shared, conn, &frame, None).is_some();
                 conn.closing = Some(Instant::now() + shared.config.frame_timeout);
                 return alive && !conn.write_buf.is_empty();
             }
+            conn.accepted_at = Some(Instant::now());
             conn.read = ReadState::Payload { buf: vec![0u8; len], filled: 0 };
             continue;
         }
@@ -740,9 +758,10 @@ fn process_input(
             let fresh = ReadState::Header { buf: [0; 4], filled: 0 };
             let old = std::mem::replace(&mut conn.read, fresh);
             conn.frame_deadline = None;
+            let accepted = conn.accepted_at.take().unwrap_or_else(Instant::now);
             shared.metrics.frames_received.fetch_add(1, Ordering::SeqCst);
             if let ReadState::Payload { buf, .. } = old {
-                if !handle_frame_bytes(shared, conn, idx, worker, &buf) {
+                if !handle_frame_bytes(shared, conn, idx, worker, &buf, accepted) {
                     return false;
                 }
             }
@@ -777,15 +796,17 @@ fn handle_frame_bytes(
     idx: usize,
     worker: usize,
     payload: &[u8],
+    accepted: Instant,
 ) -> bool {
     let frame = match proto::decode(payload) {
         Ok(frame) => frame,
         Err(e) => {
             // well-framed but undecodable: typed error, keep serving
             shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
-            return enqueue_reply(shared, conn, &Frame::Error(e), None);
+            return enqueue_reply(shared, conn, &Frame::Error(e), None).is_some();
         }
     };
+    let ingress = Ingress { accepted, decoded: Instant::now() };
     // fault injection: a chaos plan may reset the socket instead of
     // answering — completions for requests already in flight on this
     // connection are dropped by their generation stamp, and clients with
@@ -796,7 +817,7 @@ fn handle_frame_bytes(
         }
     }
     match frame {
-        Frame::Infer(req) => handle_infer(shared, conn, idx, worker, req),
+        Frame::Infer(req) => handle_infer(shared, conn, idx, worker, req, ingress),
         Frame::Hello { pipeline } => {
             // this transport can interleave: grant pipelining when asked
             // for and configured
@@ -804,17 +825,26 @@ fn handle_frame_bytes(
             conn.pipeline = granted;
             let depth = if granted { shared.config.max_pipeline as u64 } else { 1 };
             enqueue_reply(shared, conn, &Frame::HelloOk { pipeline: granted, depth }, None)
+                .is_some()
         }
         Frame::ListModels => {
-            enqueue_reply(shared, conn, &common::models_frame(&shared.coord), None)
+            enqueue_reply(shared, conn, &common::models_frame(&shared.coord), None).is_some()
         }
         Frame::GetMetrics => {
             let reply = common::metrics_frame(&shared.coord, shared.snapshot());
-            enqueue_reply(shared, conn, &reply, None)
+            enqueue_reply(shared, conn, &reply, None).is_some()
         }
-        Frame::Ping { nonce } => enqueue_reply(shared, conn, &Frame::Pong { nonce }, None),
+        Frame::GetTrace { id, limit } => {
+            let reply = common::trace_frame(&shared.coord, id, limit);
+            enqueue_reply(shared, conn, &reply, None).is_some()
+        }
+        Frame::Ping { nonce } => {
+            enqueue_reply(shared, conn, &Frame::Pong { nonce }, None).is_some()
+        }
         // server-to-client frames arriving at the server
-        other => enqueue_reply(shared, conn, &common::wrong_direction_frame(&other), None),
+        other => {
+            enqueue_reply(shared, conn, &common::wrong_direction_frame(&other), None).is_some()
+        }
     }
 }
 
@@ -826,6 +856,7 @@ fn handle_infer(
     idx: usize,
     worker: usize,
     req: InferFrame,
+    ingress: Ingress,
 ) -> bool {
     let req_id = req.id;
     let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(Some(req_id), code, msg));
@@ -839,7 +870,7 @@ fn handle_infer(
             ErrorCode::ResourceExhausted,
             format!("connection at max pipelined requests ({cap})"),
         );
-        return enqueue_reply(shared, conn, &reply, None);
+        return enqueue_reply(shared, conn, &reply, None).is_some();
     }
     // then global admission control, before any validation work
     let Some(slot) = InflightSlot::acquire(&shared.inflight, shared.config.max_inflight) else {
@@ -848,19 +879,22 @@ fn handle_infer(
             ErrorCode::ResourceExhausted,
             format!("server at max in-flight requests ({})", shared.config.max_inflight),
         );
-        return enqueue_reply(shared, conn, &reply, None);
+        return enqueue_reply(shared, conn, &reply, None).is_some();
     };
     let valid = match common::validate_infer(req, &shared.coord) {
         Ok(v) => v,
         // the validation error holds the slot through its flush, same
         // accounting as a real response
-        Err(reply) => return enqueue_reply(shared, conn, &reply, Some(slot)),
+        Err(reply) => return enqueue_reply(shared, conn, &reply, Some(slot)).is_some(),
     };
     let ValidInfer { id, model, image, deadline } = valid;
 
     let gen = conn.gen;
+    let shard = shared.coord.shard_for(model.as_deref());
+    let model_cb = model.clone();
     let shared_cb = Arc::clone(shared);
-    let on_done = move |result: Result<crate::coordinator::request::InferenceResponse, String>| {
+    let on_done = move |coord_id: u64,
+                        result: Result<crate::coordinator::request::InferenceResponse, String>| {
         let reply = match result {
             Ok(resp) => {
                 shared_cb.metrics.requests_ok.fetch_add(1, Ordering::SeqCst);
@@ -871,11 +905,15 @@ fn handle_infer(
                 common::infer_err_frame(id, msg)
             }
         };
-        let msg = CompletionMsg { conn: idx, gen, reply, slot: Some(slot) };
+        let trace = ReplyTrace { shard, coord_id, model: model_cb, retry_code: None };
+        let trace = trace.observe(&reply);
+        let msg = CompletionMsg { conn: idx, gen, reply, slot: Some(slot), trace: Some(trace) };
         shared_cb.mailboxes[worker].push_completion(msg);
     };
-    match shared.coord.submit_with_deadline(model.as_deref(), image, deadline, on_done) {
-        Ok(()) => {
+    let submitted =
+        shared.coord.submit_with_traced(model.as_deref(), image, deadline, Some(ingress), on_done);
+    match submitted {
+        Ok(_) => {
             conn.admitted += 1;
             if !conn.pipeline {
                 // serial contract: stop processing input until the reply
@@ -895,7 +933,7 @@ fn handle_infer(
             } else {
                 ErrorCode::ShuttingDown
             };
-            enqueue_reply(shared, conn, &err(code, msg), None)
+            enqueue_reply(shared, conn, &err(code, msg), None).is_some()
         }
     }
 }

@@ -50,4 +50,7 @@ pub use client::{Client, ClientError, PipelinedClient, PipelinedReply, RetryPoli
 #[cfg(unix)]
 pub use evented::{EventedConfig, EventedServer};
 pub use net::{Server, ServerConfig};
-pub use proto::{ErrorCode, ErrorFrame, Frame, InferOkFrame, MetricsFrame, NetCounters};
+pub use proto::{
+    ErrorCode, ErrorFrame, Frame, InferOkFrame, MetricsFrame, NetCounters, TraceEventWire,
+    TraceFrame,
+};

@@ -27,10 +27,11 @@
 //! server's own `Arc` — writes the response, and exits; admitted requests
 //! are never lost.
 
+use crate::coordinator::request::Ingress;
 use crate::coordinator::server::Coordinator;
 use crate::faults::FaultSite;
 use crate::serving::proto::{self, ErrorCode, ErrorFrame, Frame, InferFrame, NetCounters};
-use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ValidInfer};
+use crate::serving::shared::{self as common, InflightSlot, NetMetrics, ReplyTrace, ValidInfer};
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -376,6 +377,9 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
             }
             Ok(_) | Err(_) => return,
         }
+        // `accepted` anchors the request's lifecycle span at the instant
+        // its frame header completed, before any payload or decode work
+        let accepted = Instant::now();
         let len = u32::from_be_bytes(header) as usize;
         if len > shared.config.max_frame_bytes {
             // framing can no longer be trusted: answer once, then close
@@ -388,7 +392,7 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
                     shared.config.max_frame_bytes
                 ),
             ));
-            send(&mut stream, shared, &frame);
+            let _ = send(&mut stream, shared, &frame);
             return;
         }
         let mut payload = vec![0u8; len];
@@ -406,16 +410,17 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
             Err(e) => {
                 // well-framed but undecodable: typed error, keep serving
                 shared.metrics.protocol_errors.fetch_add(1, Ordering::SeqCst);
-                if !send(&mut stream, shared, &Frame::Error(e)) {
+                if send(&mut stream, shared, &Frame::Error(e)).is_none() {
                     return;
                 }
                 continue;
             }
         };
+        let ingress = Ingress { accepted, decoded: Instant::now() };
         // the admission slot (for infer frames) is released only after
         // the reply is written, so the inflight gauge also covers
         // responses stuck behind a slow-reading client
-        let (reply, slot) = handle_frame(frame, shared);
+        let (reply, slot, trace) = handle_frame(frame, shared, ingress);
         // fault injection: a chaos plan may reset the socket instead of
         // answering — the client sees a dropped connection and (with a
         // retry policy) resubmits; the admission slot is still released
@@ -424,9 +429,13 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
                 return;
             }
         }
+        let write_started = Instant::now();
         let sent = send(&mut stream, shared, &reply);
+        if let (Some(bytes), Some(t)) = (sent, &trace) {
+            t.finish(&shared.coord, write_started.elapsed(), bytes);
+        }
         drop(slot);
-        if !sent {
+        if sent.is_none() {
             // a failed/timed-out write leaves the peer's framing state
             // unknowable; close instead of serving a corrupt stream
             return;
@@ -434,33 +443,52 @@ fn connection_loop(mut stream: TcpStream, shared: &Shared) {
     }
 }
 
-fn send(stream: &mut TcpStream, shared: &Shared, frame: &Frame) -> bool {
-    if proto::write_frame(stream, frame).is_ok() {
+/// Write one frame; `Some(payload_bytes)` on success (the write-back aux
+/// the tracer records), `None` on a failed or timed-out write.
+fn send(stream: &mut TcpStream, shared: &Shared, frame: &Frame) -> Option<usize> {
+    let payload = proto::encode(frame);
+    let len = u32::try_from(payload.len()).ok()?;
+    let wrote = stream
+        .write_all(&len.to_be_bytes())
+        .and_then(|()| stream.write_all(&payload))
+        .and_then(|()| stream.flush());
+    if wrote.is_ok() {
         shared.metrics.frames_sent.fetch_add(1, Ordering::SeqCst);
-        true
+        Some(payload.len())
     } else {
-        false
+        None
     }
 }
 
 /// Dispatch one decoded client frame to its reply frame (plus, for infer
 /// frames, the admission slot the caller must hold until the reply is
-/// written).
-fn handle_frame(frame: Frame, shared: &Shared) -> (Frame, Option<InflightSlot>) {
+/// written and the span bookkeeping to finish after the write).
+fn handle_frame(
+    frame: Frame,
+    shared: &Shared,
+    ingress: Ingress,
+) -> (Frame, Option<InflightSlot>, Option<ReplyTrace>) {
     match frame {
-        Frame::Infer(req) => handle_infer(req, shared),
+        Frame::Infer(req) => handle_infer(req, shared, ingress),
         // this transport is serial by construction: grant no pipelining,
         // whatever the client asked for (the evented server grants it)
-        Frame::Hello { .. } => (Frame::HelloOk { pipeline: false, depth: 1 }, None),
-        Frame::ListModels => (common::models_frame(&shared.coord), None),
-        Frame::GetMetrics => (common::metrics_frame(&shared.coord, shared.snapshot()), None),
-        Frame::Ping { nonce } => (Frame::Pong { nonce }, None),
+        Frame::Hello { .. } => (Frame::HelloOk { pipeline: false, depth: 1 }, None, None),
+        Frame::ListModels => (common::models_frame(&shared.coord), None, None),
+        Frame::GetMetrics => (common::metrics_frame(&shared.coord, shared.snapshot()), None, None),
+        Frame::GetTrace { id, limit } => {
+            (common::trace_frame(&shared.coord, id, limit), None, None)
+        }
+        Frame::Ping { nonce } => (Frame::Pong { nonce }, None, None),
         // server-to-client frames arriving at the server
-        other => (common::wrong_direction_frame(&other), None),
+        other => (common::wrong_direction_frame(&other), None, None),
     }
 }
 
-fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot>) {
+fn handle_infer(
+    req: InferFrame,
+    shared: &Shared,
+    ingress: Ingress,
+) -> (Frame, Option<InflightSlot>, Option<ReplyTrace>) {
     let req_id = req.id;
     let err = |code: ErrorCode, msg: String| Frame::Error(ErrorFrame::new(Some(req_id), code, msg));
 
@@ -471,18 +499,19 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
             ErrorCode::ResourceExhausted,
             format!("server at max in-flight requests ({})", shared.config.max_inflight),
         );
-        return (reply, None);
+        return (reply, None, None);
     };
     let slot = Some(slot);
 
     let valid = match common::validate_infer(req, &shared.coord) {
         Ok(v) => v,
-        Err(reply) => return (reply, slot),
+        Err(reply) => return (reply, slot, None),
     };
     let ValidInfer { id, model, image, deadline } = valid;
 
-    let rx = match shared.coord.submit_deadline(model.as_deref(), image, deadline) {
-        Ok(rx) => rx,
+    let submitted = shared.coord.submit_traced(model.as_deref(), image, deadline, Some(ingress));
+    let (coord_id, rx) = match submitted {
+        Ok(pair) => pair,
         Err(e) => {
             shared.metrics.requests_failed.fetch_add(1, Ordering::SeqCst);
             let msg = e.to_string();
@@ -492,8 +521,14 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
             } else {
                 ErrorCode::ShuttingDown
             };
-            return (err(code, msg), slot);
+            return (err(code, msg), slot, None);
         }
+    };
+    let trace = ReplyTrace {
+        shard: shared.coord.shard_for(model.as_deref()),
+        coord_id,
+        model,
+        retry_code: None,
     };
     let reply = match rx.recv() {
         Ok(Ok(resp)) => {
@@ -509,7 +544,8 @@ fn handle_infer(req: InferFrame, shared: &Shared) -> (Frame, Option<InflightSlot
             err(ErrorCode::Unavailable, "coordinator dropped the request".into())
         }
     };
-    (reply, slot)
+    let trace = trace.observe(&reply);
+    (reply, slot, Some(trace))
 }
 
 /// Write the bound address to `path` atomically (temp file + rename), so

@@ -22,6 +22,7 @@
 
 use crate::coordinator::cost::HwCost;
 use crate::coordinator::metrics::{ModelCounters, ShardCounters};
+use crate::obs::{LogHistogram, Stage, StageHistograms};
 use crate::runtime::json::{self, Json};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -262,16 +263,59 @@ pub struct MetricsFrame {
     /// coordinator rework; a v1-additive field — sharding is otherwise
     /// invisible on the wire).  Older peers that omit it decode as empty.
     pub shards: Vec<ShardCounters>,
+    /// End-to-end latency histogram (µs; v1-additive, absent decodes as
+    /// empty).  The `p50_us`/`p90_us`/`p99_us` fields above are derived
+    /// from this histogram server-side; the histogram itself lets a
+    /// client compute any percentile, or merge snapshots from several
+    /// servers, without resampling error.
+    pub latency: LogHistogram,
+    /// Aggregate per-stage latency histograms — queue-wait, batch-form,
+    /// execute, write-back (v1-additive, absent decodes as empty).
+    pub stages: StageHistograms,
+    /// Per-model per-stage histograms, keyed by model name
+    /// (v1-additive, absent decodes as empty).
+    pub model_stages: BTreeMap<String, StageHistograms>,
+    /// Per-shard per-stage histograms, indexed by shard id
+    /// (v1-additive, absent decodes as empty).
+    pub shard_stages: Vec<StageHistograms>,
     /// Network-layer counters.
     pub net: NetCounters,
 }
 
+/// One request-lifecycle event in a `trace` frame (the wire form of
+/// [`crate::obs::TraceEvent`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEventWire {
+    /// Coordinator-assigned request id (0 = shard-level event, e.g. a
+    /// worker-kill fault annotation).
+    pub id: u64,
+    /// Shard that recorded the event.
+    pub shard: u64,
+    /// What happened (wire form: the stage's snake_case name).
+    pub stage: Stage,
+    /// Microseconds since the server's trace origin (one clock across
+    /// shards and front-ends, so deltas between stages are meaningful;
+    /// absolute values are only comparable within one server process).
+    pub t_us: u64,
+    /// Per-stage auxiliary word (see `docs/WIRE_PROTOCOL.md` for the
+    /// per-stage meaning); canonical encoding omits it when 0.
+    pub aux: u64,
+}
+
+/// `trace` — the server's answer to `get_trace`: recent lifecycle
+/// events, time-ascending (v1-additive).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceFrame {
+    /// Recorded events, sorted by `t_us` ascending.
+    pub events: Vec<TraceEventWire>,
+}
+
 /// One protocol frame, either direction.
 ///
-/// Clients send `Infer`, `ListModels`, `GetMetrics`, and `Ping`; servers
-/// answer with `InferOk`, `Models`, `Metrics`, `Pong`, or `Error`.  A
-/// frame arriving on the wrong side is answered with
-/// `ErrorCode::InvalidFrame`.
+/// Clients send `Infer`, `ListModels`, `GetMetrics`, `GetTrace`, and
+/// `Ping`; servers answer with `InferOk`, `Models`, `Metrics`, `Trace`,
+/// `Pong`, or `Error`.  A frame arriving on the wrong side is answered
+/// with `ErrorCode::InvalidFrame`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
     /// Run one image through a model.
@@ -316,6 +360,17 @@ pub enum Frame {
         /// (1 when `pipeline` is `false`).
         depth: u64,
     },
+    /// Ask for recent request-lifecycle trace events (v1-additive).  A
+    /// server without tracing enabled answers with an empty `trace`.
+    GetTrace {
+        /// Only return events of this request id (`None` = all ids).
+        id: Option<u64>,
+        /// Return at most this many events, keeping the most recent
+        /// (`None` = the server's default cap).
+        limit: Option<u64>,
+    },
+    /// Trace events reply.
+    Trace(TraceFrame),
 }
 
 impl Frame {
@@ -333,6 +388,8 @@ impl Frame {
             Frame::Pong { .. } => "pong",
             Frame::Hello { .. } => "hello",
             Frame::HelloOk { .. } => "hello_ok",
+            Frame::GetTrace { .. } => "get_trace",
+            Frame::Trace(_) => "trace",
         }
     }
 }
@@ -374,6 +431,34 @@ fn base(type_str: &str) -> BTreeMap<String, Json> {
 
 fn put(m: &mut BTreeMap<String, Json>, key: &str, val: Json) {
     m.insert(key.to_string(), val);
+}
+
+/// A [`LogHistogram`] as its wire object: `{"buckets": [[index, count],
+/// ...], "count": N, "max_us": M, "sum_us": S}` — sparse buckets, so an
+/// empty histogram is a handful of bytes and a populated one costs a few
+/// bytes per distinct latency octave-slot, never per sample.
+fn histogram_json(h: &LogHistogram) -> Json {
+    let mut m = BTreeMap::new();
+    let buckets = h
+        .to_sparse()
+        .into_iter()
+        .map(|(i, c)| Json::Arr(vec![uint(i as u64), uint(c)]))
+        .collect();
+    put(&mut m, "buckets", Json::Arr(buckets));
+    put(&mut m, "count", uint(h.count()));
+    put(&mut m, "max_us", uint(h.max_us()));
+    put(&mut m, "sum_us", uint(h.sum_us()));
+    Json::Obj(m)
+}
+
+/// A [`StageHistograms`] as its wire object, one histogram per stage key
+/// (`queue`, `batch_form`, `execute`, `write_back`).
+fn stages_json(s: &StageHistograms) -> Json {
+    let mut m = BTreeMap::new();
+    for (name, h) in s.named() {
+        put(&mut m, name, histogram_json(h));
+    }
+    Json::Obj(m)
 }
 
 /// Serialize a frame to its canonical JSON payload (no length prefix).
@@ -459,6 +544,18 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 })
                 .collect();
             put(&mut m, "shards", Json::Arr(shards));
+            put(&mut m, "latency", histogram_json(&f.latency));
+            put(&mut m, "stages", stages_json(&f.stages));
+            let mut model_stages = BTreeMap::new();
+            for (name, s) in &f.model_stages {
+                model_stages.insert(name.clone(), stages_json(s));
+            }
+            put(&mut m, "model_stages", Json::Obj(model_stages));
+            put(
+                &mut m,
+                "shard_stages",
+                Json::Arr(f.shard_stages.iter().map(stages_json).collect()),
+            );
             let n = &f.net;
             let mut nm = BTreeMap::new();
             put(&mut nm, "connections_open", uint(n.connections_open));
@@ -488,6 +585,33 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         Frame::HelloOk { pipeline, depth } => {
             put(&mut m, "pipeline", Json::Bool(*pipeline));
             put(&mut m, "depth", uint(*depth));
+        }
+        Frame::GetTrace { id, limit } => {
+            if let Some(id) = id {
+                put(&mut m, "id", uint(*id));
+            }
+            if let Some(limit) = limit {
+                put(&mut m, "limit", uint(*limit));
+            }
+        }
+        Frame::Trace(f) => {
+            let events = f
+                .events
+                .iter()
+                .map(|e| {
+                    let mut em = BTreeMap::new();
+                    put(&mut em, "id", uint(e.id));
+                    put(&mut em, "shard", uint(e.shard));
+                    put(&mut em, "stage", Json::Str(e.stage.as_str().to_string()));
+                    put(&mut em, "t_us", uint(e.t_us));
+                    // canonical form omits the default aux word
+                    if e.aux != 0 {
+                        put(&mut em, "aux", uint(e.aux));
+                    }
+                    Json::Obj(em)
+                })
+                .collect();
+            put(&mut m, "events", Json::Arr(events));
         }
     }
     Json::Obj(m).to_string().into_bytes()
@@ -597,6 +721,54 @@ fn need_str_arr(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<Vec<Stri
         .map(|v| v.as_str().map(str::to_string))
         .collect::<Option<Vec<String>>>()
         .ok_or_else(|| format!("field '{key}' must contain only strings"))
+}
+
+/// Decode a histogram wire object (see [`histogram_json`]).  The
+/// redundant `count` field is validated against the bucket sum so a
+/// corrupted or hand-edited frame cannot smuggle in an inconsistent
+/// histogram.
+fn decode_histogram(v: &Json, what: &str) -> FieldResult<LogHistogram> {
+    let obj = v.as_obj().ok_or_else(|| format!("{what} must be an object"))?;
+    let items = need(obj, "buckets")?
+        .as_arr()
+        .ok_or_else(|| format!("{what}: field 'buckets' must be an array"))?;
+    let mut buckets = Vec::with_capacity(items.len());
+    for item in items {
+        let pair = item
+            .as_arr()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| format!("{what}: each bucket must be an [index, count] pair"))?;
+        let idx = as_u64(&pair[0])
+            .ok_or_else(|| format!("{what}: bucket index must be a non-negative integer"))?;
+        let count = as_u64(&pair[1])
+            .ok_or_else(|| format!("{what}: bucket count must be a non-negative integer"))?;
+        buckets.push((idx as usize, count));
+    }
+    let h = LogHistogram::from_sparse(need_u64(obj, "sum_us")?, need_u64(obj, "max_us")?, &buckets);
+    if h.count() != need_u64(obj, "count")? {
+        return Err(format!("{what}: 'count' does not match the bucket sum"));
+    }
+    Ok(h)
+}
+
+/// Decode a per-stage histogram wire object (see [`stages_json`]).
+fn decode_stages(v: &Json, what: &str) -> FieldResult<StageHistograms> {
+    let obj = v.as_obj().ok_or_else(|| format!("{what} must be an object"))?;
+    Ok(StageHistograms {
+        queue: decode_histogram(need(obj, "queue")?, &format!("{what}.queue"))?,
+        batch_form: decode_histogram(need(obj, "batch_form")?, &format!("{what}.batch_form"))?,
+        execute: decode_histogram(need(obj, "execute")?, &format!("{what}.execute"))?,
+        write_back: decode_histogram(need(obj, "write_back")?, &format!("{what}.write_back"))?,
+    })
+}
+
+/// Decode an *optional* per-stage histogram field: absent (an older
+/// peer) decodes as empty, the v1-additive convention.
+fn opt_stages(obj: &BTreeMap<String, Json>, key: &str) -> FieldResult<StageHistograms> {
+    match obj.get(key) {
+        None => Ok(StageHistograms::default()),
+        Some(v) => decode_stages(v, &format!("field '{key}'")),
+    }
 }
 
 /// Parse a canonical-JSON payload into a [`Frame`].
@@ -731,6 +903,32 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                     });
                 }
             }
+            // additive v1 fields: absent histograms decode as empty
+            let latency = match obj.get("latency") {
+                None => LogHistogram::default(),
+                Some(v) => decode_histogram(v, "field 'latency'").map_err(mfail)?,
+            };
+            let stages = opt_stages(obj, "stages").map_err(mfail)?;
+            let mut model_stages = BTreeMap::new();
+            if let Some(ms_val) = obj.get("model_stages") {
+                let ms_obj = ms_val.as_obj().ok_or_else(|| {
+                    fail(ErrorCode::InvalidFrame, "field 'model_stages' must be an object".into())
+                })?;
+                for (name, v) in ms_obj {
+                    let s = decode_stages(v, &format!("model_stages['{name}']")).map_err(mfail)?;
+                    model_stages.insert(name.clone(), s);
+                }
+            }
+            let mut shard_stages = Vec::new();
+            if let Some(ss_val) = obj.get("shard_stages") {
+                let items = ss_val.as_arr().ok_or_else(|| {
+                    fail(ErrorCode::InvalidFrame, "field 'shard_stages' must be an array".into())
+                })?;
+                for (i, item) in items.iter().enumerate() {
+                    shard_stages
+                        .push(decode_stages(item, &format!("shard_stages[{i}]")).map_err(mfail)?);
+                }
+            }
             let net_obj = need(obj, "net")
                 .and_then(|v| v.as_obj().ok_or_else(|| "field 'net' must be an object".into()))
                 .map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
@@ -752,6 +950,10 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                 p99_us: opt_u64(obj, "p99_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                 per_model,
                 shards,
+                latency,
+                stages,
+                model_stages,
+                shard_stages,
                 net: NetCounters {
                     connections_open: need_u64(net_obj, "connections_open")
                         .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
@@ -797,6 +999,36 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
             pipeline: need_bool(obj, "pipeline").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
             depth: need_u64(obj, "depth").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
         }),
+        "get_trace" => Ok(Frame::GetTrace {
+            id,
+            limit: opt_u64(obj, "limit").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+        }),
+        "trace" => {
+            let items = need(obj, "events")
+                .and_then(|v| v.as_arr().ok_or_else(|| "field 'events' must be an array".into()))
+                .map_err(|m| fail(ErrorCode::InvalidFrame, m))?;
+            let mut events = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                let e = item.as_obj().ok_or_else(|| {
+                    fail(ErrorCode::InvalidFrame, format!("event {i} must be an object"))
+                })?;
+                let efail = |m: String| fail(ErrorCode::InvalidFrame, m);
+                let stage_str = need_str(e, "stage").map_err(efail)?;
+                let stage = Stage::parse(&stage_str).ok_or_else(|| {
+                    fail(ErrorCode::InvalidFrame, format!("event {i}: unknown stage '{stage_str}'"))
+                })?;
+                events.push(TraceEventWire {
+                    id: need_u64(e, "id").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    shard: need_u64(e, "shard").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    stage,
+                    t_us: need_u64(e, "t_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
+                    aux: opt_u64(e, "aux")
+                        .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                        .unwrap_or(0),
+                });
+            }
+            Ok(Frame::Trace(TraceFrame { events }))
+        }
         other => Err(fail(ErrorCode::UnknownType, format!("unknown frame type '{other}'"))),
     }
 }
@@ -859,6 +1091,23 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> std::io::Result
 mod tests {
     use super::*;
     use std::io::Cursor;
+
+    fn hist(values: &[u64]) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for &v in values {
+            h.record(v);
+        }
+        h
+    }
+
+    fn sample_stages(scale: u64) -> StageHistograms {
+        StageHistograms {
+            queue: hist(&[140 * scale, 300 * scale]),
+            batch_form: hist(&[12 * scale]),
+            execute: hist(&[112 * scale, 130 * scale]),
+            write_back: hist(&[9 * scale]),
+        }
+    }
 
     fn sample_frames() -> Vec<Frame> {
         vec![
@@ -934,6 +1183,10 @@ mod tests {
                         deadline_misses: 0,
                     },
                 ],
+                latency: hist(&[950, 1800, 120]),
+                stages: sample_stages(2),
+                model_stages: [("digits-b8".to_string(), sample_stages(1))].into_iter().collect(),
+                shard_stages: vec![sample_stages(1), sample_stages(3)],
                 net: NetCounters {
                     connections_open: 1,
                     connections_opened: 3,
@@ -955,6 +1208,22 @@ mod tests {
             Frame::Hello { pipeline: false },
             Frame::HelloOk { pipeline: true, depth: 32 },
             Frame::HelloOk { pipeline: false, depth: 1 },
+            Frame::GetTrace { id: None, limit: None },
+            Frame::GetTrace { id: Some(7), limit: Some(512) },
+            Frame::Trace(TraceFrame::default()),
+            Frame::Trace(TraceFrame {
+                events: vec![
+                    TraceEventWire { id: 7, shard: 0, stage: Stage::Accepted, t_us: 10, aux: 0 },
+                    TraceEventWire { id: 7, shard: 0, stage: Stage::Enqueued, t_us: 25, aux: 3 },
+                    TraceEventWire {
+                        id: 7,
+                        shard: 0,
+                        stage: Stage::Executed,
+                        t_us: 930,
+                        aux: 640,
+                    },
+                ],
+            }),
         ]
     }
 
@@ -1027,6 +1296,63 @@ mod tests {
             }
             other => panic!("expected metrics, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn trace_frames_are_canonical() {
+        assert_eq!(
+            String::from_utf8(encode(&Frame::GetTrace { id: None, limit: None })).unwrap(),
+            r#"{"type":"get_trace","v":1}"#
+        );
+        assert_eq!(
+            String::from_utf8(encode(&Frame::GetTrace { id: Some(7), limit: Some(512) })).unwrap(),
+            r#"{"id":7,"limit":512,"type":"get_trace","v":1}"#
+        );
+        // aux = 0 is omitted from the canonical event encoding
+        let frame = Frame::Trace(TraceFrame {
+            events: vec![TraceEventWire {
+                id: 7,
+                shard: 1,
+                stage: Stage::Accepted,
+                t_us: 10,
+                aux: 0,
+            }],
+        });
+        assert_eq!(
+            String::from_utf8(encode(&frame)).unwrap(),
+            r#"{"events":[{"id":7,"shard":1,"stage":"accepted","t_us":10}],"type":"trace","v":1}"#
+        );
+        // an unknown stage name is a typed decode error, not a panic
+        let bad = br#"{"events":[{"id":1,"shard":0,"stage":"warp","t_us":1}],"type":"trace","v":1}"#;
+        assert_eq!(decode(bad).unwrap_err().code, ErrorCode::InvalidFrame);
+    }
+
+    #[test]
+    fn histograms_in_metrics_are_v1_additive() {
+        // a pre-observability peer omits every histogram field: all of
+        // them decode as empty
+        let payload = br#"{"backend":"native","batches":1,"failed_batches":0,"net":{"connections_open":0,"connections_opened":0,"connections_rejected":0,"frames_received":0,"frames_sent":0,"inflight":0,"overload_rejections":0,"protocol_errors":0,"requests_failed":0,"requests_ok":0},"p50_us":null,"p90_us":null,"p99_us":null,"per_model":{},"requests":1,"shards":[],"type":"metrics","v":1}"#;
+        match decode(payload).unwrap() {
+            Frame::Metrics(m) => {
+                assert!(m.latency.is_empty());
+                assert!(m.stages.is_empty());
+                assert!(m.model_stages.is_empty());
+                assert!(m.shard_stages.is_empty());
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
+        // a histogram whose 'count' disagrees with its buckets is rejected
+        let mut h = hist(&[100, 200]);
+        let frame = MetricsFrame { latency: h.clone(), ..MetricsFrame::default() };
+        let good = encode(&Frame::Metrics(frame));
+        let text = String::from_utf8(good.clone()).unwrap();
+        assert!(decode(&good).is_ok());
+        let tampered = text.replace(r#""count":2"#, r#""count":3"#);
+        assert_eq!(decode(tampered.as_bytes()).unwrap_err().code, ErrorCode::InvalidFrame);
+        // round trip preserves exact percentile structure
+        h.merge(&hist(&[50]));
+        let back = LogHistogram::from_sparse(h.sum_us(), h.max_us(), &h.to_sparse());
+        assert_eq!(back, h);
     }
 
     #[test]

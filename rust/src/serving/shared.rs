@@ -7,10 +7,12 @@
 //! behavior — everything here is transport-agnostic, and the e2e suite
 //! runs every scenario against both servers to keep it that way.
 
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::InferenceResponse;
 use crate::coordinator::server::Coordinator;
 use crate::serving::proto::{
     ErrorCode, ErrorFrame, Frame, InferFrame, InferOkFrame, MetricsFrame, ModelsFrame, NetCounters,
+    TraceEventWire, TraceFrame,
 };
 use crate::tensor::Tensor;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -198,7 +200,14 @@ pub(crate) fn models_frame(coord: &Coordinator) -> Frame {
 /// visible on the wire.  One consistent snapshot: the counters must sum
 /// to the merged totals even under live traffic.
 pub(crate) fn metrics_frame(coord: &Coordinator, net: NetCounters) -> Frame {
-    let (m, shards) = coord.metrics_with_shards();
+    // one read of every shard's metrics: the merged aggregate, the
+    // per-shard counters, and the per-shard stage histograms all derive
+    // from the same snapshot, so they stay mutually consistent
+    let per_shard = coord.shard_metrics();
+    let mut m = Metrics::new();
+    for s in &per_shard {
+        m.merge(s);
+    }
     Frame::Metrics(MetricsFrame {
         backend: m.backend.clone(),
         requests: m.requests,
@@ -210,9 +219,101 @@ pub(crate) fn metrics_frame(coord: &Coordinator, net: NetCounters) -> Frame {
         p90_us: m.percentile_us(90.0),
         p99_us: m.percentile_us(99.0),
         per_model: m.per_model.clone(),
-        shards,
+        shards: per_shard.iter().map(Metrics::counters).collect(),
+        latency: m.latency_histogram().clone(),
+        stages: m.stages.clone(),
+        model_stages: m.per_model_stages.clone(),
+        shard_stages: per_shard.iter().map(|s| s.stages.clone()).collect(),
         net,
     })
+}
+
+/// Default cap on events in one `trace` reply.  Keeps the frame well
+/// under [`crate::serving::proto::DEFAULT_MAX_FRAME_BYTES`] even with
+/// large rings; an explicit `limit` above the cap is clamped to it.
+pub(crate) const DEFAULT_TRACE_EVENT_LIMIT: usize = 4096;
+
+/// The `trace` reply to a `get_trace` frame: a consistent snapshot of
+/// the coordinator's lifecycle rings (empty when tracing is disabled),
+/// optionally filtered to one request id, keeping the most recent
+/// `limit` events in ascending time order.
+pub(crate) fn trace_frame(coord: &Coordinator, id: Option<u64>, limit: Option<u64>) -> Frame {
+    let mut events: Vec<TraceEventWire> = match coord.tracer() {
+        None => Vec::new(),
+        Some(t) => t
+            .snapshot()
+            .into_iter()
+            .filter(|e| id.is_none_or(|want| e.id == want))
+            .map(|e| TraceEventWire {
+                id: e.id,
+                shard: e.shard as u64,
+                stage: e.stage,
+                t_us: e.t_us,
+                aux: e.aux,
+            })
+            .collect(),
+    };
+    let cap = limit
+        .map(|l| (l as usize).min(DEFAULT_TRACE_EVENT_LIMIT))
+        .unwrap_or(DEFAULT_TRACE_EVENT_LIMIT);
+    if events.len() > cap {
+        events.drain(..events.len() - cap);
+    }
+    Frame::Trace(TraceFrame { events })
+}
+
+/// Stable ordinal of an error code, recorded as the `retried` trace
+/// event's aux word so a span dump shows *why* the server advised a
+/// retry.  Follows the order the codes are documented in
+/// `docs/WIRE_PROTOCOL.md`; 0 is reserved for "unknown".
+pub(crate) fn error_code_ordinal(code: ErrorCode) -> u64 {
+    match code {
+        ErrorCode::InvalidFrame => 1,
+        ErrorCode::UnsupportedVersion => 2,
+        ErrorCode::UnknownType => 3,
+        ErrorCode::BadImage => 4,
+        ErrorCode::UnknownModel => 5,
+        ErrorCode::ResourceExhausted => 6,
+        ErrorCode::ShuttingDown => 7,
+        ErrorCode::Internal => 8,
+        ErrorCode::DeadlineExceeded => 9,
+        ErrorCode::Unavailable => 10,
+    }
+}
+
+/// What the tracer needs once the reply bytes are on the wire: the
+/// owning shard, the coordinator-assigned request id (distinct from the
+/// client's wire id), and the model label for the per-model write-back
+/// histogram.  Produced only for infer frames that reached the
+/// coordinator; both front-ends carry one alongside the reply.
+pub(crate) struct ReplyTrace {
+    pub(crate) shard: usize,
+    pub(crate) coord_id: u64,
+    pub(crate) model: Option<String>,
+    /// Set when the reply is a retryable error: the span ends in a
+    /// `retried` event (the client's retry arrives as a fresh span).
+    pub(crate) retry_code: Option<ErrorCode>,
+}
+
+impl ReplyTrace {
+    /// Stamp `retry_code` from the reply about to be written.
+    pub(crate) fn observe(mut self, reply: &Frame) -> ReplyTrace {
+        if let Frame::Error(e) = reply {
+            if e.code.retryable() {
+                self.retry_code = Some(e.code);
+            }
+        }
+        self
+    }
+
+    /// Close the span: record the write-back stage (`took`, `bytes` on
+    /// the wire) and, for retryable errors, the `retried` event.
+    pub(crate) fn finish(&self, coord: &Coordinator, took: Duration, bytes: usize) {
+        coord.record_reply_written(self.shard, self.coord_id, self.model.as_deref(), took, bytes);
+        if let Some(code) = self.retry_code {
+            coord.record_retry_advised(self.shard, self.coord_id, error_code_ordinal(code));
+        }
+    }
 }
 
 /// The reply to a frame type the server never accepts (server-to-client

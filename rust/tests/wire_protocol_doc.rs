@@ -69,6 +69,8 @@ fn every_documented_example_round_trips_byte_for_byte() {
         "pong",
         "hello",
         "hello_ok",
+        "get_trace",
+        "trace",
     ] {
         assert!(
             seen_types.contains(required),
@@ -96,6 +98,29 @@ fn spec_documents_every_error_code() {
             SPEC.contains(code.as_str()),
             "WIRE_PROTOCOL.md does not mention error code {}",
             code.as_str()
+        );
+    }
+}
+
+#[test]
+fn spec_documents_every_trace_stage() {
+    use pasm_accel::obs::Stage;
+    for stage in [
+        Stage::Accepted,
+        Stage::Decoded,
+        Stage::Enqueued,
+        Stage::BatchFormed,
+        Stage::Launched,
+        Stage::Executed,
+        Stage::ReplyWritten,
+        Stage::DeadlineDrop,
+        Stage::Fault,
+        Stage::Retried,
+    ] {
+        assert!(
+            SPEC.contains(&format!("`{}`", stage.as_str())),
+            "WIRE_PROTOCOL.md does not document trace stage {}",
+            stage.as_str()
         );
     }
 }
