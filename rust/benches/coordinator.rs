@@ -55,6 +55,15 @@
 //! write-back) harvested from the threaded socket phase land in the
 //! `stages` section, and the on/off comparison in `trace_overhead`.
 //!
+//! An eighth phase compares the two **PASM execution kernels**: the same
+//! fixed-point model served with per-tap plans and then with
+//! histogram-accumulate (count-then-multiply) plans, at several codebook
+//! sizes, one execution thread, best-of-2 alternating — after a
+//! bit-equality cross-check of both kernels' served logits against the
+//! reference `forward_fx`.  Per-B req/s for both kernels land in the
+//! `kernels` section, making the paper's §5.3 trick a *measured* CPU
+//! number rather than a claim.
+//!
 //! The bench never writes placeholders: every section is validated as
 //! measured (non-empty, positive req/s) before `BENCH_serving.json` is
 //! rewritten, and any shortfall panics the run (non-zero exit) instead
@@ -66,6 +75,7 @@
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
+use pasm_accel::cnn::plan::KernelChoice;
 #[cfg(unix)]
 use pasm_accel::coordinator::loadgen::run_closed_loop_pipelined;
 use pasm_accel::coordinator::loadgen::{
@@ -151,6 +161,14 @@ impl TraceOverheadStats {
     fn ratio(&self) -> f64 {
         self.on_req_s / self.off_req_s
     }
+}
+
+struct KernelStats {
+    bins: usize,
+    load: usize,
+    conv2_taps: usize,
+    per_tap_req_s: f64,
+    histogram_req_s: f64,
 }
 
 struct ArtifactStats {
@@ -565,6 +583,88 @@ fn run_shard_scaling(runs: &[RunStats], pool: &[Tensor<f32>], load: usize) -> Ve
     stats
 }
 
+/// One single-threaded coordinator pinned to an explicit PASM kernel —
+/// row parallelism off so the measured axis is the conv kernel itself.
+fn build_kernel_coordinator(enc: EncodedCnn, kernel: KernelChoice) -> Coordinator {
+    let backend = NativeBackend::new(enc)
+        .with_precision(NativePrecision::Fixed(QFormat::IMAGE32))
+        .with_kernel(kernel)
+        .with_threads(1);
+    CoordinatorBuilder::new()
+        .backend(backend)
+        .batch_policy(BatchPolicy::new(vec![1, 8, 16], Duration::from_millis(2)))
+        .build()
+        .expect("kernel bench coordinator startup")
+}
+
+/// Kernel-comparison phase: per-tap vs histogram-accumulate plans on the
+/// same fixed-point model, swept over codebook size B.  A wider input
+/// (24×24) than the default digits model gives the histogram kernel's
+/// cache-blocked tiles real rows to stream; one execution thread and
+/// best-of-2 alternating keep the comparison about the kernels.  Before
+/// any timing, both kernels' *served* logits are bit-compared against
+/// the reference `forward_fx` — a throughput table for kernels that
+/// disagree would be worse than no table.
+fn run_kernel_comparison(load: usize) -> Vec<KernelStats> {
+    let arch = DigitsCnn { in_side: 24, conv1_m: 8, conv2_m: 16, kernel: 3, classes: 10 };
+    let conv2_taps = arch.conv1_m * arch.kernel * arch.kernel;
+    let mut rng = Rng::new(71);
+    let params = arch.init(&mut rng);
+    let pool: Vec<Tensor<f32>> = (0..64)
+        .map(|_| Tensor::from_fn(&[1, arch.in_side, arch.in_side], |_| rng.signed()))
+        .collect();
+    let mut stats = Vec::new();
+    for bins in [4usize, 16, 64] {
+        let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
+        {
+            let per_tap = build_kernel_coordinator(enc.clone(), KernelChoice::PerTap);
+            let hist = build_kernel_coordinator(enc.clone(), KernelChoice::Histogram);
+            for img in pool.iter().take(4) {
+                let want: Vec<u32> = enc
+                    .forward_fx(img, ConvVariant::Pasm, QFormat::IMAGE32)
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                for (coord, kind) in [(&per_tap, "per-tap"), (&hist, "histogram")] {
+                    let resp = coord.infer(img.clone()).expect("kernel bench inference");
+                    let got: Vec<u32> = resp.logits.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "B={bins}: {kind} kernel diverged from forward_fx");
+                }
+            }
+        }
+        let mut best = [0.0f64; 2]; // [per-tap, histogram]
+        for _ in 0..2 {
+            for (slot, choice) in [(0usize, KernelChoice::PerTap), (1, KernelChoice::Histogram)] {
+                let coord = build_kernel_coordinator(enc.clone(), choice);
+                let t0 = Instant::now();
+                let rxs: Vec<_> = (0..load)
+                    .map(|i| coord.submit(pool[i % pool.len()].clone()).unwrap())
+                    .collect();
+                for rx in rxs {
+                    rx.recv().unwrap().expect("kernel bench inference failed");
+                }
+                let req_s = load as f64 / t0.elapsed().as_secs_f64();
+                best[slot] = best[slot].max(req_s);
+            }
+        }
+        println!(
+            "bench coordinator/kernels/serve_{load}: B={bins}, conv2 taps {conv2_taps}: \
+             per-tap {:.1} req/s, histogram {:.1} req/s ({:.2}x)",
+            best[0],
+            best[1],
+            best[1] / best[0]
+        );
+        stats.push(KernelStats {
+            bins,
+            load,
+            conv2_taps,
+            per_tap_req_s: best[0],
+            histogram_req_s: best[1],
+        });
+    }
+    stats
+}
+
 /// Loud-failure gate: every section this run claims to have measured
 /// must hold real numbers.  A placeholder (empty section, zero req/s)
 /// panics — `BENCH_serving.json` is only ever rewritten with data.
@@ -575,10 +675,19 @@ fn ensure_measured(
     pipeline: Option<&PipelineStats>,
     stages: &[StageStat],
     trace_overhead: &TraceOverheadStats,
+    kernels: &[KernelStats],
 ) {
     assert!(!runs.is_empty(), "refusing to write a placeholder: no in-process runs measured");
     assert!(!net.is_empty(), "refusing to write a placeholder: no socket loads measured");
     assert!(!shards.is_empty(), "refusing to write a placeholder: no shard runs measured");
+    assert!(!kernels.is_empty(), "refusing to write a placeholder: no kernel runs measured");
+    for k in kernels {
+        assert!(
+            k.per_tap_req_s > 0.0 && k.histogram_req_s > 0.0,
+            "placeholder req_s in the kernel comparison at B={}",
+            k.bins
+        );
+    }
     assert!(
         stages.iter().filter(|s| s.count > 0).count() == 4,
         "refusing to write a placeholder: the socket phase left a stage histogram empty"
@@ -609,6 +718,9 @@ fn ensure_measured(
     }
 }
 
+// one parameter per measured section; a bundling struct would only move
+// the field list somewhere else
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     runs: &[RunStats],
     net: &[NetStats],
@@ -617,8 +729,9 @@ fn write_json(
     artifact: &ArtifactStats,
     stages: &[StageStat],
     trace_overhead: &TraceOverheadStats,
+    kernels: &[KernelStats],
 ) {
-    ensure_measured(runs, net, shards, pipeline, stages, trace_overhead);
+    ensure_measured(runs, net, shards, pipeline, stages, trace_overhead, kernels);
     let max_load = runs.iter().map(|r| r.load).max().unwrap_or(0);
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load);
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load);
@@ -795,6 +908,27 @@ fn write_json(
         trace_overhead.on_req_s,
         trace_overhead.ratio()
     );
+    s.push_str(
+        "  \"kernels_label\": \"per-tap vs histogram-accumulate PASM plans, fixed-point \
+         IMAGE32/W32, 24x24 input, 1 execution thread, best of 2 alternating, served \
+         logits bit-checked against forward_fx before timing\",\n",
+    );
+    s.push_str("  \"kernels\": [\n");
+    for (i, k) in kernels.iter().enumerate() {
+        let sep = if i + 1 == kernels.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"bins\": {}, \"load\": {}, \"conv2_taps\": {}, \
+             \"per_tap_req_s\": {:.1}, \"histogram_req_s\": {:.1}, \"ratio\": {:.2}}}{sep}",
+            k.bins,
+            k.load,
+            k.conv2_taps,
+            k.per_tap_req_s,
+            k.histogram_req_s,
+            k.histogram_req_s / k.per_tap_req_s
+        );
+    }
+    s.push_str("  ],\n");
     match (base, plan) {
         (Some(b), Some(p)) => {
             let _ = writeln!(
@@ -867,6 +1001,10 @@ fn main() {
     let overhead_load = if smoke { 512 } else { 2048 };
     let trace_overhead = run_trace_overhead(&loaded, &registry, overhead_load, &pool);
 
+    // PASM kernel comparison: per-tap vs histogram-accumulate over B
+    let kernel_load = if smoke { 256 } else { 1024 };
+    let kernels = run_kernel_comparison(kernel_load);
+
     let max_load = loads.last().copied().unwrap();
     let base = runs.iter().find(|r| r.config == "baseline" && r.load == max_load).unwrap();
     let plan = runs.iter().find(|r| r.config == "planned" && r.load == max_load).unwrap();
@@ -889,6 +1027,15 @@ fn main() {
         );
     }
 
-    write_json(&runs, &net, &shards, pipeline.as_ref(), &artifact, &stages, &trace_overhead);
+    write_json(
+        &runs,
+        &net,
+        &shards,
+        pipeline.as_ref(),
+        &artifact,
+        &stages,
+        &trace_overhead,
+        &kernels,
+    );
     let _ = std::fs::remove_dir_all(&models_dir);
 }

@@ -294,16 +294,27 @@ fn conv_shapes(image_dims: &[usize], kernel_dims: &[usize], stride: usize) -> Co
     )
 }
 
-/// Hard-error on any bin index outside the codebook: scans the (small)
-/// index tensor for its real maximum before the hot loops run, so a corrupt
-/// encoding fails loudly in both the f32 and fixed-point dataflows rather
-/// than indexing out of bounds mid-convolution.
-pub(crate) fn assert_bins_in_range(bin_idx: &[u16], codebook_len: usize) {
+/// Scan the (small) bin-index stream for its real maximum and return it if
+/// any index fails `max_bin < codebook_len` — the *strict* bound, so an
+/// index *equal* to the codebook length is rejected too.  This is the one
+/// scan every dataflow shares: the reference kernels assert on it via
+/// [`assert_bins_in_range`], and `cnn::plan` runs it at compile time before
+/// either the per-tap streams or the histogram (count-then-multiply) layout
+/// are built, so no kernel — per-tap or histogram, f32 or fixed-point —
+/// ever indexes a codebook with an out-of-range bin.
+pub(crate) fn bin_range_violation(bin_idx: &[u16], codebook_len: usize) -> Option<usize> {
     let max_bin = bin_idx.iter().copied().max().unwrap_or(0) as usize;
-    assert!(
-        max_bin < codebook_len,
-        "bin index {max_bin} out of range for codebook with {codebook_len} entries"
-    );
+    (max_bin >= codebook_len).then_some(max_bin)
+}
+
+/// Hard-error on any bin index outside the codebook: runs
+/// [`bin_range_violation`] before the hot loops, so a corrupt encoding
+/// fails loudly in both the f32 and fixed-point dataflows rather than
+/// indexing out of bounds mid-convolution.
+pub(crate) fn assert_bins_in_range(bin_idx: &[u16], codebook_len: usize) {
+    if let Some(max_bin) = bin_range_violation(bin_idx, codebook_len) {
+        panic!("bin index {max_bin} out of range for codebook with {codebook_len} entries");
+    }
 }
 
 #[cfg(test)]
@@ -470,5 +481,57 @@ mod tests {
             stride: 1,
         };
         pasm_conv_fx(&inp);
+    }
+
+    // Boundary regression: a bin index exactly *equal* to the codebook
+    // length is one past the last entry and must be rejected by the same
+    // strict scan as a wildly out-of-range one — in every kernel, before
+    // any indexing happens (images are all-zero, so if the scan let the
+    // index through, the f32 kernels would silently read garbage weights).
+    fn boundary_bin_idx() -> Tensor<u16> {
+        Tensor::from_vec(&[1, 1, 3, 3], vec![0u16, 1, 2, 3, 4, 0, 1, 2, 3])
+    }
+
+    fn boundary_fx_inputs() -> FxConvInputs {
+        FxConvInputs {
+            image_raw: Tensor::zeros(&[1, 3, 3]),
+            bin_idx: boundary_bin_idx(),
+            codebook_raw: vec![1i64; 4],
+            iq: QFormat::IMAGE32,
+            wq: QFormat::W16,
+            stride: 1,
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bin index 4 out of range for codebook with 4 entries")]
+    fn ws_f32_bin_equal_to_codebook_len_is_hard_error() {
+        ws_conv_f32(&Tensor::zeros(&[1, 3, 3]), &boundary_bin_idx(), &[0.5f32; 4], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bin index 4 out of range for codebook with 4 entries")]
+    fn pasm_f32_bin_equal_to_codebook_len_is_hard_error() {
+        pasm_conv_f32(&Tensor::zeros(&[1, 3, 3]), &boundary_bin_idx(), &[0.5f32; 4], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bin index 4 out of range for codebook with 4 entries")]
+    fn ws_fx_bin_equal_to_codebook_len_is_hard_error() {
+        ws_conv_fx(&boundary_fx_inputs());
+    }
+
+    #[test]
+    #[should_panic(expected = "bin index 4 out of range for codebook with 4 entries")]
+    fn pasm_fx_bin_equal_to_codebook_len_is_hard_error() {
+        pasm_conv_fx(&boundary_fx_inputs());
+    }
+
+    #[test]
+    fn bin_range_violation_is_strict() {
+        assert_eq!(bin_range_violation(&[0, 1, 2, 3], 4), None);
+        assert_eq!(bin_range_violation(&[0, 1, 4, 3], 4), Some(4));
+        assert_eq!(bin_range_violation(&[], 0), Some(0));
+        assert_eq!(bin_range_violation(&[0], 1), None);
     }
 }

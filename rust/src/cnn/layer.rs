@@ -205,6 +205,87 @@ pub fn maxpool2_fx_into(x: &[i64], c: usize, h: usize, w: usize, out: &mut [i64]
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared fixed-point accumulator primitives and histogram tile workers.
+//
+// The compiled kernels in `cnn::plan` come in two execution shapes: the
+// per-tap kernels (one multiply per tap, mirroring the reference
+// accumulation order) and the histogram kernels (the paper's
+// count-then-multiply restructure: accumulate activations into B per-bin
+// partial sums, then finish with B multiplies against the codebook).
+// Both shapes share these primitives, so the checked/wrapping overflow
+// policy lives in exactly one place.
+//
+// The tile workers are the histogram kernels' inner loops over a
+// cache-blocked run of adjacent output pixels.  They are written as
+// exact-length slice zips — the shape LLVM's autovectorizer reliably
+// turns into vector adds.  That claim is *checked*, not hoped:
+// `tests/kernel_vectorization.rs` disassembles the `#[no_mangle]` probe
+// wrappers in `cnn::plan` and fails if the emitted loop is scalar.
+// ---------------------------------------------------------------------------
+
+/// Accumulator add under the plan-time overflow policy: `CHECKED` keeps
+/// `checked_add` (codebooks that defeat the overflow proof), `!CHECKED`
+/// is a plain wrapping add guarded by a `debug_assert` (the proof showed
+/// no representable input can overflow).
+#[inline(always)]
+pub(crate) fn acc_add<const CHECKED: bool>(a: i64, b: i64) -> i64 {
+    if CHECKED {
+        a.checked_add(b).expect("planned accumulator overflow")
+    } else {
+        debug_assert!(a.checked_add(b).is_some(), "plan-time overflow bound violated (add)");
+        a.wrapping_add(b)
+    }
+}
+
+/// Multiply under the plan-time overflow policy (see [`acc_add`]).
+#[inline(always)]
+pub(crate) fn acc_mul<const CHECKED: bool>(a: i64, b: i64) -> i64 {
+    if CHECKED {
+        a.checked_mul(b).expect("planned product overflow")
+    } else {
+        debug_assert!(a.checked_mul(b).is_some(), "plan-time overflow bound violated (mul)");
+        a.wrapping_mul(b)
+    }
+}
+
+/// Histogram PAS inner loop, f32: `acc[j] += src[j]` over an exact-length
+/// tile of adjacent output pixels (element-wise, no reduction — trivially
+/// vectorizable without reassociating IEEE additions).
+#[inline(always)]
+pub(crate) fn acc_tile_f32(acc: &mut [f32], src: &[f32]) {
+    for (a, &v) in acc.iter_mut().zip(src) {
+        *a += v;
+    }
+}
+
+/// Histogram PAS inner loop, fixed point: `acc[j] += src[j]` under the
+/// plan-time overflow policy.  The `!CHECKED` instantiation is a plain
+/// `i64` vector add in release builds.
+#[inline(always)]
+pub(crate) fn acc_tile_fx<const CHECKED: bool>(acc: &mut [i64], src: &[i64]) {
+    for (a, &v) in acc.iter_mut().zip(src) {
+        *a = acc_add::<CHECKED>(*a, v);
+    }
+}
+
+/// Histogram post-pass MAC, f32: `out[j] += acc[j] * cv` — one codebook
+/// entry broadcast against a tile of per-bin partial sums.
+#[inline(always)]
+pub(crate) fn mac_tile_f32(out: &mut [f32], acc: &[f32], cv: f32) {
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o += a * cv;
+    }
+}
+
+/// Histogram post-pass MAC, fixed point (see [`mac_tile_f32`]).
+#[inline(always)]
+pub(crate) fn mac_tile_fx<const CHECKED: bool>(out: &mut [i64], acc: &[i64], cv: i64) {
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = acc_add::<CHECKED>(*o, acc_mul::<CHECKED>(a, cv));
+    }
+}
+
 /// Numerically-stable softmax.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
     let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);

@@ -31,4 +31,4 @@ pub mod train;
 
 pub use conv::{direct_conv_f32, pasm_conv_fx, pasm_conv_f32, ws_conv_f32, ws_conv_fx, FxConvInputs};
 pub use network::{DigitsCnn, EncodedCnn, NetworkParams};
-pub use plan::{CompiledCnn, LayerPlan, Scratch};
+pub use plan::{CompiledCnn, KernelChoice, KernelKind, LayerPlan, Scratch};

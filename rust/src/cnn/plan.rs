@@ -18,24 +18,179 @@
 //! * [`CompiledCnn`] — an [`EncodedCnn`] compiled end to end, executing
 //!   into caller-provided [`Scratch`] arenas: a steady-state
 //!   `forward_*_into` call performs **zero heap allocation**.
+//! * [`KernelChoice`] — per-plan execution strategy for the PASM dataflow:
+//!   the **per-tap** kernels mirror the reference accumulation order (one
+//!   multiply per tap), the **histogram** kernels implement the paper's
+//!   count-then-multiply restructure in software — accumulate activations
+//!   into `B` per-bin partial sums over a cache-blocked tile of adjacent
+//!   output pixels (a structure-of-arrays layout, [`HistLayout`], groups
+//!   each conv kernel's taps by bin so the inner accumulate loop is a
+//!   contiguous slice add the compiler autovectorizes), then finish with
+//!   `B` multiplies against the codebook.  [`KernelChoice::Auto`] picks
+//!   per layer by comparing taps-per-output against the bin count.
 //!
 //! Exactness contract: the planned forwards are **bit-identical** to the
 //! reference [`EncodedCnn::forward`] / [`EncodedCnn::forward_fx`] — in
-//! fixed point because integer addition commutes (paper §5.3), in f32
-//! because the planned path performs the identical sequence of IEEE
-//! operations (the non-conv stages literally share the slice workers in
-//! [`crate::cnn::layer`], and the conv loops mirror the reference
-//! accumulation order).  Property tests pin both claims.
+//! fixed point because integer addition commutes (paper §5.3; the
+//! histogram kernels are exactly the reordering that commutativity
+//! licenses), in f32 because the planned path performs the identical
+//! sequence of IEEE operations (the non-conv stages literally share the
+//! slice workers in [`crate::cnn::layer`]; the per-tap conv loops mirror
+//! the reference accumulation order, and the histogram f32 kernel
+//! preserves the original tap order *within* each bin, so every per-bin
+//! accumulator and the final codebook contraction see the same IEEE
+//! additions as the reference PASM kernel).  Property tests pin all of it
+//! (`tests/plan_equivalence.rs`).
 
+use crate::cnn::conv::bin_range_violation;
 use crate::cnn::layer::{
-    add_bias_fx_slice, add_bias_slice, dense_into, maxpool2_fx_into, maxpool2_into, relu_fx_slice,
-    relu_slice,
+    acc_add, acc_mul, acc_tile_f32, acc_tile_fx, add_bias_fx_slice, add_bias_slice, dense_into,
+    mac_tile_f32, mac_tile_fx, maxpool2_fx_into, maxpool2_into, relu_fx_slice, relu_slice,
 };
 use crate::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
 use crate::quant::codebook::EncodedWeights;
 use crate::quant::fixed::{encode_bias_raw, fx_rescale, QFormat};
 use crate::tensor::{ConvShape, Tensor};
 use anyhow::{ensure, Result};
+
+/// Cache-block width of the histogram kernels: per-bin partial sums are
+/// materialized for this many adjacent output pixels at once, so the PAS
+/// inner loop is a contiguous `tile`-wide slice add and the whole
+/// `B x tile` accumulator block stays L1-resident (64 x 64 x 8 B = 32 KiB
+/// at the maximum supported bin count).
+pub const HIST_TILE: usize = 64;
+
+/// [`KernelChoice::Auto`] threshold: a layer runs the histogram kernel
+/// when `taps >= HIST_AUTO_TAPS_PER_BIN * bins`.  The histogram
+/// restructure replaces `taps` multiply-adds per output with `taps` adds
+/// plus `bins` multiply-adds, so it pays off once each codebook entry is
+/// reused by at least a couple of taps (the paper's B << taps regime).
+pub const HIST_AUTO_TAPS_PER_BIN: usize = 2;
+
+/// Requested execution strategy for the PASM dataflow's conv kernels.
+///
+/// This is the *execution* axis, orthogonal to
+/// [`ConvVariant`]: the variant says which reference dataflow the plan
+/// must be bit-identical to, the kernel choice says how the PASM dataflow
+/// is scheduled on the CPU.  The `WeightShared` variant always runs
+/// per-tap — in f32 its accumulation order cannot be reproduced by a
+/// histogram (one running accumulator across taps of *different* bins),
+/// and keeping fixed point symmetric means one dispatch rule, not two.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelChoice {
+    /// One multiply per tap, mirroring the reference accumulation order.
+    PerTap,
+    /// Count-then-multiply: per-bin partial sums, then `B` multiplies.
+    Histogram,
+    /// Resolve per layer: histogram when
+    /// `taps >= HIST_AUTO_TAPS_PER_BIN * bins`, per-tap otherwise.
+    #[default]
+    Auto,
+}
+
+impl KernelChoice {
+    /// Resolve the choice for a layer with `taps` taps per output and
+    /// `bins` codebook entries.
+    pub fn resolve(self, taps: usize, bins: usize) -> KernelKind {
+        match self {
+            KernelChoice::PerTap => KernelKind::PerTap,
+            KernelChoice::Histogram => KernelKind::Histogram,
+            KernelChoice::Auto => {
+                if taps >= HIST_AUTO_TAPS_PER_BIN * bins {
+                    KernelKind::Histogram
+                } else {
+                    KernelKind::PerTap
+                }
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<KernelChoice> {
+        match s {
+            "per-tap" => Ok(KernelChoice::PerTap),
+            "histogram" => Ok(KernelChoice::Histogram),
+            "auto" => Ok(KernelChoice::Auto),
+            other => {
+                anyhow::bail!("unknown kernel choice '{other}' (expected per-tap|histogram|auto)")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelChoice::PerTap => "per-tap",
+            KernelChoice::Histogram => "histogram",
+            KernelChoice::Auto => "auto",
+        })
+    }
+}
+
+/// The kernel a layer actually compiled to ([`KernelChoice`] with `Auto`
+/// resolved against the layer's taps/bins ratio).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// One multiply per tap.
+    PerTap,
+    /// Per-bin partial sums, then `B` multiplies.
+    Histogram,
+}
+
+/// Structure-of-arrays bin-stream layout for the histogram kernels, built
+/// once at plan time.
+///
+/// For each conv kernel `m`, the `taps` window offsets are grouped by bin
+/// in CSR form — `tap_offsets[bin_starts[m*(B+1) + b] .. bin_starts[m*(B+1)
+/// + b + 1]]` are the image offsets (relative to the output pixel's window
+/// origin, so independent of the pixel) of every tap of `m` that uses
+/// codebook entry `b`.  Grouping is *stable*: within a bin, taps keep the
+/// reference `(channel, ky, kx)` order, which is what makes the f32
+/// histogram kernel replay the reference PASM kernel's per-accumulator
+/// IEEE addition sequence exactly.
+#[derive(Clone, Debug)]
+struct HistLayout {
+    /// `[kernels * (bins + 1)]` CSR row starts into `tap_offsets`.
+    bin_starts: Vec<u32>,
+    /// `[kernels * taps]` window-relative image offsets, grouped by bin.
+    tap_offsets: Vec<u32>,
+}
+
+impl HistLayout {
+    fn build(shape: &ConvShape, bin_idx: &[u16], bins: usize) -> HistLayout {
+        let taps = shape.taps();
+        let plane = shape.in_h * shape.in_w;
+        // Window-relative offset of each tap in reference (c, ky, kx) order.
+        let mut rel = Vec::with_capacity(taps);
+        for c in 0..shape.channels {
+            for ky in 0..shape.kernel_h {
+                for kx in 0..shape.kernel_w {
+                    rel.push((c * plane + ky * shape.in_w + kx) as u32);
+                }
+            }
+        }
+        let mut bin_starts = Vec::with_capacity(shape.kernels * (bins + 1));
+        let mut tap_offsets = Vec::with_capacity(shape.kernels * taps);
+        for m in 0..shape.kernels {
+            let bi_m = &bin_idx[m * taps..(m + 1) * taps];
+            bin_starts.push(tap_offsets.len() as u32);
+            for b in 0..bins {
+                // Stable grouping: keep reference tap order within the bin.
+                for (t, &bt) in bi_m.iter().enumerate() {
+                    if bt as usize == b {
+                        tap_offsets.push(rel[t]);
+                    }
+                }
+                bin_starts.push(tap_offsets.len() as u32);
+            }
+        }
+        HistLayout { bin_starts, tap_offsets }
+    }
+}
 
 /// One convolution layer compiled for repeated execution.
 #[derive(Clone, Debug)]
@@ -57,17 +212,33 @@ pub struct LayerPlan {
     /// image representable in `iq` — lets the fixed-point kernels run
     /// branch-free.
     proved_no_overflow: bool,
+    /// Resolved execution strategy for the PASM dataflow.
+    kernel: KernelKind,
+    /// SoA bin streams, present iff `kernel == KernelKind::Histogram`.
+    hist: Option<HistLayout>,
 }
 
 impl LayerPlan {
-    /// Compile one layer: validate the encoding (out-of-range bins are a
-    /// hard error), pre-encode the fixed-point state, and establish the
-    /// accumulator overflow bound.
+    /// Compile one layer with the default [`KernelChoice::Auto`] strategy.
     pub fn compile(
         shape: ConvShape,
         enc: &EncodedWeights,
         bias: &[f32],
         iq: QFormat,
+    ) -> Result<LayerPlan> {
+        LayerPlan::compile_with(shape, enc, bias, iq, KernelChoice::Auto)
+    }
+
+    /// Compile one layer: validate the encoding (out-of-range bins are a
+    /// hard error *before* any kernel layout is built), pre-encode the
+    /// fixed-point state, establish the accumulator overflow bound, and
+    /// resolve + materialize the requested kernel strategy.
+    pub fn compile_with(
+        shape: ConvShape,
+        enc: &EncodedWeights,
+        bias: &[f32],
+        iq: QFormat,
+        choice: KernelChoice,
     ) -> Result<LayerPlan> {
         ensure!(
             enc.bin_idx.dims() == shape.weight_shape().dims(),
@@ -82,20 +253,30 @@ impl LayerPlan {
             shape.kernels
         );
         let codebook_raw = enc.codebook.raw();
-        let max_bin = enc.bin_idx.data().iter().copied().max().unwrap_or(0) as usize;
-        ensure!(
-            max_bin < codebook_raw.len(),
-            "bin index {} out of range for codebook with {} entries",
-            max_bin,
-            codebook_raw.len()
-        );
+        // The same strict scan the reference kernels assert on: rejects
+        // `bin == len` as firmly as `bin >> len`, and runs before the
+        // per-tap or histogram layouts exist, so neither kernel family can
+        // ever index out of bounds.
+        if let Some(max_bin) = bin_range_violation(enc.bin_idx.data(), codebook_raw.len()) {
+            anyhow::bail!(
+                "bin index {} out of range for codebook with {} entries",
+                max_bin,
+                codebook_raw.len()
+            );
+        }
         let wq = enc.codebook.wq;
         let bias_raw = encode_bias_raw(bias, iq.frac + wq.frac);
 
         // Overflow proof over *actual* codebook magnitudes (format-max
         // would be hopelessly conservative for W32): the WS/post-pass
         // accumulator is bounded by taps * max|img| * max|cb| + max|bias|,
-        // the PAS bins by taps * max|img|.
+        // the PAS bins by taps * max|img|.  The histogram kernels only
+        // *reorder* the same summands, so the identical bounds cover them:
+        // each per-bin partial sum accumulates a subset of the taps
+        // (<= pas_bound), each `bin_sum * cb[b]` product and every partial
+        // sum of the B-term codebook contraction is bounded by
+        // sum_b taps_b * max|img| * max|cb| = taps * max|img| * max|cb|
+        // (<= acc_bound).  One proof, both accumulation orders.
         let taps = shape.taps() as i128;
         let max_img = iq.max_raw().unsigned_abs().max(iq.min_raw().unsigned_abs()) as i128;
         let max_cb = codebook_raw.iter().map(|c| c.unsigned_abs()).max().unwrap_or(0) as i128;
@@ -103,6 +284,14 @@ impl LayerPlan {
         let acc_bound = taps * max_img * max_cb + max_bias;
         let pas_bound = taps * max_img;
         let proved_no_overflow = acc_bound <= i64::MAX as i128 && pas_bound <= i64::MAX as i128;
+
+        let kernel = choice.resolve(shape.taps(), codebook_raw.len());
+        let hist = match kernel {
+            KernelKind::Histogram => {
+                Some(HistLayout::build(&shape, enc.bin_idx.data(), codebook_raw.len()))
+            }
+            KernelKind::PerTap => None,
+        };
 
         Ok(LayerPlan {
             shape,
@@ -114,6 +303,8 @@ impl LayerPlan {
             iq,
             wq,
             proved_no_overflow,
+            kernel,
+            hist,
         })
     }
 
@@ -147,11 +338,29 @@ impl LayerPlan {
         self.proved_no_overflow
     }
 
+    /// The kernel this layer resolved to (`Auto` applies the
+    /// [`HIST_AUTO_TAPS_PER_BIN`] heuristic at compile time).
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Conv scratch slots the kernels need: `bins()` per-bin accumulators
+    /// for the per-tap PASM kernel, a `bins() * HIST_TILE` tile block for
+    /// the histogram kernel.
+    pub fn scratch_len(&self) -> usize {
+        match self.kernel {
+            KernelKind::PerTap => self.bins(),
+            KernelKind::Histogram => self.bins() * HIST_TILE,
+        }
+    }
+
     /// Fixed-point convolution (no bias/activation) into `out`
-    /// (`[kernels, OH, OW]` flattened).  `bins` is PASM scratch with at
-    /// least [`LayerPlan::bins`] slots; bit-identical to
+    /// (`[kernels, OH, OW]` flattened).  `bins` is kernel scratch with at
+    /// least [`LayerPlan::scratch_len`] slots; bit-identical to
     /// [`crate::cnn::conv::ws_conv_fx`] / `pasm_conv_fx` on the same
-    /// encoded inputs.
+    /// encoded inputs, for either kernel strategy (integer addition
+    /// commutes — paper §5.3).  The `WeightShared` variant always runs
+    /// per-tap (see [`KernelChoice`]).
     pub fn conv_fx_into(
         &self,
         variant: ConvVariant,
@@ -159,17 +368,28 @@ impl LayerPlan {
         bins: &mut [i64],
         out: &mut [i64],
     ) {
-        match (variant, self.proved_no_overflow) {
-            (ConvVariant::WeightShared, true) => self.ws_fx::<false>(img, out),
-            (ConvVariant::WeightShared, false) => self.ws_fx::<true>(img, out),
-            (ConvVariant::Pasm, true) => self.pasm_fx::<false>(img, bins, out),
-            (ConvVariant::Pasm, false) => self.pasm_fx::<true>(img, bins, out),
+        match (variant, self.kernel, self.proved_no_overflow) {
+            (ConvVariant::WeightShared, _, true) => self.ws_fx::<false>(img, out),
+            (ConvVariant::WeightShared, _, false) => self.ws_fx::<true>(img, out),
+            (ConvVariant::Pasm, KernelKind::PerTap, true) => self.pasm_fx::<false>(img, bins, out),
+            (ConvVariant::Pasm, KernelKind::PerTap, false) => self.pasm_fx::<true>(img, bins, out),
+            (ConvVariant::Pasm, KernelKind::Histogram, true) => {
+                self.hist_fx::<false>(img, bins, out)
+            }
+            (ConvVariant::Pasm, KernelKind::Histogram, false) => {
+                self.hist_fx::<true>(img, bins, out)
+            }
         }
     }
 
     /// f32 convolution (no bias/activation) into `out`; performs the
     /// identical IEEE operation sequence as
-    /// [`crate::cnn::conv::ws_conv_f32`] / `pasm_conv_f32`.
+    /// [`crate::cnn::conv::ws_conv_f32`] / `pasm_conv_f32` — the histogram
+    /// kernel included, because its stable-by-bin tap grouping feeds every
+    /// per-bin accumulator the same additions in the same order as the
+    /// reference PASM scatter.  The `WeightShared` variant always runs
+    /// per-tap (its single running accumulator mixes bins, an order no
+    /// histogram can replay in f32).
     pub fn conv_f32_into(
         &self,
         variant: ConvVariant,
@@ -177,9 +397,10 @@ impl LayerPlan {
         bins: &mut [f32],
         out: &mut [f32],
     ) {
-        match variant {
-            ConvVariant::WeightShared => self.ws_f32(img, out),
-            ConvVariant::Pasm => self.pasm_f32(img, bins, out),
+        match (variant, self.kernel) {
+            (ConvVariant::WeightShared, _) => self.ws_f32(img, out),
+            (ConvVariant::Pasm, KernelKind::PerTap) => self.pasm_f32(img, bins, out),
+            (ConvVariant::Pasm, KernelKind::Histogram) => self.hist_f32(img, bins, out),
         }
     }
 
@@ -210,7 +431,7 @@ impl LayerPlan {
                             let row = &cplane[base + ky * ih_w..base + ky * ih_w + k_w];
                             for &iv in row {
                                 let b = bi_m[t] as usize;
-                                acc = acc_add::<CHECKED>(acc, mul::<CHECKED>(iv, cb[b]));
+                                acc = acc_add::<CHECKED>(acc, acc_mul::<CHECKED>(iv, cb[b]));
                                 t += 1;
                             }
                         }
@@ -252,7 +473,7 @@ impl LayerPlan {
                     // post-pass MAC: B multiplies, shared unit
                     let mut acc = 0i64;
                     for (bv, &cv) in bins.iter().zip(cb.iter()) {
-                        acc = acc_add::<CHECKED>(acc, mul::<CHECKED>(*bv, cv));
+                        acc = acc_add::<CHECKED>(acc, acc_mul::<CHECKED>(*bv, cv));
                     }
                     out[m * oh * ow + oy * ow + ox] = acc;
                 }
@@ -326,26 +547,161 @@ impl LayerPlan {
             }
         }
     }
-}
 
-#[inline(always)]
-fn acc_add<const CHECKED: bool>(a: i64, b: i64) -> i64 {
-    if CHECKED {
-        a.checked_add(b).expect("planned accumulator overflow")
-    } else {
-        debug_assert!(a.checked_add(b).is_some(), "plan-time overflow bound violated (add)");
-        a.wrapping_add(b)
+    /// Histogram (count-then-multiply) f32 kernel.  For a tile of up to
+    /// [`HIST_TILE`] adjacent output pixels, accumulate the image values
+    /// of each bin's taps into a `B x tile` block of per-bin partial sums
+    /// (PAS phase — at stride 1 each tap contributes one *contiguous*
+    /// image slice, which is what makes the inner loop a vector add), then
+    /// contract the block against the codebook (`B` multiplies per
+    /// output).  Bit-identical to [`LayerPlan::pasm_f32`]: stable-by-bin
+    /// tap grouping preserves each accumulator's IEEE addition order, and
+    /// the contraction walks all `B` bins from `0.0` exactly like the
+    /// reference post-pass.
+    fn hist_f32(&self, img: &[f32], bins: &mut [f32], out: &mut [f32]) {
+        self.check_lens(img.len(), out.len());
+        let s = &self.shape;
+        let cb = &self.codebook_f32;
+        let nb = cb.len();
+        let hist = self.hist.as_ref().expect("histogram kernel without layout");
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let (ih_w, stride) = (s.in_w, s.stride);
+        for m in 0..s.kernels {
+            let starts = &hist.bin_starts[m * (nb + 1)..(m + 1) * (nb + 1)];
+            let out_m = &mut out[m * oh * ow..(m + 1) * oh * ow];
+            for oy in 0..oh {
+                let row0 = oy * stride * ih_w;
+                let out_row = &mut out_m[oy * ow..(oy + 1) * ow];
+                let mut ox0 = 0usize;
+                while ox0 < ow {
+                    let tile = HIST_TILE.min(ow - ox0);
+                    let acc = &mut bins[..nb * tile];
+                    acc.fill(0.0);
+                    // PAS phase: per-bin partial sums for `tile` outputs.
+                    for b in 0..nb {
+                        let offs = &hist.tap_offsets[starts[b] as usize..starts[b + 1] as usize];
+                        let acc_b = &mut acc[b * tile..(b + 1) * tile];
+                        if stride == 1 {
+                            for &o in offs {
+                                let src0 = row0 + o as usize + ox0;
+                                acc_tile_f32(acc_b, &img[src0..src0 + tile]);
+                            }
+                        } else {
+                            for &o in offs {
+                                let p0 = row0 + o as usize;
+                                for (j, a) in acc_b.iter_mut().enumerate() {
+                                    *a += img[p0 + (ox0 + j) * stride];
+                                }
+                            }
+                        }
+                    }
+                    // Post-pass: B multiplies per output, shared unit.
+                    let out_t = &mut out_row[ox0..ox0 + tile];
+                    out_t.fill(0.0);
+                    for (b, &cv) in cb.iter().enumerate() {
+                        mac_tile_f32(out_t, &acc[b * tile..(b + 1) * tile], cv);
+                    }
+                    ox0 += tile;
+                }
+            }
+        }
+    }
+
+    /// Histogram (count-then-multiply) fixed-point kernel — same schedule
+    /// as [`LayerPlan::hist_f32`]; bit-identical to every other
+    /// fixed-point kernel because integer addition commutes (paper §5.3),
+    /// and covered by the same plan-time overflow proof (the reorder only
+    /// regroups the identical summands — see
+    /// [`LayerPlan::compile_with`]).
+    fn hist_fx<const CHECKED: bool>(&self, img: &[i64], bins: &mut [i64], out: &mut [i64]) {
+        self.check_lens(img.len(), out.len());
+        let s = &self.shape;
+        let cb = &self.codebook_raw;
+        let nb = cb.len();
+        let hist = self.hist.as_ref().expect("histogram kernel without layout");
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let (ih_w, stride) = (s.in_w, s.stride);
+        for m in 0..s.kernels {
+            let starts = &hist.bin_starts[m * (nb + 1)..(m + 1) * (nb + 1)];
+            let out_m = &mut out[m * oh * ow..(m + 1) * oh * ow];
+            for oy in 0..oh {
+                let row0 = oy * stride * ih_w;
+                let out_row = &mut out_m[oy * ow..(oy + 1) * ow];
+                let mut ox0 = 0usize;
+                while ox0 < ow {
+                    let tile = HIST_TILE.min(ow - ox0);
+                    let acc = &mut bins[..nb * tile];
+                    acc.fill(0);
+                    for b in 0..nb {
+                        let offs = &hist.tap_offsets[starts[b] as usize..starts[b + 1] as usize];
+                        let acc_b = &mut acc[b * tile..(b + 1) * tile];
+                        if stride == 1 {
+                            for &o in offs {
+                                let src0 = row0 + o as usize + ox0;
+                                acc_tile_fx::<CHECKED>(acc_b, &img[src0..src0 + tile]);
+                            }
+                        } else {
+                            for &o in offs {
+                                let p0 = row0 + o as usize;
+                                for (j, a) in acc_b.iter_mut().enumerate() {
+                                    *a = acc_add::<CHECKED>(*a, img[p0 + (ox0 + j) * stride]);
+                                }
+                            }
+                        }
+                    }
+                    let out_t = &mut out_row[ox0..ox0 + tile];
+                    out_t.fill(0);
+                    for (b, &cv) in cb.iter().enumerate() {
+                        mac_tile_fx::<CHECKED>(out_t, &acc[b * tile..(b + 1) * tile], cv);
+                    }
+                    ox0 += tile;
+                }
+            }
+        }
     }
 }
 
-#[inline(always)]
-fn mul<const CHECKED: bool>(a: i64, b: i64) -> i64 {
-    if CHECKED {
-        a.checked_mul(b).expect("planned product overflow")
-    } else {
-        debug_assert!(a.checked_mul(b).is_some(), "plan-time overflow bound violated (mul)");
-        a.wrapping_mul(b)
-    }
+// ---------------------------------------------------------------------------
+// Autovectorization probes.
+//
+// "The inner accumulate loop autovectorizes" is a claim about emitted
+// machine code, so it is *tested* against emitted machine code:
+// `tests/kernel_vectorization.rs` disassembles the release test binary and
+// checks these symbols for vector adds.  Each probe is a `#[no_mangle]`
+// non-generic wrapper around the exact `#[inline(always)]` tile worker the
+// histogram kernels run, giving the disassembler a stable symbol whose body
+// is the same LLVM loop shape as the kernel's inner loop.
+// ---------------------------------------------------------------------------
+
+/// Disassembly probe for the f32 histogram PAS inner loop
+/// (`acc[j] += src[j]`).  Not part of the public API.
+///
+/// # Safety
+///
+/// `acc` and `src` must each point to `n` valid, properly aligned,
+/// non-overlapping elements.
+#[doc(hidden)]
+#[no_mangle]
+pub unsafe extern "C" fn pasm_hist_acc_tile_f32_probe(acc: *mut f32, src: *const f32, n: usize) {
+    let acc = unsafe { std::slice::from_raw_parts_mut(acc, n) };
+    let src = unsafe { std::slice::from_raw_parts(src, n) };
+    acc_tile_f32(acc, src);
+}
+
+/// Disassembly probe for the fixed-point histogram PAS inner loop in its
+/// proved-no-overflow (wrapping-add) instantiation.  Not part of the
+/// public API.
+///
+/// # Safety
+///
+/// `acc` and `src` must each point to `n` valid, properly aligned,
+/// non-overlapping elements.
+#[doc(hidden)]
+#[no_mangle]
+pub unsafe extern "C" fn pasm_hist_acc_tile_fx_probe(acc: *mut i64, src: *const i64, n: usize) {
+    let acc = unsafe { std::slice::from_raw_parts_mut(acc, n) };
+    let src = unsafe { std::slice::from_raw_parts(src, n) };
+    acc_tile_fx::<false>(acc, src);
 }
 
 /// Reusable per-worker scratch arenas: every intermediate buffer a forward
@@ -379,13 +735,26 @@ pub struct CompiledCnn {
     dense_w: Tensor<f32>,
     dense_b: Vec<f32>,
     iq: QFormat,
+    kernel: KernelChoice,
 }
 
 impl CompiledCnn {
-    /// Compile `enc` with images in fixed-point format `iq` (the f32 path
-    /// ignores `iq`).  Fails on inconsistent shapes or out-of-range bin
-    /// indices — startup errors, never mid-request surprises.
+    /// Compile `enc` with the default [`KernelChoice::Auto`] strategy —
+    /// each layer picks per-tap or histogram by the taps-per-bin
+    /// heuristic.
     pub fn compile(enc: &EncodedCnn, iq: QFormat) -> Result<CompiledCnn> {
+        CompiledCnn::compile_with(enc, iq, KernelChoice::Auto)
+    }
+
+    /// Compile `enc` with images in fixed-point format `iq` (the f32 path
+    /// ignores `iq`) and an explicit kernel strategy.  Fails on
+    /// inconsistent shapes or out-of-range bin indices — startup errors,
+    /// never mid-request surprises.
+    pub fn compile_with(
+        enc: &EncodedCnn,
+        iq: QFormat,
+        kernel: KernelChoice,
+    ) -> Result<CompiledCnn> {
         let arch = enc.arch;
         let s1 = arch.conv1_shape();
         let s2 = arch.conv2_shape();
@@ -393,8 +762,8 @@ impl CompiledCnn {
             s2.channels == s1.kernels && s2.in_h == s1.out_h() / 2 && s2.in_w == s1.out_w() / 2,
             "conv2 input shape does not match pooled conv1 output"
         );
-        let conv1 = LayerPlan::compile(s1, &enc.conv1, &enc.conv1_b, iq)?;
-        let conv2 = LayerPlan::compile(s2, &enc.conv2, &enc.conv2_b, iq)?;
+        let conv1 = LayerPlan::compile_with(s1, &enc.conv1, &enc.conv1_b, iq, kernel)?;
+        let conv2 = LayerPlan::compile_with(s2, &enc.conv2, &enc.conv2_b, iq, kernel)?;
         ensure!(
             enc.dense_w.dims() == [arch.feature_dim(), arch.classes],
             "dense weight dims {:?} != [{}, {}]",
@@ -415,6 +784,7 @@ impl CompiledCnn {
             dense_w: enc.dense_w.clone(),
             dense_b: enc.dense_b.clone(),
             iq,
+            kernel,
         })
     }
 
@@ -426,6 +796,12 @@ impl CompiledCnn {
     /// Image fixed-point format the fixed-point path was compiled for.
     pub fn iq(&self) -> QFormat {
         self.iq
+    }
+
+    /// The kernel strategy the plan was compiled with (per layer, `Auto`
+    /// resolves via [`LayerPlan::kernel`]).
+    pub fn kernel_choice(&self) -> KernelChoice {
+        self.kernel
     }
 
     /// Flattened input image length (`C * IH * IW`).
@@ -453,7 +829,7 @@ impl CompiledCnn {
         let c1_len = s1.kernels * s1.out_pixels();
         let pool_len = s2.channels * s2.in_h * s2.in_w;
         let c2_len = s2.kernels * s2.out_pixels();
-        let bins = self.conv1.bins().max(self.conv2.bins());
+        let bins = self.conv1.scratch_len().max(self.conv2.scratch_len());
         Scratch {
             img_fx: vec![0; in_len],
             conv1_fx: vec![0; c1_len],
@@ -633,7 +1009,9 @@ mod tests {
     fn unprovable_codebook_falls_back_to_checked() {
         // a full-scale W32 codebook defeats the plan-time bound; the layer
         // must fall back to checked arithmetic and still match the
-        // reference kernel bit for bit on benign inputs
+        // reference kernel bit for bit on benign inputs — for the per-tap
+        // *and* histogram fx kernels (the checked instantiations of both
+        // accumulation orders actually execute here)
         let shape = ConvShape::new(1, 4, 4, 3, 3, 1, 1);
         let values = vec![30000.0f32, -30000.0];
         let enc = EncodedWeights {
@@ -641,18 +1019,21 @@ mod tests {
             bin_idx: Tensor::from_fn(&[1, 1, 3, 3], |i| (i % 2) as u16),
             mse: 0.0,
         };
-        let plan = LayerPlan::compile(shape, &enc, &[0.0], QFormat::IMAGE32).unwrap();
-        assert!(!plan.proved_no_overflow());
         let mut rng = Rng::new(9);
         let image = Tensor::from_fn(&[1, 4, 4], |_| rng.signed());
         let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 1);
         let want = ws_conv_fx(&inp);
-        let mut out = vec![0i64; 4];
-        let mut bins = vec![0i64; plan.bins()];
-        plan.conv_fx_into(ConvVariant::WeightShared, inp.image_raw.data(), &mut bins, &mut out);
-        assert_eq!(out.as_slice(), want.data());
-        plan.conv_fx_into(ConvVariant::Pasm, inp.image_raw.data(), &mut bins, &mut out);
-        assert_eq!(out.as_slice(), want.data());
+        for choice in [KernelChoice::PerTap, KernelChoice::Histogram] {
+            let plan =
+                LayerPlan::compile_with(shape, &enc, &[0.0], QFormat::IMAGE32, choice).unwrap();
+            assert!(!plan.proved_no_overflow(), "{choice:?}");
+            let mut out = vec![0i64; 4];
+            let mut bins = vec![0i64; plan.scratch_len()];
+            plan.conv_fx_into(ConvVariant::WeightShared, inp.image_raw.data(), &mut bins, &mut out);
+            assert_eq!(out.as_slice(), want.data(), "{choice:?} ws");
+            plan.conv_fx_into(ConvVariant::Pasm, inp.image_raw.data(), &mut bins, &mut out);
+            assert_eq!(out.as_slice(), want.data(), "{choice:?} pasm");
+        }
     }
 
     #[test]
@@ -663,20 +1044,94 @@ mod tests {
     }
 
     #[test]
+    fn compile_rejects_bin_equal_to_codebook_len_for_every_kernel_choice() {
+        // boundary value: index == len is one past the end and must fail
+        // compilation — before either kernel layout is built — under all
+        // three strategies, so no kernel (per-tap or histogram, f32 or fx)
+        // can ever be reached with it
+        let mut enc = encoded_net(26, 4, QFormat::W16);
+        enc.conv2.bin_idx.data_mut()[0] = 4; // == codebook len
+        for choice in [KernelChoice::PerTap, KernelChoice::Histogram, KernelChoice::Auto] {
+            let err = CompiledCnn::compile_with(&enc, QFormat::IMAGE32, choice)
+                .err()
+                .map(|e| format!("{e:#}"))
+                .unwrap_or_else(|| panic!("{choice:?} accepted bin == codebook len"));
+            assert!(err.contains("out of range"), "{choice:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn auto_choice_resolves_by_taps_per_bin() {
+        // default digits net, B=16: conv1 has 9 taps (9 < 32 -> per-tap),
+        // conv2 has 72 taps (72 >= 32 -> histogram)
+        let enc = encoded_net(27, 16, QFormat::W16);
+        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
+        let (l1, l2) = plan.layers();
+        assert_eq!(l1.kernel(), KernelKind::PerTap);
+        assert_eq!(l2.kernel(), KernelKind::Histogram);
+        assert_eq!(plan.kernel_choice(), KernelChoice::Auto);
+        // explicit overrides force both layers
+        let forced =
+            CompiledCnn::compile_with(&enc, QFormat::IMAGE32, KernelChoice::Histogram).unwrap();
+        let (f1, f2) = forced.layers();
+        assert_eq!(f1.kernel(), KernelKind::Histogram);
+        assert_eq!(f2.kernel(), KernelKind::Histogram);
+        assert!(f1.scratch_len() >= f1.bins() * HIST_TILE);
+    }
+
+    #[test]
+    fn kernel_choice_parses_and_displays() {
+        for (s, want) in [
+            ("per-tap", KernelChoice::PerTap),
+            ("histogram", KernelChoice::Histogram),
+            ("auto", KernelChoice::Auto),
+        ] {
+            let got: KernelChoice = s.parse().unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.to_string(), s);
+        }
+        assert!("Histogram".parse::<KernelChoice>().is_err());
+        assert!("".parse::<KernelChoice>().is_err());
+    }
+
+    #[test]
     fn layer_conv_matches_reference_kernel() {
         // standalone LayerPlan conv vs the reference fx kernel on a
-        // non-default shape (stride 2)
+        // non-default shape (stride 2 — exercises the histogram kernel's
+        // strided gather path, not just the stride-1 slice fast path)
         let mut rng = Rng::new(31);
         let shape = ConvShape::new(3, 9, 9, 3, 3, 2, 2);
         let w = Tensor::from_fn(&[2, 3, 3, 3], |_| rng.signed());
         let enc = encode_weights(&w, 8, QFormat::W16);
         let image = Tensor::from_fn(&[3, 9, 9], |_| rng.signed() * 4.0);
         let inp = FxConvInputs::encode(&image, &enc, QFormat::IMAGE32, 2);
-        let plan = LayerPlan::compile(shape, &enc, &[0.0, 0.0], QFormat::IMAGE32).unwrap();
         let want = ws_conv_fx(&inp);
-        let mut out = vec![0i64; want.len()];
-        let mut bins = vec![0i64; plan.bins()];
-        plan.conv_fx_into(ConvVariant::Pasm, inp.image_raw.data(), &mut bins, &mut out);
-        assert_eq!(out.as_slice(), want.data());
+        for choice in [KernelChoice::PerTap, KernelChoice::Histogram] {
+            let plan = LayerPlan::compile_with(shape, &enc, &[0.0, 0.0], QFormat::IMAGE32, choice)
+                .unwrap();
+            let mut out = vec![0i64; want.len()];
+            let mut bins = vec![0i64; plan.scratch_len()];
+            plan.conv_fx_into(ConvVariant::Pasm, inp.image_raw.data(), &mut bins, &mut out);
+            assert_eq!(out.as_slice(), want.data(), "{choice:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_f32_bitexact_per_tap_pasm_on_full_net() {
+        // the f32 exactness claim at network scale: the histogram plan's
+        // forward must be bit-identical to the per-tap plan's (and hence
+        // to the reference) for the PASM variant
+        let enc = encoded_net(33, 16, QFormat::W32);
+        let per_tap =
+            CompiledCnn::compile_with(&enc, QFormat::IMAGE32, KernelChoice::PerTap).unwrap();
+        let hist =
+            CompiledCnn::compile_with(&enc, QFormat::IMAGE32, KernelChoice::Histogram).unwrap();
+        let mut rng = Rng::new(11);
+        for d in 0..6usize {
+            let img = render_digit(&mut rng, d, 0.1);
+            let want = enc.forward(&img, ConvVariant::Pasm);
+            assert_eq!(bits(&per_tap.forward_f32(&img, ConvVariant::Pasm)), bits(&want));
+            assert_eq!(bits(&hist.forward_f32(&img, ConvVariant::Pasm)), bits(&want));
+        }
     }
 }

@@ -22,7 +22,7 @@
 //! priced as Direct / WS-MAC / PASM silicon interchangeably.
 
 use crate::cnn::network::{ConvVariant, EncodedCnn};
-use crate::cnn::plan::{CompiledCnn, Scratch};
+use crate::cnn::plan::{CompiledCnn, KernelChoice, Scratch};
 use crate::model_store::ModelEntry;
 use crate::quant::fixed::QFormat;
 use crate::tensor::Tensor;
@@ -133,6 +133,8 @@ pub struct NativeBackend {
     enc: Arc<EncodedCnn>,
     variant: ConvVariant,
     precision: NativePrecision,
+    /// Kernel strategy the compiled plans use for the PASM dataflow.
+    kernel: KernelChoice,
     /// Worker threads per batch; `None` = `available_parallelism`.
     threads: Option<usize>,
     /// Serve through the compiled plan (default).  `false` selects the
@@ -146,12 +148,14 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// PASM dataflow at f32 precision (matching the reference forward).
+    /// PASM dataflow at f32 precision (matching the reference forward),
+    /// with the default [`KernelChoice::Auto`] kernel strategy.
     pub fn new(enc: EncodedCnn) -> Self {
         NativeBackend {
             enc: Arc::new(enc),
             variant: ConvVariant::Pasm,
             precision: NativePrecision::F32,
+            kernel: KernelChoice::Auto,
             threads: None,
             use_plan: true,
             plan: Arc::new(Mutex::new(None)),
@@ -169,6 +173,18 @@ impl NativeBackend {
         self.precision = precision;
         // the plan bakes in the fixed-point image format; recompile lazily
         // (a fresh cache — replicas made before this call keep the old one)
+        self.plan = Arc::new(Mutex::new(None));
+        self
+    }
+
+    /// Select the conv kernel strategy (`--kernel per-tap|histogram|auto`):
+    /// per-tap mirrors the reference accumulation order, histogram is the
+    /// paper's count-then-multiply restructure, and `Auto` (the default)
+    /// resolves per layer by the taps-per-bin heuristic.  Results are
+    /// bit-identical under every choice; only throughput differs.
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
+        // the plan bakes in the kernel layout; recompile lazily
         self.plan = Arc::new(Mutex::new(None));
         self
     }
@@ -243,7 +259,7 @@ impl ExecutionBackend for NativeBackend {
         let plan = if self.use_plan {
             let mut cached = self.plan.lock().unwrap();
             if cached.is_none() {
-                let compiled = CompiledCnn::compile(&self.enc, self.plan_iq())
+                let compiled = CompiledCnn::compile_with(&self.enc, self.plan_iq(), self.kernel)
                     .context("compile layer plans")?;
                 *cached = Some(Arc::new(compiled));
             }
@@ -256,11 +272,11 @@ impl ExecutionBackend for NativeBackend {
 
     fn compile_entry(&self, entry: &ModelEntry, batch: usize) -> Result<Box<dyn Executable>> {
         anyhow::ensure!(batch >= 1, "batch must be >= 1");
-        // The entry caches one compiled plan per image format, so every
-        // bucket (and every engine) of this model shares plan state —
-        // mirroring the single-model plan cache above.
+        // The entry caches one compiled plan per (image format, kernel
+        // strategy), so every bucket (and every engine) of this model
+        // shares plan state — mirroring the single-model plan cache above.
         let plan = if self.use_plan {
-            Some(entry.plan(self.plan_iq())?)
+            Some(entry.plan_with(self.plan_iq(), self.kernel)?)
         } else {
             None
         };
@@ -276,6 +292,7 @@ impl ExecutionBackend for NativeBackend {
             enc: Arc::clone(&self.enc),
             variant: self.variant,
             precision: self.precision,
+            kernel: self.kernel,
             threads: self.threads,
             use_plan: self.use_plan,
             plan: Arc::clone(&self.plan),
@@ -567,6 +584,42 @@ mod tests {
             logits.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn kernel_override_serves_bitexact_logits() {
+        // every kernel strategy must serve identical bits through the
+        // backend, in both precisions — the strategy may only change
+        // throughput, never an answer.  Also pins that compile_entry
+        // threads the choice into the registry's per-(iq, kernel) cache.
+        use crate::model_store::ModelRegistry;
+        let e = enc();
+        let reg = ModelRegistry::new();
+        reg.insert("m", e.clone());
+        let entry = reg.get("m").unwrap();
+        let mut rng = Rng::new(29);
+        let img = render_digit(&mut rng, 4, 0.05);
+        let batch = Tensor::from_vec(&[1, 1, 12, 12], img.data().to_vec());
+        for (precision, want) in [
+            (NativePrecision::F32, e.forward(&img, ConvVariant::Pasm)),
+            (
+                NativePrecision::Fixed(QFormat::IMAGE32),
+                e.forward_fx(&img, ConvVariant::Pasm, QFormat::IMAGE32),
+            ),
+        ] {
+            let want: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            for kernel in [KernelChoice::PerTap, KernelChoice::Histogram, KernelChoice::Auto] {
+                let backend =
+                    NativeBackend::new(e.clone()).with_precision(precision).with_kernel(kernel);
+                let logits = backend.compile(1).unwrap().execute(&batch, 1).unwrap();
+                let got: Vec<u32> = logits.data().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "{precision:?} {kernel:?} default-model path");
+                let logits =
+                    backend.compile_entry(&entry, 1).unwrap().execute(&batch, 1).unwrap();
+                let got: Vec<u32> = logits.data().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "{precision:?} {kernel:?} registry path");
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,14 @@
 //! Numerics and pricing are independent: a native-served batch can be
 //! priced as PASM silicon and vice versa, and every registry model is
 //! priced through the same model.
+//!
+//! Execution *strategy* rides on the backend, not the engine: a
+//! `NativeBackend` configured with
+//! [`KernelChoice`](crate::cnn::plan::KernelChoice) (the `--kernel`
+//! flag) compiles per-tap or histogram (count-then-multiply) plans, and
+//! both `compile` and `compile_entry` carry that choice into the plan
+//! caches, so served traffic — single-model and registry alike — runs
+//! whichever kernel the deployment selected with bit-identical results.
 
 use crate::cnn::network::EncodedCnn;
 use crate::coordinator::backend::{Executable, ExecutionBackend};

@@ -5,12 +5,12 @@
 //! repro simulate [--bins B] [--width W] [--variant ws|pasm] [--seed N]
 //! repro pack <dir> [--bins B] [--width W] [--name NAME] [--seed N]
 //! repro serve [--requests N] [--backend native|pjrt] [--artifacts DIR] [--fixed]
-//!             [--threads N] [--no-plan] [--shards N]
+//!             [--threads N] [--no-plan] [--kernel per-tap|histogram|auto] [--shards N]
 //! repro serve --models <dir> [--requests N] [--model NAME] [--fixed]
-//!             [--poll-ms M] [--pack-midrun NAME=BINS] [--shards N]
+//!             [--poll-ms M] [--pack-midrun NAME=BINS] [--kernel K] [--shards N]
 //! repro serve --listen ADDR [--evented] [--models <dir>] [--fixed] [--max-conns N]
 //!             [--max-inflight N] [--port-file PATH] [--for-s SECS] [--shards N]
-//!             [--chaos seed=7,panic=0.05,reset=0.02]
+//!             [--kernel per-tap|histogram|auto] [--chaos seed=7,panic=0.05,reset=0.02]
 //! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
 //!             [--models a,b,c] [--expect-multi-shard] [--stage-breakdown]
 //!             [--pipeline-depth D] [--idle-conns N]
@@ -30,6 +30,7 @@ use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
 use pasm_accel::cnn::conv::FxConvInputs;
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::cnn::plan::KernelChoice;
 use pasm_accel::coordinator::loadgen::NetLoadOptions;
 use pasm_accel::coordinator::{BatchPolicy, CoordinatorBuilder, NativeBackend, NativePrecision};
 use pasm_accel::faults::FaultPlan;
@@ -94,13 +95,13 @@ const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|trace|per
   simulate --variant pasm --bins 16 --width 32 --seed 1
   pack <dir> [--bins 16] [--width 32] [--name NAME] [--seed 7]
   serve --requests 64 --backend native|pjrt [--artifacts artifacts] [--fixed]
-        [--threads N] [--no-plan] [--shards N]
+        [--threads N] [--no-plan] [--kernel per-tap|histogram|auto] [--shards N]
   serve --models <dir> [--requests 64] [--model NAME] [--fixed] [--poll-ms 25]
-        [--pack-midrun NAME=BINS] [--shards N]
+        [--pack-midrun NAME=BINS] [--kernel per-tap|histogram|auto] [--shards N]
   serve --listen 127.0.0.1:7878 [--evented] [--workers N] [--max-pipeline 32]
         [--models <dir>] [--fixed] [--max-conns 64] [--max-inflight 256]
         [--port-file PATH] [--for-s SECS] [--shards N]
-        [--chaos seed=7,panic=0.05,reset=0.02]
+        [--kernel per-tap|histogram|auto] [--chaos seed=7,panic=0.05,reset=0.02]
   bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
         [--models digits-b8,digits-b16] [--expect-multi-shard] [--stage-breakdown]
         [--pipeline-depth 32] [--idle-conns 5000]
@@ -134,6 +135,17 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, defaul
         .get(key)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Parse `--kernel per-tap|histogram|auto` (default `auto`).  Unlike the
+/// lenient [`flag`] helper, an unknown value is a hard error — silently
+/// serving with the wrong kernel strategy would invalidate any benchmark
+/// built on the flag.
+fn kernel_flag(flags: &HashMap<String, String>) -> anyhow::Result<KernelChoice> {
+    match flags.get("kernel") {
+        Some(v) => v.parse(),
+        None => Ok(KernelChoice::Auto),
+    }
 }
 
 /// Apply `--shards N` to a coordinator builder (absent = the builder's
@@ -300,6 +312,7 @@ fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Resul
     if flags.contains_key("fixed") {
         backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
     }
+    backend = backend.with_kernel(kernel_flag(flags)?);
     let builder = CoordinatorBuilder::new()
         .backend(backend)
         .registry(Arc::clone(&registry))
@@ -509,6 +522,7 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
         if flags.contains_key("fixed") {
             backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
         }
+        backend = backend.with_kernel(kernel_flag(flags)?);
         builder.backend(backend).registry(registry).default_model(&default_name)
     } else {
         let bins: usize = flag(flags, "bins", 16);
@@ -520,6 +534,7 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
         if flags.contains_key("fixed") {
             backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
         }
+        backend = backend.with_kernel(kernel_flag(flags)?);
         builder.backend(backend)
     };
     let coord = Arc::new(apply_chaos(apply_shards(builder, flags)?, flags)?.build()?);
@@ -1045,6 +1060,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             if flags.contains_key("fixed") {
                 backend = backend.with_precision(NativePrecision::Fixed(QFormat::IMAGE32));
             }
+            backend = backend.with_kernel(kernel_flag(flags)?);
             if let Some(threads) = flags.get("threads").and_then(|v| v.parse().ok()) {
                 backend = backend.with_threads(threads);
             }

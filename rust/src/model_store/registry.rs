@@ -21,7 +21,7 @@
 //! dir goes live with zero coordinator restarts.
 
 use crate::cnn::network::EncodedCnn;
-use crate::cnn::plan::CompiledCnn;
+use crate::cnn::plan::{CompiledCnn, KernelChoice};
 use crate::faults::{FaultPlan, FaultSite};
 use crate::model_store::format;
 use crate::quant::fixed::QFormat;
@@ -44,7 +44,8 @@ pub struct SourceMeta {
 }
 
 /// One loaded model variant: the encoded network plus lazily compiled
-/// execution plans (one per fixed-point image format requested).
+/// execution plans (one per fixed-point image format x kernel strategy
+/// requested).
 #[derive(Debug)]
 pub struct ModelEntry {
     /// Model name (the artifact's file stem, or the inserted name).
@@ -56,7 +57,7 @@ pub struct ModelEntry {
     pub generation: u64,
     /// Artifact provenance; `None` for programmatically inserted models.
     pub source: Option<SourceMeta>,
-    plans: Mutex<HashMap<QFormat, Arc<CompiledCnn>>>,
+    plans: Mutex<HashMap<(QFormat, KernelChoice), Arc<CompiledCnn>>>,
 }
 
 impl ModelEntry {
@@ -70,17 +71,24 @@ impl ModelEntry {
         }
     }
 
-    /// The compiled plan for image format `iq`, built on first use and
-    /// shared by every executable of this entry thereafter.
+    /// The compiled plan for image format `iq` with the default
+    /// [`KernelChoice::Auto`] strategy (see [`ModelEntry::plan_with`]).
     pub fn plan(&self, iq: QFormat) -> Result<Arc<CompiledCnn>> {
+        self.plan_with(iq, KernelChoice::Auto)
+    }
+
+    /// The compiled plan for image format `iq` and kernel strategy
+    /// `kernel`, built on first use and shared by every executable of this
+    /// entry requesting the same combination thereafter.
+    pub fn plan_with(&self, iq: QFormat, kernel: KernelChoice) -> Result<Arc<CompiledCnn>> {
         let mut plans = self.plans.lock().unwrap();
-        if let Some(p) = plans.get(&iq) {
+        if let Some(p) = plans.get(&(iq, kernel)) {
             return Ok(Arc::clone(p));
         }
-        let compiled = CompiledCnn::compile(&self.enc, iq)
+        let compiled = CompiledCnn::compile_with(&self.enc, iq, kernel)
             .with_context(|| format!("compile plan for model '{}'", self.name))?;
         let compiled = Arc::new(compiled);
-        plans.insert(iq, Arc::clone(&compiled));
+        plans.insert((iq, kernel), Arc::clone(&compiled));
         Ok(compiled)
     }
 
@@ -421,6 +429,16 @@ mod tests {
         assert!(Arc::ptr_eq(&p1, &p2), "same format must share one plan");
         let p3 = entry.plan(QFormat::new(16, 8)).unwrap();
         assert!(!Arc::ptr_eq(&p1, &p3), "different formats compile separately");
+        // the kernel strategy is part of the cache key: an explicit
+        // override compiles its own plan, and repeats share it
+        let h1 = entry.plan_with(QFormat::IMAGE32, KernelChoice::Histogram).unwrap();
+        let h2 = entry.plan_with(QFormat::IMAGE32, KernelChoice::Histogram).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &h1), "kernel choices compile separately");
+        assert!(Arc::ptr_eq(&h1, &h2), "same (format, kernel) must share one plan");
+        assert!(Arc::ptr_eq(
+            &entry.plan_with(QFormat::IMAGE32, KernelChoice::Auto).unwrap(),
+            &p1
+        ));
     }
 
     #[test]

@@ -1,0 +1,8 @@
+//! Shared helpers for the integration-test crates.
+//!
+//! Each file under `tests/` is its own crate, so cargo compiles this
+//! module once per suite — not every suite uses every helper, hence the
+//! file-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+pub mod rng;

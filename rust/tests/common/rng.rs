@@ -1,0 +1,136 @@
+//! Seeded test RNG and shared generators for the property suites.
+//!
+//! proptest is unavailable in the offline build, so the suites hand-roll
+//! their generator loops.  Before this module each test file carried its
+//! own ad-hoc seeding; now every suite draws from one [`TestRng`] that
+//! **prints its seed on construction** — cargo shows captured stdout for
+//! failing tests only, so any property failure arrives with the exact
+//! line needed to replay it:
+//!
+//! ```text
+//! [test-rng] case 7: seed 0x9f34... (reproduce: TestRng::new(0x9f34...))
+//! ```
+//!
+//! The generator itself delegates to the crate's xorshift*
+//! [`Rng`](pasm_accel::cnn::data::Rng), so test streams stay identical to
+//! what the crate's own seeded paths produce.
+
+use pasm_accel::cnn::data::Rng;
+use pasm_accel::cnn::network::{DigitsCnn, EncodedCnn};
+use pasm_accel::quant::fixed::QFormat;
+use pasm_accel::tensor::Tensor;
+
+/// Seeded RNG for property tests: announces its seed so failures
+/// reproduce from the captured test output.
+pub struct TestRng {
+    inner: Rng,
+    seed: u64,
+}
+
+impl TestRng {
+    /// Generator with an explicit seed (announced on stdout).
+    pub fn new(seed: u64) -> TestRng {
+        println!("[test-rng] seed {seed:#018x} (reproduce: TestRng::new({seed:#x}))");
+        TestRng { inner: Rng::new(seed), seed }
+    }
+
+    /// Per-case generator derived from a suite root seed and case index
+    /// (splitmix64 mix), so each case of a generator loop reproduces in
+    /// isolation from its printed seed — no need to replay earlier cases.
+    pub fn case(root: u64, index: usize) -> TestRng {
+        let mut z = root ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        let seed = z ^ (z >> 31);
+        println!("[test-rng] case {index}: seed {seed:#018x} (reproduce: TestRng::new({seed:#x}))");
+        TestRng { inner: Rng::new(seed), seed }
+    }
+
+    /// The announced seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Borrow the underlying crate RNG (for APIs taking `&mut Rng`).
+    pub fn raw(&mut self) -> &mut Rng {
+        &mut self.inner
+    }
+
+    /// An independent child stream (for param init etc.), seeded from
+    /// this stream so it is reproducible but structurally decoupled.
+    pub fn child(&mut self) -> Rng {
+        Rng::new(self.inner.next_u64())
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.inner.next_u64()
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn uniform(&mut self) -> f32 {
+        self.inner.uniform()
+    }
+
+    /// Uniform in `[-1, 1)`.
+    pub fn signed(&mut self) -> f32 {
+        self.inner.signed()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        self.inner.below(n)
+    }
+
+    /// Uniform pick from a slice.
+    pub fn pick<T: Copy>(&mut self, options: &[T]) -> T {
+        options[self.inner.below(options.len())]
+    }
+}
+
+/// f32 slice as IEEE bit patterns — the comparison currency of the
+/// bit-exactness suites (`==` on f32 would accept `-0.0 == 0.0` and
+/// reject NaN ≡ NaN; bits do neither).
+pub fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random digits-CNN architecture.  Constraint: the pooled conv1 output
+/// must still fit the conv2 kernel, i.e. `(in_side - kernel + 1) / 2 >=
+/// kernel`.
+pub fn random_arch(rng: &mut TestRng) -> DigitsCnn {
+    let kernel = 1 + 2 * rng.below(2); // 1 or 3
+    let in_side = kernel * 2 + 5 + rng.below(6);
+    DigitsCnn {
+        in_side,
+        conv1_m: 1 + rng.below(6),
+        conv2_m: 1 + rng.below(8),
+        kernel,
+        classes: 2 + rng.below(9),
+    }
+}
+
+/// Randomly architected, randomly parameterized, dictionary-encoded net:
+/// bin counts sweep 2..=64 (powers of two) and the weight format sweeps
+/// the paper's W8/W16/W32.
+pub fn random_encoded(rng: &mut TestRng) -> EncodedCnn {
+    let arch = random_arch(rng);
+    let bins = 1usize << (1 + rng.below(6));
+    let wq = rng.pick(&[QFormat::W8, QFormat::W16, QFormat::W32]);
+    encode_arch(rng, arch, bins, wq)
+}
+
+/// Encode `arch` with fresh random parameters at an explicit bin count
+/// and weight format (the knobs the adversarial sweeps pin: single-bin,
+/// max-B, odd widths).
+pub fn encode_arch(rng: &mut TestRng, arch: DigitsCnn, bins: usize, wq: QFormat) -> EncodedCnn {
+    let mut prng = rng.child();
+    let params = arch.init(&mut prng);
+    EncodedCnn::encode(arch, &params, bins, wq)
+}
+
+/// Random input image in `[-2, 2)` — wider than the renderer's `[0, 1]`
+/// so negative activations and the fixed-point sign path are exercised.
+pub fn random_image(rng: &mut TestRng, arch: &DigitsCnn) -> Tensor<f32> {
+    Tensor::from_fn(&[1, arch.in_side, arch.in_side], |_| rng.signed() * 2.0)
+}

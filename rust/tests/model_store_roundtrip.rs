@@ -2,9 +2,12 @@
 //! be **bit-exact** (both the f32 and fixed-point forwards agree to the
 //! bit with the source model) across random architectures, bin counts and
 //! fixed-point formats — and corrupted or truncated artifacts must load
-//! as errors, never panics.
+//! as errors, never panics.  Seeds route through [`common::rng::TestRng`]
+//! so any failure prints the seed that reproduces it.
 
-use pasm_accel::cnn::data::Rng;
+mod common;
+
+use common::rng::{bits, TestRng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
 use pasm_accel::coordinator::CoordinatorBuilder;
 use pasm_accel::model_store::{self, ModelRegistry};
@@ -13,14 +16,10 @@ use pasm_accel::tensor::Tensor;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-fn bits(xs: &[f32]) -> Vec<u32> {
-    xs.iter().map(|x| x.to_bits()).collect()
-}
-
 /// A random but valid digits-style architecture: even input side so the
 /// 2x2 pool divides evenly, kernel 3, and a pooled side that still fits
 /// the second convolution.
-fn random_arch(rng: &mut Rng) -> DigitsCnn {
+fn random_arch(rng: &mut TestRng) -> DigitsCnn {
     DigitsCnn {
         in_side: [8, 10, 12, 14][rng.below(4)],
         conv1_m: 2 + rng.below(6),
@@ -30,17 +29,17 @@ fn random_arch(rng: &mut Rng) -> DigitsCnn {
     }
 }
 
-fn random_model(rng: &mut Rng) -> EncodedCnn {
+fn random_model(rng: &mut TestRng) -> EncodedCnn {
     let arch = random_arch(rng);
     let bins = [2usize, 3, 4, 8, 16, 33][rng.below(6)];
     let wq = [QFormat::W8, QFormat::W16, QFormat::W32, QFormat::new(12, 6)][rng.below(4)];
-    let params = arch.init(rng);
+    let params = arch.init(rng.raw());
     EncodedCnn::encode(arch, &params, bins, wq)
 }
 
 #[test]
 fn pack_load_forward_bitexact_over_random_models() {
-    let mut rng = Rng::new(0xC0FFEE);
+    let mut rng = TestRng::new(0xC0FFEE);
     for trial in 0..12u32 {
         let enc = random_model(&mut rng);
         let bytes = model_store::pack(&enc).expect("pack");
@@ -67,7 +66,7 @@ fn pack_load_forward_bitexact_over_random_models() {
 
 #[test]
 fn pack_is_deterministic() {
-    let mut rng = Rng::new(99);
+    let mut rng = TestRng::new(99);
     let enc = random_model(&mut rng);
     let a = model_store::pack(&enc).unwrap();
     let b = model_store::pack(&enc).unwrap();
@@ -76,7 +75,7 @@ fn pack_is_deterministic() {
 
 #[test]
 fn corrupted_bytes_error_never_panic() {
-    let mut rng = Rng::new(7);
+    let mut rng = TestRng::new(7);
     let enc = random_model(&mut rng);
     let bytes = model_store::pack(&enc).unwrap();
     // dense sweep over the header + start of payload, sparse over the rest
@@ -94,7 +93,7 @@ fn corrupted_bytes_error_never_panic() {
 
 #[test]
 fn truncated_files_error_never_panic() {
-    let mut rng = Rng::new(8);
+    let mut rng = TestRng::new(8);
     let enc = random_model(&mut rng);
     let bytes = model_store::pack(&enc).unwrap();
     for keep in (0..bytes.len()).step_by(11).chain([bytes.len() - 1]) {
@@ -115,8 +114,8 @@ fn artifact_compresses_conv_weights() {
     // the §2.1 story: a packed artifact is smaller than the raw f32
     // parameters it encodes, at every swept bin count
     let arch = DigitsCnn::default();
-    let mut rng = Rng::new(21);
-    let params = arch.init(&mut rng);
+    let mut rng = TestRng::new(21);
+    let params = arch.init(rng.raw());
     for bins in [4usize, 16, 64] {
         let enc = EncodedCnn::encode(arch, &params, bins, QFormat::W32);
         let bytes = model_store::pack(&enc).unwrap();
@@ -134,9 +133,9 @@ fn packed_artifact_serves_bitexact_through_registry_coordinator() {
     // disk -> registry -> coordinator -> logits must equal the in-memory
     // model's reference forward bit for bit
     let dir = tmpdir("serve");
-    let mut rng = Rng::new(31);
+    let mut rng = TestRng::new(31);
     let arch = DigitsCnn::default();
-    let params = arch.init(&mut rng);
+    let params = arch.init(rng.raw());
     let enc = EncodedCnn::encode(arch, &params, 8, QFormat::W16);
     model_store::save_file(&dir.join("digits.pasm"), &enc).unwrap();
 
@@ -148,7 +147,7 @@ fn packed_artifact_serves_bitexact_through_registry_coordinator() {
     let coord = CoordinatorBuilder::new().registry(Arc::clone(&registry)).build().unwrap();
     assert_eq!(coord.default_model(), Some("digits"));
     for d in 0..4usize {
-        let img = pasm_accel::cnn::data::render_digit(&mut rng, d, 0.05);
+        let img = pasm_accel::cnn::data::render_digit(rng.raw(), d, 0.05);
         let resp = coord.infer(img.clone()).unwrap();
         assert_eq!(resp.model.as_deref(), Some("digits"));
         let want = enc.forward(&img, ConvVariant::Pasm);

@@ -1,105 +1,232 @@
-//! Property tests pinning the compiled plan to the golden reference
-//! (hand-rolled generator loop, deterministic seeds — proptest is not
-//! available in the offline build).
+//! Differential suite pinning every compiled kernel to the golden
+//! reference (hand-rolled generator loops over [`common::rng::TestRng`],
+//! which prints its seed so any failure reproduces in isolation —
+//! proptest is not available in the offline build).
 //!
 //! Invariants:
 //! * `CompiledCnn` fixed-point forward is **bit-identical** to
 //!   `EncodedCnn::forward_fx` for random architectures, bin counts, weight
-//!   formats and images, for both `ConvVariant`s (and across variants —
-//!   paper §5.3 lifted through the plan).
-//! * `CompiledCnn` f32 forward is bit-identical to `EncodedCnn::forward`.
+//!   formats and images, for both `ConvVariant`s, across variants (paper
+//!   §5.3 lifted through the plan), and for **every `KernelChoice`** —
+//!   per-tap and histogram (count-then-multiply) fx kernels agree with
+//!   the reference and with each other bit for bit.
+//! * `CompiledCnn` f32 forward is bit-identical to `EncodedCnn::forward`
+//!   under every kernel choice (the histogram f32 kernel replays the
+//!   per-bin IEEE addition sequence exactly; see `cnn::plan` docs).
+//! * The bit-equalities survive adversarial inputs — denormals,
+//!   max-magnitude activations (saturating `QFormat::encode` keeps the
+//!   overflow proof's `max_raw` assumption honest), all-zero images —
+//!   and degenerate codebooks (single-bin, max-B) and odd `QFormat`s.
+//! * A plan whose accumulator bound fails compiles onto the checked-add
+//!   fallback and still matches the reference at full-network scale, for
+//!   both fx kernel families.
 //! * The multi-threaded `NativeBackend` batch path is bit-identical to the
-//!   single-threaded one at every thread count and occupancy.
+//!   single-threaded one at every thread count and occupancy, under every
+//!   kernel choice.
 
-use pasm_accel::cnn::data::Rng;
+mod common;
+
+use common::rng::{bits, encode_arch, random_encoded, random_image, TestRng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
-use pasm_accel::cnn::plan::CompiledCnn;
+use pasm_accel::cnn::plan::{CompiledCnn, KernelChoice};
 use pasm_accel::coordinator::{ExecutionBackend, NativeBackend, NativePrecision};
 use pasm_accel::quant::fixed::QFormat;
 use pasm_accel::tensor::Tensor;
 
-/// Random digits-CNN architecture.  Constraint: the pooled conv1 output
-/// must still fit the conv2 kernel, i.e. `(in_side - kernel + 1) / 2 >=
-/// kernel`.
-fn random_arch(rng: &mut Rng) -> DigitsCnn {
-    let kernel = 1 + 2 * rng.below(2); // 1 or 3
-    let in_side = kernel * 2 + 5 + rng.below(6);
-    DigitsCnn {
-        in_side,
-        conv1_m: 1 + rng.below(6),
-        conv2_m: 1 + rng.below(8),
-        kernel,
-        classes: 2 + rng.below(9),
-    }
+const ALL_CHOICES: [KernelChoice; 3] =
+    [KernelChoice::PerTap, KernelChoice::Histogram, KernelChoice::Auto];
+
+/// Compile `enc` once per kernel choice, paired with its label for
+/// assertion messages.
+fn plans_for(enc: &EncodedCnn, iq: QFormat) -> Vec<(KernelChoice, CompiledCnn)> {
+    ALL_CHOICES
+        .iter()
+        .map(|&choice| {
+            let plan = CompiledCnn::compile_with(enc, iq, choice)
+                .unwrap_or_else(|e| panic!("{choice:?} plan compiles: {e}"));
+            (choice, plan)
+        })
+        .collect()
 }
 
-fn random_encoded(rng: &mut Rng) -> EncodedCnn {
-    let arch = random_arch(rng);
-    let mut prng = Rng::new(rng.next_u64());
-    let params = arch.init(&mut prng);
-    let bins = 1usize << (1 + rng.below(6));
-    let wq = [QFormat::W8, QFormat::W16, QFormat::W32][rng.below(3)];
-    EncodedCnn::encode(arch, &params, bins, wq)
-}
-
-fn random_image(rng: &mut Rng, arch: &DigitsCnn) -> Tensor<f32> {
-    Tensor::from_fn(&[1, arch.in_side, arch.in_side], |_| rng.signed() * 2.0)
-}
-
-fn bits(xs: &[f32]) -> Vec<u32> {
-    xs.iter().map(|x| x.to_bits()).collect()
-}
-
-#[test]
-fn prop_plan_fx_bitexact_reference() {
-    let mut rng = Rng::new(9001);
-    for case_i in 0..15 {
-        let enc = random_encoded(&mut rng);
-        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).expect("plan compiles");
-        for img_i in 0..3 {
-            let img = random_image(&mut rng, &enc.arch);
-            let mut per_variant = Vec::new();
-            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
-                let got = plan.forward_fx(&img, variant);
-                let want = enc.forward_fx(&img, variant, QFormat::IMAGE32);
-                assert_eq!(
-                    bits(&got),
-                    bits(&want),
-                    "case {case_i} img {img_i} {variant:?}"
-                );
-                per_variant.push(bits(&got));
-            }
-            // §5.3 through the plan: PASM ≡ WS bit for bit
-            assert_eq!(per_variant[0], per_variant[1], "case {case_i} img {img_i}");
+/// Assert every kernel choice reproduces the reference logits bit for bit
+/// on `img`, for both variants and both numeric modes, at `iq`.
+fn assert_all_kernels_match_reference(
+    enc: &EncodedCnn,
+    plans: &[(KernelChoice, CompiledCnn)],
+    img: &Tensor<f32>,
+    iq: QFormat,
+    ctx: &str,
+) {
+    for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+        let want_fx = bits(&enc.forward_fx(img, variant, iq));
+        let want_f32 = bits(&enc.forward(img, variant));
+        for (choice, plan) in plans {
+            assert_eq!(
+                bits(&plan.forward_fx(img, variant)),
+                want_fx,
+                "{ctx} {variant:?} {choice:?} fx"
+            );
+            assert_eq!(
+                bits(&plan.forward_f32(img, variant)),
+                want_f32,
+                "{ctx} {variant:?} {choice:?} f32"
+            );
         }
     }
 }
 
 #[test]
-fn prop_plan_f32_bitexact_reference() {
-    let mut rng = Rng::new(9002);
+fn prop_plan_fx_bitexact_reference_all_kernels() {
     for case_i in 0..15 {
+        let mut rng = TestRng::case(9001, case_i);
         let enc = random_encoded(&mut rng);
-        let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).expect("plan compiles");
+        let plans = plans_for(&enc, QFormat::IMAGE32);
         for img_i in 0..3 {
             let img = random_image(&mut rng, &enc.arch);
             for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
-                let got = plan.forward_f32(&img, variant);
-                let want = enc.forward(&img, variant);
-                assert_eq!(
-                    bits(&got),
-                    bits(&want),
-                    "case {case_i} img {img_i} {variant:?}"
-                );
+                let want = bits(&enc.forward_fx(&img, variant, QFormat::IMAGE32));
+                for (choice, plan) in &plans {
+                    assert_eq!(
+                        bits(&plan.forward_fx(&img, variant)),
+                        want,
+                        "case {case_i} img {img_i} {variant:?} {choice:?}"
+                    );
+                }
+            }
+            // §5.3 through the plan: PASM ≡ WS bit for bit (every kernel
+            // already matched the reference above, so one cross-variant
+            // check on the reference itself closes the loop)
+            assert_eq!(
+                bits(&enc.forward_fx(&img, ConvVariant::Pasm, QFormat::IMAGE32)),
+                bits(&enc.forward_fx(&img, ConvVariant::WeightShared, QFormat::IMAGE32)),
+                "case {case_i} img {img_i} cross-variant"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_plan_f32_bitexact_reference_all_kernels() {
+    for case_i in 0..15 {
+        let mut rng = TestRng::case(9002, case_i);
+        let enc = random_encoded(&mut rng);
+        let plans = plans_for(&enc, QFormat::IMAGE32);
+        for img_i in 0..3 {
+            let img = random_image(&mut rng, &enc.arch);
+            for variant in [ConvVariant::WeightShared, ConvVariant::Pasm] {
+                let want = bits(&enc.forward(&img, variant));
+                for (choice, plan) in &plans {
+                    assert_eq!(
+                        bits(&plan.forward_f32(&img, variant)),
+                        want,
+                        "case {case_i} img {img_i} {variant:?} {choice:?}"
+                    );
+                }
             }
         }
     }
 }
 
 #[test]
-fn prop_parallel_batch_bitexact_single_threaded() {
-    let mut rng = Rng::new(9003);
-    for case_i in 0..10 {
+fn prop_plan_adversarial_inputs_and_codebooks_bitexact() {
+    // degenerate codebooks × odd formats × hostile images, every kernel:
+    // single-bin (B=1) collapses the histogram to one partial sum, B=64 is
+    // the sweep maximum, and the image sets probe IEEE denormals,
+    // saturation (max-magnitude activations rely on `QFormat::encode`
+    // clamping to `max_raw`, which is what the overflow proof assumed),
+    // and the all-zero fast-path.
+    let arch = DigitsCnn { in_side: 11, conv1_m: 2, conv2_m: 3, kernel: 3, classes: 4 };
+    let side = arch.in_side;
+    let images: Vec<(&str, Tensor<f32>)> = vec![
+        ("zeros", Tensor::from_fn(&[1, side, side], |_| 0.0)),
+        (
+            "denormals",
+            Tensor::from_fn(&[1, side, side], |i| {
+                let tiny = f32::from_bits((i as u32 % 7) + 1); // subnormal
+                if i % 2 == 0 {
+                    tiny
+                } else {
+                    -tiny
+                }
+            }),
+        ),
+        (
+            "max-magnitude",
+            Tensor::from_fn(
+                &[1, side, side],
+                |i| if i % 2 == 0 { f32::MAX } else { f32::MIN },
+            ),
+        ),
+    ];
+    let mut case_i = 0;
+    for bins in [1usize, 64] {
+        for wq in [QFormat::W8, QFormat::new(12, 6), QFormat::W32] {
+            for iq in [QFormat::IMAGE32, QFormat::new(16, 8)] {
+                let mut rng = TestRng::case(9005, case_i);
+                case_i += 1;
+                let enc = encode_arch(&mut rng, arch, bins, wq);
+                let plans = plans_for(&enc, iq);
+                let ctx_base = format!("bins {bins} wq {wq:?} iq {iq:?}");
+                for (name, img) in &images {
+                    let ctx = format!("{ctx_base} {name}");
+                    assert_all_kernels_match_reference(&enc, &plans, img, iq, &ctx);
+                }
+                // and one random image per config, for contrast
+                let img = random_image(&mut rng, &arch);
+                assert_all_kernels_match_reference(&enc, &plans, &img, iq, &ctx_base);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_unprovable_plan_checked_fallback_bitexact_full_net() {
+    // Defeat the conv1 accumulator bound at network scale: conv1 weights
+    // scaled so the W32 codebook saturates near max_raw, making the
+    // plan-time worst case (taps × max_img × max_cb) exceed i64 — the
+    // checked-add instantiations of *both* fx kernel families must
+    // execute and still match the reference bit for bit.  Inputs stay
+    // small (|x| <= 0.5) so the *actual* sums never overflow; conv2 keeps
+    // ordinary weights and stays proven.
+    for case_i in 0..4 {
+        let mut rng = TestRng::case(9006, case_i);
+        // kernel pinned to 3: at 9 taps the saturated codebook pushes the
+        // worst case past i64 (a 1×1 kernel's single tap would still prove)
+        let arch = DigitsCnn {
+            in_side: 11 + rng.below(4),
+            conv1_m: 1 + rng.below(4),
+            conv2_m: 1 + rng.below(4),
+            kernel: 3,
+            classes: 2 + rng.below(5),
+        };
+        let mut prng = rng.child();
+        let mut params = arch.init(&mut prng);
+        for w in params.conv1_w.data_mut() {
+            *w *= 1.0e6; // saturates to ±32768 under W32 encode
+        }
+        let enc = EncodedCnn::encode(arch, &params, 4, QFormat::W32);
+        let plans = plans_for(&enc, QFormat::IMAGE32);
+        for (choice, plan) in &plans {
+            let (conv1, conv2) = plan.layers();
+            assert!(!conv1.proved_no_overflow(), "{choice:?} conv1 bound must fail");
+            assert!(conv2.proved_no_overflow(), "{choice:?} conv2 bound must hold");
+        }
+        let img = Tensor::from_fn(&[1, arch.in_side, arch.in_side], |_| rng.signed() * 0.5);
+        assert_all_kernels_match_reference(
+            &enc,
+            &plans,
+            &img,
+            QFormat::IMAGE32,
+            &format!("case {case_i}"),
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_batch_bitexact_single_threaded_all_kernels() {
+    for case_i in 0..8 {
+        let mut rng = TestRng::case(9003, case_i);
         let enc = random_encoded(&mut rng);
         let arch = enc.arch;
         let batch = 1 + rng.below(16);
@@ -112,37 +239,49 @@ fn prop_parallel_batch_bitexact_single_threaded() {
         }
         let padded = Tensor::from_vec(&[batch, 1, arch.in_side, arch.in_side], data);
         for precision in [NativePrecision::F32, NativePrecision::Fixed(QFormat::IMAGE32)] {
-            let run = |threads: usize| -> Vec<u32> {
+            let run = |choice: KernelChoice, threads: usize| -> Vec<u32> {
                 let exe = NativeBackend::new(enc.clone())
                     .with_precision(precision)
+                    .with_kernel(choice)
                     .with_threads(threads)
                     .compile(batch)
                     .unwrap();
                 bits(exe.execute(&padded, live).unwrap().data())
             };
-            let serial = run(1);
-            for threads in [2usize, 3, 5, 16] {
-                assert_eq!(
-                    run(threads),
-                    serial,
-                    "case {case_i} {precision:?} batch {batch} live {live} threads {threads}"
-                );
+            // one serial baseline; every kernel choice at every thread
+            // count must reproduce it exactly (per-tap vs histogram
+            // equality is part of the assertion, not just thread counts)
+            let serial = run(KernelChoice::PerTap, 1);
+            for choice in ALL_CHOICES {
+                for threads in [1usize, 2, 3, 5, 16] {
+                    assert_eq!(
+                        run(choice, threads),
+                        serial,
+                        "case {case_i} {precision:?} batch {batch} live {live} \
+                         {choice:?} threads {threads}"
+                    );
+                }
             }
         }
     }
 }
 
 #[test]
-fn prop_plan_survives_scratch_reuse_across_mixed_variants() {
-    // interleaving variants and numeric modes over one scratch arena must
-    // not leak state between forwards
-    let mut rng = Rng::new(9004);
+fn prop_plan_survives_scratch_reuse_across_mixed_kernels_and_variants() {
+    // interleaving kernels, variants and numeric modes over one scratch
+    // arena must not leak state between forwards: the histogram plan's
+    // arena (the larger `scratch_len`) serves the per-tap plan too, so a
+    // shared worker arena is exercised exactly as `NativeBackend` would
+    // after a kernel-choice reconfiguration
+    let mut rng = TestRng::new(9004);
     let enc = random_encoded(&mut rng);
-    let plan = CompiledCnn::compile(&enc, QFormat::IMAGE32).unwrap();
-    let mut scratch = plan.scratch();
-    let mut logits = vec![0f32; plan.classes()];
+    let per_tap = CompiledCnn::compile_with(&enc, QFormat::IMAGE32, KernelChoice::PerTap).unwrap();
+    let hist = CompiledCnn::compile_with(&enc, QFormat::IMAGE32, KernelChoice::Histogram).unwrap();
+    let mut scratch = hist.scratch();
+    let mut logits = vec![0f32; hist.classes()];
     for i in 0..12 {
         let img = random_image(&mut rng, &enc.arch);
+        let plan = if i % 4 < 2 { &hist } else { &per_tap };
         let variant = if i % 2 == 0 {
             ConvVariant::Pasm
         } else {

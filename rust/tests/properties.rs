@@ -1,6 +1,7 @@
-//! Property-based tests (hand-rolled generator loop — proptest is not
-//! available in the offline build; seeds are deterministic so failures
-//! reproduce).
+//! Property-based tests (hand-rolled generator loop over
+//! [`common::rng::TestRng`], which announces its seed so failures
+//! reproduce from the captured output — proptest is not available in the
+//! offline build).
 //!
 //! The central invariant is the paper's §5.3 claim: over the integers,
 //! PASM, the weight-shared MAC and the decoded direct convolution are the
@@ -8,12 +9,14 @@
 //! formulas, model monotonicity, quantizer and batcher invariants, and
 //! fuzzing the JSON parser.
 
+mod common;
+
+use common::rng::TestRng;
 use pasm_accel::accel::conv::{ConvAccel, ConvVariantKind};
 use pasm_accel::accel::standalone::StandaloneUnit;
 use pasm_accel::cnn::conv::{
     direct_conv_f32, pasm_conv_f32, pasm_conv_fx, ws_conv_f32, ws_conv_fx, FxConvInputs,
 };
-use pasm_accel::cnn::data::Rng;
 use pasm_accel::coordinator::BatchPolicy;
 use pasm_accel::hw::Tech;
 use pasm_accel::quant::codebook::encode_weights;
@@ -34,7 +37,7 @@ struct Case {
     shape: ConvShape,
 }
 
-fn random_case(rng: &mut Rng) -> Case {
+fn random_case(rng: &mut TestRng) -> Case {
     let c = 1 + rng.below(6);
     let k = 1 + rng.below(3);
     let extra = rng.below(5);
@@ -50,7 +53,7 @@ fn random_case(rng: &mut Rng) -> Case {
 
 #[test]
 fn prop_pasm_ws_direct_equivalent_f32() {
-    let mut rng = Rng::new(1001);
+    let mut rng = TestRng::new(1001);
     for case_i in 0..60 {
         let case = random_case(&mut rng);
         let enc = encode_weights(&case.weights, case.bins, QFormat::W32);
@@ -67,7 +70,7 @@ fn prop_pasm_ws_direct_equivalent_f32() {
 #[test]
 fn prop_pasm_ws_bitexact_fixed_point() {
     // §5.3 exactness, in integers, across the whole shape space
-    let mut rng = Rng::new(2002);
+    let mut rng = TestRng::new(2002);
     for case_i in 0..60 {
         let case = random_case(&mut rng);
         let enc = encode_weights(&case.weights, case.bins, QFormat::W16);
@@ -82,7 +85,7 @@ fn prop_pasm_ws_bitexact_fixed_point() {
 
 #[test]
 fn prop_simulator_matches_functional() {
-    let mut rng = Rng::new(3003);
+    let mut rng = TestRng::new(3003);
     for case_i in 0..25 {
         let case = random_case(&mut rng);
         let enc = encode_weights(&case.weights, case.bins, QFormat::W16);
@@ -102,11 +105,11 @@ fn prop_simulator_matches_functional() {
 
 #[test]
 fn prop_standalone_sim_invariants() {
-    let mut rng = Rng::new(4004);
+    let mut rng = TestRng::new(4004);
     for case_i in 0..20 {
         let bins = 1usize << (1 + rng.below(6));
         let n = 16 + rng.below(200);
-        let streams = random_streams(&mut rng, 16, n, bins, 1 << 16);
+        let streams = random_streams(rng.raw(), 16, n, bins, 1 << 16);
         let cb: Vec<i64> = (0..bins).map(|_| (rng.signed() * 1e4) as i64).collect();
         let mac = StandaloneUnit::mac16(32, bins);
         let pasm = StandaloneUnit::pas16mac4(32, bins);
@@ -166,7 +169,7 @@ fn prop_gate_model_monotonicity() {
 
 #[test]
 fn prop_quantizer_invariants() {
-    let mut rng = Rng::new(5005);
+    let mut rng = TestRng::new(5005);
     for case_i in 0..40 {
         let n = 4 + rng.below(400);
         let bins = 1 + rng.below(32);
@@ -191,7 +194,7 @@ fn prop_quantizer_invariants() {
 
 #[test]
 fn prop_batch_policy_invariants() {
-    let mut rng = Rng::new(6006);
+    let mut rng = TestRng::new(6006);
     for _ in 0..200 {
         let mut buckets: Vec<usize> = (0..1 + rng.below(4))
             .map(|_| 1 + rng.below(32))
@@ -224,7 +227,7 @@ fn prop_batch_policy_invariants() {
 #[test]
 fn prop_json_parser_never_panics() {
     use pasm_accel::runtime::json::parse;
-    let mut rng = Rng::new(7007);
+    let mut rng = TestRng::new(7007);
     let alphabet: Vec<char> = r#"{}[]",:0123456789.eE+-truefalsn \u"#.chars().collect();
     for _ in 0..500 {
         let len = rng.below(64);
@@ -239,7 +242,7 @@ fn prop_json_parser_never_panics() {
 fn prop_fx_encode_bounded_error() {
     // fixed-point conv vs f32 conv over the fx-rounded codebook: error
     // bounded by image quantization ulp x taps x max|w|
-    let mut rng = Rng::new(8008);
+    let mut rng = TestRng::new(8008);
     for case_i in 0..20 {
         let case = random_case(&mut rng);
         let enc = encode_weights(&case.weights, case.bins, QFormat::W16);
