@@ -35,9 +35,21 @@ use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use crate::coordinator::cost::HwCost;
+
+/// How a batch reached this engine: through the model's own home-shard
+/// queue, or stolen off another shard's handoff deck.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchOrigin {
+    /// The normal path — this engine's shard is the model's home.
+    Home,
+    /// A cross-shard steal: the batch was formed (and `batch_seq`-
+    /// stamped) by the model's home shard; this engine only executes
+    /// it, materializing a read-only replica executable if needed.
+    Stolen,
+}
 
 /// Per-registry-model compiled state, invalidated by generation.
 struct ModelSlot {
@@ -50,6 +62,17 @@ struct ModelSlot {
     per_image: HwCost,
     in_dims: [usize; 3],
     classes: usize,
+    /// True while this slot exists only to execute *stolen* batches of
+    /// a hot model homed on another shard.  Replicas are cheap — the
+    /// backend's `replicate`/`compile_entry` path shares the model Arc
+    /// and the registry's per-`(iq, kernel)` plan cache — but they are
+    /// still evicted once the model's traffic cools
+    /// ([`Engine::evict_idle_replicas`]) so cold models don't bloat
+    /// every shard's executable cache.  A home-queue batch clears the
+    /// flag: the slot is then resident, exactly as before stealing.
+    replica: bool,
+    /// Last time a batch executed out of this slot (eviction clock).
+    last_used: Instant,
 }
 
 /// The batch execution engine.
@@ -72,6 +95,10 @@ pub struct Engine {
     /// engine stamps `launched` (executable resolved, kernel about to
     /// start) and `executed` (kernel finished) around the backend call.
     tracer: Option<(Arc<TraceBuf>, usize)>,
+    /// Replica slots materialized since the last
+    /// [`Engine::take_replica_installs`] call (the worker loop drains
+    /// this into the shard's metrics).
+    replica_installs: u64,
 }
 
 impl Engine {
@@ -104,6 +131,7 @@ impl Engine {
             slots: HashMap::new(),
             pad_buf: Vec::new(),
             tracer: None,
+            replica_installs: 0,
         })
     }
 
@@ -142,6 +170,19 @@ impl Engine {
         requests: &[InferenceRequest],
         bucket: usize,
     ) -> Result<Vec<InferenceResponse>> {
+        self.run_batch_from(requests, bucket, BatchOrigin::Home)
+    }
+
+    /// [`Engine::run_batch`] with the batch's origin spelled out.  A
+    /// [`BatchOrigin::Stolen`] batch that resolves a model this engine
+    /// has never compiled materializes the slot as a *replica* — same
+    /// lazy `compile_entry` path, flagged for later eviction.
+    pub fn run_batch_from(
+        &mut self,
+        requests: &[InferenceRequest],
+        bucket: usize,
+        origin: BatchOrigin,
+    ) -> Result<Vec<InferenceResponse>> {
         let model = requests.first().and_then(|r| r.model.clone());
         anyhow::ensure!(
             requests.iter().all(|r| r.model.as_deref() == model.as_deref()),
@@ -164,10 +205,21 @@ impl Engine {
                 execute_padded(ctx, requests, bucket, &mut self.pad_buf)
             }
             Some(name) => {
+                let fresh = !self.slots.contains_key(name.as_ref());
                 self.refresh_slot(&name)?;
                 // split borrows: slot (self.slots) + backend + pad_buf are
                 // disjoint fields
                 let slot = self.slots.get_mut(name.as_ref()).expect("slot just refreshed");
+                slot.last_used = Instant::now();
+                match origin {
+                    // serving from the home queue makes the slot resident
+                    BatchOrigin::Home => slot.replica = false,
+                    BatchOrigin::Stolen if fresh => {
+                        slot.replica = true;
+                        self.replica_installs += 1;
+                    }
+                    BatchOrigin::Stolen => {}
+                }
                 if !slot.exes.contains_key(&bucket) {
                     let what = format!("compile model '{name}' at batch bucket {bucket}");
                     let exe = self.backend.compile_entry(&slot.entry, bucket).context(what)?;
@@ -230,8 +282,35 @@ impl Engine {
             exes: BTreeMap::new(),
             checked_at: generation,
             entry,
+            // a hot-swap rebuild keeps the slot's replica status; a
+            // brand-new slot starts resident and run_batch_from flags it
+            replica: self.slots.get(name).is_some_and(|s| s.replica),
+            last_used: Instant::now(),
         };
         self.slots.insert(name.to_string(), slot);
+    }
+
+    /// Drop every replica slot that has not executed a batch for `idle`
+    /// (the demotion half of hot-model elasticity: traffic cooled, the
+    /// executables go).  Resident slots — models homed on this shard —
+    /// are never touched.  Returns how many replicas were evicted.
+    pub fn evict_idle_replicas(&mut self, idle: Duration) -> usize {
+        let now = Instant::now();
+        let before = self.slots.len();
+        self.slots
+            .retain(|_, s| !(s.replica && now.saturating_duration_since(s.last_used) >= idle));
+        before - self.slots.len()
+    }
+
+    /// True while `name` is held as a replica (stolen-batch) slot.
+    pub fn is_replica(&self, name: &str) -> bool {
+        self.slots.get(name).is_some_and(|s| s.replica)
+    }
+
+    /// Drain the count of replica slots materialized since the last
+    /// call (the worker loop folds this into the shard's metrics).
+    pub fn take_replica_installs(&mut self) -> u64 {
+        std::mem::take(&mut self.replica_installs)
     }
 }
 
@@ -318,9 +397,83 @@ fn execute_padded(
                 // the engine is shard-agnostic; the owning shard's worker
                 // loop stamps these before the response is sent
                 shard: 0,
+                executed_by: 0,
                 batch_seq: 0,
                 hw,
             }
         })
         .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::{render_digit, Rng};
+    use crate::cnn::network::DigitsCnn;
+    use crate::coordinator::NativeBackend;
+    use crate::quant::fixed::QFormat;
+
+    fn registry_engine() -> (Arc<ModelRegistry>, Engine) {
+        let arch = DigitsCnn::default();
+        let mut rng = Rng::new(5);
+        let params = arch.init(&mut rng);
+        let enc = EncodedCnn::encode(arch, &params, 8, QFormat::W32);
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("hot", enc.clone());
+        let backend = Box::new(NativeBackend::new(enc).with_threads(1));
+        let engine =
+            Engine::new(backend, &[1, 4], &CostModel::default(), Some(Arc::clone(&registry)))
+                .expect("engine startup");
+        (registry, engine)
+    }
+
+    fn request(id: u64, model: &str) -> InferenceRequest {
+        let img = render_digit(&mut Rng::new(id), (id % 10) as usize, 0.05);
+        InferenceRequest::new(id, img).with_model(model)
+    }
+
+    #[test]
+    fn stolen_batches_install_replicas_and_idle_replicas_evict() {
+        let (_registry, mut engine) = registry_engine();
+        assert_eq!(engine.take_replica_installs(), 0);
+
+        // a stolen batch for a never-seen model materializes a replica
+        let reqs = [request(1, "hot")];
+        engine.run_batch_from(&reqs, 1, BatchOrigin::Stolen).expect("stolen batch");
+        assert!(engine.is_replica("hot"));
+        assert_eq!(engine.take_replica_installs(), 1);
+        // further stolen batches reuse it: no second install
+        engine.run_batch_from(&[request(2, "hot")], 1, BatchOrigin::Stolen).expect("reuse");
+        assert_eq!(engine.take_replica_installs(), 0);
+
+        // the replica survives while fresh, and goes once idle
+        assert_eq!(engine.evict_idle_replicas(Duration::from_secs(3600)), 0);
+        assert!(engine.is_replica("hot"));
+        assert_eq!(engine.evict_idle_replicas(Duration::ZERO), 1);
+        assert!(!engine.is_replica("hot"));
+    }
+
+    #[test]
+    fn home_batches_promote_a_replica_to_resident() {
+        let (_registry, mut engine) = registry_engine();
+        engine.run_batch_from(&[request(1, "hot")], 1, BatchOrigin::Stolen).expect("stolen");
+        assert!(engine.is_replica("hot"));
+        // a home-queue batch makes the slot resident: eviction spares it
+        engine.run_batch(&[request(2, "hot")], 1).expect("home batch");
+        assert!(!engine.is_replica("hot"));
+        assert_eq!(engine.evict_idle_replicas(Duration::ZERO), 0);
+    }
+
+    #[test]
+    fn stolen_and_home_logits_are_bit_identical() {
+        let (registry, mut engine) = registry_engine();
+        let req = request(3, "hot");
+        let home = engine.run_batch(std::slice::from_ref(&req), 1).expect("home");
+        // a second engine that only ever sees the stolen path
+        let (_r2, mut thief) = registry_engine();
+        registry.get("hot").expect("entry"); // same weights via clone above
+        let stolen = thief.run_batch_from(&[req], 1, BatchOrigin::Stolen).expect("stolen");
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&home[0].logits), bits(&stolen[0].logits));
+    }
 }

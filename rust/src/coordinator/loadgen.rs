@@ -9,7 +9,12 @@
 //! sweeps the offered rate against capacity); [`run_open_loop_models`]
 //! cycles the same schedule across several model ids — the load shape
 //! that exercises a **sharded** coordinator pool, where each model's
-//! traffic lands on its own shard.
+//! traffic lands on its own shard.  [`run_open_loop_zipf`] skews the
+//! model mix with a Zipf law (`s ≈ 1.1`, optionally bursty via
+//! [`bursty_schedule`]) — the multi-tenant shape where one hot model
+//! saturates its home shard while the rest of the pool idles, which is
+//! what cross-shard batch stealing exists to fix.  Every run reports a
+//! per-model breakdown in [`LoadResult::per_model`].
 //!
 //! [`run_open_loop_net`] is the same methodology over **real TCP
 //! sockets**: a pool of [`crate::serving::Client`] connections replays
@@ -25,10 +30,12 @@
 //! paths in `BENCH_serving.json`.
 
 use crate::cnn::data::Rng;
+use crate::coordinator::metrics::DEFAULT_MODEL_LABEL;
 use crate::coordinator::server::Coordinator;
 use crate::serving::client::{Client, ClientError, PipelinedClient, RetryPolicy};
 use crate::serving::proto::ErrorCode;
 use crate::tensor::Tensor;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
@@ -47,6 +54,51 @@ pub fn poisson_schedule(rng: &mut Rng, n: usize, rate_hz: f64) -> Vec<Duration> 
             Duration::from_secs_f64(-u.ln() / rate_hz)
         })
         .collect()
+}
+
+/// Exponential inter-arrival times with square-wave bursts: the run is
+/// split into eight equal blocks that alternate between `rate_hz ×
+/// burst` and `rate_hz / burst`.  The point is pressure spikes — hot
+/// blocks push the instantaneous arrival rate past a single shard's
+/// capacity so queues actually build — not a calibrated mean; the
+/// time-averaged offered rate sits between the two block rates.
+pub fn bursty_schedule(rng: &mut Rng, n: usize, rate_hz: f64, burst: f64) -> Vec<Duration> {
+    assert!(rate_hz > 0.0);
+    assert!(burst >= 1.0, "burst factor must be >= 1");
+    let block = (n / 8).max(1);
+    (0..n)
+        .map(|i| {
+            let hot = (i / block) % 2 == 0;
+            let rate = if hot { rate_hz * burst } else { rate_hz / burst };
+            let u = rng.uniform().max(1e-7) as f64;
+            Duration::from_secs_f64(-u.ln() / rate)
+        })
+        .collect()
+}
+
+/// Cumulative distribution of a Zipf(`s`) law over `k` ranks
+/// (`w_i ∝ 1/(i+1)^s`, rank 0 hottest).  At `s ≈ 1.1` and hundreds of
+/// ranks the head rank alone draws a double-digit share of the traffic —
+/// the canonical multi-tenant serving skew.
+pub fn zipf_cdf(k: usize, s: f64) -> Vec<f64> {
+    assert!(k >= 1, "need at least one rank");
+    let mut acc = 0.0;
+    let mut cdf: Vec<f64> = (0..k)
+        .map(|i| {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            acc
+        })
+        .collect();
+    for c in &mut cdf {
+        *c /= acc;
+    }
+    cdf
+}
+
+/// Draw one rank from a [`zipf_cdf`] by inverse-CDF lookup.
+pub fn zipf_pick(rng: &mut Rng, cdf: &[f64]) -> usize {
+    let u = rng.uniform() as f64;
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
 }
 
 /// Result of one open-loop run.
@@ -73,6 +125,11 @@ pub struct LoadResult {
     /// Retries the client layer performed across the run (network runs
     /// only).  Deterministic for a fixed schedule and retry seed.
     pub retries: u64,
+    /// Per-model breakdown, keyed by model name (default-model traffic
+    /// under [`DEFAULT_MODEL_LABEL`]).  Under a skewed mix the aggregate
+    /// percentiles hide the hot model's tail; this is where the
+    /// elasticity bench reads the hot model's ceiling from.
+    pub per_model: BTreeMap<String, ModelLoad>,
 }
 
 impl LoadResult {
@@ -80,22 +137,58 @@ impl LoadResult {
     /// completed — a run where everything failed must not report a
     /// perfect 0 µs tail.
     pub fn percentile_us(&self, p: f64) -> Option<u64> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        Some(v[rank.min(v.len() - 1)])
+        percentile_of(&self.latencies_us, p)
     }
 
     /// Mean latency (µs); `None` when no request completed.
     pub fn mean_us(&self) -> Option<f64> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        Some(self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64)
+        mean_of(&self.latencies_us)
     }
+}
+
+/// One model's slice of a [`LoadResult`].
+#[derive(Clone, Debug, Default)]
+pub struct ModelLoad {
+    /// Requests the schedule assigned to this model.
+    pub requests: usize,
+    /// Completed-request latencies (µs) for this model.
+    pub latencies_us: Vec<u64>,
+    /// Completed requests divided by the run's wall time (req/s).
+    pub achieved_hz: f64,
+    /// Hard failures (submission or execution errors).
+    pub errors: usize,
+    /// Deadline misses (typed reply or client-side wait expiry).
+    pub deadline_misses: usize,
+}
+
+impl ModelLoad {
+    /// Latency percentile for this model; `None` when none of its
+    /// requests completed — same no-0-as-no-data rule as the aggregate.
+    pub fn percentile_us(&self, p: f64) -> Option<u64> {
+        percentile_of(&self.latencies_us, p)
+    }
+
+    /// Mean latency (µs); `None` when none of its requests completed.
+    pub fn mean_us(&self) -> Option<f64> {
+        mean_of(&self.latencies_us)
+    }
+}
+
+fn percentile_of(latencies: &[u64], p: f64) -> Option<u64> {
+    if latencies.is_empty() {
+        return None;
+    }
+    let mut v = latencies.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    Some(v[rank.min(v.len() - 1)])
+}
+
+fn mean_of(latencies: &[u64]) -> Option<f64> {
+    if latencies.is_empty() {
+        return None;
+    }
+    Some(latencies.iter().sum::<u64>() as f64 / latencies.len() as f64)
 }
 
 /// Replay a Poisson arrival process of `n` requests at `rate_hz` against
@@ -135,12 +228,78 @@ pub fn run_open_loop_models(
     let default_models = [None];
     let models: &[Option<String>] = if models.is_empty() { &default_models } else { models };
     let gaps = poisson_schedule(rng, n, rate_hz);
+    let assign: Vec<usize> = (0..n).map(|i| i % models.len()).collect();
+    run_open_loop_assigned(coord, models, &assign, pool, &gaps, rate_hz, timeout)
+}
+
+/// Knobs of a Zipf-skewed open-loop run ([`run_open_loop_zipf`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ZipfOptions {
+    /// Zipf exponent; `s ≈ 1.1` is the canonical multi-tenant skew.
+    pub s: f64,
+    /// Square-wave burst factor fed to [`bursty_schedule`] (`None` =
+    /// stationary Poisson arrivals).
+    pub burst: Option<f64>,
+    /// Per-completion drain bound, as in [`run_open_loop_models`].
+    pub timeout: Duration,
+}
+
+impl Default for ZipfOptions {
+    fn default() -> Self {
+        ZipfOptions { s: 1.1, burst: None, timeout: DEFAULT_REQUEST_TIMEOUT }
+    }
+}
+
+/// [`run_open_loop_models`] with Zipf-skewed model selection: request
+/// targets are drawn per arrival from a Zipf(`opts.s`) law over `models`
+/// (slice order is rank order, so `models[0]` is the hot model).  This
+/// is the multi-tenant traffic shape of the elasticity bench — one
+/// model's queue outruns its home shard while sibling shards idle — and
+/// the per-model breakdown in the result is where the hot model's
+/// throughput ceiling is read from.
+pub fn run_open_loop_zipf(
+    coord: &Coordinator,
+    models: &[Option<String>],
+    pool: &[Tensor<f32>],
+    n: usize,
+    rate_hz: f64,
+    rng: &mut Rng,
+    opts: ZipfOptions,
+) -> LoadResult {
+    assert!(!pool.is_empty());
+    assert!(!models.is_empty(), "zipf run needs an explicit model list");
+    let gaps = match opts.burst {
+        Some(b) => bursty_schedule(rng, n, rate_hz, b),
+        None => poisson_schedule(rng, n, rate_hz),
+    };
+    let cdf = zipf_cdf(models.len(), opts.s);
+    let assign: Vec<usize> = (0..n).map(|_| zipf_pick(rng, &cdf)).collect();
+    run_open_loop_assigned(coord, models, &assign, pool, &gaps, rate_hz, opts.timeout)
+}
+
+/// Shared open-loop driver: replay `gaps`, request `i` targeting
+/// `models[assign[i]]`.  Submissions happen on schedule regardless of
+/// completions (open loop); per-request latency comes from the
+/// coordinator's own timestamps (queue + compute) so that draining the
+/// receivers after the run does not inflate the numbers.
+fn run_open_loop_assigned(
+    coord: &Coordinator,
+    models: &[Option<String>],
+    assign: &[usize],
+    pool: &[Tensor<f32>],
+    gaps: &[Duration],
+    offered_hz: f64,
+    timeout: Duration,
+) -> LoadResult {
+    let n = gaps.len();
+    let label = |mi: usize| -> String {
+        models[mi].clone().unwrap_or_else(|| DEFAULT_MODEL_LABEL.to_string())
+    };
     let started = Instant::now();
 
-    // submit on schedule, keep receivers; per-request latency comes from
-    // the coordinator's own timestamps (queue + compute) so that draining
-    // the receivers after the run does not inflate the numbers
     let mut inflight = Vec::with_capacity(n);
+    let mut per_model: BTreeMap<String, ModelLoad> = BTreeMap::new();
+    let mut errors = 0usize;
     let mut next = Instant::now();
     for (i, gap) in gaps.iter().enumerate() {
         next += *gap;
@@ -148,37 +307,63 @@ pub fn run_open_loop_models(
         if next > now {
             std::thread::sleep(next - now);
         }
-        let submitted = match &models[i % models.len()] {
+        let mi = assign[i];
+        per_model.entry(label(mi)).or_default().requests += 1;
+        let submitted = match &models[mi] {
             Some(name) => coord.submit_to(name, pool[i % pool.len()].clone()),
             None => coord.submit(pool[i % pool.len()].clone()),
         };
         match submitted {
-            Ok(rx) => inflight.push(rx),
-            Err(_) => {} // coordinator gone; counted as errors below
+            Ok(rx) => inflight.push((mi, rx)),
+            Err(_) => {
+                // coordinator gone; the request never entered a queue
+                errors += 1;
+                per_model.entry(label(mi)).or_default().errors += 1;
+            }
         }
     }
 
     let mut latencies = Vec::with_capacity(inflight.len());
-    let mut errors = n - inflight.len();
     let mut deadline_misses = 0usize;
-    for rx in inflight {
+    for (mi, rx) in inflight {
+        let m = per_model.entry(label(mi)).or_default();
         match rx.recv_timeout(timeout) {
-            Ok(Ok(resp)) => latencies.push(resp.queue_us + resp.compute_us),
-            Ok(Err(msg)) if msg.contains("deadline exceeded") => deadline_misses += 1,
-            Ok(Err(_)) => errors += 1,
-            Err(mpsc::RecvTimeoutError::Timeout) => deadline_misses += 1,
-            Err(mpsc::RecvTimeoutError::Disconnected) => errors += 1,
+            Ok(Ok(resp)) => {
+                let l = resp.queue_us + resp.compute_us;
+                latencies.push(l);
+                m.latencies_us.push(l);
+            }
+            Ok(Err(msg)) if msg.contains("deadline exceeded") => {
+                deadline_misses += 1;
+                m.deadline_misses += 1;
+            }
+            Ok(Err(_)) => {
+                errors += 1;
+                m.errors += 1;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                deadline_misses += 1;
+                m.deadline_misses += 1;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                errors += 1;
+                m.errors += 1;
+            }
         }
     }
     let wall = started.elapsed().as_secs_f64();
+    for m in per_model.values_mut() {
+        m.achieved_hz = m.latencies_us.len() as f64 / wall;
+    }
     LoadResult {
-        offered_hz: rate_hz,
+        offered_hz,
         achieved_hz: latencies.len() as f64 / wall,
         latencies_us: latencies,
         errors,
         overloaded: 0,
         deadline_misses,
         retries: 0,
+        per_model,
     }
 }
 
@@ -198,6 +383,12 @@ pub struct NetLoadOptions {
     /// deadline miss (never retried — the request may still land) and
     /// the connection is reset.
     pub timeout: Duration,
+    /// When set, model targets are drawn from a Zipf law with this
+    /// exponent over `models` (slice order = rank order, `models[0]`
+    /// hottest) instead of cycling round-robin.  The draw happens before
+    /// the workers start, so the assignment is deterministic for a fixed
+    /// schedule seed regardless of connection count.
+    pub zipf_s: Option<f64>,
 }
 
 impl Default for NetLoadOptions {
@@ -207,6 +398,7 @@ impl Default for NetLoadOptions {
             retry: RetryPolicy::none(),
             deadline_ms: None,
             timeout: DEFAULT_REQUEST_TIMEOUT,
+            zipf_s: None,
         }
     }
 }
@@ -247,6 +439,16 @@ pub fn run_open_loop_net(
         offsets.push(acc);
     }
 
+    // per-request model assignment, drawn up front so it is
+    // deterministic regardless of how workers interleave
+    let assign: Vec<usize> = match opts.zipf_s {
+        Some(s) => {
+            let cdf = zipf_cdf(models.len(), s);
+            (0..n).map(|_| zipf_pick(rng, &cdf)).collect()
+        }
+        None => (0..n).map(|i| i % models.len()).collect(),
+    };
+
     // connect up front so a refused connection fails the run loudly
     // instead of skewing the measurement
     let clients: Vec<Client> = (0..opts.connections)
@@ -259,13 +461,15 @@ pub fn run_open_loop_net(
         .collect::<anyhow::Result<_>>()?;
 
     let next = AtomicUsize::new(0);
-    type NetTally = (Vec<u64>, usize, usize, usize, u64);
-    let results: Mutex<NetTally> = Mutex::new((Vec::with_capacity(n), 0, 0, 0, 0));
+    type NetTally = (Vec<u64>, usize, usize, usize, u64, BTreeMap<usize, ModelLoad>);
+    let results: Mutex<NetTally> =
+        Mutex::new((Vec::with_capacity(n), 0, 0, 0, 0, BTreeMap::new()));
     let started = Instant::now();
     std::thread::scope(|scope| {
         let next = &next;
         let results = &results;
         let offsets = &offsets;
+        let assign = &assign;
         let opts = &opts;
         for mut client in clients {
             scope.spawn(move || {
@@ -273,6 +477,7 @@ pub fn run_open_loop_net(
                 let mut errors = 0usize;
                 let mut overloaded = 0usize;
                 let mut deadline_misses = 0usize;
+                let mut tally: BTreeMap<usize, ModelLoad> = BTreeMap::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
@@ -283,14 +488,22 @@ pub fn run_open_loop_net(
                     if due > now {
                         std::thread::sleep(due - now);
                     }
-                    let model = models[i % models.len()].as_deref();
+                    let mi = assign[i];
+                    let m = tally.entry(mi).or_default();
+                    m.requests += 1;
+                    let model = models[mi].as_deref();
                     match client.infer_deadline(model, &pool[i % pool.len()], opts.deadline_ms) {
-                        Ok(_) => latencies.push(due.elapsed().as_micros() as u64),
+                        Ok(_) => {
+                            let l = due.elapsed().as_micros() as u64;
+                            latencies.push(l);
+                            m.latencies_us.push(l);
+                        }
                         Err(ClientError::Server(e)) if e.code == ErrorCode::ResourceExhausted => {
                             overloaded += 1;
                         }
                         Err(ClientError::Server(e)) if e.code == ErrorCode::DeadlineExceeded => {
                             deadline_misses += 1;
+                            m.deadline_misses += 1;
                         }
                         Err(ClientError::Io(e))
                             if matches!(
@@ -302,9 +515,13 @@ pub fn run_open_loop_net(
                             // abort; reset so a late reply cannot
                             // mis-match the next request on this stream
                             deadline_misses += 1;
+                            m.deadline_misses += 1;
                             let _ = client.reset();
                         }
-                        Err(_) => errors += 1,
+                        Err(_) => {
+                            errors += 1;
+                            m.errors += 1;
+                        }
                     }
                 }
                 let mut guard = results.lock().unwrap();
@@ -313,12 +530,27 @@ pub fn run_open_loop_net(
                 guard.2 += overloaded;
                 guard.3 += deadline_misses;
                 guard.4 += client.retries();
+                for (mi, ml) in tally {
+                    let merged = guard.5.entry(mi).or_default();
+                    merged.requests += ml.requests;
+                    merged.latencies_us.extend(ml.latencies_us);
+                    merged.errors += ml.errors;
+                    merged.deadline_misses += ml.deadline_misses;
+                }
             });
         }
     });
     let wall = started.elapsed().as_secs_f64();
-    let (latencies_us, errors, overloaded, deadline_misses, retries) =
+    let (latencies_us, errors, overloaded, deadline_misses, retries, tally) =
         results.into_inner().unwrap();
+    let per_model = tally
+        .into_iter()
+        .map(|(mi, mut ml)| {
+            ml.achieved_hz = ml.latencies_us.len() as f64 / wall;
+            let label = models[mi].clone().unwrap_or_else(|| DEFAULT_MODEL_LABEL.to_string());
+            (label, ml)
+        })
+        .collect();
     Ok(LoadResult {
         offered_hz: rate_hz,
         achieved_hz: latencies_us.len() as f64 / wall,
@@ -327,6 +559,7 @@ pub fn run_open_loop_net(
         overloaded,
         deadline_misses,
         retries,
+        per_model,
     })
 }
 
@@ -436,6 +669,7 @@ mod tests {
             overloaded: 0,
             deadline_misses: 0,
             retries: 0,
+            per_model: BTreeMap::new(),
         };
         assert!(r.percentile_us(50.0) <= r.percentile_us(99.0));
         assert_eq!(r.percentile_us(100.0), Some(100));
@@ -452,8 +686,60 @@ mod tests {
             overloaded: 0,
             deadline_misses: 0,
             retries: 0,
+            per_model: BTreeMap::new(),
         };
         assert_eq!(r.percentile_us(99.0), None, "all-failed run must not report 0 µs");
         assert_eq!(r.mean_us(), None);
+    }
+
+    #[test]
+    fn per_model_percentiles_are_none_without_completions() {
+        let m = ModelLoad { requests: 3, errors: 3, ..ModelLoad::default() };
+        assert_eq!(m.percentile_us(99.0), None, "all-failed model must not report 0 µs");
+        assert_eq!(m.mean_us(), None);
+        let done = ModelLoad { requests: 2, latencies_us: vec![10, 30], ..ModelLoad::default() };
+        assert_eq!(done.percentile_us(0.0), Some(10));
+        assert_eq!(done.percentile_us(100.0), Some(30));
+        assert!((done.mean_us().unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_head_heavy() {
+        let cdf = zipf_cdf(200, 1.1);
+        assert_eq!(cdf.len(), 200);
+        for w in cdf.windows(2) {
+            assert!(w[0] < w[1], "cdf must be strictly increasing");
+        }
+        assert!((cdf[199] - 1.0).abs() < 1e-12, "cdf must end at 1");
+        // rank 0 alone must carry a double-digit share at s = 1.1
+        assert!(cdf[0] > 0.10, "head share {}", cdf[0]);
+    }
+
+    #[test]
+    fn zipf_pick_is_skewed_and_covers_ranks() {
+        let mut rng = Rng::new(11);
+        let cdf = zipf_cdf(50, 1.1);
+        let mut counts = [0usize; 50];
+        for _ in 0..20_000 {
+            counts[zipf_pick(&mut rng, &cdf)] += 1;
+        }
+        assert!(counts[0] > counts[1], "rank 0 must dominate rank 1");
+        assert!(counts[0] > 2_000, "head rank drew {} of 20000", counts[0]);
+        assert!(counts[49] > 0, "tail ranks must still receive traffic");
+    }
+
+    #[test]
+    fn bursty_schedule_alternates_block_rates() {
+        let mut rng = Rng::new(3);
+        let gaps = bursty_schedule(&mut rng, 16_000, 1000.0, 4.0);
+        assert_eq!(gaps.len(), 16_000);
+        let block = 16_000 / 8;
+        let mean = |b: usize| -> f64 {
+            gaps[b * block..(b + 1) * block].iter().map(Duration::as_secs_f64).sum::<f64>()
+                / block as f64
+        };
+        // hot blocks (even) run at 4000 Hz, cold blocks (odd) at 250 Hz
+        assert!(mean(0) < mean(1), "hot block must have shorter gaps");
+        assert!(mean(1) / mean(0) > 4.0, "burst contrast too weak");
     }
 }

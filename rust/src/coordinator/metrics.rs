@@ -37,6 +37,9 @@ pub struct ModelCounters {
     pub failed_batches: u64,
     /// Requests whose deadline expired before their batch launched.
     pub deadline_misses: u64,
+    /// Batches of this model executed on a shard other than its home
+    /// (counted on the executing shard).
+    pub stolen_batches: u64,
 }
 
 /// Compact per-shard counter summary, reported next to the merged
@@ -51,6 +54,12 @@ pub struct ShardCounters {
     pub failed_batches: u64,
     /// Requests this shard dropped for an expired deadline.
     pub deadline_misses: u64,
+    /// Batches this shard executed on behalf of another model's home
+    /// shard (it was the thief).
+    pub stolen_batches: u64,
+    /// Batches this shard formed that another shard executed (it was
+    /// the home).
+    pub donated_batches: u64,
 }
 
 /// Rolling metrics for one coordinator shard (or, after
@@ -70,6 +79,20 @@ pub struct Metrics {
     /// Requests dropped because their deadline expired before launch,
     /// across all models.
     pub deadline_misses: u64,
+    /// Batches this shard executed that were formed on another shard
+    /// (this shard was the thief).  Such batches also count in
+    /// [`Metrics::batches`] here — execute-stage accounting follows the
+    /// executing shard.
+    pub stolen_batches: u64,
+    /// Batches this shard formed and stamped that another shard
+    /// executed (this shard was the home).  Queue-side accounting stays
+    /// here; the executed batch itself counts on the thief.
+    pub donated_batches: u64,
+    /// Read-only hot-model executable replicas this shard materialized
+    /// to execute stolen batches.
+    pub replicas_installed: u64,
+    /// Replicas this shard evicted after the model's traffic cooled.
+    pub replicas_evicted: u64,
     /// Executed batch slots that were zero padding.
     pub padded_slots: u64,
     /// Per-model request/batch counters, keyed by model name (the default
@@ -135,6 +158,33 @@ impl Metrics {
         if let Some(m) = self.per_model.get_mut(model) {
             m.deadline_misses += 1;
         }
+    }
+
+    /// Count one stolen batch executed on this shard (the thief side of
+    /// a cross-shard handoff).  Call after [`Metrics::record_batch`] —
+    /// the per-model counter follows the same map-growth guard as the
+    /// failure counters, and the execute just created the entry.
+    pub fn record_stolen_batch(&mut self, model: &str) {
+        self.stolen_batches += 1;
+        if let Some(m) = self.per_model.get_mut(model) {
+            m.stolen_batches += 1;
+        }
+    }
+
+    /// Count one batch this shard formed that a thief executed (the
+    /// home side of a cross-shard handoff).
+    pub fn record_donated_batch(&mut self) {
+        self.donated_batches += 1;
+    }
+
+    /// Count hot-model executable replicas installed on this shard.
+    pub fn record_replicas_installed(&mut self, n: u64) {
+        self.replicas_installed += n;
+    }
+
+    /// Count cooled-model executable replicas evicted from this shard.
+    pub fn record_replicas_evicted(&mut self, n: u64) {
+        self.replicas_evicted += n;
     }
 
     /// Record one request's end-to-end latency into the bounded
@@ -211,6 +261,8 @@ impl Metrics {
             batches: self.batches,
             failed_batches: self.failed_batches,
             deadline_misses: self.deadline_misses,
+            stolen_batches: self.stolen_batches,
+            donated_batches: self.donated_batches,
         }
     }
 
@@ -230,6 +282,10 @@ impl Metrics {
         self.batches += other.batches;
         self.failed_batches += other.failed_batches;
         self.deadline_misses += other.deadline_misses;
+        self.stolen_batches += other.stolen_batches;
+        self.donated_batches += other.donated_batches;
+        self.replicas_installed += other.replicas_installed;
+        self.replicas_evicted += other.replicas_evicted;
         self.padded_slots += other.padded_slots;
         self.sim_cycles += other.sim_cycles;
         self.sim_energy_j += other.sim_energy_j;
@@ -239,6 +295,7 @@ impl Metrics {
             m.batches += c.batches;
             m.failed_batches += c.failed_batches;
             m.deadline_misses += c.deadline_misses;
+            m.stolen_batches += c.stolen_batches;
         }
         for (name, s) in &other.per_model_stages {
             self.per_model_stages.entry(name.clone()).or_default().merge(s);
@@ -297,9 +354,9 @@ mod tests {
         m.record_batch("b", 8, 8);
         m.record_batch("a", 2, 2);
         m.record_failed_batch("b");
-        let a = ModelCounters { requests: 6, batches: 2, failed_batches: 0, deadline_misses: 0 };
+        let a = ModelCounters { requests: 6, batches: 2, ..ModelCounters::default() };
         assert_eq!(m.model("a"), a);
-        let b = ModelCounters { requests: 8, batches: 1, failed_batches: 1, deadline_misses: 0 };
+        let b = ModelCounters { requests: 8, batches: 1, failed_batches: 1, ..a };
         assert_eq!(m.model("b"), b);
         assert_eq!(m.model("missing"), ModelCounters::default());
         // globals aggregate across models
@@ -387,9 +444,9 @@ mod tests {
         assert_eq!(merged.batches, 3);
         assert_eq!(merged.failed_batches, 1);
         assert_eq!(merged.padded_slots, 4);
-        let x = ModelCounters { requests: 6, batches: 2, failed_batches: 0, deadline_misses: 0 };
+        let x = ModelCounters { requests: 6, batches: 2, ..ModelCounters::default() };
         assert_eq!(merged.model("x"), x);
-        let y = ModelCounters { requests: 8, batches: 1, failed_batches: 1, deadline_misses: 0 };
+        let y = ModelCounters { requests: 8, batches: 1, failed_batches: 1, ..x };
         assert_eq!(merged.model("y"), y);
         // histograms merged by bucket addition: all three samples
         // present, count exact, max exact
@@ -474,8 +531,43 @@ mod tests {
         m.record_deadline_miss("a");
         assert_eq!(
             m.counters(),
-            ShardCounters { requests: 7, batches: 2, failed_batches: 1, deadline_misses: 1 }
+            ShardCounters {
+                requests: 7,
+                batches: 2,
+                failed_batches: 1,
+                deadline_misses: 1,
+                stolen_batches: 0,
+                donated_batches: 0,
+            }
         );
+    }
+
+    #[test]
+    fn steal_counters_merge_and_follow_the_map_growth_guard() {
+        // the thief executed one batch of "hot" it did not form...
+        let mut thief = Metrics::new();
+        thief.record_batch("hot", 4, 4);
+        thief.record_stolen_batch("hot");
+        thief.record_stolen_batch("bogus"); // guard: no entry, no growth
+        thief.record_replicas_installed(1);
+        // ...and the home shard formed it without executing it
+        let mut home = Metrics::new();
+        home.record_donated_batch();
+        home.record_replicas_evicted(2);
+
+        assert_eq!(thief.model("hot").stolen_batches, 1);
+        assert_eq!(thief.per_model.len(), 1, "made-up names must not create entries");
+        assert_eq!(thief.counters().stolen_batches, 2);
+        assert_eq!(home.counters().donated_batches, 1);
+
+        let mut merged = Metrics::new();
+        merged.merge(&thief);
+        merged.merge(&home);
+        assert_eq!(merged.stolen_batches, 2);
+        assert_eq!(merged.donated_batches, 1);
+        assert_eq!(merged.replicas_installed, 1);
+        assert_eq!(merged.replicas_evicted, 2);
+        assert_eq!(merged.model("hot").stolen_batches, 1);
     }
 
     #[test]

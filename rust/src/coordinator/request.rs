@@ -98,10 +98,17 @@ pub struct InferenceResponse {
     pub batch_size: usize,
     /// Live requests in the batch (excl. padding).
     pub batch_occupancy: usize,
-    /// Coordinator shard that served the batch.  Requests route to
-    /// shards by a stable hash of the model id, so one model's traffic
-    /// always reports the same shard.
+    /// The model's **home** shard: the one its id hashes to, which
+    /// owns the model's FIFO queue and formed (and stamped) this batch.
+    /// Requests route to shards by a stable hash of the model id, so
+    /// one model's traffic always reports the same home shard — even
+    /// when the batch itself executed elsewhere (see
+    /// [`InferenceResponse::executed_by`]).
     pub shard: usize,
+    /// The shard whose engine actually executed the batch.  Equal to
+    /// [`InferenceResponse::shard`] except for stolen batches, where an
+    /// idle shard ran a formed batch on the home shard's behalf.
+    pub executed_by: usize,
     /// The serving shard's batch sequence number (0, 1, 2, ... per
     /// shard).  Within one model this is non-decreasing in submission
     /// order — the observable form of the per-model FIFO guarantee,

@@ -31,6 +31,29 @@
 //! flushes its pending requests before its worker exits — the pool
 //! drains losing nothing, exactly like the old single worker.
 //!
+//! # Elasticity (cross-shard batch stealing)
+//!
+//! Hash routing pins each model to one shard, so a Zipf-skewed workload
+//! saturates one engine while the rest of the pool idles.  With
+//! [`CoordinatorBuilder::steal`] enabled, a shard whose per-model load
+//! signal (queue depth × EWMA batch cost) crosses the promotion
+//! threshold ([`CoordinatorBuilder::steal_promote_us`]) stops executing
+//! that model's batches inline: it *forms* them as usual — stamping
+//! each with its `batch_seq` — and pushes the formed batches onto a
+//! pool-shared deck, where any idle shard (or the home shard itself,
+//! which polls the deck first) pops and executes them.  Because the
+//! home shard remains the only batch former and sequence numbers are
+//! stamped at formation, the FIFO witness (`(shard, batch_seq)`
+//! non-decreasing per model in submission order) is preserved by
+//! construction; responses carry the home shard in
+//! [`InferenceResponse::shard`] and the executor in
+//! [`InferenceResponse::executed_by`].  A thief lazily compiles a
+//! read-only replica of the model's executable on first use (the
+//! [`Engine`]'s replica slots) and the periodic sweep evicts it once
+//! the model cools, so cold models never bloat every shard's cache.
+//! Steal mode off (the default) is bit-for-bit the legacy single-owner
+//! behavior.  See `docs/ARCHITECTURE.md` ("Elasticity").
+//!
 //! # Supervision
 //!
 //! `catch_unwind` contains a kernel panic per batch, but nothing used to
@@ -75,7 +98,7 @@
 use crate::coordinator::backend::{ExecutionBackend, NativeBackend};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::cost::CostModel;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{BatchOrigin, Engine};
 use crate::coordinator::metrics::{DEFAULT_MODEL_LABEL, Metrics, ShardCounters};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, Ingress};
 use crate::faults::{FaultPlan, FaultSite};
@@ -103,6 +126,21 @@ const SUPERVISOR_SWEEP: Duration = Duration::from_millis(20);
 /// Error text a request stranded by a dead worker is answered with (the
 /// serving layer maps it to a retryable `UNAVAILABLE` wire error).
 const WORKER_DIED: &str = "shard worker died before the request was served";
+
+/// Default promotion threshold (µs) for batch donation: a model whose
+/// `queue depth × EWMA batch cost` clears this has more backlog than the
+/// home shard can drain timely, so formed batches go to the deck.
+const DEFAULT_STEAL_PROMOTE_US: u64 = 2_000;
+
+/// How long an idle shard waits on its request channel between deck
+/// polls when steal mode is on (steal off blocks indefinitely — the
+/// legacy behavior).
+const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// How long a replica executable may sit unused on a thief shard before
+/// the periodic sweep evicts it (the demotion half of the promote /
+/// demote policy).
+const REPLICA_IDLE: Duration = Duration::from_secs(2);
 
 // Poison-tolerant lock helpers: a panicking holder must not cascade into
 // every later lock site (the data is counters and channel handles — the
@@ -241,6 +279,8 @@ pub struct CoordinatorBuilder {
     shards: Option<usize>,
     faults: Option<Arc<FaultPlan>>,
     trace_capacity: Option<usize>,
+    steal: bool,
+    steal_promote_us: Option<u64>,
 }
 
 impl CoordinatorBuilder {
@@ -345,6 +385,30 @@ impl CoordinatorBuilder {
     /// [`NativeBackend::with_threads`] accordingly.
     pub fn shards(mut self, n: usize) -> Self {
         self.shards = Some(n);
+        self
+    }
+
+    /// Enable cross-shard batch stealing (default **off**; off is
+    /// bit-for-bit the legacy hash-routed behavior).  With stealing on,
+    /// a shard whose per-model load signal clears
+    /// [`CoordinatorBuilder::steal_promote_us`] donates its formed —
+    /// and `batch_seq`-stamped — batches to a pool-shared deck, and any
+    /// idle shard executes them on the home shard's behalf.  See the
+    /// module docs ("Elasticity") for the protocol and the FIFO
+    /// argument.
+    pub fn steal(mut self, on: bool) -> Self {
+        self.steal = on;
+        self
+    }
+
+    /// Promotion threshold (µs) of the per-model load signal
+    /// `queue depth × EWMA batch cost` above which the home shard
+    /// donates formed batches to the deck instead of executing them
+    /// inline (default 2000 µs; `0` donates eagerly, which the steal
+    /// tests use to force the protocol).  Only meaningful with
+    /// [`CoordinatorBuilder::steal`]`(true)`.
+    pub fn steal_promote_us(mut self, us: u64) -> Self {
+        self.steal_promote_us = Some(us);
         self
     }
 
@@ -486,22 +550,36 @@ impl CoordinatorBuilder {
             0 => None,
             cap => Some(Arc::new(TraceBuf::new(backends.len(), cap))),
         };
+        // Metrics slots exist before the shard config because the steal
+        // deck carries a handle to every shard's metrics: a thief must
+        // be able to credit the *home* shard's queue-side counters.
+        let shard_metrics: Vec<Arc<Mutex<Metrics>>> =
+            (0..backends.len()).map(|_| Arc::new(Mutex::new(Metrics::new()))).collect();
+        let steal = self.steal.then(|| {
+            Arc::new(StealState {
+                deck: Mutex::new(VecDeque::new()),
+                cap: backends.len() * 2,
+                promote_us: self.steal_promote_us.unwrap_or(DEFAULT_STEAL_PROMOTE_US),
+                metrics: shard_metrics.clone(),
+            })
+        });
         let config = ShardConfig {
             policy,
             cost,
             registry: registry.clone(),
             faults: faults.clone(),
             tracer: tracer.clone(),
+            steal,
         };
 
         // Spawn every shard worker; each compiles on its own thread
         // (backend executables may not be Send) and reports startup
         // through a ready channel.  All shards must come up before
         // build() returns.
-        let mut shards = Vec::with_capacity(backends.len());
-        let mut readies = Vec::with_capacity(backends.len());
+        let mut shards = Vec::with_capacity(shard_metrics.len());
+        let mut readies = Vec::with_capacity(shard_metrics.len());
         for (shard_id, backend) in backends.into_iter().enumerate() {
-            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            let metrics = Arc::clone(&shard_metrics[shard_id]);
             let (tx, worker, ready_rx) =
                 spawn_shard(shard_id, backend, &config, Arc::clone(&metrics))?;
             shards.push(ShardState {
@@ -592,6 +670,50 @@ struct ShardConfig {
     registry: Option<Arc<ModelRegistry>>,
     faults: Option<Arc<FaultPlan>>,
     tracer: Option<Arc<TraceBuf>>,
+    steal: Option<Arc<StealState>>,
+}
+
+/// A batch the home shard formed and donated to the pool: everything an
+/// executor needs to run it and answer its requests.  The home stamped
+/// `seq` at formation, so execution order cannot perturb the per-model
+/// FIFO witness.
+struct FormedBatch {
+    /// Shard that owns the model's queue and formed this batch.
+    home: usize,
+    /// The home shard's `batch_seq` at formation.
+    seq: u64,
+    /// Bucket (padded batch size) the policy chose.
+    bucket: usize,
+    model: Option<Arc<str>>,
+    batch: Vec<Pending>,
+    /// Per-request queue wait, measured by the home at formation (queue
+    /// wait ends at formation, whichever shard executes).
+    queue_waits: Vec<Duration>,
+    /// Formation instant: batch-form overhead (and, for donated
+    /// batches, deck dwell) is measured from here.
+    formed_at: Instant,
+}
+
+/// Pool-shared steal state: the deck of donated batches plus a handle
+/// to every shard's metrics (a thief credits the *home* shard's
+/// donation counter and queue-wait histogram).  Lives in
+/// [`ShardConfig`], so supervisor-respawned workers reattach to the
+/// same deck.
+struct StealState {
+    deck: Mutex<VecDeque<FormedBatch>>,
+    /// Max donated batches outstanding; past this the home executes
+    /// inline (backpressure so the deck cannot buffer unboundedly).
+    cap: usize,
+    /// Promotion threshold (µs) of `queue depth × EWMA batch cost`.
+    promote_us: u64,
+    /// Every shard's metrics, indexed by shard id.
+    metrics: Vec<Arc<Mutex<Metrics>>>,
+}
+
+impl StealState {
+    fn pop(&self) -> Option<FormedBatch> {
+        lock(&self.deck).pop_front()
+    }
 }
 
 /// Spawn one shard worker; the returned ready channel reports whether its
@@ -611,6 +733,7 @@ fn spawn_shard(
     let registry = config.registry.clone();
     let faults = config.faults.clone();
     let tracer = config.tracer.clone();
+    let steal = config.steal.clone();
     let worker = std::thread::Builder::new()
         .name(format!("pasm-coord-{shard_id}"))
         .spawn(move || {
@@ -632,7 +755,7 @@ fn spawn_shard(
                 // around the kernel call
                 engine.set_tracer(Arc::clone(t), shard_id);
             }
-            worker_loop(engine, policy, rx, metrics, shard_id, faults, tracer);
+            worker_loop(engine, WorkerCtx { policy, rx, metrics, shard_id, faults, tracer, steal });
         })
         .with_context(|| format!("spawn coordinator shard {shard_id}"))?;
     Ok((tx, worker, ready_rx))
@@ -1068,135 +1191,103 @@ fn purge_expired(
     }
 }
 
-fn worker_loop(
-    mut engine: Engine,
+/// Everything one shard worker holds besides its engine: channel,
+/// config handles, and the shared steal state.  Grouped so the loop and
+/// its helpers pass one context instead of eight arguments.
+struct WorkerCtx {
     policy: BatchPolicy,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
     shard_id: usize,
     faults: Option<Arc<FaultPlan>>,
     tracer: Option<Arc<TraceBuf>>,
-) {
-    // one queue per model: a launched batch never mixes models, and the
-    // policy's wait budget applies to each model's oldest request
-    let mut queues: ModelQueues = BTreeMap::new();
-    let mut shutting_down = false;
-    // this shard's batch sequence, stamped into every response: within
-    // one model it is non-decreasing in submission order (FIFO witness)
-    let mut batch_seq: u64 = 0;
+    steal: Option<Arc<StealState>>,
+}
 
-    loop {
-        // 1) drain the channel (non-blocking if we already hold requests,
-        //    blocking otherwise)
-        let held: usize = queues.values().map(VecDeque::len).sum();
-        if held == 0 && !shutting_down {
-            match rx.recv() {
-                Ok(Msg::Request(r, done)) => push(&mut queues, r, done, tracer.as_ref(), shard_id),
-                Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+/// Drain up to `bucket` requests from `queue` into a [`FormedBatch`],
+/// stamping the home shard's `batch_seq` and recording each request's
+/// `batch_formed` trace event.  Queue wait ends here for every drained
+/// request, whichever shard ends up executing the batch.
+fn form_batch(
+    queue: &mut VecDeque<Pending>,
+    model: &Option<Arc<str>>,
+    bucket: usize,
+    batch_seq: &mut u64,
+    ctx: &WorkerCtx,
+) -> FormedBatch {
+    let take = bucket.min(queue.len());
+    let batch: Vec<Pending> = queue.drain(..take).collect();
+    let formed_at = Instant::now();
+    let seq = *batch_seq;
+    *batch_seq += 1;
+    if let Some(t) = &ctx.tracer {
+        for (r, _) in &batch {
+            t.record_at(ctx.shard_id, r.id, Stage::BatchFormed, formed_at, bucket as u64);
+        }
+    }
+    let queue_waits =
+        batch.iter().map(|(r, _)| formed_at.saturating_duration_since(r.enqueued_at)).collect();
+    FormedBatch {
+        home: ctx.shard_id,
+        seq,
+        bucket,
+        model: model.clone(),
+        batch,
+        queue_waits,
+        formed_at,
+    }
+}
+
+impl WorkerCtx {
+    /// Execute one formed batch and answer its requests.  The inline
+    /// path (`fb.home == self.shard_id`, straight from formation) and
+    /// the steal path (a deck pop) share this.  Returns `false` when an
+    /// injected worker kill fired on the steal path: the caller must
+    /// exit its loop (the dropped batch's completion drop-guards have
+    /// already answered every request with [`WORKER_DIED`]).
+    fn execute_formed(
+        &self,
+        engine: &mut Engine,
+        fb: FormedBatch,
+        ewma_us: &mut BTreeMap<Option<Arc<str>>, f64>,
+    ) -> bool {
+        let stolen = fb.home != self.shard_id;
+        if stolen {
+            if let Some(plan) = &self.faults {
+                if plan.should(FaultSite::WorkerKill) {
+                    // die holding the stolen batch: its drop-guards
+                    // answer WORKER_DIED, the home queue is untouched,
+                    // and the supervisor respawns this shard
+                    if let Some(t) = &self.tracer {
+                        t.record(self.shard_id, 0, Stage::Fault, 1);
+                    }
+                    return false;
+                }
+            }
+            if let Some(t) = &self.tracer {
+                for (r, _) in &fb.batch {
+                    t.record(self.shard_id, r.id, Stage::Stolen, fb.home as u64);
+                }
             }
         }
-        loop {
-            match rx.try_recv() {
-                Ok(Msg::Request(r, done)) => push(&mut queues, r, done, tracer.as_ref(), shard_id),
-                Ok(Msg::Shutdown) => {
-                    shutting_down = true;
-                    break;
-                }
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    shutting_down = true;
-                    break;
-                }
-            }
-        }
-
-        purge_expired(&mut queues, &metrics, Instant::now(), tracer.as_ref(), shard_id);
-        queues.retain(|_, q| !q.is_empty());
-        if queues.is_empty() {
-            if shutting_down {
-                return;
-            }
-            continue;
-        }
-
-        // 2) batching decision, per model: among the launchable queues,
-        //    pick the one whose front request has waited longest
-        let mut launch: Option<(Option<Arc<str>>, usize, Instant)> = None;
-        for (model, q) in &queues {
-            let front = q.front().expect("empty queues were dropped above").0.enqueued_at;
-            let expired = shutting_down || front.elapsed() >= policy.max_wait;
-            if let Some(bucket) = policy.decide(q.len(), expired) {
-                let older = match &launch {
-                    None => true,
-                    Some((_, _, t)) => front < *t,
-                };
-                if older {
-                    launch = Some((model.clone(), bucket, front));
-                }
-            }
-        }
-        let Some((model, bucket, _)) = launch else {
-            // wait a beat for more requests (bounded by the wait budget)
-            if let Ok(msg) = rx.recv_timeout(policy.max_wait) {
-                match msg {
-                    Msg::Request(r, done) => push(&mut queues, r, done, tracer.as_ref(), shard_id),
-                    Msg::Shutdown => shutting_down = true,
-                }
-            }
-            continue;
-        };
-
-        // injected faults, decided per launched batch so the storm scales
-        // with traffic (all inert without a plan)
-        if let Some(plan) = &faults {
-            if plan.should(FaultSite::WorkerKill) {
-                // die silently with queues still held: the completion
-                // drop-guards answer every stranded request with a typed
-                // error, and the supervisor respawns this shard
-                if let Some(t) = &tracer {
-                    t.record(shard_id, 0, Stage::Fault, 1);
-                }
-                return;
-            }
-            if let Some(extra) = plan.injected_latency() {
-                if let Some(t) = &tracer {
-                    t.record(shard_id, 0, Stage::Fault, 4);
-                }
-                std::thread::sleep(extra);
-            }
-        }
-
-        // 3) launch
-        let queue = queues.get_mut(&model).expect("launch model has a queue");
-        let take = bucket.min(queue.len());
-        let batch: Vec<Pending> = queue.drain(..take).collect();
-        let requests: Vec<InferenceRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
+        let FormedBatch { home, seq, bucket, model, batch, queue_waits, formed_at } = fb;
         let label: &str = model.as_deref().unwrap_or(DEFAULT_MODEL_LABEL);
-        let started = Instant::now();
-        let seq = batch_seq;
-        batch_seq += 1;
-        // `started` is the batch-formation instant: queue-wait ends here
-        // for every drained request, batch-form overhead starts here
-        if let Some(t) = &tracer {
-            for (r, _) in &batch {
-                t.record_at(shard_id, r.id, Stage::BatchFormed, started, bucket as u64);
-            }
-        }
-        let queue_waits: Vec<Duration> =
-            batch.iter().map(|(r, _)| started.saturating_duration_since(r.enqueued_at)).collect();
-        // Contain kernel panics (e.g. the fixed-point overflow guards on an
-        // extreme input): the batch fails, the worker keeps serving.  The
-        // engine's only cross-batch mutable state is a staging buffer that
-        // every batch fully overwrites, so resuming is sound.
-        let injected_err = faults.as_ref().is_some_and(|p| p.should(FaultSite::ExecError));
+        let requests: Vec<InferenceRequest> = batch.iter().map(|(r, _)| r.clone()).collect();
+        let origin = if stolen { BatchOrigin::Stolen } else { BatchOrigin::Home };
+        // Contain kernel panics (e.g. the fixed-point overflow guards on
+        // an extreme input): the batch fails, the worker keeps serving.
+        // The engine's only cross-batch mutable state is a staging
+        // buffer that every batch fully overwrites, so resuming is
+        // sound.
+        let injected_err = self.faults.as_ref().is_some_and(|p| p.should(FaultSite::ExecError));
         let result = if injected_err {
             Err(anyhow::anyhow!("injected fault: execution error"))
         } else {
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                if faults.as_ref().is_some_and(|p| p.should(FaultSite::BatchPanic)) {
+                if self.faults.as_ref().is_some_and(|p| p.should(FaultSite::BatchPanic)) {
                     panic!("injected fault: kernel panic");
                 }
-                engine.run_batch(&requests, bucket)
+                engine.run_batch_from(&requests, bucket, origin)
             }))
             .unwrap_or_else(|p| {
                 let msg = p
@@ -1210,17 +1301,27 @@ fn worker_loop(
         match result {
             Ok(mut responses) => {
                 for resp in &mut responses {
-                    resp.shard = shard_id;
+                    resp.shard = home;
+                    resp.executed_by = self.shard_id;
                     resp.batch_seq = seq;
                 }
-                // batch-form overhead = wall time around the engine call
-                // minus the kernel execution the engine measured itself
+                // batch-form overhead = wall time since formation minus
+                // the kernel execution the engine measured itself (for
+                // stolen batches this includes deck dwell — overhead the
+                // steal path really added)
                 let compute_us = responses.first().map_or(0, |r| r.compute_us);
                 let batch_form =
-                    started.elapsed().saturating_sub(Duration::from_micros(compute_us));
-                // one uncontended shard-local lock per batch, never a
-                // global one: snapshot readers merge across shards
-                let mut m = lock(&metrics);
+                    formed_at.elapsed().saturating_sub(Duration::from_micros(compute_us));
+                // EWMA of this model's batch cost: the donation signal
+                // (only the entries of models homed here ever matter)
+                let e = ewma_us.entry(model.clone()).or_insert(compute_us as f64);
+                *e = 0.8 * *e + 0.2 * compute_us as f64;
+                let installs = engine.take_replica_installs();
+                // Execute-side counters land on the executing shard,
+                // queue-side counters on the home shard: each event is
+                // counted exactly once, so per-shard counters still sum
+                // to the merged totals under stealing.
+                let mut m = lock(&self.metrics);
                 m.record_batch(label, requests.len(), bucket);
                 if let Some(first) = responses.first() {
                     m.record_hw(first.hw.cycles, first.hw.energy_j);
@@ -1228,34 +1329,254 @@ fn worker_loop(
                 for (req, _) in &batch {
                     m.record_latency(req.enqueued_at.elapsed());
                 }
-                for w in &queue_waits {
-                    m.record_queue_wait(label, *w);
+                if stolen {
+                    m.record_stolen_batch(label);
+                } else {
+                    for w in &queue_waits {
+                        m.record_queue_wait(label, *w);
+                    }
                 }
                 m.record_batch_stages(label, batch_form, compute_us);
+                if installs > 0 {
+                    m.record_replicas_installed(installs);
+                }
                 drop(m);
+                if stolen {
+                    if let Some(st) = &self.steal {
+                        let mut hm = lock(&st.metrics[home]);
+                        hm.record_donated_batch();
+                        for w in &queue_waits {
+                            hm.record_queue_wait(label, *w);
+                        }
+                    }
+                }
                 for ((_, done), resp) in batch.into_iter().zip(responses) {
                     done.deliver(Ok(resp));
                 }
             }
             Err(e) => {
-                let msg = format!("batch failed after {:?}: {e:#}", started.elapsed());
-                if let Some(t) = &tracer {
+                let msg = format!("batch failed after {:?}: {e:#}", formed_at.elapsed());
+                if let Some(t) = &self.tracer {
                     // fault kinds: 2 = execution error, 3 = kernel panic
                     let kind = if msg.contains("execution panicked") { 3 } else { 2 };
                     for (r, _) in &batch {
-                        t.record(shard_id, r.id, Stage::Fault, kind);
+                        t.record(self.shard_id, r.id, Stage::Fault, kind);
                     }
                 }
-                let mut m = lock(&metrics);
+                let mut m = lock(&self.metrics);
                 m.record_failed_batch(label);
-                for w in &queue_waits {
-                    m.record_queue_wait(label, *w);
+                if stolen {
+                    // steal / donated counters measure protocol traffic,
+                    // not success, so a failed stolen batch still counts
+                    m.record_stolen_batch(label);
+                } else {
+                    for w in &queue_waits {
+                        m.record_queue_wait(label, *w);
+                    }
                 }
                 drop(m);
+                if stolen {
+                    if let Some(st) = &self.steal {
+                        let mut hm = lock(&st.metrics[home]);
+                        hm.record_donated_batch();
+                        for w in &queue_waits {
+                            hm.record_queue_wait(label, *w);
+                        }
+                    }
+                }
                 for (_, done) in batch {
                     done.deliver(Err(msg.clone()));
                 }
             }
+        }
+        true
+    }
+}
+
+fn worker_loop(mut engine: Engine, ctx: WorkerCtx) {
+    // one queue per model: a launched batch never mixes models, and the
+    // policy's wait budget applies to each model's oldest request
+    let mut queues: ModelQueues = BTreeMap::new();
+    let mut shutting_down = false;
+    // this shard's batch sequence, stamped into every response at
+    // *formation*: within one model it is non-decreasing in submission
+    // order (FIFO witness) even when the batch executes elsewhere
+    let mut batch_seq: u64 = 0;
+    // per-model EWMA of batch execute cost (µs), fed by the batches this
+    // worker executed: `queue depth × ewma` is the promotion signal
+    let mut ewma_us: BTreeMap<Option<Arc<str>>, f64> = BTreeMap::new();
+    let mut last_evict = Instant::now();
+
+    loop {
+        // 0) steal: drain the donated-batch deck first — ready work
+        //    beats forming more, and the home popping its own donation
+        //    back is the liveness guarantee when no shard is idle
+        if let Some(st) = &ctx.steal {
+            while let Some(fb) = st.pop() {
+                if !ctx.execute_formed(&mut engine, fb, &mut ewma_us) {
+                    return;
+                }
+            }
+            if last_evict.elapsed() >= REPLICA_IDLE {
+                let evicted = engine.evict_idle_replicas(REPLICA_IDLE);
+                if evicted > 0 {
+                    lock(&ctx.metrics).record_replicas_evicted(evicted as u64);
+                }
+                last_evict = Instant::now();
+            }
+        }
+
+        // 1) drain the channel (non-blocking if we already hold
+        //    requests; blocking otherwise — bounded by the deck poll
+        //    interval in steal mode)
+        let held: usize = queues.values().map(VecDeque::len).sum();
+        if held == 0 && !shutting_down {
+            if ctx.steal.is_some() {
+                match ctx.rx.recv_timeout(STEAL_POLL) {
+                    Ok(Msg::Request(r, done)) => {
+                        push(&mut queues, r, done, ctx.tracer.as_ref(), ctx.shard_id)
+                    }
+                    Ok(Msg::Shutdown) => shutting_down = true,
+                    // idle beat: go look at the deck again
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+                }
+            } else {
+                match ctx.rx.recv() {
+                    Ok(Msg::Request(r, done)) => {
+                        push(&mut queues, r, done, ctx.tracer.as_ref(), ctx.shard_id)
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => shutting_down = true,
+                }
+            }
+        }
+        loop {
+            match ctx.rx.try_recv() {
+                Ok(Msg::Request(r, done)) => {
+                    push(&mut queues, r, done, ctx.tracer.as_ref(), ctx.shard_id)
+                }
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+
+        purge_expired(&mut queues, &ctx.metrics, Instant::now(), ctx.tracer.as_ref(), ctx.shard_id);
+        queues.retain(|_, q| !q.is_empty());
+        if queues.is_empty() {
+            if shutting_down {
+                // drain the deck before exiting: a clean shutdown loses
+                // nothing, including batches donated but never stolen
+                if let Some(st) = &ctx.steal {
+                    while let Some(fb) = st.pop() {
+                        if !ctx.execute_formed(&mut engine, fb, &mut ewma_us) {
+                            return;
+                        }
+                    }
+                }
+                return;
+            }
+            continue;
+        }
+
+        // 2) batching decision, per model: among the launchable queues,
+        //    pick the one whose front request has waited longest
+        let mut launch: Option<(Option<Arc<str>>, usize, Instant)> = None;
+        for (model, q) in &queues {
+            let front = q.front().expect("empty queues were dropped above").0.enqueued_at;
+            let expired = shutting_down || front.elapsed() >= ctx.policy.max_wait;
+            if let Some(bucket) = ctx.policy.decide(q.len(), expired) {
+                let older = match &launch {
+                    None => true,
+                    Some((_, _, t)) => front < *t,
+                };
+                if older {
+                    launch = Some((model.clone(), bucket, front));
+                }
+            }
+        }
+        let Some((model, bucket, _)) = launch else {
+            // wait a beat for more requests (bounded by the wait budget,
+            // and by the deck poll interval in steal mode)
+            let wait = match &ctx.steal {
+                Some(_) => ctx.policy.max_wait.min(STEAL_POLL),
+                None => ctx.policy.max_wait,
+            };
+            if let Ok(msg) = ctx.rx.recv_timeout(wait) {
+                match msg {
+                    Msg::Request(r, done) => {
+                        push(&mut queues, r, done, ctx.tracer.as_ref(), ctx.shard_id)
+                    }
+                    Msg::Shutdown => shutting_down = true,
+                }
+            }
+            continue;
+        };
+
+        // injected faults, decided per launched batch so the storm scales
+        // with traffic (all inert without a plan)
+        if let Some(plan) = &ctx.faults {
+            if plan.should(FaultSite::WorkerKill) {
+                // die silently with queues still held: the completion
+                // drop-guards answer every stranded request with a typed
+                // error, and the supervisor respawns this shard
+                if let Some(t) = &ctx.tracer {
+                    t.record(ctx.shard_id, 0, Stage::Fault, 1);
+                }
+                return;
+            }
+            if let Some(extra) = plan.injected_latency() {
+                if let Some(t) = &ctx.tracer {
+                    t.record(ctx.shard_id, 0, Stage::Fault, 4);
+                }
+                std::thread::sleep(extra);
+            }
+        }
+
+        // 3) launch
+        let queue = queues.get_mut(&model).expect("launch model has a queue");
+        // Steal mode: when the model's load signal clears the promotion
+        // threshold, donate formed batches to the deck instead of
+        // executing inline.  The home stays the only former — seqs are
+        // stamped here, in FIFO order — but the whole pool executes.
+        if let Some(st) = &ctx.steal {
+            let ewma = ewma_us.get(&model).copied().unwrap_or(0.0);
+            let hot = (queue.len() as f64 * ewma) >= st.promote_us as f64;
+            if hot && !shutting_down {
+                let mut donated = false;
+                let mut next_bucket = Some(bucket);
+                while let Some(b) = next_bucket {
+                    // advisory backpressure: a full deck means the pool
+                    // is already saturated with donated work
+                    if lock(&st.deck).len() >= st.cap {
+                        break;
+                    }
+                    let fb = form_batch(queue, &model, b, &mut batch_seq, &ctx);
+                    lock(&st.deck).push_back(fb);
+                    donated = true;
+                    next_bucket = match queue.front() {
+                        Some((front, _)) => {
+                            let expired = front.enqueued_at.elapsed() >= ctx.policy.max_wait;
+                            ctx.policy.decide(queue.len(), expired)
+                        }
+                        None => None,
+                    };
+                }
+                if donated {
+                    // step 0 pops the deck — possibly our own batch
+                    continue;
+                }
+            }
+        }
+        let fb = form_batch(queue, &model, bucket, &mut batch_seq, &ctx);
+        if !ctx.execute_formed(&mut engine, fb, &mut ewma_us) {
+            return;
         }
     }
 }

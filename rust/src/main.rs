@@ -10,10 +10,11 @@
 //!             [--poll-ms M] [--pack-midrun NAME=BINS] [--kernel K] [--shards N]
 //! repro serve --listen ADDR [--evented] [--models <dir>] [--fixed] [--max-conns N]
 //!             [--max-inflight N] [--port-file PATH] [--for-s SECS] [--shards N]
+//!             [--steal on|off] [--steal-promote-us US]
 //!             [--kernel per-tap|histogram|auto] [--chaos seed=7,panic=0.05,reset=0.02]
 //! repro bench-net --addr ADDR [--requests N] [--rate HZ] [--conns C]
 //!             [--models a,b,c] [--expect-multi-shard] [--stage-breakdown]
-//!             [--pipeline-depth D] [--idle-conns N]
+//!             [--zipf S] [--expect-steals] [--pipeline-depth D] [--idle-conns N]
 //!             [--retries R] [--retry-seed S] [--deadline-ms MS] [--expect-faults]
 //! repro trace --addr ADDR [--id N] [--limit N] [--json] [--require-complete]
 //! repro perf-gate --baseline PATH --current PATH [--max-req-regress F]
@@ -101,10 +102,11 @@ const USAGE: &str = "usage: repro report|simulate|pack|serve|bench-net|trace|per
   serve --listen 127.0.0.1:7878 [--evented] [--workers N] [--max-pipeline 32]
         [--models <dir>] [--fixed] [--max-conns 64] [--max-inflight 256]
         [--port-file PATH] [--for-s SECS] [--shards N]
+        [--steal on|off] [--steal-promote-us US]
         [--kernel per-tap|histogram|auto] [--chaos seed=7,panic=0.05,reset=0.02]
   bench-net --addr 127.0.0.1:7878 [--requests 256] [--rate 500] [--conns 8]
         [--models digits-b8,digits-b16] [--expect-multi-shard] [--stage-breakdown]
-        [--pipeline-depth 32] [--idle-conns 5000]
+        [--zipf 1.1] [--expect-steals] [--pipeline-depth 32] [--idle-conns 5000]
         [--retries 3] [--retry-seed 29] [--deadline-ms 250] [--expect-faults]
   trace --addr 127.0.0.1:7878 [--id N] [--limit 512] [--json] [--require-complete]
   perf-gate --baseline BENCH_baseline.json --current BENCH_serving.json
@@ -177,6 +179,32 @@ fn apply_chaos(
 ) -> anyhow::Result<CoordinatorBuilder> {
     match flags.get("chaos") {
         Some(spec) => Ok(builder.fault_plan(FaultPlan::parse(spec)?)),
+        None => Ok(builder),
+    }
+}
+
+/// Apply `--steal on|off` (default off: bit-for-bit legacy routing) to a
+/// coordinator builder.  Like [`kernel_flag`], an unknown value is a
+/// hard error — an elasticity bench that silently ran with stealing
+/// disabled would measure nothing.  `--steal-promote-us US` tunes the
+/// hot-model promotion threshold (queue depth × EWMA batch cost, in µs;
+/// 0 donates every formed batch, which is the deterministic test mode).
+fn apply_steal(
+    builder: CoordinatorBuilder,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<CoordinatorBuilder> {
+    let builder = match flags.get("steal").map(String::as_str) {
+        Some("on") => builder.steal(true),
+        Some("off") | None => builder,
+        Some(other) => anyhow::bail!("--steal expects on|off, got '{other}'"),
+    };
+    match flags.get("steal-promote-us") {
+        Some(v) => {
+            let us: u64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--steal-promote-us expects a µs threshold, got '{v}'")
+            })?;
+            Ok(builder.steal_promote_us(us))
+        }
         None => Ok(builder),
     }
 }
@@ -318,7 +346,7 @@ fn cmd_serve_models(flags: &HashMap<String, String>, dir: &str) -> anyhow::Resul
         .registry(Arc::clone(&registry))
         .default_model(&default_name)
         .batch_policy(BatchPolicy::default());
-    let coord = apply_chaos(apply_shards(builder, flags)?, flags)?.build()?;
+    let coord = apply_steal(apply_chaos(apply_shards(builder, flags)?, flags)?, flags)?.build()?;
     let mut expected = registry.names();
     // every model (including a --pack-midrun addition) must be reachable
     // in both the pre- and post-swap halves of the round-robin
@@ -537,7 +565,8 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
         backend = backend.with_kernel(kernel_flag(flags)?);
         builder.backend(backend)
     };
-    let coord = Arc::new(apply_chaos(apply_shards(builder, flags)?, flags)?.build()?);
+    let coord =
+        Arc::new(apply_steal(apply_chaos(apply_shards(builder, flags)?, flags)?, flags)?.build()?);
 
     let mut server = if flags.contains_key("evented") {
         bind_evented(addr, &coord, flags)?
@@ -630,6 +659,14 @@ fn cmd_serve_listen(flags: &HashMap<String, String>, addr: &str) -> anyhow::Resu
 /// is the chaos-smoke mode: hard errors are tolerated (the server is
 /// injecting them on purpose), but every request must still reach a
 /// terminal reply and at least one must succeed.
+///
+/// `--zipf S` skews the model mix with a Zipf(S) law over `--models`
+/// (first id hottest; bare `--zipf` means S = 1.1) — the multi-tenant
+/// skew that saturates one home shard.  `--expect-steals` is the
+/// elasticity smoke on top: the server's metrics frame must report at
+/// least one cross-shard steal, the hot model must have been executed
+/// by a thief shard, and at least two shards must have executed
+/// batches (fails unless the server runs `--steal on --shards >= 2`).
 fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = flags
         .get("addr")
@@ -649,6 +686,16 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .get("models")
         .map(|spec| spec.split(',').map(|s| Some(s.trim().to_string())).collect())
         .unwrap_or_default();
+    let zipf_s: Option<f64> = match flags.get("zipf").map(String::as_str) {
+        Some("true") => Some(1.1),
+        Some(v) => {
+            Some(v.parse().map_err(|_| anyhow::anyhow!("--zipf expects an exponent, got '{v}'"))?)
+        }
+        None => None,
+    };
+    if zipf_s.is_some() {
+        anyhow::ensure!(models.len() >= 2, "--zipf needs --models with at least two ids");
+    }
 
     let mut rng = Rng::new(29);
     let pool: Vec<Tensor<f32>> = (0..64).map(|i| render_digit(&mut rng, i % 10, 0.05)).collect();
@@ -656,6 +703,7 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         connections: conns,
         retry: RetryPolicy::standard(retries + 1, retry_seed),
         deadline_ms,
+        zipf_s,
         ..NetLoadOptions::default()
     };
     let r = pasm_accel::coordinator::loadgen::run_open_loop_net(
@@ -680,6 +728,26 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         r.deadline_misses,
         r.retries
     );
+    if zipf_s.is_some() {
+        // under a skewed mix the aggregate hides the hot model's tail;
+        // show the heaviest models from the per-model breakdown
+        let mut by_traffic: Vec<_> = r.per_model.iter().collect();
+        by_traffic.sort_by(|a, b| b.1.requests.cmp(&a.1.requests).then(a.0.cmp(b.0)));
+        for (name, ml) in by_traffic.iter().take(5) {
+            let pct =
+                |p: f64| ml.percentile_us(p).map_or_else(|| "-".to_string(), |v| v.to_string());
+            println!(
+                "  model {name}: {} request(s), {:.1} req/s, p50 {} us, p99 {} us \
+                 ({} errors, {} deadline miss(es))",
+                ml.requests,
+                ml.achieved_hz,
+                pct(50.0),
+                pct(99.0),
+                ml.errors,
+                ml.deadline_misses
+            );
+        }
+    }
     // every request must reach a terminal outcome either way; without
     // --expect-faults a hard error also fails the run outright
     let answered = r.latencies_us.len() + r.errors + r.overloaded + r.deadline_misses;
@@ -711,8 +779,13 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let active = m.shards.iter().filter(|s| s.batches > 0).count();
     println!("server shards: {} total, {active} served batches", m.shards.len());
     for (i, s) in m.shards.iter().enumerate() {
+        let steal_note = if s.stolen_batches > 0 || s.donated_batches > 0 {
+            format!(", {} stolen / {} donated", s.stolen_batches, s.donated_batches)
+        } else {
+            String::new()
+        };
         println!(
-            "  shard {i}: {} request(s) in {} batch(es) ({} failed)",
+            "  shard {i}: {} request(s) in {} batch(es) ({} failed{steal_note})",
             s.requests, s.batches, s.failed_batches
         );
     }
@@ -742,6 +815,37 @@ fn cmd_bench_net(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             "expected more than one shard to serve batches, but only {active} of {} did \
              (is the server running with --shards > 1 and multiple model ids?)",
             m.shards.len()
+        );
+    }
+    if flags.contains_key("expect-steals") {
+        let hot = models
+            .first()
+            .cloned()
+            .flatten()
+            .context("--expect-steals needs --models (the first id is the hot model)")?;
+        anyhow::ensure!(
+            m.stolen_batches >= 1,
+            "expected cross-shard steals but the server reports none \
+             (is it running --steal on with --shards >= 2?)"
+        );
+        let hot_stolen = m.per_model.get(&hot).map(|c| c.stolen_batches).unwrap_or(0);
+        anyhow::ensure!(
+            hot_stolen >= 1,
+            "hot model '{hot}' was never executed by a thief shard \
+             ({} steal(s) happened, all for other models)",
+            m.stolen_batches
+        );
+        anyhow::ensure!(
+            active >= 2,
+            "hot-model traffic stayed on {active} shard(s); elasticity needs >= 2 executing"
+        );
+        println!(
+            "steals: {} stolen / {} donated batch(es), hot '{hot}' stolen {hot_stolen}; \
+             replicas installed {} / evicted {}",
+            m.stolen_batches,
+            m.donated_batches,
+            m.replicas_installed,
+            m.replicas_evicted
         );
     }
 
@@ -931,10 +1035,15 @@ fn print_trace_json(events: &[TraceEvent], spans: &[Span]) {
 /// snapshots; the gate compares the **planned** path at the largest
 /// load present in both files and fails when req/s regressed more than
 /// `--max-req-regress` (default 10%) or p99 grew more than
-/// `--max-p99-growth` (default 15%).  `--allow-regression` downgrades
-/// a failure to a loud warning — the documented one-off override for a
-/// noisy runner; refreshing `BENCH_baseline.json` from a quiet full
-/// run is the durable fix (see docs/ARCHITECTURE.md).
+/// `--max-p99-growth` (default 15%).  It then compares the `kernels`
+/// section: for every codebook size present in both files, the
+/// histogram-vs-per-tap throughput ratio must not fall more than
+/// `--max-req-regress` below the baseline — a kernel regression fails
+/// the gate even when the serving-path numbers still pass.
+/// `--allow-regression` downgrades a failure to a loud warning — the
+/// documented one-off override for a noisy runner; refreshing
+/// `BENCH_baseline.json` from a quiet full run is the durable fix (see
+/// docs/ARCHITECTURE.md).
 fn cmd_perf_gate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let baseline_path = flags.get("baseline").context(
         "usage: repro perf-gate --baseline BENCH_baseline.json --current BENCH_serving.json",
@@ -978,32 +1087,105 @@ fn cmd_perf_gate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "  p99:   baseline {b_p99:.0} us -> current {c_p99:.0} us ({:+.1}%)",
         p99_growth * 100.0
     );
+    let allow = flags.contains_key("allow-regression");
     if req_regress <= max_req_regress && p99_growth <= max_p99_growth {
         println!(
             "ok: within gate (req/s regression <= {:.0}%, p99 growth <= {:.0}%)",
             max_req_regress * 100.0,
             max_p99_growth * 100.0
         );
-        return Ok(());
-    }
-    if flags.contains_key("allow-regression") {
+    } else if allow {
         println!(
             "REGRESSION beyond gate tolerated by --allow-regression — if the new numbers are \
              intended, refresh BENCH_baseline.json from a full quiet-machine run"
         );
+    } else {
+        anyhow::bail!(
+            "perf regression beyond gate: req/s {:+.1}% (limit -{:.0}%), p99 {:+.1}% \
+             (limit +{:.0}%)\n\
+             if this change intentionally trades throughput, refresh the baseline: run\n\
+             `cargo bench --bench coordinator` on a quiet machine, then\n\
+             `cp BENCH_serving.json BENCH_baseline.json` and commit both; for a one-off noisy\n\
+             runner, re-run with --allow-regression (see docs/ARCHITECTURE.md, Observability)",
+            -req_regress * 100.0,
+            max_req_regress * 100.0,
+            p99_growth * 100.0,
+            max_p99_growth * 100.0
+        );
+    }
+    check_kernels_gate(baseline_path, current_path, max_req_regress, allow)
+}
+
+/// Kernel-comparison leg of the perf gate: at every codebook size B
+/// present in both snapshots, the histogram-vs-per-tap throughput ratio
+/// must not fall more than `max_regress` below the baseline ratio.
+/// Ratios of two same-machine measurements are far less noisy than the
+/// absolute req/s, so this catches a histogram-kernel regression even
+/// on runners whose absolute throughput drifts.  Vacuous when either
+/// file predates the `kernels` section (e.g. a placeholder baseline).
+fn check_kernels_gate(
+    baseline_path: &str,
+    current_path: &str,
+    max_regress: f64,
+    allow: bool,
+) -> anyhow::Result<()> {
+    let base = kernel_ratios(baseline_path)?;
+    let cur = kernel_ratios(current_path)?;
+    if base.is_empty() || cur.is_empty() {
+        println!("perf gate, kernels: no measured kernel rows on both sides — skipping");
+        return Ok(());
+    }
+    let mut failed = Vec::new();
+    for (bins, b) in &base {
+        let Some(c) = cur.get(bins) else { continue };
+        let regress = (b - c) / b;
+        println!(
+            "perf gate, kernels B={bins}: histogram/per-tap ratio baseline {b:.2} -> \
+             current {c:.2} ({:+.1}%)",
+            -regress * 100.0
+        );
+        if regress > max_regress {
+            failed.push(*bins);
+        }
+    }
+    if failed.is_empty() {
+        println!("ok: kernel ratios within gate (regression <= {:.0}%)", max_regress * 100.0);
+        return Ok(());
+    }
+    if allow {
+        println!("kernel ratio REGRESSION at B={failed:?} tolerated by --allow-regression");
         return Ok(());
     }
     anyhow::bail!(
-        "perf regression beyond gate: req/s {:+.1}% (limit -{:.0}%), p99 {:+.1}% (limit +{:.0}%)\n\
-         if this change intentionally trades throughput, refresh the baseline: run\n\
-         `cargo bench --bench coordinator` on a quiet machine, then\n\
-         `cp BENCH_serving.json BENCH_baseline.json` and commit both; for a one-off noisy\n\
-         runner, re-run with --allow-regression (see docs/ARCHITECTURE.md, Observability)",
-        -req_regress * 100.0,
-        max_req_regress * 100.0,
-        p99_growth * 100.0,
-        max_p99_growth * 100.0
+        "kernel regression: histogram/per-tap ratio fell more than {:.0}% at B={failed:?} — \
+         the count-then-multiply kernel lost ground; profile before refreshing the baseline",
+        max_regress * 100.0
     );
+}
+
+/// `kernels` rows of a `BENCH_serving.json` snapshot: bins → measured
+/// histogram/per-tap throughput ratio.  Empty when the file carries no
+/// `kernels` array (placeholder or pre-section snapshot).
+fn kernel_ratios(path: &str) -> anyhow::Result<BTreeMap<u64, f64>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let Some(rows) = doc.get("kernels").and_then(Json::as_arr) else {
+        return Ok(BTreeMap::new());
+    };
+    let mut out = BTreeMap::new();
+    for r in rows {
+        let field = |k: &str| {
+            r.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{path}: kernel row missing numeric '{k}'"))
+        };
+        let bins = field("bins")? as u64;
+        let per_tap = field("per_tap_req_s")?;
+        let hist = field("histogram_req_s")?;
+        anyhow::ensure!(per_tap > 0.0, "{path}: zero per-tap throughput at B={bins}");
+        out.insert(bins, hist / per_tap);
+    }
+    Ok(out)
 }
 
 /// Planned-path rows of a `BENCH_serving.json` snapshot: load →
@@ -1077,7 +1259,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "pjrt" => anyhow::bail!("pjrt backend not compiled in (build with --features pjrt)"),
         other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
     };
-    let coord = apply_chaos(apply_shards(builder, flags)?, flags)?.build()?;
+    let coord = apply_steal(apply_chaos(apply_shards(builder, flags)?, flags)?, flags)?.build()?;
     println!("serving on '{}' backend ({} shard(s))", coord.metrics().backend, coord.shards());
 
     let t0 = std::time::Instant::now();

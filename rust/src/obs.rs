@@ -311,6 +311,10 @@ pub enum Stage {
     /// The request was answered with a retryable error code; a client
     /// retry arrives as a fresh request id, i.e. a new span.
     Retried = 9,
+    /// The request's formed batch was stolen by an idle shard: it
+    /// executed on a shard other than its model's home (`aux` is the
+    /// home shard id; the event's `shard` is the executing shard).
+    Stolen = 10,
 }
 
 impl Stage {
@@ -339,6 +343,7 @@ impl Stage {
             Stage::DeadlineDrop => "deadline_drop",
             Stage::Fault => "fault",
             Stage::Retried => "retried",
+            Stage::Stolen => "stolen",
         }
     }
 
@@ -355,6 +360,7 @@ impl Stage {
             Stage::DeadlineDrop,
             Stage::Fault,
             Stage::Retried,
+            Stage::Stolen,
         ]
         .into_iter()
         .find(|st| st.as_str() == s)
@@ -372,6 +378,7 @@ impl Stage {
             7 => "deadline_drop",
             8 => "fault",
             9 => "retried",
+            10 => "stolen",
             _ => return None,
         })
     }
@@ -754,6 +761,7 @@ mod tests {
             Stage::DeadlineDrop,
             Stage::Fault,
             Stage::Retried,
+            Stage::Stolen,
         ] {
             assert_eq!(Stage::parse(stage.as_str()), Some(stage));
             assert_eq!(Stage::from_u8(stage as u8), Some(stage));

@@ -251,6 +251,21 @@ pub struct MetricsFrame {
     /// Shard workers respawned by the supervisor after dying
     /// (v1-additive, absent decodes as 0).
     pub shard_restarts: u64,
+    /// Batches executed by a non-home shard under steal mode, summed
+    /// across shards (v1-additive, absent decodes as 0; the canonical
+    /// encoding omits it when 0, so a steal-off server's frames stay
+    /// byte-identical to pre-elasticity builds).
+    pub stolen_batches: u64,
+    /// Batches home shards donated to the steal deck that another shard
+    /// executed — equals `stolen_batches` in a merged snapshot
+    /// (v1-additive, omitted when 0).
+    pub donated_batches: u64,
+    /// Replica executables lazily compiled on thief shards
+    /// (v1-additive, omitted when 0).
+    pub replicas_installed: u64,
+    /// Replica executables evicted after their model cooled
+    /// (v1-additive, omitted when 0).
+    pub replicas_evicted: u64,
     /// End-to-end latency percentiles (µs); `None` until data arrives.
     pub p50_us: Option<u64>,
     /// 90th percentile latency (µs).
@@ -518,6 +533,21 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put(&mut m, "failed_batches", uint(f.failed_batches));
             put(&mut m, "deadline_misses", uint(f.deadline_misses));
             put(&mut m, "shard_restarts", uint(f.shard_restarts));
+            // steal / replica counters are v1-additive and omitted when
+            // 0: a steal-off server's frames stay byte-identical to
+            // pre-elasticity builds
+            if f.stolen_batches != 0 {
+                put(&mut m, "stolen_batches", uint(f.stolen_batches));
+            }
+            if f.donated_batches != 0 {
+                put(&mut m, "donated_batches", uint(f.donated_batches));
+            }
+            if f.replicas_installed != 0 {
+                put(&mut m, "replicas_installed", uint(f.replicas_installed));
+            }
+            if f.replicas_evicted != 0 {
+                put(&mut m, "replicas_evicted", uint(f.replicas_evicted));
+            }
             put(&mut m, "p50_us", opt_u64_json(f.p50_us));
             put(&mut m, "p90_us", opt_u64_json(f.p90_us));
             put(&mut m, "p99_us", opt_u64_json(f.p99_us));
@@ -528,6 +558,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put(&mut cm, "batches", uint(c.batches));
                 put(&mut cm, "failed_batches", uint(c.failed_batches));
                 put(&mut cm, "deadline_misses", uint(c.deadline_misses));
+                if c.stolen_batches != 0 {
+                    put(&mut cm, "stolen_batches", uint(c.stolen_batches));
+                }
                 per_model.insert(name.clone(), Json::Obj(cm));
             }
             put(&mut m, "per_model", Json::Obj(per_model));
@@ -540,6 +573,12 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                     put(&mut sm, "batches", uint(s.batches));
                     put(&mut sm, "failed_batches", uint(s.failed_batches));
                     put(&mut sm, "deadline_misses", uint(s.deadline_misses));
+                    if s.stolen_batches != 0 {
+                        put(&mut sm, "stolen_batches", uint(s.stolen_batches));
+                    }
+                    if s.donated_batches != 0 {
+                        put(&mut sm, "donated_batches", uint(s.donated_batches));
+                    }
                     Json::Obj(sm)
                 })
                 .collect();
@@ -877,6 +916,9 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                         deadline_misses: opt_u64(c, "deadline_misses")
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
                             .unwrap_or(0),
+                        stolen_batches: opt_u64(c, "stolen_batches")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                            .unwrap_or(0),
                     },
                 );
             }
@@ -898,6 +940,12 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                         failed_batches: need_u64(s, "failed_batches")
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
                         deadline_misses: opt_u64(s, "deadline_misses")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                            .unwrap_or(0),
+                        stolen_batches: opt_u64(s, "stolen_batches")
+                            .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                            .unwrap_or(0),
+                        donated_batches: opt_u64(s, "donated_batches")
                             .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
                             .unwrap_or(0),
                     });
@@ -943,6 +991,18 @@ pub fn decode(payload: &[u8]) -> Result<Frame, ErrorFrame> {
                     .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
                     .unwrap_or(0),
                 shard_restarts: opt_u64(obj, "shard_restarts")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                    .unwrap_or(0),
+                stolen_batches: opt_u64(obj, "stolen_batches")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                    .unwrap_or(0),
+                donated_batches: opt_u64(obj, "donated_batches")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                    .unwrap_or(0),
+                replicas_installed: opt_u64(obj, "replicas_installed")
+                    .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
+                    .unwrap_or(0),
+                replicas_evicted: opt_u64(obj, "replicas_evicted")
                     .map_err(|m| fail(ErrorCode::InvalidFrame, m))?
                     .unwrap_or(0),
                 p50_us: opt_u64(obj, "p50_us").map_err(|m| fail(ErrorCode::InvalidFrame, m))?,
@@ -1155,6 +1215,10 @@ mod tests {
                 failed_batches: 0,
                 deadline_misses: 2,
                 shard_restarts: 1,
+                stolen_batches: 3,
+                donated_batches: 3,
+                replicas_installed: 1,
+                replicas_evicted: 1,
                 p50_us: Some(950),
                 p90_us: Some(1800),
                 p99_us: None,
@@ -1165,6 +1229,7 @@ mod tests {
                         batches: 6,
                         failed_batches: 0,
                         deadline_misses: 2,
+                        stolen_batches: 3,
                     },
                 )]
                 .into_iter()
@@ -1175,12 +1240,16 @@ mod tests {
                         batches: 6,
                         failed_batches: 0,
                         deadline_misses: 2,
+                        stolen_batches: 0,
+                        donated_batches: 3,
                     },
                     ShardCounters {
                         requests: 18,
                         batches: 6,
                         failed_batches: 0,
                         deadline_misses: 0,
+                        stolen_batches: 3,
+                        donated_batches: 0,
                     },
                 ],
                 latency: hist(&[950, 1800, 120]),
@@ -1293,6 +1362,41 @@ mod tests {
             Frame::Metrics(m) => {
                 assert_eq!(m.requests, 1);
                 assert!(m.shards.is_empty());
+            }
+            other => panic!("expected metrics, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn steal_counters_are_v1_additive_and_omitted_when_zero() {
+        // a steal-off (or pre-elasticity) server reports all-zero steal
+        // counters: the canonical encoding omits every one of them, so
+        // its frames are byte-identical to pre-elasticity builds
+        let quiet = ModelCounters { requests: 1, batches: 1, ..ModelCounters::default() };
+        let frame = Frame::Metrics(MetricsFrame {
+            backend: "native".into(),
+            requests: 1,
+            batches: 1,
+            per_model: [("m".to_string(), quiet)].into_iter().collect(),
+            shards: vec![ShardCounters { requests: 1, batches: 1, ..ShardCounters::default() }],
+            ..MetricsFrame::default()
+        });
+        let text = String::from_utf8(encode(&frame)).unwrap();
+        let steal_fields =
+            ["stolen_batches", "donated_batches", "replicas_installed", "replicas_evicted"];
+        for field in steal_fields {
+            assert!(!text.contains(field), "zero '{field}' must be omitted: {text}");
+        }
+        // absent on decode (an older peer) means zero everywhere
+        match decode(text.as_bytes()).unwrap() {
+            Frame::Metrics(m) => {
+                assert_eq!(m.stolen_batches, 0);
+                assert_eq!(m.donated_batches, 0);
+                assert_eq!(m.replicas_installed, 0);
+                assert_eq!(m.replicas_evicted, 0);
+                assert_eq!(m.per_model["m"].stolen_batches, 0);
+                assert_eq!(m.shards[0].stolen_batches, 0);
+                assert_eq!(m.shards[0].donated_batches, 0);
             }
             other => panic!("expected metrics, got {other:?}"),
         }

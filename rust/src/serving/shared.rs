@@ -215,6 +215,10 @@ pub(crate) fn metrics_frame(coord: &Coordinator, net: NetCounters) -> Frame {
         failed_batches: m.failed_batches,
         deadline_misses: m.deadline_misses,
         shard_restarts: coord.shard_restarts(),
+        stolen_batches: m.stolen_batches,
+        donated_batches: m.donated_batches,
+        replicas_installed: m.replicas_installed,
+        replicas_evicted: m.replicas_evicted,
         p50_us: m.percentile_us(50.0),
         p90_us: m.percentile_us(90.0),
         p99_us: m.percentile_us(99.0),

@@ -7,6 +7,9 @@
 //!   error, overload, or deadline miss — never silence);
 //! * the server stays up and keeps answering after the storm;
 //! * a killed shard worker is respawned and its shard keeps serving;
+//! * a thief shard killed mid-steal fails its in-flight batch with a
+//!   typed `UNAVAILABLE`, the home queue keeps draining, and the
+//!   restart counter moves;
 //! * a torn artifact swap keeps the previous version serving;
 //! * a plan with zero probabilities injects exactly nothing.
 
@@ -19,10 +22,12 @@ use pasm_accel::model_store::{ModelRegistry, save_file};
 use pasm_accel::quant::fixed::QFormat;
 #[cfg(unix)]
 use pasm_accel::serving::{EventedConfig, EventedServer};
-use pasm_accel::serving::{Client, MetricsFrame, RetryPolicy, Server, ServerConfig};
+use pasm_accel::obs::Stage;
+use pasm_accel::serving::{Client, ErrorCode, MetricsFrame, RetryPolicy, Server, ServerConfig};
 use pasm_accel::tensor::Tensor;
 use std::net::SocketAddr;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -204,6 +209,95 @@ fn killed_shard_workers_respawn_and_the_shard_keeps_serving() {
             coord.fault_plan().expect("plan attached").counters().worker_kills > 0,
             "{kind}: kill counter must move"
         );
+        server.shutdown();
+    }
+}
+
+#[test]
+fn a_thief_killed_mid_steal_fails_typed_and_the_home_keeps_draining() {
+    for kind in kinds() {
+        // one model at four shards: every request routes to alpha's home,
+        // so the other three shards never launch a local batch.  Their
+        // only kill site is the stolen-batch pop — a worker-kill fault
+        // event on a non-home shard is therefore *proof* of a thief
+        // dying mid-steal, not a home death.
+        let registry = Arc::new(ModelRegistry::new());
+        registry.insert("alpha", encoded(1, 4));
+        let plan = FaultPlan::seeded(13).with(FaultSite::WorkerKill, 0.25);
+        let coord = Arc::new(
+            CoordinatorBuilder::new()
+                .registry(Arc::clone(&registry))
+                .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+                .shards(4)
+                .steal(true)
+                .steal_promote_us(0)
+                .fault_plan(plan)
+                .build()
+                .expect("coordinator startup"),
+        );
+        let mut server = TestServer::bind(kind, &coord);
+        let addr = server.local_addr();
+        let home = coord.shard_for(Some("alpha"));
+
+        // four concurrent no-retry clients keep the home queue deep
+        // enough that formed batches sit on the deck long enough to be
+        // stolen; each records whether it saw a typed UNAVAILABLE
+        let stop = Arc::new(AtomicBool::new(false));
+        let unavailable = Arc::new(AtomicBool::new(false));
+        let stormers: Vec<_> = (0..4u64)
+            .map(|w| {
+                let stop = Arc::clone(&stop);
+                let unavailable = Arc::clone(&unavailable);
+                std::thread::spawn(move || {
+                    let image = render_digit(&mut Rng::new(40 + w), w as usize % 10, 0.05);
+                    let Ok(mut client) = Client::connect(addr) else { return };
+                    while !stop.load(Ordering::Relaxed) {
+                        if let Err(e) = client.infer(Some("alpha"), &image) {
+                            if e.server_code() == Some(ErrorCode::Unavailable) {
+                                unavailable.store(true, Ordering::Relaxed);
+                            }
+                            let _ = client.reset();
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let tracer = Arc::clone(coord.tracer().expect("tracing is on by default"));
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let thief_killed = loop {
+            let seen = tracer
+                .snapshot()
+                .iter()
+                .any(|e| e.stage == Stage::Fault && e.aux == 1 && e.shard != home);
+            if seen {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        stop.store(true, Ordering::Relaxed);
+        for s in stormers {
+            let _ = s.join();
+        }
+        assert!(thief_killed, "{kind}: no thief died mid-steal within 30s");
+        assert!(
+            unavailable.load(Ordering::Relaxed),
+            "{kind}: in-flight requests on a killed thief must fail typed UNAVAILABLE"
+        );
+        let m = coord.metrics();
+        assert!(m.stolen_batches >= 1, "{kind}: the storm never stole a batch");
+        assert!(coord.shard_restarts() >= 1, "{kind}: a killed thief must be respawned");
+
+        // the home queue keeps draining: a retrying client still gets
+        // answers through the (still ongoing) kill storm
+        let image = render_digit(&mut Rng::new(3), 4, 0.05);
+        let mut client =
+            Client::connect(addr).expect("connect").with_retry(RetryPolicy::standard(8, 31));
+        let served = (0..20).filter(|_| client.infer(Some("alpha"), &image).is_ok()).count();
+        assert!(served > 0, "{kind}: the home queue stopped draining after a thief death");
         server.shutdown();
     }
 }

@@ -3,6 +3,15 @@
 //! through batch sequence numbers; no batch mixes models at any shard
 //! count; a mid-run hot-swap goes live on the owning shard's next batch
 //! without touching the others; shutdown drains every shard.
+//!
+//! With cross-shard batch stealing enabled the same witnesses must keep
+//! holding: `batch_seq` stays monotone per model (the home shard is the
+//! only batch former, so stamping happens before handoff), responses
+//! attribute `shard` to the home and `executed_by` to whichever shard
+//! ran the batch, no thief-executed batch mixes models, stealing off is
+//! bit-for-bit the legacy single-owner routing, and per-shard counters
+//! sum exactly to the merged snapshot even when a batch is formed on
+//! one shard and executed on another.
 
 use pasm_accel::cnn::data::{render_digit, Rng};
 use pasm_accel::cnn::network::{ConvVariant, DigitsCnn, EncodedCnn};
@@ -45,6 +54,31 @@ fn pool(registry: &Arc<ModelRegistry>, shards: usize) -> Coordinator {
 
 fn bits(xs: &[f32]) -> Vec<u32> {
     xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A pool with cross-shard batch stealing on and the promotion
+/// threshold at zero: every formed batch with a costed EWMA is donated
+/// to the deck, so idle shards steal eagerly and deterministically.
+fn steal_pool(registry: &Arc<ModelRegistry>, shards: usize) -> Coordinator {
+    CoordinatorBuilder::new()
+        .registry(Arc::clone(registry))
+        .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+        .shards(shards)
+        .steal(true)
+        .steal_promote_us(0)
+        .build()
+        .expect("coordinator startup")
+}
+
+/// Hot-skewed assignment: 3/4 of traffic to "alpha", the rest
+/// round-robined over the remaining models — enough home-side backlog
+/// to donate, enough idle capacity elsewhere to steal.
+fn hot_skewed(i: usize) -> &'static str {
+    if i % 4 == 0 {
+        MODELS[1 + (i / 4) % 3]
+    } else {
+        "alpha"
+    }
 }
 
 #[test]
@@ -289,6 +323,181 @@ fn non_replicable_backend_explicit_shards_errors_default_degrades() {
     let resp = coord.infer(render_digit(&mut Rng::new(7), 4, 0.05)).unwrap();
     assert_eq!(resp.logits.len(), 10);
     assert_eq!(resp.shard, 0);
+}
+
+#[test]
+fn per_model_fifo_is_preserved_under_active_stealing() {
+    // with eager donation idle shards steal the hot model's formed
+    // batches; the FIFO witness must survive the handoff because the
+    // home shard is the only batch former and stamps batch_seq before
+    // the batch ever reaches the deck. Whether a particular batch gets
+    // stolen is a race, so retry fresh pools until at least one was.
+    for shards in [2usize, 4, 5] {
+        let mut stole = 0u64;
+        for _attempt in 0..5 {
+            let registry = four_model_registry();
+            let coord = steal_pool(&registry, shards);
+            let mut rng = Rng::new(29);
+            let mut rxs = Vec::new();
+            for i in 0..96usize {
+                let name = hot_skewed(i);
+                let rx = coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap();
+                rxs.push((name, i, rx));
+            }
+            let mut last: BTreeMap<&str, u64> = BTreeMap::new();
+            for (name, i, rx) in rxs {
+                let resp = rx.recv().unwrap().expect("inference failed");
+                // `shard` names the home even when a thief executed
+                assert_eq!(
+                    resp.shard,
+                    coord.shard_for(Some(name)),
+                    "'{name}' reported off its home shard ({shards} shards)"
+                );
+                if resp.executed_by != resp.shard {
+                    stole += 1;
+                }
+                if let Some(&seq) = last.get(name) {
+                    assert!(
+                        resp.batch_seq >= seq,
+                        "model '{name}' request {i}: batch_seq {} after {} \
+                         ({shards} shards) — FIFO violated under stealing",
+                        resp.batch_seq,
+                        seq
+                    );
+                }
+                last.insert(name, resp.batch_seq);
+            }
+            assert_eq!(coord.metrics().failed_batches, 0, "{shards} shards");
+            if stole >= 1 {
+                break;
+            }
+        }
+        assert!(stole >= 1, "no steal observed in 5 attempts at {shards} shards");
+    }
+}
+
+#[test]
+fn stolen_batches_never_mix_models_and_have_one_executor() {
+    let registry = four_model_registry();
+    let coord = steal_pool(&registry, 4);
+    let mut rng = Rng::new(31);
+    // hold every receiver while submitting so queues overlap and the
+    // deck sees real contention between home pops and thief pops
+    let mut rxs = Vec::new();
+    for i in 0..80usize {
+        let name = MODELS[i % MODELS.len()];
+        let rx = coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap();
+        rxs.push((name, rx));
+    }
+    // a batch is identified by (home shard, batch_seq) no matter who
+    // executes it; every response in it must agree on both the model
+    // and the executing shard
+    let mut batch_ident: BTreeMap<(usize, u64), (&str, usize)> = BTreeMap::new();
+    for (name, rx) in rxs {
+        let resp = rx.recv().unwrap().expect("inference failed");
+        assert_eq!(resp.model.as_deref(), Some(name));
+        match batch_ident.get(&(resp.shard, resp.batch_seq)) {
+            Some(&(m, ex)) => {
+                assert_eq!(
+                    m, name,
+                    "batch (shard {}, seq {}) mixed '{m}' and '{name}' under stealing",
+                    resp.shard, resp.batch_seq
+                );
+                assert_eq!(
+                    ex, resp.executed_by,
+                    "batch (shard {}, seq {}) split across executors {ex} and {}",
+                    resp.shard, resp.batch_seq, resp.executed_by
+                );
+            }
+            None => {
+                batch_ident.insert((resp.shard, resp.batch_seq), (name, resp.executed_by));
+            }
+        }
+    }
+    assert_eq!(coord.metrics().failed_batches, 0);
+}
+
+#[test]
+fn steal_off_is_bit_for_bit_the_legacy_routing() {
+    // sequential single-model traffic is fully deterministic: one batch
+    // per request, formed and executed at home, batch_seq counting up
+    // from 0. A pool with stealing explicitly off must reproduce the
+    // default pool exactly — same attribution, same sequence, same bits.
+    let registry = four_model_registry();
+    let legacy = pool(&registry, 4);
+    let explicit = CoordinatorBuilder::new()
+        .registry(Arc::clone(&registry))
+        .batch_policy(BatchPolicy::new(vec![1, 4], Duration::from_millis(1)))
+        .shards(4)
+        .steal(false)
+        .steal_promote_us(0)
+        .build()
+        .unwrap();
+    // gamma is alone on its shard at 4 shards, so its batch sequence is
+    // not interleaved with any other model's
+    let home = legacy.shard_for(Some("gamma"));
+    assert_eq!(explicit.shard_for(Some("gamma")), home);
+
+    let mut rng = Rng::new(37);
+    for i in 0..6u64 {
+        let img = render_digit(&mut rng, (i as usize) % 10, 0.05);
+        let a = legacy.infer_model("gamma", img.clone()).unwrap();
+        let b = explicit.infer_model("gamma", img).unwrap();
+        for r in [&a, &b] {
+            assert_eq!(r.shard, home);
+            assert_eq!(r.executed_by, home, "steal-off must never execute off-home");
+            assert_eq!(r.batch_seq, i);
+        }
+        assert_eq!(bits(&a.logits), bits(&b.logits));
+    }
+    for c in [&legacy, &explicit] {
+        let m = c.metrics();
+        assert_eq!(m.stolen_batches, 0);
+        assert_eq!(m.donated_batches, 0);
+        assert_eq!(m.replicas_installed, 0);
+        assert_eq!(m.replicas_evicted, 0);
+    }
+}
+
+#[test]
+fn per_shard_counters_sum_exactly_to_merged_totals_under_stealing() {
+    // execute-stage counts land on the executing shard and queue-side
+    // counts on the home shard; each event is attributed exactly once,
+    // so per-shard counters must sum to the merged snapshot even while
+    // batches migrate between shards mid-flight
+    let mut stole = 0u64;
+    for _attempt in 0..5 {
+        let registry = four_model_registry();
+        let coord = steal_pool(&registry, 4);
+        let mut rng = Rng::new(41);
+        let mut rxs = Vec::new();
+        for i in 0..96usize {
+            let name = hot_skewed(i);
+            rxs.push(coord.submit_to(name, render_digit(&mut rng, i % 10, 0.05)).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap().expect("inference failed");
+        }
+        let merged = coord.metrics();
+        let shards = coord.shard_counters();
+        assert_eq!(shards.iter().map(|s| s.requests).sum::<u64>(), merged.requests);
+        assert_eq!(merged.requests, 96);
+        assert_eq!(shards.iter().map(|s| s.batches).sum::<u64>(), merged.batches);
+        assert_eq!(shards.iter().map(|s| s.failed_batches).sum::<u64>(), merged.failed_batches);
+        assert_eq!(shards.iter().map(|s| s.stolen_batches).sum::<u64>(), merged.stolen_batches);
+        assert_eq!(
+            shards.iter().map(|s| s.donated_batches).sum::<u64>(),
+            merged.donated_batches
+        );
+        // every stolen batch was donated by exactly one home shard
+        assert_eq!(merged.stolen_batches, merged.donated_batches);
+        assert_eq!(merged.failed_batches, 0);
+        stole = merged.stolen_batches;
+        if stole >= 1 {
+            break;
+        }
+    }
+    assert!(stole >= 1, "no steal observed in 5 attempts — counters unexercised");
 }
 
 #[test]

@@ -116,6 +116,7 @@ fn spec_documents_every_trace_stage() {
         Stage::DeadlineDrop,
         Stage::Fault,
         Stage::Retried,
+        Stage::Stolen,
     ] {
         assert!(
             SPEC.contains(&format!("`{}`", stage.as_str())),
